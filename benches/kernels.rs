@@ -1,0 +1,51 @@
+//! `cargo bench` target: kernel micro-benchmarks (quick versions of
+//! Figures 3/4 — the full sweeps run via `bwa bench --exp fig3|fig4`).
+
+use bwa_llm::exps::kernel_bench::{prepare_synthetic, synthetic_bwa};
+use bwa_llm::kernels::dense::{dot_f32, Int4Gemm, Int8Gemm};
+use bwa_llm::tensor::Tensor;
+use bwa_llm::util::bench::{black_box, gops, Bencher};
+use bwa_llm::util::rng::Rng;
+
+fn main() {
+    let bencher = Bencher::quick();
+    let mut rng = Rng::new(9);
+    println!("== kernels bench (quick; full sweeps: bwa bench --exp fig3/fig4) ==");
+
+    // dot product baseline
+    let a = rng.normal_vec_f32(4096, 0.0, 1.0);
+    let b = rng.normal_vec_f32(4096, 0.0, 1.0);
+    let s = bencher.run("dot_f32 4096", || black_box(dot_f32(&a, &b)));
+    println!("{}  ({:.2} GMAC/s)", s.report(), gops(&s, 4096.0));
+
+    for (o, i, m) in [(1024usize, 1024usize, 1usize), (2048, 2048, 8)] {
+        let lin = synthetic_bwa(o, i, 64, 1, 5);
+        let gemm = prepare_synthetic(&lin);
+        let x = Tensor::from_vec(&[m, i], rng.normal_vec_f32(m * i, 0.0, 1.0));
+        let acts = gemm.pack_activations(&x);
+        let macs = (m * o * i) as f64;
+
+        let s = bencher.run(&format!("bwa_gemm {o}x{i} m{m}"), || {
+            black_box(gemm.gemm_packed(&acts))
+        });
+        println!("{}  ({:.2} GMAC/s eff)", s.report(), gops(&s, macs));
+
+        let s = bencher.run(&format!("pack_acts {o}x{i} m{m}"), || {
+            black_box(gemm.pack_activations(&x))
+        });
+        println!("{}", s.report());
+
+        let w = Tensor::from_vec(&[o, i], rng.normal_vec_f32(o * i, 0.0, 0.05));
+        let g8 = Int8Gemm::prepare(&w);
+        let s = bencher.run(&format!("int8_gemm {o}x{i} m{m}"), || {
+            black_box(g8.forward(&x))
+        });
+        println!("{}  ({:.2} GMAC/s)", s.report(), gops(&s, macs));
+
+        let g4 = Int4Gemm::prepare(&w);
+        let s = bencher.run(&format!("int4_gemm {o}x{i} m{m}"), || {
+            black_box(g4.forward(&x))
+        });
+        println!("{}  ({:.2} GMAC/s)", s.report(), gops(&s, macs));
+    }
+}

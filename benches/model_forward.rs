@@ -1,0 +1,72 @@
+//! `cargo bench` target: transformer forward throughput (FP vs BWA fake
+//! path vs incremental INT4-KV decode) + coordinator overhead.
+
+use bwa_llm::coordinator::batcher::{Backend, BatcherConfig};
+use bwa_llm::coordinator::{serve_workload, NativeBackend};
+use bwa_llm::model::config::ModelConfig;
+use bwa_llm::model::Transformer;
+use bwa_llm::util::bench::{black_box, Bencher};
+use bwa_llm::util::rng::Rng;
+use std::time::Duration;
+
+fn main() {
+    let bencher = Bencher::quick();
+    let cfg = ModelConfig::tiny();
+    let model = Transformer::random(&cfg, 3);
+    let mut rng = Rng::new(4);
+    let tokens: Vec<u16> = (0..96).map(|_| rng.below(cfg.vocab_size) as u16).collect();
+
+    println!("== model forward bench (tiny = {} params) ==", cfg.param_count());
+    let s = bencher.run("fp forward 96 tokens", || black_box(model.forward(&tokens)));
+    let tok_s = 96.0 / (s.median_ns / 1e9);
+    println!("{}  ({:.0} tok/s)", s.report(), tok_s);
+
+    let s = bencher.run("decode_step (int4 kv)", || {
+        let mut sess = model.new_session();
+        for &t in &tokens[..16] {
+            black_box(model.decode_step(&mut sess, t));
+        }
+    });
+    println!("{}  ({:.0} tok/s incremental)", s.report(), 16.0 / (s.median_ns / 1e9));
+
+    // coordinator overhead: mock-fast backend vs direct calls
+    struct NoopBackend;
+    impl Backend for NoopBackend {
+        fn name(&self) -> String {
+            "noop".into()
+        }
+        fn last_logits_batch(&self, seqs: &[&[u16]]) -> Vec<Vec<f32>> {
+            seqs.iter().map(|_| vec![0.0f32; 8]).collect()
+        }
+    }
+    let t0 = std::time::Instant::now();
+    let _ = serve_workload(
+        || Box::new(NoopBackend) as Box<dyn Backend>,
+        256,
+        4,
+        8,
+        BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_micros(200),
+        },
+        5,
+    );
+    let per_req = t0.elapsed().as_secs_f64() / 256.0 * 1e6;
+    println!("coordinator overhead: {per_req:.1} us/request (noop backend)");
+
+    // a real serving sample over the random model
+    let report = serve_workload(
+        move || {
+            Box::new(NativeBackend {
+                model,
+                label: "bench-native".into(),
+            }) as Box<dyn Backend>
+        },
+        32,
+        4,
+        16,
+        BatcherConfig::default(),
+        6,
+    );
+    println!("{report}");
+}

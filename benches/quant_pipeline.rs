@@ -1,0 +1,48 @@
+//! `cargo bench` target: Algorithm-1 quantization pipeline cost per stage
+//! (paper §C reports 20 min for 7B; the tiny scale target is seconds).
+
+use bwa_llm::baselines::common::{gptq_block_loop, RtnGrid};
+use bwa_llm::quant::binarize::{quantize_bwa, BwaConfig};
+use bwa_llm::quant::em::{em_cluster, rtn_binarize};
+use bwa_llm::quant::hessian::Hessian;
+use bwa_llm::tensor::Tensor;
+use bwa_llm::util::bench::{black_box, Bencher};
+use bwa_llm::util::rng::Rng;
+
+fn main() {
+    let bencher = Bencher::quick();
+    let mut rng = Rng::new(11);
+    println!("== quantization pipeline bench ==");
+
+    // EM clustering of one group
+    let w: Vec<f64> = (0..64).map(|_| rng.normal()).collect();
+    let imp: Vec<f64> = (0..64).map(|_| 0.5 + rng.f64()).collect();
+    let s = bencher.run("em_cluster k=4 B=64 12it", || {
+        black_box(em_cluster(&w, &imp, 4, 12))
+    });
+    println!("{}", s.report());
+    let s = bencher.run("rtn_binarize k=4 B=64", || black_box(rtn_binarize(&w, 4)));
+    println!("{}", s.report());
+
+    // Hessian build + factorization
+    let x = Tensor::from_vec(&[256, 192], rng.normal_vec_f32(256 * 192, 0.0, 1.0));
+    let s = bencher.run("hessian 256tok x 192ch", || {
+        black_box(Hessian::from_activations(&x, 0.01))
+    });
+    println!("{}", s.report());
+
+    // GPTQ loop on one layer
+    let wt = Tensor::from_vec(&[192, 192], rng.normal_vec_f32(192 * 192, 0.0, 0.05));
+    let h = Hessian::from_activations(&x, 0.01);
+    let grid = RtnGrid { bits: 2 };
+    let s = bencher.run("gptq_block_loop 192x192", || {
+        black_box(gptq_block_loop(&wt, &h, 64, 192, &grid, true))
+    });
+    println!("{}", s.report());
+
+    // Full Algorithm 1 on one layer
+    let s = bencher.run("quantize_bwa 192x192 (Alg.1)", || {
+        black_box(quantize_bwa(&wt, &x, &BwaConfig::paper()))
+    });
+    println!("{}", s.report());
+}

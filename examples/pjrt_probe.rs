@@ -1,0 +1,10 @@
+fn main() {
+    let dir = std::path::Path::new("artifacts");
+    let ck = bwa_llm::model::checkpoint::Checkpoint::load(&dir.join("models/llama1-7b.bin")).unwrap();
+    eprintln!("ckpt loaded");
+    let session = bwa_llm::runtime::TransformerSession::load(dir, &ck).unwrap();
+    eprintln!("session loaded");
+    let tokens: Vec<u16> = vec![1; session.seq];
+    let l = session.forward(&tokens).unwrap();
+    eprintln!("forward ok, {} logits", l.len());
+}

@@ -1,0 +1,108 @@
+//! End-to-end serving driver (DESIGN.md §5, last row): load the trained
+//! tiny model, stand up the dynamic-batching coordinator, and serve
+//! batched next-token requests on two backends:
+//!
+//! 1. `pjrt` — the AOT path: JAX(L2)+Pallas(L1) were lowered to HLO text
+//!    at build time; the Rust(L3) PJRT runtime compiles and executes it.
+//! 2. `bwa`  — the Rust-native transformer quantized to W(1+1)A(1×4)
+//!    with the INT4 KV cache.
+//!
+//! Reports latency percentiles and throughput for both.
+//!
+//! ```bash
+//! cargo run --release --example serve_bwa
+//! ```
+
+use bwa_llm::coordinator::batcher::{Backend, BatcherConfig};
+use bwa_llm::coordinator::{serve_workload, NativeBackend, PjrtBackend};
+use bwa_llm::data::corpus::CorpusSpec;
+use bwa_llm::model::checkpoint::Checkpoint;
+use bwa_llm::model::Transformer;
+use bwa_llm::quant::BwaQuantizer;
+use bwa_llm::runtime::TransformerSession;
+use std::path::Path;
+use std::time::Duration;
+
+fn main() {
+    let ck_path = Path::new("artifacts/models/llama1-7b.bin");
+    let ck = match Checkpoint::load(ck_path) {
+        Ok(ck) => ck,
+        Err(e) => {
+            eprintln!("{e}\nrun `make artifacts` first");
+            std::process::exit(1);
+        }
+    };
+    let cfg = BatcherConfig {
+        max_batch: 8,
+        max_wait: Duration::from_micros(2000),
+    };
+
+    // --- backend 1: PJRT over the AOT artifact -------------------------
+    if Path::new("artifacts/transformer_fp.hlo.txt").exists() {
+        let ck2 = Checkpoint::load(ck_path).unwrap();
+        let report = serve_workload(
+            move || {
+                let session = TransformerSession::load(Path::new("artifacts"), &ck2)
+                    .expect("load AOT artifact");
+                Box::new(PjrtBackend { session }) as Box<dyn Backend>
+            },
+            64,
+            4,
+            24,
+            cfg,
+            7,
+        );
+        println!("{report}\n");
+    } else {
+        eprintln!("skipping PJRT backend (no artifacts/transformer_fp.hlo.txt)");
+    }
+
+    // --- backend 2: native W(1+1)A(1x4) ---------------------------------
+    let report = serve_workload(
+        move || {
+            let train = bwa_llm::data::corpus::train_split(&CorpusSpec::wiki(), 100_000);
+            let calib = bwa_llm::data::calibration_windows(&train, 16, 96, 7);
+            let model =
+                bwa_llm::model::quantize_model(&ck, &BwaQuantizer::paper(), &calib, Some(4))
+                    .expect("quantize");
+            eprintln!(
+                "quantized serving model: {:.2} mean weight bits, {} bytes",
+                model.mean_weight_bits(),
+                model.bytes()
+            );
+            Box::new(NativeBackend {
+                model,
+                label: "native-bwa W(1+1)A(1x4)".into(),
+            }) as Box<dyn Backend>
+        },
+        64,
+        4,
+        24,
+        cfg,
+        7,
+    );
+    println!("{report}");
+
+    // --- greedy decode demo over the quantized model --------------------
+    let ck = Checkpoint::load(ck_path).unwrap();
+    let fp = Transformer::fp_from_checkpoint(&ck).unwrap();
+    let tok = bwa_llm::data::tokenizer::Tokenizer::new();
+    let prompt = tok.encode("? ent3 rel7");
+    let mut sess = fp.new_session();
+    let mut seq = prompt.clone();
+    for &t in &prompt {
+        let logits = fp.decode_step(&mut sess, t);
+        let _ = logits;
+    }
+    let mut sess = fp.new_session();
+    let mut last = Vec::new();
+    for &t in &seq {
+        last = fp.decode_step(&mut sess, t);
+    }
+    for _ in 0..4 {
+        let next = bwa_llm::util::argmax(&last) as u16;
+        seq.push(next);
+        last = fp.decode_step(&mut sess, next);
+    }
+    println!("\ngreedy decode: {}", tok.decode(&seq));
+}

@@ -1,0 +1,125 @@
+"""AOT lowering: JAX (L2) + Pallas (L1) -> HLO *text* artifacts for the
+Rust PJRT runtime (L3).
+
+HLO text, NOT serialized protos: jax >= 0.5 emits HloModuleProto with
+64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+reassigns ids (see /opt/xla-example/README.md).
+
+Artifacts:
+  transformer_fp.hlo.txt — tiny-LLaMA forward, tokens[S] + name-sorted
+      parameter list -> (logits,). The serving coordinator executes this.
+  bwa_linear.hlo.txt     — the standalone Pallas W(1+1)A(1x4) kernel for
+      one tiny-model projection shape, lowered through the same pipeline.
+  manifest.json          — input names/shapes per artifact so the Rust
+      loader can feed parameters in the right order.
+"""
+
+import argparse
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import common, model
+from .kernels.bwa_linear import bwa_linear, fold_coefficients
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_transformer_fp(cfg, seq):
+    names = sorted(model.init_params(cfg, 0))
+    shapes = {
+        n: np.asarray(model.init_params(cfg, 0)[n]).shape for n in names
+    }
+
+    def fn(tokens, *plist):
+        p = dict(zip(names, plist))
+        return (model.forward(cfg, p, tokens),)
+
+    specs = [jax.ShapeDtypeStruct((seq,), jnp.int32)] + [
+        jax.ShapeDtypeStruct(shapes[n], jnp.float32) for n in names
+    ]
+    lowered = jax.jit(fn).lower(*specs)
+    manifest = {
+        "inputs": ["tokens"] + names,
+        "shapes": [[seq]] + [list(shapes[n]) for n in names],
+        "seq": seq,
+        "vocab": cfg["vocab_size"],
+        "config": cfg,
+    }
+    return to_hlo_text(lowered), manifest
+
+
+def lower_bwa_kernel(tokens, out_f, in_f, group_size):
+    g = in_f // group_size
+
+    def fn(planes, mu, shift, qbits, mbits, alpha, beta, wsum):
+        return (
+            bwa_linear(planes, mu, shift, qbits, mbits, alpha, beta, wsum,
+                       group_size=group_size, row_tile=64),
+        )
+
+    f32 = jnp.float32
+    specs = [
+        jax.ShapeDtypeStruct((tokens, 4, in_f), f32),
+        jax.ShapeDtypeStruct((tokens, 4), f32),
+        jax.ShapeDtypeStruct((tokens,), f32),
+        jax.ShapeDtypeStruct((out_f, in_f), f32),
+        jax.ShapeDtypeStruct((out_f, in_f), f32),
+        jax.ShapeDtypeStruct((out_f, g, 2), f32),
+        jax.ShapeDtypeStruct((out_f, g, 2), f32),
+        jax.ShapeDtypeStruct((out_f,), f32),
+    ]
+    lowered = jax.jit(fn).lower(*specs)
+    manifest = {
+        "inputs": ["planes", "mu", "shift", "qbits", "mbits", "alpha",
+                   "beta", "wsum"],
+        "shapes": [list(s.shape) for s in specs],
+        "tokens": tokens,
+        "out_features": out_f,
+        "in_features": in_f,
+        "group_size": group_size,
+    }
+    return to_hlo_text(lowered), manifest
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--seq", type=int, default=96)
+    args = ap.parse_args()
+    out = Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+
+    cfg = common.TINY
+    manifest = {}
+
+    hlo, m = lower_transformer_fp(cfg, args.seq)
+    (out / "transformer_fp.hlo.txt").write_text(hlo)
+    manifest["transformer_fp.hlo.txt"] = m
+    print(f"wrote transformer_fp.hlo.txt ({len(hlo)} chars)")
+
+    hlo, m = lower_bwa_kernel(tokens=4, out_f=cfg["d_model"],
+                              in_f=cfg["d_model"], group_size=64)
+    (out / "bwa_linear.hlo.txt").write_text(hlo)
+    manifest["bwa_linear.hlo.txt"] = m
+    print(f"wrote bwa_linear.hlo.txt ({len(hlo)} chars)")
+
+    (out / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    print("wrote manifest.json")
+    # keep the folded-coefficient helper exercised at build time
+    _ = fold_coefficients(np.zeros((1, 1, 2), np.float32),
+                          np.zeros((1, 1, 2), np.float32))
+
+
+if __name__ == "__main__":
+    main()

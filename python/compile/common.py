@@ -1,0 +1,88 @@
+"""Shared helpers for the build-time Python layer: token-file IO and the
+BWACKPT1 checkpoint format (both defined by the Rust side — see
+rust/src/data/mod.rs and rust/src/model/checkpoint.rs)."""
+
+import json
+import struct
+from pathlib import Path
+
+import numpy as np
+
+TOK_MAGIC = b"BWATOK1\x00"
+CKPT_MAGIC = b"BWACKPT1"
+
+
+def load_tokens(path):
+    """Read a BWATOK1 token stream as a uint16 numpy array."""
+    data = Path(path).read_bytes()
+    assert data[:8] == TOK_MAGIC, f"bad magic in {path}"
+    (n,) = struct.unpack("<Q", data[8:16])
+    toks = np.frombuffer(data[16:], dtype="<u2")
+    assert len(toks) == n, f"token count mismatch in {path}"
+    return toks.astype(np.int32)
+
+
+def save_checkpoint(path, config: dict, tensors: dict):
+    """Write a BWACKPT1 checkpoint the Rust runtime can load.
+
+    `tensors` maps name -> float32 numpy array. Entries are written in
+    sorted-name order (matching Rust's BTreeMap iteration order)."""
+    names = sorted(tensors)
+    entries = []
+    offset = 0
+    for name in names:
+        arr = np.ascontiguousarray(tensors[name], dtype=np.float32)
+        entries.append(
+            {"name": name, "shape": list(arr.shape), "offset": offset}
+        )
+        offset += arr.size
+    header = json.dumps({"config": config, "tensors": entries}).encode()
+    with open(path, "wb") as f:
+        f.write(CKPT_MAGIC)
+        f.write(struct.pack("<I", len(header)))
+        f.write(header)
+        for name in names:
+            f.write(np.ascontiguousarray(tensors[name], dtype="<f4").tobytes())
+
+
+def load_checkpoint(path):
+    """Read a BWACKPT1 checkpoint back (for tests / AOT param feeding)."""
+    data = Path(path).read_bytes()
+    assert data[:8] == CKPT_MAGIC, f"bad magic in {path}"
+    (hlen,) = struct.unpack("<I", data[8:12])
+    header = json.loads(data[12 : 12 + hlen])
+    payload = np.frombuffer(data[12 + hlen :], dtype="<f4")
+    tensors = {}
+    for e in header["tensors"]:
+        n = int(np.prod(e["shape"])) if e["shape"] else 1
+        tensors[e["name"]] = (
+            payload[e["offset"] : e["offset"] + n].reshape(e["shape"]).copy()
+        )
+    return header["config"], tensors
+
+
+# Model configs — mirror rust/src/model/config.rs exactly.
+TINY = {
+    "name": "tiny",
+    "vocab_size": 512,
+    "d_model": 192,
+    "n_layers": 3,
+    "n_heads": 3,
+    "d_ff": 512,
+    "max_seq": 160,
+    "rope_theta": 10000.0,
+    "rmsnorm_eps": 1e-5,
+}
+
+TINY_13B = {
+    **TINY,
+    "name": "tiny-13b",
+    "d_model": 256,
+    "n_layers": 4,
+    "n_heads": 4,
+    "d_ff": 640,
+}
+
+
+def config_for(kind: str) -> dict:
+    return dict(TINY_13B if kind.endswith("13b") else TINY)

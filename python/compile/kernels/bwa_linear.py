@@ -1,0 +1,136 @@
+"""Layer-1 Pallas kernel: the W(1+1)A(1x4) binarized fully-connected layer
+(paper Eq. 5-7).
+
+The kernel consumes the *bit* representation directly: activation bit
+planes b_a, weight sign bits q, fine-group bitmap m (all {0,1} tensors) and
+the per-(row, group, s) affine parameters. Per output-row tile it computes,
+for every group g and plane a, the three bitwise inner products
+
+    v  = sum_i q*b       (popc(q & b)   on real hardware)
+    v1 = sum_i q*b*m     (popc(q & b & m))
+    r1 = sum_i b*m       (popc(b & m))
+    r  = sum_i b         (popc(b), token-only)
+
+and folds them with c1 = 2*alpha_1, c2 = beta_1 - alpha_1, c3 = 2*alpha_0,
+c4 = beta_0 - alpha_0:
+
+    y[t, o] += sum_a mu[t,a] * (c3*v + (c1-c3)*v1 + c4*(r-r1) + c2*r1)
+             + shift[t] * wsum[o]
+
+TPU adaptation (DESIGN.md "Hardware adaptation"): the products above are
+contractions of {0,1}-valued operands, expressed as jnp.dot so they lower
+onto the MXU systolic array; the BlockSpec streams (row-tile x full
+channel) tiles HBM->VMEM once per tile and reuses them across all 4+1
+planes, which is the same bandwidth amortization the CUDA kernel gets from
+warp-level AND+popc over 128-bit fragments. interpret=True everywhere:
+the CPU PJRT plugin cannot execute Mosaic custom-calls (see
+/opt/xla-example/README.md), so correctness runs through the interpreter
+and the HLO export stays executable from the Rust runtime.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_ROW_TILE = 64
+
+
+def _bwa_kernel(planes_ref, mu_ref, shift_ref, q_ref, m_ref, c_ref, wsum_ref,
+                out_ref, *, group_size):
+    """One (token, row-tile) grid cell.
+
+    planes_ref: [A, N]   activation bit planes of this token
+    mu_ref:     [A]      plane scales
+    shift_ref:  [1]      shift coefficient
+    q_ref:      [BO, N]  sign bits of the row tile
+    m_ref:      [BO, N]  fine-group bitmap
+    c_ref:      [BO, G, 4] folded coefficients (c1, c2, c3, c4)
+    wsum_ref:   [BO]     row sums of dequantized weights
+    out_ref:    [BO]     output slice y[t, tile]
+    """
+    planes = planes_ref[0]
+    q = q_ref[...]
+    m = m_ref[...]
+    c = c_ref[...]
+    bo, n = q.shape
+    a = planes.shape[0]
+    g = n // group_size
+
+    # reshape into groups: [BO, G, Z] and [A, G, Z]
+    qg = q.reshape(bo, g, group_size)
+    mg = m.reshape(bo, g, group_size)
+    bg = planes.reshape(a, g, group_size)
+
+    # v / v1 / r1 as MXU-friendly contractions over the channel axis
+    v = jnp.einsum("ogz,agz->oga", qg, bg, preferred_element_type=jnp.float32)
+    v1 = jnp.einsum("ogz,agz->oga", qg * mg, bg,
+                    preferred_element_type=jnp.float32)
+    r1 = jnp.einsum("ogz,agz->oga", mg, bg,
+                    preferred_element_type=jnp.float32)
+    r = jnp.sum(bg, axis=2)  # [A, G] token-only
+
+    c1 = c[:, :, 0:1]
+    c2 = c[:, :, 1:2]
+    c3 = c[:, :, 2:3]
+    c4 = c[:, :, 3:4]
+    contrib = (c3 * v + (c1 - c3) * v1 + c4 * (r.T[None, :, :] - r1)
+               + c2 * r1)  # [BO, G, A]
+    mu = mu_ref[0]
+    y = jnp.einsum("oga,a->o", contrib, mu) + shift_ref[0] * wsum_ref[...]
+    out_ref[0, :] = y
+
+
+def fold_coefficients(alpha, beta):
+    """(alpha, beta) [O, G, 2] -> folded [O, G, 4] = (c1, c2, c3, c4)."""
+    c1 = 2.0 * alpha[:, :, 1]
+    c2 = beta[:, :, 1] - alpha[:, :, 1]
+    c3 = 2.0 * alpha[:, :, 0]
+    c4 = beta[:, :, 0] - alpha[:, :, 0]
+    return jnp.stack([c1, c2, c3, c4], axis=-1)
+
+
+def weight_row_sums(qbits, mbits, alpha, beta, group_size):
+    """wsum[o] = sum_n What[o, n] — multiplies the shift plane."""
+    from . import ref
+
+    return jnp.sum(
+        ref.dequantize_weights(qbits, mbits, alpha, beta, group_size), axis=1
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("group_size", "row_tile"))
+def bwa_linear(planes, mu, shift, qbits, mbits, alpha, beta, wsum,
+               group_size=64, row_tile=DEFAULT_ROW_TILE):
+    """Binarized FC forward via the Pallas kernel.
+
+    planes: [T, A, N]; mu: [T, A]; shift: [T];
+    qbits/mbits: [O, N]; alpha/beta: [O, G, 2]; wsum: [O]  ->  y [T, O].
+    """
+    t, a, n = planes.shape
+    o = qbits.shape[0]
+    assert n % group_size == 0, "N must be a multiple of group_size"
+    row_tile = min(row_tile, o)
+    assert o % row_tile == 0, "O must be a multiple of row_tile"
+    g = n // group_size
+    coef = fold_coefficients(alpha, beta)
+
+    grid = (t, o // row_tile)
+    kernel = functools.partial(_bwa_kernel, group_size=group_size)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, a, n), lambda ti, oi: (ti, 0, 0)),
+            pl.BlockSpec((1, a), lambda ti, oi: (ti, 0)),
+            pl.BlockSpec((1,), lambda ti, oi: (ti,)),
+            pl.BlockSpec((row_tile, n), lambda ti, oi: (oi, 0)),
+            pl.BlockSpec((row_tile, n), lambda ti, oi: (oi, 0)),
+            pl.BlockSpec((row_tile, g, 4), lambda ti, oi: (oi, 0, 0)),
+            pl.BlockSpec((row_tile,), lambda ti, oi: (oi,)),
+        ],
+        out_specs=pl.BlockSpec((1, row_tile), lambda ti, oi: (ti, oi)),
+        out_shape=jax.ShapeDtypeStruct((t, o), jnp.float32),
+        interpret=True,
+    )(planes, mu, shift, qbits, mbits, coef, wsum)

@@ -1,0 +1,68 @@
+"""Pure-jnp oracle for the W(1+1)A(1x4) binarized linear layer.
+
+This is the correctness ground truth for the Pallas kernel: dequantize the
+bit representation back to floats and do an ordinary matmul. The kernel
+(`bwa_linear.py`) must match this to float tolerance; pytest enforces it,
+including a hypothesis sweep over shapes.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def dequantize_weights(qbits, mbits, alpha, beta, group_size):
+    """What[o, n] = alpha[o, g, s]*(2q-1) + beta[o, g, s] with s = m[o, n].
+
+    qbits/mbits: [O, N] in {0,1}; alpha/beta: [O, G, 2]."""
+    _, n = qbits.shape
+    sign = 2.0 * qbits - 1.0
+    s = mbits.astype(jnp.int32)  # fine-group bit
+    gi = jnp.arange(n) // group_size  # group index per channel
+    a = alpha[:, gi, :]  # [O, N, 2]
+    b = beta[:, gi, :]
+    a_sel = jnp.take_along_axis(a, s[:, :, None], axis=2)[:, :, 0]
+    b_sel = jnp.take_along_axis(b, s[:, :, None], axis=2)[:, :, 0]
+    return a_sel * sign + b_sel
+
+
+def dequantize_acts(planes, mu, shift):
+    """xhat[t, n] = sum_a mu[t, a]*b[t, a, n] + shift[t]."""
+    return jnp.einsum("ta,tan->tn", mu, planes) + shift[:, None]
+
+
+def bwa_linear_ref(planes, mu, shift, qbits, mbits, alpha, beta, group_size):
+    """Reference forward: y[t, o] = xhat @ What^T."""
+    w_hat = dequantize_weights(qbits, mbits, alpha, beta, group_size)
+    x_hat = dequantize_acts(planes, mu, shift)
+    return x_hat @ w_hat.T
+
+
+def quantize_acts_int4(x):
+    """RTN INT4 (asym, zero-inclusive range) -> bit planes, per token.
+
+    Returns (planes [T, 4, N] float {0,1}, mu [T, 4], shift [T]).
+    Mirrors rust/src/quant/actquant.rs with BalanceMode::None."""
+    x = np.asarray(x, dtype=np.float32)
+    lo = np.minimum(x.min(axis=1), 0.0)
+    hi = np.maximum(x.max(axis=1), 0.0)
+    scale = np.where(hi - lo > 0, (hi - lo) / 15.0, 1.0).astype(np.float32)
+    zero = np.clip(np.round(-lo / scale), 0, 15).astype(np.int32)
+    q = np.clip(np.round(x / scale[:, None]) + zero[:, None], 0, 15).astype(
+        np.int32
+    )
+    planes = np.stack([(q >> a) & 1 for a in range(4)], axis=1).astype(
+        np.float32
+    )
+    mu = (scale[:, None] * (2.0 ** np.arange(4))[None, :]).astype(np.float32)
+    shift = (-scale * zero).astype(np.float32)
+    return planes, mu, shift
+
+
+def random_bwa_layer(rng, out_f, in_f, group_size):
+    """Random but well-formed (q, m, alpha, beta) for kernel tests."""
+    g = in_f // group_size
+    qbits = (rng.random((out_f, in_f)) < 0.5).astype(np.float32)
+    mbits = (rng.random((out_f, in_f)) < 0.4).astype(np.float32)
+    alpha = (0.02 + 0.05 * rng.random((out_f, g, 2))).astype(np.float32)
+    beta = (0.04 * rng.standard_normal((out_f, g, 2))).astype(np.float32)
+    return qbits, mbits, alpha, beta

@@ -1,0 +1,226 @@
+"""Layer-2: tiny-LLaMA forward/backward in JAX.
+
+Architecture mirrors rust/src/model/mod.rs exactly (RMSNorm -> MHA with
+RoPE -> residual -> RMSNorm -> SwiGLU -> residual; separate FP embedding
+and LM head; no biases), so checkpoints trained here load and evaluate in
+the Rust runtime unchanged.
+
+Two forward variants:
+ - `forward`      — plain FP (training + the AOT fp artifact);
+ - `forward_bwa`  — same graph with every linear routed through the
+   Layer-1 Pallas kernel on a fake W(1+1)A(1x4) parameterization
+   (`bwa_sim_params`), proving L1 composes into L2 and giving the AOT
+   binarized artifact.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.bwa_linear import bwa_linear, weight_row_sums
+
+PARAM_ORDER_NOTE = "tensors are name-sorted (BTreeMap order) in checkpoints"
+
+
+# ---------------------------------------------------------------------------
+# parameter init / naming (names match the Rust checkpoint reader)
+# ---------------------------------------------------------------------------
+
+def init_params(cfg, seed):
+    rng = np.random.default_rng(seed)
+    d, ff, v = cfg["d_model"], cfg["d_ff"], cfg["vocab_size"]
+    std = 0.06
+
+    def mat(o, i):
+        return (std * rng.standard_normal((o, i))).astype(np.float32)
+
+    p = {"embed": (0.5 * rng.standard_normal((v, d))).astype(np.float32),
+         "lm_head": mat(v, d),
+         "final_norm": np.ones(d, np.float32)}
+    for l in range(cfg["n_layers"]):
+        p[f"layers.{l}.attn_norm"] = np.ones(d, np.float32)
+        p[f"layers.{l}.mlp_norm"] = np.ones(d, np.float32)
+        p[f"layers.{l}.wq"] = mat(d, d)
+        p[f"layers.{l}.wk"] = mat(d, d)
+        p[f"layers.{l}.wv"] = mat(d, d)
+        p[f"layers.{l}.wo"] = mat(d, d)
+        p[f"layers.{l}.gate"] = mat(ff, d)
+        p[f"layers.{l}.up"] = mat(ff, d)
+        p[f"layers.{l}.down"] = mat(d, ff)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# building blocks
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, gain, eps):
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * gain
+
+
+def rope(x, n_heads, theta, positions):
+    """x: [T, d]; adjacent-pair rotation within each head (matches Rust)."""
+    t, d = x.shape
+    hd = d // n_heads
+    xh = x.reshape(t, n_heads, hd // 2, 2)
+    i = jnp.arange(hd // 2)
+    freq = 1.0 / (theta ** (2.0 * i / hd))          # [hd/2]
+    ang = positions[:, None] * freq[None, :]          # [T, hd/2]
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    a = xh[..., 0]
+    b = xh[..., 1]
+    ra = a * cos[:, None, :] - b * sin[:, None, :]
+    rb = a * sin[:, None, :] + b * cos[:, None, :]
+    return jnp.stack([ra, rb], axis=-1).reshape(t, d)
+
+
+def causal_attention(q, k, v, n_heads):
+    t, d = q.shape
+    hd = d // n_heads
+    qh = q.reshape(t, n_heads, hd).transpose(1, 0, 2)
+    kh = k.reshape(t, n_heads, hd).transpose(1, 0, 2)
+    vh = v.reshape(t, n_heads, hd).transpose(1, 0, 2)
+    scores = jnp.einsum("htd,hsd->hts", qh, kh) / jnp.sqrt(
+        jnp.asarray(hd, q.dtype))
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    scores = jnp.where(mask[None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("hts,hsd->htd", probs, vh)
+    return out.transpose(1, 0, 2).reshape(t, d)
+
+
+def _block(cfg, p, l, x, linear):
+    eps = cfg["rmsnorm_eps"]
+    nh = cfg["n_heads"]
+    pos = jnp.arange(x.shape[0], dtype=jnp.float32)
+    h = rmsnorm(x, p[f"layers.{l}.attn_norm"], eps)
+    q = rope(linear(h, f"layers.{l}.wq"), nh, cfg["rope_theta"], pos)
+    k = rope(linear(h, f"layers.{l}.wk"), nh, cfg["rope_theta"], pos)
+    v = linear(h, f"layers.{l}.wv")
+    attn = causal_attention(q, k, v, nh)
+    x = x + linear(attn, f"layers.{l}.wo")
+    h = rmsnorm(x, p[f"layers.{l}.mlp_norm"], eps)
+    act = jax.nn.silu(linear(h, f"layers.{l}.gate")) * linear(
+        h, f"layers.{l}.up")
+    return x + linear(act, f"layers.{l}.down")
+
+
+def forward(cfg, p, tokens):
+    """FP forward: tokens [T] int32 -> logits [T, vocab]."""
+    p = {k: jnp.asarray(v) for k, v in p.items()}
+
+    def linear(x, name):
+        return x @ p[name].T
+
+    x = p["embed"][tokens]
+    for l in range(cfg["n_layers"]):
+        x = _block(cfg, p, l, x, linear)
+    x = rmsnorm(x, p["final_norm"], cfg["rmsnorm_eps"])
+    return x @ p["lm_head"].T
+
+
+def loss_fn(cfg, p, tokens):
+    """Mean next-token cross entropy over a [B, T] batch."""
+    def one(seq):
+        logits = forward(cfg, p, seq[:-1])
+        lp = jax.nn.log_softmax(logits, axis=-1)
+        return -jnp.take_along_axis(lp, seq[1:, None], axis=1).mean()
+
+    return jax.vmap(one)(tokens).mean()
+
+
+# ---------------------------------------------------------------------------
+# BWA-simulated forward (L1 kernel inside L2)
+# ---------------------------------------------------------------------------
+
+def bwa_sim_params(cfg, p, group_size=64):
+    """Binarize every linear of `p` into kernel-ready (q, m, alpha, beta,
+    wsum) using a fast median-split parameterization (the *real* EM
+    quantizer lives in Rust; this build-time variant exercises the same
+    kernel contract)."""
+    out = {}
+    names = [k for k in p if k.startswith("layers.") and
+             k.split(".")[-1] in ("wq", "wk", "wv", "wo", "gate", "up",
+                                  "down")]
+    for name in names:
+        w = np.asarray(p[name])
+        o, n = w.shape
+        g = n // group_size
+        wg = w.reshape(o, g, group_size)
+        med = np.median(wg, axis=2, keepdims=True)
+        qbits = (wg >= med).astype(np.float32)
+        dev = np.abs(wg - med)
+        thr = np.median(dev, axis=2, keepdims=True)
+        mbits = (dev > thr).astype(np.float32)  # s=1: far-from-center group
+        alpha = np.zeros((o, g, 2), np.float32)
+        beta = np.zeros((o, g, 2), np.float32)
+        for s in (0, 1):
+            sel = mbits == s
+            pos_pick = sel & (qbits == 1.0)
+            neg_pick = sel & (qbits == 0.0)
+            pos_cnt = pos_pick.sum(axis=2)
+            neg_cnt = neg_pick.sum(axis=2)
+            hi = np.where(pos_cnt > 0,
+                          (wg * pos_pick).sum(axis=2) / np.maximum(pos_cnt, 1),
+                          0.0)
+            lo = np.where(neg_cnt > 0,
+                          (wg * neg_pick).sum(axis=2) / np.maximum(neg_cnt, 1),
+                          0.0)
+            alpha[:, :, s] = (hi - lo) / 2.0
+            beta[:, :, s] = (hi + lo) / 2.0
+        entry = {
+            "qbits": qbits.reshape(o, n),
+            "mbits": mbits.reshape(o, n),
+            "alpha": alpha,
+            "beta": beta,
+        }
+        entry["wsum"] = np.asarray(
+            weight_row_sums(entry["qbits"], entry["mbits"], alpha, beta,
+                            group_size))
+        out[name] = entry
+    return out
+
+
+def _row_tile(o):
+    for t in (64, 32, 16, 8, 4, 2, 1):
+        if o % t == 0:
+            return t
+    return 1
+
+
+def forward_bwa(cfg, p, bwa, tokens, group_size=64):
+    """Forward with every linear routed through the Pallas BWA kernel."""
+    def linear(x, name):
+        if name not in bwa:
+            return x @ p[name].T
+        planes, mu, shift = quantize_acts_jnp(x)
+        bp = bwa[name]
+        return bwa_linear(planes, mu, shift,
+                          jnp.asarray(bp["qbits"]), jnp.asarray(bp["mbits"]),
+                          jnp.asarray(bp["alpha"]), jnp.asarray(bp["beta"]),
+                          jnp.asarray(bp["wsum"]), group_size=group_size,
+                          row_tile=_row_tile(bp["qbits"].shape[0]))
+
+    p = {k: jnp.asarray(v) for k, v in p.items()}
+    x = p["embed"][tokens]
+    for l in range(cfg["n_layers"]):
+        x = _block(cfg, p, l, x, linear)
+    x = rmsnorm(x, p["final_norm"], cfg["rmsnorm_eps"])
+    return x @ p["lm_head"].T
+
+
+def quantize_acts_jnp(x):
+    """Traceable INT4 -> planes quantization (jnp version of
+    kernels.ref.quantize_acts_int4)."""
+    lo = jnp.minimum(x.min(axis=1), 0.0)
+    hi = jnp.maximum(x.max(axis=1), 0.0)
+    scale = jnp.where(hi - lo > 0, (hi - lo) / 15.0, 1.0)
+    zero = jnp.clip(jnp.round(-lo / scale), 0, 15)
+    q = jnp.clip(jnp.round(x / scale[:, None]) + zero[:, None], 0, 15)
+    q = q.astype(jnp.int32)
+    planes = jnp.stack([(q >> a) & 1 for a in range(4)], axis=1)
+    planes = planes.astype(jnp.float32)
+    mu = scale[:, None] * (2.0 ** jnp.arange(4))[None, :]
+    shift = -scale * zero
+    return planes, mu, shift.astype(jnp.float32)

@@ -1,0 +1,138 @@
+"""Build-time trainer: produces the tiny model checkpoints the Rust layer
+quantizes and evaluates (DESIGN.md substitution for LLaMA/Vicuna weights).
+
+Models (name -> config kind, corpus mix, seed):
+  llama1-7b   tiny      wiki                 1
+  llama2-7b   tiny      wiki + c4            2
+  vicuna-7b   tiny      c4-heavy mix         3
+  llama1-13b  tiny-13b  wiki                 4
+  llama2-13b  tiny-13b  wiki + c4            5
+  vicuna-13b  tiny-13b  c4-heavy mix         6
+
+Training is plain AdamW on next-token cross entropy over the Rust-generated
+corpora in artifacts/data/. Loss curves land next to each checkpoint as
+<name>_loss.json and are summarized in EXPERIMENTS.md.
+"""
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import common, model
+
+MODEL_ZOO = {
+    "llama1-7b": ("tiny", {"wiki": 1.0}, 1),
+    "llama2-7b": ("tiny", {"wiki": 0.7, "c4": 0.3}, 2),
+    "vicuna-7b": ("tiny", {"wiki": 0.4, "c4": 0.6}, 3),
+    "llama1-13b": ("tiny-13b", {"wiki": 1.0}, 4),
+    "llama2-13b": ("tiny-13b", {"wiki": 0.7, "c4": 0.3}, 5),
+    "vicuna-13b": ("tiny-13b", {"wiki": 0.4, "c4": 0.6}, 6),
+}
+
+
+def batches(streams, mix, batch, seq, steps, seed):
+    """Yield [batch, seq+1] windows sampled from the corpus mix."""
+    rng = np.random.default_rng(seed)
+    names = sorted(mix)
+    probs = np.array([mix[n] for n in names])
+    probs = probs / probs.sum()
+    for _ in range(steps):
+        rows = []
+        for _ in range(batch):
+            src = streams[names[rng.choice(len(names), p=probs)]]
+            start = rng.integers(0, len(src) - seq - 1)
+            rows.append(src[start : start + seq + 1])
+        yield np.stack(rows)
+
+
+def adamw_init(p):
+    z = lambda: {k: np.zeros_like(v) for k, v in p.items()}
+    return {"m": z(), "v": z(), "t": 0}
+
+
+def train_one(name, data_dir, out_dir, steps, batch, seq, lr):
+    kind, mix, seed = MODEL_ZOO[name]
+    cfg = common.config_for(kind)
+    cfg["name"] = name
+    seq = min(seq, cfg["max_seq"] - 1)
+    streams = {
+        flavor: common.load_tokens(Path(data_dir) / f"{flavor}_train.tok")
+        for flavor in mix
+    }
+    params = model.init_params(cfg, seed)
+
+    loss_grad = jax.jit(
+        jax.value_and_grad(lambda p, b: model.loss_fn(cfg, p, b))
+    )
+
+    opt = adamw_init(params)
+    b1, b2, eps, wd = 0.9, 0.95, 1e-8, 0.01
+    curve = []
+    t0 = time.time()
+    for step, b in enumerate(
+        batches(streams, mix, batch, seq, steps, seed * 7919)
+    ):
+        loss, g = loss_grad(params, jnp.asarray(b))
+        opt["t"] += 1
+        t = opt["t"]
+        # cosine decay with short warmup
+        warm = min(1.0, t / 20.0)
+        decay = 0.5 * (1 + np.cos(np.pi * min(1.0, t / steps)))
+        lr_t = lr * warm * (0.1 + 0.9 * decay)
+        for k in params:
+            gk = np.asarray(g[k])
+            opt["m"][k] = b1 * opt["m"][k] + (1 - b1) * gk
+            opt["v"][k] = b2 * opt["v"][k] + (1 - b2) * gk * gk
+            mhat = opt["m"][k] / (1 - b1**t)
+            vhat = opt["v"][k] / (1 - b2**t)
+            params[k] = np.asarray(params[k]) * (1 - lr_t * wd) - lr_t * (
+                mhat / (np.sqrt(vhat) + eps)
+            )
+        curve.append(float(loss))
+        if step % 25 == 0 or step == steps - 1:
+            print(
+                f"[{name}] step {step:4d} loss {float(loss):.4f} "
+                f"lr {lr_t:.2e} ({time.time()-t0:.0f}s)",
+                flush=True,
+            )
+
+    out_dir = Path(out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    ckpt = out_dir / f"{name}.bin"
+    common.save_checkpoint(ckpt, cfg, params)
+    (out_dir / f"{name}_loss.json").write_text(
+        json.dumps({"name": name, "steps": steps, "loss": curve})
+    )
+    print(f"[{name}] wrote {ckpt} (final loss {curve[-1]:.4f})")
+    return curve
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--data", default="../artifacts/data")
+    ap.add_argument("--out", default="../artifacts/models")
+    ap.add_argument("--models", default="all", help="comma list or 'all'")
+    ap.add_argument("--steps", type=int, default=260)
+    ap.add_argument("--steps-13b", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=96)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    args = ap.parse_args()
+
+    names = (
+        list(MODEL_ZOO) if args.models == "all" else args.models.split(",")
+    )
+    for name in names:
+        kind = MODEL_ZOO[name][0]
+        steps = args.steps_13b if kind.endswith("13b") else args.steps
+        train_one(name, args.data, args.out, steps, args.batch, args.seq,
+                  args.lr)
+
+
+if __name__ == "__main__":
+    main()

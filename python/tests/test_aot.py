@@ -1,0 +1,44 @@
+"""AOT pipeline tests: lowering produces loadable HLO text."""
+
+import json
+
+import numpy as np
+
+from compile import aot, common
+
+
+def test_transformer_lowering_produces_hlo_text():
+    cfg = dict(common.TINY, n_layers=1, d_model=64, n_heads=2, d_ff=128,
+               vocab_size=64, max_seq=64)
+    hlo, manifest = aot.lower_transformer_fp(cfg, seq=16)
+    assert hlo.startswith("HloModule")
+    assert manifest["inputs"][0] == "tokens"
+    # name-sorted parameter order (matches Rust BTreeMap order)
+    names = manifest["inputs"][1:]
+    assert names == sorted(names)
+    assert len(manifest["shapes"]) == len(manifest["inputs"])
+
+
+def test_kernel_lowering_produces_hlo_text():
+    hlo, manifest = aot.lower_bwa_kernel(tokens=2, out_f=64, in_f=64,
+                                         group_size=64)
+    assert hlo.startswith("HloModule")
+    assert manifest["inputs"] == [
+        "planes", "mu", "shift", "qbits", "mbits", "alpha", "beta", "wsum"
+    ]
+
+
+def test_manifest_is_json_serializable():
+    hlo, manifest = aot.lower_bwa_kernel(tokens=1, out_f=64, in_f=64,
+                                         group_size=64)
+    json.dumps(manifest)
+    assert "parameter" in hlo or "ENTRY" in hlo
+
+
+def test_lowered_hlo_has_all_params():
+    cfg = dict(common.TINY, n_layers=1, d_model=64, n_heads=2, d_ff=128,
+               vocab_size=64, max_seq=64)
+    hlo, manifest = aot.lower_transformer_fp(cfg, seq=8)
+    n_params = len(manifest["inputs"])
+    # every input appears as an HLO entry parameter
+    assert hlo.count("parameter(") >= n_params

@@ -1,0 +1,43 @@
+"""Cross-language data contract: token files written by the Rust datagen
+load correctly, and checkpoints written here load in Rust (exercised via
+the bwa binary when present)."""
+
+import os
+import subprocess
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from compile import common
+
+REPO = Path(__file__).resolve().parents[2]
+
+
+def test_rust_token_files_load():
+    p = REPO / "artifacts/data/wiki_train.tok"
+    if not p.exists():
+        pytest.skip("artifacts/data not generated yet (run `make artifacts`)")
+    toks = common.load_tokens(p)
+    assert toks.dtype == np.int32
+    assert len(toks) > 1000
+    assert toks.min() >= 0 and toks.max() < 512
+
+
+def test_rust_binary_reads_python_checkpoint(tmp_path):
+    bwa = REPO / "target/release/bwa"
+    if not bwa.exists():
+        pytest.skip("bwa binary not built")
+    from compile import model
+    cfg = dict(common.TINY, n_layers=1, d_model=64, n_heads=2, d_ff=128,
+               vocab_size=512, max_seq=64, name="pytest-tiny")
+    p = model.init_params(cfg, 9)
+    ck = tmp_path / "m.bin"
+    common.save_checkpoint(ck, cfg, p)
+    out = subprocess.run(
+        [str(bwa), "eval", "--model", str(ck), "--method", "fp16",
+         "--quick"],
+        capture_output=True, text=True, timeout=600, cwd=REPO,
+    )
+    assert out.returncode == 0, out.stderr
+    assert "fp16" in out.stdout

@@ -1,0 +1,129 @@
+"""L1 correctness: the Pallas BWA kernel vs the pure-jnp oracle.
+
+This is the core build-time correctness signal; hypothesis sweeps shapes
+and value distributions.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.bwa_linear import (
+    bwa_linear,
+    fold_coefficients,
+    weight_row_sums,
+)
+
+
+def run_pair(rng, t, o, n, g):
+    q, m, a, b = ref.random_bwa_layer(rng, o, n, g)
+    x = rng.standard_normal((t, n)).astype(np.float32) * (
+        0.5 + rng.random()
+    )
+    planes, mu, shift = ref.quantize_acts_int4(x)
+    wsum = weight_row_sums(q, m, a, b, g)
+    y_ref = np.asarray(ref.bwa_linear_ref(planes, mu, shift, q, m, a, b, g))
+    y_ker = np.asarray(
+        bwa_linear(
+            jnp.asarray(planes), jnp.asarray(mu), jnp.asarray(shift),
+            jnp.asarray(q), jnp.asarray(m), jnp.asarray(a), jnp.asarray(b),
+            wsum, group_size=g,
+            row_tile=min(64, o),
+        )
+    )
+    return y_ref, y_ker
+
+
+def test_kernel_matches_ref_basic():
+    rng = np.random.default_rng(0)
+    y_ref, y_ker = run_pair(rng, t=3, o=128, n=192, g=64)
+    np.testing.assert_allclose(y_ker, y_ref, rtol=1e-4, atol=1e-4)
+
+
+def test_kernel_single_token_single_tile():
+    rng = np.random.default_rng(1)
+    y_ref, y_ker = run_pair(rng, t=1, o=64, n=64, g=64)
+    np.testing.assert_allclose(y_ker, y_ref, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    t=st.integers(1, 4),
+    o_tiles=st.integers(1, 3),
+    groups=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_matches_ref_hypothesis(t, o_tiles, groups, seed):
+    rng = np.random.default_rng(seed)
+    o = 64 * o_tiles
+    n = 64 * groups
+    y_ref, y_ker = run_pair(rng, t=t, o=o, n=n, g=64)
+    np.testing.assert_allclose(y_ker, y_ref, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), gs=st.sampled_from([32, 64, 128]))
+def test_kernel_group_sizes(seed, gs):
+    rng = np.random.default_rng(seed)
+    y_ref, y_ker = run_pair(rng, t=2, o=64, n=2 * gs, g=gs)
+    np.testing.assert_allclose(y_ker, y_ref, rtol=1e-4, atol=1e-4)
+
+
+def test_act_quantization_error_bounded():
+    rng = np.random.default_rng(3)
+    x = rng.standard_normal((5, 256)).astype(np.float32)
+    planes, mu, shift = ref.quantize_acts_int4(x)
+    xhat = np.asarray(ref.dequantize_acts(planes, mu, shift))
+    scale = mu[:, 0]  # mu_0 == RTN step
+    assert np.all(np.abs(x - xhat) <= scale[:, None] * 0.5 + 1e-5)
+
+
+def test_planes_are_binary():
+    rng = np.random.default_rng(4)
+    x = rng.standard_normal((2, 64)).astype(np.float32)
+    planes, _, _ = ref.quantize_acts_int4(x)
+    assert set(np.unique(planes)) <= {0.0, 1.0}
+
+
+def test_fold_coefficients_shape():
+    a = np.ones((2, 3, 2), np.float32)
+    b = np.zeros((2, 3, 2), np.float32)
+    c = np.asarray(fold_coefficients(a, b))
+    assert c.shape == (2, 3, 4)
+    np.testing.assert_allclose(c[..., 0], 2.0)  # c1 = 2 alpha1
+    np.testing.assert_allclose(c[..., 1], -1.0)  # c2 = beta1 - alpha1
+
+
+def test_weight_dequant_uses_fine_group_bit():
+    # s=1 elements must use alpha[...,1]/beta[...,1]
+    o, n, g = 1, 64, 64
+    q = np.ones((o, n), np.float32)
+    m = np.zeros((o, n), np.float32)
+    m[0, :32] = 1.0
+    alpha = np.zeros((1, 1, 2), np.float32)
+    beta = np.zeros((1, 1, 2), np.float32)
+    beta[0, 0, 0] = 5.0  # s=0 value
+    beta[0, 0, 1] = -7.0  # s=1 value
+    w = np.asarray(ref.dequantize_weights(q, m, alpha, beta, g))
+    assert np.all(w[0, :32] == -7.0)
+    assert np.all(w[0, 32:] == 5.0)
+
+
+@pytest.mark.parametrize("t", [1, 3])
+def test_zero_activations_give_shift_only(t):
+    rng = np.random.default_rng(5)
+    o, n, g = 64, 64, 64
+    q, m, a, b = ref.random_bwa_layer(rng, o, n, g)
+    x = np.zeros((t, n), np.float32)
+    planes, mu, shift = ref.quantize_acts_int4(x)
+    wsum = weight_row_sums(q, m, a, b, g)
+    y = np.asarray(
+        bwa_linear(jnp.asarray(planes), jnp.asarray(mu), jnp.asarray(shift),
+                   jnp.asarray(q), jnp.asarray(m), jnp.asarray(a),
+                   jnp.asarray(b), wsum, group_size=g, row_tile=64))
+    # x == 0 -> quantized planes may carry the zero code; dequant must be ~0
+    y_ref = np.asarray(ref.bwa_linear_ref(planes, mu, shift, q, m, a, b, g))
+    np.testing.assert_allclose(y, y_ref, rtol=1e-4, atol=1e-4)
+    assert np.all(np.abs(y) < 1e-3)

@@ -1,0 +1,83 @@
+"""L2 tests: tiny-LLaMA forward properties + a short training sanity run."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import common, model
+
+
+def small_cfg():
+    return dict(common.TINY, n_layers=1, d_model=64, n_heads=2, d_ff=128,
+                vocab_size=64, max_seq=64)
+
+
+def test_forward_shape_and_determinism():
+    cfg = small_cfg()
+    p = model.init_params(cfg, 0)
+    toks = jnp.asarray(np.arange(10) % 64)
+    a = model.forward(cfg, p, toks)
+    b = model.forward(cfg, p, toks)
+    assert a.shape == (10, 64)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_causality():
+    cfg = small_cfg()
+    p = model.init_params(cfg, 1)
+    t1 = jnp.asarray([3, 7, 11, 13, 17])
+    t2 = jnp.asarray([3, 7, 11, 62, 1])
+    a = np.asarray(model.forward(cfg, p, t1))
+    b = np.asarray(model.forward(cfg, p, t2))
+    np.testing.assert_allclose(a[:3], b[:3], rtol=1e-5, atol=1e-5)
+
+
+def test_loss_decreases_with_sgd():
+    cfg = small_cfg()
+    p = model.init_params(cfg, 2)
+    rng = np.random.default_rng(0)
+    batch = jnp.asarray(rng.integers(0, 64, size=(4, 33)))
+    lg = jax.jit(jax.value_and_grad(lambda pp: model.loss_fn(cfg, pp, batch)))
+    l0, _ = lg(p)
+    for _ in range(25):
+        loss, g = lg(p)
+        p = {k: np.asarray(p[k]) - 0.5 * np.asarray(g[k]) for k in p}
+    l1, _ = lg(p)
+    assert float(l1) < float(l0) * 0.9, (float(l0), float(l1))
+
+
+def test_bwa_forward_tracks_fp():
+    cfg = small_cfg()
+    p = model.init_params(cfg, 3)
+    toks = jnp.asarray(np.arange(12) % 64)
+    fp = np.asarray(model.forward(cfg, p, toks))
+    bwa = model.bwa_sim_params(cfg, p)
+    qn = np.asarray(model.forward_bwa(cfg, p, bwa, toks))
+    rel = np.abs(qn - fp).mean() / (np.abs(fp).mean() + 1e-9)
+    assert rel < 0.8, rel
+
+
+def test_rope_preserves_norm():
+    x = jnp.asarray(np.random.default_rng(1).standard_normal((4, 64)),
+                    dtype=jnp.float32)
+    pos = jnp.arange(4, dtype=jnp.float32)
+    y = model.rope(x, 2, 10000.0, pos)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=1),
+        np.linalg.norm(np.asarray(y), axis=1),
+        rtol=1e-4,
+    )
+
+
+def test_checkpoint_roundtrip():
+    cfg = small_cfg()
+    p = model.init_params(cfg, 4)
+    import tempfile, os
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "m.bin")
+        common.save_checkpoint(path, cfg, p)
+        cfg2, p2 = common.load_checkpoint(path)
+        assert cfg2["d_model"] == cfg["d_model"]
+        for k in p:
+            np.testing.assert_array_equal(np.asarray(p[k], np.float32),
+                                          p2[k])

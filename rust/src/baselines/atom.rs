@@ -1,0 +1,161 @@
+//! Atom baseline (Zhao et al., 2024): mixed-precision quantization —
+//! channel reordering by activation scale, a small INT8 outlier region
+//! (weights *and* activations), and group-wise low-bit RTN with GPTQ
+//! compensation for the rest. The strongest W4A4 baseline in the paper's
+//! tables; collapses at W2A4 like the others.
+
+use super::common::{gptq_block_loop, ActTransform, FakeQuantLinear, RtnGrid};
+use crate::quant::hessian::{reorder_by_scales, Hessian};
+use crate::quant::outlier::OutlierPart;
+use crate::quant::{QuantLinear, Quantizer};
+use crate::tensor::Tensor;
+
+pub struct AtomQuantizer {
+    pub wbits: u32,
+    pub abits: u32,
+    pub group_size: usize,
+    pub outlier_groups: usize,
+}
+
+impl AtomQuantizer {
+    pub fn new(wbits: u32, abits: u32) -> Self {
+        Self {
+            wbits,
+            abits,
+            group_size: 64,
+            outlier_groups: 1,
+        }
+    }
+}
+
+impl Quantizer for AtomQuantizer {
+    fn name(&self) -> String {
+        format!("Atom W{}A{}", self.wbits, self.abits)
+    }
+
+    fn quantize_linear(&self, w: &Tensor, calib: &Tensor) -> Box<dyn QuantLinear> {
+        let (out_f, in_f) = w.dims2();
+        let n_outlier = (self.outlier_groups * self.group_size).min(in_f / 2);
+        let n_norm = in_f - n_outlier;
+
+        let h0 = Hessian::from_activations(calib, 0.01);
+        let perm = reorder_by_scales(&h0.act_scales);
+        let h = h0.permuted(&perm, 0.01);
+
+        // permuted weight copy
+        let mut wp = Tensor::zeros(&[out_f, in_f]);
+        for j in 0..out_f {
+            let src = w.row(j);
+            let dst = wp.row_mut(j);
+            for (i, &p) in perm.iter().enumerate() {
+                dst[i] = src[p];
+            }
+        }
+
+        let grid = RtnGrid { bits: self.wbits };
+        let mut w_hat = gptq_block_loop(&wp, &h, self.group_size, n_norm, &grid, true);
+
+        // INT8 outliers from the compensated tail
+        let mut blk = Vec::with_capacity(out_f * n_outlier);
+        for j in 0..out_f {
+            blk.extend_from_slice(&w_hat.row(j)[n_norm..]);
+        }
+        let outlier = OutlierPart::quantize(&blk, out_f, n_outlier, 8);
+        for j in 0..out_f {
+            for c in 0..n_outlier {
+                w_hat.row_mut(j)[n_norm + c] = outlier.dequant(j, c);
+            }
+        }
+
+        let bytes = out_f * n_norm * self.wbits as usize / 8
+            + out_f * (n_norm / self.group_size) * 4
+            + outlier.bytes();
+        let wbits_eff = (n_norm as f64 * self.wbits as f64 + n_outlier as f64 * 8.0)
+            / in_f as f64;
+        Box::new(FakeQuantLinear {
+            w_hat,
+            transform: ActTransform::Permute(perm),
+            act_bits: Some(self.abits),
+            n_norm,
+            outlier: Some(outlier),
+            wbits_eff,
+            bytes,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn setup(rng: &mut Rng) -> (Tensor, Tensor) {
+        let (out_f, in_f) = (32, 256);
+        let w = Tensor::from_vec(&[out_f, in_f], rng.normal_vec_f32(out_f * in_f, 0.0, 0.1));
+        let mut x = Tensor::zeros(&[64, in_f]);
+        for v in &mut x.data {
+            *v = rng.normal_f32(0.0, 1.0);
+        }
+        for t in 0..64 {
+            x.data[t * in_f + 3] *= 25.0;
+            x.data[t * in_f + 77] *= 15.0;
+        }
+        (w, x)
+    }
+
+    #[test]
+    fn atom_w4a4_close_to_fp_despite_outliers() {
+        let mut rng = Rng::new(1);
+        let (w, x) = setup(&mut rng);
+        let q = AtomQuantizer::new(4, 4).quantize_linear(&w, &x);
+        let y = q.forward(&x);
+        let want = crate::tensor::matmul_wt(&x, &w);
+        let err = prop::rel_err(&y.data, &want.data);
+        assert!(err < 0.1, "Atom W4A4 err {err}");
+    }
+
+    #[test]
+    fn outlier_handling_beats_plain_gptq_on_outlier_data() {
+        let mut rng = Rng::new(2);
+        let (w, x) = setup(&mut rng);
+        let want = crate::tensor::matmul_wt(&x, &w);
+        let atom = AtomQuantizer::new(4, 4).quantize_linear(&w, &x);
+        let gptq = super::super::gptq_rtn::GptqQuantizer::new(4, Some(4)).quantize_linear(&w, &x);
+        let e_atom = prop::rel_err(&atom.forward(&x).data, &want.data);
+        let e_gptq = prop::rel_err(&gptq.forward(&x).data, &want.data);
+        assert!(
+            e_atom < e_gptq,
+            "atom {e_atom} should beat plain gptq {e_gptq} on outlier-heavy acts"
+        );
+    }
+
+    #[test]
+    fn w2_much_worse_than_w4() {
+        // Evaluate on *fresh* tokens (GPTQ compensation overfits the
+        // calibration set) with INT8 activations so the comparison
+        // isolates the weight grid.
+        let mut rng = Rng::new(3);
+        let (w, x) = setup(&mut rng);
+        let (_, xt) = setup(&mut rng);
+        let want = crate::tensor::matmul_wt(&xt, &w);
+        let e4 = prop::rel_err(
+            &AtomQuantizer::new(4, 8).quantize_linear(&w, &x).forward(&xt).data,
+            &want.data,
+        );
+        let e2 = prop::rel_err(
+            &AtomQuantizer::new(2, 8).quantize_linear(&w, &x).forward(&xt).data,
+            &want.data,
+        );
+        assert!(e2 > 2.0 * e4, "{e2} vs {e4}");
+    }
+
+    #[test]
+    fn effective_weight_bits_mixes_int8_tail() {
+        let mut rng = Rng::new(4);
+        let (w, x) = setup(&mut rng);
+        let q = AtomQuantizer::new(4, 4).quantize_linear(&w, &x);
+        let bits = q.weight_bits();
+        assert!(bits > 4.0 && bits < 6.0, "{bits}");
+    }
+}

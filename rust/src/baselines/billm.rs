@@ -1,0 +1,226 @@
+//! BiLLM baseline (Huang et al., 2024a): PTQ weight binarization via
+//! Hessian-based salient/non-salient splitting.
+//!
+//! Per column group: the most Hessian-sensitive columns are *salient* and
+//! get a residual binarization (two sequential sign/scale approximations,
+//! w ≈ α₁·sign(w) + α₂·sign(w − α₁·sign(w))); the remaining weights are
+//! split by an optimal magnitude break point into two "bell" groups, each
+//! binarized with its own scale. Group membership is a bitmap → ~(1+1)
+//! bits per weight, like the paper's method, but *activations are not
+//! treated at all* — which is exactly why the paper's Table 1 shows BiLLM
+//! collapsing when its activations are forced to 4 bits (no reordering,
+//! no outlier channels, no plane decomposition).
+
+use super::common::{ActTransform, FakeQuantLinear};
+use crate::quant::hessian::Hessian;
+use crate::quant::{QuantLinear, Quantizer};
+use crate::tensor::Tensor;
+
+pub struct BillmQuantizer {
+    /// None = W(1+1)A16 (the method as published); Some(4) = the forced
+    /// W(1+1)A4 row of Table 1.
+    pub abits: Option<u32>,
+    pub group_size: usize,
+    /// Fraction of columns treated as salient (BiLLM uses ~10%).
+    pub salient_frac: f64,
+}
+
+impl BillmQuantizer {
+    pub fn new(abits: Option<u32>) -> Self {
+        Self {
+            abits,
+            group_size: 64,
+            salient_frac: 0.1,
+        }
+    }
+}
+
+/// Residual binarization: w ≈ α₁·b₁ + α₂·b₂ (b ∈ {±1}).
+fn residual_binarize(w: &[f32]) -> Vec<f32> {
+    let n = w.len().max(1) as f32;
+    let a1 = w.iter().map(|v| v.abs()).sum::<f32>() / n;
+    let resid: Vec<f32> = w
+        .iter()
+        .map(|&v| v - a1 * if v >= 0.0 { 1.0 } else { -1.0 })
+        .collect();
+    let a2 = resid.iter().map(|v| v.abs()).sum::<f32>() / n;
+    w.iter()
+        .zip(resid.iter())
+        .map(|(&v, &r)| {
+            a1 * if v >= 0.0 { 1.0 } else { -1.0 } + a2 * if r >= 0.0 { 1.0 } else { -1.0 }
+        })
+        .collect()
+}
+
+/// Bell-split binarization: search a magnitude break point p splitting the
+/// weights into concentrated (|w| ≤ p) and sparse (|w| > p) groups, each
+/// binarized as α_g·sign(w); returns the dequantized values minimizing SSE
+/// over a small grid of candidate break points.
+fn bell_split_binarize(w: &[f32]) -> Vec<f32> {
+    let mut mags: Vec<f32> = w.iter().map(|v| v.abs()).collect();
+    mags.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = w.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let mut best: (f32, Vec<f32>) = (f32::INFINITY, vec![0.0; n]);
+    for frac in [0.5, 0.6, 0.7, 0.8, 0.9] {
+        let p = mags[((n - 1) as f64 * frac) as usize];
+        let (mut s_lo, mut n_lo, mut s_hi, mut n_hi) = (0.0f32, 0usize, 0.0f32, 0usize);
+        for &v in w {
+            if v.abs() <= p {
+                s_lo += v.abs();
+                n_lo += 1;
+            } else {
+                s_hi += v.abs();
+                n_hi += 1;
+            }
+        }
+        let a_lo = if n_lo > 0 { s_lo / n_lo as f32 } else { 0.0 };
+        let a_hi = if n_hi > 0 { s_hi / n_hi as f32 } else { 0.0 };
+        let dq: Vec<f32> = w
+            .iter()
+            .map(|&v| {
+                let a = if v.abs() <= p { a_lo } else { a_hi };
+                a * if v >= 0.0 { 1.0 } else { -1.0 }
+            })
+            .collect();
+        let sse: f32 = w.iter().zip(&dq).map(|(a, b)| (a - b) * (a - b)).sum();
+        if sse < best.0 {
+            best = (sse, dq);
+        }
+    }
+    best.1
+}
+
+impl Quantizer for BillmQuantizer {
+    fn name(&self) -> String {
+        match self.abits {
+            Some(a) => format!("BiLLM W(1+1)A{a}"),
+            None => "BiLLM W(1+1)A16".to_string(),
+        }
+    }
+
+    fn quantize_linear(&self, w: &Tensor, calib: &Tensor) -> Box<dyn QuantLinear> {
+        let (out_f, in_f) = w.dims2();
+        let h = Hessian::from_activations(calib, 0.01);
+        let importance = h.importance(0, in_f);
+
+        // salient columns = top `salient_frac` by importance
+        let mut order: Vec<usize> = (0..in_f).collect();
+        order.sort_by(|&a, &b| importance[b].partial_cmp(&importance[a]).unwrap());
+        let n_salient = ((in_f as f64 * self.salient_frac).round() as usize).max(1);
+        let mut is_salient = vec![false; in_f];
+        for &c in order.iter().take(n_salient) {
+            is_salient[c] = true;
+        }
+
+        let mut w_hat = Tensor::zeros(&[out_f, in_f]);
+        for j in 0..out_f {
+            let row = w.row(j);
+            // per group: split into salient/non-salient and binarize each
+            let mut start = 0;
+            while start < in_f {
+                let end = (start + self.group_size).min(in_f);
+                let mut sal_idx = Vec::new();
+                let mut sal_w = Vec::new();
+                let mut non_idx = Vec::new();
+                let mut non_w = Vec::new();
+                for i in start..end {
+                    if is_salient[i] {
+                        sal_idx.push(i);
+                        sal_w.push(row[i]);
+                    } else {
+                        non_idx.push(i);
+                        non_w.push(row[i]);
+                    }
+                }
+                let sal_dq = residual_binarize(&sal_w);
+                let non_dq = bell_split_binarize(&non_w);
+                let out = w_hat.row_mut(j);
+                for (k, &i) in sal_idx.iter().enumerate() {
+                    out[i] = sal_dq[k];
+                }
+                for (k, &i) in non_idx.iter().enumerate() {
+                    out[i] = non_dq[k];
+                }
+                start = end;
+            }
+        }
+
+        // ~2 bits/element storage (sign + group bitmap) + per-group scales
+        let bytes = out_f * in_f / 4 + out_f * (in_f / self.group_size) * 6;
+        Box::new(FakeQuantLinear {
+            w_hat,
+            transform: ActTransform::None,
+            act_bits: self.abits,
+            n_norm: in_f,
+            outlier: None,
+            wbits_eff: 2.0,
+            bytes,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn residual_beats_single_binarization() {
+        let mut rng = Rng::new(1);
+        let w = rng.normal_vec_f32(128, 0.0, 1.0);
+        let r2 = residual_binarize(&w);
+        let a1 = w.iter().map(|v| v.abs()).sum::<f32>() / 128.0;
+        let r1: Vec<f32> = w
+            .iter()
+            .map(|&v| a1 * if v >= 0.0 { 1.0 } else { -1.0 })
+            .collect();
+        let e2: f32 = w.iter().zip(&r2).map(|(a, b)| (a - b) * (a - b)).sum();
+        let e1: f32 = w.iter().zip(&r1).map(|(a, b)| (a - b) * (a - b)).sum();
+        assert!(e2 < e1, "residual {e2} vs single {e1}");
+    }
+
+    #[test]
+    fn bell_split_beats_single_scale_on_heavy_tails() {
+        let mut rng = Rng::new(2);
+        // mixture: mostly small, some large — the "bell" shape
+        let mut w: Vec<f32> = rng.normal_vec_f32(100, 0.0, 0.1);
+        w.extend(rng.normal_vec_f32(28, 0.0, 1.5));
+        let dq = bell_split_binarize(&w);
+        let a = w.iter().map(|v| v.abs()).sum::<f32>() / w.len() as f32;
+        let single: Vec<f32> = w
+            .iter()
+            .map(|&v| a * if v >= 0.0 { 1.0 } else { -1.0 })
+            .collect();
+        let e_split: f32 = w.iter().zip(&dq).map(|(x, y)| (x - y) * (x - y)).sum();
+        let e_single: f32 = w.iter().zip(&single).map(|(x, y)| (x - y) * (x - y)).sum();
+        assert!(e_split < e_single, "{e_split} vs {e_single}");
+    }
+
+    #[test]
+    fn billm_a16_reasonable_a4_collapses_on_outlier_acts() {
+        let mut rng = Rng::new(3);
+        let (out_f, in_f) = (32, 256);
+        let w = Tensor::from_vec(&[out_f, in_f], rng.normal_vec_f32(out_f * in_f, 0.0, 0.1));
+        let mut x = Tensor::zeros(&[64, in_f]);
+        for v in &mut x.data {
+            *v = rng.normal_f32(0.0, 1.0);
+        }
+        for t in 0..64 {
+            x.data[t * in_f + 9] *= 30.0; // strong activation outlier
+        }
+        let want = crate::tensor::matmul_wt(&x, &w);
+        let a16 = BillmQuantizer::new(None).quantize_linear(&w, &x);
+        let a4 = BillmQuantizer::new(Some(4)).quantize_linear(&w, &x);
+        let e16 = prop::rel_err(&a16.forward(&x).data, &want.data);
+        let e4 = prop::rel_err(&a4.forward(&x).data, &want.data);
+        assert!(e16 < 0.5, "A16 err {e16}");
+        assert!(
+            e4 > 1.25 * e16,
+            "A4 ({e4}) should degrade sharply vs A16 ({e16})"
+        );
+    }
+}

@@ -1,0 +1,252 @@
+//! Shared machinery for the baseline quantizers: one fake-quant linear
+//! that covers every baseline's forward path (optional channel
+//! permutation or Hadamard rotation of the input, per-token activation
+//! RTN, optional INT8 outlier block), plus the GPTQ-style block
+//! compensation loop over an arbitrary per-group weight grid.
+
+use crate::quant::hessian::Hessian;
+use crate::quant::outlier::OutlierPart;
+use crate::quant::rtn::RtnParams;
+use crate::quant::QuantLinear;
+use crate::tensor::Tensor;
+
+use super::quarot::Hadamard;
+
+/// How a baseline transforms + quantizes the layer input.
+pub enum ActTransform {
+    /// Identity (FP or plain per-token RTN on the raw channels).
+    None,
+    /// Channel permutation (Atom-style reordering); channels ≥ `n_norm`
+    /// are the INT8 outlier region.
+    Permute(Vec<usize>),
+    /// Orthogonal Hadamard rotation (QuaRot).
+    Rotate(Hadamard),
+}
+
+/// Fake-quant linear used by all baselines.
+pub struct FakeQuantLinear {
+    /// Dequantized weights [out, in] in *transformed* input space.
+    pub w_hat: Tensor,
+    pub transform: ActTransform,
+    /// Per-token activation RTN bits (None = FP16 activations).
+    pub act_bits: Option<u32>,
+    /// Binary-region size when outliers are split off (else = in_features).
+    pub n_norm: usize,
+    pub outlier: Option<OutlierPart>,
+    /// Reported weight bits per element.
+    pub wbits_eff: f64,
+    pub bytes: usize,
+}
+
+impl QuantLinear for FakeQuantLinear {
+    fn forward(&self, x: &Tensor) -> Tensor {
+        let (m, n) = x.dims2();
+        let (out_f, in_f) = self.w_hat.dims2();
+        assert_eq!(n, in_f);
+        // transform input
+        let xt = match &self.transform {
+            ActTransform::None => x.clone(),
+            ActTransform::Permute(p) => x.select_cols(p),
+            ActTransform::Rotate(h) => h.apply_rows(x),
+        };
+        let mut y = Tensor::zeros(&[m, out_f]);
+        let mut xq = vec![0.0f32; self.n_norm];
+        for t in 0..m {
+            let row = xt.row(t);
+            xq.copy_from_slice(&row[..self.n_norm]);
+            if let Some(bits) = self.act_bits {
+                let p = RtnParams::fit(&xq, bits);
+                for v in xq.iter_mut() {
+                    *v = p.dequantize_one(p.quantize_one(*v));
+                }
+            }
+            let yrow = y.row_mut(t);
+            for j in 0..out_f {
+                let wrow = self.w_hat.row(j);
+                let mut acc = 0.0f32;
+                for i in 0..self.n_norm {
+                    acc += wrow[i] * xq[i];
+                }
+                yrow[j] = acc;
+            }
+            if let Some(outl) = &self.outlier {
+                if self.act_bits.is_some() {
+                    outl.forward_add(&row[self.n_norm..], yrow);
+                } else {
+                    for j in 0..out_f {
+                        let wrow = self.w_hat.row(j);
+                        let mut acc = 0.0f32;
+                        for (c, &v) in row[self.n_norm..].iter().enumerate() {
+                            acc += wrow[self.n_norm + c] * v;
+                        }
+                        yrow[j] += acc;
+                    }
+                }
+            }
+        }
+        y
+    }
+
+    fn weight_bits(&self) -> f64 {
+        self.wbits_eff
+    }
+
+    fn act_bits(&self) -> f64 {
+        self.act_bits.map(|b| b as f64).unwrap_or(16.0)
+    }
+
+    fn bytes(&self) -> usize {
+        self.bytes
+    }
+}
+
+/// A per-(row, group) weight quantization grid used inside the GPTQ loop.
+/// `fit` is called once per (row, group) at block entry (standard GPTQ
+/// group-size semantics); `quantize_one` maps a single (possibly
+/// compensation-shifted) weight onto the grid.
+pub trait WeightGrid: Sync {
+    type Params;
+    fn fit(&self, w: &[f32]) -> Self::Params;
+    fn quantize_one(&self, p: &Self::Params, w: f32) -> f32;
+}
+
+/// Plain RTN grid at `bits` (asymmetric, per group).
+pub struct RtnGrid {
+    pub bits: u32,
+}
+
+impl WeightGrid for RtnGrid {
+    type Params = RtnParams;
+
+    fn fit(&self, w: &[f32]) -> RtnParams {
+        RtnParams::fit(w, self.bits)
+    }
+
+    fn quantize_one(&self, p: &RtnParams, w: f32) -> f32 {
+        p.dequantize_one(p.quantize_one(w))
+    }
+}
+
+/// GPTQ loop: walk the (already transformed/permuted) weight matrix in
+/// column blocks of `group_size`; per block, fit the grid parameters per
+/// row, then quantize *column by column* propagating each column's error
+/// through the inverse-Hessian Cholesky factor — first within the block,
+/// then (lazily, at block end) into the remaining columns. This is the
+/// exact GPTQ schedule. `n_quant` limits quantization to the first
+/// columns (the rest, e.g. INT8 outliers, only receive compensation).
+pub fn gptq_block_loop<G: WeightGrid>(
+    w: &Tensor,
+    h: &Hessian,
+    group_size: usize,
+    n_quant: usize,
+    grid: &G,
+    compensate: bool,
+) -> Tensor {
+    let (out_f, in_f) = w.dims2();
+    assert!(n_quant <= in_f);
+    let mut wp = w.clone();
+    let mut w_hat = w.clone();
+    let hc_diag = h.hc_diag(0, in_f);
+
+    let mut start = 0;
+    while start < n_quant {
+        let end = (start + group_size).min(n_quant);
+        let b = end - start;
+        // per-row grid params from the block at entry
+        let params: Vec<G::Params> = (0..out_f)
+            .map(|j| grid.fit(&wp.row(j)[start..end]))
+            .collect();
+        // per-row accumulated errors for the deferred tail update
+        let mut errs = vec![0.0f64; out_f * b];
+        for c in 0..b {
+            let i = start + c;
+            for j in 0..out_f {
+                let wv = wp.row(j)[i];
+                let q = grid.quantize_one(&params[j], wv);
+                w_hat.row_mut(j)[i] = q;
+                let e = (wv as f64 - q as f64) / hc_diag[i];
+                errs[j * b + c] = e;
+                if compensate {
+                    // in-block compensation for the not-yet-quantized cols
+                    let wrow = wp.row_mut(j);
+                    for t in (i + 1)..end {
+                        wrow[t] -= (e * h.hc[(i, t)]) as f32;
+                    }
+                }
+            }
+        }
+        if compensate {
+            // deferred update of everything past the block
+            for j in 0..out_f {
+                let wrow = wp.row_mut(j);
+                for t in end..in_f {
+                    let mut delta = 0.0f64;
+                    for c in 0..b {
+                        delta += errs[j * b + c] * h.hc[(start + c, t)];
+                    }
+                    wrow[t] -= delta as f32;
+                }
+            }
+        }
+        start = end;
+    }
+    // pass through any remaining (outlier) columns from the compensated wp
+    for j in 0..out_f {
+        let src = wp.row(j)[n_quant..].to_vec();
+        w_hat.row_mut(j)[n_quant..].copy_from_slice(&src);
+    }
+    w_hat
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn gptq_loop_reduces_output_error_vs_plain_rtn() {
+        let mut rng = Rng::new(1);
+        let (out_f, in_f) = (32, 128);
+        let w = Tensor::from_vec(&[out_f, in_f], rng.normal_vec_f32(out_f * in_f, 0.0, 0.1));
+        let mut x = Tensor::zeros(&[96, in_f]);
+        for v in &mut x.data {
+            *v = rng.normal_f32(0.0, 1.0);
+        }
+        for t in 0..96 {
+            x.data[t * in_f + 7] *= 10.0;
+        }
+        let h = Hessian::from_activations(&x, 0.01);
+        let grid = RtnGrid { bits: 2 };
+        let comp = gptq_block_loop(&w, &h, 64, in_f, &grid, true);
+        let plain = gptq_block_loop(&w, &h, 64, in_f, &grid, false);
+        let y_fp = crate::tensor::matmul_wt(&x, &w);
+        let y_comp = crate::tensor::matmul_wt(&x, &comp);
+        let y_plain = crate::tensor::matmul_wt(&x, &plain);
+        let e_comp = prop::rel_err(&y_comp.data, &y_fp.data);
+        let e_plain = prop::rel_err(&y_plain.data, &y_fp.data);
+        assert!(
+            e_comp < e_plain,
+            "compensated {e_comp} should beat plain {e_plain}"
+        );
+    }
+
+    #[test]
+    fn fake_quant_linear_fp_path_is_dense_matmul() {
+        let mut rng = Rng::new(2);
+        let w = Tensor::from_vec(&[8, 16], rng.normal_vec_f32(128, 0.0, 1.0));
+        let lin = FakeQuantLinear {
+            w_hat: w.clone(),
+            transform: ActTransform::None,
+            act_bits: None,
+            n_norm: 16,
+            outlier: None,
+            wbits_eff: 16.0,
+            bytes: w.numel() * 2,
+        };
+        let x = Tensor::from_vec(&[3, 16], rng.normal_vec_f32(48, 0.0, 1.0));
+        let y = lin.forward(&x);
+        let want = crate::tensor::matmul_wt(&x, &w);
+        prop::assert_close(&y.data, &want.data, 1e-5, 1e-5).unwrap();
+    }
+}

@@ -1,0 +1,92 @@
+//! GPTQ baseline (Frantar et al., 2022): column-block RTN weight
+//! quantization with inverse-Hessian error compensation; per-token RTN
+//! activations. This is the "GPTQ" series of Figure 1 and the W1A4 base
+//! row of Table 5.
+
+use super::common::{gptq_block_loop, ActTransform, FakeQuantLinear, RtnGrid};
+use crate::quant::hessian::Hessian;
+use crate::quant::{QuantLinear, Quantizer};
+use crate::tensor::Tensor;
+
+pub struct GptqQuantizer {
+    pub wbits: u32,
+    /// None = FP16 activations (weight-only GPTQ).
+    pub abits: Option<u32>,
+    pub group_size: usize,
+}
+
+impl GptqQuantizer {
+    pub fn new(wbits: u32, abits: Option<u32>) -> Self {
+        Self {
+            wbits,
+            abits,
+            group_size: 64,
+        }
+    }
+}
+
+impl Quantizer for GptqQuantizer {
+    fn name(&self) -> String {
+        match self.abits {
+            Some(a) => format!("GPTQ W{}A{}", self.wbits, a),
+            None => format!("GPTQ W{}A16", self.wbits),
+        }
+    }
+
+    fn quantize_linear(&self, w: &Tensor, calib: &Tensor) -> Box<dyn QuantLinear> {
+        let (out_f, in_f) = w.dims2();
+        let h = Hessian::from_activations(calib, 0.01);
+        let grid = RtnGrid { bits: self.wbits };
+        let w_hat = gptq_block_loop(w, &h, self.group_size, in_f, &grid, true);
+        let bytes = out_f * in_f * self.wbits as usize / 8
+            + out_f * (in_f / self.group_size) * 4;
+        Box::new(FakeQuantLinear {
+            w_hat,
+            transform: ActTransform::None,
+            act_bits: self.abits,
+            n_norm: in_f,
+            outlier: None,
+            wbits_eff: self.wbits as f64,
+            bytes,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn setup(rng: &mut Rng) -> (Tensor, Tensor) {
+        let (out_f, in_f) = (32, 128);
+        let w = Tensor::from_vec(&[out_f, in_f], rng.normal_vec_f32(out_f * in_f, 0.0, 0.1));
+        let x = Tensor::from_vec(&[64, in_f], rng.normal_vec_f32(64 * in_f, 0.0, 1.0));
+        (w, x)
+    }
+
+    #[test]
+    fn w4_close_w2_worse_w1_terrible() {
+        let mut rng = Rng::new(1);
+        let (w, x) = setup(&mut rng);
+        let want = crate::tensor::matmul_wt(&x, &w);
+        let err = |bits: u32| {
+            let q = GptqQuantizer::new(bits, Some(4)).quantize_linear(&w, &x);
+            prop::rel_err(&q.forward(&x).data, &want.data)
+        };
+        let (e4, e2, e1) = (err(4), err(2), err(1));
+        assert!(e4 < 0.2, "W4 {e4}");
+        assert!(e2 > e4 && e1 > e2, "{e4} {e2} {e1}");
+        // W1 collapse — the paper's Figure 1 story
+        assert!(e1 > 0.3, "W1 should collapse, got {e1}");
+    }
+
+    #[test]
+    fn weight_only_has_fp_acts() {
+        let mut rng = Rng::new(2);
+        let (w, x) = setup(&mut rng);
+        let q = GptqQuantizer::new(4, None).quantize_linear(&w, &x);
+        assert_eq!(q.act_bits(), 16.0);
+        assert_eq!(q.weight_bits(), 4.0);
+    }
+}

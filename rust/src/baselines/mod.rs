@@ -1,0 +1,75 @@
+//! Baseline quantizers the paper compares against (all implemented from
+//! scratch on the shared [`crate::quant::Quantizer`] trait):
+//!
+//! - [`gptq_rtn`] — GPTQ (Frantar et al., 2022);
+//! - [`quarot`] — QuaRot rotation smoothing (Ashkboos et al., 2024);
+//! - [`atom`] — Atom mixed-precision (Zhao et al., 2024);
+//! - [`billm`] — BiLLM salient/bell binarization (Huang et al., 2024a).
+
+pub mod atom;
+pub mod billm;
+pub mod common;
+pub mod gptq_rtn;
+pub mod quarot;
+
+use crate::quant::Quantizer;
+
+/// Registry used by the CLI and the bench harness: method name → quantizer.
+pub fn by_name(name: &str) -> Option<Box<dyn Quantizer>> {
+    match name {
+        "fp16" => Some(Box::new(crate::quant::FpQuantizer)),
+        "bwa" => Some(Box::new(crate::quant::BwaQuantizer::paper())),
+        "bwa-a16" => Some(Box::new(crate::quant::BwaQuantizer {
+            cfg: crate::quant::binarize::BwaConfig::w11_a16(),
+        })),
+        "gptq-w4a4" => Some(Box::new(gptq_rtn::GptqQuantizer::new(4, Some(4)))),
+        "gptq-w2a4" => Some(Box::new(gptq_rtn::GptqQuantizer::new(2, Some(4)))),
+        "gptq-w1a4" => Some(Box::new(gptq_rtn::GptqQuantizer::new(1, Some(4)))),
+        "quarot-w4a4" => Some(Box::new(quarot::QuarotQuantizer::new(4, 4))),
+        "quarot-w2a4" => Some(Box::new(quarot::QuarotQuantizer::new(2, 4))),
+        "quarot-w1a4" => Some(Box::new(quarot::QuarotQuantizer::new(1, 4))),
+        "atom-w4a4" => Some(Box::new(atom::AtomQuantizer::new(4, 4))),
+        "atom-w2a4" => Some(Box::new(atom::AtomQuantizer::new(2, 4))),
+        "atom-w1a4" => Some(Box::new(atom::AtomQuantizer::new(1, 4))),
+        "billm-a16" => Some(Box::new(billm::BillmQuantizer::new(None))),
+        "billm-a4" => Some(Box::new(billm::BillmQuantizer::new(Some(4)))),
+        _ => None,
+    }
+}
+
+/// All registry names (for `--help` and the bench sweeps).
+pub const METHOD_NAMES: &[&str] = &[
+    "fp16",
+    "bwa",
+    "bwa-a16",
+    "gptq-w4a4",
+    "gptq-w2a4",
+    "gptq-w1a4",
+    "quarot-w4a4",
+    "quarot-w2a4",
+    "quarot-w1a4",
+    "atom-w4a4",
+    "atom-w2a4",
+    "atom-w1a4",
+    "billm-a16",
+    "billm-a4",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_resolves_every_listed_name() {
+        for name in METHOD_NAMES {
+            assert!(by_name(name).is_some(), "missing {name}");
+        }
+        assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn registry_names_are_descriptive() {
+        assert!(by_name("bwa").unwrap().name().contains("1x4"));
+        assert!(by_name("atom-w2a4").unwrap().name().contains("W2A4"));
+    }
+}

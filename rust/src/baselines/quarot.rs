@@ -1,0 +1,240 @@
+//! QuaRot baseline (Ashkboos et al., 2024): outlier smoothing via random
+//! orthogonal Hadamard rotation, then plain RTN/GPTQ quantization.
+//!
+//! y = Wx = (W·Qᵀ)(Q·x) for orthogonal Q. Rotating spreads outlier energy
+//! across channels, flattening the activation distribution so low-bit RTN
+//! behaves; at 4 bits this nearly closes the gap to FP, at 2 bits it
+//! degrades sharply (Figure 1 / Tables 1–2 of the paper).
+//!
+//! Q = blockdiag(H_k·D_k)/√k over power-of-two blocks (d need not be a
+//! power of two — e.g. d_ff = 640 → blocks 512 + 128), with D random ±1
+//! diagonals ("randomized Hadamard"), matching QuaRot's construction.
+
+use super::common::{gptq_block_loop, ActTransform, FakeQuantLinear, RtnGrid};
+use crate::quant::hessian::Hessian;
+use crate::quant::{QuantLinear, Quantizer};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Randomized block-Hadamard orthogonal transform.
+#[derive(Clone, Debug)]
+pub struct Hadamard {
+    pub n: usize,
+    /// power-of-two block sizes summing to n
+    pub blocks: Vec<usize>,
+    /// random ±1 diagonal
+    pub signs: Vec<f32>,
+}
+
+impl Hadamard {
+    pub fn new(n: usize, seed: u64) -> Hadamard {
+        let mut rng = Rng::new(seed ^ 0x51ab_5a5a);
+        let mut blocks = Vec::new();
+        let mut rem = n;
+        while rem > 0 {
+            let b = 1usize << (usize::BITS - 1 - rem.leading_zeros());
+            blocks.push(b);
+            rem -= b;
+        }
+        let signs = (0..n)
+            .map(|_| if rng.bool(0.5) { 1.0 } else { -1.0 })
+            .collect();
+        Hadamard { n, blocks, signs }
+    }
+
+    /// In-place transform of one vector: x ← blockdiag(H·D)x/√block.
+    pub fn apply(&self, x: &mut [f32]) {
+        assert_eq!(x.len(), self.n);
+        for (i, v) in x.iter_mut().enumerate() {
+            *v *= self.signs[i];
+        }
+        let mut off = 0;
+        for &b in &self.blocks {
+            fwht(&mut x[off..off + b]);
+            let norm = 1.0 / (b as f32).sqrt();
+            for v in &mut x[off..off + b] {
+                *v *= norm;
+            }
+            off += b;
+        }
+    }
+
+    /// Apply to every row of a [m, n] tensor (copy).
+    pub fn apply_rows(&self, x: &Tensor) -> Tensor {
+        let (m, n) = x.dims2();
+        assert_eq!(n, self.n);
+        let mut out = x.clone();
+        for t in 0..m {
+            self.apply(out.row_mut(t));
+        }
+        out
+    }
+}
+
+/// Fast Walsh–Hadamard transform in place (length must be a power of two).
+pub fn fwht(x: &mut [f32]) {
+    let n = x.len();
+    debug_assert!(n.is_power_of_two());
+    let mut h = 1;
+    while h < n {
+        let mut i = 0;
+        while i < n {
+            for j in i..i + h {
+                let a = x[j];
+                let b = x[j + h];
+                x[j] = a + b;
+                x[j + h] = a - b;
+            }
+            i += 2 * h;
+        }
+        h *= 2;
+    }
+}
+
+/// QuaRot quantizer: rotate → GPTQ-RTN weights at `wbits`, per-token RTN
+/// activations at `abits`.
+pub struct QuarotQuantizer {
+    pub wbits: u32,
+    pub abits: u32,
+    pub group_size: usize,
+    pub seed: u64,
+}
+
+impl QuarotQuantizer {
+    pub fn new(wbits: u32, abits: u32) -> Self {
+        Self {
+            wbits,
+            abits,
+            group_size: 64,
+            seed: 0xC0FFEE,
+        }
+    }
+}
+
+impl Quantizer for QuarotQuantizer {
+    fn name(&self) -> String {
+        format!("QuaRot W{}A{}", self.wbits, self.abits)
+    }
+
+    fn quantize_linear(&self, w: &Tensor, calib: &Tensor) -> Box<dyn QuantLinear> {
+        let (out_f, in_f) = w.dims2();
+        let had = Hadamard::new(in_f, self.seed ^ in_f as u64);
+        // Rotate weights: w' = W·Qᵀ, i.e. rotate each weight row (Q is
+        // symmetric-orthogonal per block up to the sign diagonal; applying
+        // the same routine to rows of W realizes W·Qᵀ because
+        // (Q x)·w_rot = x·(Qᵀ w_rot) and Q as built is its own transpose
+        // composed with D — we apply the identical operator to both sides).
+        let mut w_rot = w.clone();
+        for j in 0..out_f {
+            had.apply(w_rot.row_mut(j));
+        }
+        // Rotate calibration activations, build Hessian in rotated space.
+        let calib_rot = had.apply_rows(calib);
+        let h = Hessian::from_activations(&calib_rot, 0.01);
+        let grid = RtnGrid { bits: self.wbits };
+        let w_hat = gptq_block_loop(&w_rot, &h, self.group_size, in_f, &grid, true);
+        let bytes = out_f * in_f * self.wbits as usize / 8
+            + out_f * (in_f / self.group_size) * 4;
+        Box::new(FakeQuantLinear {
+            w_hat,
+            transform: ActTransform::Rotate(had),
+            act_bits: Some(self.abits),
+            n_norm: in_f,
+            outlier: None,
+            wbits_eff: self.wbits as f64,
+            bytes,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn fwht_is_orthogonal_up_to_scale() {
+        let mut rng = Rng::new(1);
+        let mut x = rng.normal_vec_f32(64, 0.0, 1.0);
+        let orig = x.clone();
+        fwht(&mut x);
+        // norm scales by sqrt(n)
+        let n0: f32 = orig.iter().map(|v| v * v).sum();
+        let n1: f32 = x.iter().map(|v| v * v).sum();
+        assert!((n1 / n0 - 64.0).abs() < 1e-2, "{}", n1 / n0);
+        // applying twice recovers n·x
+        fwht(&mut x);
+        for (a, b) in x.iter().zip(orig.iter()) {
+            assert!((a - 64.0 * b).abs() < 1e-2);
+        }
+    }
+
+    #[test]
+    fn rotation_preserves_inner_products() {
+        let mut rng = Rng::new(2);
+        let had = Hadamard::new(640, 7); // non-power-of-two
+        let a = rng.normal_vec_f32(640, 0.0, 1.0);
+        let b = rng.normal_vec_f32(640, 0.0, 1.0);
+        let dot0: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        let mut ar = a.clone();
+        let mut br = b.clone();
+        had.apply(&mut ar);
+        had.apply(&mut br);
+        let dot1: f32 = ar.iter().zip(&br).map(|(x, y)| x * y).sum();
+        assert!((dot0 - dot1).abs() < 1e-2 * dot0.abs().max(1.0), "{dot0} vs {dot1}");
+    }
+
+    #[test]
+    fn rotation_spreads_outliers() {
+        let mut rng = Rng::new(3);
+        let mut x = rng.normal_vec_f32(256, 0.0, 0.1);
+        x[17] = 50.0; // huge outlier
+        let had = Hadamard::new(256, 9);
+        let kurt = |v: &[f32]| -> f32 {
+            let m2: f32 = v.iter().map(|a| a * a).sum::<f32>() / v.len() as f32;
+            let m4: f32 = v.iter().map(|a| a.powi(4)).sum::<f32>() / v.len() as f32;
+            m4 / (m2 * m2)
+        };
+        let k0 = kurt(&x);
+        had.apply(&mut x);
+        let k1 = kurt(&x);
+        assert!(k1 < k0 / 4.0, "kurtosis {k0} -> {k1}");
+    }
+
+    #[test]
+    fn quarot_w4a4_close_to_fp() {
+        let mut rng = Rng::new(4);
+        let (out_f, in_f) = (32, 256);
+        let w = Tensor::from_vec(&[out_f, in_f], rng.normal_vec_f32(out_f * in_f, 0.0, 0.1));
+        let mut x = Tensor::zeros(&[64, in_f]);
+        for v in &mut x.data {
+            *v = rng.normal_f32(0.0, 1.0);
+        }
+        for t in 0..64 {
+            x.data[t * in_f + 11] *= 20.0;
+        }
+        let q = QuarotQuantizer::new(4, 4).quantize_linear(&w, &x);
+        let y = q.forward(&x);
+        let want = crate::tensor::matmul_wt(&x, &w);
+        let err = prop::rel_err(&y.data, &want.data);
+        assert!(err < 0.12, "W4A4 err {err}");
+    }
+
+    #[test]
+    fn quarot_w2_degrades_vs_w4() {
+        let mut rng = Rng::new(5);
+        let (out_f, in_f) = (32, 128);
+        let w = Tensor::from_vec(&[out_f, in_f], rng.normal_vec_f32(out_f * in_f, 0.0, 0.1));
+        let x = Tensor::from_vec(&[48, in_f], rng.normal_vec_f32(48 * in_f, 0.0, 1.0));
+        let want = crate::tensor::matmul_wt(&x, &w);
+        let e4 = prop::rel_err(
+            &QuarotQuantizer::new(4, 4).quantize_linear(&w, &x).forward(&x).data,
+            &want.data,
+        );
+        let e2 = prop::rel_err(
+            &QuarotQuantizer::new(2, 4).quantize_linear(&w, &x).forward(&x).data,
+            &want.data,
+        );
+        assert!(e2 > 2.0 * e4, "W2 ({e2}) should be much worse than W4 ({e4})");
+    }
+}

@@ -1,0 +1,255 @@
+//! Dynamic batcher: the serving coordinator's core loop.
+//!
+//! Requests arrive on an mpsc channel; the batcher greedily drains up to
+//! `max_batch` requests, waiting at most `max_wait` after the first one
+//! (the classic dynamic-batching policy), hands the batch to a
+//! [`Backend`], and returns per-request responses with latency metadata.
+
+use super::metrics::{Histogram, Throughput};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::time::{Duration, Instant};
+
+/// Model execution backend (PJRT session, native FP, native BWA, or a
+/// test mock) — returns last-position logits per sequence. Not `Send`:
+/// PJRT handles are thread-local, so the backend is constructed *on* the
+/// batcher thread (see `serve_workload`).
+pub trait Backend {
+    fn name(&self) -> String;
+    fn last_logits_batch(&self, seqs: &[&[u16]]) -> Vec<Vec<f32>>;
+}
+
+pub struct Request {
+    pub id: u64,
+    pub tokens: Vec<u16>,
+    pub submitted: Instant,
+    pub resp_tx: Sender<Response>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    /// Greedy next token from the last-position logits.
+    pub next_token: u16,
+    pub latency: Duration,
+    pub batch_size: usize,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        Self {
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+        }
+    }
+}
+
+/// Final statistics returned when the request channel closes.
+#[derive(Debug)]
+pub struct BatcherStats {
+    pub latency: Histogram,
+    pub queue_wait: Histogram,
+    pub requests: usize,
+    pub batches: usize,
+    pub mean_batch: f64,
+    pub throughput_rps: f64,
+}
+
+/// Run the batching loop until the channel closes. Blocking call — spawn
+/// on its own thread.
+pub fn run_batcher(
+    rx: Receiver<Request>,
+    backend: &dyn Backend,
+    cfg: BatcherConfig,
+) -> BatcherStats {
+    let mut latency = Histogram::default();
+    let mut queue_wait = Histogram::default();
+    let mut throughput = Throughput::new();
+    let mut batches = 0usize;
+    let mut total = 0usize;
+
+    loop {
+        // block for the first request of the batch
+        let first = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => break,
+        };
+        let mut batch = vec![first];
+        let deadline = Instant::now() + cfg.max_wait;
+        while batch.len() < cfg.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => batch.push(r),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+
+        let t_exec = Instant::now();
+        for r in &batch {
+            queue_wait.record(t_exec - r.submitted);
+        }
+        let seqs: Vec<&[u16]> = batch.iter().map(|r| r.tokens.as_slice()).collect();
+        let logits = backend.last_logits_batch(&seqs);
+        debug_assert_eq!(logits.len(), batch.len());
+        let bs = batch.len();
+        for (r, lg) in batch.into_iter().zip(logits.into_iter()) {
+            let next = crate::util::argmax(&lg) as u16;
+            let lat = r.submitted.elapsed();
+            latency.record(lat);
+            let _ = r.resp_tx.send(Response {
+                id: r.id,
+                next_token: next,
+                latency: lat,
+                batch_size: bs,
+            });
+        }
+        throughput.add(bs);
+        batches += 1;
+        total += bs;
+    }
+
+    BatcherStats {
+        latency,
+        queue_wait,
+        requests: total,
+        batches,
+        mean_batch: total as f64 / batches.max(1) as f64,
+        throughput_rps: throughput.per_second(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+    use std::thread;
+
+    /// Echo backend: logits put all mass on (sum of tokens) % 7.
+    struct MockBackend;
+
+    impl Backend for MockBackend {
+        fn name(&self) -> String {
+            "mock".into()
+        }
+
+        fn last_logits_batch(&self, seqs: &[&[u16]]) -> Vec<Vec<f32>> {
+            seqs.iter()
+                .map(|s| {
+                    let t = (s.iter().map(|&x| x as usize).sum::<usize>()) % 7;
+                    let mut v = vec![0.0f32; 7];
+                    v[t] = 1.0;
+                    v
+                })
+                .collect()
+        }
+    }
+
+    #[test]
+    fn all_requests_answered_correctly() {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let handle = thread::spawn(move || {
+            run_batcher(
+                rx,
+                &MockBackend,
+                BatcherConfig {
+                    max_batch: 4,
+                    max_wait: Duration::from_millis(1),
+                },
+            )
+        });
+        let (rtx, rrx) = mpsc::channel();
+        for id in 0..40u64 {
+            tx.send(Request {
+                id,
+                tokens: vec![id as u16, 3],
+                submitted: Instant::now(),
+                resp_tx: rtx.clone(),
+            })
+            .unwrap();
+        }
+        drop(tx);
+        drop(rtx);
+        let mut seen = 0;
+        while let Ok(resp) = rrx.recv() {
+            assert_eq!(resp.next_token as usize, (resp.id as usize + 3) % 7);
+            assert!(resp.batch_size >= 1 && resp.batch_size <= 4);
+            seen += 1;
+        }
+        let stats = handle.join().unwrap();
+        assert_eq!(seen, 40);
+        assert_eq!(stats.requests, 40);
+        assert!(stats.mean_batch >= 1.0);
+        assert_eq!(stats.latency.len(), 40);
+    }
+
+    #[test]
+    fn batching_amortizes_under_burst() {
+        // Submit a burst before the batcher starts executing: mean batch
+        // size should exceed 1.
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (rtx, rrx) = mpsc::channel();
+        for id in 0..32u64 {
+            tx.send(Request {
+                id,
+                tokens: vec![1],
+                submitted: Instant::now(),
+                resp_tx: rtx.clone(),
+            })
+            .unwrap();
+        }
+        drop(tx);
+        drop(rtx);
+        let stats = run_batcher(
+            rx,
+            &MockBackend,
+            BatcherConfig {
+                max_batch: 8,
+                max_wait: Duration::from_millis(1),
+            },
+        );
+        while rrx.recv().is_ok() {}
+        assert!(
+            stats.mean_batch > 2.0,
+            "burst should batch, got {}",
+            stats.mean_batch
+        );
+        assert_eq!(stats.requests, 32);
+    }
+
+    #[test]
+    fn respects_max_batch() {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (rtx, rrx) = mpsc::channel();
+        for id in 0..20u64 {
+            tx.send(Request {
+                id,
+                tokens: vec![1],
+                submitted: Instant::now(),
+                resp_tx: rtx.clone(),
+            })
+            .unwrap();
+        }
+        drop(tx);
+        drop(rtx);
+        let _ = run_batcher(
+            rx,
+            &MockBackend,
+            BatcherConfig {
+                max_batch: 3,
+                max_wait: Duration::from_millis(1),
+            },
+        );
+        while let Ok(resp) = rrx.recv() {
+            assert!(resp.batch_size <= 3);
+        }
+    }
+}

@@ -1,0 +1,118 @@
+//! Serving metrics: latency histogram (percentiles) + throughput meter.
+
+use std::time::{Duration, Instant};
+
+/// Simple exact-sample histogram (serving runs are short enough that we
+/// keep every sample; percentiles are exact, not sketch-based).
+#[derive(Clone, Debug, Default)]
+pub struct Histogram {
+    samples_us: Vec<f64>,
+}
+
+impl Histogram {
+    pub fn record(&mut self, d: Duration) {
+        self.samples_us.push(d.as_secs_f64() * 1e6);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples_us.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples_us.is_empty()
+    }
+
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples_us.is_empty() {
+            return 0.0;
+        }
+        let mut s = self.samples_us.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((s.len() - 1) as f64 * p).round() as usize;
+        s[idx]
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples_us.is_empty() {
+            return 0.0;
+        }
+        self.samples_us.iter().sum::<f64>() / self.samples_us.len() as f64
+    }
+
+    pub fn report(&self, name: &str) -> String {
+        format!(
+            "{name}: n={} mean={:.0}us p50={:.0}us p90={:.0}us p99={:.0}us",
+            self.len(),
+            self.mean(),
+            self.percentile(0.5),
+            self.percentile(0.9),
+            self.percentile(0.99),
+        )
+    }
+}
+
+/// Requests-per-second meter.
+pub struct Throughput {
+    start: Instant,
+    count: usize,
+}
+
+impl Default for Throughput {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Throughput {
+    pub fn new() -> Self {
+        Self {
+            start: Instant::now(),
+            count: 0,
+        }
+    }
+
+    pub fn add(&mut self, n: usize) {
+        self.count += n;
+    }
+
+    pub fn per_second(&self) -> f64 {
+        self.count as f64 / self.start.elapsed().as_secs_f64().max(1e-9)
+    }
+
+    pub fn count(&self) -> usize {
+        self.count
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_ordered() {
+        let mut h = Histogram::default();
+        for i in 1..=100 {
+            h.record(Duration::from_micros(i));
+        }
+        assert!(h.percentile(0.5) <= h.percentile(0.9));
+        assert!(h.percentile(0.9) <= h.percentile(0.99));
+        assert!((h.percentile(0.5) - 50.0).abs() <= 2.0);
+        assert_eq!(h.len(), 100);
+    }
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let h = Histogram::default();
+        assert_eq!(h.percentile(0.5), 0.0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn throughput_counts() {
+        let mut t = Throughput::new();
+        t.add(5);
+        t.add(3);
+        assert_eq!(t.count(), 8);
+        assert!(t.per_second() > 0.0);
+    }
+}

@@ -1,0 +1,247 @@
+//! Serving coordinator: request router + dynamic batcher + backends.
+//!
+//! `bwa serve` drives a closed-loop synthetic workload (prompts sampled
+//! from the wiki-analog corpus) against one of three backends:
+//! - `pjrt`   — the AOT-compiled JAX transformer via the PJRT runtime
+//!              (the three-layer path: Pallas/JAX build time → HLO → Rust);
+//! - `native` — the Rust FP transformer;
+//! - `bwa`    — the Rust transformer quantized to W(1+1)A(1×4).
+//!
+//! Reports latency percentiles, throughput, and batch statistics — the
+//! end-to-end serving validation required by DESIGN.md §5 (last row).
+
+pub mod batcher;
+pub mod metrics;
+
+use crate::coordinator::batcher::{run_batcher, Backend, BatcherConfig, Request};
+use crate::data::corpus::CorpusSpec;
+use crate::model::checkpoint::Checkpoint;
+use crate::model::Transformer;
+use crate::util::cli::{Args, Spec};
+use crate::util::rng::Rng;
+use std::path::Path;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// Native (in-process Rust) backend over any Transformer.
+pub struct NativeBackend {
+    pub model: Transformer,
+    pub label: String,
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+
+    fn last_logits_batch(&self, seqs: &[&[u16]]) -> Vec<Vec<f32>> {
+        seqs.iter()
+            .map(|s| {
+                let logits = self.model.forward(s);
+                logits.row(s.len() - 1).to_vec()
+            })
+            .collect()
+    }
+}
+
+/// PJRT backend over the AOT transformer artifact.
+pub struct PjrtBackend {
+    pub session: crate::runtime::TransformerSession,
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> String {
+        "pjrt(transformer_fp.hlo.txt)".into()
+    }
+
+    fn last_logits_batch(&self, seqs: &[&[u16]]) -> Vec<Vec<f32>> {
+        seqs.iter()
+            .map(|s| self.session.last_logits(s).expect("pjrt execute"))
+            .collect()
+    }
+}
+
+static SERVE_SPEC: Spec = Spec {
+    name: "serve",
+    about: "closed-loop serving benchmark over the batching coordinator",
+    flags: &[
+        ("model", "artifacts/models/llama1-7b.bin", "checkpoint path"),
+        ("artifacts", "artifacts", "AOT artifacts directory"),
+        ("backend", "pjrt", "pjrt | native | bwa"),
+        ("requests", "64", "total requests"),
+        ("clients", "4", "concurrent client threads"),
+        ("prompt-len", "24", "prompt tokens per request"),
+        ("batch", "8", "max dynamic batch size"),
+        ("wait-us", "2000", "max batching wait (us)"),
+        ("seed", "7", "workload seed"),
+    ],
+    switches: &[],
+};
+
+pub fn cmd_serve(args: &Args) -> Result<(), String> {
+    args.validate(&SERVE_SPEC).map_err(|e| e.to_string())?;
+    if args.wants_help() {
+        println!("{}", SERVE_SPEC.help());
+        return Ok(());
+    }
+    let model_path = args.str_or("model", "artifacts/models/llama1-7b.bin");
+    let backend_kind = args.str_or("backend", "pjrt");
+    let n_requests = args.usize_or("requests", 64).map_err(|e| e.to_string())?;
+    let clients = args.usize_or("clients", 4).map_err(|e| e.to_string())?;
+    let prompt_len = args.usize_or("prompt-len", 24).map_err(|e| e.to_string())?;
+    let cfg = BatcherConfig {
+        max_batch: args.usize_or("batch", 8).map_err(|e| e.to_string())?,
+        max_wait: Duration::from_micros(args.u64_or("wait-us", 2000).map_err(|e| e.to_string())?),
+    };
+    let seed = args.u64_or("seed", 7).map_err(|e| e.to_string())?;
+
+    let ck = Checkpoint::load(Path::new(model_path)).map_err(|e| e.to_string())?;
+    let artifacts_dir = args.str_or("artifacts", "artifacts").to_string();
+    let backend_kind = backend_kind.to_string();
+
+    // PJRT handles are not Send, so the backend is constructed inside the
+    // batcher thread via this factory.
+    let make_backend = move || -> Box<dyn Backend> {
+        match backend_kind.as_str() {
+            "pjrt" => {
+                let session = crate::runtime::TransformerSession::load(
+                    Path::new(&artifacts_dir),
+                    &ck,
+                )
+                .expect("load PJRT artifact (run `make artifacts`)");
+                Box::new(PjrtBackend { session })
+            }
+            "native" => Box::new(NativeBackend {
+                model: Transformer::fp_from_checkpoint(&ck).expect("checkpoint"),
+                label: "native-fp".into(),
+            }),
+            "bwa" => {
+                let train = crate::data::corpus::train_split(&CorpusSpec::wiki(), 100_000);
+                let calib = crate::data::calibration_windows(&train, 16, 96, seed);
+                let q = crate::quant::BwaQuantizer::paper();
+                let model = crate::model::quantize_model(&ck, &q, &calib, Some(4))
+                    .expect("quantize");
+                Box::new(NativeBackend {
+                    model,
+                    label: "native-bwa W(1+1)A(1x4)".into(),
+                })
+            }
+            other => panic!("unknown backend '{other}'"),
+        }
+    };
+
+    let report = serve_workload(make_backend, n_requests, clients, prompt_len, cfg, seed);
+    println!("{report}");
+    Ok(())
+}
+
+/// Closed-loop workload: `clients` threads each submit requests
+/// back-to-back until `n_requests` total are served. The backend is
+/// constructed on the batcher thread (PJRT handles are thread-local).
+pub fn serve_workload<F>(
+    make_backend: F,
+    n_requests: usize,
+    clients: usize,
+    prompt_len: usize,
+    cfg: BatcherConfig,
+    seed: u64,
+) -> String
+where
+    F: FnOnce() -> Box<dyn Backend> + Send,
+{
+    let (tx, rx) = mpsc::channel::<Request>();
+    let t0 = Instant::now();
+
+    let (name, stats) = std::thread::scope(|s| {
+        let batcher = s.spawn(move || {
+            let backend = make_backend();
+            let name = backend.name();
+            (name, run_batcher(rx, backend.as_ref(), cfg))
+        });
+
+        let per_client = n_requests / clients.max(1);
+        for c in 0..clients {
+            let tx = tx.clone();
+            s.spawn(move || {
+                let mut rng = Rng::new(seed ^ (c as u64) << 16);
+                let stream =
+                    crate::data::corpus::train_split(&CorpusSpec::wiki(), 20_000 + c * 1000);
+                let (rtx, rrx) = mpsc::channel();
+                for i in 0..per_client {
+                    let start = rng.below(stream.len() - prompt_len);
+                    let tokens = stream[start..start + prompt_len].to_vec();
+                    tx.send(Request {
+                        id: (c * per_client + i) as u64,
+                        tokens,
+                        submitted: Instant::now(),
+                        resp_tx: rtx.clone(),
+                    })
+                    .expect("batcher alive");
+                    // closed loop: wait for the response before next req
+                    let _ = rrx.recv();
+                }
+            });
+        }
+        drop(tx);
+        batcher.join().expect("batcher thread")
+    });
+
+    let wall = t0.elapsed().as_secs_f64();
+    format!
+    (
+        "== serve report ({}) ==\n\
+         requests:    {}\n\
+         clients:     {clients}\n\
+         wall time:   {wall:.2}s\n\
+         throughput:  {:.1} req/s\n\
+         mean batch:  {:.2} (over {} batches)\n\
+         {}\n\
+         {}",
+        name,
+        stats.requests,
+        stats.requests as f64 / wall,
+        stats.mean_batch,
+        stats.batches,
+        stats.latency.report("latency"),
+        stats.queue_wait.report("queue wait"),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::ModelConfig;
+
+    #[test]
+    fn serve_workload_native_backend_end_to_end() {
+        let cfg = ModelConfig {
+            name: "t".into(),
+            vocab_size: 512,
+            d_model: 64,
+            n_layers: 1,
+            n_heads: 2,
+            d_ff: 96,
+            max_seq: 64,
+            rope_theta: 10000.0,
+            rmsnorm_eps: 1e-5,
+        };
+        let report = serve_workload(
+            || {
+                Box::new(NativeBackend {
+                    model: Transformer::random(&cfg, 5),
+                    label: "test".into(),
+                }) as Box<dyn Backend>
+            },
+            16,
+            2,
+            8,
+            BatcherConfig {
+                max_batch: 4,
+                max_wait: Duration::from_micros(500),
+            },
+            3,
+        );
+        assert!(report.contains("requests:    16"), "{report}");
+        assert!(report.contains("throughput"), "{report}");
+    }
+}

@@ -1,0 +1,281 @@
+//! Deterministic synthetic corpora standing in for WikiText2 / PTB / C4
+//! (DESIGN.md §2): a relational micro-language over a 512-token vocab.
+//!
+//! The world is a fixed fact table `obj = fact(entity, relation)`; corpora
+//! are streams of sentences mixing fact triples, query-formatted facts
+//! (which later power the zero-shot tasks), boolean verification
+//! sentences, and filler noise. The three flavors differ in noise rate,
+//! corruption rate, and entity distribution, giving the FP model the same
+//! PPL ordering the paper reports (wiki < c4 ≪ ptb).
+//!
+//! Everything is seeded and pure — the JAX trainer consumes the exact
+//! token streams via `artifacts/data/*.tok` written by `bwa datagen`.
+
+use crate::util::rng::Rng;
+
+pub const VOCAB_SIZE: usize = 512;
+
+// token layout
+pub const PAD: u16 = 0;
+pub const BOS: u16 = 1;
+pub const EOS: u16 = 2;
+pub const SEP: u16 = 3;
+pub const QRY: u16 = 4;
+pub const YES: u16 = 5;
+pub const NO: u16 = 6;
+pub const ENT_BASE: u16 = 8;
+pub const N_ENT: u16 = 80;
+pub const REL_BASE: u16 = ENT_BASE + N_ENT; // 88
+pub const N_REL: u16 = 40;
+pub const OBJ_BASE: u16 = REL_BASE + N_REL; // 128
+pub const N_OBJ: u16 = 120;
+pub const FILL_BASE: u16 = OBJ_BASE + N_OBJ; // 248
+pub const N_FILL: u16 = VOCAB_SIZE as u16 - FILL_BASE; // 264
+
+/// The ground-truth fact table: object index for (entity, relation).
+#[inline]
+pub fn fact_obj(e: u16, r: u16) -> u16 {
+    debug_assert!(e < N_ENT && r < N_REL);
+    OBJ_BASE + ((e as u32 * 37 + r as u32 * 101 + 13) % N_OBJ as u32) as u16
+}
+
+/// MMLU-analog domain of a relation (4 domains à 10 relations).
+pub fn relation_domain(r: u16) -> usize {
+    (r as usize) / 10
+}
+
+pub const DOMAIN_NAMES: [&str; 4] = ["STEM", "humanities", "social science", "others"];
+
+/// Corpus flavor parameters.
+#[derive(Clone, Debug)]
+pub struct CorpusSpec {
+    pub name: &'static str,
+    pub seed: u64,
+    /// probability of a filler (noise) sentence
+    pub noise: f64,
+    /// probability that a fact sentence carries a corrupted object
+    pub corrupt: f64,
+    /// Zipf-like skew for entity sampling (higher = more concentrated)
+    pub skew: f64,
+    /// probability of query-formatted sentences (teaches the QA format)
+    pub query_frac: f64,
+    /// probability of boolean verification sentences
+    pub bool_frac: f64,
+}
+
+impl CorpusSpec {
+    pub fn wiki() -> Self {
+        Self {
+            name: "wiki",
+            seed: 101,
+            noise: 0.10,
+            corrupt: 0.02,
+            skew: 1.1,
+            query_frac: 0.15,
+            bool_frac: 0.08,
+        }
+    }
+
+    pub fn ptb() -> Self {
+        Self {
+            name: "ptb",
+            seed: 202,
+            noise: 0.55,
+            corrupt: 0.25,
+            skew: 0.6,
+            query_frac: 0.05,
+            bool_frac: 0.03,
+        }
+    }
+
+    pub fn c4() -> Self {
+        Self {
+            name: "c4",
+            seed: 303,
+            noise: 0.30,
+            corrupt: 0.08,
+            skew: 0.9,
+            query_frac: 0.10,
+            bool_frac: 0.05,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "wiki" => Some(Self::wiki()),
+            "ptb" => Some(Self::ptb()),
+            "c4" => Some(Self::c4()),
+            _ => None,
+        }
+    }
+}
+
+/// Zipf-ish sampler over [0, n) with skew s (s = 0 → uniform).
+fn zipf(rng: &mut Rng, n: u16, s: f64) -> u16 {
+    if s <= 0.0 {
+        return rng.below(n as usize) as u16;
+    }
+    // inverse-CDF approximation: u^(1/(1-s')) concentration
+    let u = rng.f64();
+    let x = u.powf(1.0 + s);
+    ((x * n as f64) as usize).min(n as usize - 1) as u16
+}
+
+/// One sentence appended to `out` (always SEP-terminated).
+fn emit_sentence(rng: &mut Rng, spec: &CorpusSpec, out: &mut Vec<u16>) {
+    let roll = rng.f64();
+    if roll < spec.noise {
+        // filler noise: 3..8 filler tokens
+        let len = 3 + rng.below(6);
+        for _ in 0..len {
+            out.push(FILL_BASE + zipf(rng, N_FILL, 0.8));
+        }
+        out.push(SEP);
+        return;
+    }
+    let e = zipf(rng, N_ENT, spec.skew);
+    let r = rng.below(N_REL as usize) as u16;
+    let true_obj = fact_obj(e, r);
+    let obj = if rng.bool(spec.corrupt) {
+        OBJ_BASE + rng.below(N_OBJ as usize) as u16
+    } else {
+        true_obj
+    };
+    let roll2 = rng.f64();
+    if roll2 < spec.bool_frac {
+        // boolean verification: QRY e r o YES/NO
+        let claim_true = rng.bool(0.5);
+        let claimed = if claim_true {
+            true_obj
+        } else {
+            // a wrong object, never the true one
+            let mut o = OBJ_BASE + rng.below(N_OBJ as usize) as u16;
+            while o == true_obj {
+                o = OBJ_BASE + rng.below(N_OBJ as usize) as u16;
+            }
+            o
+        };
+        out.extend_from_slice(&[QRY, ENT_BASE + e, REL_BASE + r, claimed]);
+        out.push(if claim_true { YES } else { NO });
+        out.push(SEP);
+    } else if roll2 < spec.bool_frac + spec.query_frac {
+        // query format: QRY e r o
+        out.extend_from_slice(&[QRY, ENT_BASE + e, REL_BASE + r, obj, SEP]);
+    } else {
+        // plain fact: e r o
+        out.extend_from_slice(&[ENT_BASE + e, REL_BASE + r, obj, SEP]);
+    }
+}
+
+/// Generate a token stream of (at least) `n_tokens` tokens.
+pub fn generate(spec: &CorpusSpec, n_tokens: usize) -> Vec<u16> {
+    let mut rng = Rng::new(spec.seed);
+    let mut out = Vec::with_capacity(n_tokens + 16);
+    out.push(BOS);
+    while out.len() < n_tokens {
+        emit_sentence(&mut rng, spec, &mut out);
+    }
+    out.truncate(n_tokens);
+    out
+}
+
+/// Train/eval split streams: eval uses a different stream (disjoint seed
+/// offset) of the same flavor.
+pub fn train_split(spec: &CorpusSpec, n_tokens: usize) -> Vec<u16> {
+    generate(spec, n_tokens)
+}
+
+pub fn eval_split(spec: &CorpusSpec, n_tokens: usize) -> Vec<u16> {
+    let mut s = spec.clone();
+    s.seed ^= 0xE7A1_5EED;
+    generate(&s, n_tokens)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_generation() {
+        let a = generate(&CorpusSpec::wiki(), 1000);
+        let b = generate(&CorpusSpec::wiki(), 1000);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 1000);
+    }
+
+    #[test]
+    fn flavors_differ() {
+        let w = generate(&CorpusSpec::wiki(), 1000);
+        let p = generate(&CorpusSpec::ptb(), 1000);
+        assert_ne!(w, p);
+    }
+
+    #[test]
+    fn tokens_in_vocab() {
+        for spec in [CorpusSpec::wiki(), CorpusSpec::ptb(), CorpusSpec::c4()] {
+            let toks = generate(&spec, 5000);
+            for &t in &toks {
+                assert!((t as usize) < VOCAB_SIZE, "token {t} out of vocab");
+            }
+        }
+    }
+
+    #[test]
+    fn fact_table_is_deterministic_and_in_range() {
+        for e in 0..N_ENT {
+            for r in 0..N_REL {
+                let o = fact_obj(e, r);
+                assert!(o >= OBJ_BASE && o < OBJ_BASE + N_OBJ);
+                assert_eq!(o, fact_obj(e, r));
+            }
+        }
+    }
+
+    #[test]
+    fn wiki_mostly_facts_ptb_mostly_noise() {
+        let count_fill = |toks: &[u16]| {
+            toks.iter()
+                .filter(|&&t| t >= FILL_BASE)
+                .count() as f64
+                / toks.len() as f64
+        };
+        let w = count_fill(&generate(&CorpusSpec::wiki(), 20_000));
+        let p = count_fill(&generate(&CorpusSpec::ptb(), 20_000));
+        assert!(w < 0.25, "wiki filler fraction {w}");
+        assert!(p > 2.0 * w, "ptb ({p}) should be much noisier than wiki ({w})");
+    }
+
+    #[test]
+    fn eval_split_differs_from_train() {
+        let spec = CorpusSpec::wiki();
+        let train = train_split(&spec, 2000);
+        let eval = eval_split(&spec, 2000);
+        assert_ne!(train, eval);
+    }
+
+    #[test]
+    fn facts_consistent_in_uncorrupted_sentences() {
+        // In the wiki corpus, the vast majority of (e, r, o) triples agree
+        // with the fact table — the learnable signal.
+        let toks = generate(&CorpusSpec::wiki(), 50_000);
+        let mut total = 0;
+        let mut correct = 0;
+        let mut i = 0;
+        while i + 2 < toks.len() {
+            let (a, b, c) = (toks[i], toks[i + 1], toks[i + 2]);
+            if (ENT_BASE..REL_BASE).contains(&a)
+                && (REL_BASE..OBJ_BASE).contains(&b)
+                && (OBJ_BASE..FILL_BASE).contains(&c)
+            {
+                total += 1;
+                if c == fact_obj(a - ENT_BASE, b - REL_BASE) {
+                    correct += 1;
+                }
+            }
+            i += 1;
+        }
+        assert!(total > 1000, "not enough triples ({total})");
+        let frac = correct as f64 / total as f64;
+        assert!(frac > 0.9, "fact consistency {frac}");
+    }
+}

@@ -1,0 +1,107 @@
+//! Word-level tokenizer for the synthetic micro-language: bidirectional
+//! token-id ↔ word-string mapping used by the serving demo and the CLI
+//! (the corpora themselves are generated directly as token ids).
+
+use super::corpus::*;
+use std::collections::HashMap;
+
+pub struct Tokenizer {
+    words: Vec<String>,
+    lookup: HashMap<String, u16>,
+}
+
+impl Default for Tokenizer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Tokenizer {
+    pub fn new() -> Tokenizer {
+        let mut words = vec![String::new(); VOCAB_SIZE];
+        words[PAD as usize] = "<pad>".into();
+        words[BOS as usize] = "<s>".into();
+        words[EOS as usize] = "</s>".into();
+        words[SEP as usize] = ".".into();
+        words[QRY as usize] = "?".into();
+        words[YES as usize] = "yes".into();
+        words[NO as usize] = "no".into();
+        words[7] = "<unk>".into();
+        for i in 0..N_ENT {
+            words[(ENT_BASE + i) as usize] = format!("ent{i}");
+        }
+        for i in 0..N_REL {
+            words[(REL_BASE + i) as usize] = format!("rel{i}");
+        }
+        for i in 0..N_OBJ {
+            words[(OBJ_BASE + i) as usize] = format!("obj{i}");
+        }
+        for i in 0..N_FILL {
+            words[(FILL_BASE + i) as usize] = format!("w{i}");
+        }
+        let lookup = words
+            .iter()
+            .enumerate()
+            .filter(|(_, w)| !w.is_empty())
+            .map(|(i, w)| (w.clone(), i as u16))
+            .collect();
+        Tokenizer { words, lookup }
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        VOCAB_SIZE
+    }
+
+    pub fn decode_one(&self, id: u16) -> &str {
+        self.words
+            .get(id as usize)
+            .map(|s| s.as_str())
+            .unwrap_or("<unk>")
+    }
+
+    pub fn decode(&self, ids: &[u16]) -> String {
+        ids.iter()
+            .map(|&i| self.decode_one(i))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+
+    pub fn encode_one(&self, word: &str) -> u16 {
+        self.lookup.get(word).copied().unwrap_or(7) // <unk>
+    }
+
+    pub fn encode(&self, text: &str) -> Vec<u16> {
+        text.split_whitespace().map(|w| self.encode_one(w)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_every_token() {
+        let tok = Tokenizer::new();
+        for id in 0..VOCAB_SIZE as u16 {
+            let w = tok.decode_one(id).to_string();
+            if w != "<unk>" || id == 7 {
+                assert_eq!(tok.encode_one(&w), id, "token {id} ({w})");
+            }
+        }
+    }
+
+    #[test]
+    fn encode_decode_sentence() {
+        let tok = Tokenizer::new();
+        let text = "? ent3 rel7 obj14 .";
+        let ids = tok.encode(text);
+        assert_eq!(ids[0], QRY);
+        assert_eq!(tok.decode(&ids), text);
+    }
+
+    #[test]
+    fn unknown_maps_to_unk() {
+        let tok = Tokenizer::new();
+        assert_eq!(tok.encode_one("zzz-not-a-word"), 7);
+    }
+}

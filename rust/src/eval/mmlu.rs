@@ -1,0 +1,71 @@
+//! MMLU-analog: categorized knowledge probe over the fact table's four
+//! relation domains (Table 3's STEM / humanities / social science /
+//! others split).
+
+use super::zeroshot::{accuracy, McItem};
+use crate::data::corpus::*;
+use crate::model::Transformer;
+use crate::util::rng::Rng;
+
+/// Items for a single domain (relations `10·domain .. 10·(domain+1)`).
+pub fn domain_items(domain: usize, n: usize, seed: u64) -> Vec<McItem> {
+    assert!(domain < 4);
+    let mut rng = Rng::new(seed ^ 0x3313 ^ (domain as u64) << 12);
+    let mut items = Vec::with_capacity(n);
+    while items.len() < n {
+        let e = rng.below(N_ENT as usize) as u16;
+        let r = (domain * 10 + rng.below(10)) as u16;
+        let correct_obj = fact_obj(e, r);
+        let mut choices = vec![vec![correct_obj]];
+        while choices.len() < 4 {
+            let d = OBJ_BASE + rng.below(N_OBJ as usize) as u16;
+            if d != correct_obj && !choices.iter().any(|c| c[0] == d) {
+                choices.push(vec![d]);
+            }
+        }
+        let correct = rng.below(4);
+        choices.swap(0, correct);
+        items.push(McItem {
+            context: vec![QRY, ENT_BASE + e, REL_BASE + r],
+            choices,
+            correct,
+        });
+    }
+    items
+}
+
+/// Per-domain + average accuracy.
+pub fn mmlu_eval(model: &Transformer, n_per_domain: usize, seed: u64) -> ([f64; 4], f64) {
+    let mut accs = [0.0f64; 4];
+    for d in 0..4 {
+        let items = domain_items(d, n_per_domain, seed);
+        accs[d] = accuracy(model, &items);
+    }
+    let avg = accs.iter().sum::<f64>() / 4.0;
+    (accs, avg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn domain_relations_stay_in_domain() {
+        for d in 0..4 {
+            let items = domain_items(d, 30, 1);
+            for item in &items {
+                let r = item.context[2] - REL_BASE;
+                assert_eq!(relation_domain(r), d);
+            }
+        }
+    }
+
+    #[test]
+    fn items_are_deterministic() {
+        let a = domain_items(2, 10, 5);
+        let b = domain_items(2, 10, 5);
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.context, y.context);
+        }
+    }
+}

@@ -1,0 +1,106 @@
+//! Evaluation harness: perplexity, zero-shot QA, MMLU-analog, and the
+//! table/figure renderers that regenerate the paper's evaluation section.
+
+pub mod mmlu;
+pub mod perplexity;
+pub mod report;
+pub mod zeroshot;
+
+use crate::data::corpus::CorpusSpec;
+use crate::model::Transformer;
+
+/// Evaluation workload sizes (scaled-down defaults; `--full` in the CLI
+/// bumps them toward the paper's settings).
+#[derive(Clone, Copy, Debug)]
+pub struct EvalBudget {
+    pub ppl_tokens: usize,
+    pub seq_len: usize,
+    pub zs_items: usize,
+    pub mmlu_items: usize,
+}
+
+impl EvalBudget {
+    pub fn quick() -> Self {
+        Self {
+            ppl_tokens: 1024,
+            seq_len: 128,
+            zs_items: 24,
+            mmlu_items: 16,
+        }
+    }
+
+    pub fn standard() -> Self {
+        Self {
+            ppl_tokens: 2048,
+            seq_len: 128,
+            zs_items: 36,
+            mmlu_items: 24,
+        }
+    }
+}
+
+/// Full evaluation result for one (model, method) pair.
+#[derive(Clone, Debug)]
+pub struct EvalResult {
+    pub method: String,
+    pub ppl: Vec<(String, f64)>,
+    pub zeroshot: Vec<(String, f64)>,
+    pub zs_avg: f64,
+}
+
+/// Run perplexity on the three corpora + the six zero-shot tasks.
+pub fn evaluate(model: &Transformer, method: &str, budget: &EvalBudget, seed: u64) -> EvalResult {
+    let mut ppl = Vec::new();
+    for spec in [CorpusSpec::wiki(), CorpusSpec::ptb(), CorpusSpec::c4()] {
+        let eval = crate::data::corpus::eval_split(&spec, budget.ppl_tokens);
+        ppl.push((
+            spec.name.to_string(),
+            perplexity::perplexity(model, &eval, budget.seq_len),
+        ));
+    }
+    let mut zeroshot = Vec::new();
+    for task in zeroshot::ALL_TASKS {
+        let items = zeroshot::generate_items(task, budget.zs_items, seed);
+        zeroshot.push((task.name().to_string(), zeroshot::accuracy(model, &items)));
+    }
+    let zs_avg = zeroshot.iter().map(|(_, a)| a).sum::<f64>() / zeroshot.len() as f64;
+    EvalResult {
+        method: method.to_string(),
+        ppl,
+        zeroshot,
+        zs_avg,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::ModelConfig;
+
+    #[test]
+    fn evaluate_produces_complete_result() {
+        let cfg = ModelConfig {
+            name: "t".into(),
+            vocab_size: crate::data::corpus::VOCAB_SIZE,
+            d_model: 64,
+            n_layers: 1,
+            n_heads: 2,
+            d_ff: 96,
+            max_seq: 64,
+            rope_theta: 10000.0,
+            rmsnorm_eps: 1e-5,
+        };
+        let model = Transformer::random(&cfg, 1);
+        let budget = EvalBudget {
+            ppl_tokens: 256,
+            seq_len: 64,
+            zs_items: 4,
+            mmlu_items: 4,
+        };
+        let r = evaluate(&model, "FP16", &budget, 42);
+        assert_eq!(r.ppl.len(), 3);
+        assert_eq!(r.zeroshot.len(), 6);
+        assert!(r.ppl.iter().all(|(_, p)| p.is_finite() && *p > 1.0));
+        assert!(r.zs_avg >= 0.0 && r.zs_avg <= 1.0);
+    }
+}

@@ -1,0 +1,99 @@
+//! Perplexity evaluation: non-overlapping windows, next-token NLL.
+
+use crate::model::Transformer;
+use crate::tensor::Tensor;
+use crate::util::log_sum_exp;
+
+/// Token-level negative log likelihood of `tokens[1..]` under the model
+/// (per window, windows of `seq_len`). Returns (total_nll, n_scored).
+pub fn corpus_nll(model: &Transformer, tokens: &[u16], seq_len: usize) -> (f64, usize) {
+    let seq_len = seq_len.min(model.cfg.max_seq);
+    let mut total = 0.0f64;
+    let mut count = 0usize;
+    let mut start = 0;
+    while start + 2 <= tokens.len() {
+        let end = (start + seq_len).min(tokens.len());
+        let window = &tokens[start..end];
+        if window.len() < 2 {
+            break;
+        }
+        let logits = model.forward(window);
+        total += window_nll(&logits, window);
+        count += window.len() - 1;
+        start = end;
+    }
+    (total, count)
+}
+
+/// NLL of a single window given its logits.
+pub fn window_nll(logits: &Tensor, window: &[u16]) -> f64 {
+    let mut nll = 0.0f64;
+    for t in 0..window.len() - 1 {
+        let row = logits.row(t);
+        let target = window[t + 1] as usize;
+        let lse = log_sum_exp(row);
+        nll += (lse - row[target]) as f64;
+    }
+    nll
+}
+
+/// Perplexity over an evaluation stream.
+pub fn perplexity(model: &Transformer, tokens: &[u16], seq_len: usize) -> f64 {
+    let (nll, n) = corpus_nll(model, tokens, seq_len);
+    (nll / n.max(1) as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::ModelConfig;
+    use crate::util::rng::Rng;
+
+    fn tiny_model() -> Transformer {
+        let cfg = ModelConfig {
+            name: "t".into(),
+            vocab_size: 64,
+            d_model: 64,
+            n_layers: 1,
+            n_heads: 2,
+            d_ff: 96,
+            max_seq: 32,
+            rope_theta: 10000.0,
+            rmsnorm_eps: 1e-5,
+        };
+        Transformer::random(&cfg, 1)
+    }
+
+    #[test]
+    fn uniform_random_model_ppl_near_vocab() {
+        // an untrained model's PPL should be around vocab size (here it is
+        // a random net, so allow a broad band)
+        let model = tiny_model();
+        let mut rng = Rng::new(2);
+        let toks: Vec<u16> = (0..256).map(|_| rng.below(64) as u16).collect();
+        let ppl = perplexity(&model, &toks, 32);
+        assert!(ppl > 8.0 && ppl < 5000.0, "ppl {ppl}");
+    }
+
+    #[test]
+    fn repetitive_stream_not_harder_than_random() {
+        let model = tiny_model();
+        let rep: Vec<u16> = (0..256).map(|i| (i % 4) as u16).collect();
+        let mut rng = Rng::new(3);
+        let rnd: Vec<u16> = (0..256).map(|_| rng.below(64) as u16).collect();
+        let p_rep = perplexity(&model, &rep, 32);
+        let p_rnd = perplexity(&model, &rnd, 32);
+        // untrained model: repetition isn't predictable, but the scored
+        // support is 4 tokens; mostly a smoke check that both are finite
+        assert!(p_rep.is_finite() && p_rnd.is_finite());
+    }
+
+    #[test]
+    fn nll_counts_all_next_tokens() {
+        let model = tiny_model();
+        let toks: Vec<u16> = (0..70).map(|i| (i % 64) as u16).collect();
+        let (_, n) = corpus_nll(&model, &toks, 32);
+        // windows: 32 + 32 + 6 -> scored 31 + 31 + 5 = 67
+        assert_eq!(n, 67);
+    }
+}

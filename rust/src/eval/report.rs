@@ -1,0 +1,170 @@
+//! Table and figure rendering for the experiment harness — prints the
+//! same row/column layout as the paper's tables so EXPERIMENTS.md can be
+//! filled by copy-paste, plus a JSON dump for machine diffing.
+
+use crate::util::json::Json;
+
+/// A rendered table: header + rows of (label, cells).
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<(String, Vec<String>)>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, label: &str, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push((label.to_string(), cells));
+    }
+
+    pub fn row_f(&mut self, label: &str, values: &[f64], decimals: usize) {
+        self.row(
+            label,
+            values.iter().map(|v| format!("{v:.decimals$}")).collect(),
+        );
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths = vec![0usize; self.headers.len() + 1];
+        widths[0] = self
+            .rows
+            .iter()
+            .map(|(l, _)| l.len())
+            .chain(std::iter::once(self.title.len().min(24)))
+            .max()
+            .unwrap_or(8);
+        for (i, h) in self.headers.iter().enumerate() {
+            widths[i + 1] = h.len();
+        }
+        for (_, cells) in &self.rows {
+            for (i, c) in cells.iter().enumerate() {
+                widths[i + 1] = widths[i + 1].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        out.push_str(&format!("{:<w$}", "", w = widths[0] + 2));
+        for (i, h) in self.headers.iter().enumerate() {
+            out.push_str(&format!("{:>w$}  ", h, w = widths[i + 1]));
+        }
+        out.push('\n');
+        let total: usize = widths.iter().sum::<usize>() + 2 * widths.len() + 2;
+        out.push_str(&"-".repeat(total.min(120)));
+        out.push('\n');
+        for (label, cells) in &self.rows {
+            out.push_str(&format!("{:<w$}  ", label, w = widths[0]));
+            for (i, c) in cells.iter().enumerate() {
+                out.push_str(&format!("{:>w$}  ", c, w = widths[i + 1]));
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("title", Json::str(self.title.clone())),
+            (
+                "headers",
+                Json::Arr(self.headers.iter().map(|h| Json::str(h.clone())).collect()),
+            ),
+            (
+                "rows",
+                Json::Arr(
+                    self.rows
+                        .iter()
+                        .map(|(l, cells)| {
+                            Json::obj(vec![
+                                ("label", Json::str(l.clone())),
+                                (
+                                    "cells",
+                                    Json::Arr(
+                                        cells.iter().map(|c| Json::str(c.clone())).collect(),
+                                    ),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Simple ASCII series plot for the figures (PPL vs bits, time vs size).
+pub fn ascii_series(title: &str, xlabels: &[String], series: &[(String, Vec<f64>)]) -> String {
+    let mut out = format!("== {title} ==\n");
+    let w = 14;
+    out.push_str(&format!("{:<w$}", "x"));
+    for (name, _) in series {
+        out.push_str(&format!("{name:>14}"));
+    }
+    out.push('\n');
+    for (i, x) in xlabels.iter().enumerate() {
+        out.push_str(&format!("{x:<w$}"));
+        for (_, ys) in series {
+            if let Some(y) = ys.get(i) {
+                if y.abs() >= 1000.0 {
+                    out.push_str(&format!("{y:>14.0}"));
+                } else {
+                    out.push_str(&format!("{y:>14.3}"));
+                }
+            } else {
+                out.push_str(&format!("{:>14}", "-"));
+            }
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_all_rows() {
+        let mut t = Table::new("Test Table", &["Wiki", "PTB", "C4"]);
+        t.row_f("FP16", &[5.68, 27.34, 7.08], 2);
+        t.row_f("Ours", &[8.58, 76.09, 12.27], 2);
+        let s = t.render();
+        assert!(s.contains("FP16"));
+        assert!(s.contains("76.09"));
+        assert!(s.contains("Wiki"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn table_rejects_wrong_width() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row("x", vec!["1".into()]);
+    }
+
+    #[test]
+    fn json_dump_roundtrips() {
+        let mut t = Table::new("T", &["c1"]);
+        t.row("r1", vec!["v".into()]);
+        let j = t.to_json();
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("title").as_str(), Some("T"));
+    }
+
+    #[test]
+    fn series_renders() {
+        let s = ascii_series(
+            "fig",
+            &["W4".into(), "W2".into()],
+            &[("ours".into(), vec![1.0, 2.0]), ("atom".into(), vec![3.0])],
+        );
+        assert!(s.contains("ours"));
+        assert!(s.contains("-")); // missing point
+    }
+}

@@ -1,0 +1,290 @@
+//! Zero-shot multiple-choice tasks — six synthetic analogs of
+//! PIQA / ARC-E / ARC-C / BoolQ / HellaSwag / WinoGrande (DESIGN.md §2),
+//! all scored the way lm-eval-harness scores the real ones:
+//! length-normalized log-likelihood of each choice continuation.
+
+use crate::data::corpus::*;
+use crate::model::Transformer;
+use crate::util::log_sum_exp;
+use crate::util::rng::Rng;
+
+/// One multiple-choice item: shared context, N single-or-multi-token
+/// choices, index of the correct one.
+#[derive(Clone, Debug)]
+pub struct McItem {
+    pub context: Vec<u16>,
+    pub choices: Vec<Vec<u16>>,
+    pub correct: usize,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Task {
+    PiqaA,   // 2 choices, object vs random object
+    ArcE,    // 4 choices, easy distractors
+    ArcC,    // 4 choices, close distractors (objects of same relation)
+    BoolQA,  // yes/no verification
+    HellaA,  // continuation after a full sentence prefix
+    WinoA,   // 2 entities, pick the right continuation
+}
+
+pub const ALL_TASKS: [Task; 6] = [
+    Task::PiqaA,
+    Task::ArcE,
+    Task::ArcC,
+    Task::BoolQA,
+    Task::HellaA,
+    Task::WinoA,
+];
+
+impl Task {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Task::PiqaA => "PIQA*",
+            Task::ArcE => "ARC-E*",
+            Task::ArcC => "ARC-C*",
+            Task::BoolQA => "BoolQ*",
+            Task::HellaA => "Hella*",
+            Task::WinoA => "Wino*",
+        }
+    }
+
+    pub fn chance(&self) -> f64 {
+        match self {
+            Task::PiqaA | Task::BoolQA | Task::WinoA => 0.5,
+            _ => 0.25,
+        }
+    }
+}
+
+fn random_wrong_obj(rng: &mut Rng, correct: u16) -> u16 {
+    loop {
+        let o = OBJ_BASE + rng.below(N_OBJ as usize) as u16;
+        if o != correct {
+            return o;
+        }
+    }
+}
+
+/// Generate `n` items for a task (deterministic per seed).
+pub fn generate_items(task: Task, n: usize, seed: u64) -> Vec<McItem> {
+    let mut rng = Rng::new(seed ^ 0x2e05 ^ (task as u64) << 8);
+    let mut items = Vec::with_capacity(n);
+    while items.len() < n {
+        let e = rng.below(N_ENT as usize) as u16;
+        let r = rng.below(N_REL as usize) as u16;
+        let correct_obj = fact_obj(e, r);
+        let item = match task {
+            Task::PiqaA => {
+                let wrong = random_wrong_obj(&mut rng, correct_obj);
+                let mut choices = vec![vec![correct_obj], vec![wrong]];
+                let correct = rng.below(2);
+                if correct == 1 {
+                    choices.swap(0, 1);
+                }
+                McItem {
+                    context: vec![QRY, ENT_BASE + e, REL_BASE + r],
+                    choices,
+                    correct,
+                }
+            }
+            Task::ArcE | Task::ArcC => {
+                let mut choices = vec![vec![correct_obj]];
+                while choices.len() < 4 {
+                    let d = if task == Task::ArcC {
+                        // close distractor: true object of a *different
+                        // entity* under the same relation
+                        let e2 = rng.below(N_ENT as usize) as u16;
+                        fact_obj(e2, r)
+                    } else {
+                        random_wrong_obj(&mut rng, correct_obj)
+                    };
+                    if d != correct_obj && !choices.iter().any(|c| c[0] == d) {
+                        choices.push(vec![d]);
+                    }
+                }
+                let correct = rng.below(4);
+                choices.swap(0, correct);
+                McItem {
+                    context: vec![QRY, ENT_BASE + e, REL_BASE + r],
+                    choices,
+                    correct,
+                }
+            }
+            Task::BoolQA => {
+                let claim_true = rng.bool(0.5);
+                let claimed = if claim_true {
+                    correct_obj
+                } else {
+                    random_wrong_obj(&mut rng, correct_obj)
+                };
+                McItem {
+                    context: vec![QRY, ENT_BASE + e, REL_BASE + r, claimed],
+                    choices: vec![vec![YES], vec![NO]],
+                    correct: if claim_true { 0 } else { 1 },
+                }
+            }
+            Task::HellaA => {
+                // prefix sentence + query; tests context robustness
+                let e0 = rng.below(N_ENT as usize) as u16;
+                let r0 = rng.below(N_REL as usize) as u16;
+                let mut choices = vec![vec![correct_obj]];
+                while choices.len() < 4 {
+                    let d = random_wrong_obj(&mut rng, correct_obj);
+                    if !choices.iter().any(|c| c[0] == d) {
+                        choices.push(vec![d]);
+                    }
+                }
+                let correct = rng.below(4);
+                choices.swap(0, correct);
+                McItem {
+                    context: vec![
+                        ENT_BASE + e0,
+                        REL_BASE + r0,
+                        fact_obj(e0, r0),
+                        SEP,
+                        QRY,
+                        ENT_BASE + e,
+                        REL_BASE + r,
+                    ],
+                    choices,
+                    correct,
+                }
+            }
+            Task::WinoA => {
+                // two entities mentioned, query about the first
+                let e2 = {
+                    let mut x = rng.below(N_ENT as usize) as u16;
+                    while x == e {
+                        x = rng.below(N_ENT as usize) as u16;
+                    }
+                    x
+                };
+                let other_obj = fact_obj(e2, r);
+                if other_obj == correct_obj {
+                    continue; // ambiguous item, skip
+                }
+                let mut choices = vec![vec![correct_obj], vec![other_obj]];
+                let correct = rng.below(2);
+                if correct == 1 {
+                    choices.swap(0, 1);
+                }
+                McItem {
+                    context: vec![
+                        ENT_BASE + e2,
+                        REL_BASE + r,
+                        other_obj,
+                        SEP,
+                        QRY,
+                        ENT_BASE + e,
+                        REL_BASE + r,
+                    ],
+                    choices,
+                    correct,
+                }
+            }
+        };
+        items.push(item);
+    }
+    items
+}
+
+/// Length-normalized log-likelihood of `cont` after `ctx`.
+pub fn score_continuation(model: &Transformer, ctx: &[u16], cont: &[u16]) -> f64 {
+    let mut seq = ctx.to_vec();
+    seq.extend_from_slice(cont);
+    let logits = model.forward(&seq);
+    let mut ll = 0.0f64;
+    for (k, &tok) in cont.iter().enumerate() {
+        let pos = ctx.len() + k - 1; // logits at pos predict token pos+1
+        let row = logits.row(pos);
+        ll += (row[tok as usize] - log_sum_exp(row)) as f64;
+    }
+    ll / cont.len() as f64
+}
+
+/// Accuracy of the model on a set of items.
+pub fn accuracy(model: &Transformer, items: &[McItem]) -> f64 {
+    let mut correct = 0usize;
+    for item in items {
+        let mut best = 0usize;
+        let mut best_ll = f64::NEG_INFINITY;
+        for (i, c) in item.choices.iter().enumerate() {
+            let ll = score_continuation(model, &item.context, c);
+            if ll > best_ll {
+                best_ll = ll;
+                best = i;
+            }
+        }
+        if best == item.correct {
+            correct += 1;
+        }
+    }
+    correct as f64 / items.len().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::ModelConfig;
+
+    #[test]
+    fn items_deterministic_and_well_formed() {
+        for task in ALL_TASKS {
+            let a = generate_items(task, 20, 7);
+            let b = generate_items(task, 20, 7);
+            assert_eq!(a.len(), 20);
+            for (x, y) in a.iter().zip(b.iter()) {
+                assert_eq!(x.context, y.context);
+                assert_eq!(x.correct, y.correct);
+            }
+            for item in &a {
+                assert!(item.correct < item.choices.len());
+                // choices distinct
+                for i in 0..item.choices.len() {
+                    for j in 0..i {
+                        assert_ne!(item.choices[i], item.choices[j], "{task:?}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn random_model_near_chance() {
+        let cfg = ModelConfig {
+            name: "t".into(),
+            vocab_size: VOCAB_SIZE,
+            d_model: 64,
+            n_layers: 1,
+            n_heads: 2,
+            d_ff: 96,
+            max_seq: 32,
+            rope_theta: 10000.0,
+            rmsnorm_eps: 1e-5,
+        };
+        let model = crate::model::Transformer::random(&cfg, 3);
+        let items = generate_items(Task::ArcE, 40, 11);
+        let acc = accuracy(&model, &items);
+        // chance 0.25; random net should not be near 1.0
+        assert!(acc < 0.6, "untrained acc {acc}");
+    }
+
+    #[test]
+    fn boolq_balanced() {
+        let items = generate_items(Task::BoolQA, 200, 5);
+        let yes = items.iter().filter(|i| i.correct == 0).count();
+        assert!((70..=130).contains(&yes), "yes count {yes}");
+    }
+
+    #[test]
+    fn correct_answer_position_unbiased() {
+        let items = generate_items(Task::ArcE, 400, 9);
+        let mut counts = [0usize; 4];
+        for i in &items {
+            counts[i.correct] += 1;
+        }
+        for &c in &counts {
+            assert!((60..=140).contains(&c), "position bias {counts:?}");
+        }
+    }
+}

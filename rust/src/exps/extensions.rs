@@ -1,0 +1,64 @@
+//! Extension ablations beyond the paper's tables (DESIGN.md "keep
+//! iterating" items): design-choice sweeps for the two knobs the paper
+//! fixes without sweeping.
+//!
+//! - `balance`: activation scale balancing mode — none vs the paper's
+//!   Eq. (11) vs our least-squares refit (Appendix A says μ can also "be
+//!   tuned ... or learn from data"; LS is that variant).
+//! - `em-iters`: EM iteration count vs quantization loss and PPL
+//!   (Algorithm 1's `iters`; the paper never reports its convergence).
+
+use super::ExpCtx;
+use crate::eval::report::Table;
+use crate::quant::actquant::{ActQuantConfig, BalanceMode};
+use crate::quant::binarize::BwaConfig;
+use crate::quant::BwaQuantizer;
+
+/// Balance-mode ablation on llama1-7b.
+pub fn exp_balance(ctx: &ExpCtx) -> Result<(), String> {
+    let ck = ctx.load_ckpt("llama1-7b")?;
+    let mut table = Table::new(
+        "Ext. A — activation scale balancing",
+        &["Wiki PPL", "C4 PPL", "Avg Acc"],
+    );
+    for (label, mode) in [
+        ("A(1x4) no balancing", BalanceMode::None),
+        ("A(1x4) Eq.(11) balancing", BalanceMode::Paper),
+        ("A(1x4) least-squares refit", BalanceMode::LeastSquares),
+    ] {
+        let q = BwaQuantizer {
+            cfg: BwaConfig {
+                act: ActQuantConfig { bits: 4, balance: mode },
+                ..BwaConfig::default()
+            },
+        };
+        let r = ctx.run_method(&ck, &q, label)?;
+        table.row_f(label, &[r.ppl[0].1, r.ppl[2].1, r.zs_avg * 100.0], 2);
+    }
+    println!("{}", table.render());
+    ctx.save("ext_balance", &table);
+    Ok(())
+}
+
+/// EM-iteration sweep on llama1-7b.
+pub fn exp_em_iters(ctx: &ExpCtx) -> Result<(), String> {
+    let ck = ctx.load_ckpt("llama1-7b")?;
+    let mut table = Table::new(
+        "Ext. B — EM iterations (Algorithm 1 `iters`)",
+        &["Wiki PPL", "Avg Acc"],
+    );
+    for iters in [1usize, 3, 6, 12, 25] {
+        let q = BwaQuantizer {
+            cfg: BwaConfig {
+                em_iters: iters,
+                ..BwaConfig::default()
+            },
+        };
+        let label = format!("{iters} EM iters");
+        let r = ctx.run_method(&ck, &q, &label)?;
+        table.row_f(&label, &[r.ppl[0].1, r.zs_avg * 100.0], 2);
+    }
+    println!("{}", table.render());
+    ctx.save("ext_em_iters", &table);
+    Ok(())
+}

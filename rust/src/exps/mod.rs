@@ -1,0 +1,484 @@
+//! Experiment drivers — one per paper table/figure (DESIGN.md §5).
+//!
+//! Every driver quantizes the relevant tiny model(s) with the relevant
+//! method(s) through the shared `quantize_model` pipeline, runs the shared
+//! evaluation harness, prints a paper-layout table/series, and dumps JSON
+//! to `artifacts/results/<exp>.json` for EXPERIMENTS.md.
+
+pub mod extensions;
+pub mod kernel_bench;
+
+use crate::baselines;
+use crate::data::corpus::CorpusSpec;
+use crate::eval::report::{ascii_series, Table};
+use crate::eval::{evaluate, EvalBudget, EvalResult};
+use crate::model::checkpoint::Checkpoint;
+use crate::model::{quantize_model, Transformer};
+use crate::quant::actquant::{ActQuantConfig, BalanceMode};
+use crate::quant::binarize::BwaConfig;
+use crate::quant::{BwaQuantizer, Quantizer};
+use crate::util::cli::{Args, Spec};
+use std::path::PathBuf;
+
+static BENCH_SPEC: Spec = Spec {
+    name: "bench",
+    about: "regenerate a paper table or figure",
+    flags: &[
+        ("exp", "", "fig1|table1..9|fig3|fig4|balance|em-iters|all"),
+        ("models-dir", "artifacts/models", "trained checkpoints"),
+        ("out", "artifacts/results", "result JSON directory"),
+        ("seed", "17", "seed"),
+    ],
+    switches: &[("quick", "small eval budget (CI)")],
+};
+
+pub struct ExpCtx {
+    pub models_dir: PathBuf,
+    pub out_dir: PathBuf,
+    pub budget: EvalBudget,
+    pub seed: u64,
+    pub calib_seqs: usize,
+    pub calib_len: usize,
+    pub quick: bool,
+}
+
+impl ExpCtx {
+    fn from_args(args: &Args) -> Result<ExpCtx, String> {
+        let quick = args.switch("quick");
+        Ok(ExpCtx {
+            models_dir: PathBuf::from(args.str_or("models-dir", "artifacts/models")),
+            out_dir: PathBuf::from(args.str_or("out", "artifacts/results")),
+            budget: if quick {
+                EvalBudget::quick()
+            } else {
+                EvalBudget::standard()
+            },
+            seed: args.u64_or("seed", 17).map_err(|e| e.to_string())?,
+            calib_seqs: if quick { 8 } else { 16 },
+            calib_len: 96,
+            quick,
+        })
+    }
+
+    pub fn load_ckpt(&self, name: &str) -> Result<Checkpoint, String> {
+        let path = self.models_dir.join(format!("{name}.bin"));
+        Checkpoint::load(&path)
+            .map_err(|e| format!("{e} — run `make artifacts` to train the model zoo"))
+    }
+
+    pub fn calib(&self) -> Vec<Vec<u16>> {
+        let train = crate::data::corpus::train_split(&CorpusSpec::wiki(), 200_000);
+        crate::data::calibration_windows(&train, self.calib_seqs, self.calib_len, self.seed)
+    }
+
+    /// Quantize + evaluate one (checkpoint, method).
+    pub fn run_method(
+        &self,
+        ck: &Checkpoint,
+        q: &dyn Quantizer,
+        label: &str,
+    ) -> Result<EvalResult, String> {
+        let kv = if label == "FP16" { None } else { Some(4) };
+        let t0 = std::time::Instant::now();
+        let model = quantize_model(ck, q, &self.calib(), kv).map_err(|e| e.to_string())?;
+        let quant_s = t0.elapsed().as_secs_f64();
+        let r = evaluate(&model, label, &self.budget, self.seed);
+        eprintln!(
+            "  [{}] {label}: quantize {quant_s:.1}s, wiki ppl {:.2}, zs avg {:.1}%",
+            ck.config.name,
+            r.ppl[0].1,
+            r.zs_avg * 100.0
+        );
+        Ok(r)
+    }
+
+    pub fn save(&self, exp: &str, table: &Table) {
+        std::fs::create_dir_all(&self.out_dir).ok();
+        let path = self.out_dir.join(format!("{exp}.json"));
+        std::fs::write(&path, table.to_json().to_string_pretty()).ok();
+        let tpath = self.out_dir.join(format!("{exp}.txt"));
+        std::fs::write(&tpath, table.render()).ok();
+    }
+}
+
+/// FP16 + the paper's comparison grid used by Tables 1/2/7/8.
+fn method_grid(with_billm: bool) -> Vec<(&'static str, Box<dyn Quantizer>)> {
+    let mut v: Vec<(&'static str, Box<dyn Quantizer>)> = vec![
+        ("FP16", Box::new(crate::quant::FpQuantizer)),
+        ("QuaRot W4A4", baselines::by_name("quarot-w4a4").unwrap()),
+        ("Atom W4A4", baselines::by_name("atom-w4a4").unwrap()),
+        ("QuaRot W2A4", baselines::by_name("quarot-w2a4").unwrap()),
+        ("Atom W2A4", baselines::by_name("atom-w2a4").unwrap()),
+    ];
+    if with_billm {
+        v.push(("BiLLM W(1+1)A16", baselines::by_name("billm-a16").unwrap()));
+        v.push(("BiLLM W(1+1)A4", baselines::by_name("billm-a4").unwrap()));
+    }
+    v.push(("Ours W(1+1)A(1x4)", Box::new(BwaQuantizer::paper())));
+    v
+}
+
+const EVAL_HEADERS: [&str; 10] = [
+    "Wiki", "PTB", "C4", "PIQA*", "ARC-E*", "ARC-C*", "BoolQ*", "Hella*", "Wino*", "Avg",
+];
+
+fn result_cells(r: &EvalResult) -> Vec<f64> {
+    let mut cells: Vec<f64> = r.ppl.iter().map(|(_, p)| *p).collect();
+    cells.extend(r.zeroshot.iter().map(|(_, a)| a * 100.0));
+    cells.push(r.zs_avg * 100.0);
+    cells
+}
+
+/// Tables 1 / 2 / 7+8: the main-results grid over a set of models.
+fn exp_main_table(
+    ctx: &ExpCtx,
+    exp: &str,
+    title: &str,
+    models: &[&str],
+    with_billm: bool,
+) -> Result<(), String> {
+    let mut table = Table::new(title, &EVAL_HEADERS);
+    for model_name in models {
+        let ck = ctx.load_ckpt(model_name)?;
+        for (label, q) in method_grid(with_billm) {
+            let r = ctx.run_method(&ck, q.as_ref(), label)?;
+            table.row_f(&format!("{model_name} {label}"), &result_cells(&r), 2);
+        }
+    }
+    println!("{}", table.render());
+    ctx.save(exp, &table);
+    Ok(())
+}
+
+/// Figure 1: wiki PPL vs bit configuration per method.
+fn exp_fig1(ctx: &ExpCtx) -> Result<(), String> {
+    let ck = ctx.load_ckpt("llama1-7b")?;
+    let fp = ctx.run_method(&ck, &crate::quant::FpQuantizer, "FP16")?;
+
+    let methods = ["GPTQ", "QuaRot", "Atom"];
+    let bit_cfgs = ["w4a4", "w2a4", "w1a4"];
+    let xlabels: Vec<String> = vec![
+        "FP16".into(),
+        "W4A4".into(),
+        "W2A4".into(),
+        "W1A4|W(1+1)A(1x4)".into(),
+    ];
+    let mut series: Vec<(String, Vec<f64>)> = Vec::new();
+    let mut table = Table::new("Figure 1 — Wiki PPL vs bit width", &["config", "wiki ppl"]);
+    table.row("FP16", vec!["FP16".into(), format!("{:.2}", fp.ppl[0].1)]);
+    for name in methods {
+        let mut ys = vec![fp.ppl[0].1];
+        for bits in bit_cfgs {
+            let key = format!("{}-{bits}", name.to_lowercase());
+            let q = baselines::by_name(&key).ok_or(format!("registry miss {key}"))?;
+            let r = ctx.run_method(&ck, q.as_ref(), &format!("{name} {bits}"))?;
+            ys.push(r.ppl[0].1);
+            table.row(
+                &format!("{name} {}", bits.to_uppercase()),
+                vec![bits.to_uppercase(), format!("{:.2}", r.ppl[0].1)],
+            );
+        }
+        series.push((name.to_string(), ys));
+    }
+    let ours = ctx.run_method(&ck, &BwaQuantizer::paper(), "Ours")?;
+    series.push((
+        "Ours".to_string(),
+        vec![fp.ppl[0].1, f64::NAN, f64::NAN, ours.ppl[0].1],
+    ));
+    table.row(
+        "Ours W(1+1)A(1x4)",
+        vec!["W(1+1)A(1x4)".into(), format!("{:.2}", ours.ppl[0].1)],
+    );
+    println!("{}", ascii_series("Figure 1 — Wiki PPL vs bits", &xlabels, &series));
+    println!("{}", table.render());
+    ctx.save("fig1", &table);
+    Ok(())
+}
+
+/// Table 3: MMLU-analog categories on llama1-7b.
+fn exp_table3(ctx: &ExpCtx) -> Result<(), String> {
+    let ck = ctx.load_ckpt("llama1-7b")?;
+    let mut table = Table::new(
+        "Table 3 — MMLU* (4 domains)",
+        &["STEM", "humanities", "social", "others", "Avg"],
+    );
+    let methods: Vec<(&str, Box<dyn Quantizer>)> = vec![
+        ("FP16", Box::new(crate::quant::FpQuantizer)),
+        ("Atom W2A4", baselines::by_name("atom-w2a4").unwrap()),
+        ("Ours W(1+1)A(1x4)", Box::new(BwaQuantizer::paper())),
+    ];
+    for (label, q) in methods {
+        let kv = if label == "FP16" { None } else { Some(4) };
+        let model = quantize_model(&ck, q.as_ref(), &ctx.calib(), kv).map_err(|e| e.to_string())?;
+        let (accs, avg) = crate::eval::mmlu::mmlu_eval(&model, ctx.budget.mmlu_items, ctx.seed);
+        let mut cells: Vec<f64> = accs.iter().map(|a| a * 100.0).collect();
+        cells.push(avg * 100.0);
+        table.row_f(label, &cells, 1);
+        eprintln!("  [table3] {label}: avg {:.1}%", avg * 100.0);
+    }
+    println!("{}", table.render());
+    ctx.save("table3", &table);
+    Ok(())
+}
+
+/// Table 4: EM × fine-grained-group 2×2 ablation.
+fn exp_table4(ctx: &ExpCtx) -> Result<(), String> {
+    let ck = ctx.load_ckpt("llama1-7b")?;
+    let mut table = Table::new(
+        "Table 4 — min-distance (EM) x fine-grained group",
+        &["Wiki PPL", "Avg Acc"],
+    );
+    let combos: [(&str, bool, bool); 4] = [
+        ("x / x", false, false),
+        ("EM / x", true, false),
+        ("x / group", false, true),
+        ("EM / group", true, true),
+    ];
+    for (label, use_em, fine) in combos {
+        let q = BwaQuantizer {
+            cfg: BwaConfig {
+                use_em,
+                fine_grained: fine,
+                ..BwaConfig::default()
+            },
+        };
+        let r = ctx.run_method(&ck, &q, label)?;
+        table.row_f(label, &[r.ppl[0].1, r.zs_avg * 100.0], 2);
+    }
+    println!("{}", table.render());
+    ctx.save("table4", &table);
+    Ok(())
+}
+
+/// Table 5: cumulative component ablation.
+fn exp_table5(ctx: &ExpCtx) -> Result<(), String> {
+    let ck = ctx.load_ckpt("llama1-7b")?;
+    let mut table = Table::new("Table 5 — component stack", &["Wiki PPL"]);
+
+    let fp = ctx.run_method(&ck, &crate::quant::FpQuantizer, "FP16")?;
+    table.row_f("FP16", &[fp.ppl[0].1], 2);
+
+    let gptq1 = baselines::gptq_rtn::GptqQuantizer::new(1, Some(4));
+    let r = ctx.run_method(&ck, &gptq1, "W1A4 GPTQ")?;
+    table.row_f("W1A4 GPTQ (group 64)", &[r.ppl[0].1], 2);
+
+    let act_plain = ActQuantConfig {
+        bits: 4,
+        balance: BalanceMode::None,
+    };
+    let steps: [(&str, BwaConfig); 5] = [
+        (
+            "+ outlier channels INT8",
+            BwaConfig {
+                use_em: false,
+                fine_grained: false,
+                hessian_metric: false,
+                act: act_plain,
+                ..BwaConfig::default()
+            },
+        ),
+        (
+            "+ minimum distance quantization",
+            BwaConfig {
+                fine_grained: false,
+                hessian_metric: false,
+                act: act_plain,
+                ..BwaConfig::default()
+            },
+        ),
+        (
+            "+ fine-grained group, W(1+1)",
+            BwaConfig {
+                hessian_metric: false,
+                act: act_plain,
+                ..BwaConfig::default()
+            },
+        ),
+        (
+            "+ Hessian-weighted distance",
+            BwaConfig {
+                act: act_plain,
+                ..BwaConfig::default()
+            },
+        ),
+        ("+ binarized residual decomp A(1x4)", BwaConfig::paper()),
+    ];
+    for (label, cfg) in steps {
+        let q = BwaQuantizer { cfg };
+        let r = ctx.run_method(&ck, &q, label)?;
+        table.row_f(label, &[r.ppl[0].1], 2);
+    }
+    println!("{}", table.render());
+    ctx.save("table5", &table);
+    Ok(())
+}
+
+/// Table 6: model size, theoretical LLaMA family + measured tiny models.
+fn exp_table6(ctx: &ExpCtx) -> Result<(), String> {
+    let mut table = Table::new(
+        "Table 6 — model size (fp16 vs ours)",
+        &["FP16", "Ours", "ratio"],
+    );
+    // Theoretical: per linear element (1-outlier_frac)·2 bits +
+    // outlier_frac·8 bits + 4 fp16 affine params per 128-group;
+    // embeddings + head at fp16.
+    let llama_dims: [(&str, usize, usize, usize, usize); 4] = [
+        ("LLaMA-7B", 4096, 11008, 32, 32000),
+        ("LLaMA-13B", 5120, 13824, 40, 32000),
+        ("LLaMA-30B", 6656, 17920, 60, 32000),
+        ("LLaMA-65B", 8192, 22016, 80, 32000),
+    ];
+    for (name, d, ff, layers, vocab) in llama_dims {
+        let lin_params = layers * (4 * d * d + 3 * d * ff);
+        let embed = 2 * vocab * d;
+        let fp16_gb = (lin_params + embed) as f64 * 2.0 / 1e9;
+        let outlier_frac = 128.0 / d as f64;
+        let bits_per_lin =
+            (1.0 - outlier_frac) * 2.0 + outlier_frac * 8.0 + 4.0 * 16.0 / 128.0;
+        let ours_gb = (lin_params as f64 * bits_per_lin / 8.0 + embed as f64 * 2.0) / 1e9;
+        table.row(
+            name,
+            vec![
+                format!("{fp16_gb:.1}GB"),
+                format!("{ours_gb:.2}GB"),
+                format!("{:.2}x", fp16_gb / ours_gb),
+            ],
+        );
+    }
+    // Measured tiny models
+    for name in ["llama1-7b", "llama1-13b"] {
+        if let Ok(ck) = ctx.load_ckpt(name) {
+            let fp = Transformer::fp_from_checkpoint(&ck).map_err(|e| e.to_string())?;
+            let q = BwaQuantizer::paper();
+            let model =
+                quantize_model(&ck, &q, &ctx.calib(), Some(4)).map_err(|e| e.to_string())?;
+            table.row(
+                &format!("{name} (measured)"),
+                vec![
+                    format!("{:.2}MB", fp.bytes() as f64 / 1e6),
+                    format!("{:.2}MB", model.bytes() as f64 / 1e6),
+                    format!("{:.2}x", fp.bytes() as f64 / model.bytes() as f64),
+                ],
+            );
+        }
+    }
+    println!("{}", table.render());
+    ctx.save("table6", &table);
+    Ok(())
+}
+
+/// Table 9: outlier channel count sweep (on the 13B-analog, which has
+/// enough channel groups for a sweep).
+fn exp_table9(ctx: &ExpCtx) -> Result<(), String> {
+    let ck = ctx.load_ckpt("llama1-13b")?;
+    let mut table = Table::new("Table 9 — outlier channels", &EVAL_HEADERS);
+    let fp = ctx.run_method(&ck, &crate::quant::FpQuantizer, "FP16")?;
+    table.row_f("FP16", &result_cells(&fp), 2);
+    for groups in [0usize, 1, 2] {
+        let q = BwaQuantizer {
+            cfg: BwaConfig {
+                outlier_groups: groups,
+                ..BwaConfig::default()
+            },
+        };
+        let label = format!("{} outlier ch", groups * 64);
+        let r = ctx.run_method(&ck, &q, &label)?;
+        table.row_f(&label, &result_cells(&r), 2);
+    }
+    println!("{}", table.render());
+    ctx.save("table9", &table);
+    Ok(())
+}
+
+pub fn cmd_bench(args: &Args) -> Result<(), String> {
+    args.validate(&BENCH_SPEC).map_err(|e| e.to_string())?;
+    if args.wants_help() {
+        println!("{}", BENCH_SPEC.help());
+        return Ok(());
+    }
+    let ctx = ExpCtx::from_args(args)?;
+    let exp = args.str_or("exp", "");
+    let run = |e: &str| -> Result<(), String> {
+        let t0 = std::time::Instant::now();
+        eprintln!("=== running {e} ===");
+        let r = match e {
+            "fig1" => exp_fig1(&ctx),
+            "table1" => exp_main_table(
+                &ctx,
+                "table1",
+                "Table 1 — LLaMA1/2-7B analogs",
+                &["llama1-7b", "llama2-7b"],
+                true,
+            ),
+            "table2" => exp_main_table(
+                &ctx,
+                "table2",
+                "Table 2 — Vicuna analogs",
+                &["vicuna-7b", "vicuna-13b"],
+                false,
+            ),
+            "table3" => exp_table3(&ctx),
+            "table4" => exp_table4(&ctx),
+            "table5" => exp_table5(&ctx),
+            "table6" => exp_table6(&ctx),
+            "table7" => exp_main_table(
+                &ctx,
+                "table7",
+                "Tables 7+8 — 13B analogs",
+                &["llama1-13b", "llama2-13b"],
+                false,
+            ),
+            "table9" => exp_table9(&ctx),
+            "balance" => extensions::exp_balance(&ctx),
+            "em-iters" => extensions::exp_em_iters(&ctx),
+            "fig3" => kernel_bench::exp_fig3(&ctx),
+            "fig4" => kernel_bench::exp_fig4(&ctx),
+            other => Err(format!("unknown experiment '{other}'")),
+        };
+        eprintln!("=== {e} done in {:.1}s ===", t0.elapsed().as_secs_f64());
+        r
+    };
+    match exp {
+        "all" => {
+            for e in [
+                "fig1", "table1", "table2", "table3", "table4", "table5", "table6", "table7",
+                "table9", "fig3", "fig4",
+            ] {
+                run(e)?;
+            }
+            Ok(())
+        }
+        "" => Err("pass --exp <name> (or --exp all)".into()),
+        e => run(e),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_grid_has_paper_rows() {
+        let g = method_grid(true);
+        assert_eq!(g.len(), 8);
+        assert_eq!(g[0].0, "FP16");
+        assert!(g.last().unwrap().0.contains("Ours"));
+        let g2 = method_grid(false);
+        assert_eq!(g2.len(), 6);
+    }
+
+    #[test]
+    fn result_cells_width_matches_headers() {
+        let r = EvalResult {
+            method: "m".into(),
+            ppl: vec![
+                ("wiki".into(), 1.0),
+                ("ptb".into(), 2.0),
+                ("c4".into(), 3.0),
+            ],
+            zeroshot: (0..6).map(|i| (format!("t{i}"), 0.5)).collect(),
+            zs_avg: 0.5,
+        };
+        assert_eq!(result_cells(&r).len(), EVAL_HEADERS.len());
+    }
+}

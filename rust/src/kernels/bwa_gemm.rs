@@ -1,0 +1,482 @@
+//! The W(1+1)A(1×4) popcount GEMM — Eq. (5)–(7), the paper's speed claim.
+//!
+//! The inner loop over a 64-channel group × bit-plane is two ANDs + three
+//! POPCNTs + three float MACs (`u64::count_ones` compiles to the hardware
+//! `popcnt` instruction), replacing 64 wide-int MACs. With the sign bits
+//! in {0,1} convention (q± = 2·q01 − 1) one group's contribution is
+//!
+//!   y_jℓ = c₃·V + (c₁−c₃)·V₁ + c₄·(R−R₁) + c₂·R₁ + (shift · wsum_j)/ng
+//!
+//! where V = Σ_a μ_a·popc(q∧b_a), V₁ = Σ_a μ_a·popc(q∧b_a∧m),
+//! R = Σ_a μ_a·popc(b_a) (token-only, hoisted), R₁ = Σ_a μ_a·popc(b_a∧m),
+//! and c₁..c₄ fold the per-(row, group, s) affine (α, β).
+//!
+//! [`BwaGemm::forward`] is bit-exact (up to f32 summation order) with
+//! [`BwaLinear::forward`] — asserted by tests — so perplexity results
+//! measured on the fake-quant path transfer to the binary path.
+
+use crate::quant::actquant::quantize_token;
+use crate::quant::binarize::BwaLinear;
+use crate::quant::rtn::RtnParams;
+use crate::tensor::Tensor;
+
+/// Packed activations for a batch of tokens (the binary region) plus the
+/// INT8 outlier slice — what the serving path keeps in flight.
+pub struct PackedActs {
+    pub tokens: usize,
+    pub words_per_plane: usize,
+    pub nplanes: usize,
+    /// Flat bit planes, word-major/plane-minor:
+    /// `planes[((t*wpp)+w)*nplanes + a]` — the 4 plane words of one
+    /// channel word are contiguous, so the kernel's inner loop touches
+    /// one cache line per word. (§Perf iteration 1.)
+    pub planes: Vec<u64>,
+    /// per-token per-plane scales μ_a.
+    pub mu: Vec<f32>,
+    /// per-token shift coefficient.
+    pub shift: Vec<f32>,
+    /// Hoisted R = Σ_a μ_a·popc(b_a) per (token, group).
+    pub r_tot: Vec<f32>,
+    /// INT8 outlier activations (token-major) + per-token scale.
+    pub x_out_q: Vec<i8>,
+    pub x_out_scale: Vec<f32>,
+    pub n_out: usize,
+}
+
+/// Precomputed state for the binary GEMM of one layer.
+pub struct BwaGemm<'a> {
+    pub lin: &'a BwaLinear,
+    /// Σ_i ŵ_ji over the binary region (multiplies the shift plane).
+    pub wsum: Vec<f32>,
+    /// Folded coefficients per (row, group): [c1, c2, c3, c4].
+    pub coef: Vec<[f32; 4]>,
+}
+
+impl<'a> BwaGemm<'a> {
+    pub fn prepare(lin: &'a BwaLinear) -> BwaGemm<'a> {
+        let ng = lin.n_groups();
+        let mut wsum = Vec::with_capacity(lin.out_features);
+        for j in 0..lin.out_features {
+            wsum.push(lin.w_hat.row(j)[..lin.n_norm].iter().sum());
+        }
+        let mut coef = Vec::with_capacity(lin.out_features * ng);
+        for j in 0..lin.out_features {
+            for g in 0..ng {
+                let (a0, b0) = lin.affine(j, g, 0);
+                let (a1, b1) = lin.affine(j, g, 1);
+                // c1 = 2α1, c2 = β1−α1, c3 = 2α0, c4 = β0−α0
+                coef.push([2.0 * a1, b1 - a1, 2.0 * a0, b0 - a0]);
+            }
+        }
+        BwaGemm { lin, wsum, coef }
+    }
+
+    /// Quantize + pack a batch of (already permuted!) activations.
+    /// `xp` is [tokens, in_features] in the layer's permuted channel order.
+    pub fn pack_activations(&self, xp: &Tensor) -> PackedActs {
+        let lin = self.lin;
+        let (m, n) = xp.dims2();
+        assert_eq!(n, lin.in_features);
+        let nplanes = lin.act.bits as usize;
+        let wpp = lin.n_norm / 64;
+        let ng = lin.n_groups();
+        let wpg = lin.group_size / 64;
+        let n_out = lin.in_features - lin.n_norm;
+
+        let mut planes = Vec::with_capacity(m * nplanes * wpp);
+        let mut mu = Vec::with_capacity(m * nplanes);
+        let mut shift = Vec::with_capacity(m);
+        let mut r_tot = vec![0.0f32; m * ng];
+        let mut x_out_q = Vec::with_capacity(m * n_out);
+        let mut x_out_scale = Vec::with_capacity(m);
+
+        for t in 0..m {
+            let row = xp.row(t);
+            let tp = quantize_token(&row[..lin.n_norm], &lin.act);
+            debug_assert_eq!(tp.planes.len(), nplanes);
+            for a in 0..nplanes {
+                debug_assert_eq!(tp.planes[a].len(), wpp);
+                mu.push(tp.mu[a]);
+            }
+            // hoisted R per group
+            for g in 0..ng {
+                let mut acc = 0.0f32;
+                for a in 0..nplanes {
+                    let mut pc = 0u32;
+                    for w in 0..wpg {
+                        pc += tp.planes[a][g * wpg + w].count_ones();
+                    }
+                    acc += tp.mu[a] * pc as f32;
+                }
+                r_tot[t * ng + g] = acc;
+            }
+            // interleave planes word-major
+            for w in 0..wpp {
+                for a in 0..nplanes {
+                    planes.push(tp.planes[a][w]);
+                }
+            }
+            shift.push(tp.shift);
+            // outlier slice at INT8 symmetric
+            let xo = &row[lin.n_norm..];
+            let amax = xo.iter().fold(0.0f32, |a, &v| a.max(v.abs())).max(1e-12);
+            let s = amax / 127.0;
+            for &v in xo {
+                x_out_q.push(((v / s).round() as i32).clamp(-127, 127) as i8);
+            }
+            x_out_scale.push(s);
+        }
+        PackedActs {
+            tokens: m,
+            words_per_plane: wpp,
+            nplanes,
+            planes,
+            mu,
+            shift,
+            r_tot,
+            x_out_q,
+            x_out_scale,
+            n_out,
+        }
+    }
+
+    /// The popcount GEMM over pre-packed activations. This is the routine
+    /// Figure 3/4 benchmarks (packing measured separately, as the paper's
+    /// kernel comparison also excludes activation quantization).
+    ///
+    /// Dispatches to the AVX2 path (pshufb-LUT popcount over all four
+    /// planes per 256-bit vector) when available; scalar fallback below.
+    /// See EXPERIMENTS.md §Perf for the iteration log.
+    pub fn gemm_packed(&self, acts: &PackedActs) -> Tensor {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if std::is_x86_feature_detected!("avx2") {
+                // SAFETY: feature checked at runtime.
+                return unsafe { self.gemm_packed_avx2(acts) };
+            }
+        }
+        self.gemm_packed_scalar(acts)
+    }
+
+    /// Scalar hot loop: output rows outer / tokens inner so each packed
+    /// weight row is loaded once per batch; the 4 plane words of a channel
+    /// word are contiguous (`PackedActs::planes` layout); popcounts
+    /// accumulate in u32 and the per-plane scales fold once per group.
+    pub fn gemm_packed_scalar(&self, acts: &PackedActs) -> Tensor {
+        let lin = self.lin;
+        let ng = lin.n_groups();
+        let wpg = lin.group_size / 64;
+        let nplanes = acts.nplanes;
+        debug_assert_eq!(nplanes, 4, "kernel specialized for A(1x4)");
+        let wpp = acts.words_per_plane;
+        let mut y = Tensor::zeros(&[acts.tokens, lin.out_features]);
+
+        for j in 0..lin.out_features {
+            let qrow = lin.qbits.row(j);
+            let mrow = lin.mbits.row(j);
+            let coefs = &self.coef[j * ng..(j + 1) * ng];
+            let wsum_j = self.wsum[j];
+            for t in 0..acts.tokens {
+                let tok_planes = &acts.planes[t * wpp * 4..(t + 1) * wpp * 4];
+                let tok_mu = &acts.mu[t * 4..t * 4 + 4];
+                let mut acc = acts.shift[t] * wsum_j;
+                for (g, &[c1, c2, c3, c4]) in coefs.iter().enumerate() {
+                    let mut pv = [0u32; 4];
+                    let mut pv1 = [0u32; 4];
+                    let mut pr1 = [0u32; 4];
+                    for w in g * wpg..(g + 1) * wpg {
+                        // SAFETY: w < wpp and the plane layout guarantees
+                        // 4 contiguous words at w*4; qrow/mrow have wpp
+                        // words. Bounds proven by construction above.
+                        unsafe {
+                            let q = *qrow.get_unchecked(w);
+                            let mk = *mrow.get_unchecked(w);
+                            let b = tok_planes.get_unchecked(w * 4..w * 4 + 4);
+                            // manually unrolled over the 4 planes
+                            let e0 = q & b[0];
+                            let e1 = q & b[1];
+                            let e2 = q & b[2];
+                            let e3 = q & b[3];
+                            pv[0] += e0.count_ones();
+                            pv[1] += e1.count_ones();
+                            pv[2] += e2.count_ones();
+                            pv[3] += e3.count_ones();
+                            pv1[0] += (e0 & mk).count_ones();
+                            pv1[1] += (e1 & mk).count_ones();
+                            pv1[2] += (e2 & mk).count_ones();
+                            pv1[3] += (e3 & mk).count_ones();
+                            pr1[0] += (b[0] & mk).count_ones();
+                            pr1[1] += (b[1] & mk).count_ones();
+                            pr1[2] += (b[2] & mk).count_ones();
+                            pr1[3] += (b[3] & mk).count_ones();
+                        }
+                    }
+                    // epilogue: fold plane scales once per group
+                    let mut v = 0.0f32;
+                    let mut v1 = 0.0f32;
+                    let mut r1 = 0.0f32;
+                    for a in 0..4 {
+                        let mu_a = tok_mu[a];
+                        v += mu_a * pv[a] as f32;
+                        v1 += mu_a * pv1[a] as f32;
+                        r1 += mu_a * pr1[a] as f32;
+                    }
+                    let r = acts.r_tot[t * ng + g];
+                    acc += c3 * v + (c1 - c3) * v1 + c4 * (r - r1) + c2 * r1;
+                }
+                // outlier INT8 dot
+                if acts.n_out > 0 {
+                    let xo = &acts.x_out_q[t * acts.n_out..(t + 1) * acts.n_out];
+                    let p = &lin.outlier.params[j];
+                    let orow = &lin.outlier.q[j * lin.outlier.k..(j + 1) * lin.outlier.k];
+                    let mut oacc = 0i32;
+                    for c in 0..acts.n_out {
+                        oacc += (orow[c] as i32 + 128 - p.zero) * xo[c] as i32;
+                    }
+                    acc += p.scale * acts.x_out_scale[t] * oacc as f32;
+                }
+                y.data[t * lin.out_features + j] = acc;
+            }
+        }
+        y
+    }
+
+    /// AVX2 hot loop: one 256-bit load covers the 4 plane words of a
+    /// channel word; q/m broadcast; the three popcounts (e, e∧m, b∧m) run
+    /// as pshufb nibble-LUT + SAD, keeping per-plane counts in 64-bit
+    /// lanes. (§Perf iteration 2.)
+    #[cfg(target_arch = "x86_64")]
+    #[target_feature(enable = "avx2")]
+    unsafe fn gemm_packed_avx2(&self, acts: &PackedActs) -> Tensor {
+        use std::arch::x86_64::*;
+        let lin = self.lin;
+        let ng = lin.n_groups();
+        let wpg = lin.group_size / 64;
+        debug_assert_eq!(acts.nplanes, 4, "kernel specialized for A(1x4)");
+        let wpp = acts.words_per_plane;
+        let mut y = Tensor::zeros(&[acts.tokens, lin.out_features]);
+
+        let lut = _mm256_setr_epi8(
+            0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
+            0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
+        );
+        let low_mask = _mm256_set1_epi8(0x0f);
+        let zero = _mm256_setzero_si256();
+        #[inline(always)]
+        unsafe fn popcnt_lanes(
+            x: __m256i,
+            lut: __m256i,
+            low_mask: __m256i,
+            zero: __m256i,
+        ) -> __m256i {
+            let lo = _mm256_and_si256(x, low_mask);
+            let hi = _mm256_and_si256(_mm256_srli_epi64(x, 4), low_mask);
+            let cnt = _mm256_add_epi8(
+                _mm256_shuffle_epi8(lut, lo),
+                _mm256_shuffle_epi8(lut, hi),
+            );
+            // per-64-bit-lane byte sums -> per-plane popcounts
+            _mm256_sad_epu8(cnt, zero)
+        }
+
+        for j in 0..lin.out_features {
+            let qrow = lin.qbits.row(j);
+            let mrow = lin.mbits.row(j);
+            let coefs = &self.coef[j * ng..(j + 1) * ng];
+            let wsum_j = self.wsum[j];
+            for t in 0..acts.tokens {
+                let tok_planes = &acts.planes[t * wpp * 4..(t + 1) * wpp * 4];
+                let tok_mu = &acts.mu[t * 4..t * 4 + 4];
+                // duplicated plane scales [mu0 mu0 mu1 mu1 mu2 mu2 mu3 mu3]
+                let mu2 = _mm256_setr_ps(
+                    tok_mu[0], tok_mu[0], tok_mu[1], tok_mu[1],
+                    tok_mu[2], tok_mu[2], tok_mu[3], tok_mu[3],
+                );
+                let mut acc = acts.shift[t] * wsum_j;
+                for (g, &[c1, c2, c3, c4]) in coefs.iter().enumerate() {
+                    let mut pv = _mm256_setzero_si256();
+                    let mut pv1 = _mm256_setzero_si256();
+                    let mut pr1 = _mm256_setzero_si256();
+                    for w in g * wpg..(g + 1) * wpg {
+                        let b = _mm256_loadu_si256(
+                            tok_planes.as_ptr().add(w * 4) as *const __m256i
+                        );
+                        let qv = _mm256_set1_epi64x(*qrow.get_unchecked(w) as i64);
+                        let mv = _mm256_set1_epi64x(*mrow.get_unchecked(w) as i64);
+                        let e = _mm256_and_si256(qv, b);
+                        let em = _mm256_and_si256(e, mv);
+                        let bm = _mm256_and_si256(b, mv);
+                        pv = _mm256_add_epi64(pv, popcnt_lanes(e, lut, low_mask, zero));
+                        pv1 = _mm256_add_epi64(pv1, popcnt_lanes(em, lut, low_mask, zero));
+                        pr1 = _mm256_add_epi64(pr1, popcnt_lanes(bm, lut, low_mask, zero));
+                    }
+                    // epilogue (vectorized, §Perf iteration 4): interleave
+                    // pv|pv1 into 8×u32, convert once, multiply by the
+                    // duplicated plane scales, horizontal-sum even/odd.
+                    let inter = _mm256_or_si256(pv, _mm256_slli_epi64(pv1, 32));
+                    let prod = _mm256_mul_ps(_mm256_cvtepi32_ps(inter), mu2);
+                    let prod_r = _mm256_mul_ps(_mm256_cvtepi32_ps(pr1), mu2);
+                    // sum the two 128-bit halves
+                    let s = _mm_add_ps(
+                        _mm256_castps256_ps128(prod),
+                        _mm256_extractf128_ps(prod, 1),
+                    );
+                    let sr = _mm_add_ps(
+                        _mm256_castps256_ps128(prod_r),
+                        _mm256_extractf128_ps(prod_r, 1),
+                    );
+                    // lanes: [v_even, v1_even, v_odd, v1_odd]
+                    let s2 = _mm_add_ps(s, _mm_movehl_ps(s, s));
+                    let sr2 = _mm_add_ps(sr, _mm_movehl_ps(sr, sr));
+                    let v = _mm_cvtss_f32(s2);
+                    let v1 = _mm_cvtss_f32(_mm_shuffle_ps(s2, s2, 1));
+                    let r1 = _mm_cvtss_f32(sr2);
+                    let r = acts.r_tot[t * ng + g];
+                    acc += c3 * v + (c1 - c3) * v1 + c4 * (r - r1) + c2 * r1;
+                }
+                if acts.n_out > 0 {
+                    let xo = &acts.x_out_q[t * acts.n_out..(t + 1) * acts.n_out];
+                    let p = &lin.outlier.params[j];
+                    let orow = &lin.outlier.q[j * lin.outlier.k..(j + 1) * lin.outlier.k];
+                    let mut oacc = 0i32;
+                    for c in 0..acts.n_out {
+                        oacc += (orow[c] as i32 + 128 - p.zero) * xo[c] as i32;
+                    }
+                    acc += p.scale * acts.x_out_scale[t] * oacc as f32;
+                }
+                y.data[t * lin.out_features + j] = acc;
+            }
+        }
+        y
+    }
+
+    /// End-to-end binary forward: permute → pack → popcount GEMM.
+    pub fn forward(&self, x: &Tensor) -> Tensor {
+        let xp = x.select_cols(&self.lin.perm);
+        let acts = self.pack_activations(&xp);
+        self.gemm_packed(&acts)
+    }
+}
+
+/// Effective multiply-accumulate count for throughput reporting.
+pub fn bwa_mac_count(lin: &BwaLinear, tokens: usize) -> f64 {
+    (tokens * lin.out_features * lin.in_features) as f64
+}
+
+/// Quick check that the outlier activation quantization used by the
+/// packed path (symmetric INT8) matches the fake path within tolerance.
+pub fn outlier_act_error(x: &[f32]) -> f32 {
+    let p = RtnParams::fit(x, 8);
+    let amax = x.iter().fold(0.0f32, |a, &v| a.max(v.abs())).max(1e-12);
+    let s = amax / 127.0;
+    let mut max_diff = 0.0f32;
+    for &v in x {
+        let asym = p.dequantize_one(p.quantize_one(v));
+        let sym = ((v / s).round()).clamp(-127.0, 127.0) * s;
+        max_diff = max_diff.max((asym - sym).abs());
+    }
+    max_diff
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::binarize::{quantize_bwa, BwaConfig};
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn setup(rng: &mut Rng, out_f: usize, in_f: usize) -> (BwaLinear, Tensor) {
+        let w = Tensor::from_vec(&[out_f, in_f], rng.normal_vec_f32(out_f * in_f, 0.0, 0.05));
+        let mut x = Tensor::zeros(&[96, in_f]);
+        for v in &mut x.data {
+            *v = rng.normal_f32(0.0, 1.0);
+        }
+        for t in 0..96 {
+            x.data[t * in_f + 5] *= 12.0;
+        }
+        let lin = quantize_bwa(&w, &x, &BwaConfig::default());
+        let xt = Tensor::from_vec(&[4, in_f], rng.normal_vec_f32(4 * in_f, 0.0, 1.0));
+        (lin, xt)
+    }
+
+    #[test]
+    fn binary_path_matches_fake_path() {
+        let mut rng = Rng::new(1);
+        let (lin, xt) = setup(&mut rng, 32, 256);
+        let fake = lin.forward(&xt);
+        let gemm = BwaGemm::prepare(&lin);
+        let binary = gemm.forward(&xt);
+        // Outlier act quant differs (sym int8 vs asym int8) — allow small
+        // relative error; the binary region must match tightly.
+        let err = prop::rel_err(&binary.data, &fake.data);
+        assert!(err < 0.02, "binary vs fake rel err {err}");
+    }
+
+    #[test]
+    fn binary_region_exact_against_reference_popcount_free_math() {
+        // With outliers disabled and balancing off, the packed path must
+        // reproduce the fake path to float tolerance.
+        let mut rng = Rng::new(2);
+        let w = Tensor::from_vec(&[16, 128], rng.normal_vec_f32(16 * 128, 0.0, 0.05));
+        let x = Tensor::from_vec(&[64, 128], rng.normal_vec_f32(64 * 128, 0.0, 1.0));
+        let cfg = BwaConfig {
+            outlier_groups: 0,
+            act: crate::quant::actquant::ActQuantConfig {
+                bits: 4,
+                balance: crate::quant::actquant::BalanceMode::None,
+            },
+            ..BwaConfig::default()
+        };
+        let lin = quantize_bwa(&w, &x, &cfg);
+        let xt = Tensor::from_vec(&[3, 128], rng.normal_vec_f32(3 * 128, 0.0, 1.0));
+        let fake = lin.forward(&xt);
+        let gemm = BwaGemm::prepare(&lin);
+        let binary = gemm.forward(&xt);
+        prop::assert_close(&binary.data, &fake.data, 1e-3, 1e-3).unwrap();
+    }
+
+    #[test]
+    fn packed_acts_shapes() {
+        let mut rng = Rng::new(3);
+        let (lin, xt) = setup(&mut rng, 8, 256);
+        let gemm = BwaGemm::prepare(&lin);
+        let xp = xt.select_cols(&lin.perm);
+        let acts = gemm.pack_activations(&xp);
+        assert_eq!(acts.tokens, 4);
+        assert_eq!(acts.nplanes, 4);
+        assert_eq!(acts.words_per_plane, lin.n_norm / 64);
+        assert_eq!(acts.n_out, 64);
+        assert_eq!(acts.x_out_q.len(), 4 * 64);
+    }
+
+    #[test]
+    fn wsum_matches_w_hat() {
+        let mut rng = Rng::new(4);
+        let (lin, _) = setup(&mut rng, 8, 128);
+        let gemm = BwaGemm::prepare(&lin);
+        for j in 0..8 {
+            let direct: f32 = lin.w_hat.row(j)[..lin.n_norm].iter().sum();
+            assert!((gemm.wsum[j] - direct).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn prop_binary_matches_fake_across_shapes() {
+        prop::check("bwa-gemm-match", 6, 6, |rng| {
+            let out_f = 8 + 8 * rng.below(3);
+            let in_f = 128 + 64 * rng.below(3);
+            let w = Tensor::from_vec(&[out_f, in_f], rng.normal_vec_f32(out_f * in_f, 0.0, 0.1));
+            let x = Tensor::from_vec(&[40, in_f], rng.normal_vec_f32(40 * in_f, 0.0, 1.0));
+            let lin = quantize_bwa(&w, &x, &BwaConfig::default());
+            let xt = Tensor::from_vec(&[2, in_f], rng.normal_vec_f32(2 * in_f, 0.0, 1.0));
+            let fake = lin.forward(&xt);
+            let binary = BwaGemm::prepare(&lin).forward(&xt);
+            let err = prop::rel_err(&binary.data, &fake.data);
+            if err < 0.05 {
+                Ok(())
+            } else {
+                Err(format!("rel err {err} at {out_f}x{in_f}"))
+            }
+        });
+    }
+}

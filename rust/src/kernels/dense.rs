@@ -1,0 +1,272 @@
+//! Dense GEMM kernels: the f32 path used by the model forward, and the
+//! INT8/INT4 reference kernels that stand in for CUTLASS in the Figure 3/4
+//! speed comparisons (see DESIGN.md §2 for the substitution argument).
+//!
+//! Weight convention everywhere: `w` is `[out_features, in_features]`
+//! (torch `Linear`), activations `x` are `[tokens, in_features]`, output
+//! is `[tokens, out_features]` — so the inner loop is a dot product of two
+//! contiguous rows, which is the cache-friendly layout for all kernels.
+
+use crate::tensor::Tensor;
+
+/// f32 GEMM, y = x·wᵀ. Blocked over k with 4-way unrolled accumulators;
+/// this is the model's FP hot path (see EXPERIMENTS.md §Perf).
+pub fn sgemm_wt(x: &Tensor, w: &Tensor) -> Tensor {
+    let (m, k) = x.dims2();
+    let (n, k2) = w.dims2();
+    assert_eq!(k, k2, "sgemm_wt inner-dim mismatch");
+    let mut y = Tensor::zeros(&[m, n]);
+    for t in 0..m {
+        let xrow = x.row(t);
+        let yrow = y.row_mut(t);
+        for j in 0..n {
+            yrow[j] = dot_f32(xrow, w.row(j));
+        }
+    }
+    y
+}
+
+/// Unrolled f32 dot product. The compiler autovectorizes the 8-lane form.
+#[inline]
+pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 8;
+    let mut acc = [0.0f32; 8];
+    for c in 0..chunks {
+        let ai = &a[c * 8..c * 8 + 8];
+        let bi = &b[c * 8..c * 8 + 8];
+        for l in 0..8 {
+            acc[l] += ai[l] * bi[l];
+        }
+    }
+    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]) + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
+    for i in chunks * 8..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// INT8 GEMM (CUTLASS W8A8 stand-in): i8 operands, i32 accumulate,
+/// per-row/per-token scales applied at the epilogue.
+pub struct Int8Gemm {
+    pub n: usize,
+    pub k: usize,
+    pub w: Vec<i8>,
+    /// per-output-row weight scale
+    pub wscale: Vec<f32>,
+}
+
+impl Int8Gemm {
+    /// Symmetric per-row quantization of w [n, k].
+    pub fn prepare(w: &Tensor) -> Int8Gemm {
+        let (n, k) = w.dims2();
+        let mut q = Vec::with_capacity(n * k);
+        let mut wscale = Vec::with_capacity(n);
+        for j in 0..n {
+            let row = w.row(j);
+            let amax = row.iter().fold(0.0f32, |a, &x| a.max(x.abs())).max(1e-12);
+            let s = amax / 127.0;
+            for &x in row {
+                q.push(((x / s).round() as i32).clamp(-127, 127) as i8);
+            }
+            wscale.push(s);
+        }
+        Int8Gemm { n, k, w: q, wscale }
+    }
+
+    /// y = x̂·ŵᵀ with x quantized symmetric per token to i8.
+    pub fn forward(&self, x: &Tensor) -> Tensor {
+        let (m, k) = x.dims2();
+        assert_eq!(k, self.k);
+        let mut y = Tensor::zeros(&[m, self.n]);
+        let mut xq = vec![0i8; k];
+        for t in 0..m {
+            let xrow = x.row(t);
+            let amax = xrow.iter().fold(0.0f32, |a, &v| a.max(v.abs())).max(1e-12);
+            let xs = amax / 127.0;
+            for (i, &v) in xrow.iter().enumerate() {
+                xq[i] = ((v / xs).round() as i32).clamp(-127, 127) as i8;
+            }
+            let yrow = y.row_mut(t);
+            for j in 0..self.n {
+                let wrow = &self.w[j * k..(j + 1) * k];
+                yrow[j] = dot_i8(&xq, wrow) as f32 * xs * self.wscale[j];
+            }
+        }
+        y
+    }
+}
+
+/// i8 dot with i32 accumulate, 8-way unrolled (the CPU analogue of the
+/// dp4a/IMMA path a CUTLASS INT8 kernel uses).
+#[inline]
+pub fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 8;
+    let mut acc = [0i32; 8];
+    for c in 0..chunks {
+        let ai = &a[c * 8..c * 8 + 8];
+        let bi = &b[c * 8..c * 8 + 8];
+        for l in 0..8 {
+            acc[l] += (ai[l] as i32) * (bi[l] as i32);
+        }
+    }
+    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]) + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
+    for i in chunks * 8..n {
+        s += (a[i] as i32) * (b[i] as i32);
+    }
+    s
+}
+
+/// INT4 GEMM (CUTLASS W4A4 stand-in): operands packed two per byte,
+/// unpacked in registers in the inner loop — mirroring how a 4-bit tensor
+/// core kernel pays an unpack/convert cost per fragment.
+pub struct Int4Gemm {
+    pub n: usize,
+    pub k: usize,
+    /// packed nibbles: element i of row j at byte [j*k/2 + i/2]
+    pub w: Vec<u8>,
+    pub wscale: Vec<f32>,
+}
+
+impl Int4Gemm {
+    pub fn prepare(w: &Tensor) -> Int4Gemm {
+        let (n, k) = w.dims2();
+        assert!(k % 2 == 0);
+        let mut packed = vec![0u8; n * k / 2];
+        let mut wscale = Vec::with_capacity(n);
+        for j in 0..n {
+            let row = w.row(j);
+            let amax = row.iter().fold(0.0f32, |a, &x| a.max(x.abs())).max(1e-12);
+            let s = amax / 7.0;
+            for i in 0..k {
+                let q = ((row[i] / s).round() as i32).clamp(-7, 7);
+                let nib = (q + 8) as u8; // offset-binary nibble
+                let byte = &mut packed[j * k / 2 + i / 2];
+                if i % 2 == 0 {
+                    *byte = (*byte & 0xF0) | nib;
+                } else {
+                    *byte = (*byte & 0x0F) | (nib << 4);
+                }
+            }
+            wscale.push(s);
+        }
+        Int4Gemm {
+            n,
+            k,
+            w: packed,
+            wscale,
+        }
+    }
+
+    pub fn forward(&self, x: &Tensor) -> Tensor {
+        let (m, k) = x.dims2();
+        assert_eq!(k, self.k);
+        let mut y = Tensor::zeros(&[m, self.n]);
+        let mut xq = vec![0i8; k];
+        for t in 0..m {
+            let xrow = x.row(t);
+            let amax = xrow.iter().fold(0.0f32, |a, &v| a.max(v.abs())).max(1e-12);
+            let xs = amax / 7.0;
+            for (i, &v) in xrow.iter().enumerate() {
+                xq[i] = ((v / xs).round() as i32).clamp(-7, 7) as i8;
+            }
+            let yrow = y.row_mut(t);
+            for j in 0..self.n {
+                let wrow = &self.w[j * k / 2..(j + 1) * k / 2];
+                let mut acc = 0i32;
+                for (b, &byte) in wrow.iter().enumerate() {
+                    let lo = (byte & 0x0F) as i32 - 8;
+                    let hi = (byte >> 4) as i32 - 8;
+                    acc += lo * xq[2 * b] as i32 + hi * xq[2 * b + 1] as i32;
+                }
+                yrow[j] = acc as f32 * xs * self.wscale[j];
+            }
+        }
+        y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::matmul_wt;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn rand_t(rng: &mut Rng, shape: &[usize], std: f32) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor::from_vec(shape, rng.normal_vec_f32(n, 0.0, std))
+    }
+
+    #[test]
+    fn sgemm_matches_naive() {
+        let mut rng = Rng::new(1);
+        for (m, k, n) in [(1, 8, 4), (3, 65, 17), (5, 256, 32)] {
+            let x = rand_t(&mut rng, &[m, k], 1.0);
+            let w = rand_t(&mut rng, &[n, k], 1.0);
+            let fast = sgemm_wt(&x, &w);
+            let slow = matmul_wt(&x, &w);
+            prop::assert_close(&fast.data, &slow.data, 1e-4, 1e-5).unwrap();
+        }
+    }
+
+    #[test]
+    fn int8_gemm_close_to_fp() {
+        let mut rng = Rng::new(2);
+        let x = rand_t(&mut rng, &[4, 128], 1.0);
+        let w = rand_t(&mut rng, &[32, 128], 0.1);
+        let g = Int8Gemm::prepare(&w);
+        let y = g.forward(&x);
+        let want = matmul_wt(&x, &w);
+        let err = prop::rel_err(&y.data, &want.data);
+        assert!(err < 0.02, "int8 err {err}");
+    }
+
+    #[test]
+    fn int4_gemm_coarser_than_int8() {
+        let mut rng = Rng::new(3);
+        let x = rand_t(&mut rng, &[4, 128], 1.0);
+        let w = rand_t(&mut rng, &[32, 128], 0.1);
+        let want = matmul_wt(&x, &w);
+        let e8 = prop::rel_err(&Int8Gemm::prepare(&w).forward(&x).data, &want.data);
+        let e4 = prop::rel_err(&Int4Gemm::prepare(&w).forward(&x).data, &want.data);
+        assert!(e4 > e8, "int4 {e4} should be coarser than int8 {e8}");
+        assert!(e4 < 0.2, "int4 err {e4} still sane");
+    }
+
+    #[test]
+    fn int4_pack_roundtrip() {
+        let mut rng = Rng::new(4);
+        let w = rand_t(&mut rng, &[3, 16], 0.5);
+        let g = Int4Gemm::prepare(&w);
+        // unpack and compare against direct quantization
+        for j in 0..3 {
+            let s = g.wscale[j];
+            for i in 0..16 {
+                let byte = g.w[j * 8 + i / 2];
+                let nib = if i % 2 == 0 { byte & 0x0F } else { byte >> 4 } as i32 - 8;
+                let want = ((w.row(j)[i] / s).round() as i32).clamp(-7, 7);
+                assert_eq!(nib, want, "({j},{i})");
+            }
+        }
+    }
+
+    #[test]
+    fn prop_dot_consistency() {
+        prop::check("dot-f32", 5, 30, |rng| {
+            let n = 1 + rng.below(300);
+            let a = rng.normal_vec_f32(n, 0.0, 1.0);
+            let b = rng.normal_vec_f32(n, 0.0, 1.0);
+            let fast = dot_f32(&a, &b);
+            let slow: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            if (fast - slow).abs() < 1e-3 + 1e-4 * slow.abs() {
+                Ok(())
+            } else {
+                Err(format!("{fast} vs {slow} (n={n})"))
+            }
+        });
+    }
+}

@@ -1,0 +1,8 @@
+//! Compute kernels.
+//!
+//! - [`dense`] — f32 GEMM (model hot path) and INT8/INT4 GEMMs that stand
+//!   in for the CUTLASS kernels of Figures 3/4;
+//! - [`bwa_gemm`] — the paper's W(1+1)A(1×4) popcount GEMM (Eq. 5–7).
+
+pub mod bwa_gemm;
+pub mod dense;

@@ -1,0 +1,29 @@
+//! # bwa-llm
+//!
+//! Production-style reproduction of *"Achieving Binary Weight and
+//! Activation for LLMs Using Post-Training Quantization"* (ACL Findings
+//! 2025): the W(1+1)A(1×4) post-training quantization framework with
+//! Hessian-aware EM weight binarization, binarized-residual activation
+//! decomposition, and a popcount binary GEMM hot path — plus every
+//! substrate it needs (baseline quantizers, a LLaMA-like inference stack,
+//! synthetic evaluation corpora, a PJRT runtime for JAX/Pallas-lowered
+//! artifacts, and a batching serving coordinator).
+//!
+//! Layers (see DESIGN.md):
+//! - L1: Pallas kernel (python, build time) — `python/compile/kernels/`
+//! - L2: JAX model (python, build time) — `python/compile/model.py`
+//! - L3: this crate — quantization, kernels, serving; Python never runs
+//!   on the request path.
+
+pub mod baselines;
+pub mod coordinator;
+pub mod data;
+pub mod exps;
+pub mod eval;
+pub mod kernels;
+pub mod model;
+pub mod linalg;
+pub mod quant;
+pub mod runtime;
+pub mod tensor;
+pub mod util;

@@ -1,0 +1,425 @@
+//! Dense f64 linear algebra substrate.
+//!
+//! Algorithm 1 needs `H = 2XXᵀ`, a damped inverse, and its Cholesky factor
+//! (`Hᶜ = Cholesky((H + λI)⁻¹)` — upper-triangular, as in GPTQ). No BLAS /
+//! nalgebra is reachable offline, so this module implements the small set
+//! of dense routines required: matmul, Cholesky (lower), triangular
+//! solves, and SPD inversion via Cholesky.
+//!
+//! All matrices are row-major `Mat { rows, cols, data }` over f64 —
+//! quantization math is done in f64 for stability, model inference in f32.
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Self { rows, cols, data }
+    }
+
+    pub fn from_f32(rows: usize, cols: usize, data: &[f32]) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Self {
+            rows,
+            cols,
+            data: data.iter().map(|&x| x as f64).collect(),
+        }
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f64] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f64] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                t[(c, r)] = self[(r, c)];
+            }
+        }
+        t
+    }
+
+    /// C = A · B.
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let mut out = Mat::zeros(self.rows, other.cols);
+        // ikj loop order for cache-friendliness on row-major data.
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self[(i, k)];
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = other.row(k);
+                let orow = out.row_mut(i);
+                for j in 0..other.cols {
+                    orow[j] += a * brow[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// Gram matrix XᵀX for row-major X (rows = samples, cols = features).
+    /// This is the `XXᵀ` of the paper, which treats tokens as columns.
+    pub fn gram(&self) -> Mat {
+        let n = self.cols;
+        let mut g = Mat::zeros(n, n);
+        for r in 0..self.rows {
+            let row = self.row(r);
+            for i in 0..n {
+                let xi = row[i];
+                if xi == 0.0 {
+                    continue;
+                }
+                let grow = g.row_mut(i);
+                for j in i..n {
+                    grow[j] += xi * row[j];
+                }
+            }
+        }
+        // mirror upper to lower
+        for i in 0..n {
+            for j in 0..i {
+                g[(i, j)] = g[(j, i)];
+            }
+        }
+        g
+    }
+
+    pub fn diag(&self) -> Vec<f64> {
+        let n = self.rows.min(self.cols);
+        (0..n).map(|i| self[(i, i)]).collect()
+    }
+
+    pub fn scale_inplace(&mut self, s: f64) {
+        for x in &mut self.data {
+            *x *= s;
+        }
+    }
+
+    pub fn add_diag_inplace(&mut self, lambda: f64) {
+        let n = self.rows.min(self.cols);
+        for i in 0..n {
+            self[(i, i)] += lambda;
+        }
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    /// Symmetric permutation: out = P A Pᵀ where P maps new index i to old
+    /// index perm[i].
+    pub fn permute_sym(&self, perm: &[usize]) -> Mat {
+        assert_eq!(self.rows, self.cols);
+        assert_eq!(perm.len(), self.rows);
+        let n = self.rows;
+        let mut out = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                out[(i, j)] = self[(perm[i], perm[j])];
+            }
+        }
+        out
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+
+    #[inline]
+    fn index(&self, (r, c): (usize, usize)) -> &f64 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &self.data[r * self.cols + c]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (r, c): (usize, usize)) -> &mut f64 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &mut self.data[r * self.cols + c]
+    }
+}
+
+#[derive(Debug)]
+pub struct LinalgError(pub String);
+
+impl std::fmt::Display for LinalgError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "linalg: {}", self.0)
+    }
+}
+
+impl std::error::Error for LinalgError {}
+
+/// Lower-triangular Cholesky factor L with A = L·Lᵀ. A must be SPD (we
+/// return an error on non-positive pivots rather than panicking so callers
+/// can increase damping and retry).
+pub fn cholesky_lower(a: &Mat) -> Result<Mat, LinalgError> {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    let mut l = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a[(i, j)];
+            for k in 0..j {
+                sum -= l[(i, k)] * l[(j, k)];
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    return Err(LinalgError(format!(
+                        "non-positive pivot {sum:.3e} at {i}; increase damping"
+                    )));
+                }
+                l[(i, j)] = sum.sqrt();
+            } else {
+                l[(i, j)] = sum / l[(j, j)];
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Upper-triangular Cholesky: A = UᵀU (U = Lᵀ). GPTQ uses the upper factor
+/// of the *inverse* Hessian.
+pub fn cholesky_upper(a: &Mat) -> Result<Mat, LinalgError> {
+    Ok(cholesky_lower(a)?.transpose())
+}
+
+/// Solve L y = b for lower-triangular L.
+pub fn solve_lower(l: &Mat, b: &[f64]) -> Vec<f64> {
+    let n = l.rows;
+    assert_eq!(b.len(), n);
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let mut s = b[i];
+        for k in 0..i {
+            s -= l[(i, k)] * y[k];
+        }
+        y[i] = s / l[(i, i)];
+    }
+    y
+}
+
+/// Solve Lᵀ x = y for lower-triangular L.
+pub fn solve_lower_transpose(l: &Mat, y: &[f64]) -> Vec<f64> {
+    let n = l.rows;
+    assert_eq!(y.len(), n);
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut s = y[i];
+        for k in (i + 1)..n {
+            s -= l[(k, i)] * x[k];
+        }
+        x[i] = s / l[(i, i)];
+    }
+    x
+}
+
+/// Inverse of an SPD matrix via Cholesky (A⁻¹ column by column).
+pub fn spd_inverse(a: &Mat) -> Result<Mat, LinalgError> {
+    let n = a.rows;
+    let l = cholesky_lower(a)?;
+    let mut inv = Mat::zeros(n, n);
+    let mut e = vec![0.0; n];
+    for c in 0..n {
+        e[c] = 1.0;
+        let y = solve_lower(&l, &e);
+        let x = solve_lower_transpose(&l, &y);
+        for r in 0..n {
+            inv[(r, c)] = x[r];
+        }
+        e[c] = 0.0;
+    }
+    Ok(inv)
+}
+
+/// Dampen an SPD-ish matrix until Cholesky succeeds; returns (factor, λ
+/// actually used). `lambda0` is relative to mean diagonal, per GPTQ.
+pub fn robust_cholesky_of_inverse(a: &Mat, lambda0: f64) -> (Mat, f64) {
+    let n = a.rows;
+    let mean_diag = a.diag().iter().sum::<f64>() / n.max(1) as f64;
+    let mut lambda = (lambda0 * mean_diag).max(1e-10);
+    for _ in 0..24 {
+        let mut damped = a.clone();
+        damped.add_diag_inplace(lambda);
+        if let Ok(inv) = spd_inverse(&damped) {
+            if let Ok(u) = cholesky_upper(&inv) {
+                return (u, lambda);
+            }
+        }
+        lambda *= 10.0;
+    }
+    // Absolute fallback: identity-scaled factor (quantizer degrades to
+    // unweighted distance; still correct, just less informed).
+    (Mat::eye(n), lambda)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_spd(rng: &mut Rng, n: usize) -> Mat {
+        let mut x = Mat::zeros(n + 4, n);
+        for v in &mut x.data {
+            *v = rng.normal();
+        }
+        let mut g = x.gram();
+        g.add_diag_inplace(0.5);
+        g
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Rng::new(1);
+        let mut a = Mat::zeros(5, 5);
+        for v in &mut a.data {
+            *v = rng.normal();
+        }
+        let i = Mat::eye(5);
+        assert_eq!(a.matmul(&i).data, a.data);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Mat::from_rows(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let b = Mat::from_rows(3, 2, vec![7.0, 8.0, 9.0, 10.0, 11.0, 12.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![58.0, 64.0, 139.0, 154.0]);
+    }
+
+    #[test]
+    fn gram_matches_explicit() {
+        let mut rng = Rng::new(2);
+        let mut x = Mat::zeros(7, 4);
+        for v in &mut x.data {
+            *v = rng.normal();
+        }
+        let g = x.gram();
+        let g2 = x.transpose().matmul(&x);
+        for (a, b) in g.data.iter().zip(g2.data.iter()) {
+            assert!((a - b).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn cholesky_roundtrip() {
+        let mut rng = Rng::new(3);
+        let a = random_spd(&mut rng, 12);
+        let l = cholesky_lower(&a).unwrap();
+        let back = l.matmul(&l.transpose());
+        for (x, y) in a.data.iter().zip(back.data.iter()) {
+            assert!((x - y).abs() < 1e-8, "{x} vs {y}");
+        }
+        // factor is lower-triangular
+        for i in 0..12 {
+            for j in (i + 1)..12 {
+                assert_eq!(l[(i, j)], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Mat::from_rows(2, 2, vec![1.0, 2.0, 2.0, 1.0]); // eigenvalues 3, -1
+        assert!(cholesky_lower(&a).is_err());
+    }
+
+    #[test]
+    fn triangular_solves() {
+        let mut rng = Rng::new(4);
+        let a = random_spd(&mut rng, 9);
+        let l = cholesky_lower(&a).unwrap();
+        let b: Vec<f64> = (0..9).map(|_| rng.normal()).collect();
+        let y = solve_lower(&l, &b);
+        let x = solve_lower_transpose(&l, &y);
+        // check A x = b
+        for i in 0..9 {
+            let got: f64 = (0..9).map(|j| a[(i, j)] * x[j]).sum();
+            assert!((got - b[i]).abs() < 1e-8, "row {i}: {got} vs {}", b[i]);
+        }
+    }
+
+    #[test]
+    fn spd_inverse_is_inverse() {
+        let mut rng = Rng::new(5);
+        let a = random_spd(&mut rng, 10);
+        let inv = spd_inverse(&a).unwrap();
+        let prod = a.matmul(&inv);
+        for i in 0..10 {
+            for j in 0..10 {
+                let expect = if i == j { 1.0 } else { 0.0 };
+                assert!((prod[(i, j)] - expect).abs() < 1e-7);
+            }
+        }
+    }
+
+    #[test]
+    fn robust_cholesky_handles_singular() {
+        // Rank-deficient Gram (more features than samples).
+        let mut rng = Rng::new(6);
+        let mut x = Mat::zeros(3, 8);
+        for v in &mut x.data {
+            *v = rng.normal();
+        }
+        let g = x.gram();
+        let (u, lambda) = robust_cholesky_of_inverse(&g, 0.01);
+        assert_eq!(u.rows, 8);
+        assert!(lambda > 0.0);
+        // upper-triangular
+        for i in 0..8 {
+            for j in 0..i {
+                assert_eq!(u[(i, j)], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn permute_sym_roundtrip() {
+        let mut rng = Rng::new(7);
+        let a = random_spd(&mut rng, 6);
+        let perm = vec![3, 1, 5, 0, 4, 2];
+        let p = a.permute_sym(&perm);
+        // inverse permutation
+        let mut inv = vec![0usize; 6];
+        for (new, &old) in perm.iter().enumerate() {
+            inv[old] = new;
+        }
+        let back = p.permute_sym(&inv);
+        for (x, y) in a.data.iter().zip(back.data.iter()) {
+            assert!((x - y).abs() < 1e-12);
+        }
+    }
+}

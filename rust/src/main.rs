@@ -1,0 +1,214 @@
+//! `bwa` — CLI entry point for the BWA-LLM reproduction.
+//!
+//! Subcommands:
+//! - `datagen`  — write the synthetic corpora to artifacts/data/ (consumed
+//!                by the JAX trainer; single source of truth is Rust).
+//! - `quantize` — quantize a trained checkpoint with any method and
+//!                report layer statistics.
+//! - `eval`     — perplexity + zero-shot evaluation of a (model, method).
+//! - `bench`    — regenerate a paper table/figure (see DESIGN.md §5).
+//! - `serve`    — run the batching coordinator over the PJRT runtime.
+
+use bwa_llm::baselines;
+use bwa_llm::data::corpus::CorpusSpec;
+use bwa_llm::eval::{evaluate, EvalBudget};
+use bwa_llm::model::checkpoint::Checkpoint;
+use bwa_llm::model::{quantize_model, Transformer};
+use bwa_llm::util::cli::{Args, Spec};
+use std::path::PathBuf;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match Args::parse(&argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let code = match args.subcommand.as_str() {
+        "datagen" => cmd_datagen(&args),
+        "quantize" => cmd_quantize(&args),
+        "eval" => cmd_eval(&args),
+        "bench" => bwa_llm::exps::cmd_bench(&args),
+        "serve" => bwa_llm::coordinator::cmd_serve(&args),
+        "" | "help" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown subcommand '{other}'\n");
+            print_help();
+            std::process::exit(2);
+        }
+    }
+    .map(|_| 0)
+    .unwrap_or_else(|e| {
+        eprintln!("error: {e}");
+        1
+    });
+    std::process::exit(code);
+}
+
+fn print_help() {
+    println!(
+        "bwa — W(1+1)A(1x4) post-training quantization for LLMs (ACL Findings 2025 repro)\n\n\
+         subcommands:\n\
+         \x20 datagen   --out artifacts/data [--tokens N]\n\
+         \x20 quantize  --model artifacts/models/tiny.bin --method bwa\n\
+         \x20 eval      --model artifacts/models/tiny.bin --method bwa [--quick]\n\
+         \x20 bench     --exp fig1|table1|table2|table3|table4|table5|table6|table7|table9|fig3|fig4 [--quick]\n\
+         \x20 serve     --model artifacts/transformer_fp.hlo.txt [--requests N] [--batch B]\n\n\
+         methods: {}",
+        baselines::METHOD_NAMES.join(", ")
+    );
+}
+
+static DATAGEN_SPEC: Spec = Spec {
+    name: "datagen",
+    about: "generate synthetic corpora into artifacts/data/",
+    flags: &[
+        ("out", "artifacts/data", "output directory"),
+        ("train-tokens", "400000", "training tokens (wiki flavor)"),
+        ("eval-tokens", "8192", "eval tokens per flavor"),
+    ],
+    switches: &[],
+};
+
+fn cmd_datagen(args: &Args) -> Result<(), String> {
+    args.validate(&DATAGEN_SPEC).map_err(|e| e.to_string())?;
+    if args.wants_help() {
+        println!("{}", DATAGEN_SPEC.help());
+        return Ok(());
+    }
+    let out = PathBuf::from(args.str_or("out", "artifacts/data"));
+    let train_tokens = args.usize_or("train-tokens", 400_000).map_err(|e| e.to_string())?;
+    let eval_tokens = args.usize_or("eval-tokens", 8192).map_err(|e| e.to_string())?;
+    std::fs::create_dir_all(&out).map_err(|e| e.to_string())?;
+
+    for spec in [CorpusSpec::wiki(), CorpusSpec::ptb(), CorpusSpec::c4()] {
+        // train split (full size only for wiki, the training corpus; the
+        // others get a smaller train stream used for corpus-mix variants)
+        let n_train = if spec.name == "wiki" {
+            train_tokens
+        } else {
+            train_tokens / 2
+        };
+        let train = bwa_llm::data::corpus::train_split(&spec, n_train);
+        let eval = bwa_llm::data::corpus::eval_split(&spec, eval_tokens);
+        let ptrain = out.join(format!("{}_train.tok", spec.name));
+        let peval = out.join(format!("{}_eval.tok", spec.name));
+        bwa_llm::data::save_tokens(&ptrain, &train).map_err(|e| e.to_string())?;
+        bwa_llm::data::save_tokens(&peval, &eval).map_err(|e| e.to_string())?;
+        println!(
+            "wrote {} ({} tokens) and {} ({} tokens)",
+            ptrain.display(),
+            train.len(),
+            peval.display(),
+            eval.len()
+        );
+    }
+    Ok(())
+}
+
+static QUANTIZE_SPEC: Spec = Spec {
+    name: "quantize",
+    about: "quantize a checkpoint and print layer statistics",
+    flags: &[
+        ("model", "artifacts/models/tiny.bin", "checkpoint path"),
+        ("method", "bwa", "quantization method (see help for list)"),
+        ("calib-seqs", "16", "calibration sequences"),
+        ("calib-len", "96", "calibration sequence length"),
+        ("seed", "17", "calibration sampling seed"),
+    ],
+    switches: &[],
+};
+
+/// Shared model+method loading used by quantize/eval.
+pub fn load_quantized(
+    model_path: &str,
+    method: &str,
+    calib_seqs: usize,
+    calib_len: usize,
+    seed: u64,
+) -> Result<(Checkpoint, Transformer), String> {
+    let ck = Checkpoint::load(&PathBuf::from(model_path)).map_err(|e| e.to_string())?;
+    let q = baselines::by_name(method)
+        .ok_or_else(|| format!("unknown method '{method}' (have: {:?})", baselines::METHOD_NAMES))?;
+    let train = bwa_llm::data::corpus::train_split(&CorpusSpec::wiki(), 200_000);
+    let calib = bwa_llm::data::calibration_windows(&train, calib_seqs, calib_len, seed);
+    let kv = if method == "fp16" { None } else { Some(4) };
+    let model = quantize_model(&ck, q.as_ref(), &calib, kv).map_err(|e| e.to_string())?;
+    Ok((ck, model))
+}
+
+fn cmd_quantize(args: &Args) -> Result<(), String> {
+    args.validate(&QUANTIZE_SPEC).map_err(|e| e.to_string())?;
+    if args.wants_help() {
+        println!("{}", QUANTIZE_SPEC.help());
+        return Ok(());
+    }
+    let model_path = args.str_or("model", "artifacts/models/tiny.bin");
+    let method = args.str_or("method", "bwa");
+    let t0 = std::time::Instant::now();
+    let (ck, model) = load_quantized(
+        model_path,
+        method,
+        args.usize_or("calib-seqs", 16).map_err(|e| e.to_string())?,
+        args.usize_or("calib-len", 96).map_err(|e| e.to_string())?,
+        args.u64_or("seed", 17).map_err(|e| e.to_string())?,
+    )?;
+    println!(
+        "quantized {} with {method} in {:.1}s",
+        ck.config.name,
+        t0.elapsed().as_secs_f64()
+    );
+    println!("  params:            {}", ck.config.param_count());
+    println!("  mean weight bits:  {:.2}", model.mean_weight_bits());
+    println!("  model bytes:       {}", model.bytes());
+    let fp = Transformer::fp_from_checkpoint(&ck).map_err(|e| e.to_string())?;
+    println!(
+        "  compression:       {:.2}x vs FP16",
+        fp.bytes() as f64 / model.bytes() as f64
+    );
+    Ok(())
+}
+
+static EVAL_SPEC: Spec = Spec {
+    name: "eval",
+    about: "perplexity + zero-shot evaluation",
+    flags: &[
+        ("model", "artifacts/models/tiny.bin", "checkpoint path"),
+        ("method", "fp16", "quantization method"),
+        ("seed", "17", "seed"),
+    ],
+    switches: &[("quick", "small evaluation budget")],
+};
+
+fn cmd_eval(args: &Args) -> Result<(), String> {
+    args.validate(&EVAL_SPEC).map_err(|e| e.to_string())?;
+    if args.wants_help() {
+        println!("{}", EVAL_SPEC.help());
+        return Ok(());
+    }
+    let model_path = args.str_or("model", "artifacts/models/tiny.bin");
+    let method = args.str_or("method", "fp16");
+    let seed = args.u64_or("seed", 17).map_err(|e| e.to_string())?;
+    let budget = if args.switch("quick") {
+        EvalBudget::quick()
+    } else {
+        EvalBudget::standard()
+    };
+    let (_, model) = load_quantized(model_path, method, 16, 96, seed)?;
+    let r = evaluate(&model, method, &budget, seed);
+    let mut t = bwa_llm::eval::report::Table::new(
+        &format!("eval {model_path} / {method}"),
+        &["Wiki", "PTB", "C4", "PIQA*", "ARC-E*", "ARC-C*", "BoolQ*", "Hella*", "Wino*", "Avg"],
+    );
+    let mut cells: Vec<f64> = r.ppl.iter().map(|(_, p)| *p).collect();
+    cells.extend(r.zeroshot.iter().map(|(_, a)| a * 100.0));
+    cells.push(r.zs_avg * 100.0);
+    t.row_f(&r.method, &cells, 2);
+    println!("{}", t.render());
+    Ok(())
+}

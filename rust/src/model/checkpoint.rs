@@ -1,0 +1,229 @@
+//! Checkpoint I/O — the interchange format between the JAX trainer
+//! (`python/compile/train.py`) and the Rust runtime.
+//!
+//! Layout (little endian):
+//! ```text
+//! magic   8 bytes  "BWACKPT1"
+//! hdr_len u32      JSON header byte length
+//! header  JSON     {"config": {...}, "tensors": [{"name","shape","offset"}]}
+//! data    f32[]    tensor payloads, contiguous, in header order
+//! ```
+//! Offsets are element offsets into the f32 payload region.
+
+use crate::model::config::ModelConfig;
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+pub const MAGIC: &[u8; 8] = b"BWACKPT1";
+
+#[derive(Debug)]
+pub struct Checkpoint {
+    pub config: ModelConfig,
+    pub tensors: BTreeMap<String, Tensor>,
+}
+
+#[derive(Debug)]
+pub struct CkptError(pub String);
+
+impl std::fmt::Display for CkptError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "checkpoint: {}", self.0)
+    }
+}
+
+impl std::error::Error for CkptError {}
+
+fn err(msg: impl Into<String>) -> CkptError {
+    CkptError(msg.into())
+}
+
+impl Checkpoint {
+    pub fn save(&self, path: &Path) -> Result<(), CkptError> {
+        let mut entries = Vec::new();
+        let mut offset = 0usize;
+        for (name, t) in &self.tensors {
+            entries.push(Json::obj(vec![
+                ("name", Json::str(name.clone())),
+                (
+                    "shape",
+                    Json::Arr(t.shape.iter().map(|&d| Json::num(d as f64)).collect()),
+                ),
+                ("offset", Json::num(offset as f64)),
+            ]));
+            offset += t.numel();
+        }
+        let header = Json::obj(vec![
+            ("config", self.config.to_json()),
+            ("tensors", Json::Arr(entries)),
+        ])
+        .to_string();
+
+        let mut f = std::fs::File::create(path).map_err(|e| err(e.to_string()))?;
+        f.write_all(MAGIC).map_err(|e| err(e.to_string()))?;
+        f.write_all(&(header.len() as u32).to_le_bytes())
+            .map_err(|e| err(e.to_string()))?;
+        f.write_all(header.as_bytes()).map_err(|e| err(e.to_string()))?;
+        for (_, t) in &self.tensors {
+            let bytes: Vec<u8> = t.data.iter().flat_map(|x| x.to_le_bytes()).collect();
+            f.write_all(&bytes).map_err(|e| err(e.to_string()))?;
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Checkpoint, CkptError> {
+        let mut f = std::fs::File::open(path)
+            .map_err(|e| err(format!("open {}: {e}", path.display())))?;
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic).map_err(|e| err(e.to_string()))?;
+        if &magic != MAGIC {
+            return Err(err("bad magic (not a BWACKPT1 checkpoint)"));
+        }
+        let mut len4 = [0u8; 4];
+        f.read_exact(&mut len4).map_err(|e| err(e.to_string()))?;
+        let hdr_len = u32::from_le_bytes(len4) as usize;
+        let mut hdr = vec![0u8; hdr_len];
+        f.read_exact(&mut hdr).map_err(|e| err(e.to_string()))?;
+        let header = Json::parse(
+            std::str::from_utf8(&hdr).map_err(|_| err("header not utf8"))?,
+        )
+        .map_err(|e| err(format!("header json: {e}")))?;
+
+        let config = ModelConfig::from_json(header.get("config"));
+        let mut payload = Vec::new();
+        f.read_to_end(&mut payload).map_err(|e| err(e.to_string()))?;
+        if payload.len() % 4 != 0 {
+            return Err(err("payload not a multiple of 4 bytes"));
+        }
+        let floats: Vec<f32> = payload
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+
+        let mut tensors = BTreeMap::new();
+        for e in header
+            .get("tensors")
+            .as_arr()
+            .ok_or_else(|| err("missing tensors"))?
+        {
+            let name = e.str_or("name", "").to_string();
+            let shape: Vec<usize> = e
+                .get("shape")
+                .as_arr()
+                .ok_or_else(|| err("missing shape"))?
+                .iter()
+                .map(|d| d.as_usize().unwrap_or(0))
+                .collect();
+            let offset = e.usize_or("offset", 0);
+            let n: usize = shape.iter().product();
+            if offset + n > floats.len() {
+                return Err(err(format!("tensor {name} out of bounds")));
+            }
+            tensors.insert(
+                name,
+                Tensor::from_vec(&shape, floats[offset..offset + n].to_vec()),
+            );
+        }
+        Ok(Checkpoint { config, tensors })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor, CkptError> {
+        self.tensors
+            .get(name)
+            .ok_or_else(|| err(format!("missing tensor '{name}'")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn save_load_roundtrip() {
+        let mut rng = Rng::new(1);
+        let dir = std::env::temp_dir().join("bwa_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("rt.bin");
+        let mut tensors = BTreeMap::new();
+        tensors.insert(
+            "embed".to_string(),
+            Tensor::from_vec(&[8, 4], rng.normal_vec_f32(32, 0.0, 1.0)),
+        );
+        tensors.insert(
+            "layer0.wq".to_string(),
+            Tensor::from_vec(&[4, 4], rng.normal_vec_f32(16, 0.0, 1.0)),
+        );
+        let ck = Checkpoint {
+            config: ModelConfig::tiny(),
+            tensors,
+        };
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.config, ck.config);
+        assert_eq!(back.tensors.len(), 2);
+        assert_eq!(back.get("embed").unwrap().data, ck.get("embed").unwrap().data);
+        assert_eq!(
+            back.get("layer0.wq").unwrap().shape,
+            ck.get("layer0.wq").unwrap().shape
+        );
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("bwa_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bin");
+        std::fs::write(&path, b"NOTACKPTxxxx").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn missing_tensor_errors() {
+        let ck = Checkpoint {
+            config: ModelConfig::tiny(),
+            tensors: BTreeMap::new(),
+        };
+        assert!(ck.get("nope").is_err());
+    }
+}
+
+#[cfg(test)]
+mod failure_tests {
+    use super::*;
+
+    #[test]
+    fn truncated_payload_is_rejected() {
+        let dir = std::env::temp_dir().join("bwa_ckpt_fail");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trunc.bin");
+        // valid magic + header pointing past the payload
+        let header = r#"{"config":{},"tensors":[{"name":"w","shape":[4,4],"offset":0}]}"#;
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&(header.len() as u32).to_le_bytes());
+        bytes.extend_from_slice(header.as_bytes());
+        bytes.extend_from_slice(&[0u8; 8]); // only 2 floats, need 16
+        std::fs::write(&path, bytes).unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn corrupt_header_is_rejected() {
+        let dir = std::env::temp_dir().join("bwa_ckpt_fail");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("hdr.bin");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&(5u32).to_le_bytes());
+        bytes.extend_from_slice(b"{nope");
+        std::fs::write(&path, bytes).unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,120 @@
+//! Model configuration — LLaMA-style hyperparameters, JSON-serializable
+//! so the Python trainer and the Rust runtime agree on one source of truth.
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub rope_theta: f64,
+    pub rmsnorm_eps: f64,
+}
+
+impl ModelConfig {
+    /// The "7B-analog" tiny model (see DESIGN.md §2 for scaling).
+    /// d_model and d_ff are multiples of the 64-channel group size.
+    pub fn tiny() -> Self {
+        Self {
+            name: "tiny".into(),
+            vocab_size: 512,
+            d_model: 192,
+            n_layers: 3,
+            n_heads: 3,
+            d_ff: 512,
+            max_seq: 160,
+            rope_theta: 10000.0,
+            rmsnorm_eps: 1e-5,
+        }
+    }
+
+    /// The "13B-analog": wider + deeper.
+    pub fn tiny_13b() -> Self {
+        Self {
+            name: "tiny-13b".into(),
+            d_model: 256,
+            n_layers: 4,
+            n_heads: 4,
+            d_ff: 640,
+            ..Self::tiny()
+        }
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// Total parameter count (embeddings + blocks + head).
+    pub fn param_count(&self) -> usize {
+        let d = self.d_model;
+        let attn = 4 * d * d;
+        let mlp = 3 * d * self.d_ff;
+        let norms = 2 * d;
+        self.vocab_size * d // embed
+            + self.n_layers * (attn + mlp + norms)
+            + d // final norm
+            + self.vocab_size * d // lm head
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("vocab_size", Json::num(self.vocab_size as f64)),
+            ("d_model", Json::num(self.d_model as f64)),
+            ("n_layers", Json::num(self.n_layers as f64)),
+            ("n_heads", Json::num(self.n_heads as f64)),
+            ("d_ff", Json::num(self.d_ff as f64)),
+            ("max_seq", Json::num(self.max_seq as f64)),
+            ("rope_theta", Json::num(self.rope_theta)),
+            ("rmsnorm_eps", Json::num(self.rmsnorm_eps)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> ModelConfig {
+        ModelConfig {
+            name: j.str_or("name", "tiny").to_string(),
+            vocab_size: j.usize_or("vocab_size", 512),
+            d_model: j.usize_or("d_model", 256),
+            n_layers: j.usize_or("n_layers", 4),
+            n_heads: j.usize_or("n_heads", 4),
+            d_ff: j.usize_or("d_ff", 640),
+            max_seq: j.usize_or("max_seq", 256),
+            rope_theta: j.f64_or("rope_theta", 10000.0),
+            rmsnorm_eps: j.f64_or("rmsnorm_eps", 1e-5),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_roundtrip() {
+        let c = ModelConfig::tiny_13b();
+        let j = c.to_json();
+        let back = ModelConfig::from_json(&Json::parse(&j.to_string()).unwrap());
+        assert_eq!(c, back);
+    }
+
+    #[test]
+    fn head_dim_divides() {
+        let c = ModelConfig::tiny();
+        assert_eq!(c.head_dim() * c.n_heads, c.d_model);
+        let c13 = ModelConfig::tiny_13b();
+        assert_eq!(c13.head_dim() * c13.n_heads, c13.d_model);
+    }
+
+    #[test]
+    fn param_count_sane() {
+        let c = ModelConfig::tiny();
+        let p = c.param_count();
+        // embed 512*192≈98k ×2 + 3 layers × (147k attn + 295k mlp) ≈ 1.5M
+        assert!(p > 1_000_000 && p < 3_000_000, "params {p}");
+    }
+}

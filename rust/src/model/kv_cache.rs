@@ -1,0 +1,206 @@
+//! INT4 KV cache (paper §4 Setup: "For KV caches, we uniformly apply 4
+//! bits quantization to store and load").
+//!
+//! Each appended token vector is RTN-quantized per token (asymmetric,
+//! Eq. 3) and stored as packed nibbles + per-token params. `get` and
+//! `dot`/`axpy` operate on the quantized representation, so the cache
+//! really holds 4-bit state — the batch (non-cached) forward applies the
+//! identical fake quantization, and tests assert the two paths agree.
+
+use crate::quant::rtn::RtnParams;
+
+/// Append-only 4-bit vector store of `d`-dimensional rows.
+#[derive(Clone, Debug)]
+pub struct Kv4Store {
+    pub d: usize,
+    pub len: usize,
+    /// packed nibbles, two per byte, row-major.
+    data: Vec<u8>,
+    params: Vec<RtnParams>,
+}
+
+impl Kv4Store {
+    pub fn new(d: usize) -> Self {
+        assert!(d % 2 == 0, "d must be even for nibble packing");
+        Self {
+            d,
+            len: 0,
+            data: Vec::new(),
+            params: Vec::new(),
+        }
+    }
+
+    /// Quantize and append one row.
+    pub fn push(&mut self, row: &[f32]) {
+        assert_eq!(row.len(), self.d);
+        let p = RtnParams::fit(row, 4);
+        for pair in row.chunks_exact(2) {
+            let lo = p.quantize_one(pair[0]) as u8;
+            let hi = p.quantize_one(pair[1]) as u8;
+            self.data.push(lo | (hi << 4));
+        }
+        self.params.push(p);
+        self.len += 1;
+    }
+
+    /// Dequantize row `t` into `out`.
+    pub fn get(&self, t: usize, out: &mut [f32]) {
+        assert!(t < self.len);
+        assert_eq!(out.len(), self.d);
+        let p = &self.params[t];
+        let bytes = &self.data[t * self.d / 2..(t + 1) * self.d / 2];
+        for (i, &b) in bytes.iter().enumerate() {
+            out[2 * i] = p.dequantize_one((b & 0x0F) as i32);
+            out[2 * i + 1] = p.dequantize_one((b >> 4) as i32);
+        }
+    }
+
+    /// Dot product of row `t` with a query slice (dequantize on the fly).
+    pub fn dot(&self, t: usize, q: &[f32]) -> f32 {
+        debug_assert_eq!(q.len(), self.d);
+        let p = &self.params[t];
+        let bytes = &self.data[t * self.d / 2..(t + 1) * self.d / 2];
+        let mut acc_q = 0.0f32; // Σ q_i · code_i
+        let mut acc_s = 0.0f32; // Σ q_i  (for the zero-point term)
+        for (i, &b) in bytes.iter().enumerate() {
+            let c0 = (b & 0x0F) as f32;
+            let c1 = (b >> 4) as f32;
+            acc_q += q[2 * i] * c0 + q[2 * i + 1] * c1;
+            acc_s += q[2 * i] + q[2 * i + 1];
+        }
+        p.scale * (acc_q - p.zero as f32 * acc_s)
+    }
+
+    /// out += w · row_t (dequantized) — the attention value accumulation.
+    pub fn axpy(&self, t: usize, w: f32, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.d);
+        let p = &self.params[t];
+        let bytes = &self.data[t * self.d / 2..(t + 1) * self.d / 2];
+        for (i, &b) in bytes.iter().enumerate() {
+            out[2 * i] += w * p.dequantize_one((b & 0x0F) as i32);
+            out[2 * i + 1] += w * p.dequantize_one((b >> 4) as i32);
+        }
+    }
+
+    /// Apply the cache's quantization to a row without storing it — the
+    /// batch forward uses this so both paths share one code path.
+    pub fn fake_quantize(row: &mut [f32]) {
+        let p = RtnParams::fit(row, 4);
+        for x in row.iter_mut() {
+            *x = p.dequantize_one(p.quantize_one(*x));
+        }
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.data.len() + self.params.len() * 8
+    }
+}
+
+/// Per-layer K and V stores for one sequence.
+#[derive(Clone, Debug)]
+pub struct LayerKvCache {
+    pub k: Kv4Store,
+    pub v: Kv4Store,
+}
+
+impl LayerKvCache {
+    pub fn new(d: usize) -> Self {
+        Self {
+            k: Kv4Store::new(d),
+            v: Kv4Store::new(d),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.k.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.k.len == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn push_get_matches_fake_quantize() {
+        let mut rng = Rng::new(1);
+        let d = 64;
+        let mut store = Kv4Store::new(d);
+        let rows: Vec<Vec<f32>> = (0..10).map(|_| rng.normal_vec_f32(d, 0.0, 1.0)).collect();
+        for r in &rows {
+            store.push(r);
+        }
+        let mut out = vec![0.0f32; d];
+        for (t, r) in rows.iter().enumerate() {
+            store.get(t, &mut out);
+            let mut fake = r.clone();
+            Kv4Store::fake_quantize(&mut fake);
+            prop::assert_close(&out, &fake, 1e-6, 0.0).unwrap();
+        }
+    }
+
+    #[test]
+    fn dot_matches_dequantized_dot() {
+        let mut rng = Rng::new(2);
+        let d = 64;
+        let mut store = Kv4Store::new(d);
+        let row = rng.normal_vec_f32(d, 0.2, 1.5);
+        store.push(&row);
+        let q = rng.normal_vec_f32(d, 0.0, 1.0);
+        let mut dq = vec![0.0f32; d];
+        store.get(0, &mut dq);
+        let want: f32 = dq.iter().zip(&q).map(|(a, b)| a * b).sum();
+        let got = store.dot(0, &q);
+        assert!((got - want).abs() < 1e-3, "{got} vs {want}");
+    }
+
+    #[test]
+    fn axpy_accumulates() {
+        let mut rng = Rng::new(3);
+        let d = 32;
+        let mut store = Kv4Store::new(d);
+        let r0 = rng.normal_vec_f32(d, 0.0, 1.0);
+        let r1 = rng.normal_vec_f32(d, 0.0, 1.0);
+        store.push(&r0);
+        store.push(&r1);
+        let mut out = vec![0.0f32; d];
+        store.axpy(0, 0.25, &mut out);
+        store.axpy(1, 0.75, &mut out);
+        let mut d0 = vec![0.0f32; d];
+        let mut d1 = vec![0.0f32; d];
+        store.get(0, &mut d0);
+        store.get(1, &mut d1);
+        for i in 0..d {
+            let want = 0.25 * d0[i] + 0.75 * d1[i];
+            assert!((out[i] - want).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn quantization_error_bounded() {
+        let mut rng = Rng::new(4);
+        let d = 64;
+        let mut store = Kv4Store::new(d);
+        let row = rng.normal_vec_f32(d, 0.0, 2.0);
+        store.push(&row);
+        let mut out = vec![0.0f32; d];
+        store.get(0, &mut out);
+        let err = prop::rel_err(&out, &row);
+        assert!(err < 0.1, "int4 kv error {err}");
+    }
+
+    #[test]
+    fn bytes_grows_linearly() {
+        let mut store = Kv4Store::new(64);
+        let row = vec![1.0f32; 64];
+        store.push(&row);
+        let one = store.bytes();
+        store.push(&row);
+        assert_eq!(store.bytes(), 2 * one);
+    }
+}

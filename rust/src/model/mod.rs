@@ -1,0 +1,711 @@
+//! LLaMA-like transformer inference stack with pluggable quantized
+//! linears.
+//!
+//! Architecture (matching the paper's LLAMA target and Figure 2's BWA
+//! attention): token embedding → N × [RMSNorm → MHA(RoPE, INT4 KV) →
+//! residual → RMSNorm → SwiGLU MLP → residual] → RMSNorm → LM head.
+//!
+//! Every projection (`wq wk wv wo gate up down`) is a `Box<dyn
+//! QuantLinear>`, so the same model code runs FP16, the paper's
+//! W(1+1)A(1×4), and every baseline — the evaluation harness swaps the
+//! quantizer, nothing else. Embedding and LM head stay FP (standard PTQ
+//! practice, also what the baselines in the paper do).
+
+pub mod checkpoint;
+pub mod config;
+pub mod kv_cache;
+
+use crate::model::checkpoint::Checkpoint;
+use crate::model::config::ModelConfig;
+use crate::model::kv_cache::{Kv4Store, LayerKvCache};
+use crate::quant::{QuantLinear, Quantizer};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+use crate::util::softmax_inplace;
+
+/// RMSNorm with learned gain.
+pub fn rmsnorm(x: &[f32], gain: &[f32], eps: f64, out: &mut [f32]) {
+    debug_assert_eq!(x.len(), gain.len());
+    let ms = x.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() / x.len() as f64;
+    let inv = 1.0 / (ms + eps).sqrt() as f32;
+    for i in 0..x.len() {
+        out[i] = x[i] * inv * gain[i];
+    }
+}
+
+/// Rotary position embedding applied in place to one [T, d] tensor with
+/// `n_heads` heads (pairs rotated within each head).
+pub fn apply_rope(x: &mut Tensor, n_heads: usize, theta: f64, pos_offset: usize) {
+    let (t_len, d) = x.dims2();
+    let hd = d / n_heads;
+    for t in 0..t_len {
+        let pos = (t + pos_offset) as f64;
+        let row = x.row_mut(t);
+        for h in 0..n_heads {
+            let base = h * hd;
+            for i in 0..hd / 2 {
+                let freq = 1.0 / theta.powf(2.0 * i as f64 / hd as f64);
+                let angle = pos * freq;
+                let (sin, cos) = (angle.sin() as f32, angle.cos() as f32);
+                let a = row[base + 2 * i];
+                let b = row[base + 2 * i + 1];
+                row[base + 2 * i] = a * cos - b * sin;
+                row[base + 2 * i + 1] = a * sin + b * cos;
+            }
+        }
+    }
+}
+
+fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// Multi-head attention block.
+pub struct Attention {
+    pub wq: Box<dyn QuantLinear>,
+    pub wk: Box<dyn QuantLinear>,
+    pub wv: Box<dyn QuantLinear>,
+    pub wo: Box<dyn QuantLinear>,
+}
+
+/// SwiGLU MLP block.
+pub struct Mlp {
+    pub gate: Box<dyn QuantLinear>,
+    pub up: Box<dyn QuantLinear>,
+    pub down: Box<dyn QuantLinear>,
+}
+
+pub struct Block {
+    pub attn_norm: Vec<f32>,
+    pub attn: Attention,
+    pub mlp_norm: Vec<f32>,
+    pub mlp: Mlp,
+}
+
+pub struct Transformer {
+    pub cfg: ModelConfig,
+    pub embed: Tensor,
+    pub blocks: Vec<Block>,
+    pub final_norm: Vec<f32>,
+    pub lm_head: Tensor,
+    /// KV quantization bits (None = FP cache; Some(4) for quantized runs).
+    pub kv_bits: Option<u32>,
+}
+
+/// Core of causal batch attention given q/k/v [T, d]: per-head causal
+/// softmax(q·kᵀ/√hd)·v. K/V are already (fake-)quantized by the caller.
+pub fn causal_attention(q: &Tensor, k: &Tensor, v: &Tensor, n_heads: usize) -> Tensor {
+    let (t_len, d) = q.dims2();
+    let hd = d / n_heads;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut out = Tensor::zeros(&[t_len, d]);
+    let mut scores = vec![0.0f32; t_len];
+    for h in 0..n_heads {
+        let base = h * hd;
+        for tq in 0..t_len {
+            let qrow = &q.row(tq)[base..base + hd];
+            for tk in 0..=tq {
+                let krow = &k.row(tk)[base..base + hd];
+                let mut s = 0.0f32;
+                for i in 0..hd {
+                    s += qrow[i] * krow[i];
+                }
+                scores[tk] = s * scale;
+            }
+            softmax_inplace(&mut scores[..=tq]);
+            let orow = &mut out.row_mut(tq)[base..base + hd];
+            for tk in 0..=tq {
+                let w = scores[tk];
+                let vrow = &v.row(tk)[base..base + hd];
+                for i in 0..hd {
+                    orow[i] += w * vrow[i];
+                }
+            }
+        }
+    }
+    out
+}
+
+impl Transformer {
+    /// Random FP model (tests and micro-benches).
+    pub fn random(cfg: &ModelConfig, seed: u64) -> Transformer {
+        let mut rng = Rng::new(seed);
+        let d = cfg.d_model;
+        let std = 0.08;
+        let lin = |rng: &mut Rng, o: usize, i: usize| -> Box<dyn QuantLinear> {
+            Box::new(crate::quant::FpLinear {
+                w: Tensor::from_vec(&[o, i], rng.normal_vec_f32(o * i, 0.0, std)),
+            })
+        };
+        let blocks = (0..cfg.n_layers)
+            .map(|_| Block {
+                attn_norm: vec![1.0; d],
+                attn: Attention {
+                    wq: lin(&mut rng, d, d),
+                    wk: lin(&mut rng, d, d),
+                    wv: lin(&mut rng, d, d),
+                    wo: lin(&mut rng, d, d),
+                },
+                mlp_norm: vec![1.0; d],
+                mlp: Mlp {
+                    gate: lin(&mut rng, cfg.d_ff, d),
+                    up: lin(&mut rng, cfg.d_ff, d),
+                    down: lin(&mut rng, d, cfg.d_ff),
+                },
+            })
+            .collect();
+        Transformer {
+            cfg: cfg.clone(),
+            embed: Tensor::from_vec(
+                &[cfg.vocab_size, d],
+                rng.normal_vec_f32(cfg.vocab_size * d, 0.0, 0.5),
+            ),
+            blocks,
+            final_norm: vec![1.0; d],
+            lm_head: Tensor::from_vec(
+                &[cfg.vocab_size, d],
+                rng.normal_vec_f32(cfg.vocab_size * d, 0.0, std),
+            ),
+            kv_bits: None,
+        }
+    }
+
+    /// FP model from a trainer checkpoint.
+    pub fn fp_from_checkpoint(ck: &Checkpoint) -> Result<Transformer, checkpoint::CkptError> {
+        let cfg = ck.config.clone();
+        let lin = |name: &str| -> Result<Box<dyn QuantLinear>, checkpoint::CkptError> {
+            Ok(Box::new(crate::quant::FpLinear {
+                w: ck.get(name)?.clone(),
+            }))
+        };
+        let mut blocks = Vec::new();
+        for l in 0..cfg.n_layers {
+            blocks.push(Block {
+                attn_norm: ck.get(&format!("layers.{l}.attn_norm"))?.data.clone(),
+                attn: Attention {
+                    wq: lin(&format!("layers.{l}.wq"))?,
+                    wk: lin(&format!("layers.{l}.wk"))?,
+                    wv: lin(&format!("layers.{l}.wv"))?,
+                    wo: lin(&format!("layers.{l}.wo"))?,
+                },
+                mlp_norm: ck.get(&format!("layers.{l}.mlp_norm"))?.data.clone(),
+                mlp: Mlp {
+                    gate: lin(&format!("layers.{l}.gate"))?,
+                    up: lin(&format!("layers.{l}.up"))?,
+                    down: lin(&format!("layers.{l}.down"))?,
+                },
+            });
+        }
+        Ok(Transformer {
+            cfg: cfg.clone(),
+            embed: ck.get("embed")?.clone(),
+            blocks,
+            final_norm: ck.get("final_norm")?.data.clone(),
+            lm_head: ck.get("lm_head")?.clone(),
+            kv_bits: None,
+        })
+    }
+
+    fn norm_all(&self, x: &Tensor, gain: &[f32]) -> Tensor {
+        let (t_len, d) = x.dims2();
+        let mut out = Tensor::zeros(&[t_len, d]);
+        for t in 0..t_len {
+            rmsnorm(x.row(t), gain, self.cfg.rmsnorm_eps, out.row_mut(t));
+        }
+        out
+    }
+
+    fn maybe_kv_quant(&self, x: &mut Tensor) {
+        if let Some(bits) = self.kv_bits {
+            debug_assert_eq!(bits, 4, "only INT4 KV supported");
+            let (t_len, _) = x.dims2();
+            for t in 0..t_len {
+                Kv4Store::fake_quantize(x.row_mut(t));
+            }
+        }
+    }
+
+    /// Batch forward: logits [T, vocab] for a token sequence (causal).
+    pub fn forward(&self, tokens: &[u16]) -> Tensor {
+        let t_len = tokens.len();
+        let d = self.cfg.d_model;
+        assert!(t_len <= self.cfg.max_seq, "sequence longer than max_seq");
+        let mut x = Tensor::zeros(&[t_len, d]);
+        for (t, &tok) in tokens.iter().enumerate() {
+            x.row_mut(t).copy_from_slice(self.embed.row(tok as usize));
+        }
+        for blk in &self.blocks {
+            // attention
+            let h = self.norm_all(&x, &blk.attn_norm);
+            let mut q = blk.attn.wq.forward(&h);
+            let mut k = blk.attn.wk.forward(&h);
+            let mut v = blk.attn.wv.forward(&h);
+            apply_rope(&mut q, self.cfg.n_heads, self.cfg.rope_theta, 0);
+            apply_rope(&mut k, self.cfg.n_heads, self.cfg.rope_theta, 0);
+            self.maybe_kv_quant(&mut k);
+            self.maybe_kv_quant(&mut v);
+            let attn_out = causal_attention(&q, &k, &v, self.cfg.n_heads);
+            let o = blk.attn.wo.forward(&attn_out);
+            for i in 0..x.data.len() {
+                x.data[i] += o.data[i];
+            }
+            // mlp
+            let h = self.norm_all(&x, &blk.mlp_norm);
+            let g = blk.mlp.gate.forward(&h);
+            let u = blk.mlp.up.forward(&h);
+            let mut act = Tensor::zeros(&[t_len, self.cfg.d_ff]);
+            for i in 0..act.data.len() {
+                act.data[i] = silu(g.data[i]) * u.data[i];
+            }
+            let dwn = blk.mlp.down.forward(&act);
+            for i in 0..x.data.len() {
+                x.data[i] += dwn.data[i];
+            }
+        }
+        let xn = self.norm_all(&x, &self.final_norm);
+        crate::kernels::dense::sgemm_wt(&xn, &self.lm_head)
+    }
+
+    /// Start an incremental decoding session (per-layer INT4 KV caches).
+    pub fn new_session(&self) -> DecodeSession {
+        DecodeSession {
+            caches: (0..self.cfg.n_layers)
+                .map(|_| LayerKvCache::new(self.cfg.d_model))
+                .collect(),
+            pos: 0,
+        }
+    }
+
+    /// Feed one token; returns logits [vocab] for the next position.
+    /// Uses the INT4 KV cache — the serving path. For FP models the cache
+    /// still quantizes to INT4 when `kv_bits` is set, else stores FP
+    /// equivalents via 16-bit-exact round trip (here: quantized always, to
+    /// keep one cache implementation; FP-cache equivalence is covered by
+    /// `kv_bits: Some(4)` tests).
+    pub fn decode_step(&self, sess: &mut DecodeSession, token: u16) -> Vec<f32> {
+        let d = self.cfg.d_model;
+        let hd = self.cfg.head_dim();
+        let nh = self.cfg.n_heads;
+        let scale = 1.0 / (hd as f32).sqrt();
+        let mut x = self.embed.row(token as usize).to_vec();
+
+        for (l, blk) in self.blocks.iter().enumerate() {
+            let mut h = vec![0.0f32; d];
+            rmsnorm(&x, &blk.attn_norm, self.cfg.rmsnorm_eps, &mut h);
+            let ht = Tensor::from_vec(&[1, d], h);
+            let mut q = blk.attn.wq.forward(&ht);
+            let mut k = blk.attn.wk.forward(&ht);
+            let v = blk.attn.wv.forward(&ht);
+            apply_rope(&mut q, nh, self.cfg.rope_theta, sess.pos);
+            apply_rope(&mut k, nh, self.cfg.rope_theta, sess.pos);
+            let cache = &mut sess.caches[l];
+            cache.k.push(k.row(0));
+            cache.v.push(v.row(0));
+            let t_len = cache.len();
+            // per-head attention over the quantized cache
+            let mut attn_out = vec![0.0f32; d];
+            let mut krow = vec![0.0f32; d];
+            let mut scores = vec![0.0f32; t_len];
+            for hh in 0..nh {
+                let base = hh * hd;
+                let qh = &q.row(0)[base..base + hd];
+                for t in 0..t_len {
+                    cache.k.get(t, &mut krow);
+                    let mut s = 0.0f32;
+                    for i in 0..hd {
+                        s += qh[i] * krow[base + i];
+                    }
+                    scores[t] = s * scale;
+                }
+                softmax_inplace(&mut scores);
+                let mut vrow = vec![0.0f32; d];
+                for t in 0..t_len {
+                    cache.v.get(t, &mut vrow);
+                    let w = scores[t];
+                    for i in 0..hd {
+                        attn_out[base + i] += w * vrow[base + i];
+                    }
+                }
+            }
+            let o = blk
+                .attn
+                .wo
+                .forward(&Tensor::from_vec(&[1, d], attn_out));
+            for i in 0..d {
+                x[i] += o.data[i];
+            }
+            // mlp
+            let mut h = vec![0.0f32; d];
+            rmsnorm(&x, &blk.mlp_norm, self.cfg.rmsnorm_eps, &mut h);
+            let ht = Tensor::from_vec(&[1, d], h);
+            let g = blk.mlp.gate.forward(&ht);
+            let u = blk.mlp.up.forward(&ht);
+            let mut act = Tensor::zeros(&[1, self.cfg.d_ff]);
+            for i in 0..self.cfg.d_ff {
+                act.data[i] = silu(g.data[i]) * u.data[i];
+            }
+            let dwn = blk.mlp.down.forward(&act);
+            for i in 0..d {
+                x[i] += dwn.data[i];
+            }
+        }
+        sess.pos += 1;
+        let mut xn = vec![0.0f32; d];
+        rmsnorm(&x, &self.final_norm, self.cfg.rmsnorm_eps, &mut xn);
+        let logits = crate::kernels::dense::sgemm_wt(
+            &Tensor::from_vec(&[1, d], xn),
+            &self.lm_head,
+        );
+        logits.data
+    }
+
+    /// Total weight storage bytes across quantized linears + FP parts.
+    pub fn bytes(&self) -> usize {
+        let mut b = (self.embed.numel() + self.lm_head.numel()) * 2; // fp16
+        for blk in &self.blocks {
+            b += (blk.attn_norm.len() + blk.mlp_norm.len()) * 2;
+            b += blk.attn.wq.bytes()
+                + blk.attn.wk.bytes()
+                + blk.attn.wv.bytes()
+                + blk.attn.wo.bytes();
+            b += blk.mlp.gate.bytes() + blk.mlp.up.bytes() + blk.mlp.down.bytes();
+        }
+        b
+    }
+
+    /// Mean weight bits/element over the quantized linears.
+    pub fn mean_weight_bits(&self) -> f64 {
+        let mut bits = 0.0f64;
+        let mut n = 0.0f64;
+        for blk in &self.blocks {
+            for l in [
+                &blk.attn.wq,
+                &blk.attn.wk,
+                &blk.attn.wv,
+                &blk.attn.wo,
+                &blk.mlp.gate,
+                &blk.mlp.up,
+                &blk.mlp.down,
+            ] {
+                bits += l.weight_bits();
+                n += 1.0;
+            }
+        }
+        bits / n.max(1.0)
+    }
+}
+
+/// Incremental decoding state (position + per-layer INT4 KV caches).
+pub struct DecodeSession {
+    pub caches: Vec<LayerKvCache>,
+    pub pos: usize,
+}
+
+// ---------------------------------------------------------------------------
+// PTQ driver: sequential layer-by-layer quantization with error propagation
+// ---------------------------------------------------------------------------
+
+/// Quantize a checkpointed model with any [`Quantizer`], calibrating each
+/// linear on the activations produced by the already-quantized prefix of
+/// the network (the standard GPTQ/Atom sequential scheme; this is what
+/// "utilizing the GPTQ quantization framework" means in the paper's setup).
+pub fn quantize_model(
+    ck: &Checkpoint,
+    quantizer: &dyn Quantizer,
+    calib_seqs: &[Vec<u16>],
+    kv_bits: Option<u32>,
+) -> Result<Transformer, checkpoint::CkptError> {
+    let cfg = ck.config.clone();
+    let d = cfg.d_model;
+    let eps = cfg.rmsnorm_eps;
+
+    // Embed all calibration sequences.
+    let embed = ck.get("embed")?.clone();
+    let mut xs: Vec<Tensor> = calib_seqs
+        .iter()
+        .map(|seq| {
+            let mut x = Tensor::zeros(&[seq.len(), d]);
+            for (t, &tok) in seq.iter().enumerate() {
+                x.row_mut(t).copy_from_slice(embed.row(tok as usize));
+            }
+            x
+        })
+        .collect();
+
+    let norm_seq = |x: &Tensor, gain: &[f32]| -> Tensor {
+        let (t_len, _) = x.dims2();
+        let mut out = Tensor::zeros(&[t_len, d]);
+        for t in 0..t_len {
+            rmsnorm(x.row(t), gain, eps, out.row_mut(t));
+        }
+        out
+    };
+    let concat = |ts: &[Tensor]| -> Tensor {
+        let cols = ts[0].dims2().1;
+        let rows: usize = ts.iter().map(|t| t.dims2().0).sum();
+        let mut out = Tensor::zeros(&[rows, cols]);
+        let mut r = 0;
+        for t in ts {
+            let (tr, _) = t.dims2();
+            out.data[r * cols..(r + tr) * cols].copy_from_slice(&t.data);
+            r += tr;
+        }
+        out
+    };
+
+    let mut blocks = Vec::new();
+    for l in 0..cfg.n_layers {
+        let attn_norm = ck.get(&format!("layers.{l}.attn_norm"))?.data.clone();
+        let mlp_norm = ck.get(&format!("layers.{l}.mlp_norm"))?.data.clone();
+
+        // --- attention projections ---
+        let h_seqs: Vec<Tensor> = xs.iter().map(|x| norm_seq(x, &attn_norm)).collect();
+        let h_cat = concat(&h_seqs);
+        let wq = quantizer.quantize_linear(ck.get(&format!("layers.{l}.wq"))?, &h_cat);
+        let wk = quantizer.quantize_linear(ck.get(&format!("layers.{l}.wk"))?, &h_cat);
+        let wv = quantizer.quantize_linear(ck.get(&format!("layers.{l}.wv"))?, &h_cat);
+
+        // run attention per sequence with quantized q/k/v
+        let mut attn_outs = Vec::new();
+        for h in &h_seqs {
+            let mut q = wq.forward(h);
+            let mut k = wk.forward(h);
+            let v = wv.forward(h);
+            apply_rope(&mut q, cfg.n_heads, cfg.rope_theta, 0);
+            apply_rope(&mut k, cfg.n_heads, cfg.rope_theta, 0);
+            let mut k = k;
+            let mut v = v;
+            if kv_bits == Some(4) {
+                let (t_len, _) = k.dims2();
+                for t in 0..t_len {
+                    Kv4Store::fake_quantize(k.row_mut(t));
+                    Kv4Store::fake_quantize(v.row_mut(t));
+                }
+            }
+            attn_outs.push(causal_attention(&q, &k, &v, cfg.n_heads));
+        }
+        let wo = quantizer.quantize_linear(
+            ck.get(&format!("layers.{l}.wo"))?,
+            &concat(&attn_outs),
+        );
+        for (x, a) in xs.iter_mut().zip(attn_outs.iter()) {
+            let o = wo.forward(a);
+            for i in 0..x.data.len() {
+                x.data[i] += o.data[i];
+            }
+        }
+
+        // --- MLP ---
+        let h_seqs: Vec<Tensor> = xs.iter().map(|x| norm_seq(x, &mlp_norm)).collect();
+        let h_cat = concat(&h_seqs);
+        let gate = quantizer.quantize_linear(ck.get(&format!("layers.{l}.gate"))?, &h_cat);
+        let up = quantizer.quantize_linear(ck.get(&format!("layers.{l}.up"))?, &h_cat);
+        let mut acts = Vec::new();
+        for h in &h_seqs {
+            let g = gate.forward(h);
+            let u = up.forward(h);
+            let mut act = Tensor::zeros(&g.shape.clone());
+            for i in 0..act.data.len() {
+                act.data[i] = silu(g.data[i]) * u.data[i];
+            }
+            acts.push(act);
+        }
+        let down = quantizer.quantize_linear(
+            ck.get(&format!("layers.{l}.down"))?,
+            &concat(&acts),
+        );
+        for (x, a) in xs.iter_mut().zip(acts.iter()) {
+            let dwn = down.forward(a);
+            for i in 0..x.data.len() {
+                x.data[i] += dwn.data[i];
+            }
+        }
+
+        blocks.push(Block {
+            attn_norm,
+            attn: Attention { wq, wk, wv, wo },
+            mlp_norm,
+            mlp: Mlp { gate, up, down },
+        });
+    }
+
+    Ok(Transformer {
+        cfg: cfg.clone(),
+        embed,
+        blocks,
+        final_norm: ck.get("final_norm")?.data.clone(),
+        lm_head: ck.get("lm_head")?.clone(),
+        kv_bits,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{BwaQuantizer, FpQuantizer};
+    use std::collections::BTreeMap;
+
+    fn small_cfg() -> ModelConfig {
+        ModelConfig {
+            name: "test".into(),
+            vocab_size: 64,
+            d_model: 128,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 192,
+            max_seq: 64,
+            rope_theta: 10000.0,
+            rmsnorm_eps: 1e-5,
+        }
+    }
+
+    fn random_checkpoint(cfg: &ModelConfig, seed: u64) -> Checkpoint {
+        let mut rng = Rng::new(seed);
+        let d = cfg.d_model;
+        let mut tensors = BTreeMap::new();
+        fn add(
+            tensors: &mut BTreeMap<String, Tensor>,
+            name: String,
+            shape: &[usize],
+            rng: &mut Rng,
+            std: f32,
+        ) {
+            let n: usize = shape.iter().product();
+            tensors.insert(name, Tensor::from_vec(shape, rng.normal_vec_f32(n, 0.0, std)));
+        }
+        add(&mut tensors, "embed".into(), &[cfg.vocab_size, d], &mut rng, 0.5);
+        add(&mut tensors, "lm_head".into(), &[cfg.vocab_size, d], &mut rng, 0.08);
+        for l in 0..cfg.n_layers {
+            add(&mut tensors, format!("layers.{l}.wq"), &[d, d], &mut rng, 0.08);
+            add(&mut tensors, format!("layers.{l}.wk"), &[d, d], &mut rng, 0.08);
+            add(&mut tensors, format!("layers.{l}.wv"), &[d, d], &mut rng, 0.08);
+            add(&mut tensors, format!("layers.{l}.wo"), &[d, d], &mut rng, 0.08);
+            add(&mut tensors, format!("layers.{l}.gate"), &[cfg.d_ff, d], &mut rng, 0.08);
+            add(&mut tensors, format!("layers.{l}.up"), &[cfg.d_ff, d], &mut rng, 0.08);
+            add(&mut tensors, format!("layers.{l}.down"), &[d, cfg.d_ff], &mut rng, 0.08);
+            tensors.insert(
+                format!("layers.{l}.attn_norm"),
+                Tensor::from_vec(&[d], vec![1.0; d]),
+            );
+            tensors.insert(
+                format!("layers.{l}.mlp_norm"),
+                Tensor::from_vec(&[d], vec![1.0; d]),
+            );
+        }
+        tensors.insert("final_norm".into(), Tensor::from_vec(&[d], vec![1.0; d]));
+        Checkpoint {
+            config: cfg.clone(),
+            tensors,
+        }
+    }
+
+    #[test]
+    fn forward_shape_and_determinism() {
+        let model = Transformer::random(&small_cfg(), 1);
+        let tokens: Vec<u16> = vec![1, 5, 9, 33, 2];
+        let a = model.forward(&tokens);
+        let b = model.forward(&tokens);
+        assert_eq!(a.dims2(), (5, 64));
+        assert_eq!(a.data, b.data);
+    }
+
+    #[test]
+    fn causality_future_does_not_leak() {
+        let model = Transformer::random(&small_cfg(), 2);
+        let t1: Vec<u16> = vec![3, 7, 11, 13, 17];
+        let t2: Vec<u16> = vec![3, 7, 11, 62, 1]; // differ only at positions 3,4
+        let a = model.forward(&t1);
+        let b = model.forward(&t2);
+        for t in 0..3 {
+            crate::util::prop::assert_close(a.row(t), b.row(t), 1e-5, 1e-5)
+                .unwrap_or_else(|e| panic!("position {t} leaked: {e}"));
+        }
+    }
+
+    #[test]
+    fn rope_rotation_preserves_norm() {
+        let mut rng = Rng::new(3);
+        let mut x = Tensor::from_vec(&[4, 128], rng.normal_vec_f32(4 * 128, 0.0, 1.0));
+        let before: Vec<f32> = (0..4)
+            .map(|t| x.row(t).iter().map(|v| v * v).sum::<f32>())
+            .collect();
+        apply_rope(&mut x, 2, 10000.0, 0);
+        for t in 0..4 {
+            let after: f32 = x.row(t).iter().map(|v| v * v).sum();
+            assert!((after - before[t]).abs() < 1e-3, "t={t}");
+        }
+    }
+
+    #[test]
+    fn rope_position_zero_is_identity() {
+        let mut rng = Rng::new(4);
+        let orig = rng.normal_vec_f32(128, 0.0, 1.0);
+        let mut x = Tensor::from_vec(&[1, 128], orig.clone());
+        apply_rope(&mut x, 2, 10000.0, 0);
+        crate::util::prop::assert_close(&x.data, &orig, 1e-6, 0.0).unwrap();
+    }
+
+    #[test]
+    fn decode_matches_batch_forward() {
+        let mut model = Transformer::random(&small_cfg(), 5);
+        model.kv_bits = Some(4); // batch path quantizes K/V like the cache
+        let tokens: Vec<u16> = vec![2, 9, 41, 7, 23, 11];
+        let batch = model.forward(&tokens);
+        let mut sess = model.new_session();
+        let mut last = Vec::new();
+        for &t in &tokens {
+            last = model.decode_step(&mut sess, t);
+        }
+        let t_last = tokens.len() - 1;
+        crate::util::prop::assert_close(&last, batch.row(t_last), 2e-2, 2e-2).unwrap();
+    }
+
+    #[test]
+    fn fp_quantize_model_matches_checkpoint_forward() {
+        let cfg = small_cfg();
+        let ck = random_checkpoint(&cfg, 6);
+        let fp = Transformer::fp_from_checkpoint(&ck).unwrap();
+        let calib: Vec<Vec<u16>> = vec![vec![1, 2, 3, 4, 5, 6, 7, 8]];
+        let fp2 = quantize_model(&ck, &FpQuantizer, &calib, None).unwrap();
+        let tokens: Vec<u16> = vec![10, 20, 30, 40];
+        let a = fp.forward(&tokens);
+        let b = fp2.forward(&tokens);
+        crate::util::prop::assert_close(&a.data, &b.data, 1e-4, 1e-4).unwrap();
+    }
+
+    #[test]
+    fn bwa_quantized_model_runs_and_tracks_fp() {
+        let cfg = small_cfg();
+        let ck = random_checkpoint(&cfg, 7);
+        let fp = Transformer::fp_from_checkpoint(&ck).unwrap();
+        let mut rng = Rng::new(8);
+        let calib: Vec<Vec<u16>> = (0..4)
+            .map(|_| (0..32).map(|_| rng.below(64) as u16).collect())
+            .collect();
+        let q = quantize_model(&ck, &BwaQuantizer::paper(), &calib, Some(4)).unwrap();
+        let tokens: Vec<u16> = (0..16).map(|_| rng.below(64) as u16).collect();
+        let a = fp.forward(&tokens);
+        let b = q.forward(&tokens);
+        // Quantized logits correlate with FP logits (random net: loose).
+        let err = crate::util::prop::rel_err(&b.data, &a.data);
+        assert!(err < 1.0, "rel err {err}");
+        assert!(q.mean_weight_bits() < 8.0);
+        assert!(q.bytes() < fp.bytes());
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_through_disk() {
+        let cfg = small_cfg();
+        let ck = random_checkpoint(&cfg, 9);
+        let dir = std::env::temp_dir().join("bwa_model_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("model.bin");
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        let a = Transformer::fp_from_checkpoint(&ck).unwrap();
+        let b = Transformer::fp_from_checkpoint(&back).unwrap();
+        let tokens: Vec<u16> = vec![5, 6, 7];
+        assert_eq!(a.forward(&tokens).data, b.forward(&tokens).data);
+        std::fs::remove_file(&path).ok();
+    }
+}

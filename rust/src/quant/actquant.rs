@@ -1,0 +1,374 @@
+//! Activation quantization: INT4 RTN + binarized residual decomposition
+//! (paper §3.1(3), Appendix A).
+//!
+//! A token's activations are first RTN-quantized to INT4 (Eq. 3), then the
+//! integer codes are split into four bit planes `b_a` (Eq. 4):
+//!
+//!   x̂_i = Σ_{a=0..3} μ_a·b_{i,a} + shift,   μ_a = 2^a·μ,  shift = −μ·z
+//!
+//! The per-plane scales μ_a are then *balanced* (Eq. 11): the residual
+//! dequantization error E = x − x̂ is distributed across the four plane
+//! scales so the first-order mean error vanishes. We implement both the
+//! paper's heuristic (`Paper`) and a strictly-better least-squares variant
+//! (`LeastSquares`) used in the extension ablation.
+
+use super::pack::{bit_plane, pack_bitvec};
+use super::rtn::RtnParams;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum BalanceMode {
+    /// Plain 2^a·μ scales (no balancing).
+    None,
+    /// Paper Eq. (11): distribute average relative error onto each plane.
+    Paper,
+    /// Least-squares refit of (μ_0..μ_3, shift) given the fixed bit planes.
+    LeastSquares,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct ActQuantConfig {
+    pub bits: u32,
+    pub balance: BalanceMode,
+}
+
+impl Default for ActQuantConfig {
+    fn default() -> Self {
+        Self {
+            bits: 4,
+            balance: BalanceMode::Paper,
+        }
+    }
+}
+
+/// One token's quantized activations in 1×4 bit-plane form.
+#[derive(Clone, Debug)]
+pub struct TokenPlanes {
+    /// Packed bit planes, `planes[a]` for a = 0..bits.
+    pub planes: Vec<Vec<u64>>,
+    /// Per-plane scales μ_a (balanced).
+    pub mu: Vec<f32>,
+    /// Constant shift term (coefficient of the all-ones plane b_{-1}).
+    pub shift: f32,
+    /// Number of channels.
+    pub n: usize,
+}
+
+impl TokenPlanes {
+    /// Dequantize back to f32 (reference path; the kernel never does this).
+    pub fn dequantize(&self) -> Vec<f32> {
+        let mut out = vec![self.shift; self.n];
+        for (a, plane) in self.planes.iter().enumerate() {
+            let mu = self.mu[a];
+            for i in 0..self.n {
+                if (plane[i / 64] >> (i % 64)) & 1 == 1 {
+                    out[i] += mu;
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Quantize one token (slice of channel activations) into bit planes.
+pub fn quantize_token(x: &[f32], cfg: &ActQuantConfig) -> TokenPlanes {
+    let p = RtnParams::fit(x, cfg.bits);
+    let mut qs = Vec::with_capacity(x.len());
+    p.quantize(x, &mut qs);
+
+    let nbits = cfg.bits as usize;
+    let planes_bool: Vec<Vec<bool>> = (0..nbits as u32).map(|a| bit_plane(&qs, a)).collect();
+    let mut mu: Vec<f32> = (0..nbits).map(|a| (1u32 << a) as f32 * p.scale).collect();
+    let mut shift = -p.scale * p.zero as f32;
+
+    match cfg.balance {
+        BalanceMode::None => {}
+        BalanceMode::Paper => {
+            balance_paper(x, &planes_bool, &mut mu, shift);
+        }
+        BalanceMode::LeastSquares => {
+            balance_least_squares(x, &planes_bool, &mut mu, &mut shift);
+        }
+    }
+
+    TokenPlanes {
+        planes: planes_bool.iter().map(|b| pack_bitvec(b)).collect(),
+        mu,
+        shift,
+        n: x.len(),
+    }
+}
+
+/// Paper Eq. (11) — scaling-factor balancing. The paper's stated goal is
+/// to "minimize the first-order overall quantization error E to zero
+/// while preserving the distribution of quantized values"; its printed
+/// update distributes the residual E across the plane scales weighted by
+/// each plane's relative contribution to the dequantized value. We
+/// implement exactly that invariant: with S = Σᵢ Eᵢ and plane mass
+/// C_a = μ_a·|{i : b_{i,a}=1}|, set Δμ_a = S·(C_a/ΣC)/n_a, which drives
+/// the first-order (mean) error to zero in one step while keeping the
+/// μ_a ratios (the "distribution of quantized values") intact.
+fn balance_paper(x: &[f32], planes: &[Vec<bool>], mu: &mut [f32], shift: f32) {
+    let n = x.len();
+    // current dequant and residual
+    let mut xhat = vec![shift; n];
+    for (a, plane) in planes.iter().enumerate() {
+        for i in 0..n {
+            if plane[i] {
+                xhat[i] += mu[a];
+            }
+        }
+    }
+    let s_total: f64 = x
+        .iter()
+        .zip(xhat.iter())
+        .map(|(&xi, &hi)| (xi - hi) as f64)
+        .sum();
+    let counts: Vec<f64> = planes
+        .iter()
+        .map(|p| p.iter().filter(|&&b| b).count() as f64)
+        .collect();
+    let masses: Vec<f64> = counts
+        .iter()
+        .zip(mu.iter())
+        .map(|(&c, &m)| (m as f64).abs() * c)
+        .collect();
+    let total_mass: f64 = masses.iter().sum();
+    if total_mass <= 1e-12 {
+        return;
+    }
+    for a in 0..mu.len() {
+        if counts[a] > 0.0 {
+            let delta = s_total * (masses[a] / total_mass) / counts[a];
+            mu[a] += delta as f32;
+        }
+    }
+}
+
+/// Least-squares refit: minimize ||x − (Σ_a μ_a·B_a + shift·1)||² over the
+/// five coefficients. Normal equations are 5×5; solved by Gaussian
+/// elimination with partial pivoting (sizes are trivial).
+fn balance_least_squares(x: &[f32], planes: &[Vec<bool>], mu: &mut [f32], shift: &mut f32) {
+    let n = x.len();
+    let k = planes.len() + 1; // planes + constant
+    // design matrix columns: b_0..b_{k-2}, 1
+    let col = |j: usize, i: usize| -> f64 {
+        if j < planes.len() {
+            planes[j][i] as u8 as f64
+        } else {
+            1.0
+        }
+    };
+    let mut ata = vec![0.0f64; k * k];
+    let mut atb = vec![0.0f64; k];
+    for i in 0..n {
+        for r in 0..k {
+            let cr = col(r, i);
+            if cr == 0.0 {
+                continue;
+            }
+            atb[r] += cr * x[i] as f64;
+            for c in 0..k {
+                ata[r * k + c] += cr * col(c, i);
+            }
+        }
+    }
+    // tiny ridge for degenerate planes (e.g. all-zero plane)
+    for r in 0..k {
+        ata[r * k + r] += 1e-9;
+    }
+    if let Some(sol) = solve_dense(&mut ata, &mut atb, k) {
+        for a in 0..planes.len() {
+            mu[a] = sol[a] as f32;
+        }
+        *shift = sol[planes.len()] as f32;
+    }
+}
+
+fn solve_dense(a: &mut [f64], b: &mut [f64], n: usize) -> Option<Vec<f64>> {
+    for p in 0..n {
+        // partial pivot
+        let mut best = p;
+        for r in (p + 1)..n {
+            if a[r * n + p].abs() > a[best * n + p].abs() {
+                best = r;
+            }
+        }
+        if a[best * n + p].abs() < 1e-14 {
+            return None;
+        }
+        if best != p {
+            for c in 0..n {
+                a.swap(p * n + c, best * n + c);
+            }
+            b.swap(p, best);
+        }
+        let piv = a[p * n + p];
+        for r in (p + 1)..n {
+            let f = a[r * n + p] / piv;
+            if f == 0.0 {
+                continue;
+            }
+            for c in p..n {
+                a[r * n + c] -= f * a[p * n + c];
+            }
+            b[r] -= f * b[p];
+        }
+    }
+    let mut x = vec![0.0f64; n];
+    for r in (0..n).rev() {
+        let mut s = b[r];
+        for c in (r + 1)..n {
+            s -= a[r * n + c] * x[c];
+        }
+        x[r] = s / a[r * n + r];
+    }
+    Some(x)
+}
+
+/// Fake-quantize a token in place: quantize to planes, dequantize back.
+/// This is the math used by the model's fake-quant forward; tests assert
+/// it matches the packed path exactly.
+pub fn fake_quantize_token(x: &mut [f32], cfg: &ActQuantConfig) {
+    let tp = quantize_token(x, cfg);
+    let dq = tp.dequantize();
+    x.copy_from_slice(&dq);
+}
+
+/// L2 error of a token quantization under a config (for tests/ablations).
+pub fn token_error(x: &[f32], cfg: &ActQuantConfig) -> f64 {
+    let tp = quantize_token(x, cfg);
+    let dq = tp.dequantize();
+    x.iter()
+        .zip(dq.iter())
+        .map(|(&a, &b)| ((a - b) as f64).powi(2))
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn cfg(balance: BalanceMode) -> ActQuantConfig {
+        ActQuantConfig { bits: 4, balance }
+    }
+
+    #[test]
+    fn planes_reconstruct_int4_rtn_exactly_without_balance() {
+        let mut rng = Rng::new(1);
+        let x = rng.normal_vec_f32(192, 0.3, 1.5);
+        let p = RtnParams::fit(&x, 4);
+        let tp = quantize_token(&x, &cfg(BalanceMode::None));
+        let dq = tp.dequantize();
+        for (i, &xi) in x.iter().enumerate() {
+            let want = p.dequantize_one(p.quantize_one(xi));
+            assert!(
+                (dq[i] - want).abs() < 1e-5,
+                "i={i}: planes {} vs rtn {want}",
+                dq[i]
+            );
+        }
+    }
+
+    #[test]
+    fn balancing_reduces_error() {
+        // The paper's Eq. (11) targets the *first-order* (mean) error, not
+        // L2; assert it reduces |mean error| and never explodes L2.
+        let mut rng = Rng::new(2);
+        let mean_err = |x: &[f32], c: &ActQuantConfig| -> f64 {
+            let tp = quantize_token(x, c);
+            let dq = tp.dequantize();
+            x.iter().zip(dq.iter()).map(|(&a, &b)| (a - b) as f64).sum::<f64>() / x.len() as f64
+        };
+        let mut worse_mean = 0;
+        for _ in 0..20 {
+            let mean = rng.normal_f32(0.0, 0.5);
+            let std = 1.0 + rng.f32();
+            let x = rng.normal_vec_f32(256, mean, std);
+            let e_none = token_error(&x, &cfg(BalanceMode::None));
+            let e_paper = token_error(&x, &cfg(BalanceMode::Paper));
+            let e_ls = token_error(&x, &cfg(BalanceMode::LeastSquares));
+            // LS is optimal by construction (up to ridge): never worse.
+            assert!(e_ls <= e_none * (1.0 + 1e-6), "ls {e_ls} vs none {e_none}");
+            assert!(e_paper < 2.0 * e_none + 1e-9, "paper L2 blew up: {e_paper} vs {e_none}");
+            if mean_err(&x, &cfg(BalanceMode::Paper)).abs()
+                > mean_err(&x, &cfg(BalanceMode::None)).abs() + 1e-9
+            {
+                worse_mean += 1;
+            }
+        }
+        assert!(worse_mean == 0, "paper balancing worsened mean error {worse_mean}/20 times");
+    }
+
+    #[test]
+    fn ls_beats_paper_on_average() {
+        let mut rng = Rng::new(3);
+        let mut sum_paper = 0.0;
+        let mut sum_ls = 0.0;
+        for _ in 0..30 {
+            let x = rng.normal_vec_f32(192, 0.0, 2.0);
+            sum_paper += token_error(&x, &cfg(BalanceMode::Paper));
+            sum_ls += token_error(&x, &cfg(BalanceMode::LeastSquares));
+        }
+        assert!(sum_ls <= sum_paper, "ls {sum_ls} vs paper {sum_paper}");
+    }
+
+    #[test]
+    fn fake_quantize_matches_packed_dequant() {
+        let mut rng = Rng::new(4);
+        let x = rng.normal_vec_f32(128, 0.1, 1.0);
+        let tp = quantize_token(&x, &ActQuantConfig::default());
+        let mut fake = x.clone();
+        fake_quantize_token(&mut fake, &ActQuantConfig::default());
+        prop::assert_close(&fake, &tp.dequantize(), 1e-7, 0.0).unwrap();
+    }
+
+    #[test]
+    fn zero_token_is_stable() {
+        let x = vec![0.0f32; 64];
+        for mode in [BalanceMode::None, BalanceMode::Paper, BalanceMode::LeastSquares] {
+            let tp = quantize_token(&x, &cfg(mode));
+            let dq = tp.dequantize();
+            for &v in &dq {
+                assert!(v.abs() < 1e-4, "mode {mode:?}: {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn prop_error_bounded_by_rtn_step() {
+        prop::check("act-planes-bounded", 5, 30, |rng| {
+            let n = 64 + 64 * rng.below(3);
+            let mean = rng.normal_f32(0.0, 1.0);
+            let std = 0.5 + rng.f32() * 3.0;
+            let x = rng.normal_vec_f32(n, mean, std);
+            let p = RtnParams::fit(&x, 4);
+            let tp = quantize_token(&x, &cfg(BalanceMode::Paper));
+            let dq = tp.dequantize();
+            for (i, (&xi, &di)) in x.iter().zip(dq.iter()).enumerate() {
+                // Balancing perturbs scales slightly; allow 1.5 RTN steps.
+                if (xi - di).abs() > 1.5 * p.scale + 1e-4 {
+                    return Err(format!("i={i}: |{xi} - {di}| > 1.5*{}", p.scale));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn plane_scale_ratios_near_powers_of_two() {
+        let mut rng = Rng::new(6);
+        let x = rng.normal_vec_f32(256, 0.0, 1.0);
+        let tp = quantize_token(&x, &cfg(BalanceMode::Paper));
+        // balanced scales stay close to the canonical 1:2:4:8 ladder
+        for a in 1..4 {
+            let ratio = tp.mu[a] / tp.mu[0];
+            let want = (1 << a) as f32;
+            assert!(
+                (ratio - want).abs() / want < 0.5,
+                "plane {a}: ratio {ratio} vs {want}"
+            );
+        }
+    }
+}

@@ -1,0 +1,393 @@
+//! EM-based fine-grained-group binarization (paper §3.2, Algorithm 1
+//! l.8–13).
+//!
+//! For one (output row, channel group) of `B` weights the W(1+1)
+//! parameterization can represent at most four distinct values
+//! `ŵ(s, q) = α_s·q + β_s` (s = fine-group bit, q = sign bit ∈ {−1, +1}).
+//! Because the four centers are unconstrained reals, the optimal
+//! quantization is a Hessian-weighted 1-D 4-means problem, Eq. (9):
+//!
+//!   min_{s,q,ŵ} Σ_i (w_i − ŵ(s_i, q_i))² / diag(H⁻¹)_i
+//!
+//! solved here with a weighted k-means EM loop (E-step: nearest center —
+//! the per-element weight does not change the argmin; M-step: weighted
+//! mean per cluster). Centers are initialized from weighted quantiles.
+//! The 2-center variant (no fine-grained group, pure W1) and the
+//! unweighted variant (no Hessian metric) exist for the ablations in
+//! Tables 4 and 5.
+
+/// Result of clustering one group of weights.
+#[derive(Clone, Debug)]
+pub struct GroupQuant {
+    /// Cluster centers, ascending. len = 2 or 4.
+    pub centers: Vec<f64>,
+    /// Per-element cluster index into `centers`.
+    pub assign: Vec<u8>,
+    /// Weighted SSE achieved.
+    pub loss: f64,
+}
+
+impl GroupQuant {
+    /// Split centers into the (s, q) parameterization: fine-group s pairs
+    /// the two lowest centers (s=0) and the two highest (s=1); within a
+    /// pair, q=−1 is the lower center. Returns (alpha[2], beta[2]) with
+    /// ŵ = alpha[s]·q + beta[s]. For 2 centers, only s=0 is meaningful
+    /// and alpha[1] = alpha[0], beta[1] = beta[0].
+    pub fn to_affine(&self) -> ([f64; 2], [f64; 2]) {
+        match self.centers.len() {
+            4 => {
+                let (c0, c1, c2, c3) = (
+                    self.centers[0],
+                    self.centers[1],
+                    self.centers[2],
+                    self.centers[3],
+                );
+                (
+                    [(c1 - c0) / 2.0, (c3 - c2) / 2.0],
+                    [(c1 + c0) / 2.0, (c3 + c2) / 2.0],
+                )
+            }
+            2 => {
+                let (c0, c1) = (self.centers[0], self.centers[1]);
+                let a = (c1 - c0) / 2.0;
+                let b = (c1 + c0) / 2.0;
+                ([a, a], [b, b])
+            }
+            1 => ([0.0, 0.0], [self.centers[0], self.centers[0]]),
+            n => panic!("unsupported center count {n}"),
+        }
+    }
+
+    /// Per-element (s, q) bits. For k=4: cluster 0 → (0,−1), 1 → (0,+1),
+    /// 2 → (1,−1), 3 → (1,+1). For k=2: cluster c → (0, ±1).
+    pub fn bits(&self) -> (Vec<bool>, Vec<bool>) {
+        let mut s_bits = Vec::with_capacity(self.assign.len());
+        let mut q_bits = Vec::with_capacity(self.assign.len());
+        for &c in &self.assign {
+            match self.centers.len() {
+                4 => {
+                    s_bits.push(c >= 2);
+                    q_bits.push(c % 2 == 1);
+                }
+                _ => {
+                    s_bits.push(false);
+                    q_bits.push(c == 1);
+                }
+            }
+        }
+        (s_bits, q_bits)
+    }
+
+    /// Dequantized values.
+    pub fn dequantize(&self) -> Vec<f64> {
+        self.assign
+            .iter()
+            .map(|&c| self.centers[c as usize])
+            .collect()
+    }
+}
+
+/// Weighted quantile of (value, weight) pairs; `xs_sorted` must be sorted
+/// by value, `cum` are inclusive cumulative weights.
+fn weighted_quantile(xs_sorted: &[(f64, f64)], cum: &[f64], q: f64) -> f64 {
+    let total = *cum.last().unwrap();
+    let target = q * total;
+    match cum.binary_search_by(|c| c.partial_cmp(&target).unwrap()) {
+        Ok(i) | Err(i) => xs_sorted[i.min(xs_sorted.len() - 1)].0,
+    }
+}
+
+/// `init_centers` of Algorithm 1: weighted quantiles so each initial
+/// cluster starts with roughly equal mass.
+pub fn init_centers(w: &[f64], imp: &[f64], k: usize) -> Vec<f64> {
+    assert_eq!(w.len(), imp.len());
+    let mut pairs: Vec<(f64, f64)> = w.iter().copied().zip(imp.iter().copied()).collect();
+    pairs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let mut cum = Vec::with_capacity(pairs.len());
+    let mut acc = 0.0;
+    for &(_, wt) in &pairs {
+        acc += wt;
+        cum.push(acc);
+    }
+    if acc <= 0.0 {
+        // degenerate importance: fall back to unweighted quantiles
+        return (0..k)
+            .map(|i| pairs[(pairs.len() - 1) * (2 * i + 1) / (2 * k)].0)
+            .collect();
+    }
+    (0..k)
+        .map(|i| weighted_quantile(&pairs, &cum, (2 * i + 1) as f64 / (2 * k) as f64))
+        .collect()
+}
+
+/// E-step (`get_groups` + `get_clusters`): nearest-center assignment.
+fn e_step(w: &[f64], centers: &[f64], assign: &mut Vec<u8>) {
+    assign.clear();
+    for &x in w {
+        let mut best = 0u8;
+        let mut best_d = f64::INFINITY;
+        for (c, &ctr) in centers.iter().enumerate() {
+            let d = (x - ctr) * (x - ctr);
+            if d < best_d {
+                best_d = d;
+                best = c as u8;
+            }
+        }
+        assign.push(best);
+    }
+}
+
+/// M-step (`update_centers`): importance-weighted mean per cluster; empty
+/// clusters are re-seeded at the element with the largest weighted error.
+fn m_step(w: &[f64], imp: &[f64], assign: &[u8], centers: &mut [f64]) {
+    let k = centers.len();
+    let mut num = vec![0.0f64; k];
+    let mut den = vec![0.0f64; k];
+    for ((&x, &wt), &c) in w.iter().zip(imp.iter()).zip(assign.iter()) {
+        num[c as usize] += wt * x;
+        den[c as usize] += wt;
+    }
+    for c in 0..k {
+        if den[c] > 0.0 {
+            centers[c] = num[c] / den[c];
+        }
+    }
+    // Re-seed empty clusters at the worst-served element.
+    for c in 0..k {
+        if den[c] == 0.0 {
+            let mut worst_i = 0;
+            let mut worst_e = -1.0;
+            for (i, (&x, &wt)) in w.iter().zip(imp.iter()).enumerate() {
+                let cc = assign[i] as usize;
+                let e = wt * (x - centers[cc]) * (x - centers[cc]);
+                if e > worst_e {
+                    worst_e = e;
+                    worst_i = i;
+                }
+            }
+            centers[c] = w[worst_i];
+        }
+    }
+    centers.sort_by(|a, b| a.partial_cmp(b).unwrap());
+}
+
+fn loss_of(w: &[f64], imp: &[f64], centers: &[f64], assign: &[u8]) -> f64 {
+    w.iter()
+        .zip(imp.iter())
+        .zip(assign.iter())
+        .map(|((&x, &wt), &c)| wt * (x - centers[c as usize]) * (x - centers[c as usize]))
+        .sum()
+}
+
+/// Full EM clustering of one group. `k` is 2 (W1) or 4 (W(1+1));
+/// `imp` is the Hessian importance (use all-ones for the unweighted
+/// ablation).
+pub fn em_cluster(w: &[f64], imp: &[f64], k: usize, iters: usize) -> GroupQuant {
+    assert!(k == 2 || k == 4);
+    assert_eq!(w.len(), imp.len());
+    if w.is_empty() {
+        return GroupQuant {
+            centers: vec![0.0; k],
+            assign: vec![],
+            loss: 0.0,
+        };
+    }
+    let mut centers = init_centers(w, imp, k);
+    centers.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut assign = Vec::with_capacity(w.len());
+    let mut last_loss = f64::INFINITY;
+    for _ in 0..iters.max(1) {
+        e_step(w, &centers, &mut assign);
+        m_step(w, imp, &assign, &mut centers);
+        let l = loss_of(w, imp, &centers, &assign);
+        if last_loss - l < 1e-12 * last_loss.abs().max(1.0) {
+            last_loss = l;
+            break;
+        }
+        last_loss = l;
+    }
+    // Final assignment against the final centers.
+    e_step(w, &centers, &mut assign);
+    let loss = loss_of(w, imp, &centers, &assign);
+    GroupQuant {
+        centers,
+        assign,
+        loss,
+    }
+}
+
+/// RTN-style binarization of one group for the "no minimum-distance
+/// quantization" ablation row (Table 4): centers at mean ± mean|w − mean|
+/// (the classic BNN/XNOR scaling), assignment by sign.
+pub fn rtn_binarize(w: &[f64], k: usize) -> GroupQuant {
+    assert!(k == 2 || k == 4);
+    if w.is_empty() {
+        return GroupQuant {
+            centers: vec![0.0; k],
+            assign: vec![],
+            loss: 0.0,
+        };
+    }
+    let mean = w.iter().sum::<f64>() / w.len() as f64;
+    if k == 2 {
+        let mad = w.iter().map(|x| (x - mean).abs()).sum::<f64>() / w.len() as f64;
+        let centers = vec![mean - mad, mean + mad];
+        let assign: Vec<u8> = w.iter().map(|&x| (x >= mean) as u8).collect();
+        let imp = vec![1.0; w.len()];
+        let loss = loss_of(w, &imp, &centers, &assign);
+        GroupQuant {
+            centers,
+            assign,
+            loss,
+        }
+    } else {
+        // Equally-spaced 4 levels across [min, max] — what 2-bit RTN does.
+        let lo = w.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = w.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let step = (hi - lo) / 3.0;
+        let centers: Vec<f64> = (0..4).map(|i| lo + step * i as f64).collect();
+        let assign: Vec<u8> = w
+            .iter()
+            .map(|&x| {
+                if step <= 0.0 {
+                    0
+                } else {
+                    (((x - lo) / step).round() as i64).clamp(0, 3) as u8
+                }
+            })
+            .collect();
+        let imp = vec![1.0; w.len()];
+        let loss = loss_of(w, &imp, &centers, &assign);
+        GroupQuant {
+            centers,
+            assign,
+            loss,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn ones(n: usize) -> Vec<f64> {
+        vec![1.0; n]
+    }
+
+    #[test]
+    fn recovers_well_separated_clusters() {
+        let mut rng = Rng::new(1);
+        let mut w = Vec::new();
+        for &c in &[-3.0, -1.0, 1.0, 3.0] {
+            for _ in 0..32 {
+                w.push(c + 0.05 * rng.normal());
+            }
+        }
+        let g = em_cluster(&w, &ones(w.len()), 4, 20);
+        for (got, want) in g.centers.iter().zip([-3.0, -1.0, 1.0, 3.0]) {
+            assert!((got - want).abs() < 0.05, "centers {:?}", g.centers);
+        }
+        assert!(g.loss < 0.5);
+    }
+
+    #[test]
+    fn affine_roundtrip_matches_centers() {
+        let mut rng = Rng::new(2);
+        let w: Vec<f64> = (0..64).map(|_| rng.normal()).collect();
+        let g = em_cluster(&w, &ones(64), 4, 15);
+        let (alpha, beta) = g.to_affine();
+        let (s_bits, q_bits) = g.bits();
+        for i in 0..64 {
+            let s = s_bits[i] as usize;
+            let q = if q_bits[i] { 1.0 } else { -1.0 };
+            let w_hat = alpha[s] * q + beta[s];
+            let direct = g.centers[g.assign[i] as usize];
+            assert!(
+                (w_hat - direct).abs() < 1e-12,
+                "i={i}: affine {w_hat} vs center {direct}"
+            );
+        }
+    }
+
+    #[test]
+    fn em_never_worse_than_rtn_binarization() {
+        prop::check("em<=rtn", 3, 30, |rng| {
+            let n = 32 + rng.below(96);
+            let w: Vec<f64> = (0..n).map(|_| rng.normal() * (1.0 + 3.0 * rng.f64())).collect();
+            let imp = ones(n);
+            let em = em_cluster(&w, &imp, 4, 25);
+            let rtn = rtn_binarize(&w, 4);
+            if em.loss <= rtn.loss + 1e-9 {
+                Ok(())
+            } else {
+                Err(format!("em {} > rtn {}", em.loss, rtn.loss))
+            }
+        });
+    }
+
+    #[test]
+    fn hessian_weighting_prioritizes_important_elements() {
+        // Two sub-populations; make one element hugely important — its
+        // cluster center must land (almost) on it.
+        let w = vec![-1.0, -0.9, -1.1, 5.0, 0.9, 1.0, 1.1, 0.95];
+        let mut imp = ones(w.len());
+        imp[3] = 1e6;
+        let g = em_cluster(&w, &imp, 4, 30);
+        let closest = g
+            .centers
+            .iter()
+            .map(|c| (c - 5.0).abs())
+            .fold(f64::INFINITY, f64::min);
+        assert!(closest < 1e-3, "centers {:?}", g.centers);
+    }
+
+    #[test]
+    fn k2_gives_two_centers() {
+        let mut rng = Rng::new(4);
+        let w: Vec<f64> = (0..64).map(|_| rng.normal()).collect();
+        let g = em_cluster(&w, &ones(64), 2, 15);
+        assert_eq!(g.centers.len(), 2);
+        let (s_bits, _q) = g.bits();
+        assert!(s_bits.iter().all(|&s| !s)); // no fine group in W1 mode
+    }
+
+    #[test]
+    fn monotone_loss_in_k() {
+        let mut rng = Rng::new(5);
+        let w: Vec<f64> = (0..128).map(|_| rng.normal()).collect();
+        let imp = ones(128);
+        let l2 = em_cluster(&w, &imp, 2, 25).loss;
+        let l4 = em_cluster(&w, &imp, 4, 25).loss;
+        assert!(l4 < l2, "k=4 ({l4}) should beat k=2 ({l2})");
+    }
+
+    #[test]
+    fn constant_group_is_exact() {
+        let w = vec![0.7; 32];
+        let g = em_cluster(&w, &ones(32), 4, 10);
+        assert!(g.loss < 1e-20);
+        let dq = g.dequantize();
+        assert!(dq.iter().all(|&x| (x - 0.7).abs() < 1e-12));
+    }
+
+    #[test]
+    fn prop_assignment_is_nearest_center() {
+        prop::check("nearest-center", 6, 40, |rng| {
+            let n = 16 + rng.below(112);
+            let w: Vec<f64> = (0..n).map(|_| rng.normal() * 2.0).collect();
+            let imp: Vec<f64> = (0..n).map(|_| 0.1 + rng.f64() * 10.0).collect();
+            let g = em_cluster(&w, &imp, 4, 20);
+            for (i, &x) in w.iter().enumerate() {
+                let assigned = g.centers[g.assign[i] as usize];
+                for &c in &g.centers {
+                    if (x - c).abs() + 1e-12 < (x - assigned).abs() {
+                        return Err(format!("element {i} ({x}) not at nearest center"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}

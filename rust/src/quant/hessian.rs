@@ -1,0 +1,210 @@
+//! Hessian statistics for Hessian-aware quantization (Algorithm 1, l.1–3).
+//!
+//! From calibration activations `X` ([tokens, C_in], row-major) we build
+//! `H = 2XᵀX` (the paper writes `XXᵀ` with tokens as columns — same
+//! matrix), the per-channel activation scales `diag(XXᵀ)` used for channel
+//! reordering, and `Hᶜ = Cholesky((H + λI)⁻¹)` (upper factor, as in GPTQ)
+//! used for block error compensation and the weighted distance metric.
+
+use crate::linalg::{robust_cholesky_of_inverse, Mat};
+use crate::tensor::Tensor;
+
+#[derive(Clone, Debug)]
+pub struct Hessian {
+    /// Number of input channels.
+    pub n: usize,
+    /// H = 2XᵀX (channel × channel).
+    pub h: Mat,
+    /// Upper-triangular Cholesky factor of (H + λI)⁻¹.
+    pub hc: Mat,
+    /// λ actually used for damping.
+    pub lambda: f64,
+    /// diag(XᵀX) — per-channel activation second moments (pre-factor-2).
+    pub act_scales: Vec<f64>,
+}
+
+impl Hessian {
+    /// Build from calibration activations. `percdamp` is the GPTQ-style
+    /// relative damping (paper/GPTQ default: 0.01 of mean diagonal).
+    pub fn from_activations(x: &Tensor, percdamp: f64) -> Hessian {
+        let (_tokens, n) = x.dims2();
+        let xm = Mat::from_f32(x.shape[0], n, &x.data);
+        let mut h = xm.gram();
+        let act_scales = h.diag();
+        h.scale_inplace(2.0);
+        let (hc, lambda) = robust_cholesky_of_inverse(&h, percdamp);
+        Hessian {
+            n,
+            h,
+            hc,
+            lambda,
+            act_scales,
+        }
+    }
+
+    /// Rebuild Hᶜ after a symmetric permutation of channels (reordering
+    /// must happen *before* the factorization is consumed — the factor of
+    /// a permuted matrix is not a permutation of the factor).
+    pub fn permuted(&self, perm: &[usize], percdamp: f64) -> Hessian {
+        let h = self.h.permute_sym(perm);
+        let act_scales = perm.iter().map(|&i| self.act_scales[i]).collect();
+        let (hc, lambda) = robust_cholesky_of_inverse(&h, percdamp);
+        Hessian {
+            n: self.n,
+            h,
+            hc,
+            lambda,
+            act_scales,
+        }
+    }
+
+    /// Per-element importance weights for the EM distance metric:
+    /// `1/diag(H⁻¹)ᵢ` restricted to columns `[lo, hi)`. diag(H⁻¹) is read
+    /// off the Cholesky factor of the inverse: diag(H⁻¹)ᵢ = Σ_k Uᵢₖ² over
+    /// the upper factor's row i... but GPTQ convention stores it so that
+    /// diag = (row norms); we compute it directly for clarity.
+    pub fn importance(&self, lo: usize, hi: usize) -> Vec<f64> {
+        // diag((H+λI)^-1) = sum of squares of row i of the upper factor U,
+        // since (H+λI)^-1 = U^T U ... careful: we built U with inv = U^T U?
+        // cholesky_upper returns U with inv = L L^T and U = L^T, i.e.
+        // inv = U^T U. Then inv[i][i] = sum_k U[k][i]^2 (column norms).
+        (lo..hi)
+            .map(|i| {
+                let mut d = 0.0;
+                for k in 0..=i {
+                    let u = self.hc[(k, i)];
+                    d += u * u;
+                }
+                (1.0 / d.max(1e-30)).max(1e-30)
+            })
+            .collect()
+    }
+
+    /// The diagonal entries of the Cholesky factor for a column block —
+    /// the `diag(Hᶜ)` denominator in Algorithm 1 l.15.
+    pub fn hc_diag(&self, lo: usize, hi: usize) -> Vec<f64> {
+        (lo..hi).map(|i| self.hc[(i, i)]).collect()
+    }
+}
+
+/// Ascending argsort of per-channel activation scales — the channel order
+/// of Algorithm 1 l.1 (outlier channels end up in the *last* group).
+pub fn reorder_by_scales(act_scales: &[f64]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..act_scales.len()).collect();
+    idx.sort_by(|&a, &b| {
+        act_scales[a]
+            .partial_cmp(&act_scales[b])
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_acts(rng: &mut Rng, tokens: usize, n: usize) -> Tensor {
+        let mut x = Tensor::zeros(&[tokens, n]);
+        for v in &mut x.data {
+            *v = rng.normal_f32(0.0, 1.0);
+        }
+        // make two obvious outlier channels
+        for t in 0..tokens {
+            x.data[t * n + 1] *= 12.0;
+            x.data[t * n + n - 2] *= 8.0;
+        }
+        x
+    }
+
+    #[test]
+    fn h_is_2xtx() {
+        let mut rng = Rng::new(1);
+        let x = random_acts(&mut rng, 50, 8);
+        let h = Hessian::from_activations(&x, 0.01);
+        // spot check one entry
+        let mut expect = 0.0f64;
+        for t in 0..50 {
+            expect += (x.data[t * 8 + 2] as f64) * (x.data[t * 8 + 5] as f64);
+        }
+        expect *= 2.0;
+        assert!((h.h[(2, 5)] - expect).abs() < 1e-6 * expect.abs().max(1.0));
+        assert_eq!(h.h[(2, 5)], h.h[(5, 2)]);
+    }
+
+    #[test]
+    fn reorder_puts_outliers_last() {
+        let mut rng = Rng::new(2);
+        let x = random_acts(&mut rng, 100, 16);
+        let h = Hessian::from_activations(&x, 0.01);
+        let order = reorder_by_scales(&h.act_scales);
+        // channels 1 and 14 are the big ones -> must be the last two
+        let last_two = [order[14], order[15]];
+        assert!(last_two.contains(&1) && last_two.contains(&14), "{order:?}");
+    }
+
+    #[test]
+    fn importance_positive_and_finite() {
+        let mut rng = Rng::new(3);
+        let x = random_acts(&mut rng, 64, 12);
+        let h = Hessian::from_activations(&x, 0.01);
+        let imp = h.importance(0, 12);
+        assert_eq!(imp.len(), 12);
+        for &w in &imp {
+            assert!(w.is_finite() && w > 0.0);
+        }
+    }
+
+    #[test]
+    fn importance_tracks_activation_energy() {
+        // Channels with larger activation energy have smaller diag(H^-1),
+        // hence larger importance weight.
+        let mut rng = Rng::new(4);
+        let n = 10;
+        let mut x = Tensor::zeros(&[200, n]);
+        for v in &mut x.data {
+            *v = rng.normal_f32(0.0, 1.0);
+        }
+        for t in 0..200 {
+            x.data[t * n] *= 20.0; // channel 0 is hot
+        }
+        let h = Hessian::from_activations(&x, 0.01);
+        let imp = h.importance(0, n);
+        let mean_rest: f64 = imp[1..].iter().sum::<f64>() / (n - 1) as f64;
+        assert!(imp[0] > 10.0 * mean_rest, "imp0={} rest={}", imp[0], mean_rest);
+    }
+
+    #[test]
+    fn permuted_hessian_matches_permuted_activations() {
+        let mut rng = Rng::new(5);
+        let x = random_acts(&mut rng, 80, 8);
+        let h = Hessian::from_activations(&x, 0.01);
+        let perm = reorder_by_scales(&h.act_scales);
+        let hp = h.permuted(&perm, 0.01);
+        let xp = x.select_cols(&perm);
+        let h2 = Hessian::from_activations(&xp, 0.01);
+        for i in 0..8 {
+            for j in 0..8 {
+                assert!((hp.h[(i, j)] - h2.h[(i, j)]).abs() < 1e-3);
+            }
+        }
+        // ascending activation scales after permutation
+        for i in 1..8 {
+            assert!(hp.act_scales[i] >= hp.act_scales[i - 1]);
+        }
+    }
+
+    #[test]
+    fn rank_deficient_calibration_still_works() {
+        // fewer tokens than channels -> singular H, needs damping
+        let mut rng = Rng::new(6);
+        let mut x = Tensor::zeros(&[4, 32]);
+        for v in &mut x.data {
+            *v = rng.normal_f32(0.0, 1.0);
+        }
+        let h = Hessian::from_activations(&x, 0.01);
+        assert!(h.lambda > 0.0);
+        let imp = h.importance(0, 32);
+        assert!(imp.iter().all(|w| w.is_finite() && *w > 0.0));
+    }
+}

@@ -1,0 +1,167 @@
+//! The paper's quantization stack.
+//!
+//! - [`rtn`] — round-to-nearest scalar quantization (Eq. 3);
+//! - [`hessian`] — H = 2XᵀX, Cholesky-of-inverse, channel reordering;
+//! - [`em`] — Hessian-weighted EM clustering for W(1+1) (Eq. 9);
+//! - [`actquant`] — INT4 → 4×INT1 plane decomposition + scale balancing;
+//! - [`outlier`] — INT8 outlier channel block;
+//! - [`pack`] — bit packing for the popcount kernel;
+//! - [`binarize`] — Algorithm 1 end-to-end per linear layer.
+//!
+//! The [`Quantizer`]/[`QuantLinear`] traits are the plug-in point shared
+//! with the `baselines` module so the evaluation harness can run every
+//! method through the same code path.
+
+pub mod actquant;
+pub mod binarize;
+pub mod em;
+pub mod hessian;
+pub mod outlier;
+pub mod pack;
+pub mod rtn;
+
+use crate::tensor::Tensor;
+
+/// A quantized (or passthrough) linear layer usable by the model.
+pub trait QuantLinear: Send + Sync {
+    /// y = f(x) for x: [tokens, in_features] → [tokens, out_features].
+    fn forward(&self, x: &Tensor) -> Tensor;
+    /// Effective weight storage bits per element.
+    fn weight_bits(&self) -> f64;
+    /// Effective activation bits on the layer input.
+    fn act_bits(&self) -> f64;
+    /// Storage bytes for the model-size table.
+    fn bytes(&self) -> usize;
+}
+
+/// A method that turns (weights, calibration activations) into a
+/// [`QuantLinear`]. Implemented by the paper's method and every baseline.
+pub trait Quantizer: Send + Sync {
+    fn name(&self) -> String;
+    fn quantize_linear(&self, w: &Tensor, calib: &Tensor) -> Box<dyn QuantLinear>;
+}
+
+// ---------------------------------------------------------------------------
+// FP passthrough ("FP16" rows of the tables)
+// ---------------------------------------------------------------------------
+
+/// Unquantized linear layer (the tables' FP16 reference rows).
+pub struct FpLinear {
+    pub w: Tensor,
+}
+
+impl QuantLinear for FpLinear {
+    fn forward(&self, x: &Tensor) -> Tensor {
+        crate::kernels::dense::sgemm_wt(x, &self.w)
+    }
+
+    fn weight_bits(&self) -> f64 {
+        16.0
+    }
+
+    fn act_bits(&self) -> f64 {
+        16.0
+    }
+
+    fn bytes(&self) -> usize {
+        self.w.numel() * 2
+    }
+}
+
+/// Identity quantizer producing [`FpLinear`].
+pub struct FpQuantizer;
+
+impl Quantizer for FpQuantizer {
+    fn name(&self) -> String {
+        "FP16".to_string()
+    }
+
+    fn quantize_linear(&self, w: &Tensor, _calib: &Tensor) -> Box<dyn QuantLinear> {
+        Box::new(FpLinear { w: w.clone() })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The paper's method as a Quantizer
+// ---------------------------------------------------------------------------
+
+/// W(1+1)A(1×4) quantizer (the paper's method).
+pub struct BwaQuantizer {
+    pub cfg: binarize::BwaConfig,
+}
+
+impl BwaQuantizer {
+    pub fn paper() -> Self {
+        Self {
+            cfg: binarize::BwaConfig::paper(),
+        }
+    }
+}
+
+impl Quantizer for BwaQuantizer {
+    fn name(&self) -> String {
+        if self.cfg.quantize_acts {
+            "BWA W(1+1)A(1x4)".to_string()
+        } else {
+            "BWA W(1+1)A16".to_string()
+        }
+    }
+
+    fn quantize_linear(&self, w: &Tensor, calib: &Tensor) -> Box<dyn QuantLinear> {
+        Box::new(binarize::quantize_bwa(w, calib, &self.cfg))
+    }
+}
+
+impl QuantLinear for binarize::BwaLinear {
+    fn forward(&self, x: &Tensor) -> Tensor {
+        binarize::BwaLinear::forward(self, x)
+    }
+
+    fn weight_bits(&self) -> f64 {
+        self.weight_bits_per_element()
+    }
+
+    fn act_bits(&self) -> f64 {
+        if self.quantize_acts {
+            self.act.bits as f64
+        } else {
+            16.0
+        }
+    }
+
+    fn bytes(&self) -> usize {
+        binarize::BwaLinear::bytes(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn fp_quantizer_is_exact() {
+        let mut rng = Rng::new(1);
+        let w = Tensor::from_vec(&[4, 8], rng.normal_vec_f32(32, 0.0, 1.0));
+        let x = Tensor::from_vec(&[3, 8], rng.normal_vec_f32(24, 0.0, 1.0));
+        let q = FpQuantizer.quantize_linear(&w, &x);
+        let y = q.forward(&x);
+        let want = crate::tensor::matmul_wt(&x, &w);
+        crate::util::prop::assert_close(&y.data, &want.data, 1e-5, 1e-5).unwrap();
+        assert_eq!(q.weight_bits(), 16.0);
+    }
+
+    #[test]
+    fn bwa_quantizer_via_trait() {
+        let mut rng = Rng::new(2);
+        let w = Tensor::from_vec(&[16, 128], rng.normal_vec_f32(16 * 128, 0.0, 0.1));
+        let x = Tensor::from_vec(&[40, 128], rng.normal_vec_f32(40 * 128, 0.0, 1.0));
+        let q = BwaQuantizer::paper();
+        assert!(q.name().contains("1x4"));
+        let ql = q.quantize_linear(&w, &x);
+        let y = ql.forward(&x);
+        assert_eq!(y.dims2(), (40, 16));
+        assert!(ql.weight_bits() < 16.0);
+        assert!(ql.bytes() > 0);
+    }
+}

@@ -1,0 +1,159 @@
+//! Outlier channel handling (paper §3.1(5), Algorithm 1 l.18).
+//!
+//! After channel reordering, the *last* channel group(s) hold the channels
+//! with the largest activation scales. Those are kept in INT8 — weights
+//! per output row, activations per token — which caps the outlier overhead
+//! at ~3% of channels in the paper's 7B setting (1 group of 128 out of
+//! 4096). Table 9 sweeps the number of outlier groups.
+
+use super::rtn::RtnParams;
+
+/// INT8 weight block for the outlier channels of one linear layer.
+#[derive(Clone, Debug)]
+pub struct OutlierPart {
+    /// Number of outlier channels (0 disables the block).
+    pub k: usize,
+    pub rows: usize,
+    /// Quantized weights, row-major rows × k.
+    pub q: Vec<i8>,
+    /// Per-row RTN params (8-bit asymmetric).
+    pub params: Vec<RtnParams>,
+    /// Activation bits used for this block at inference time.
+    pub act_bits: u32,
+}
+
+impl OutlierPart {
+    /// Quantize the outlier weight block `w` (rows × k, row-major slice of
+    /// the reordered weight matrix).
+    pub fn quantize(w: &[f32], rows: usize, k: usize, act_bits: u32) -> OutlierPart {
+        assert_eq!(w.len(), rows * k);
+        let mut q = Vec::with_capacity(rows * k);
+        let mut params = Vec::with_capacity(rows);
+        for r in 0..rows {
+            let row = &w[r * k..(r + 1) * k];
+            let p = RtnParams::fit(row, 8);
+            for &x in row {
+                q.push((p.quantize_one(x) - 128).clamp(-128, 127) as i8);
+            }
+            params.push(p);
+        }
+        OutlierPart {
+            k,
+            rows,
+            q,
+            params,
+            act_bits,
+        }
+    }
+
+    pub fn empty(rows: usize, act_bits: u32) -> OutlierPart {
+        OutlierPart {
+            k: 0,
+            rows,
+            q: Vec::new(),
+            params: Vec::new(),
+            act_bits,
+        }
+    }
+
+    /// Dequantized weight value at (row, col-within-block).
+    #[inline]
+    pub fn dequant(&self, r: usize, c: usize) -> f32 {
+        let p = &self.params[r];
+        p.dequantize_one(self.q[r * self.k + c] as i32 + 128)
+    }
+
+    /// Dequantize the whole block to f32 (rows × k).
+    pub fn dequantize_all(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.rows * self.k);
+        for r in 0..self.rows {
+            for c in 0..self.k {
+                out.push(self.dequant(r, c));
+            }
+        }
+        out
+    }
+
+    /// Forward contribution: y += W_outlier · x_outlier with activations
+    /// fake-quantized at `act_bits` per token (INT8 by default).
+    pub fn forward_add(&self, x_out: &[f32], y: &mut [f32]) {
+        if self.k == 0 {
+            return;
+        }
+        assert_eq!(x_out.len(), self.k);
+        assert_eq!(y.len(), self.rows);
+        // quantize the activation slice
+        let pa = RtnParams::fit(x_out, self.act_bits);
+        let xq: Vec<f32> = x_out
+            .iter()
+            .map(|&v| pa.dequantize_one(pa.quantize_one(v)))
+            .collect();
+        for r in 0..self.rows {
+            let p = &self.params[r];
+            let row = &self.q[r * self.k..(r + 1) * self.k];
+            let mut acc = 0.0f32;
+            for c in 0..self.k {
+                acc += p.dequantize_one(row[c] as i32 + 128) * xq[c];
+            }
+            y[r] += acc;
+        }
+    }
+
+    /// Storage bytes (weights + params).
+    pub fn bytes(&self) -> usize {
+        self.q.len() + self.params.len() * 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn int8_weights_are_accurate() {
+        let mut rng = Rng::new(1);
+        let (rows, k) = (16, 64);
+        let w = rng.normal_vec_f32(rows * k, 0.0, 2.0);
+        let part = OutlierPart::quantize(&w, rows, k, 8);
+        let dq = part.dequantize_all();
+        let err = prop::rel_err(&dq, &w);
+        assert!(err < 0.01, "relative error {err}");
+    }
+
+    #[test]
+    fn forward_matches_dense_within_int8_error() {
+        let mut rng = Rng::new(2);
+        let (rows, k) = (8, 32);
+        let w = rng.normal_vec_f32(rows * k, 0.0, 1.0);
+        let x = rng.normal_vec_f32(k, 0.0, 3.0);
+        let part = OutlierPart::quantize(&w, rows, k, 8);
+        let mut y = vec![0.0f32; rows];
+        part.forward_add(&x, &mut y);
+        let mut want = vec![0.0f32; rows];
+        for r in 0..rows {
+            for c in 0..k {
+                want[r] += w[r * k + c] * x[c];
+            }
+        }
+        let err = prop::rel_err(&y, &want);
+        assert!(err < 0.02, "relative error {err}");
+    }
+
+    #[test]
+    fn empty_block_is_noop() {
+        let part = OutlierPart::empty(4, 8);
+        let mut y = vec![1.0f32; 4];
+        part.forward_add(&[], &mut y);
+        assert_eq!(y, vec![1.0f32; 4]);
+        assert_eq!(part.bytes(), 0);
+    }
+
+    #[test]
+    fn bytes_counts_storage() {
+        let mut rng = Rng::new(3);
+        let part = OutlierPart::quantize(&rng.normal_vec_f32(4 * 16, 0.0, 1.0), 4, 16, 8);
+        assert_eq!(part.bytes(), 4 * 16 + 4 * 8);
+    }
+}

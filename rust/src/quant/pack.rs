@@ -1,0 +1,177 @@
+//! Bit packing for the binary hot path.
+//!
+//! Weight sign bits `q`, fine-group bitmaps `m`, and activation bit planes
+//! `b_a` are packed 64 per `u64` word so the kernel's inner loop is pure
+//! AND + POPCNT (Eq. 7). Channel groups are required to be a multiple of
+//! 64 so group boundaries align with word boundaries and `v_{j,ℓ,s,a}`
+//! reduces to popcounts over whole words.
+
+pub const WORD_BITS: usize = 64;
+
+/// A rows × cols bit matrix packed row-major into u64 words.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PackedBits {
+    pub rows: usize,
+    pub cols: usize,
+    pub words_per_row: usize,
+    pub words: Vec<u64>,
+}
+
+impl PackedBits {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        let words_per_row = cols.div_ceil(WORD_BITS);
+        Self {
+            rows,
+            cols,
+            words_per_row,
+            words: vec![0u64; rows * words_per_row],
+        }
+    }
+
+    /// Pack from a row-major bool slice.
+    pub fn from_bools(rows: usize, cols: usize, bits: &[bool]) -> Self {
+        assert_eq!(bits.len(), rows * cols);
+        let mut p = Self::zeros(rows, cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                if bits[r * cols + c] {
+                    p.set(r, c, true);
+                }
+            }
+        }
+        p
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: bool) {
+        debug_assert!(r < self.rows && c < self.cols);
+        let w = r * self.words_per_row + c / WORD_BITS;
+        let bit = 1u64 << (c % WORD_BITS);
+        if v {
+            self.words[w] |= bit;
+        } else {
+            self.words[w] &= !bit;
+        }
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> bool {
+        debug_assert!(r < self.rows && c < self.cols);
+        let w = r * self.words_per_row + c / WORD_BITS;
+        (self.words[w] >> (c % WORD_BITS)) & 1 == 1
+    }
+
+    /// Packed words of one row.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[u64] {
+        &self.words[r * self.words_per_row..(r + 1) * self.words_per_row]
+    }
+
+    /// Number of set bits in row `r`, columns `[lo, hi)` (word-aligned).
+    pub fn popcount_range(&self, r: usize, lo: usize, hi: usize) -> u32 {
+        debug_assert!(lo % WORD_BITS == 0 && hi % WORD_BITS == 0);
+        let row = self.row(r);
+        row[lo / WORD_BITS..hi / WORD_BITS]
+            .iter()
+            .map(|w| w.count_ones())
+            .sum()
+    }
+
+    /// Storage in bytes (for the model-size table).
+    pub fn bytes(&self) -> usize {
+        self.words.len() * 8
+    }
+}
+
+/// Pack a single bit-vector (e.g. one activation plane) into words.
+pub fn pack_bitvec(bits: &[bool]) -> Vec<u64> {
+    let n_words = bits.len().div_ceil(WORD_BITS);
+    let mut words = vec![0u64; n_words];
+    for (i, &b) in bits.iter().enumerate() {
+        if b {
+            words[i / WORD_BITS] |= 1u64 << (i % WORD_BITS);
+        }
+    }
+    words
+}
+
+/// Extract the a-th bit plane of a slice of small unsigned ints.
+pub fn bit_plane(qs: &[i32], a: u32) -> Vec<bool> {
+    qs.iter().map(|&q| (q >> a) & 1 == 1).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn set_get_roundtrip() {
+        let mut rng = Rng::new(1);
+        let (rows, cols) = (5, 130);
+        let bits: Vec<bool> = (0..rows * cols).map(|_| rng.bool(0.4)).collect();
+        let p = PackedBits::from_bools(rows, cols, &bits);
+        for r in 0..rows {
+            for c in 0..cols {
+                assert_eq!(p.get(r, c), bits[r * cols + c], "({r},{c})");
+            }
+        }
+    }
+
+    #[test]
+    fn popcount_range_matches_naive() {
+        let mut rng = Rng::new(2);
+        let (rows, cols) = (3, 256);
+        let bits: Vec<bool> = (0..rows * cols).map(|_| rng.bool(0.5)).collect();
+        let p = PackedBits::from_bools(rows, cols, &bits);
+        for r in 0..rows {
+            for (lo, hi) in [(0, 64), (64, 192), (0, 256), (128, 256)] {
+                let naive = bits[r * cols + lo..r * cols + hi]
+                    .iter()
+                    .filter(|&&b| b)
+                    .count() as u32;
+                assert_eq!(p.popcount_range(r, lo, hi), naive, "row {r} [{lo},{hi})");
+            }
+        }
+    }
+
+    #[test]
+    fn padding_bits_are_zero() {
+        let p = PackedBits::from_bools(1, 70, &vec![true; 70]);
+        assert_eq!(p.words_per_row, 2);
+        // bits 70..128 of the second word must be zero
+        assert_eq!(p.row(0)[1] >> 6, 0);
+    }
+
+    #[test]
+    fn bit_plane_extraction() {
+        let qs = vec![0b0000, 0b0001, 0b1010, 0b1111];
+        assert_eq!(bit_plane(&qs, 0), vec![false, true, false, true]);
+        assert_eq!(bit_plane(&qs, 1), vec![false, false, true, true]);
+        assert_eq!(bit_plane(&qs, 3), vec![false, false, true, true]);
+    }
+
+    #[test]
+    fn plane_decomposition_reconstructs_value() {
+        // q = sum_a 2^a * plane_a — the core identity behind A(1×4).
+        let mut rng = Rng::new(3);
+        let qs: Vec<i32> = (0..100).map(|_| rng.below(16) as i32).collect();
+        let planes: Vec<Vec<bool>> = (0..4).map(|a| bit_plane(&qs, a)).collect();
+        for i in 0..qs.len() {
+            let mut v = 0;
+            for a in 0..4 {
+                v += (planes[a][i] as i32) << a;
+            }
+            assert_eq!(v, qs[i]);
+        }
+    }
+
+    #[test]
+    fn pack_bitvec_matches_packedbits() {
+        let mut rng = Rng::new(4);
+        let bits: Vec<bool> = (0..200).map(|_| rng.bool(0.3)).collect();
+        let v = pack_bitvec(&bits);
+        let p = PackedBits::from_bools(1, 200, &bits);
+        assert_eq!(v, p.row(0));
+    }
+}

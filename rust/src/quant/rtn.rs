@@ -1,0 +1,258 @@
+//! Round-to-nearest (RTN) quantization — Eq. (3) of the paper.
+//!
+//! `X_q = clamp(round(X/μ) + z, 0, 2^k − 1)` with
+//! `μ = (max − min)/(2^k − 1)` and `z = −round(min/μ)`; dequantization is
+//! `x̂ = μ·(x_q − z)`. Used for activations (per token) by every method and
+//! for weights (per channel) by the RTN/GPTQ/Atom/QuaRot baselines.
+
+/// Asymmetric quantization parameters for one vector (token or channel).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RtnParams {
+    /// Scale μ.
+    pub scale: f32,
+    /// Zero point z (integer, within [0, 2^k − 1]).
+    pub zero: i32,
+    /// Bit width k.
+    pub bits: u32,
+}
+
+impl RtnParams {
+    pub fn qmax(&self) -> i32 {
+        ((1u64 << self.bits) - 1) as i32
+    }
+
+    /// Fit parameters to a slice (asymmetric, clipping ratio 1.0 — the
+    /// paper's setting).
+    pub fn fit(xs: &[f32], bits: u32) -> RtnParams {
+        assert!(bits >= 1 && bits <= 16);
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        for &x in xs {
+            lo = lo.min(x);
+            hi = hi.max(x);
+        }
+        if !lo.is_finite() || !hi.is_finite() {
+            lo = 0.0;
+            hi = 0.0;
+        }
+        // Always include 0 in the representable range so zero activations
+        // stay exact (standard asymmetric-quantization practice).
+        lo = lo.min(0.0);
+        hi = hi.max(0.0);
+        let qmax = ((1u64 << bits) - 1) as f32;
+        let mut scale = (hi - lo) / qmax;
+        if scale <= 0.0 || !scale.is_finite() {
+            scale = 1.0;
+        }
+        let zero = (-(lo / scale)).round() as i32;
+        RtnParams {
+            scale,
+            zero: zero.clamp(0, qmax as i32),
+            bits,
+        }
+    }
+
+    #[inline]
+    pub fn quantize_one(&self, x: f32) -> i32 {
+        let q = (x / self.scale).round() as i32 + self.zero;
+        q.clamp(0, self.qmax())
+    }
+
+    #[inline]
+    pub fn dequantize_one(&self, q: i32) -> f32 {
+        self.scale * (q - self.zero) as f32
+    }
+
+    pub fn quantize(&self, xs: &[f32], out: &mut Vec<i32>) {
+        out.clear();
+        out.extend(xs.iter().map(|&x| self.quantize_one(x)));
+    }
+
+    pub fn dequantize(&self, qs: &[i32], out: &mut Vec<f32>) {
+        out.clear();
+        out.extend(qs.iter().map(|&q| self.dequantize_one(q)));
+    }
+
+    /// Quantize-dequantize in one pass ("fake quantization").
+    pub fn fake_quantize(&self, xs: &[f32], out: &mut [f32]) {
+        for (o, &x) in out.iter_mut().zip(xs.iter()) {
+            *o = self.dequantize_one(self.quantize_one(x));
+        }
+    }
+}
+
+/// Fake-quantize each row of a row-major [rows, cols] matrix independently
+/// (per-token activation quantization). Returns per-row params.
+pub fn fake_quantize_rows(data: &mut [f32], rows: usize, cols: usize, bits: u32) -> Vec<RtnParams> {
+    assert_eq!(data.len(), rows * cols);
+    let mut params = Vec::with_capacity(rows);
+    for r in 0..rows {
+        let row = &mut data[r * cols..(r + 1) * cols];
+        let p = RtnParams::fit(row, bits);
+        for x in row.iter_mut() {
+            *x = p.dequantize_one(p.quantize_one(*x));
+        }
+        params.push(p);
+    }
+    params
+}
+
+/// Fake-quantize each row of a weight matrix [out_features, in_features]
+/// per output channel (per-channel weight quantization).
+pub fn fake_quantize_weight_rows(w: &mut [f32], rows: usize, cols: usize, bits: u32) {
+    fake_quantize_rows(w, rows, cols, bits);
+}
+
+/// Per-group fake quantization of a weight row: groups of `group` columns
+/// share RTN parameters (standard "group size 128" weight quantization).
+pub fn fake_quantize_row_grouped(row: &mut [f32], group: usize, bits: u32) {
+    let cols = row.len();
+    let mut start = 0;
+    while start < cols {
+        let end = (start + group).min(cols);
+        let p = RtnParams::fit(&row[start..end], bits);
+        for x in &mut row[start..end] {
+            *x = p.dequantize_one(p.quantize_one(*x));
+        }
+        start = end;
+    }
+}
+
+/// Mean squared quantization error of RTN at `bits` over a slice.
+pub fn rtn_mse(xs: &[f32], bits: u32) -> f64 {
+    let p = RtnParams::fit(xs, bits);
+    xs.iter()
+        .map(|&x| {
+            let e = (x - p.dequantize_one(p.quantize_one(x))) as f64;
+            e * e
+        })
+        .sum::<f64>()
+        / xs.len().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_error_bounded_by_half_step() {
+        let mut rng = Rng::new(1);
+        for bits in [2u32, 4, 8] {
+            let xs = rng.normal_vec_f32(256, 0.0, 2.0);
+            let p = RtnParams::fit(&xs, bits);
+            for &x in &xs {
+                let err = (x - p.dequantize_one(p.quantize_one(x))).abs();
+                assert!(
+                    err <= p.scale * 0.5 + 1e-5,
+                    "bits {bits}: err {err} scale {}",
+                    p.scale
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn zero_is_exact() {
+        let xs = [-3.0f32, -1.0, 0.0, 2.0, 7.0];
+        for bits in [2u32, 4, 8] {
+            let p = RtnParams::fit(&xs, bits);
+            assert_eq!(p.dequantize_one(p.quantize_one(0.0)), 0.0, "bits {bits}");
+        }
+    }
+
+    #[test]
+    fn quant_values_in_range() {
+        let mut rng = Rng::new(2);
+        let xs = rng.normal_vec_f32(512, 1.0, 5.0);
+        let p = RtnParams::fit(&xs, 4);
+        let mut qs = Vec::new();
+        p.quantize(&xs, &mut qs);
+        for &q in &qs {
+            assert!((0..=15).contains(&q));
+        }
+    }
+
+    #[test]
+    fn constant_input_is_exact() {
+        let xs = [3.5f32; 32];
+        let p = RtnParams::fit(&xs, 4);
+        for &x in &xs {
+            let back = p.dequantize_one(p.quantize_one(x));
+            assert!((back - x).abs() <= p.scale * 0.5 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn more_bits_less_error() {
+        let mut rng = Rng::new(3);
+        let xs = rng.normal_vec_f32(2048, 0.0, 1.0);
+        let e2 = rtn_mse(&xs, 2);
+        let e4 = rtn_mse(&xs, 4);
+        let e8 = rtn_mse(&xs, 8);
+        assert!(e2 > e4 && e4 > e8, "{e2} {e4} {e8}");
+    }
+
+    #[test]
+    fn per_row_params_differ_when_scales_differ() {
+        let mut data = vec![0.0f32; 2 * 8];
+        for i in 0..8 {
+            data[i] = i as f32 * 0.1; // small row
+            data[8 + i] = i as f32 * 10.0; // big row
+        }
+        let params = fake_quantize_rows(&mut data, 2, 8, 4);
+        assert!(params[1].scale > params[0].scale * 10.0);
+    }
+
+    #[test]
+    fn grouped_row_quant_beats_whole_row_on_mixed_scales() {
+        // One half of the row is tiny, other half is large: per-group scales
+        // should reduce error vs a single scale.
+        let mut rng = Rng::new(5);
+        let mut row: Vec<f32> = Vec::new();
+        row.extend(rng.normal_vec_f32(64, 0.0, 0.05));
+        row.extend(rng.normal_vec_f32(64, 0.0, 5.0));
+
+        let mut whole = row.clone();
+        let p = RtnParams::fit(&whole, 4);
+        let mut tmp = whole.clone();
+        p.fake_quantize(&tmp.clone(), &mut tmp);
+        whole = tmp;
+
+        let mut grouped = row.clone();
+        fake_quantize_row_grouped(&mut grouped, 64, 4);
+
+        let err_whole: f32 = row.iter().zip(&whole).map(|(a, b)| (a - b) * (a - b)).sum();
+        let err_grouped: f32 = row
+            .iter()
+            .zip(&grouped)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum();
+        assert!(
+            err_grouped < err_whole,
+            "grouped {err_grouped} vs whole {err_whole}"
+        );
+    }
+
+    #[test]
+    fn prop_dequant_quant_idempotent() {
+        prop::check("rtn-idempotent", 7, 40, |rng| {
+            let bits = [2u32, 3, 4, 8][rng.below(4)];
+            let n = 16 + rng.below(240);
+            let mean = rng.normal_f32(0.0, 2.0);
+            let std = 0.1 + rng.f32() * 4.0;
+            let xs = rng.normal_vec_f32(n, mean, std);
+            let p = RtnParams::fit(&xs, bits);
+            // quant(dequant(q)) == q for all representable q
+            for q in 0..=p.qmax() {
+                let x = p.dequantize_one(q);
+                let q2 = p.quantize_one(x);
+                if q2 != q {
+                    return Err(format!("bits {bits}: q {q} -> x {x} -> q {q2}"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,181 @@
+//! Row-major f32 tensor used throughout the model and quantization code.
+//!
+//! Deliberately simple: shape + contiguous storage + the handful of views
+//! the transformer needs. Keeping it minimal keeps the hot paths legible
+//! for the performance pass.
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        Self {
+            shape: shape.to_vec(),
+            data: vec![0.0; n],
+        }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Self {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Rows/cols for a 2-D tensor.
+    pub fn dims2(&self) -> (usize, usize) {
+        assert_eq!(self.ndim(), 2, "expected 2-D, got {:?}", self.shape);
+        (self.shape[0], self.shape[1])
+    }
+
+    /// Row slice of a 2-D tensor.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        let (_, c) = self.dims2();
+        &self.data[r * c..(r + 1) * c]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        let (_, c) = self.dims2();
+        &mut self.data[r * c..(r + 1) * c]
+    }
+
+    /// Reshape (must preserve numel).
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), self.numel());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// 2-D transpose (copy).
+    pub fn t(&self) -> Tensor {
+        let (r, c) = self.dims2();
+        let mut out = Tensor::zeros(&[c, r]);
+        for i in 0..r {
+            for j in 0..c {
+                out.data[j * r + i] = self.data[i * c + j];
+            }
+        }
+        out
+    }
+
+    /// Max |x|.
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |a, &x| a.max(x.abs()))
+    }
+
+    /// Per-column mean of squares for a 2-D tensor — this is
+    /// diag(XXᵀ)/rows in the paper's token-as-column convention.
+    pub fn col_mean_sq(&self) -> Vec<f32> {
+        let (r, c) = self.dims2();
+        let mut out = vec![0.0f32; c];
+        for i in 0..r {
+            let row = self.row(i);
+            for j in 0..c {
+                out[j] += row[j] * row[j];
+            }
+        }
+        let inv = 1.0 / r.max(1) as f32;
+        for v in &mut out {
+            *v *= inv;
+        }
+        out
+    }
+
+    /// Gather columns: out[:, k] = self[:, idx[k]].
+    pub fn select_cols(&self, idx: &[usize]) -> Tensor {
+        let (r, c) = self.dims2();
+        let mut out = Tensor::zeros(&[r, idx.len()]);
+        for i in 0..r {
+            let src = self.row(i);
+            let dst = out.row_mut(i);
+            for (k, &j) in idx.iter().enumerate() {
+                debug_assert!(j < c);
+                dst[k] = src[j];
+            }
+        }
+        out
+    }
+}
+
+/// out = x · wᵀ for x:[m,k], w:[n,k] — the FC-layer convention used by the
+/// model (weights stored [out_features, in_features], like torch Linear).
+pub fn matmul_wt(x: &Tensor, w: &Tensor) -> Tensor {
+    let (m, k) = x.dims2();
+    let (n, k2) = w.dims2();
+    assert_eq!(k, k2, "matmul_wt inner-dim mismatch");
+    let mut out = Tensor::zeros(&[m, n]);
+    for i in 0..m {
+        let xrow = x.row(i);
+        let orow = out.row_mut(i);
+        for j in 0..n {
+            let wrow = w.row(j);
+            let mut acc = 0.0f32;
+            for l in 0..k {
+                acc += xrow[l] * wrow[l];
+            }
+            orow[j] = acc;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reshape_and_dims() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.dims2(), (2, 3));
+        let t2 = t.clone().reshape(&[3, 2]);
+        assert_eq!(t2.dims2(), (3, 2));
+        assert_eq!(t2.data, t.data);
+    }
+
+    #[test]
+    fn transpose_known() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let tt = t.t();
+        assert_eq!(tt.shape, vec![3, 2]);
+        assert_eq!(tt.data, vec![1., 4., 2., 5., 3., 6.]);
+    }
+
+    #[test]
+    fn matmul_wt_matches_manual() {
+        // x: [1,3], w: [2,3] -> out [1,2] with out[j] = <x, w_j>
+        let x = Tensor::from_vec(&[1, 3], vec![1., 2., 3.]);
+        let w = Tensor::from_vec(&[2, 3], vec![1., 0., 0., 0., 1., 1.]);
+        let y = matmul_wt(&x, &w);
+        assert_eq!(y.data, vec![1., 5.]);
+    }
+
+    #[test]
+    fn col_mean_sq_known() {
+        let t = Tensor::from_vec(&[2, 2], vec![1., 2., 3., 4.]);
+        let m = t.col_mean_sq();
+        assert!((m[0] - 5.0).abs() < 1e-6); // (1+9)/2
+        assert!((m[1] - 10.0).abs() < 1e-6); // (4+16)/2
+    }
+
+    #[test]
+    fn select_cols_permutes() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let s = t.select_cols(&[2, 0]);
+        assert_eq!(s.data, vec![3., 1., 6., 4.]);
+    }
+}

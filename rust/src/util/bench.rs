@@ -1,0 +1,181 @@
+//! Micro-benchmark harness (no `criterion` offline).
+//!
+//! Provides warmup + timed iterations with robust statistics (median, p10,
+//! p90, mean) and a black-box to defeat dead-code elimination. Used by the
+//! `cargo bench` targets and the `bwa bench` figure/table regenerators.
+
+use std::time::{Duration, Instant};
+
+/// Prevent the optimizer from deleting a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    // std::hint::black_box is stable since 1.66.
+    std::hint::black_box(x)
+}
+
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p10_ns: f64,
+    pub p90_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchStats {
+    pub fn mean_us(&self) -> f64 {
+        self.mean_ns / 1e3
+    }
+
+    pub fn median_us(&self) -> f64 {
+        self.median_ns / 1e3
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>10.2} us/iter (median {:.2}, p10 {:.2}, p90 {:.2}, n={})",
+            self.name,
+            self.mean_us(),
+            self.median_ns / 1e3,
+            self.p10_ns / 1e3,
+            self.p90_ns / 1e3,
+            self.iters
+        )
+    }
+}
+
+/// Benchmark runner with a wall-clock budget per measurement.
+pub struct Bencher {
+    pub warmup: Duration,
+    pub budget: Duration,
+    pub min_iters: usize,
+    pub max_iters: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(100),
+            budget: Duration::from_millis(500),
+            min_iters: 5,
+            max_iters: 10_000,
+        }
+    }
+}
+
+impl Bencher {
+    /// Quick harness for CI-ish runs.
+    pub fn quick() -> Self {
+        Self {
+            warmup: Duration::from_millis(20),
+            budget: Duration::from_millis(120),
+            min_iters: 3,
+            max_iters: 2_000,
+        }
+    }
+
+    /// Time `f`, which should perform one unit of work and return a value
+    /// that depends on the work (passed through black_box internally).
+    pub fn run<T, F: FnMut() -> T>(&self, name: &str, mut f: F) -> BenchStats {
+        // Warmup and calibrate single-iteration cost.
+        let warm_start = Instant::now();
+        let mut warm_iters = 0usize;
+        while warm_start.elapsed() < self.warmup || warm_iters < 1 {
+            black_box(f());
+            warm_iters += 1;
+            if warm_iters > self.max_iters {
+                break;
+            }
+        }
+
+        let mut samples_ns: Vec<f64> = Vec::new();
+        let start = Instant::now();
+        while (start.elapsed() < self.budget || samples_ns.len() < self.min_iters)
+            && samples_ns.len() < self.max_iters
+        {
+            let t0 = Instant::now();
+            black_box(f());
+            samples_ns.push(t0.elapsed().as_nanos() as f64);
+        }
+
+        samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples_ns.len();
+        let pct = |p: f64| samples_ns[(((n - 1) as f64) * p).round() as usize];
+        BenchStats {
+            name: name.to_string(),
+            iters: n,
+            mean_ns: samples_ns.iter().sum::<f64>() / n as f64,
+            median_ns: pct(0.5),
+            p10_ns: pct(0.1),
+            p90_ns: pct(0.9),
+            min_ns: samples_ns[0],
+        }
+    }
+}
+
+/// Throughput helper: ops (e.g. MACs) per second from a stats record.
+pub fn gops(stats: &BenchStats, ops_per_iter: f64) -> f64 {
+    ops_per_iter / stats.median_ns // ops per ns == Gops/s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let b = Bencher::quick();
+        let stats = b.run("spin", || {
+            let mut acc = 0u64;
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(stats.iters >= 3);
+        assert!(stats.median_ns > 0.0);
+        assert!(stats.p10_ns <= stats.p90_ns);
+        assert!(stats.min_ns <= stats.median_ns);
+    }
+
+    #[test]
+    fn ordering_of_costs() {
+        let b = Bencher::quick();
+        let cheap = b.run("cheap", || {
+            let mut acc = 0u64;
+            for i in 0..100u64 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+            acc
+        });
+        let costly = b.run("costly", || {
+            let mut acc = 0u64;
+            for i in 0..500_000u64 {
+                acc = acc.wrapping_add(black_box(i * i));
+            }
+            acc
+        });
+        assert!(
+            costly.median_ns > cheap.median_ns,
+            "costly {} vs cheap {}",
+            costly.median_ns,
+            cheap.median_ns
+        );
+    }
+
+    #[test]
+    fn gops_scales() {
+        let s = BenchStats {
+            name: "x".into(),
+            iters: 1,
+            mean_ns: 1000.0,
+            median_ns: 1000.0,
+            p10_ns: 1000.0,
+            p90_ns: 1000.0,
+            min_ns: 1000.0,
+        };
+        assert!((gops(&s, 2000.0) - 2.0).abs() < 1e-12);
+    }
+}

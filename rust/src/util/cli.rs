@@ -1,0 +1,215 @@
+//! Hand-rolled command-line parsing (no `clap` offline).
+//!
+//! Supports `bwa <subcommand> [--flag value] [--switch] [positional...]`.
+//! Flags may be given as `--key value` or `--key=value`. Unknown flags are
+//! an error so typos fail loudly.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    pub subcommand: String,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+#[derive(Debug)]
+pub struct CliError(pub String);
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+/// Specification of a subcommand's accepted flags/switches, used for
+/// validation and `--help` rendering.
+pub struct Spec {
+    pub name: &'static str,
+    pub about: &'static str,
+    /// (flag, default-or-"", help)
+    pub flags: &'static [(&'static str, &'static str, &'static str)],
+    pub switches: &'static [(&'static str, &'static str)],
+}
+
+impl Spec {
+    pub fn help(&self) -> String {
+        let mut s = format!("bwa {} — {}\n", self.name, self.about);
+        if !self.flags.is_empty() {
+            s.push_str("\nflags:\n");
+            for (f, d, h) in self.flags {
+                if d.is_empty() {
+                    s.push_str(&format!("  --{f} <v>   {h}\n"));
+                } else {
+                    s.push_str(&format!("  --{f} <v>   {h} (default {d})\n"));
+                }
+            }
+        }
+        if !self.switches.is_empty() {
+            s.push_str("\nswitches:\n");
+            for (f, h) in self.switches {
+                s.push_str(&format!("  --{f}   {h}\n"));
+            }
+        }
+        s
+    }
+}
+
+impl Args {
+    /// Parse raw argv (excluding program name). The first non-flag token is
+    /// the subcommand.
+    pub fn parse(argv: &[String]) -> Result<Args, CliError> {
+        let mut args = Args {
+            subcommand: String::new(),
+            flags: BTreeMap::new(),
+            switches: Vec::new(),
+            positional: Vec::new(),
+        };
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if let Some(rest) = tok.strip_prefix("--") {
+                if let Some(eq) = rest.find('=') {
+                    args.flags
+                        .insert(rest[..eq].to_string(), rest[eq + 1..].to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    args.flags.insert(rest.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    args.switches.push(rest.to_string());
+                }
+            } else if args.subcommand.is_empty() {
+                args.subcommand = tok.clone();
+            } else {
+                args.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+
+    /// Validate against a spec: every provided flag/switch must be declared.
+    pub fn validate(&self, spec: &Spec) -> Result<(), CliError> {
+        for k in self.flags.keys() {
+            if !spec.flags.iter().any(|(f, _, _)| f == k) {
+                return Err(CliError(format!(
+                    "unknown flag --{k} for `{}`\n\n{}",
+                    spec.name,
+                    spec.help()
+                )));
+            }
+        }
+        for k in &self.switches {
+            if k == "help" {
+                continue;
+            }
+            if !spec.switches.iter().any(|(f, _)| f == k) {
+                return Err(CliError(format!(
+                    "unknown switch --{k} for `{}`\n\n{}",
+                    spec.name,
+                    spec.help()
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    pub fn flag(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.flag(key).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize, CliError> {
+        match self.flag(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError(format!("--{key} expects an integer, got '{v}'"))),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64, CliError> {
+        match self.flag(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError(format!("--{key} expects a number, got '{v}'"))),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64, CliError> {
+        match self.flag(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError(format!("--{key} expects an integer, got '{v}'"))),
+        }
+    }
+
+    pub fn switch(&self, key: &str) -> bool {
+        self.switches.iter().any(|s| s == key)
+    }
+
+    pub fn wants_help(&self) -> bool {
+        self.switch("help")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|t| t.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_subcommand_flags_switches() {
+        let a = Args::parse(&argv("quantize --model tiny --bits 2 pos1 --verbose")).unwrap();
+        assert_eq!(a.subcommand, "quantize");
+        assert_eq!(a.flag("model"), Some("tiny"));
+        assert_eq!(a.usize_or("bits", 4).unwrap(), 2);
+        assert!(a.switch("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = Args::parse(&argv("eval --ppl-set=wiki --seq=128")).unwrap();
+        assert_eq!(a.flag("ppl-set"), Some("wiki"));
+        assert_eq!(a.usize_or("seq", 0).unwrap(), 128);
+    }
+
+    #[test]
+    fn trailing_switch() {
+        let a = Args::parse(&argv("bench --exp fig3 --quick")).unwrap();
+        assert_eq!(a.flag("exp"), Some("fig3"));
+        assert!(a.switch("quick"));
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = Args::parse(&argv("x --n abc")).unwrap();
+        assert!(a.usize_or("n", 1).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_unknown() {
+        static SPEC: Spec = Spec {
+            name: "t",
+            about: "test",
+            flags: &[("model", "tiny", "model name")],
+            switches: &[("quick", "fast mode")],
+        };
+        let ok = Args::parse(&argv("t --model x --quick")).unwrap();
+        assert!(ok.validate(&SPEC).is_ok());
+        let bad = Args::parse(&argv("t --nope 3")).unwrap();
+        assert!(bad.validate(&SPEC).is_err());
+    }
+}

@@ -1,0 +1,99 @@
+//! Repo config files (configs/*.json): one place for model, quantization,
+//! calibration, and serving knobs so experiments scale up unchanged
+//! (DESIGN.md §5 "All knobs live in configs/*.json").
+
+use crate::model::config::ModelConfig;
+use crate::quant::actquant::{ActQuantConfig, BalanceMode};
+use crate::quant::binarize::BwaConfig;
+use crate::util::json::Json;
+use std::path::Path;
+
+#[derive(Debug)]
+pub struct RepoConfig {
+    pub model: ModelConfig,
+    pub quant: BwaConfig,
+    pub calib_seqs: usize,
+    pub calib_len: usize,
+    pub calib_seed: u64,
+    pub serve_max_batch: usize,
+    pub serve_max_wait_us: u64,
+}
+
+impl RepoConfig {
+    pub fn parse(text: &str) -> Result<RepoConfig, String> {
+        let j = Json::parse(text).map_err(|e| e.to_string())?;
+        let model = ModelConfig::from_json(j.get("model"));
+        let q = j.get("quant");
+        let balance = match q.str_or("act_balance", "paper") {
+            "none" => BalanceMode::None,
+            "ls" | "least-squares" => BalanceMode::LeastSquares,
+            _ => BalanceMode::Paper,
+        };
+        let quant = BwaConfig {
+            group_size: q.usize_or("group_size", 64),
+            outlier_groups: q.usize_or("outlier_groups", 1),
+            em_iters: q.usize_or("em_iters", 12),
+            act: ActQuantConfig {
+                bits: q.usize_or("act_bits", 4) as u32,
+                balance,
+            },
+            percdamp: q.f64_or("percdamp", 0.01),
+            ..BwaConfig::default()
+        };
+        let c = j.get("calibration");
+        let s = j.get("serve");
+        Ok(RepoConfig {
+            model,
+            quant,
+            calib_seqs: c.usize_or("n_seqs", 16),
+            calib_len: c.usize_or("seq_len", 96),
+            calib_seed: c.usize_or("seed", 17) as u64,
+            serve_max_batch: s.usize_or("max_batch", 8),
+            serve_max_wait_us: s.usize_or("max_wait_us", 2000) as u64,
+        })
+    }
+
+    pub fn load(path: &Path) -> Result<RepoConfig, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("{}: {e}", path.display()))?;
+        Self::parse(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_repo_config_files() {
+        for name in ["configs/tiny.json", "configs/tiny-13b.json"] {
+            let path = Path::new(name);
+            if !path.exists() {
+                continue; // running from another cwd
+            }
+            let cfg = RepoConfig::load(path).unwrap();
+            assert_eq!(cfg.quant.group_size, 64);
+            assert!(cfg.model.d_model % cfg.quant.group_size == 0);
+            assert_eq!(cfg.quant.act.bits, 4);
+            assert!(cfg.serve_max_batch >= 1);
+        }
+    }
+
+    #[test]
+    fn parse_handles_balance_modes() {
+        let base = r#"{"model":{},"quant":{"act_balance":"%B%"},"calibration":{},"serve":{}}"#;
+        for (s, want) in [
+            ("none", BalanceMode::None),
+            ("paper", BalanceMode::Paper),
+            ("ls", BalanceMode::LeastSquares),
+        ] {
+            let cfg = RepoConfig::parse(&base.replace("%B%", s)).unwrap();
+            assert_eq!(cfg.quant.act.balance, want);
+        }
+    }
+
+    #[test]
+    fn rejects_invalid_json() {
+        assert!(RepoConfig::parse("{nope").is_err());
+    }
+}

@@ -1,0 +1,91 @@
+//! Substrate utilities built from scratch for the offline environment:
+//! PRNG, JSON, CLI parsing, thread pool, bench harness, property testing,
+//! and misc numeric helpers.
+
+pub mod bench;
+pub mod config;
+pub mod cli;
+pub mod json;
+pub mod pool;
+pub mod prop;
+pub mod rng;
+
+/// Softmax over a slice in place (numerically stable).
+pub fn softmax_inplace(xs: &mut [f32]) {
+    if xs.is_empty() {
+        return;
+    }
+    let max = xs.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    let mut sum = 0.0f32;
+    for x in xs.iter_mut() {
+        *x = (*x - max).exp();
+        sum += *x;
+    }
+    let inv = 1.0 / sum;
+    for x in xs.iter_mut() {
+        *x *= inv;
+    }
+}
+
+/// log(sum(exp(xs))) (numerically stable).
+pub fn log_sum_exp(xs: &[f32]) -> f32 {
+    let max = xs.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    if !max.is_finite() {
+        return max;
+    }
+    let sum: f32 = xs.iter().map(|&x| (x - max).exp()).sum();
+    max + sum.ln()
+}
+
+/// Mean of a slice.
+pub fn mean(xs: &[f32]) -> f32 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f32>() / xs.len() as f32
+}
+
+/// Argmax index (first on ties); panics on empty input.
+pub fn argmax(xs: &[f32]) -> usize {
+    assert!(!xs.is_empty());
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let mut v = vec![1.0f32, 2.0, 3.0, -1.0];
+        softmax_inplace(&mut v);
+        let s: f32 = v.iter().sum();
+        assert!((s - 1.0).abs() < 1e-6);
+        assert!(v[2] > v[1] && v[1] > v[0] && v[0] > v[3]);
+    }
+
+    #[test]
+    fn softmax_handles_large_values() {
+        let mut v = vec![1000.0f32, 1000.0];
+        softmax_inplace(&mut v);
+        assert!((v[0] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn lse_matches_naive_for_small() {
+        let xs = [0.1f32, 0.7, -0.3];
+        let naive = xs.iter().map(|x| x.exp()).sum::<f32>().ln();
+        assert!((log_sum_exp(&xs) - naive).abs() < 1e-6);
+    }
+
+    #[test]
+    fn argmax_first_on_ties() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0]), 1);
+    }
+}

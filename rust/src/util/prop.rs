@@ -1,0 +1,116 @@
+//! Lightweight property-testing helpers (no `proptest` offline).
+//!
+//! [`check`] runs a property over `cases` randomized inputs drawn from a
+//! generator; on failure it reports the failing case index and seed so the
+//! run can be reproduced exactly. Shrinking is intentionally out of scope —
+//! generators here produce small structured inputs already.
+
+use super::rng::Rng;
+
+/// Run `prop(rng)` for `cases` cases; each case gets an independent RNG
+/// stream derived from `seed`. Panics with the case seed on failure.
+pub fn check<F>(name: &str, seed: u64, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let mut root = Rng::new(seed);
+    for case in 0..cases {
+        let mut rng = root.fork(case as u64);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property '{name}' failed at case {case} (seed {seed}): {msg}");
+        }
+    }
+}
+
+/// Assert two slices are elementwise close.
+pub fn assert_close(a: &[f32], b: &[f32], atol: f32, rtol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b.iter()).enumerate() {
+        let tol = atol + rtol * y.abs().max(x.abs());
+        if (x - y).abs() > tol || x.is_nan() != y.is_nan() {
+            return Err(format!("element {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+/// Max absolute difference between two slices.
+pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter()
+        .zip(b.iter())
+        .map(|(&x, &y)| (x - y).abs())
+        .fold(0.0f32, f32::max)
+}
+
+/// Relative Frobenius error ||a-b|| / (||b|| + eps).
+pub fn rel_err(a: &[f32], b: &[f32]) -> f32 {
+    let num: f32 = a
+        .iter()
+        .zip(b.iter())
+        .map(|(&x, &y)| (x - y) * (x - y))
+        .sum::<f32>()
+        .sqrt();
+    let den: f32 = b.iter().map(|&y| y * y).sum::<f32>().sqrt();
+    num / (den + 1e-12)
+}
+
+/// Random matrix generator with controllable scale + occasional outliers,
+/// matching LLM activation statistics (heavy-tailed channels).
+pub fn gen_matrix(rng: &mut Rng, rows: usize, cols: usize, outlier_frac: f64) -> Vec<f32> {
+    let mut m = rng.normal_vec_f32(rows * cols, 0.0, 1.0);
+    if outlier_frac > 0.0 {
+        let n_out = ((cols as f64) * outlier_frac).ceil() as usize;
+        let out_cols = rng.sample_indices(cols, n_out.min(cols));
+        for r in 0..rows {
+            for &c in &out_cols {
+                m[r * cols + c] *= rng.range_f64(5.0, 20.0) as f32;
+            }
+        }
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check("sum-commutes", 1, 50, |rng| {
+            let a = rng.f64();
+            let b = rng.f64();
+            if (a + b - (b + a)).abs() < 1e-15 {
+                Ok(())
+            } else {
+                Err("addition not commutative?!".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn check_reports_failures() {
+        check("always-fails", 2, 3, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn close_and_diff_helpers() {
+        let a = [1.0f32, 2.0, 3.0];
+        let b = [1.0f32, 2.0005, 3.0];
+        assert!(assert_close(&a, &b, 1e-3, 0.0).is_ok());
+        assert!(assert_close(&a, &b, 1e-5, 0.0).is_err());
+        assert!((max_abs_diff(&a, &b) - 0.0005).abs() < 1e-6);
+        assert!(rel_err(&a, &a) < 1e-9);
+    }
+
+    #[test]
+    fn gen_matrix_has_outliers() {
+        let mut rng = Rng::new(3);
+        let m = gen_matrix(&mut rng, 64, 64, 0.05);
+        let max = m.iter().fold(0.0f32, |acc, &x| acc.max(x.abs()));
+        assert!(max > 4.0, "expected outlier channels, max {max}");
+        assert_eq!(m.len(), 64 * 64);
+    }
+}

@@ -1,0 +1,206 @@
+//! Cross-module and cross-layer integration tests.
+//!
+//! Tests that need trained checkpoints / AOT artifacts skip gracefully
+//! when `make artifacts` has not run (CI bootstrap order).
+
+use bwa_llm::baselines;
+use bwa_llm::data::corpus::CorpusSpec;
+use bwa_llm::eval::{evaluate, EvalBudget};
+use bwa_llm::kernels::bwa_gemm::BwaGemm;
+use bwa_llm::model::checkpoint::Checkpoint;
+use bwa_llm::model::{quantize_model, Transformer};
+use bwa_llm::quant::{BwaQuantizer, FpQuantizer};
+use bwa_llm::util::prop::rel_err;
+use std::path::Path;
+
+fn artifacts() -> Option<&'static Path> {
+    let p = Path::new("artifacts");
+    if p.join("models/llama1-7b.bin").exists() {
+        Some(p)
+    } else {
+        None
+    }
+}
+
+fn calib() -> Vec<Vec<u16>> {
+    let train = bwa_llm::data::corpus::train_split(&CorpusSpec::wiki(), 100_000);
+    bwa_llm::data::calibration_windows(&train, 8, 96, 17)
+}
+
+#[test]
+fn trained_model_beats_chance_and_quantized_tracks_fp() {
+    let Some(dir) = artifacts() else {
+        eprintln!("skipped: run `make artifacts`");
+        return;
+    };
+    let ck = Checkpoint::load(&dir.join("models/llama1-7b.bin")).unwrap();
+    let budget = EvalBudget {
+        ppl_tokens: 512,
+        seq_len: 96,
+        zs_items: 16,
+        mmlu_items: 8,
+    };
+    let fp = quantize_model(&ck, &FpQuantizer, &calib(), None).unwrap();
+    let r_fp = evaluate(&fp, "fp", &budget, 3);
+    // the trained model must have learned the fact structure
+    assert!(r_fp.ppl[0].1 < 60.0, "wiki ppl {}", r_fp.ppl[0].1);
+    assert!(r_fp.zs_avg > 0.55, "zs avg {}", r_fp.zs_avg);
+
+    let q = quantize_model(&ck, &BwaQuantizer::paper(), &calib(), Some(4)).unwrap();
+    let r_q = evaluate(&q, "bwa", &budget, 3);
+    // W(1+1)A(1x4) stays close to FP (the paper's headline)
+    assert!(
+        r_q.ppl[0].1 < r_fp.ppl[0].1 * 1.6,
+        "bwa ppl {} vs fp {}",
+        r_q.ppl[0].1,
+        r_fp.ppl[0].1
+    );
+    assert!(r_q.zs_avg > r_fp.zs_avg - 0.15);
+}
+
+#[test]
+fn bwa_beats_w2a4_baselines_on_trained_model() {
+    let Some(dir) = artifacts() else {
+        eprintln!("skipped: run `make artifacts`");
+        return;
+    };
+    let ck = Checkpoint::load(&dir.join("models/llama1-7b.bin")).unwrap();
+    let budget = EvalBudget {
+        ppl_tokens: 512,
+        seq_len: 96,
+        zs_items: 8,
+        mmlu_items: 8,
+    };
+    let ours = quantize_model(&ck, &BwaQuantizer::paper(), &calib(), Some(4)).unwrap();
+    let p_ours = evaluate(&ours, "ours", &budget, 3).ppl[0].1;
+
+    let gptq1 = baselines::by_name("gptq-w1a4").unwrap();
+    let g = quantize_model(&ck, gptq1.as_ref(), &calib(), Some(4)).unwrap();
+    let p_gptq1 = evaluate(&g, "gptq-w1a4", &budget, 3).ppl[0].1;
+
+    // W1A4 GPTQ collapses relative to ours (Figure 1 / Table 5 shape)
+    assert!(
+        p_gptq1 > 2.0 * p_ours,
+        "gptq-w1a4 {p_gptq1} should collapse vs ours {p_ours}"
+    );
+}
+
+/// One test covers both PJRT artifacts. The PJRT CPU plugin does not
+/// survive a client destroy/recreate cycle within one process (buffer
+/// bookkeeping aborts on the second client), so the transformer and
+/// kernel sessions are created in one test with overlapping lifetimes —
+/// the same discipline the serving coordinator follows (one client per
+/// process, built on the batcher thread).
+#[test]
+fn pjrt_artifacts_match_native_and_kernel_contract() {
+    let Some(dir) = artifacts() else {
+        eprintln!("skipped: run `make artifacts`");
+        return;
+    };
+    if !dir.join("transformer_fp.hlo.txt").exists() || !dir.join("bwa_linear.hlo.txt").exists()
+    {
+        eprintln!("skipped: no AOT artifacts");
+        return;
+    }
+    // --- transformer artifact vs native forward ---
+    let ck = Checkpoint::load(&dir.join("models/llama1-7b.bin")).unwrap();
+    let native = Transformer::fp_from_checkpoint(&ck).unwrap();
+    let session = bwa_llm::runtime::TransformerSession::load(dir, &ck).unwrap();
+
+    let tokens: Vec<u16> = bwa_llm::data::corpus::train_split(&CorpusSpec::wiki(), 200)
+        [..session.seq]
+        .to_vec();
+    let pjrt_logits = session.forward(&tokens).unwrap();
+    let native_logits = native.forward(&tokens);
+    let err = rel_err(&pjrt_logits, &native_logits.data);
+    // Same checkpoint, two independent implementations (JAX->HLO->PJRT vs
+    // pure Rust): logits must agree tightly.
+    assert!(err < 5e-3, "pjrt vs native rel err {err}");
+
+    // --- Pallas kernel artifact (keep the transformer session alive) ---
+    let kernel = bwa_llm::runtime::KernelSession::load(dir).unwrap();
+    run_kernel_contract(&kernel);
+    drop(session);
+}
+
+fn run_kernel_contract(session: &bwa_llm::runtime::KernelSession) {
+    let m = &session.manifest;
+    let t = m.usize_or("tokens", 4);
+    let o = m.usize_or("out_features", 192);
+    let n = m.usize_or("in_features", 192);
+    let g = m.usize_or("group_size", 64);
+    let ng = n / g;
+
+    // all-zero bit planes + unit scales -> y = shift*wsum exactly
+    let shift_val = 0.25f32;
+    let wsum_val = 2.0f32;
+    let inputs: Vec<(Vec<usize>, Vec<f32>)> = vec![
+        (vec![t, 4, n], vec![0.0; t * 4 * n]),
+        (vec![t, 4], vec![1.0; t * 4]),
+        (vec![t], vec![shift_val; t]),
+        (vec![o, n], vec![0.0; o * n]),
+        (vec![o, n], vec![0.0; o * n]),
+        (vec![o, ng, 2], vec![0.1; o * ng * 2]),
+        (vec![o, ng, 2], vec![0.0; o * ng * 2]),
+        (vec![o], vec![wsum_val; o]),
+    ];
+    let y = session.run(&inputs).unwrap();
+    assert_eq!(y.len(), t * o);
+    for &v in &y {
+        assert!((v - shift_val * wsum_val).abs() < 1e-5, "{v}");
+    }
+}
+
+#[test]
+fn binary_gemm_matches_fake_path_on_quantized_checkpoint_layer() {
+    let Some(dir) = artifacts() else {
+        eprintln!("skipped: run `make artifacts`");
+        return;
+    };
+    let ck = Checkpoint::load(&dir.join("models/llama1-7b.bin")).unwrap();
+    let w = ck.get("layers.0.wq").unwrap();
+    let mut x = bwa_llm::tensor::Tensor::zeros(&[64, w.dims2().1]);
+    let mut rng = bwa_llm::util::rng::Rng::new(5);
+    for v in &mut x.data {
+        *v = rng.normal_f32(0.0, 1.0);
+    }
+    let lin = bwa_llm::quant::binarize::quantize_bwa(
+        w,
+        &x,
+        &bwa_llm::quant::binarize::BwaConfig::paper(),
+    );
+    let xt = bwa_llm::tensor::Tensor::from_vec(
+        &[3, w.dims2().1],
+        rng.normal_vec_f32(3 * w.dims2().1, 0.0, 1.0),
+    );
+    let fake = lin.forward(&xt);
+    let bits = BwaGemm::prepare(&lin).forward(&xt);
+    let err = rel_err(&bits.data, &fake.data);
+    assert!(err < 0.02, "bit path err {err}");
+}
+
+#[test]
+fn serve_coordinator_over_quantized_model() {
+    use bwa_llm::coordinator::batcher::{Backend, BatcherConfig};
+    use bwa_llm::coordinator::{serve_workload, NativeBackend};
+    let Some(dir) = artifacts() else {
+        eprintln!("skipped: run `make artifacts`");
+        return;
+    };
+    let ck = Checkpoint::load(&dir.join("models/llama1-7b.bin")).unwrap();
+    let report = serve_workload(
+        move || {
+            let model = quantize_model(&ck, &BwaQuantizer::paper(), &calib(), Some(4)).unwrap();
+            Box::new(NativeBackend {
+                model,
+                label: "it-bwa".into(),
+            }) as Box<dyn Backend>
+        },
+        16,
+        2,
+        12,
+        BatcherConfig::default(),
+        9,
+    );
+    assert!(report.contains("requests:    16"), "{report}");
+}
