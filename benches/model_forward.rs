@@ -1,10 +1,13 @@
-//! `cargo bench` target: transformer forward throughput (FP vs BWA fake
-//! path vs incremental INT4-KV decode) + coordinator overhead.
+//! `cargo bench` target: transformer forward throughput (FP, BWA
+//! fake-quant-dense vs compiled popcount, incremental INT4-KV decode) +
+//! coordinator overhead.
 
 use bwa_llm::coordinator::batcher::{Backend, BatcherConfig};
 use bwa_llm::coordinator::{serve_workload, NativeBackend};
+use bwa_llm::model::checkpoint::Checkpoint;
 use bwa_llm::model::config::ModelConfig;
-use bwa_llm::model::Transformer;
+use bwa_llm::model::{quantize_model, Transformer};
+use bwa_llm::quant::BwaQuantizer;
 use bwa_llm::util::bench::{black_box, Bencher};
 use bwa_llm::util::rng::Rng;
 use std::time::Duration;
@@ -28,6 +31,33 @@ fn main() {
         }
     });
     println!("{}  ({:.0} tok/s incremental)", s.report(), 16.0 / (s.median_ns / 1e9));
+
+    // fake-quant-dense vs compiled popcount on a BWA-quantized model: the
+    // tentpole speedup — model.forward runs the packed BwaGemm execs,
+    // model.forward_reference runs the old dense w_hat loop.
+    let ck = Checkpoint::random(&cfg, 11);
+    let calib: Vec<Vec<u16>> = (0..4)
+        .map(|_| (0..48).map(|_| rng.below(cfg.vocab_size) as u16).collect())
+        .collect();
+    let t0 = std::time::Instant::now();
+    let bwa = quantize_model(&ck, &BwaQuantizer::paper(), &calib, Some(4)).expect("quantize");
+    println!(
+        "quantized tiny model with BWA in {:.1}s ({:.2} mean weight bits)",
+        t0.elapsed().as_secs_f64(),
+        bwa.mean_weight_bits()
+    );
+    let dense = bencher.run("bwa fake-quant dense forward 96 tok", || {
+        black_box(bwa.forward_reference(&tokens))
+    });
+    println!("{}  ({:.0} tok/s)", dense.report(), 96.0 / (dense.median_ns / 1e9));
+    let packed = bencher.run("bwa compiled popcount forward 96 tok", || {
+        black_box(bwa.forward(&tokens))
+    });
+    println!("{}  ({:.0} tok/s)", packed.report(), 96.0 / (packed.median_ns / 1e9));
+    println!(
+        "popcount speedup over fake-quant dense: {:.2}x",
+        dense.median_ns / packed.median_ns
+    );
 
     // coordinator overhead: mock-fast backend vs direct calls
     struct NoopBackend;

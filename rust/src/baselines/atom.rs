@@ -7,7 +7,7 @@
 use super::common::{gptq_block_loop, ActTransform, FakeQuantLinear, RtnGrid};
 use crate::quant::hessian::{reorder_by_scales, Hessian};
 use crate::quant::outlier::OutlierPart;
-use crate::quant::{QuantLinear, Quantizer};
+use crate::quant::{check_calib, LayerCtx, QuantError, QuantLinear, Quantizer};
 use crate::tensor::Tensor;
 
 pub struct AtomQuantizer {
@@ -33,7 +33,13 @@ impl Quantizer for AtomQuantizer {
         format!("Atom W{}A{}", self.wbits, self.abits)
     }
 
-    fn quantize_linear(&self, w: &Tensor, calib: &Tensor) -> Box<dyn QuantLinear> {
+    fn quantize_linear(
+        &self,
+        ctx: &LayerCtx,
+        w: &Tensor,
+        calib: &Tensor,
+    ) -> Result<Box<dyn QuantLinear>, QuantError> {
+        check_calib(ctx, w, calib)?;
         let (out_f, in_f) = w.dims2();
         let n_outlier = (self.outlier_groups * self.group_size).min(in_f / 2);
         let n_norm = in_f - n_outlier;
@@ -72,7 +78,7 @@ impl Quantizer for AtomQuantizer {
             + outlier.bytes();
         let wbits_eff = (n_norm as f64 * self.wbits as f64 + n_outlier as f64 * 8.0)
             / in_f as f64;
-        Box::new(FakeQuantLinear {
+        Ok(Box::new(FakeQuantLinear {
             w_hat,
             transform: ActTransform::Permute(perm),
             act_bits: Some(self.abits),
@@ -80,7 +86,7 @@ impl Quantizer for AtomQuantizer {
             outlier: Some(outlier),
             wbits_eff,
             bytes,
-        })
+        }))
     }
 }
 
@@ -104,11 +110,15 @@ mod tests {
         (w, x)
     }
 
+    fn ctx() -> LayerCtx {
+        LayerCtx::other("test")
+    }
+
     #[test]
     fn atom_w4a4_close_to_fp_despite_outliers() {
         let mut rng = Rng::new(1);
         let (w, x) = setup(&mut rng);
-        let q = AtomQuantizer::new(4, 4).quantize_linear(&w, &x);
+        let q = AtomQuantizer::new(4, 4).quantize_linear(&ctx(), &w, &x).unwrap();
         let y = q.forward(&x);
         let want = crate::tensor::matmul_wt(&x, &w);
         let err = prop::rel_err(&y.data, &want.data);
@@ -120,8 +130,10 @@ mod tests {
         let mut rng = Rng::new(2);
         let (w, x) = setup(&mut rng);
         let want = crate::tensor::matmul_wt(&x, &w);
-        let atom = AtomQuantizer::new(4, 4).quantize_linear(&w, &x);
-        let gptq = super::super::gptq_rtn::GptqQuantizer::new(4, Some(4)).quantize_linear(&w, &x);
+        let atom = AtomQuantizer::new(4, 4).quantize_linear(&ctx(), &w, &x).unwrap();
+        let gptq = super::super::gptq_rtn::GptqQuantizer::new(4, Some(4))
+            .quantize_linear(&ctx(), &w, &x)
+            .unwrap();
         let e_atom = prop::rel_err(&atom.forward(&x).data, &want.data);
         let e_gptq = prop::rel_err(&gptq.forward(&x).data, &want.data);
         assert!(
@@ -140,11 +152,19 @@ mod tests {
         let (_, xt) = setup(&mut rng);
         let want = crate::tensor::matmul_wt(&xt, &w);
         let e4 = prop::rel_err(
-            &AtomQuantizer::new(4, 8).quantize_linear(&w, &x).forward(&xt).data,
+            &AtomQuantizer::new(4, 8)
+                .quantize_linear(&ctx(), &w, &x)
+                .unwrap()
+                .forward(&xt)
+                .data,
             &want.data,
         );
         let e2 = prop::rel_err(
-            &AtomQuantizer::new(2, 8).quantize_linear(&w, &x).forward(&xt).data,
+            &AtomQuantizer::new(2, 8)
+                .quantize_linear(&ctx(), &w, &x)
+                .unwrap()
+                .forward(&xt)
+                .data,
             &want.data,
         );
         assert!(e2 > 2.0 * e4, "{e2} vs {e4}");
@@ -154,7 +174,7 @@ mod tests {
     fn effective_weight_bits_mixes_int8_tail() {
         let mut rng = Rng::new(4);
         let (w, x) = setup(&mut rng);
-        let q = AtomQuantizer::new(4, 4).quantize_linear(&w, &x);
+        let q = AtomQuantizer::new(4, 4).quantize_linear(&ctx(), &w, &x).unwrap();
         let bits = q.weight_bits();
         assert!(bits > 4.0 && bits < 6.0, "{bits}");
     }

@@ -13,7 +13,7 @@
 
 use super::common::{ActTransform, FakeQuantLinear};
 use crate::quant::hessian::Hessian;
-use crate::quant::{QuantLinear, Quantizer};
+use crate::quant::{check_calib, LayerCtx, QuantError, QuantLinear, Quantizer};
 use crate::tensor::Tensor;
 
 pub struct BillmQuantizer {
@@ -101,7 +101,13 @@ impl Quantizer for BillmQuantizer {
         }
     }
 
-    fn quantize_linear(&self, w: &Tensor, calib: &Tensor) -> Box<dyn QuantLinear> {
+    fn quantize_linear(
+        &self,
+        ctx: &LayerCtx,
+        w: &Tensor,
+        calib: &Tensor,
+    ) -> Result<Box<dyn QuantLinear>, QuantError> {
+        check_calib(ctx, w, calib)?;
         let (out_f, in_f) = w.dims2();
         let h = Hessian::from_activations(calib, 0.01);
         let importance = h.importance(0, in_f);
@@ -150,7 +156,7 @@ impl Quantizer for BillmQuantizer {
 
         // ~2 bits/element storage (sign + group bitmap) + per-group scales
         let bytes = out_f * in_f / 4 + out_f * (in_f / self.group_size) * 6;
-        Box::new(FakeQuantLinear {
+        Ok(Box::new(FakeQuantLinear {
             w_hat,
             transform: ActTransform::None,
             act_bits: self.abits,
@@ -158,7 +164,7 @@ impl Quantizer for BillmQuantizer {
             outlier: None,
             wbits_eff: 2.0,
             bytes,
-        })
+        }))
     }
 }
 
@@ -213,8 +219,9 @@ mod tests {
             x.data[t * in_f + 9] *= 30.0; // strong activation outlier
         }
         let want = crate::tensor::matmul_wt(&x, &w);
-        let a16 = BillmQuantizer::new(None).quantize_linear(&w, &x);
-        let a4 = BillmQuantizer::new(Some(4)).quantize_linear(&w, &x);
+        let ctx = LayerCtx::other("test");
+        let a16 = BillmQuantizer::new(None).quantize_linear(&ctx, &w, &x).unwrap();
+        let a4 = BillmQuantizer::new(Some(4)).quantize_linear(&ctx, &w, &x).unwrap();
         let e16 = prop::rel_err(&a16.forward(&x).data, &want.data);
         let e4 = prop::rel_err(&a4.forward(&x).data, &want.data);
         assert!(e16 < 0.5, "A16 err {e16}");

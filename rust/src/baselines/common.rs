@@ -7,12 +7,13 @@
 use crate::quant::hessian::Hessian;
 use crate::quant::outlier::OutlierPart;
 use crate::quant::rtn::RtnParams;
-use crate::quant::QuantLinear;
+use crate::quant::{FallbackExec, LinearExec, QuantLinear};
 use crate::tensor::Tensor;
 
 use super::quarot::Hadamard;
 
 /// How a baseline transforms + quantizes the layer input.
+#[derive(Clone)]
 pub enum ActTransform {
     /// Identity (FP or plain per-token RTN on the raw channels).
     None,
@@ -24,6 +25,7 @@ pub enum ActTransform {
 }
 
 /// Fake-quant linear used by all baselines.
+#[derive(Clone)]
 pub struct FakeQuantLinear {
     /// Dequantized weights [out, in] in *transformed* input space.
     pub w_hat: Tensor,
@@ -97,6 +99,13 @@ impl QuantLinear for FakeQuantLinear {
 
     fn bytes(&self) -> usize {
         self.bytes
+    }
+
+    /// Baselines have no packed binary path: the plan is the fake-quant
+    /// reference math itself, owned by a [`FallbackExec`].
+    fn compile(&self) -> Box<dyn LinearExec> {
+        let out_features = self.w_hat.dims2().0;
+        Box::new(FallbackExec::new(self.clone(), out_features))
     }
 }
 

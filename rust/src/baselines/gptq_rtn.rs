@@ -5,7 +5,7 @@
 
 use super::common::{gptq_block_loop, ActTransform, FakeQuantLinear, RtnGrid};
 use crate::quant::hessian::Hessian;
-use crate::quant::{QuantLinear, Quantizer};
+use crate::quant::{check_calib, LayerCtx, QuantError, QuantLinear, Quantizer};
 use crate::tensor::Tensor;
 
 pub struct GptqQuantizer {
@@ -33,14 +33,20 @@ impl Quantizer for GptqQuantizer {
         }
     }
 
-    fn quantize_linear(&self, w: &Tensor, calib: &Tensor) -> Box<dyn QuantLinear> {
+    fn quantize_linear(
+        &self,
+        ctx: &LayerCtx,
+        w: &Tensor,
+        calib: &Tensor,
+    ) -> Result<Box<dyn QuantLinear>, QuantError> {
+        check_calib(ctx, w, calib)?;
         let (out_f, in_f) = w.dims2();
         let h = Hessian::from_activations(calib, 0.01);
         let grid = RtnGrid { bits: self.wbits };
         let w_hat = gptq_block_loop(w, &h, self.group_size, in_f, &grid, true);
         let bytes = out_f * in_f * self.wbits as usize / 8
             + out_f * (in_f / self.group_size) * 4;
-        Box::new(FakeQuantLinear {
+        Ok(Box::new(FakeQuantLinear {
             w_hat,
             transform: ActTransform::None,
             act_bits: self.abits,
@@ -48,7 +54,7 @@ impl Quantizer for GptqQuantizer {
             outlier: None,
             wbits_eff: self.wbits as f64,
             bytes,
-        })
+        }))
     }
 }
 
@@ -65,13 +71,19 @@ mod tests {
         (w, x)
     }
 
+    fn ctx() -> LayerCtx {
+        LayerCtx::other("test")
+    }
+
     #[test]
     fn w4_close_w2_worse_w1_terrible() {
         let mut rng = Rng::new(1);
         let (w, x) = setup(&mut rng);
         let want = crate::tensor::matmul_wt(&x, &w);
         let err = |bits: u32| {
-            let q = GptqQuantizer::new(bits, Some(4)).quantize_linear(&w, &x);
+            let q = GptqQuantizer::new(bits, Some(4))
+                .quantize_linear(&ctx(), &w, &x)
+                .unwrap();
             prop::rel_err(&q.forward(&x).data, &want.data)
         };
         let (e4, e2, e1) = (err(4), err(2), err(1));
@@ -85,7 +97,9 @@ mod tests {
     fn weight_only_has_fp_acts() {
         let mut rng = Rng::new(2);
         let (w, x) = setup(&mut rng);
-        let q = GptqQuantizer::new(4, None).quantize_linear(&w, &x);
+        let q = GptqQuantizer::new(4, None)
+            .quantize_linear(&ctx(), &w, &x)
+            .unwrap();
         assert_eq!(q.act_bits(), 16.0);
         assert_eq!(q.weight_bits(), 4.0);
     }

@@ -12,7 +12,7 @@
 
 use super::common::{gptq_block_loop, ActTransform, FakeQuantLinear, RtnGrid};
 use crate::quant::hessian::Hessian;
-use crate::quant::{QuantLinear, Quantizer};
+use crate::quant::{check_calib, LayerCtx, QuantError, QuantLinear, Quantizer};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
@@ -116,7 +116,13 @@ impl Quantizer for QuarotQuantizer {
         format!("QuaRot W{}A{}", self.wbits, self.abits)
     }
 
-    fn quantize_linear(&self, w: &Tensor, calib: &Tensor) -> Box<dyn QuantLinear> {
+    fn quantize_linear(
+        &self,
+        ctx: &LayerCtx,
+        w: &Tensor,
+        calib: &Tensor,
+    ) -> Result<Box<dyn QuantLinear>, QuantError> {
+        check_calib(ctx, w, calib)?;
         let (out_f, in_f) = w.dims2();
         let had = Hadamard::new(in_f, self.seed ^ in_f as u64);
         // Rotate weights: w' = W·Qᵀ, i.e. rotate each weight row (Q is
@@ -135,7 +141,7 @@ impl Quantizer for QuarotQuantizer {
         let w_hat = gptq_block_loop(&w_rot, &h, self.group_size, in_f, &grid, true);
         let bytes = out_f * in_f * self.wbits as usize / 8
             + out_f * (in_f / self.group_size) * 4;
-        Box::new(FakeQuantLinear {
+        Ok(Box::new(FakeQuantLinear {
             w_hat,
             transform: ActTransform::Rotate(had),
             act_bits: Some(self.abits),
@@ -143,7 +149,7 @@ impl Quantizer for QuarotQuantizer {
             outlier: None,
             wbits_eff: self.wbits as f64,
             bytes,
-        })
+        }))
     }
 }
 
@@ -213,7 +219,9 @@ mod tests {
         for t in 0..64 {
             x.data[t * in_f + 11] *= 20.0;
         }
-        let q = QuarotQuantizer::new(4, 4).quantize_linear(&w, &x);
+        let q = QuarotQuantizer::new(4, 4)
+            .quantize_linear(&LayerCtx::other("test"), &w, &x)
+            .unwrap();
         let y = q.forward(&x);
         let want = crate::tensor::matmul_wt(&x, &w);
         let err = prop::rel_err(&y.data, &want.data);
@@ -227,12 +235,21 @@ mod tests {
         let w = Tensor::from_vec(&[out_f, in_f], rng.normal_vec_f32(out_f * in_f, 0.0, 0.1));
         let x = Tensor::from_vec(&[48, in_f], rng.normal_vec_f32(48 * in_f, 0.0, 1.0));
         let want = crate::tensor::matmul_wt(&x, &w);
+        let ctx = LayerCtx::other("test");
         let e4 = prop::rel_err(
-            &QuarotQuantizer::new(4, 4).quantize_linear(&w, &x).forward(&x).data,
+            &QuarotQuantizer::new(4, 4)
+                .quantize_linear(&ctx, &w, &x)
+                .unwrap()
+                .forward(&x)
+                .data,
             &want.data,
         );
         let e2 = prop::rel_err(
-            &QuarotQuantizer::new(2, 4).quantize_linear(&w, &x).forward(&x).data,
+            &QuarotQuantizer::new(2, 4)
+                .quantize_linear(&ctx, &w, &x)
+                .unwrap()
+                .forward(&x)
+                .data,
             &want.data,
         );
         assert!(e2 > 2.0 * e4, "W2 ({e2}) should be much worse than W4 ({e4})");

@@ -51,7 +51,7 @@ pub struct PjrtBackend {
 
 impl Backend for PjrtBackend {
     fn name(&self) -> String {
-        "pjrt(transformer_fp.hlo.txt)".into()
+        format!("pjrt({})", self.session.artifact.display())
     }
 
     fn last_logits_batch(&self, seqs: &[&[u16]]) -> Vec<Vec<f32>> {
@@ -159,19 +159,25 @@ where
             (name, run_batcher(rx, backend.as_ref(), cfg))
         });
 
+        // Distribute requests across clients, spreading the remainder over
+        // the first `n_requests % clients` so exactly `n_requests` are
+        // served (a plain `n / clients` silently dropped the remainder).
         let per_client = n_requests / clients.max(1);
+        let remainder = n_requests % clients.max(1);
         for c in 0..clients {
             let tx = tx.clone();
+            let n_mine = per_client + usize::from(c < remainder);
+            let id_base = c * per_client + c.min(remainder);
             s.spawn(move || {
                 let mut rng = Rng::new(seed ^ (c as u64) << 16);
                 let stream =
                     crate::data::corpus::train_split(&CorpusSpec::wiki(), 20_000 + c * 1000);
                 let (rtx, rrx) = mpsc::channel();
-                for i in 0..per_client {
+                for i in 0..n_mine {
                     let start = rng.below(stream.len() - prompt_len);
                     let tokens = stream[start..start + prompt_len].to_vec();
                     tx.send(Request {
-                        id: (c * per_client + i) as u64,
+                        id: (id_base + i) as u64,
                         tokens,
                         submitted: Instant::now(),
                         resp_tx: rtx.clone(),
@@ -243,5 +249,39 @@ mod tests {
         );
         assert!(report.contains("requests:    16"), "{report}");
         assert!(report.contains("throughput"), "{report}");
+    }
+
+    #[test]
+    fn serve_workload_serves_remainder_requests() {
+        // 17 requests over 4 clients: the old `n / clients` split served
+        // only 16 — every request must be accounted for.
+        let cfg = ModelConfig {
+            name: "t".into(),
+            vocab_size: 512,
+            d_model: 64,
+            n_layers: 1,
+            n_heads: 2,
+            d_ff: 96,
+            max_seq: 64,
+            rope_theta: 10000.0,
+            rmsnorm_eps: 1e-5,
+        };
+        let report = serve_workload(
+            || {
+                Box::new(NativeBackend {
+                    model: Transformer::random(&cfg, 6),
+                    label: "test".into(),
+                }) as Box<dyn Backend>
+            },
+            17,
+            4,
+            8,
+            BatcherConfig {
+                max_batch: 4,
+                max_wait: Duration::from_micros(500),
+            },
+            4,
+        );
+        assert!(report.contains("requests:    17"), "{report}");
     }
 }

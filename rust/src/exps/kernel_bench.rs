@@ -67,7 +67,7 @@ pub fn synthetic_bwa(
 }
 
 /// Prepared GEMM state without touching w_hat: wsum computed from bits.
-pub fn prepare_synthetic(lin: &BwaLinear) -> BwaGemm<'_> {
+pub fn prepare_synthetic(lin: &BwaLinear) -> BwaGemm {
     let ng = lin.n_groups();
     let b = lin.group_size;
     let mut wsum = Vec::with_capacity(lin.out_features);
@@ -94,15 +94,7 @@ pub fn prepare_synthetic(lin: &BwaLinear) -> BwaGemm<'_> {
         }
         wsum.push(acc as f32);
     }
-    let mut coef = Vec::with_capacity(lin.out_features * ng);
-    for j in 0..lin.out_features {
-        for g in 0..ng {
-            let (a0, b0) = lin.affine(j, g, 0);
-            let (a1, b1) = lin.affine(j, g, 1);
-            coef.push([2.0 * a1, b1 - a1, 2.0 * a0, b0 - a0]);
-        }
-    }
-    BwaGemm { lin, wsum, coef }
+    BwaGemm::from_parts(lin, wsum)
 }
 
 struct Cell {

@@ -11,14 +11,22 @@
 //! R = Σ_a μ_a·popc(b_a) (token-only, hoisted), R₁ = Σ_a μ_a·popc(b_a∧m),
 //! and c₁..c₄ fold the per-(row, group, s) affine (α, β).
 //!
+//! [`BwaGemm`] is an *owning* execution plan: [`BwaGemm::prepare`] folds
+//! the affine params into per-group coefficients, hoists the weight row
+//! sums, and drops the dense dequantized `w_hat` — what remains (packed
+//! sign/bitmap words, coefficients, INT8 outlier block) is everything the
+//! serving path needs. It implements [`crate::quant::LinearExec`], so the
+//! model hot path runs this kernel directly.
+//!
 //! [`BwaGemm::forward`] is bit-exact (up to f32 summation order) with
 //! [`BwaLinear::forward`] — asserted by tests — so perplexity results
 //! measured on the fake-quant path transfer to the binary path.
 
-use crate::quant::actquant::quantize_token;
+use crate::quant::actquant::{quantize_token, BalanceMode};
 use crate::quant::binarize::BwaLinear;
 use crate::quant::rtn::RtnParams;
 use crate::tensor::Tensor;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Packed activations for a batch of tokens (the binary region) plus the
 /// INT8 outlier slice — what the serving path keeps in flight.
@@ -43,22 +51,62 @@ pub struct PackedActs {
     pub n_out: usize,
 }
 
-/// Precomputed state for the binary GEMM of one layer.
-pub struct BwaGemm<'a> {
-    pub lin: &'a BwaLinear,
+/// Fingerprint of a layer's activation packing scheme: two layers with
+/// equal signatures pack any input tensor identically, so one
+/// [`PackedActs`] can be shared between them (wq/wk/wv, gate/up).
+pub fn act_sig(lin: &BwaLinear) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64; // FNV-1a
+    let mut mix = |v: u64| {
+        h ^= v;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    };
+    mix(lin.in_features as u64);
+    mix(lin.n_norm as u64);
+    mix(lin.group_size as u64);
+    mix(lin.act.bits as u64);
+    mix(match lin.act.balance {
+        BalanceMode::None => 0,
+        BalanceMode::Paper => 1,
+        BalanceMode::LeastSquares => 2,
+    });
+    for &p in &lin.perm {
+        mix(p as u64);
+    }
+    h
+}
+
+/// Owning, precompiled state for the binary GEMM of one layer.
+pub struct BwaGemm {
+    /// The quantized layer with `w_hat` dropped — bits, affine params,
+    /// permutation, and the outlier block only.
+    pub lin: BwaLinear,
     /// Σ_i ŵ_ji over the binary region (multiplies the shift plane).
     pub wsum: Vec<f32>,
     /// Folded coefficients per (row, group): [c1, c2, c3, c4].
     pub coef: Vec<[f32; 4]>,
+    /// Packing-scheme signature (see [`act_sig`]).
+    pub sig: u64,
+    /// Number of `prepare_acts` calls served by this plan (diagnostic for
+    /// the shared-prepare contract).
+    pub pack_calls: AtomicU64,
 }
 
-impl<'a> BwaGemm<'a> {
-    pub fn prepare(lin: &'a BwaLinear) -> BwaGemm<'a> {
-        let ng = lin.n_groups();
+impl BwaGemm {
+    /// Compile the plan: fold affines, hoist row sums, drop `w_hat`.
+    pub fn prepare(lin: &BwaLinear) -> BwaGemm {
         let mut wsum = Vec::with_capacity(lin.out_features);
         for j in 0..lin.out_features {
             wsum.push(lin.w_hat.row(j)[..lin.n_norm].iter().sum());
         }
+        Self::from_parts(lin, wsum)
+    }
+
+    /// Assemble a plan from a layer + precomputed row sums — shared by
+    /// [`Self::prepare`] (wsum from `w_hat`) and the synthetic kernel
+    /// bench (wsum from bits, no `w_hat`), so the coefficient folding
+    /// and plan layout exist in exactly one place.
+    pub fn from_parts(lin: &BwaLinear, wsum: Vec<f32>) -> BwaGemm {
+        let ng = lin.n_groups();
         let mut coef = Vec::with_capacity(lin.out_features * ng);
         for j in 0..lin.out_features {
             for g in 0..ng {
@@ -68,13 +116,30 @@ impl<'a> BwaGemm<'a> {
                 coef.push([2.0 * a1, b1 - a1, 2.0 * a0, b0 - a0]);
             }
         }
-        BwaGemm { lin, wsum, coef }
+        let sig = act_sig(lin);
+        let mut lean = lin.clone();
+        lean.w_hat = Tensor::zeros(&[0, 0]); // the plan serves from bits
+        BwaGemm {
+            lin: lean,
+            wsum,
+            coef,
+            sig,
+            pack_calls: AtomicU64::new(0),
+        }
+    }
+
+    /// Permute + quantize + pack one raw input batch [tokens, in] — the
+    /// per-input preparation step of the plan/execute API.
+    pub fn prepare_acts(&self, x: &Tensor) -> PackedActs {
+        self.pack_calls.fetch_add(1, Ordering::Relaxed);
+        let xp = x.select_cols(&self.lin.perm);
+        self.pack_activations(&xp)
     }
 
     /// Quantize + pack a batch of (already permuted!) activations.
     /// `xp` is [tokens, in_features] in the layer's permuted channel order.
     pub fn pack_activations(&self, xp: &Tensor) -> PackedActs {
-        let lin = self.lin;
+        let lin = &self.lin;
         let (m, n) = xp.dims2();
         assert_eq!(n, lin.in_features);
         let nplanes = lin.act.bits as usize;
@@ -140,36 +205,51 @@ impl<'a> BwaGemm<'a> {
         }
     }
 
-    /// The popcount GEMM over pre-packed activations. This is the routine
-    /// Figure 3/4 benchmarks (packing measured separately, as the paper's
-    /// kernel comparison also excludes activation quantization).
+    /// The popcount GEMM over pre-packed activations (allocating wrapper
+    /// around [`Self::gemm_packed_into`]). This is the routine Figure 3/4
+    /// benchmarks (packing measured separately, as the paper's kernel
+    /// comparison also excludes activation quantization).
+    pub fn gemm_packed(&self, acts: &PackedActs) -> Tensor {
+        let mut y = Tensor::zeros(&[acts.tokens, self.lin.out_features]);
+        self.gemm_packed_into(acts, &mut y);
+        y
+    }
+
+    /// The popcount GEMM into a caller-preallocated
+    /// `[tokens, out_features]` buffer — the serving hot path.
     ///
     /// Dispatches to the AVX2 path (pshufb-LUT popcount over all four
     /// planes per 256-bit vector) when available; scalar fallback below.
     /// See EXPERIMENTS.md §Perf for the iteration log.
-    pub fn gemm_packed(&self, acts: &PackedActs) -> Tensor {
+    pub fn gemm_packed_into(&self, acts: &PackedActs, y: &mut Tensor) {
+        assert_eq!(
+            y.dims2(),
+            (acts.tokens, self.lin.out_features),
+            "output buffer shape mismatch"
+        );
         #[cfg(target_arch = "x86_64")]
         {
             if std::is_x86_feature_detected!("avx2") {
                 // SAFETY: feature checked at runtime.
-                return unsafe { self.gemm_packed_avx2(acts) };
+                unsafe { self.gemm_packed_avx2(acts, y) };
+                return;
             }
         }
-        self.gemm_packed_scalar(acts)
+        self.gemm_packed_scalar(acts, y)
     }
 
     /// Scalar hot loop: output rows outer / tokens inner so each packed
     /// weight row is loaded once per batch; the 4 plane words of a channel
     /// word are contiguous (`PackedActs::planes` layout); popcounts
     /// accumulate in u32 and the per-plane scales fold once per group.
-    pub fn gemm_packed_scalar(&self, acts: &PackedActs) -> Tensor {
-        let lin = self.lin;
+    pub fn gemm_packed_scalar(&self, acts: &PackedActs, y: &mut Tensor) {
+        let lin = &self.lin;
         let ng = lin.n_groups();
         let wpg = lin.group_size / 64;
         let nplanes = acts.nplanes;
         debug_assert_eq!(nplanes, 4, "kernel specialized for A(1x4)");
         let wpp = acts.words_per_plane;
-        let mut y = Tensor::zeros(&[acts.tokens, lin.out_features]);
+        debug_assert_eq!(y.dims2(), (acts.tokens, lin.out_features));
 
         for j in 0..lin.out_features {
             let qrow = lin.qbits.row(j);
@@ -238,7 +318,6 @@ impl<'a> BwaGemm<'a> {
                 y.data[t * lin.out_features + j] = acc;
             }
         }
-        y
     }
 
     /// AVX2 hot loop: one 256-bit load covers the 4 plane words of a
@@ -247,14 +326,14 @@ impl<'a> BwaGemm<'a> {
     /// lanes. (§Perf iteration 2.)
     #[cfg(target_arch = "x86_64")]
     #[target_feature(enable = "avx2")]
-    unsafe fn gemm_packed_avx2(&self, acts: &PackedActs) -> Tensor {
+    unsafe fn gemm_packed_avx2(&self, acts: &PackedActs, y: &mut Tensor) {
         use std::arch::x86_64::*;
-        let lin = self.lin;
+        let lin = &self.lin;
         let ng = lin.n_groups();
         let wpg = lin.group_size / 64;
         debug_assert_eq!(acts.nplanes, 4, "kernel specialized for A(1x4)");
         let wpp = acts.words_per_plane;
-        let mut y = Tensor::zeros(&[acts.tokens, lin.out_features]);
+        debug_assert_eq!(y.dims2(), (acts.tokens, lin.out_features));
 
         let lut = _mm256_setr_epi8(
             0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
@@ -347,7 +426,6 @@ impl<'a> BwaGemm<'a> {
                 y.data[t * lin.out_features + j] = acc;
             }
         }
-        y
     }
 
     /// End-to-end binary forward: permute → pack → popcount GEMM.
@@ -440,13 +518,13 @@ mod tests {
         let mut rng = Rng::new(3);
         let (lin, xt) = setup(&mut rng, 8, 256);
         let gemm = BwaGemm::prepare(&lin);
-        let xp = xt.select_cols(&lin.perm);
-        let acts = gemm.pack_activations(&xp);
+        let acts = gemm.prepare_acts(&xt);
         assert_eq!(acts.tokens, 4);
         assert_eq!(acts.nplanes, 4);
         assert_eq!(acts.words_per_plane, lin.n_norm / 64);
         assert_eq!(acts.n_out, 64);
         assert_eq!(acts.x_out_q.len(), 4 * 64);
+        assert_eq!(gemm.pack_calls.load(Ordering::Relaxed), 1);
     }
 
     #[test]
@@ -458,6 +536,30 @@ mod tests {
             let direct: f32 = lin.w_hat.row(j)[..lin.n_norm].iter().sum();
             assert!((gemm.wsum[j] - direct).abs() < 1e-4);
         }
+        // the compiled plan dropped the dense weights
+        assert_eq!(gemm.lin.w_hat.numel(), 0);
+    }
+
+    #[test]
+    fn gemm_into_matches_allocating_path() {
+        let mut rng = Rng::new(6);
+        let (lin, xt) = setup(&mut rng, 16, 128);
+        let gemm = BwaGemm::prepare(&lin);
+        let acts = gemm.prepare_acts(&xt);
+        let alloc = gemm.gemm_packed(&acts);
+        let mut into = Tensor::from_vec(&[4, 16], vec![7.0; 64]); // stale data
+        gemm.gemm_packed_into(&acts, &mut into);
+        assert_eq!(alloc.data, into.data);
+    }
+
+    #[test]
+    fn act_sig_shared_iff_same_scheme() {
+        let mut rng = Rng::new(7);
+        let (lin, _) = setup(&mut rng, 8, 128);
+        let mut other = lin.clone();
+        assert_eq!(act_sig(&lin), act_sig(&other));
+        other.perm.swap(0, 1);
+        assert_ne!(act_sig(&lin), act_sig(&other));
     }
 
     #[test]

@@ -12,10 +12,20 @@ use crate::tensor::Tensor;
 /// f32 GEMM, y = x·wᵀ. Blocked over k with 4-way unrolled accumulators;
 /// this is the model's FP hot path (see EXPERIMENTS.md §Perf).
 pub fn sgemm_wt(x: &Tensor, w: &Tensor) -> Tensor {
+    let (m, _) = x.dims2();
+    let (n, _) = w.dims2();
+    let mut y = Tensor::zeros(&[m, n]);
+    sgemm_wt_into(x, w, &mut y);
+    y
+}
+
+/// f32 GEMM into a caller-preallocated `[m, n]` buffer (the compiled-exec
+/// hot path; every output element is overwritten).
+pub fn sgemm_wt_into(x: &Tensor, w: &Tensor, y: &mut Tensor) {
     let (m, k) = x.dims2();
     let (n, k2) = w.dims2();
     assert_eq!(k, k2, "sgemm_wt inner-dim mismatch");
-    let mut y = Tensor::zeros(&[m, n]);
+    assert_eq!(y.dims2(), (m, n), "output buffer shape mismatch");
     for t in 0..m {
         let xrow = x.row(t);
         let yrow = y.row_mut(t);
@@ -23,7 +33,6 @@ pub fn sgemm_wt(x: &Tensor, w: &Tensor) -> Tensor {
             yrow[j] = dot_f32(xrow, w.row(j));
         }
     }
-    y
 }
 
 /// Unrolled f32 dot product. The compiler autovectorizes the 8-lane form.

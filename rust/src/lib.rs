@@ -9,20 +9,52 @@
 //! synthetic evaluation corpora, a PJRT runtime for JAX/Pallas-lowered
 //! artifacts, and a batching serving coordinator).
 //!
+//! ## The plan/execute quantization API
+//!
+//! Inference is structured as **quantize → compile → prepare → execute**
+//! (see [`quant`] for the full contract):
+//!
+//! - [`quant::Quantizer::quantize_linear`] takes a [`quant::LayerCtx`]
+//!   (block / name / kind) and returns `Result<Box<dyn QuantLinear>,
+//!   QuantError>` — the *storage* form;
+//! - [`quant::QuantLinear::compile`] produces a [`quant::LinearExec`]
+//!   *execution plan*; the paper's method compiles to the packed popcount
+//!   GEMM ([`kernels::bwa_gemm::BwaGemm`]) with the dense dequantized
+//!   weights dropped;
+//! - [`quant::LinearExec::prepare`] quantizes + bit-packs one input into
+//!   [`quant::PreparedActs`], shared across wq/wk/wv and gate/up so
+//!   activation packing happens once per input;
+//! - [`quant::LinearExec::forward_prepared`] executes into preallocated
+//!   output buffers.
+//!
+//! `model::Transformer::forward` / `decode_step` run compiled execs — the
+//! paper's binary kernel is the serving path, not just a bench target.
+//! The dense fake-quant math remains as `QuantLinear::forward` /
+//! `Transformer::forward_reference` for parity tests and the
+//! fake-vs-packed model bench.
+//!
 //! Layers (see DESIGN.md):
 //! - L1: Pallas kernel (python, build time) — `python/compile/kernels/`
 //! - L2: JAX model (python, build time) — `python/compile/model.py`
 //! - L3: this crate — quantization, kernels, serving; Python never runs
-//!   on the request path.
+//!   on the request path. The PJRT runtime is gated behind the `pjrt`
+//!   cargo feature (needs the vendored `xla` crate); default builds are
+//!   dependency-free.
+
+// Kernel-style indexed loops are the house idiom in the hot paths; the
+// iterator rewrites clippy suggests obscure the memory access patterns
+// the perf notes reason about.
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::too_many_arguments)]
 
 pub mod baselines;
 pub mod coordinator;
 pub mod data;
-pub mod exps;
 pub mod eval;
+pub mod exps;
 pub mod kernels;
-pub mod model;
 pub mod linalg;
+pub mod model;
 pub mod quant;
 pub mod runtime;
 pub mod tensor;

@@ -134,6 +134,43 @@ impl Checkpoint {
             .get(name)
             .ok_or_else(|| err(format!("missing tensor '{name}'")))
     }
+
+    /// Random checkpoint with the full tensor layout of a trained model —
+    /// for tests and benches that need a quantizable model without
+    /// `make artifacts`.
+    pub fn random(cfg: &ModelConfig, seed: u64) -> Checkpoint {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let d = cfg.d_model;
+        let mut tensors = BTreeMap::new();
+        let mut add = |name: String, shape: &[usize], rng: &mut crate::util::rng::Rng, std: f32| {
+            let n: usize = shape.iter().product();
+            tensors.insert(name, Tensor::from_vec(shape, rng.normal_vec_f32(n, 0.0, std)));
+        };
+        add("embed".into(), &[cfg.vocab_size, d], &mut rng, 0.5);
+        add("lm_head".into(), &[cfg.vocab_size, d], &mut rng, 0.08);
+        for l in 0..cfg.n_layers {
+            add(format!("layers.{l}.wq"), &[d, d], &mut rng, 0.08);
+            add(format!("layers.{l}.wk"), &[d, d], &mut rng, 0.08);
+            add(format!("layers.{l}.wv"), &[d, d], &mut rng, 0.08);
+            add(format!("layers.{l}.wo"), &[d, d], &mut rng, 0.08);
+            add(format!("layers.{l}.gate"), &[cfg.d_ff, d], &mut rng, 0.08);
+            add(format!("layers.{l}.up"), &[cfg.d_ff, d], &mut rng, 0.08);
+            add(format!("layers.{l}.down"), &[d, cfg.d_ff], &mut rng, 0.08);
+            add(format!("layers.{l}.attn_norm"), &[d], &mut rng, 0.0);
+            add(format!("layers.{l}.mlp_norm"), &[d], &mut rng, 0.0);
+        }
+        add("final_norm".into(), &[d], &mut rng, 0.0);
+        // norms get unit gain, not noise
+        for (name, t) in tensors.iter_mut() {
+            if name.ends_with("norm") {
+                t.data.iter_mut().for_each(|v| *v = 1.0);
+            }
+        }
+        Checkpoint {
+            config: cfg.clone(),
+            tensors,
+        }
+    }
 }
 
 #[cfg(test)]

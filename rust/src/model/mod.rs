@@ -5,20 +5,29 @@
 //! attention): token embedding → N × [RMSNorm → MHA(RoPE, INT4 KV) →
 //! residual → RMSNorm → SwiGLU MLP → residual] → RMSNorm → LM head.
 //!
-//! Every projection (`wq wk wv wo gate up down`) is a `Box<dyn
-//! QuantLinear>`, so the same model code runs FP16, the paper's
-//! W(1+1)A(1×4), and every baseline — the evaluation harness swaps the
-//! quantizer, nothing else. Embedding and LM head stay FP (standard PTQ
-//! practice, also what the baselines in the paper do).
+//! Every projection (`wq wk wv wo gate up down`) is a [`CompiledLinear`]:
+//! the quantized *storage* form (`Box<dyn QuantLinear>`, kept for size /
+//! bit accounting and the fake-quant reference path) plus its compiled
+//! *execution plan* (`Box<dyn LinearExec>`). The hot paths
+//! ([`Transformer::forward`], [`Transformer::decode_step`]) run the
+//! execution plans with preallocated output buffers and prepare each
+//! shared input **once**: wq/wk/wv consume one [`PreparedActs`], gate/up
+//! another — for the paper's method that means one activation
+//! quantize+pack feeding three popcount GEMMs. Embedding and LM head
+//! stay FP (standard PTQ practice, also what the baselines in the paper
+//! do). [`Transformer::forward_reference`] keeps the old dense
+//! fake-quant route for parity tests and benches.
 
 pub mod checkpoint;
 pub mod config;
 pub mod kv_cache;
 
-use crate::model::checkpoint::Checkpoint;
+use crate::model::checkpoint::{Checkpoint, CkptError};
 use crate::model::config::ModelConfig;
 use crate::model::kv_cache::{Kv4Store, LayerKvCache};
-use crate::quant::{QuantLinear, Quantizer};
+use crate::quant::{
+    FpLinear, LayerCtx, LinearExec, LinearKind, QuantError, QuantLinear, Quantizer,
+};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 use crate::util::softmax_inplace;
@@ -60,19 +69,81 @@ fn silu(x: f32) -> f32 {
     x / (1.0 + (-x).exp())
 }
 
+/// Errors from building a quantized model: checkpoint I/O or per-layer
+/// quantization failure.
+#[derive(Debug)]
+pub enum ModelError {
+    Ckpt(CkptError),
+    Quant(QuantError),
+}
+
+impl std::fmt::Display for ModelError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::Ckpt(e) => write!(f, "{e}"),
+            Self::Quant(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for ModelError {}
+
+impl From<CkptError> for ModelError {
+    fn from(e: CkptError) -> Self {
+        Self::Ckpt(e)
+    }
+}
+
+impl From<QuantError> for ModelError {
+    fn from(e: QuantError) -> Self {
+        Self::Quant(e)
+    }
+}
+
+/// A quantized linear plus its compiled execution plan. The plan serves
+/// the hot path; the storage form answers size/bit queries and provides
+/// the dense fake-quant reference forward.
+///
+/// Memory note: the storage form keeps the dense `w_hat` (needed by
+/// [`Transformer::forward_reference`] and reported-size accounting) and
+/// the plan owns its own copy of the packed structures, so a compiled
+/// model trades memory for having both paths resident. A deploy-only
+/// build that drops the reference path could share the bit structures
+/// via `Arc` — deliberately not done while parity tests are the main
+/// consumer.
+pub struct CompiledLinear {
+    pub quant: Box<dyn QuantLinear>,
+    pub exec: Box<dyn LinearExec>,
+}
+
+impl CompiledLinear {
+    pub fn new(quant: Box<dyn QuantLinear>) -> Self {
+        let exec = quant.compile();
+        Self { quant, exec }
+    }
+
+    /// Convenience allocating forward through the compiled plan.
+    pub fn forward(&self, x: &Tensor) -> Tensor {
+        let (t_len, _) = x.dims2();
+        let mut out = Tensor::zeros(&[t_len, self.exec.out_features()]);
+        self.exec.forward_into(x, &mut out);
+        out
+    }
+}
+
 /// Multi-head attention block.
 pub struct Attention {
-    pub wq: Box<dyn QuantLinear>,
-    pub wk: Box<dyn QuantLinear>,
-    pub wv: Box<dyn QuantLinear>,
-    pub wo: Box<dyn QuantLinear>,
+    pub wq: CompiledLinear,
+    pub wk: CompiledLinear,
+    pub wv: CompiledLinear,
+    pub wo: CompiledLinear,
 }
 
 /// SwiGLU MLP block.
 pub struct Mlp {
-    pub gate: Box<dyn QuantLinear>,
-    pub up: Box<dyn QuantLinear>,
-    pub down: Box<dyn QuantLinear>,
+    pub gate: CompiledLinear,
+    pub up: CompiledLinear,
+    pub down: CompiledLinear,
 }
 
 pub struct Block {
@@ -132,10 +203,10 @@ impl Transformer {
         let mut rng = Rng::new(seed);
         let d = cfg.d_model;
         let std = 0.08;
-        let lin = |rng: &mut Rng, o: usize, i: usize| -> Box<dyn QuantLinear> {
-            Box::new(crate::quant::FpLinear {
+        let lin = |rng: &mut Rng, o: usize, i: usize| -> CompiledLinear {
+            CompiledLinear::new(Box::new(FpLinear {
                 w: Tensor::from_vec(&[o, i], rng.normal_vec_f32(o * i, 0.0, std)),
-            })
+            }))
         };
         let blocks = (0..cfg.n_layers)
             .map(|_| Block {
@@ -171,12 +242,12 @@ impl Transformer {
     }
 
     /// FP model from a trainer checkpoint.
-    pub fn fp_from_checkpoint(ck: &Checkpoint) -> Result<Transformer, checkpoint::CkptError> {
+    pub fn fp_from_checkpoint(ck: &Checkpoint) -> Result<Transformer, CkptError> {
         let cfg = ck.config.clone();
-        let lin = |name: &str| -> Result<Box<dyn QuantLinear>, checkpoint::CkptError> {
-            Ok(Box::new(crate::quant::FpLinear {
+        let lin = |name: &str| -> Result<CompiledLinear, CkptError> {
+            Ok(CompiledLinear::new(Box::new(FpLinear {
                 w: ck.get(name)?.clone(),
-            }))
+            })))
         };
         let mut blocks = Vec::new();
         for l in 0..cfg.n_layers {
@@ -209,10 +280,16 @@ impl Transformer {
     fn norm_all(&self, x: &Tensor, gain: &[f32]) -> Tensor {
         let (t_len, d) = x.dims2();
         let mut out = Tensor::zeros(&[t_len, d]);
+        self.norm_all_into(x, gain, &mut out);
+        out
+    }
+
+    fn norm_all_into(&self, x: &Tensor, gain: &[f32], out: &mut Tensor) {
+        let (t_len, _) = x.dims2();
+        debug_assert_eq!(x.shape, out.shape);
         for t in 0..t_len {
             rmsnorm(x.row(t), gain, self.cfg.rmsnorm_eps, out.row_mut(t));
         }
-        out
     }
 
     fn maybe_kv_quant(&self, x: &mut Tensor) {
@@ -226,38 +303,58 @@ impl Transformer {
     }
 
     /// Batch forward: logits [T, vocab] for a token sequence (causal).
+    ///
+    /// Runs the compiled execution plans (the packed popcount kernel for
+    /// the paper's method) with per-call preallocated buffers; each
+    /// shared input is prepared once (wq/wk/wv together, gate/up
+    /// together).
     pub fn forward(&self, tokens: &[u16]) -> Tensor {
         let t_len = tokens.len();
         let d = self.cfg.d_model;
+        let d_ff = self.cfg.d_ff;
         assert!(t_len <= self.cfg.max_seq, "sequence longer than max_seq");
         let mut x = Tensor::zeros(&[t_len, d]);
         for (t, &tok) in tokens.iter().enumerate() {
             x.row_mut(t).copy_from_slice(self.embed.row(tok as usize));
         }
+        // preallocated output buffers, reused across blocks
+        let mut h = Tensor::zeros(&[t_len, d]);
+        let mut q = Tensor::zeros(&[t_len, d]);
+        let mut k = Tensor::zeros(&[t_len, d]);
+        let mut v = Tensor::zeros(&[t_len, d]);
+        let mut o = Tensor::zeros(&[t_len, d]);
+        let mut g = Tensor::zeros(&[t_len, d_ff]);
+        let mut u = Tensor::zeros(&[t_len, d_ff]);
+        let mut dwn = Tensor::zeros(&[t_len, d]);
         for blk in &self.blocks {
-            // attention
-            let h = self.norm_all(&x, &blk.attn_norm);
-            let mut q = blk.attn.wq.forward(&h);
-            let mut k = blk.attn.wk.forward(&h);
-            let mut v = blk.attn.wv.forward(&h);
+            // attention — one prepared input feeds wq/wk/wv
+            self.norm_all_into(&x, &blk.attn_norm, &mut h);
+            {
+                let acts = blk.attn.wq.exec.prepare(&h);
+                blk.attn.wq.exec.forward_prepared(&acts, &mut q);
+                blk.attn.wk.exec.forward_prepared(&acts, &mut k);
+                blk.attn.wv.exec.forward_prepared(&acts, &mut v);
+            }
             apply_rope(&mut q, self.cfg.n_heads, self.cfg.rope_theta, 0);
             apply_rope(&mut k, self.cfg.n_heads, self.cfg.rope_theta, 0);
             self.maybe_kv_quant(&mut k);
             self.maybe_kv_quant(&mut v);
             let attn_out = causal_attention(&q, &k, &v, self.cfg.n_heads);
-            let o = blk.attn.wo.forward(&attn_out);
+            blk.attn.wo.exec.forward_into(&attn_out, &mut o);
             for i in 0..x.data.len() {
                 x.data[i] += o.data[i];
             }
-            // mlp
-            let h = self.norm_all(&x, &blk.mlp_norm);
-            let g = blk.mlp.gate.forward(&h);
-            let u = blk.mlp.up.forward(&h);
-            let mut act = Tensor::zeros(&[t_len, self.cfg.d_ff]);
-            for i in 0..act.data.len() {
-                act.data[i] = silu(g.data[i]) * u.data[i];
+            // mlp — gate/up share one prepared input
+            self.norm_all_into(&x, &blk.mlp_norm, &mut h);
+            {
+                let acts = blk.mlp.gate.exec.prepare(&h);
+                blk.mlp.gate.exec.forward_prepared(&acts, &mut g);
+                blk.mlp.up.exec.forward_prepared(&acts, &mut u);
             }
-            let dwn = blk.mlp.down.forward(&act);
+            for i in 0..g.data.len() {
+                g.data[i] = silu(g.data[i]) * u.data[i];
+            }
+            blk.mlp.down.exec.forward_into(&g, &mut dwn);
             for i in 0..x.data.len() {
                 x.data[i] += dwn.data[i];
             }
@@ -266,96 +363,170 @@ impl Transformer {
         crate::kernels::dense::sgemm_wt(&xn, &self.lm_head)
     }
 
-    /// Start an incremental decoding session (per-layer INT4 KV caches).
+    /// Reference batch forward through the *storage* forms
+    /// ([`QuantLinear::forward`] — the dense fake-quant math). Kept for
+    /// parity tests and the fake-vs-packed model bench; the serving path
+    /// is [`Self::forward`].
+    pub fn forward_reference(&self, tokens: &[u16]) -> Tensor {
+        let t_len = tokens.len();
+        let d = self.cfg.d_model;
+        assert!(t_len <= self.cfg.max_seq, "sequence longer than max_seq");
+        let mut x = Tensor::zeros(&[t_len, d]);
+        for (t, &tok) in tokens.iter().enumerate() {
+            x.row_mut(t).copy_from_slice(self.embed.row(tok as usize));
+        }
+        for blk in &self.blocks {
+            let h = self.norm_all(&x, &blk.attn_norm);
+            let mut q = blk.attn.wq.quant.forward(&h);
+            let mut k = blk.attn.wk.quant.forward(&h);
+            let mut v = blk.attn.wv.quant.forward(&h);
+            apply_rope(&mut q, self.cfg.n_heads, self.cfg.rope_theta, 0);
+            apply_rope(&mut k, self.cfg.n_heads, self.cfg.rope_theta, 0);
+            self.maybe_kv_quant(&mut k);
+            self.maybe_kv_quant(&mut v);
+            let attn_out = causal_attention(&q, &k, &v, self.cfg.n_heads);
+            let o = blk.attn.wo.quant.forward(&attn_out);
+            for i in 0..x.data.len() {
+                x.data[i] += o.data[i];
+            }
+            let h = self.norm_all(&x, &blk.mlp_norm);
+            let g = blk.mlp.gate.quant.forward(&h);
+            let u = blk.mlp.up.quant.forward(&h);
+            let mut act = Tensor::zeros(&[t_len, self.cfg.d_ff]);
+            for i in 0..act.data.len() {
+                act.data[i] = silu(g.data[i]) * u.data[i];
+            }
+            let dwn = blk.mlp.down.quant.forward(&act);
+            for i in 0..x.data.len() {
+                x.data[i] += dwn.data[i];
+            }
+        }
+        let xn = self.norm_all(&x, &self.final_norm);
+        crate::kernels::dense::sgemm_wt(&xn, &self.lm_head)
+    }
+
+    /// Start an incremental decoding session (per-layer INT4 KV caches +
+    /// preallocated per-step scratch buffers).
     pub fn new_session(&self) -> DecodeSession {
+        let d = self.cfg.d_model;
+        let d_ff = self.cfg.d_ff;
         DecodeSession {
             caches: (0..self.cfg.n_layers)
-                .map(|_| LayerKvCache::new(self.cfg.d_model))
+                .map(|_| LayerKvCache::new(d))
                 .collect(),
             pos: 0,
+            scratch: DecodeScratch {
+                x: vec![0.0; d],
+                h: Tensor::zeros(&[1, d]),
+                q: Tensor::zeros(&[1, d]),
+                k: Tensor::zeros(&[1, d]),
+                v: Tensor::zeros(&[1, d]),
+                attn_out: Tensor::zeros(&[1, d]),
+                o: Tensor::zeros(&[1, d]),
+                g: Tensor::zeros(&[1, d_ff]),
+                u: Tensor::zeros(&[1, d_ff]),
+                dwn: Tensor::zeros(&[1, d]),
+                krow: vec![0.0; d],
+                vrow: vec![0.0; d],
+                scores: Vec::new(),
+            },
         }
     }
 
     /// Feed one token; returns logits [vocab] for the next position.
-    /// Uses the INT4 KV cache — the serving path. For FP models the cache
-    /// still quantizes to INT4 when `kv_bits` is set, else stores FP
-    /// equivalents via 16-bit-exact round trip (here: quantized always, to
-    /// keep one cache implementation; FP-cache equivalence is covered by
-    /// `kv_bits: Some(4)` tests).
+    /// Uses the INT4 KV cache — the serving path — running the compiled
+    /// execution plans into the session's preallocated scratch buffers
+    /// (one activation preparation for wq/wk/wv, one for gate/up). For FP
+    /// models the cache still quantizes to INT4 when `kv_bits` is set,
+    /// else stores FP equivalents via 16-bit-exact round trip (here:
+    /// quantized always, to keep one cache implementation; FP-cache
+    /// equivalence is covered by `kv_bits: Some(4)` tests).
     pub fn decode_step(&self, sess: &mut DecodeSession, token: u16) -> Vec<f32> {
         let d = self.cfg.d_model;
         let hd = self.cfg.head_dim();
         let nh = self.cfg.n_heads;
         let scale = 1.0 / (hd as f32).sqrt();
-        let mut x = self.embed.row(token as usize).to_vec();
+        let pos = sess.pos;
+        let scratch = &mut sess.scratch;
+        scratch.x.copy_from_slice(self.embed.row(token as usize));
 
         for (l, blk) in self.blocks.iter().enumerate() {
-            let mut h = vec![0.0f32; d];
-            rmsnorm(&x, &blk.attn_norm, self.cfg.rmsnorm_eps, &mut h);
-            let ht = Tensor::from_vec(&[1, d], h);
-            let mut q = blk.attn.wq.forward(&ht);
-            let mut k = blk.attn.wk.forward(&ht);
-            let v = blk.attn.wv.forward(&ht);
-            apply_rope(&mut q, nh, self.cfg.rope_theta, sess.pos);
-            apply_rope(&mut k, nh, self.cfg.rope_theta, sess.pos);
+            rmsnorm(
+                &scratch.x,
+                &blk.attn_norm,
+                self.cfg.rmsnorm_eps,
+                scratch.h.row_mut(0),
+            );
+            {
+                let acts = blk.attn.wq.exec.prepare(&scratch.h);
+                blk.attn.wq.exec.forward_prepared(&acts, &mut scratch.q);
+                blk.attn.wk.exec.forward_prepared(&acts, &mut scratch.k);
+                blk.attn.wv.exec.forward_prepared(&acts, &mut scratch.v);
+            }
+            apply_rope(&mut scratch.q, nh, self.cfg.rope_theta, pos);
+            apply_rope(&mut scratch.k, nh, self.cfg.rope_theta, pos);
             let cache = &mut sess.caches[l];
-            cache.k.push(k.row(0));
-            cache.v.push(v.row(0));
+            cache.k.push(scratch.k.row(0));
+            cache.v.push(scratch.v.row(0));
             let t_len = cache.len();
             // per-head attention over the quantized cache
-            let mut attn_out = vec![0.0f32; d];
-            let mut krow = vec![0.0f32; d];
-            let mut scores = vec![0.0f32; t_len];
+            scratch.scores.resize(t_len, 0.0);
+            for val in scratch.attn_out.data.iter_mut() {
+                *val = 0.0;
+            }
             for hh in 0..nh {
                 let base = hh * hd;
-                let qh = &q.row(0)[base..base + hd];
                 for t in 0..t_len {
-                    cache.k.get(t, &mut krow);
+                    cache.k.get(t, &mut scratch.krow);
+                    let qh = &scratch.q.row(0)[base..base + hd];
                     let mut s = 0.0f32;
                     for i in 0..hd {
-                        s += qh[i] * krow[base + i];
+                        s += qh[i] * scratch.krow[base + i];
                     }
-                    scores[t] = s * scale;
+                    scratch.scores[t] = s * scale;
                 }
-                softmax_inplace(&mut scores);
-                let mut vrow = vec![0.0f32; d];
+                softmax_inplace(&mut scratch.scores);
                 for t in 0..t_len {
-                    cache.v.get(t, &mut vrow);
-                    let w = scores[t];
+                    cache.v.get(t, &mut scratch.vrow);
+                    let w = scratch.scores[t];
+                    let orow = scratch.attn_out.row_mut(0);
                     for i in 0..hd {
-                        attn_out[base + i] += w * vrow[base + i];
+                        orow[base + i] += w * scratch.vrow[base + i];
                     }
                 }
             }
-            let o = blk
-                .attn
-                .wo
-                .forward(&Tensor::from_vec(&[1, d], attn_out));
+            blk.attn.wo.exec.forward_into(&scratch.attn_out, &mut scratch.o);
             for i in 0..d {
-                x[i] += o.data[i];
+                scratch.x[i] += scratch.o.data[i];
             }
             // mlp
-            let mut h = vec![0.0f32; d];
-            rmsnorm(&x, &blk.mlp_norm, self.cfg.rmsnorm_eps, &mut h);
-            let ht = Tensor::from_vec(&[1, d], h);
-            let g = blk.mlp.gate.forward(&ht);
-            let u = blk.mlp.up.forward(&ht);
-            let mut act = Tensor::zeros(&[1, self.cfg.d_ff]);
-            for i in 0..self.cfg.d_ff {
-                act.data[i] = silu(g.data[i]) * u.data[i];
+            rmsnorm(
+                &scratch.x,
+                &blk.mlp_norm,
+                self.cfg.rmsnorm_eps,
+                scratch.h.row_mut(0),
+            );
+            {
+                let acts = blk.mlp.gate.exec.prepare(&scratch.h);
+                blk.mlp.gate.exec.forward_prepared(&acts, &mut scratch.g);
+                blk.mlp.up.exec.forward_prepared(&acts, &mut scratch.u);
             }
-            let dwn = blk.mlp.down.forward(&act);
+            for i in 0..self.cfg.d_ff {
+                scratch.g.data[i] = silu(scratch.g.data[i]) * scratch.u.data[i];
+            }
+            blk.mlp.down.exec.forward_into(&scratch.g, &mut scratch.dwn);
             for i in 0..d {
-                x[i] += dwn.data[i];
+                scratch.x[i] += scratch.dwn.data[i];
             }
         }
-        sess.pos += 1;
-        let mut xn = vec![0.0f32; d];
-        rmsnorm(&x, &self.final_norm, self.cfg.rmsnorm_eps, &mut xn);
-        let logits = crate::kernels::dense::sgemm_wt(
-            &Tensor::from_vec(&[1, d], xn),
-            &self.lm_head,
+        rmsnorm(
+            &scratch.x,
+            &self.final_norm,
+            self.cfg.rmsnorm_eps,
+            scratch.h.row_mut(0),
         );
+        let logits = crate::kernels::dense::sgemm_wt(&scratch.h, &self.lm_head);
+        sess.pos += 1;
         logits.data
     }
 
@@ -364,11 +535,13 @@ impl Transformer {
         let mut b = (self.embed.numel() + self.lm_head.numel()) * 2; // fp16
         for blk in &self.blocks {
             b += (blk.attn_norm.len() + blk.mlp_norm.len()) * 2;
-            b += blk.attn.wq.bytes()
-                + blk.attn.wk.bytes()
-                + blk.attn.wv.bytes()
-                + blk.attn.wo.bytes();
-            b += blk.mlp.gate.bytes() + blk.mlp.up.bytes() + blk.mlp.down.bytes();
+            b += blk.attn.wq.quant.bytes()
+                + blk.attn.wk.quant.bytes()
+                + blk.attn.wv.quant.bytes()
+                + blk.attn.wo.quant.bytes();
+            b += blk.mlp.gate.quant.bytes()
+                + blk.mlp.up.quant.bytes()
+                + blk.mlp.down.quant.bytes();
         }
         b
     }
@@ -387,7 +560,7 @@ impl Transformer {
                 &blk.mlp.up,
                 &blk.mlp.down,
             ] {
-                bits += l.weight_bits();
+                bits += l.quant.weight_bits();
                 n += 1.0;
             }
         }
@@ -395,10 +568,33 @@ impl Transformer {
     }
 }
 
-/// Incremental decoding state (position + per-layer INT4 KV caches).
+/// Preallocated per-step buffers for incremental decoding — every linear
+/// output, norm output, and attention temporary lives here so a decode
+/// step performs no per-layer allocation for the compiled-exec path.
+struct DecodeScratch {
+    /// residual stream [d]
+    x: Vec<f32>,
+    /// RMSNorm output [1, d] (also reused for the final norm)
+    h: Tensor,
+    q: Tensor,
+    k: Tensor,
+    v: Tensor,
+    attn_out: Tensor,
+    o: Tensor,
+    g: Tensor,
+    u: Tensor,
+    dwn: Tensor,
+    krow: Vec<f32>,
+    vrow: Vec<f32>,
+    scores: Vec<f32>,
+}
+
+/// Incremental decoding state (position + per-layer INT4 KV caches +
+/// scratch buffers).
 pub struct DecodeSession {
     pub caches: Vec<LayerKvCache>,
     pub pos: usize,
+    scratch: DecodeScratch,
 }
 
 // ---------------------------------------------------------------------------
@@ -408,13 +604,17 @@ pub struct DecodeSession {
 /// Quantize a checkpointed model with any [`Quantizer`], calibrating each
 /// linear on the activations produced by the already-quantized prefix of
 /// the network (the standard GPTQ/Atom sequential scheme; this is what
-/// "utilizing the GPTQ quantization framework" means in the paper's setup).
+/// "utilizing the GPTQ quantization framework" means in the paper's
+/// setup). Each layer is identified to the quantizer by a [`LayerCtx`];
+/// failures surface as [`ModelError`] instead of panics. Activation
+/// propagation runs the compiled execs — the same path serving uses —
+/// with one shared preparation for wq/wk/wv and one for gate/up.
 pub fn quantize_model(
     ck: &Checkpoint,
     quantizer: &dyn Quantizer,
     calib_seqs: &[Vec<u16>],
     kv_bits: Option<u32>,
-) -> Result<Transformer, checkpoint::CkptError> {
+) -> Result<Transformer, ModelError> {
     let cfg = ck.config.clone();
     let d = cfg.d_model;
     let eps = cfg.rmsnorm_eps;
@@ -458,23 +658,35 @@ pub fn quantize_model(
         let attn_norm = ck.get(&format!("layers.{l}.attn_norm"))?.data.clone();
         let mlp_norm = ck.get(&format!("layers.{l}.mlp_norm"))?.data.clone();
 
+        let quant_lin =
+            |name: String, kind: LinearKind, calib: &Tensor| -> Result<CompiledLinear, ModelError> {
+                let ctx = LayerCtx::new(l, name.clone(), kind);
+                let w = ck.get(&name)?;
+                Ok(CompiledLinear::new(quantizer.quantize_linear(&ctx, w, calib)?))
+            };
+
         // --- attention projections ---
         let h_seqs: Vec<Tensor> = xs.iter().map(|x| norm_seq(x, &attn_norm)).collect();
         let h_cat = concat(&h_seqs);
-        let wq = quantizer.quantize_linear(ck.get(&format!("layers.{l}.wq"))?, &h_cat);
-        let wk = quantizer.quantize_linear(ck.get(&format!("layers.{l}.wk"))?, &h_cat);
-        let wv = quantizer.quantize_linear(ck.get(&format!("layers.{l}.wv"))?, &h_cat);
+        let wq = quant_lin(format!("layers.{l}.wq"), LinearKind::Query, &h_cat)?;
+        let wk = quant_lin(format!("layers.{l}.wk"), LinearKind::Key, &h_cat)?;
+        let wv = quant_lin(format!("layers.{l}.wv"), LinearKind::Value, &h_cat)?;
 
-        // run attention per sequence with quantized q/k/v
+        // run attention per sequence with quantized q/k/v (shared prepare)
         let mut attn_outs = Vec::new();
         for h in &h_seqs {
-            let mut q = wq.forward(h);
-            let mut k = wk.forward(h);
-            let v = wv.forward(h);
+            let (t_len, _) = h.dims2();
+            let mut q = Tensor::zeros(&[t_len, d]);
+            let mut k = Tensor::zeros(&[t_len, d]);
+            let mut v = Tensor::zeros(&[t_len, d]);
+            {
+                let acts = wq.exec.prepare(h);
+                wq.exec.forward_prepared(&acts, &mut q);
+                wk.exec.forward_prepared(&acts, &mut k);
+                wv.exec.forward_prepared(&acts, &mut v);
+            }
             apply_rope(&mut q, cfg.n_heads, cfg.rope_theta, 0);
             apply_rope(&mut k, cfg.n_heads, cfg.rope_theta, 0);
-            let mut k = k;
-            let mut v = v;
             if kv_bits == Some(4) {
                 let (t_len, _) = k.dims2();
                 for t in 0..t_len {
@@ -484,10 +696,11 @@ pub fn quantize_model(
             }
             attn_outs.push(causal_attention(&q, &k, &v, cfg.n_heads));
         }
-        let wo = quantizer.quantize_linear(
-            ck.get(&format!("layers.{l}.wo"))?,
+        let wo = quant_lin(
+            format!("layers.{l}.wo"),
+            LinearKind::AttnOut,
             &concat(&attn_outs),
-        );
+        )?;
         for (x, a) in xs.iter_mut().zip(attn_outs.iter()) {
             let o = wo.forward(a);
             for i in 0..x.data.len() {
@@ -498,23 +711,29 @@ pub fn quantize_model(
         // --- MLP ---
         let h_seqs: Vec<Tensor> = xs.iter().map(|x| norm_seq(x, &mlp_norm)).collect();
         let h_cat = concat(&h_seqs);
-        let gate = quantizer.quantize_linear(ck.get(&format!("layers.{l}.gate"))?, &h_cat);
-        let up = quantizer.quantize_linear(ck.get(&format!("layers.{l}.up"))?, &h_cat);
-        let mut acts = Vec::new();
+        let gate = quant_lin(format!("layers.{l}.gate"), LinearKind::MlpGate, &h_cat)?;
+        let up = quant_lin(format!("layers.{l}.up"), LinearKind::MlpUp, &h_cat)?;
+        let mut acts_out = Vec::new();
         for h in &h_seqs {
-            let g = gate.forward(h);
-            let u = up.forward(h);
-            let mut act = Tensor::zeros(&g.shape.clone());
-            for i in 0..act.data.len() {
-                act.data[i] = silu(g.data[i]) * u.data[i];
+            let (t_len, _) = h.dims2();
+            let mut g = Tensor::zeros(&[t_len, cfg.d_ff]);
+            let mut u = Tensor::zeros(&[t_len, cfg.d_ff]);
+            {
+                let acts = gate.exec.prepare(h);
+                gate.exec.forward_prepared(&acts, &mut g);
+                up.exec.forward_prepared(&acts, &mut u);
             }
-            acts.push(act);
+            for i in 0..g.data.len() {
+                g.data[i] = silu(g.data[i]) * u.data[i];
+            }
+            acts_out.push(g);
         }
-        let down = quantizer.quantize_linear(
-            ck.get(&format!("layers.{l}.down"))?,
-            &concat(&acts),
-        );
-        for (x, a) in xs.iter_mut().zip(acts.iter()) {
+        let down = quant_lin(
+            format!("layers.{l}.down"),
+            LinearKind::MlpDown,
+            &concat(&acts_out),
+        )?;
+        for (x, a) in xs.iter_mut().zip(acts_out.iter()) {
             let dwn = down.forward(a);
             for i in 0..x.data.len() {
                 x.data[i] += dwn.data[i];
@@ -543,7 +762,6 @@ pub fn quantize_model(
 mod tests {
     use super::*;
     use crate::quant::{BwaQuantizer, FpQuantizer};
-    use std::collections::BTreeMap;
 
     fn small_cfg() -> ModelConfig {
         ModelConfig {
@@ -556,46 +774,6 @@ mod tests {
             max_seq: 64,
             rope_theta: 10000.0,
             rmsnorm_eps: 1e-5,
-        }
-    }
-
-    fn random_checkpoint(cfg: &ModelConfig, seed: u64) -> Checkpoint {
-        let mut rng = Rng::new(seed);
-        let d = cfg.d_model;
-        let mut tensors = BTreeMap::new();
-        fn add(
-            tensors: &mut BTreeMap<String, Tensor>,
-            name: String,
-            shape: &[usize],
-            rng: &mut Rng,
-            std: f32,
-        ) {
-            let n: usize = shape.iter().product();
-            tensors.insert(name, Tensor::from_vec(shape, rng.normal_vec_f32(n, 0.0, std)));
-        }
-        add(&mut tensors, "embed".into(), &[cfg.vocab_size, d], &mut rng, 0.5);
-        add(&mut tensors, "lm_head".into(), &[cfg.vocab_size, d], &mut rng, 0.08);
-        for l in 0..cfg.n_layers {
-            add(&mut tensors, format!("layers.{l}.wq"), &[d, d], &mut rng, 0.08);
-            add(&mut tensors, format!("layers.{l}.wk"), &[d, d], &mut rng, 0.08);
-            add(&mut tensors, format!("layers.{l}.wv"), &[d, d], &mut rng, 0.08);
-            add(&mut tensors, format!("layers.{l}.wo"), &[d, d], &mut rng, 0.08);
-            add(&mut tensors, format!("layers.{l}.gate"), &[cfg.d_ff, d], &mut rng, 0.08);
-            add(&mut tensors, format!("layers.{l}.up"), &[cfg.d_ff, d], &mut rng, 0.08);
-            add(&mut tensors, format!("layers.{l}.down"), &[d, cfg.d_ff], &mut rng, 0.08);
-            tensors.insert(
-                format!("layers.{l}.attn_norm"),
-                Tensor::from_vec(&[d], vec![1.0; d]),
-            );
-            tensors.insert(
-                format!("layers.{l}.mlp_norm"),
-                Tensor::from_vec(&[d], vec![1.0; d]),
-            );
-        }
-        tensors.insert("final_norm".into(), Tensor::from_vec(&[d], vec![1.0; d]));
-        Checkpoint {
-            config: cfg.clone(),
-            tensors,
         }
     }
 
@@ -663,7 +841,7 @@ mod tests {
     #[test]
     fn fp_quantize_model_matches_checkpoint_forward() {
         let cfg = small_cfg();
-        let ck = random_checkpoint(&cfg, 6);
+        let ck = Checkpoint::random(&cfg, 6);
         let fp = Transformer::fp_from_checkpoint(&ck).unwrap();
         let calib: Vec<Vec<u16>> = vec![vec![1, 2, 3, 4, 5, 6, 7, 8]];
         let fp2 = quantize_model(&ck, &FpQuantizer, &calib, None).unwrap();
@@ -676,7 +854,7 @@ mod tests {
     #[test]
     fn bwa_quantized_model_runs_and_tracks_fp() {
         let cfg = small_cfg();
-        let ck = random_checkpoint(&cfg, 7);
+        let ck = Checkpoint::random(&cfg, 7);
         let fp = Transformer::fp_from_checkpoint(&ck).unwrap();
         let mut rng = Rng::new(8);
         let calib: Vec<Vec<u16>> = (0..4)
@@ -693,10 +871,141 @@ mod tests {
         assert!(q.bytes() < fp.bytes());
     }
 
+    /// The tentpole parity contract: the compiled popcount path and the
+    /// old dense fake-quant path agree, for both prefill and incremental
+    /// decode. With no outlier block the two paths compute the same math
+    /// and must agree to fp tolerance; the paper config adds the known
+    /// sym-vs-asym INT8 outlier-activation delta, so its bound is looser.
+    #[test]
+    fn compiled_popcount_matches_dense_fake_reference() {
+        let cfg = small_cfg();
+        let ck = Checkpoint::random(&cfg, 11);
+        let mut rng = Rng::new(12);
+        let calib: Vec<Vec<u16>> = (0..4)
+            .map(|_| (0..32).map(|_| rng.below(64) as u16).collect())
+            .collect();
+        let tokens: Vec<u16> = (0..12).map(|_| rng.below(64) as u16).collect();
+
+        // exact-math config: binary region only -> fp tolerance
+        let q_exact = BwaQuantizer {
+            cfg: crate::quant::binarize::BwaConfig {
+                outlier_groups: 0,
+                ..crate::quant::binarize::BwaConfig::default()
+            },
+        };
+        let m = quantize_model(&ck, &q_exact, &calib, Some(4)).unwrap();
+        let packed = m.forward(&tokens);
+        let reference = m.forward_reference(&tokens);
+        let err = crate::util::prop::rel_err(&packed.data, &reference.data);
+        assert!(err < 1e-3, "packed vs fake-quant (no outliers) rel err {err}");
+
+        // paper config: outlier act quant differs sym/asym -> small bound
+        let m = quantize_model(&ck, &BwaQuantizer::paper(), &calib, Some(4)).unwrap();
+        let packed = m.forward(&tokens);
+        let reference = m.forward_reference(&tokens);
+        let err = crate::util::prop::rel_err(&packed.data, &reference.data);
+        assert!(err < 0.1, "packed vs fake-quant prefill rel err {err}");
+        // decode: packed exec through the INT4 cache vs the reference's
+        // last position (cache quantization adds its own tolerance)
+        let mut sess = m.new_session();
+        let mut last = Vec::new();
+        for &t in &tokens {
+            last = m.decode_step(&mut sess, t);
+        }
+        let err = crate::util::prop::rel_err(&last, reference.row(tokens.len() - 1));
+        assert!(err < 0.15, "packed decode vs fake-quant rel err {err}");
+    }
+
+    /// The shared-prepare contract: wq/wk/wv consume one prepared input
+    /// (gate/up likewise) and the shared packing equals what each layer
+    /// would prepare for itself.
+    #[test]
+    fn prepared_acts_shared_across_qkv_and_prepared_once() {
+        let cfg = small_cfg();
+        let ck = Checkpoint::random(&cfg, 13);
+        let mut rng = Rng::new(14);
+        let calib: Vec<Vec<u16>> = (0..4)
+            .map(|_| (0..32).map(|_| rng.below(64) as u16).collect())
+            .collect();
+        let q = quantize_model(&ck, &BwaQuantizer::paper(), &calib, Some(4)).unwrap();
+        let blk = &q.blocks[0];
+
+        // shared packing == per-layer packing, bit for bit
+        let x = Tensor::from_vec(
+            &[3, cfg.d_model],
+            rng.normal_vec_f32(3 * cfg.d_model, 0.0, 1.0),
+        );
+        let a = blk.attn.wq.exec.prepare(&x);
+        let b = blk.attn.wk.exec.prepare(&x);
+        let pa = a.packed.as_ref().expect("bwa packs");
+        let pb = b.packed.as_ref().expect("bwa packs");
+        assert_eq!(pa.sig, pb.sig, "q/k share one packing scheme");
+        assert_eq!(pa.acts.planes, pb.acts.planes);
+        assert_eq!(pa.acts.mu, pb.acts.mu);
+        assert_eq!(pa.acts.shift, pb.acts.shift);
+        assert_eq!(pa.acts.r_tot, pb.acts.r_tot);
+        assert_eq!(pa.acts.x_out_q, pb.acts.x_out_q);
+        assert_eq!(pa.acts.x_out_scale, pb.acts.x_out_scale);
+
+        // one forward prepares once per shared input: wq/wo/gate/down
+        // pack, wk/wv/up ride along
+        let count = |lin: &CompiledLinear| lin.exec.prepare_invocations();
+        let before = [
+            count(&blk.attn.wq),
+            count(&blk.attn.wk),
+            count(&blk.attn.wv),
+            count(&blk.attn.wo),
+            count(&blk.mlp.gate),
+            count(&blk.mlp.up),
+            count(&blk.mlp.down),
+        ];
+        let tokens: Vec<u16> = (0..8).map(|_| rng.below(64) as u16).collect();
+        let _ = q.forward(&tokens);
+        let blk = &q.blocks[0];
+        let after = [
+            count(&blk.attn.wq),
+            count(&blk.attn.wk),
+            count(&blk.attn.wv),
+            count(&blk.attn.wo),
+            count(&blk.mlp.gate),
+            count(&blk.mlp.up),
+            count(&blk.mlp.down),
+        ];
+        let delta: Vec<u64> = after.iter().zip(&before).map(|(a, b)| a - b).collect();
+        assert_eq!(delta, vec![1, 0, 0, 1, 1, 0, 1], "prepare-once contract");
+    }
+
+    #[test]
+    fn quantize_model_surfaces_layer_errors() {
+        // d_model = 96 is not a multiple of the 64-channel group size, so
+        // the paper's method must refuse the first projection — as an
+        // error naming the layer, not a panic.
+        let cfg = ModelConfig {
+            name: "bad".into(),
+            vocab_size: 32,
+            d_model: 96,
+            n_layers: 1,
+            n_heads: 2,
+            d_ff: 96,
+            max_seq: 32,
+            rope_theta: 10000.0,
+            rmsnorm_eps: 1e-5,
+        };
+        let ck = Checkpoint::random(&cfg, 15);
+        let calib: Vec<Vec<u16>> = vec![vec![1, 2, 3, 4, 5, 6, 7, 8]];
+        match quantize_model(&ck, &BwaQuantizer::paper(), &calib, Some(4)) {
+            Err(ModelError::Quant(q)) => {
+                assert!(q.to_string().contains("layers.0.wq"), "{q}");
+            }
+            Err(other) => panic!("expected quant error, got {other}"),
+            Ok(_) => panic!("expected quantization to fail"),
+        }
+    }
+
     #[test]
     fn checkpoint_roundtrip_through_disk() {
         let cfg = small_cfg();
-        let ck = random_checkpoint(&cfg, 9);
+        let ck = Checkpoint::random(&cfg, 9);
         let dir = std::env::temp_dir().join("bwa_model_test");
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("model.bin");

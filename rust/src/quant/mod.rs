@@ -8,9 +8,37 @@
 //! - [`pack`] — bit packing for the popcount kernel;
 //! - [`binarize`] — Algorithm 1 end-to-end per linear layer.
 //!
-//! The [`Quantizer`]/[`QuantLinear`] traits are the plug-in point shared
-//! with the `baselines` module so the evaluation harness can run every
-//! method through the same code path.
+//! # The plan/execute API
+//!
+//! Serving runs in four stages, mirroring the offline-pack / prepared-
+//! activation structure of Atom and BiLLM's inference engines:
+//!
+//! 1. **quantize** — a [`Quantizer`] turns (layer identity, weights,
+//!    calibration activations) into a [`QuantLinear`]: the *storage* form
+//!    (packed sign/bitmap planes, affine params, INT8 outlier block).
+//!    Shape/config problems surface as [`QuantError`] instead of panics,
+//!    tagged with the [`LayerCtx`] that failed.
+//! 2. **compile** — [`QuantLinear::compile`] produces a [`LinearExec`]:
+//!    the *execution plan*. For [`binarize::BwaLinear`] with quantized
+//!    activations this is the packed popcount GEMM
+//!    ([`crate::kernels::bwa_gemm::BwaGemm`]) — the dense dequantized
+//!    `w_hat` is dropped from the plan entirely. Dense / fake-quant
+//!    layers compile to a fallback plan that runs their reference math.
+//! 3. **prepare** — [`LinearExec::prepare`] quantizes + bit-packs one
+//!    input batch into [`PreparedActs`]. Preparation is done **once per
+//!    distinct input**: wq/wk/wv consume one `PreparedActs`, gate/up
+//!    another (they read the same RMSNorm output and share the same
+//!    channel permutation, so the packing is identical — guarded by a
+//!    signature check, with a safe re-pack fallback on mismatch).
+//! 4. **execute** — [`LinearExec::forward_prepared`] runs the GEMM over
+//!    the prepared activations into a caller-preallocated output buffer.
+//!
+//! Which paths are what: `model.forward`/`decode_step` run compiled execs
+//! (the packed popcount path for the paper's method); the dense
+//! fake-quant math survives as [`QuantLinear::forward`] — used for
+//! calibration-time reference checks and `Transformer::forward_reference`
+//! parity tests — and the two are asserted to agree by kernel and model
+//! tests.
 
 pub mod actquant;
 pub mod binarize;
@@ -20,11 +48,107 @@ pub mod outlier;
 pub mod pack;
 pub mod rtn;
 
+use crate::kernels::bwa_gemm::{act_sig, BwaGemm, PackedActs};
 use crate::tensor::Tensor;
 
-/// A quantized (or passthrough) linear layer usable by the model.
+// ---------------------------------------------------------------------------
+// Layer identity + errors
+// ---------------------------------------------------------------------------
+
+/// Which projection of a transformer block a linear layer is.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LinearKind {
+    Query,
+    Key,
+    Value,
+    AttnOut,
+    MlpGate,
+    MlpUp,
+    MlpDown,
+    /// Anything outside the standard block structure (tests, tools).
+    Other,
+}
+
+/// Identity of the linear being quantized: which block, which projection,
+/// and its checkpoint name. Carried through [`Quantizer::quantize_linear`]
+/// so failures are attributable and methods can specialize per kind.
+#[derive(Clone, Debug)]
+pub struct LayerCtx {
+    pub block: usize,
+    pub name: String,
+    pub kind: LinearKind,
+}
+
+impl LayerCtx {
+    pub fn new(block: usize, name: impl Into<String>, kind: LinearKind) -> Self {
+        Self {
+            block,
+            name: name.into(),
+            kind,
+        }
+    }
+
+    /// Context for a linear outside the block structure (tests, tools).
+    pub fn other(name: impl Into<String>) -> Self {
+        Self::new(0, name, LinearKind::Other)
+    }
+}
+
+impl std::fmt::Display for LayerCtx {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} (block {}, {:?})", self.name, self.block, self.kind)
+    }
+}
+
+/// Why a layer could not be quantized.
+#[derive(Clone, Debug)]
+pub enum QuantError {
+    /// Weight/calibration shapes are inconsistent.
+    ShapeMismatch { layer: String, detail: String },
+    /// The method's configuration cannot apply to this layer shape.
+    Unsupported { layer: String, detail: String },
+}
+
+impl QuantError {
+    pub fn shape(ctx: &LayerCtx, detail: impl Into<String>) -> Self {
+        Self::ShapeMismatch {
+            layer: ctx.to_string(),
+            detail: detail.into(),
+        }
+    }
+
+    pub fn unsupported(ctx: &LayerCtx, detail: impl Into<String>) -> Self {
+        Self::Unsupported {
+            layer: ctx.to_string(),
+            detail: detail.into(),
+        }
+    }
+}
+
+impl std::fmt::Display for QuantError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::ShapeMismatch { layer, detail } => {
+                write!(f, "quantize {layer}: shape mismatch: {detail}")
+            }
+            Self::Unsupported { layer, detail } => {
+                write!(f, "quantize {layer}: unsupported: {detail}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for QuantError {}
+
+// ---------------------------------------------------------------------------
+// Plan/execute traits
+// ---------------------------------------------------------------------------
+
+/// A quantized (or passthrough) linear layer — the *storage* form.
 pub trait QuantLinear: Send + Sync {
-    /// y = f(x) for x: [tokens, in_features] → [tokens, out_features].
+    /// Reference forward, y = f(x) for x: [tokens, in] → [tokens, out].
+    /// For the paper's method this is the dense fake-quant math over the
+    /// dequantized `w_hat`; the serving path goes through [`Self::compile`].
     fn forward(&self, x: &Tensor) -> Tensor;
     /// Effective weight storage bits per element.
     fn weight_bits(&self) -> f64;
@@ -32,13 +156,139 @@ pub trait QuantLinear: Send + Sync {
     fn act_bits(&self) -> f64;
     /// Storage bytes for the model-size table.
     fn bytes(&self) -> usize;
+    /// Compile an owning execution plan for the serving hot path.
+    fn compile(&self) -> Box<dyn LinearExec>;
 }
 
-/// A method that turns (weights, calibration activations) into a
-/// [`QuantLinear`]. Implemented by the paper's method and every baseline.
+/// Bit-packed activations plus the signature of the packing scheme
+/// (permutation / group / plane config) that produced them. Two execs
+/// with equal signatures pack any input identically, so the packing can
+/// be shared.
+pub struct PackedShared {
+    pub sig: u64,
+    pub acts: PackedActs,
+}
+
+/// One input batch, prepared once and shareable across every exec fed by
+/// the same tensor (wq/wk/wv; gate/up). The raw input is always carried
+/// so an exec with an incompatible packing scheme can safely re-prepare.
+pub struct PreparedActs<'a> {
+    /// The raw layer input [tokens, in_features].
+    pub x: &'a Tensor,
+    /// Packed bit planes, present when the preparing exec quantizes
+    /// activations (absent for dense/fake-quant plans).
+    pub packed: Option<PackedShared>,
+}
+
+/// A compiled execution plan for one linear layer — the *serving* form.
+pub trait LinearExec: Send + Sync {
+    /// Output features (columns of the preallocated output buffer).
+    fn out_features(&self) -> usize;
+    /// Quantize + bit-pack one input batch. Call once per distinct input
+    /// and share the result across all execs that consume it.
+    fn prepare<'a>(&self, x: &'a Tensor) -> PreparedActs<'a>;
+    /// Execute into a preallocated `[tokens, out_features]` buffer.
+    fn forward_prepared(&self, acts: &PreparedActs<'_>, out: &mut Tensor);
+    /// Convenience for unshared inputs: prepare + execute.
+    fn forward_into(&self, x: &Tensor, out: &mut Tensor) {
+        let acts = self.prepare(x);
+        self.forward_prepared(&acts, out);
+    }
+    /// How many times this exec packed an input batch itself (diagnostic
+    /// for the shared-prepare contract; dense plans report 0).
+    fn prepare_invocations(&self) -> u64 {
+        0
+    }
+}
+
+/// A method that turns (layer identity, weights, calibration activations)
+/// into a [`QuantLinear`]. Implemented by the paper's method and every
+/// baseline.
 pub trait Quantizer: Send + Sync {
     fn name(&self) -> String;
-    fn quantize_linear(&self, w: &Tensor, calib: &Tensor) -> Box<dyn QuantLinear>;
+    fn quantize_linear(
+        &self,
+        ctx: &LayerCtx,
+        w: &Tensor,
+        calib: &Tensor,
+    ) -> Result<Box<dyn QuantLinear>, QuantError>;
+}
+
+/// Shared validation: calibration activations must be 2-D with the layer's
+/// input width and at least one token.
+pub fn check_calib(ctx: &LayerCtx, w: &Tensor, calib: &Tensor) -> Result<(), QuantError> {
+    let (_, in_f) = w.dims2();
+    if calib.ndim() != 2 {
+        return Err(QuantError::shape(
+            ctx,
+            format!("calibration tensor must be 2-D, got {:?}", calib.shape),
+        ));
+    }
+    let (rows, cols) = calib.dims2();
+    if cols != in_f {
+        return Err(QuantError::shape(
+            ctx,
+            format!("calibration has {cols} channels, weights expect {in_f}"),
+        ));
+    }
+    if rows == 0 {
+        return Err(QuantError::shape(ctx, "no calibration tokens"));
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Generic execution plans
+// ---------------------------------------------------------------------------
+
+/// Dense f32 plan: owns the weights, runs the blocked sgemm. Compiled
+/// from [`FpLinear`] (and usable for any FP head/embedding projection).
+pub struct DenseExec {
+    pub w: Tensor,
+}
+
+impl LinearExec for DenseExec {
+    fn out_features(&self) -> usize {
+        self.w.dims2().0
+    }
+
+    fn prepare<'a>(&self, x: &'a Tensor) -> PreparedActs<'a> {
+        PreparedActs { x, packed: None }
+    }
+
+    fn forward_prepared(&self, acts: &PreparedActs<'_>, out: &mut Tensor) {
+        crate::kernels::dense::sgemm_wt_into(acts.x, &self.w, out);
+    }
+}
+
+/// Fallback plan for layers with no packed path (baselines' fake-quant
+/// linears, the A16 variant of the paper's method): owns a clone of the
+/// storage form and runs its reference forward into the output buffer.
+pub struct FallbackExec<T: QuantLinear + Clone + 'static> {
+    pub lin: T,
+    out_features: usize,
+}
+
+impl<T: QuantLinear + Clone + 'static> FallbackExec<T> {
+    pub fn new(lin: T, out_features: usize) -> Self {
+        Self { lin, out_features }
+    }
+}
+
+impl<T: QuantLinear + Clone + 'static> LinearExec for FallbackExec<T> {
+    fn out_features(&self) -> usize {
+        self.out_features
+    }
+
+    fn prepare<'a>(&self, x: &'a Tensor) -> PreparedActs<'a> {
+        PreparedActs { x, packed: None }
+    }
+
+    fn forward_prepared(&self, acts: &PreparedActs<'_>, out: &mut Tensor) {
+        let y = self.lin.forward(acts.x);
+        assert_eq!(out.shape, y.shape, "output buffer shape mismatch");
+        out.data.copy_from_slice(&y.data);
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -46,6 +296,7 @@ pub trait Quantizer: Send + Sync {
 // ---------------------------------------------------------------------------
 
 /// Unquantized linear layer (the tables' FP16 reference rows).
+#[derive(Clone)]
 pub struct FpLinear {
     pub w: Tensor,
 }
@@ -66,6 +317,10 @@ impl QuantLinear for FpLinear {
     fn bytes(&self) -> usize {
         self.w.numel() * 2
     }
+
+    fn compile(&self) -> Box<dyn LinearExec> {
+        Box::new(DenseExec { w: self.w.clone() })
+    }
 }
 
 /// Identity quantizer producing [`FpLinear`].
@@ -76,8 +331,13 @@ impl Quantizer for FpQuantizer {
         "FP16".to_string()
     }
 
-    fn quantize_linear(&self, w: &Tensor, _calib: &Tensor) -> Box<dyn QuantLinear> {
-        Box::new(FpLinear { w: w.clone() })
+    fn quantize_linear(
+        &self,
+        _ctx: &LayerCtx,
+        w: &Tensor,
+        _calib: &Tensor,
+    ) -> Result<Box<dyn QuantLinear>, QuantError> {
+        Ok(Box::new(FpLinear { w: w.clone() }))
     }
 }
 
@@ -107,8 +367,37 @@ impl Quantizer for BwaQuantizer {
         }
     }
 
-    fn quantize_linear(&self, w: &Tensor, calib: &Tensor) -> Box<dyn QuantLinear> {
-        Box::new(binarize::quantize_bwa(w, calib, &self.cfg))
+    fn quantize_linear(
+        &self,
+        ctx: &LayerCtx,
+        w: &Tensor,
+        calib: &Tensor,
+    ) -> Result<Box<dyn QuantLinear>, QuantError> {
+        check_calib(ctx, w, calib)?;
+        let (_, in_f) = w.dims2();
+        let g = self.cfg.group_size;
+        if g == 0 || g % pack::WORD_BITS != 0 {
+            return Err(QuantError::unsupported(
+                ctx,
+                format!("group_size {g} must be a positive multiple of {}", pack::WORD_BITS),
+            ));
+        }
+        if in_f % g != 0 {
+            return Err(QuantError::unsupported(
+                ctx,
+                format!("in_features {in_f} not a multiple of group_size {g}"),
+            ));
+        }
+        if self.cfg.outlier_groups * g >= in_f {
+            return Err(QuantError::unsupported(
+                ctx,
+                format!(
+                    "{} outlier groups of {g} leave no binary group in {in_f} channels",
+                    self.cfg.outlier_groups
+                ),
+            ));
+        }
+        Ok(Box::new(binarize::quantize_bwa(w, calib, &self.cfg)))
     }
 }
 
@@ -132,6 +421,56 @@ impl QuantLinear for binarize::BwaLinear {
     fn bytes(&self) -> usize {
         binarize::BwaLinear::bytes(self)
     }
+
+    /// Compile to the packed popcount plan ([`BwaGemm`]) — the plan drops
+    /// the dense `w_hat` and serves from bits + affine params alone. The
+    /// A16 variant keeps FP activations, so it has no packed path and
+    /// falls back to the dense reference plan.
+    fn compile(&self) -> Box<dyn LinearExec> {
+        if self.quantize_acts {
+            Box::new(BwaGemm::prepare(self))
+        } else {
+            Box::new(FallbackExec::new(self.clone(), self.out_features))
+        }
+    }
+}
+
+impl LinearExec for BwaGemm {
+    fn out_features(&self) -> usize {
+        self.lin.out_features
+    }
+
+    fn prepare<'a>(&self, x: &'a Tensor) -> PreparedActs<'a> {
+        PreparedActs {
+            x,
+            packed: Some(PackedShared {
+                sig: self.sig,
+                acts: self.prepare_acts(x),
+            }),
+        }
+    }
+
+    fn forward_prepared(&self, acts: &PreparedActs<'_>, out: &mut Tensor) {
+        match &acts.packed {
+            Some(p) if p.sig == self.sig => self.gemm_packed_into(&p.acts, out),
+            // Prepared elsewhere under a different packing scheme (or not
+            // at all): re-pack locally. Correct, just not shared.
+            _ => {
+                let p = self.prepare_acts(acts.x);
+                self.gemm_packed_into(&p, out);
+            }
+        }
+    }
+
+    fn prepare_invocations(&self) -> u64 {
+        self.pack_calls.load(std::sync::atomic::Ordering::Relaxed)
+    }
+}
+
+/// Signature compatibility check used by the model tests: two layers can
+/// share prepared activations iff their packing signatures agree.
+pub fn share_compatible(a: &binarize::BwaLinear, b: &binarize::BwaLinear) -> bool {
+    act_sig(a) == act_sig(b)
 }
 
 #[cfg(test)]
@@ -139,16 +478,27 @@ mod tests {
     use super::*;
     use crate::util::rng::Rng;
 
+    fn ctx() -> LayerCtx {
+        LayerCtx::other("test")
+    }
+
     #[test]
     fn fp_quantizer_is_exact() {
         let mut rng = Rng::new(1);
         let w = Tensor::from_vec(&[4, 8], rng.normal_vec_f32(32, 0.0, 1.0));
         let x = Tensor::from_vec(&[3, 8], rng.normal_vec_f32(24, 0.0, 1.0));
-        let q = FpQuantizer.quantize_linear(&w, &x);
+        let q = FpQuantizer.quantize_linear(&ctx(), &w, &x).unwrap();
         let y = q.forward(&x);
         let want = crate::tensor::matmul_wt(&x, &w);
         crate::util::prop::assert_close(&y.data, &want.data, 1e-5, 1e-5).unwrap();
         assert_eq!(q.weight_bits(), 16.0);
+        // the compiled dense plan is bit-identical to the storage forward
+        let exec = q.compile();
+        let mut out = Tensor::zeros(&[3, 4]);
+        exec.forward_into(&x, &mut out);
+        assert_eq!(out.data, y.data);
+        assert_eq!(exec.out_features(), 4);
+        assert_eq!(exec.prepare_invocations(), 0);
     }
 
     #[test]
@@ -158,10 +508,115 @@ mod tests {
         let x = Tensor::from_vec(&[40, 128], rng.normal_vec_f32(40 * 128, 0.0, 1.0));
         let q = BwaQuantizer::paper();
         assert!(q.name().contains("1x4"));
-        let ql = q.quantize_linear(&w, &x);
+        let ql = q.quantize_linear(&ctx(), &w, &x).unwrap();
         let y = ql.forward(&x);
         assert_eq!(y.dims2(), (40, 16));
         assert!(ql.weight_bits() < 16.0);
         assert!(ql.bytes() > 0);
+    }
+
+    #[test]
+    fn quantize_errors_instead_of_panicking() {
+        let mut rng = Rng::new(3);
+        let w = Tensor::from_vec(&[8, 128], rng.normal_vec_f32(8 * 128, 0.0, 0.1));
+        let expect_err = |r: Result<Box<dyn QuantLinear>, QuantError>| -> QuantError {
+            match r {
+                Err(e) => e,
+                Ok(_) => panic!("expected quantization to fail"),
+            }
+        };
+        // wrong calibration width
+        let bad = Tensor::from_vec(&[10, 64], rng.normal_vec_f32(640, 0.0, 1.0));
+        let err = expect_err(BwaQuantizer::paper().quantize_linear(&ctx(), &w, &bad));
+        assert!(matches!(err, QuantError::ShapeMismatch { .. }), "{err}");
+        assert!(err.to_string().contains("test"), "{err}");
+        // in_features not a multiple of the group size
+        let w2 = Tensor::from_vec(&[8, 96], rng.normal_vec_f32(8 * 96, 0.0, 0.1));
+        let x2 = Tensor::from_vec(&[10, 96], rng.normal_vec_f32(960, 0.0, 1.0));
+        let err = expect_err(BwaQuantizer::paper().quantize_linear(&ctx(), &w2, &x2));
+        assert!(matches!(err, QuantError::Unsupported { .. }), "{err}");
+        // outlier groups consuming every channel group
+        let q = BwaQuantizer {
+            cfg: binarize::BwaConfig {
+                outlier_groups: 2,
+                ..binarize::BwaConfig::default()
+            },
+        };
+        let w3 = Tensor::from_vec(&[8, 128], rng.normal_vec_f32(8 * 128, 0.0, 0.1));
+        let x3 = Tensor::from_vec(&[10, 128], rng.normal_vec_f32(1280, 0.0, 1.0));
+        assert!(q.quantize_linear(&ctx(), &w3, &x3).is_err());
+    }
+
+    #[test]
+    fn bwa_compiles_to_packed_popcount_plan() {
+        let mut rng = Rng::new(4);
+        let w = Tensor::from_vec(&[16, 128], rng.normal_vec_f32(16 * 128, 0.0, 0.1));
+        let x = Tensor::from_vec(&[40, 128], rng.normal_vec_f32(40 * 128, 0.0, 1.0));
+        let ql = BwaQuantizer::paper()
+            .quantize_linear(&ctx(), &w, &x)
+            .unwrap();
+        let exec = ql.compile();
+        let xt = Tensor::from_vec(&[3, 128], rng.normal_vec_f32(3 * 128, 0.0, 1.0));
+        // the plan produces packed activations...
+        let acts = exec.prepare(&xt);
+        assert!(acts.packed.is_some(), "BWA plan must pack activations");
+        // ...and executing them matches the fake-quant reference closely
+        let mut out = Tensor::zeros(&[3, 16]);
+        exec.forward_prepared(&acts, &mut out);
+        let reference = ql.forward(&xt);
+        let err = crate::util::prop::rel_err(&out.data, &reference.data);
+        assert!(err < 0.02, "packed vs fake rel err {err}");
+        assert_eq!(exec.prepare_invocations(), 1);
+    }
+
+    #[test]
+    fn a16_variant_compiles_to_fallback_plan() {
+        let mut rng = Rng::new(5);
+        let w = Tensor::from_vec(&[8, 128], rng.normal_vec_f32(8 * 128, 0.0, 0.1));
+        let x = Tensor::from_vec(&[30, 128], rng.normal_vec_f32(30 * 128, 0.0, 1.0));
+        let q = BwaQuantizer {
+            cfg: binarize::BwaConfig::w11_a16(),
+        };
+        let ql = q.quantize_linear(&ctx(), &w, &x).unwrap();
+        let exec = ql.compile();
+        let xt = Tensor::from_vec(&[2, 128], rng.normal_vec_f32(256, 0.0, 1.0));
+        let acts = exec.prepare(&xt);
+        assert!(acts.packed.is_none(), "A16 has no packed path");
+        let mut out = Tensor::zeros(&[2, 8]);
+        exec.forward_prepared(&acts, &mut out);
+        assert_eq!(out.data, ql.forward(&xt).data);
+    }
+
+    #[test]
+    fn mismatched_packing_falls_back_to_local_repack() {
+        // Prepare with a layer that has a different permutation; the
+        // consumer must detect the signature mismatch and re-pack.
+        let mut rng = Rng::new(6);
+        let w = Tensor::from_vec(&[8, 128], rng.normal_vec_f32(8 * 128, 0.0, 0.1));
+        let mut xa = Tensor::zeros(&[40, 128]);
+        let mut xb = Tensor::zeros(&[40, 128]);
+        for v in &mut xa.data {
+            *v = rng.normal_f32(0.0, 1.0);
+        }
+        for v in &mut xb.data {
+            *v = rng.normal_f32(0.0, 1.0);
+        }
+        // different outlier channels => different permutations
+        for t in 0..40 {
+            xa.data[t * 128 + 3] *= 20.0;
+            xb.data[t * 128 + 90] *= 20.0;
+        }
+        let la = binarize::quantize_bwa(&w, &xa, &binarize::BwaConfig::default());
+        let lb = binarize::quantize_bwa(&w, &xb, &binarize::BwaConfig::default());
+        assert!(!share_compatible(&la, &lb), "perms should differ");
+        let ea = la.compile();
+        let eb = lb.compile();
+        let xt = Tensor::from_vec(&[2, 128], rng.normal_vec_f32(256, 0.0, 1.0));
+        let acts_a = ea.prepare(&xt);
+        let mut via_shared = Tensor::zeros(&[2, 8]);
+        eb.forward_prepared(&acts_a, &mut via_shared); // wrong sig -> repack
+        let mut via_own = Tensor::zeros(&[2, 8]);
+        eb.forward_into(&xt, &mut via_own);
+        assert_eq!(via_shared.data, via_own.data);
     }
 }

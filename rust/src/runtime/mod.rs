@@ -7,25 +7,16 @@
 //! order (the same order `save_checkpoint` wrote them). Weights are
 //! uploaded to device buffers once at load time; per-request work is one
 //! token-buffer upload + execute.
+//!
+//! The PJRT-backed implementation needs the vendored `xla` bindings crate
+//! and is gated behind the `pjrt` cargo feature (add the crate as a path
+//! dependency and build with `--features pjrt`). Without the feature the
+//! same session API exists but `load` returns a [`RuntimeError`], so the
+//! coordinator/examples compile and the `native`/`bwa` backends work in
+//! dependency-free builds.
 
-use crate::model::checkpoint::Checkpoint;
 use crate::util::json::Json;
 use std::path::Path;
-
-/// Wraps the PJRT CPU client + a compiled transformer executable.
-pub struct TransformerSession {
-    client: xla::PjRtClient,
-    exe: xla::PjRtLoadedExecutable,
-    /// Pre-uploaded parameter buffers (manifest order, after `tokens`).
-    param_bufs: Vec<xla::PjRtBuffer>,
-    /// Host literals backing `param_bufs`. PJRT's BufferFromHostLiteral
-    /// copies asynchronously; the host memory must outlive the buffers or
-    /// the copy races a free (observed as a size-check abort in the CPU
-    /// plugin). Kept alive for the session lifetime.
-    _param_literals: Vec<xla::Literal>,
-    pub seq: usize,
-    pub vocab: usize,
-}
 
 #[derive(Debug)]
 pub struct RuntimeError(pub String);
@@ -54,120 +45,227 @@ pub fn load_manifest(artifacts_dir: &Path, artifact: &str) -> Result<Json, Runti
     Ok(entry.clone())
 }
 
-/// Compile an HLO-text artifact on a fresh CPU client.
-pub fn compile_hlo(
-    path: &Path,
-) -> Result<(xla::PjRtClient, xla::PjRtLoadedExecutable), RuntimeError> {
-    let client = xla::PjRtClient::cpu().map_err(rerr)?;
-    let proto = xla::HloModuleProto::from_text_file(
-        path.to_str().ok_or_else(|| RuntimeError("bad path".into()))?,
-    )
-    .map_err(rerr)?;
-    let comp = xla::XlaComputation::from_proto(&proto);
-    let exe = client.compile(&comp).map_err(rerr)?;
-    Ok((client, exe))
-}
+#[cfg(feature = "pjrt")]
+mod pjrt_impl {
+    use super::{load_manifest, rerr, RuntimeError};
+    use crate::model::checkpoint::Checkpoint;
+    use crate::util::json::Json;
+    use std::path::{Path, PathBuf};
 
-impl TransformerSession {
-    /// Load the fp transformer artifact + checkpoint weights.
-    pub fn load(artifacts_dir: &Path, ckpt: &Checkpoint) -> Result<Self, RuntimeError> {
-        let manifest = load_manifest(artifacts_dir, "transformer_fp.hlo.txt")?;
-        let seq = manifest.usize_or("seq", 96);
-        let vocab = manifest.usize_or("vocab", 512);
-        let (client, exe) = compile_hlo(&artifacts_dir.join("transformer_fp.hlo.txt"))?;
-
-        // Upload parameters once, in manifest order (skipping "tokens").
-        let inputs = manifest
-            .get("inputs")
-            .as_arr()
-            .ok_or_else(|| RuntimeError("manifest missing inputs".into()))?;
-        let mut param_bufs = Vec::new();
-        let mut param_literals = Vec::new();
-        for name_json in inputs.iter().skip(1) {
-            let name = name_json.as_str().unwrap_or("");
-            let t = ckpt.get(name).map_err(rerr)?;
-            let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
-            let lit = xla::Literal::vec1(t.data.as_slice())
-                .reshape(&dims)
-                .map_err(rerr)?;
-            let buf = client
-                .buffer_from_host_literal(None, &lit)
-                .map_err(rerr)?;
-            param_bufs.push(buf);
-            param_literals.push(lit); // keep host copy alive (async upload)
-        }
-        Ok(TransformerSession {
-            client,
-            exe,
-            param_bufs,
-            _param_literals: param_literals,
-            seq,
-            vocab,
-        })
+    /// Wraps the PJRT CPU client + a compiled transformer executable.
+    pub struct TransformerSession {
+        client: xla::PjRtClient,
+        exe: xla::PjRtLoadedExecutable,
+        /// Pre-uploaded parameter buffers (manifest order, after `tokens`).
+        param_bufs: Vec<xla::PjRtBuffer>,
+        /// Host literals backing `param_bufs`. PJRT's BufferFromHostLiteral
+        /// copies asynchronously; the host memory must outlive the buffers
+        /// or the copy races a free (observed as a size-check abort in the
+        /// CPU plugin). Kept alive for the session lifetime.
+        _param_literals: Vec<xla::Literal>,
+        /// The HLO artifact actually loaded (reported by serving backends).
+        pub artifact: PathBuf,
+        pub seq: usize,
+        pub vocab: usize,
     }
 
-    /// Run one padded sequence; returns row-major [seq, vocab] logits.
-    pub fn forward(&self, tokens: &[u16]) -> Result<Vec<f32>, RuntimeError> {
-        assert!(tokens.len() <= self.seq, "sequence longer than artifact seq");
-        let mut padded: Vec<i32> = tokens.iter().map(|&t| t as i32).collect();
-        padded.resize(self.seq, 0);
-        let tok_lit = xla::Literal::vec1(padded.as_slice())
-            .reshape(&[self.seq as i64])
-            .map_err(rerr)?;
-        let tok_buf = self
-            .client
-            .buffer_from_host_literal(None, &tok_lit)
-            .map_err(rerr)?;
-        let mut args: Vec<&xla::PjRtBuffer> = vec![&tok_buf];
-        args.extend(self.param_bufs.iter());
-        let result = self.exe.execute_b(&args).map_err(rerr)?;
-        let lit = result[0][0].to_literal_sync().map_err(rerr)?;
-        let out = lit.to_tuple1().map_err(rerr)?;
-        out.to_vec::<f32>().map_err(rerr)
+    /// Compile an HLO-text artifact on a fresh CPU client.
+    pub fn compile_hlo(
+        path: &Path,
+    ) -> Result<(xla::PjRtClient, xla::PjRtLoadedExecutable), RuntimeError> {
+        let client = xla::PjRtClient::cpu().map_err(rerr)?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| RuntimeError("bad path".into()))?,
+        )
+        .map_err(rerr)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).map_err(rerr)?;
+        Ok((client, exe))
     }
 
-    /// Logits of the last *real* (unpadded) position.
-    pub fn last_logits(&self, tokens: &[u16]) -> Result<Vec<f32>, RuntimeError> {
-        let all = self.forward(tokens)?;
-        let t = tokens.len().saturating_sub(1);
-        Ok(all[t * self.vocab..(t + 1) * self.vocab].to_vec())
-    }
-}
+    impl TransformerSession {
+        /// Load the fp transformer artifact + checkpoint weights.
+        pub fn load(artifacts_dir: &Path, ckpt: &Checkpoint) -> Result<Self, RuntimeError> {
+            let manifest = load_manifest(artifacts_dir, "transformer_fp.hlo.txt")?;
+            let seq = manifest.usize_or("seq", 96);
+            let vocab = manifest.usize_or("vocab", 512);
+            let artifact = artifacts_dir.join("transformer_fp.hlo.txt");
+            let (client, exe) = compile_hlo(&artifact)?;
 
-/// Standalone kernel artifact session (bwa_linear.hlo.txt) — the L1
-/// Pallas kernel running under the Rust PJRT runtime.
-pub struct KernelSession {
-    client: xla::PjRtClient,
-    exe: xla::PjRtLoadedExecutable,
-    pub manifest: Json,
-}
-
-impl KernelSession {
-    pub fn load(artifacts_dir: &Path) -> Result<Self, RuntimeError> {
-        let manifest = load_manifest(artifacts_dir, "bwa_linear.hlo.txt")?;
-        let (client, exe) = compile_hlo(&artifacts_dir.join("bwa_linear.hlo.txt"))?;
-        Ok(KernelSession {
-            client,
-            exe,
-            manifest,
-        })
-    }
-
-    /// Execute with f32 inputs shaped per the manifest.
-    pub fn run(&self, inputs: &[(Vec<usize>, Vec<f32>)]) -> Result<Vec<f32>, RuntimeError> {
-        let mut lits = Vec::new();
-        for (shape, data) in inputs {
-            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-            lits.push(
-                xla::Literal::vec1(data.as_slice())
+            // Upload parameters once, in manifest order (skipping "tokens").
+            let inputs = manifest
+                .get("inputs")
+                .as_arr()
+                .ok_or_else(|| RuntimeError("manifest missing inputs".into()))?;
+            let mut param_bufs = Vec::new();
+            let mut param_literals = Vec::new();
+            for name_json in inputs.iter().skip(1) {
+                let name = name_json.as_str().unwrap_or("");
+                let t = ckpt.get(name).map_err(rerr)?;
+                let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+                let lit = xla::Literal::vec1(t.data.as_slice())
                     .reshape(&dims)
-                    .map_err(rerr)?,
-            );
+                    .map_err(rerr)?;
+                let buf = client
+                    .buffer_from_host_literal(None, &lit)
+                    .map_err(rerr)?;
+                param_bufs.push(buf);
+                param_literals.push(lit); // keep host copy alive (async upload)
+            }
+            Ok(TransformerSession {
+                client,
+                exe,
+                param_bufs,
+                _param_literals: param_literals,
+                artifact,
+                seq,
+                vocab,
+            })
         }
-        let _ = &self.client;
-        let result = self.exe.execute::<xla::Literal>(&lits).map_err(rerr)?;
-        let lit = result[0][0].to_literal_sync().map_err(rerr)?;
-        let out = lit.to_tuple1().map_err(rerr)?;
-        out.to_vec::<f32>().map_err(rerr)
+
+        /// Run one padded sequence; returns row-major [seq, vocab] logits.
+        pub fn forward(&self, tokens: &[u16]) -> Result<Vec<f32>, RuntimeError> {
+            assert!(tokens.len() <= self.seq, "sequence longer than artifact seq");
+            let mut padded: Vec<i32> = tokens.iter().map(|&t| t as i32).collect();
+            padded.resize(self.seq, 0);
+            let tok_lit = xla::Literal::vec1(padded.as_slice())
+                .reshape(&[self.seq as i64])
+                .map_err(rerr)?;
+            let tok_buf = self
+                .client
+                .buffer_from_host_literal(None, &tok_lit)
+                .map_err(rerr)?;
+            let mut args: Vec<&xla::PjRtBuffer> = vec![&tok_buf];
+            args.extend(self.param_bufs.iter());
+            let result = self.exe.execute_b(&args).map_err(rerr)?;
+            let lit = result[0][0].to_literal_sync().map_err(rerr)?;
+            let out = lit.to_tuple1().map_err(rerr)?;
+            out.to_vec::<f32>().map_err(rerr)
+        }
+
+        /// Logits of the last *real* (unpadded) position.
+        pub fn last_logits(&self, tokens: &[u16]) -> Result<Vec<f32>, RuntimeError> {
+            let all = self.forward(tokens)?;
+            let t = tokens.len().saturating_sub(1);
+            Ok(all[t * self.vocab..(t + 1) * self.vocab].to_vec())
+        }
+    }
+
+    /// Standalone kernel artifact session (bwa_linear.hlo.txt) — the L1
+    /// Pallas kernel running under the Rust PJRT runtime.
+    pub struct KernelSession {
+        client: xla::PjRtClient,
+        exe: xla::PjRtLoadedExecutable,
+        pub manifest: Json,
+    }
+
+    impl KernelSession {
+        pub fn load(artifacts_dir: &Path) -> Result<Self, RuntimeError> {
+            let manifest = load_manifest(artifacts_dir, "bwa_linear.hlo.txt")?;
+            let (client, exe) = compile_hlo(&artifacts_dir.join("bwa_linear.hlo.txt"))?;
+            Ok(KernelSession {
+                client,
+                exe,
+                manifest,
+            })
+        }
+
+        /// Execute with f32 inputs shaped per the manifest.
+        pub fn run(&self, inputs: &[(Vec<usize>, Vec<f32>)]) -> Result<Vec<f32>, RuntimeError> {
+            let mut lits = Vec::new();
+            for (shape, data) in inputs {
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                lits.push(
+                    xla::Literal::vec1(data.as_slice())
+                        .reshape(&dims)
+                        .map_err(rerr)?,
+                );
+            }
+            let _ = &self.client;
+            let result = self.exe.execute::<xla::Literal>(&lits).map_err(rerr)?;
+            let lit = result[0][0].to_literal_sync().map_err(rerr)?;
+            let out = lit.to_tuple1().map_err(rerr)?;
+            out.to_vec::<f32>().map_err(rerr)
+        }
+    }
+}
+
+#[cfg(feature = "pjrt")]
+pub use pjrt_impl::{compile_hlo, KernelSession, TransformerSession};
+
+#[cfg(not(feature = "pjrt"))]
+mod stub {
+    use super::{Json, Path, RuntimeError};
+    use crate::model::checkpoint::Checkpoint;
+    use std::path::PathBuf;
+
+    fn disabled() -> RuntimeError {
+        RuntimeError(
+            "built without the `pjrt` feature — rebuild with `--features pjrt` \
+             and the vendored xla crate to run HLO artifacts"
+                .into(),
+        )
+    }
+
+    /// API-compatible stand-in for the PJRT transformer session; `load`
+    /// always fails, so instances never exist at runtime.
+    pub struct TransformerSession {
+        pub artifact: PathBuf,
+        pub seq: usize,
+        pub vocab: usize,
+    }
+
+    impl TransformerSession {
+        pub fn load(_artifacts_dir: &Path, _ckpt: &Checkpoint) -> Result<Self, RuntimeError> {
+            Err(disabled())
+        }
+
+        pub fn forward(&self, _tokens: &[u16]) -> Result<Vec<f32>, RuntimeError> {
+            Err(disabled())
+        }
+
+        pub fn last_logits(&self, _tokens: &[u16]) -> Result<Vec<f32>, RuntimeError> {
+            Err(disabled())
+        }
+    }
+
+    /// API-compatible stand-in for the PJRT kernel session.
+    pub struct KernelSession {
+        pub manifest: Json,
+    }
+
+    impl KernelSession {
+        pub fn load(_artifacts_dir: &Path) -> Result<Self, RuntimeError> {
+            Err(disabled())
+        }
+
+        pub fn run(&self, _inputs: &[(Vec<usize>, Vec<f32>)]) -> Result<Vec<f32>, RuntimeError> {
+            Err(disabled())
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{KernelSession, TransformerSession};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn missing_manifest_is_an_error() {
+        let dir = std::env::temp_dir().join("bwa_runtime_none");
+        std::fs::create_dir_all(&dir).ok();
+        assert!(load_manifest(&dir, "transformer_fp.hlo.txt").is_err());
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_session_reports_missing_feature() {
+        let dir = std::env::temp_dir();
+        match KernelSession::load(&dir) {
+            Err(err) => assert!(err.to_string().contains("pjrt"), "{err}"),
+            Ok(_) => panic!("stub load must fail"),
+        }
     }
 }

@@ -1,0 +1,19 @@
+#!/usr/bin/env bash
+# Tier-1 verification gate (referenced from ROADMAP.md): build, tests,
+# formatting, and lints must all pass before a PR lands.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+echo "== cargo fmt --check =="
+cargo fmt --check
+
+echo "== cargo clippy (deny warnings) =="
+cargo clippy --all-targets -- -D warnings
+
+echo "All checks passed."
