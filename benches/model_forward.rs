@@ -32,6 +32,21 @@ fn main() {
     });
     println!("{}  ({:.0} tok/s incremental)", s.report(), 16.0 / (s.median_ns / 1e9));
 
+    // prefill + lockstep batched decode (the serving engine's phases):
+    // 8 sequences, prefill 16 tokens each, then 8 batched decode steps
+    let s = bencher.run("prefill+decode_step_batch (8 seqs)", || {
+        let mut sessions: Vec<_> = (0..8).map(|_| model.new_session_with_capacity(24)).collect();
+        for (i, sess) in sessions.iter_mut().enumerate() {
+            black_box(model.prefill(sess, &tokens[i..i + 16]));
+        }
+        for step in 0..8u16 {
+            let toks = vec![step; 8];
+            black_box(model.decode_step_batch(&mut sessions, &toks, 2));
+        }
+    });
+    let toks_done = 8.0 * (16.0 + 8.0);
+    println!("{}  ({:.0} tok/s batched)", s.report(), toks_done / (s.median_ns / 1e9));
+
     // fake-quant-dense vs compiled popcount on a BWA-quantized model: the
     // tentpole speedup — model.forward runs the packed BwaGemm execs,
     // model.forward_reference runs the old dense w_hat loop.
@@ -75,6 +90,7 @@ fn main() {
         256,
         4,
         8,
+        1,
         BatcherConfig {
             max_batch: 8,
             max_wait: Duration::from_micros(200),
@@ -95,6 +111,7 @@ fn main() {
         32,
         4,
         16,
+        1,
         BatcherConfig::default(),
         6,
     );

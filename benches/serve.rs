@@ -1,0 +1,132 @@
+//! `cargo bench --bench serve` — end-to-end serve-path benchmark.
+//!
+//! Runs the identical closed-loop workload (requests, clients, prompt
+//! length, greedy generation length, batcher knobs) against two backends
+//! over the same BWA-quantized tiny model:
+//!
+//! - `seq`      — `NativeBackend`, the naive per-sequence loop (a full
+//!                re-prefill for every generated token);
+//! - `parallel` — `ParallelBackend`, the batched engine (prefill worker
+//!                pool + lockstep KV-cached batched decode).
+//!
+//! Results (req/s, generated tok/s, latency percentiles, and the
+//! parallel-over-seq speedup) are printed and recorded into
+//! `BENCH_serve.json` at the repo root so the perf trajectory tracks
+//! end-to-end serving throughput, not just kernel microbenchmarks.
+
+use bwa_llm::coordinator::batcher::{Backend, BatcherConfig, BatcherStats};
+use bwa_llm::coordinator::{serve_workload_stats, NativeBackend, ParallelBackend};
+use bwa_llm::model::checkpoint::Checkpoint;
+use bwa_llm::model::config::ModelConfig;
+use bwa_llm::model::{quantize_model, Transformer};
+use bwa_llm::quant::BwaQuantizer;
+use bwa_llm::util::json::Json;
+use bwa_llm::util::rng::Rng;
+use std::time::Duration;
+
+const REQUESTS: usize = 32;
+const CLIENTS: usize = 4;
+const PROMPT_LEN: usize = 24;
+const GEN: usize = 8;
+const MAX_BATCH: usize = 8;
+const SEED: u64 = 7;
+
+fn quantized(cfg: &ModelConfig, seed: u64) -> Transformer {
+    let ck = Checkpoint::random(cfg, seed);
+    let mut rng = Rng::new(seed ^ 0x5eed);
+    let calib: Vec<Vec<u16>> = (0..4)
+        .map(|_| (0..48).map(|_| rng.below(cfg.vocab_size) as u16).collect())
+        .collect();
+    quantize_model(&ck, &BwaQuantizer::paper(), &calib, Some(4)).expect("quantize")
+}
+
+fn run<F>(make_backend: F) -> (String, BatcherStats, f64)
+where
+    F: FnOnce() -> Box<dyn Backend> + Send,
+{
+    serve_workload_stats(
+        make_backend,
+        REQUESTS,
+        CLIENTS,
+        PROMPT_LEN,
+        GEN,
+        BatcherConfig {
+            max_batch: MAX_BATCH,
+            max_wait: Duration::from_micros(2000),
+        },
+        SEED,
+    )
+}
+
+// Throughput comes from the batcher's own serving window
+// (`BatcherStats::tokens_per_s`, clocked from the first drain after the
+// backend is built) so quantization/setup time does not dilute the
+// numbers; `wall_s` keeps the total including setup for context.
+fn record(name: &str, stats: &BatcherStats, wall: f64) -> Json {
+    Json::obj(vec![
+        ("backend", Json::str(name)),
+        ("requests", Json::num(stats.requests as f64)),
+        ("gen_tokens", Json::num(stats.gen_tokens as f64)),
+        ("wall_s", Json::num(wall)),
+        ("req_per_s", Json::num(stats.throughput_rps)),
+        ("tok_per_s", Json::num(stats.tokens_per_s)),
+        ("mean_batch", Json::num(stats.mean_batch)),
+        ("p50_latency_us", Json::num(stats.latency.percentile(0.5))),
+        ("p99_latency_us", Json::num(stats.latency.percentile(0.99))),
+    ])
+}
+
+fn main() {
+    let cfg = ModelConfig::tiny();
+    let workers = bwa_llm::util::pool::default_threads();
+    println!(
+        "== serve bench (tiny = {} params, {REQUESTS} reqs x {GEN} gen tokens, \
+         max_batch {MAX_BATCH}, {workers} workers) ==",
+        cfg.param_count()
+    );
+
+    let cfg2 = cfg.clone();
+    let (seq_name, seq_stats, seq_wall) = run(move || {
+        Box::new(NativeBackend {
+            model: quantized(&cfg2, 11),
+            label: "bwa-seq".into(),
+        }) as Box<dyn Backend>
+    });
+    let seq_tok_s = seq_stats.tokens_per_s;
+    println!(
+        "{seq_name:<28} {:>7.2} req/s  {:>8.1} tok/s  (wall {seq_wall:.2}s incl. setup)",
+        seq_stats.throughput_rps,
+        seq_tok_s,
+    );
+
+    let cfg2 = cfg.clone();
+    let (par_name, par_stats, par_wall) = run(move || {
+        let model = quantized(&cfg2, 11);
+        Box::new(ParallelBackend::new(model, workers, "bwa")) as Box<dyn Backend>
+    });
+    let par_tok_s = par_stats.tokens_per_s;
+    println!(
+        "{par_name:<28} {:>7.2} req/s  {:>8.1} tok/s  (wall {par_wall:.2}s incl. setup)",
+        par_stats.throughput_rps,
+        par_tok_s,
+    );
+
+    let speedup = par_tok_s / seq_tok_s.max(1e-9);
+    println!("parallel-engine speedup over per-sequence loop: {speedup:.2}x");
+
+    let json = Json::obj(vec![
+        ("model", Json::str(cfg.name.as_str())),
+        ("params", Json::num(cfg.param_count() as f64)),
+        ("requests", Json::num(REQUESTS as f64)),
+        ("clients", Json::num(CLIENTS as f64)),
+        ("prompt_len", Json::num(PROMPT_LEN as f64)),
+        ("gen", Json::num(GEN as f64)),
+        ("max_batch", Json::num(MAX_BATCH as f64)),
+        ("workers", Json::num(workers as f64)),
+        ("seq", record("bwa-seq", &seq_stats, seq_wall)),
+        ("parallel", record("bwa-parallel", &par_stats, par_wall)),
+        ("speedup_tok_per_s", Json::num(speedup)),
+    ]);
+    std::fs::write("BENCH_serve.json", json.to_string_pretty()).expect("write BENCH_serve.json");
+    println!("wrote BENCH_serve.json");
+}

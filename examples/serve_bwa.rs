@@ -1,27 +1,46 @@
 //! End-to-end serving driver (DESIGN.md §5, last row): load the trained
 //! tiny model, stand up the dynamic-batching coordinator, and serve
-//! batched next-token requests on two backends:
+//! batched greedy-generation requests on three backends:
 //!
-//! 1. `pjrt` — the AOT path: JAX(L2)+Pallas(L1) were lowered to HLO text
-//!    at build time; the Rust(L3) PJRT runtime compiles and executes it.
-//! 2. `bwa`  — the Rust-native transformer quantized to W(1+1)A(1×4)
-//!    with the INT4 KV cache.
+//! 1. `pjrt`    — the AOT path: JAX(L2)+Pallas(L1) were lowered to HLO
+//!    text at build time; the Rust(L3) PJRT runtime compiles and
+//!    executes it.
+//! 2. `bwa-seq` — the W(1+1)A(1×4) transformer on the naive per-sequence
+//!    loop (a full re-prefill for every generated token).
+//! 3. `bwa`     — the same quantized model on the parallel batched
+//!    engine: prefill worker pool + lockstep KV-cached batched decode.
 //!
-//! Reports latency percentiles and throughput for both.
+//! Reports latency percentiles and request/token throughput for each, so
+//! the engine's speedup over the sequential loop is visible end to end.
 //!
 //! ```bash
 //! cargo run --release --example serve_bwa
 //! ```
 
 use bwa_llm::coordinator::batcher::{Backend, BatcherConfig};
-use bwa_llm::coordinator::{serve_workload, NativeBackend, PjrtBackend};
-use bwa_llm::data::corpus::CorpusSpec;
+use bwa_llm::coordinator::{
+    quantize_serving_model, serve_workload, NativeBackend, ParallelBackend, PjrtBackend,
+};
 use bwa_llm::model::checkpoint::Checkpoint;
 use bwa_llm::model::Transformer;
-use bwa_llm::quant::BwaQuantizer;
 use bwa_llm::runtime::TransformerSession;
 use std::path::Path;
 use std::time::Duration;
+
+const REQUESTS: usize = 64;
+const CLIENTS: usize = 4;
+const PROMPT_LEN: usize = 24;
+const GEN: usize = 4;
+
+fn quantized_model(ck: &Checkpoint) -> Transformer {
+    let model = quantize_serving_model(ck, 7);
+    eprintln!(
+        "quantized serving model: {:.2} mean weight bits, {} bytes",
+        model.mean_weight_bits(),
+        model.bytes()
+    );
+    model
+}
 
 fn main() {
     let ck_path = Path::new("artifacts/models/llama1-7b.bin");
@@ -46,9 +65,10 @@ fn main() {
                     .expect("load AOT artifact");
                 Box::new(PjrtBackend { session }) as Box<dyn Backend>
             },
-            64,
-            4,
-            24,
+            REQUESTS,
+            CLIENTS,
+            PROMPT_LEN,
+            1, // the fixed-seq artifact serves single next-token requests
             cfg,
             7,
         );
@@ -57,48 +77,49 @@ fn main() {
         eprintln!("skipping PJRT backend (no artifacts/transformer_fp.hlo.txt)");
     }
 
-    // --- backend 2: native W(1+1)A(1x4) ---------------------------------
+    // --- backend 2: W(1+1)A(1x4), naive per-sequence loop ---------------
     let report = serve_workload(
         move || {
-            let train = bwa_llm::data::corpus::train_split(&CorpusSpec::wiki(), 100_000);
-            let calib = bwa_llm::data::calibration_windows(&train, 16, 96, 7);
-            let model =
-                bwa_llm::model::quantize_model(&ck, &BwaQuantizer::paper(), &calib, Some(4))
-                    .expect("quantize");
-            eprintln!(
-                "quantized serving model: {:.2} mean weight bits, {} bytes",
-                model.mean_weight_bits(),
-                model.bytes()
-            );
             Box::new(NativeBackend {
-                model,
-                label: "native-bwa W(1+1)A(1x4)".into(),
+                model: quantized_model(&ck),
+                label: "native-bwa W(1+1)A(1x4) seq".into(),
             }) as Box<dyn Backend>
         },
-        64,
-        4,
-        24,
+        REQUESTS,
+        CLIENTS,
+        PROMPT_LEN,
+        GEN,
+        cfg,
+        7,
+    );
+    println!("{report}\n");
+
+    // --- backend 3: W(1+1)A(1x4), parallel batched engine ---------------
+    let workers = bwa_llm::util::pool::default_threads();
+    let ck3 = Checkpoint::load(ck_path).unwrap();
+    let report = serve_workload(
+        move || {
+            let model = quantized_model(&ck3);
+            let engine = ParallelBackend::new(model, workers, "native-bwa W(1+1)A(1x4)");
+            Box::new(engine) as Box<dyn Backend>
+        },
+        REQUESTS,
+        CLIENTS,
+        PROMPT_LEN,
+        GEN,
         cfg,
         7,
     );
     println!("{report}");
 
-    // --- greedy decode demo over the quantized model --------------------
-    let ck = Checkpoint::load(ck_path).unwrap();
-    let fp = Transformer::fp_from_checkpoint(&ck).unwrap();
+    // --- greedy decode demo over the quantized engine path ---------------
+    let ck4 = Checkpoint::load(ck_path).unwrap();
+    let fp = Transformer::fp_from_checkpoint(&ck4).unwrap();
     let tok = bwa_llm::data::tokenizer::Tokenizer::new();
     let prompt = tok.encode("? ent3 rel7");
-    let mut sess = fp.new_session();
-    let mut seq = prompt.clone();
-    for &t in &prompt {
-        let logits = fp.decode_step(&mut sess, t);
-        let _ = logits;
-    }
-    let mut sess = fp.new_session();
-    let mut last = Vec::new();
-    for &t in &seq {
-        last = fp.decode_step(&mut sess, t);
-    }
+    let mut sess = fp.new_session_with_capacity(prompt.len() + 4);
+    let mut last = fp.prefill(&mut sess, &prompt);
+    let mut seq = prompt;
     for _ in 0..4 {
         let next = bwa_llm::util::argmax(&last) as u16;
         seq.push(next);

@@ -10,17 +10,47 @@ use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
 use std::time::{Duration, Instant};
 
 /// Model execution backend (PJRT session, native FP, native BWA, or a
-/// test mock) — returns last-position logits per sequence. Not `Send`:
-/// PJRT handles are thread-local, so the backend is constructed *on* the
-/// batcher thread (see `serve_workload`).
+/// test mock). Not `Send`: PJRT handles are thread-local, so the backend
+/// is constructed *on* the batcher thread (see `serve_workload`).
 pub trait Backend {
     fn name(&self) -> String;
+
+    /// Last-position logits per sequence.
     fn last_logits_batch(&self, seqs: &[&[u16]]) -> Vec<Vec<f32>>;
+
+    /// Greedily generate `gens[i]` tokens for sequence `i`.
+    ///
+    /// The default is the naive loop this serving stack started with:
+    /// every generated token re-runs a **full prefill** over the grown
+    /// sequence — `gens[i]` complete forwards per request, no KV reuse.
+    /// It is kept as the correctness reference and the baseline the serve
+    /// bench measures engines against;
+    /// [`crate::coordinator::ParallelBackend`] overrides it with one
+    /// prefill plus KV-cached batched decode.
+    fn generate_batch(&self, seqs: &[&[u16]], gens: &[usize]) -> Vec<Vec<u16>> {
+        assert_eq!(seqs.len(), gens.len());
+        seqs.iter()
+            .zip(gens)
+            .map(|(s, &g)| {
+                let mut seq = s.to_vec();
+                let mut out = Vec::with_capacity(g);
+                for _ in 0..g {
+                    let logits = self.last_logits_batch(&[&seq]);
+                    let next = crate::util::argmax(&logits[0]) as u16;
+                    out.push(next);
+                    seq.push(next);
+                }
+                out
+            })
+            .collect()
+    }
 }
 
 pub struct Request {
     pub id: u64,
     pub tokens: Vec<u16>,
+    /// Tokens to generate greedily (1 = classic next-token serving).
+    pub gen: usize,
     pub submitted: Instant,
     pub resp_tx: Sender<Response>,
 }
@@ -28,8 +58,12 @@ pub struct Request {
 #[derive(Clone, Debug)]
 pub struct Response {
     pub id: u64,
-    /// Greedy next token from the last-position logits.
+    /// First generated token (greedy argmax of the last-position
+    /// logits). For the degenerate `gen == 0` request this is 0 and
+    /// meaningless — check `generated.is_empty()` before trusting it.
     pub next_token: u16,
+    /// The full greedy continuation (`gen` tokens).
+    pub generated: Vec<u16>,
     pub latency: Duration,
     pub batch_size: usize,
 }
@@ -58,6 +92,9 @@ pub struct BatcherStats {
     pub batches: usize,
     pub mean_batch: f64,
     pub throughput_rps: f64,
+    /// Total tokens generated across all requests.
+    pub gen_tokens: usize,
+    pub tokens_per_s: f64,
 }
 
 /// Run the batching loop until the channel closes. Blocking call — spawn
@@ -98,16 +135,19 @@ pub fn run_batcher(
             queue_wait.record(t_exec - r.submitted);
         }
         let seqs: Vec<&[u16]> = batch.iter().map(|r| r.tokens.as_slice()).collect();
-        let logits = backend.last_logits_batch(&seqs);
-        debug_assert_eq!(logits.len(), batch.len());
+        let gens: Vec<usize> = batch.iter().map(|r| r.gen).collect();
+        let generated = backend.generate_batch(&seqs, &gens);
+        debug_assert_eq!(generated.len(), batch.len());
         let bs = batch.len();
-        for (r, lg) in batch.into_iter().zip(logits.into_iter()) {
-            let next = crate::util::argmax(&lg) as u16;
+        for (r, gen_tokens) in batch.into_iter().zip(generated.into_iter()) {
+            let next = gen_tokens.first().copied().unwrap_or(0);
             let lat = r.submitted.elapsed();
             latency.record(lat);
+            throughput.add_tokens(gen_tokens.len());
             let _ = r.resp_tx.send(Response {
                 id: r.id,
                 next_token: next,
+                generated: gen_tokens,
                 latency: lat,
                 batch_size: bs,
             });
@@ -124,6 +164,8 @@ pub fn run_batcher(
         batches,
         mean_batch: total as f64 / batches.max(1) as f64,
         throughput_rps: throughput.per_second(),
+        gen_tokens: throughput.tokens(),
+        tokens_per_s: throughput.tokens_per_second(),
     }
 }
 
@@ -171,6 +213,7 @@ mod tests {
             tx.send(Request {
                 id,
                 tokens: vec![id as u16, 3],
+                gen: 1,
                 submitted: Instant::now(),
                 resp_tx: rtx.clone(),
             })
@@ -201,6 +244,7 @@ mod tests {
             tx.send(Request {
                 id,
                 tokens: vec![1],
+                gen: 1,
                 submitted: Instant::now(),
                 resp_tx: rtx.clone(),
             })
@@ -233,6 +277,7 @@ mod tests {
             tx.send(Request {
                 id,
                 tokens: vec![1],
+                gen: 1,
                 submitted: Instant::now(),
                 resp_tx: rtx.clone(),
             })

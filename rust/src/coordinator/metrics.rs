@@ -51,10 +51,13 @@ impl Histogram {
     }
 }
 
-/// Requests-per-second meter.
+/// Requests- and tokens-per-second meter. Requests count completed
+/// sequences; tokens count generated tokens (`gen` per request), the unit
+/// that makes multi-token decode workloads comparable across batchers.
 pub struct Throughput {
     start: Instant,
     count: usize,
+    tokens: usize,
 }
 
 impl Default for Throughput {
@@ -68,6 +71,7 @@ impl Throughput {
         Self {
             start: Instant::now(),
             count: 0,
+            tokens: 0,
         }
     }
 
@@ -75,12 +79,24 @@ impl Throughput {
         self.count += n;
     }
 
+    pub fn add_tokens(&mut self, n: usize) {
+        self.tokens += n;
+    }
+
     pub fn per_second(&self) -> f64 {
         self.count as f64 / self.start.elapsed().as_secs_f64().max(1e-9)
     }
 
+    pub fn tokens_per_second(&self) -> f64 {
+        self.tokens as f64 / self.start.elapsed().as_secs_f64().max(1e-9)
+    }
+
     pub fn count(&self) -> usize {
         self.count
+    }
+
+    pub fn tokens(&self) -> usize {
+        self.tokens
     }
 }
 
@@ -112,7 +128,10 @@ mod tests {
         let mut t = Throughput::new();
         t.add(5);
         t.add(3);
+        t.add_tokens(16);
         assert_eq!(t.count(), 8);
+        assert_eq!(t.tokens(), 16);
         assert!(t.per_second() > 0.0);
+        assert!(t.tokens_per_second() > 0.0);
     }
 }

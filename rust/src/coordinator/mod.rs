@@ -1,24 +1,32 @@
 //! Serving coordinator: request router + dynamic batcher + backends.
 //!
 //! `bwa serve` drives a closed-loop synthetic workload (prompts sampled
-//! from the wiki-analog corpus) against one of three backends:
-//! - `pjrt`   — the AOT-compiled JAX transformer via the PJRT runtime
-//!              (the three-layer path: Pallas/JAX build time → HLO → Rust);
-//! - `native` — the Rust FP transformer;
-//! - `bwa`    — the Rust transformer quantized to W(1+1)A(1×4).
+//! from the wiki-analog corpus, each requesting a greedy continuation of
+//! `--gen` tokens) against one of four backends:
+//! - `pjrt`    — the AOT-compiled JAX transformer via the PJRT runtime
+//!               (the three-layer path: Pallas/JAX build time → HLO → Rust);
+//! - `native`  — the Rust FP transformer, per-sequence loop;
+//! - `bwa`     — the W(1+1)A(1×4) transformer on the **parallel batched
+//!               engine** ([`ParallelBackend`]: prefill worker pool +
+//!               lockstep KV-cached batched decode);
+//! - `bwa-seq` — the same quantized model on the naive per-sequence loop
+//!               (full re-prefill per generated token) — the baseline the
+//!               serve bench compares the engine against.
 //!
-//! Reports latency percentiles, throughput, and batch statistics — the
-//! end-to-end serving validation required by DESIGN.md §5 (last row).
+//! Reports latency percentiles, request and token throughput, and batch
+//! statistics; see `docs/SERVING.md` for how to read the report.
 
 pub mod batcher;
+pub mod engine;
 pub mod metrics;
 
-use crate::coordinator::batcher::{run_batcher, Backend, BatcherConfig, Request};
+use crate::coordinator::batcher::{run_batcher, Backend, BatcherConfig, BatcherStats, Request};
 use crate::data::corpus::CorpusSpec;
 use crate::model::checkpoint::Checkpoint;
 use crate::model::Transformer;
 use crate::util::cli::{Args, Spec};
 use crate::util::rng::Rng;
+pub use engine::ParallelBackend;
 use std::path::Path;
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
@@ -67,12 +75,14 @@ static SERVE_SPEC: Spec = Spec {
     flags: &[
         ("model", "artifacts/models/llama1-7b.bin", "checkpoint path"),
         ("artifacts", "artifacts", "AOT artifacts directory"),
-        ("backend", "pjrt", "pjrt | native | bwa"),
+        ("backend", "pjrt", "pjrt | native | bwa | bwa-seq"),
         ("requests", "64", "total requests"),
         ("clients", "4", "concurrent client threads"),
         ("prompt-len", "24", "prompt tokens per request"),
+        ("gen", "4", "tokens to generate per request"),
         ("batch", "8", "max dynamic batch size"),
         ("wait-us", "2000", "max batching wait (us)"),
+        ("workers", "0", "engine worker threads (0 = all cores)"),
         ("seed", "7", "workload seed"),
     ],
     switches: &[],
@@ -89,9 +99,20 @@ pub fn cmd_serve(args: &Args) -> Result<(), String> {
     let n_requests = args.usize_or("requests", 64).map_err(|e| e.to_string())?;
     let clients = args.usize_or("clients", 4).map_err(|e| e.to_string())?;
     let prompt_len = args.usize_or("prompt-len", 24).map_err(|e| e.to_string())?;
+    let mut gen = args.usize_or("gen", 4).map_err(|e| e.to_string())?;
+    // The PJRT artifact has a fixed sequence length; growing the prompt
+    // by generated tokens would overrun it mid-serve.
+    if backend_kind == "pjrt" && gen > 1 {
+        eprintln!("pjrt artifact serves single next-token requests; clamping --gen {gen} to 1");
+        gen = 1;
+    }
     let cfg = BatcherConfig {
         max_batch: args.usize_or("batch", 8).map_err(|e| e.to_string())?,
         max_wait: Duration::from_micros(args.u64_or("wait-us", 2000).map_err(|e| e.to_string())?),
+    };
+    let workers = match args.usize_or("workers", 0).map_err(|e| e.to_string())? {
+        0 => crate::util::pool::default_threads(),
+        n => n,
     };
     let seed = args.u64_or("seed", 7).map_err(|e| e.to_string())?;
 
@@ -102,6 +123,7 @@ pub fn cmd_serve(args: &Args) -> Result<(), String> {
     // PJRT handles are not Send, so the backend is constructed inside the
     // batcher thread via this factory.
     let make_backend = move || -> Box<dyn Backend> {
+        let quantized = |seed: u64| quantize_serving_model(&ck, seed);
         match backend_kind.as_str() {
             "pjrt" => {
                 let session = crate::runtime::TransformerSession::load(
@@ -115,37 +137,119 @@ pub fn cmd_serve(args: &Args) -> Result<(), String> {
                 model: Transformer::fp_from_checkpoint(&ck).expect("checkpoint"),
                 label: "native-fp".into(),
             }),
-            "bwa" => {
-                let train = crate::data::corpus::train_split(&CorpusSpec::wiki(), 100_000);
-                let calib = crate::data::calibration_windows(&train, 16, 96, seed);
-                let q = crate::quant::BwaQuantizer::paper();
-                let model = crate::model::quantize_model(&ck, &q, &calib, Some(4))
-                    .expect("quantize");
-                Box::new(NativeBackend {
-                    model,
-                    label: "native-bwa W(1+1)A(1x4)".into(),
-                })
-            }
+            "bwa" => Box::new(ParallelBackend::new(
+                quantized(seed),
+                workers,
+                "native-bwa W(1+1)A(1x4)",
+            )),
+            "bwa-seq" => Box::new(NativeBackend {
+                model: quantized(seed),
+                label: "native-bwa W(1+1)A(1x4) seq".into(),
+            }),
             other => panic!("unknown backend '{other}'"),
         }
     };
 
-    let report = serve_workload(make_backend, n_requests, clients, prompt_len, cfg, seed);
+    let report = serve_workload(make_backend, n_requests, clients, prompt_len, gen, cfg, seed);
     println!("{report}");
     Ok(())
 }
 
+/// Quantize a checkpoint for serving with the paper's recipe (wiki
+/// calibration windows, W(1+1)A(1×4), INT4 KV cache) — shared by
+/// `bwa serve` and the serving example so both run the same model.
+pub fn quantize_serving_model(ck: &Checkpoint, seed: u64) -> Transformer {
+    let train = crate::data::corpus::train_split(&CorpusSpec::wiki(), 100_000);
+    let calib = crate::data::calibration_windows(&train, 16, 96, seed);
+    let q = crate::quant::BwaQuantizer::paper();
+    crate::model::quantize_model(ck, &q, &calib, Some(4)).expect("quantize")
+}
+
 /// Closed-loop workload: `clients` threads each submit requests
-/// back-to-back until `n_requests` total are served. The backend is
-/// constructed on the batcher thread (PJRT handles are thread-local).
+/// back-to-back (each asking for a greedy continuation of `gen` tokens)
+/// until `n_requests` total are served. The backend is constructed on
+/// the batcher thread (PJRT handles are thread-local). Returns the
+/// formatted serve report; [`serve_workload_stats`] exposes the raw
+/// numbers for benches.
+///
+/// ```
+/// use bwa_llm::coordinator::batcher::{Backend, BatcherConfig};
+/// use bwa_llm::coordinator::{serve_workload, NativeBackend};
+/// use bwa_llm::model::{config::ModelConfig, Transformer};
+///
+/// let cfg = ModelConfig {
+///     name: "doc".into(),
+///     vocab_size: 512,
+///     d_model: 32,
+///     n_layers: 1,
+///     n_heads: 2,
+///     d_ff: 48,
+///     max_seq: 32,
+///     rope_theta: 10000.0,
+///     rmsnorm_eps: 1e-5,
+/// };
+/// let report = serve_workload(
+///     || {
+///         Box::new(NativeBackend {
+///             model: Transformer::random(&cfg, 1),
+///             label: "doc".into(),
+///         }) as Box<dyn Backend>
+///     },
+///     4,                        // requests
+///     2,                        // clients
+///     8,                        // prompt tokens
+///     1,                        // generated tokens per request
+///     BatcherConfig::default(),
+///     1,                        // seed
+/// );
+/// assert!(report.contains("requests:    4"), "{report}");
+/// ```
 pub fn serve_workload<F>(
     make_backend: F,
     n_requests: usize,
     clients: usize,
     prompt_len: usize,
+    gen: usize,
     cfg: BatcherConfig,
     seed: u64,
 ) -> String
+where
+    F: FnOnce() -> Box<dyn Backend> + Send,
+{
+    let (name, stats, wall) =
+        serve_workload_stats(make_backend, n_requests, clients, prompt_len, gen, cfg, seed);
+    format!(
+        "== serve report ({}) ==\n\
+         requests:    {}\n\
+         clients:     {clients}\n\
+         gen/request: {gen}\n\
+         wall time:   {wall:.2}s\n\
+         throughput:  {:.1} req/s | {:.1} gen tok/s\n\
+         mean batch:  {:.2} (over {} batches)\n\
+         {}\n\
+         {}",
+        name,
+        stats.requests,
+        stats.requests as f64 / wall,
+        stats.gen_tokens as f64 / wall,
+        stats.mean_batch,
+        stats.batches,
+        stats.latency.report("latency"),
+        stats.queue_wait.report("queue wait"),
+    )
+}
+
+/// [`serve_workload`] returning the raw `(backend name, stats, wall
+/// seconds)` — what the serve bench records into `BENCH_serve.json`.
+pub fn serve_workload_stats<F>(
+    make_backend: F,
+    n_requests: usize,
+    clients: usize,
+    prompt_len: usize,
+    gen: usize,
+    cfg: BatcherConfig,
+    seed: u64,
+) -> (String, BatcherStats, f64)
 where
     F: FnOnce() -> Box<dyn Backend> + Send,
 {
@@ -179,6 +283,7 @@ where
                     tx.send(Request {
                         id: (id_base + i) as u64,
                         tokens,
+                        gen,
                         submitted: Instant::now(),
                         resp_tx: rtx.clone(),
                     })
@@ -192,25 +297,7 @@ where
         batcher.join().expect("batcher thread")
     });
 
-    let wall = t0.elapsed().as_secs_f64();
-    format!
-    (
-        "== serve report ({}) ==\n\
-         requests:    {}\n\
-         clients:     {clients}\n\
-         wall time:   {wall:.2}s\n\
-         throughput:  {:.1} req/s\n\
-         mean batch:  {:.2} (over {} batches)\n\
-         {}\n\
-         {}",
-        name,
-        stats.requests,
-        stats.requests as f64 / wall,
-        stats.mean_batch,
-        stats.batches,
-        stats.latency.report("latency"),
-        stats.queue_wait.report("queue wait"),
-    )
+    (name, stats, t0.elapsed().as_secs_f64())
 }
 
 #[cfg(test)]
@@ -241,6 +328,7 @@ mod tests {
             16,
             2,
             8,
+            1,
             BatcherConfig {
                 max_batch: 4,
                 max_wait: Duration::from_micros(500),
@@ -276,6 +364,7 @@ mod tests {
             17,
             4,
             8,
+            1,
             BatcherConfig {
                 max_batch: 4,
                 max_wait: Duration::from_micros(500),

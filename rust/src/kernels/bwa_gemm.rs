@@ -76,6 +76,27 @@ pub fn act_sig(lin: &BwaLinear) -> u64 {
 }
 
 /// Owning, precompiled state for the binary GEMM of one layer.
+///
+/// Pack-and-gemm in isolation (the model runs the same steps through
+/// [`crate::quant::LinearExec`]):
+///
+/// ```
+/// use bwa_llm::kernels::bwa_gemm::BwaGemm;
+/// use bwa_llm::quant::binarize::{quantize_bwa, BwaConfig};
+/// use bwa_llm::tensor::Tensor;
+/// use bwa_llm::util::rng::Rng;
+///
+/// let mut rng = Rng::new(1);
+/// let w = Tensor::from_vec(&[16, 128], rng.normal_vec_f32(16 * 128, 0.0, 0.1));
+/// let calib = Tensor::from_vec(&[32, 128], rng.normal_vec_f32(32 * 128, 0.0, 1.0));
+/// let lin = quantize_bwa(&w, &calib, &BwaConfig::paper());
+///
+/// let gemm = BwaGemm::prepare(&lin); // fold affines, drop dense weights
+/// let x = Tensor::from_vec(&[4, 128], rng.normal_vec_f32(4 * 128, 0.0, 1.0));
+/// let acts = gemm.prepare_acts(&x); // quantize + bit-pack once
+/// let y = gemm.gemm_packed(&acts); // popcount GEMM over the batch
+/// assert_eq!(y.dims2(), (4, 16));
+/// ```
 pub struct BwaGemm {
     /// The quantized layer with `w_hat` dropped — bits, affine params,
     /// permutation, and the outlier block only.
@@ -227,36 +248,73 @@ impl BwaGemm {
             (acts.tokens, self.lin.out_features),
             "output buffer shape mismatch"
         );
+        self.gemm_packed_span(acts, 0, acts.tokens, &mut y.data);
+    }
+
+    /// Multi-threaded batched GEMM: the `[tokens, out]` output is split
+    /// into contiguous token spans, one scoped thread per span, each
+    /// running the same single-threaded kernel over its rows. Token rows
+    /// are independent, so the result is bit-identical to
+    /// [`Self::gemm_packed_into`] (asserted by tests) — this is the
+    /// serving engine's batched-decode path, where one [`PackedActs`]
+    /// holds a whole batch of single-token rows packed together and the
+    /// per-span weight traversal is amortized across the batch.
+    pub fn gemm_packed_into_mt(&self, acts: &PackedActs, y: &mut Tensor, threads: usize) {
+        assert_eq!(
+            y.dims2(),
+            (acts.tokens, self.lin.out_features),
+            "output buffer shape mismatch"
+        );
+        let threads = threads.clamp(1, acts.tokens.max(1));
+        if threads == 1 {
+            self.gemm_packed_span(acts, 0, acts.tokens, &mut y.data);
+            return;
+        }
+        let out_f = self.lin.out_features;
+        let rows_per = acts.tokens.div_ceil(threads);
+        std::thread::scope(|s| {
+            for (ci, chunk) in y.data.chunks_mut(rows_per * out_f).enumerate() {
+                let t_lo = ci * rows_per;
+                let t_hi = (t_lo + rows_per).min(acts.tokens);
+                s.spawn(move || self.gemm_packed_span(acts, t_lo, t_hi, chunk));
+            }
+        });
+    }
+
+    /// Dispatch one token span `[t_lo, t_hi)` to the best kernel; `out`
+    /// holds the span's rows, `out[(t - t_lo) * out_features + j]`.
+    fn gemm_packed_span(&self, acts: &PackedActs, t_lo: usize, t_hi: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), (t_hi - t_lo) * self.lin.out_features);
         #[cfg(target_arch = "x86_64")]
         {
             if std::is_x86_feature_detected!("avx2") {
                 // SAFETY: feature checked at runtime.
-                unsafe { self.gemm_packed_avx2(acts, y) };
+                unsafe { self.gemm_packed_avx2(acts, t_lo, t_hi, out) };
                 return;
             }
         }
-        self.gemm_packed_scalar(acts, y)
+        self.gemm_packed_scalar(acts, t_lo, t_hi, out)
     }
 
-    /// Scalar hot loop: output rows outer / tokens inner so each packed
-    /// weight row is loaded once per batch; the 4 plane words of a channel
-    /// word are contiguous (`PackedActs::planes` layout); popcounts
-    /// accumulate in u32 and the per-plane scales fold once per group.
-    pub fn gemm_packed_scalar(&self, acts: &PackedActs, y: &mut Tensor) {
+    /// Scalar hot loop over one token span: output rows outer / tokens
+    /// inner so each packed weight row is loaded once per batch; the 4
+    /// plane words of a channel word are contiguous (`PackedActs::planes`
+    /// layout); popcounts accumulate in u32 and the per-plane scales fold
+    /// once per group.
+    fn gemm_packed_scalar(&self, acts: &PackedActs, t_lo: usize, t_hi: usize, out: &mut [f32]) {
         let lin = &self.lin;
         let ng = lin.n_groups();
         let wpg = lin.group_size / 64;
         let nplanes = acts.nplanes;
         debug_assert_eq!(nplanes, 4, "kernel specialized for A(1x4)");
         let wpp = acts.words_per_plane;
-        debug_assert_eq!(y.dims2(), (acts.tokens, lin.out_features));
 
         for j in 0..lin.out_features {
             let qrow = lin.qbits.row(j);
             let mrow = lin.mbits.row(j);
             let coefs = &self.coef[j * ng..(j + 1) * ng];
             let wsum_j = self.wsum[j];
-            for t in 0..acts.tokens {
+            for t in t_lo..t_hi {
                 let tok_planes = &acts.planes[t * wpp * 4..(t + 1) * wpp * 4];
                 let tok_mu = &acts.mu[t * 4..t * 4 + 4];
                 let mut acc = acts.shift[t] * wsum_j;
@@ -315,25 +373,30 @@ impl BwaGemm {
                     }
                     acc += p.scale * acts.x_out_scale[t] * oacc as f32;
                 }
-                y.data[t * lin.out_features + j] = acc;
+                out[(t - t_lo) * lin.out_features + j] = acc;
             }
         }
     }
 
-    /// AVX2 hot loop: one 256-bit load covers the 4 plane words of a
-    /// channel word; q/m broadcast; the three popcounts (e, e∧m, b∧m) run
-    /// as pshufb nibble-LUT + SAD, keeping per-plane counts in 64-bit
-    /// lanes. (§Perf iteration 2.)
+    /// AVX2 hot loop over one token span: one 256-bit load covers the 4
+    /// plane words of a channel word; q/m broadcast; the three popcounts
+    /// (e, e∧m, b∧m) run as pshufb nibble-LUT + SAD, keeping per-plane
+    /// counts in 64-bit lanes. (§Perf iteration 2.)
     #[cfg(target_arch = "x86_64")]
     #[target_feature(enable = "avx2")]
-    unsafe fn gemm_packed_avx2(&self, acts: &PackedActs, y: &mut Tensor) {
+    unsafe fn gemm_packed_avx2(
+        &self,
+        acts: &PackedActs,
+        t_lo: usize,
+        t_hi: usize,
+        out: &mut [f32],
+    ) {
         use std::arch::x86_64::*;
         let lin = &self.lin;
         let ng = lin.n_groups();
         let wpg = lin.group_size / 64;
         debug_assert_eq!(acts.nplanes, 4, "kernel specialized for A(1x4)");
         let wpp = acts.words_per_plane;
-        debug_assert_eq!(y.dims2(), (acts.tokens, lin.out_features));
 
         let lut = _mm256_setr_epi8(
             0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
@@ -363,7 +426,7 @@ impl BwaGemm {
             let mrow = lin.mbits.row(j);
             let coefs = &self.coef[j * ng..(j + 1) * ng];
             let wsum_j = self.wsum[j];
-            for t in 0..acts.tokens {
+            for t in t_lo..t_hi {
                 let tok_planes = &acts.planes[t * wpp * 4..(t + 1) * wpp * 4];
                 let tok_mu = &acts.mu[t * 4..t * 4 + 4];
                 // duplicated plane scales [mu0 mu0 mu1 mu1 mu2 mu2 mu3 mu3]
@@ -423,7 +486,7 @@ impl BwaGemm {
                     }
                     acc += p.scale * acts.x_out_scale[t] * oacc as f32;
                 }
-                y.data[t * lin.out_features + j] = acc;
+                out[(t - t_lo) * lin.out_features + j] = acc;
             }
         }
     }
@@ -550,6 +613,23 @@ mod tests {
         let mut into = Tensor::from_vec(&[4, 16], vec![7.0; 64]); // stale data
         gemm.gemm_packed_into(&acts, &mut into);
         assert_eq!(alloc.data, into.data);
+    }
+
+    #[test]
+    fn gemm_mt_matches_single_thread() {
+        let mut rng = Rng::new(8);
+        let (lin, _) = setup(&mut rng, 16, 128);
+        let gemm = BwaGemm::prepare(&lin);
+        let xt = Tensor::from_vec(&[9, 128], rng.normal_vec_f32(9 * 128, 0.0, 1.0));
+        let acts = gemm.prepare_acts(&xt);
+        let mut st = Tensor::zeros(&[9, 16]);
+        gemm.gemm_packed_into(&acts, &mut st);
+        // token rows are independent: any split is bit-identical
+        for threads in [2, 3, 16] {
+            let mut mt = Tensor::zeros(&[9, 16]);
+            gemm.gemm_packed_into_mt(&acts, &mut mt, threads);
+            assert_eq!(st.data, mt.data, "threads={threads}");
+        }
     }
 
     #[test]

@@ -33,6 +33,17 @@
 //! `Transformer::forward_reference` for parity tests and the
 //! fake-vs-packed model bench.
 //!
+//! ## Serving
+//!
+//! [`coordinator`] stacks a dynamic batcher and a parallel batched
+//! execution engine ([`coordinator::ParallelBackend`]) on top of the
+//! model: requests are prefilled across a worker pool
+//! ([`model::Transformer::prefill_with`], filling the INT4 KV cache) and
+//! then decoded in lockstep ([`model::Transformer::decode_step_batch`],
+//! one shared activation pack + M = batch popcount GEMMs per
+//! projection). See `docs/ARCHITECTURE.md` for the layer diagram and
+//! the paper-equation → code map, and `docs/SERVING.md` for `bwa serve`.
+//!
 //! Layers (see DESIGN.md):
 //! - L1: Pallas kernel (python, build time) — `python/compile/kernels/`
 //! - L2: JAX model (python, build time) — `python/compile/model.py`

@@ -138,8 +138,8 @@ impl Mat {
         self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
     }
 
-    /// Symmetric permutation: out = P A Pᵀ where P maps new index i to old
-    /// index perm[i].
+    /// Symmetric permutation: out = P A Pᵀ where P maps new index `i` to
+    /// old index `perm[i]`.
     pub fn permute_sym(&self, perm: &[usize]) -> Mat {
         assert_eq!(self.rows, self.cols);
         assert_eq!(perm.len(), self.rows);

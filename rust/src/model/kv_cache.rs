@@ -21,12 +21,19 @@ pub struct Kv4Store {
 
 impl Kv4Store {
     pub fn new(d: usize) -> Self {
+        Self::with_capacity(d, 0)
+    }
+
+    /// Store with room for `rows` vectors reserved up front (serving
+    /// knows `prompt + gen` per request, so the cache never reallocates
+    /// mid-request).
+    pub fn with_capacity(d: usize, rows: usize) -> Self {
         assert!(d % 2 == 0, "d must be even for nibble packing");
         Self {
             d,
             len: 0,
-            data: Vec::new(),
-            params: Vec::new(),
+            data: Vec::with_capacity(rows * d / 2),
+            params: Vec::with_capacity(rows),
         }
     }
 
@@ -108,6 +115,15 @@ impl LayerKvCache {
         Self {
             k: Kv4Store::new(d),
             v: Kv4Store::new(d),
+        }
+    }
+
+    /// K and V stores with `rows` positions reserved (see
+    /// [`Kv4Store::with_capacity`]).
+    pub fn with_capacity(d: usize, rows: usize) -> Self {
+        Self {
+            k: Kv4Store::with_capacity(d, rows),
+            v: Kv4Store::with_capacity(d, rows),
         }
     }
 

@@ -17,6 +17,15 @@
 //! stay FP (standard PTQ practice, also what the baselines in the paper
 //! do). [`Transformer::forward_reference`] keeps the old dense
 //! fake-quant route for parity tests and benches.
+//!
+//! Serving splits a request into [`Transformer::prefill`] (one batch
+//! forward that fills the session's INT4 KV caches) followed by
+//! [`Transformer::decode_step`] or — for many sequences in lockstep —
+//! [`Transformer::decode_step_batch`], which packs the whole batch's
+//! activations once per shared input and runs M = batch popcount GEMMs.
+//! All three agree with each other to the bit (parity tests below);
+//! the coordinator's engine ([`crate::coordinator::ParallelBackend`])
+//! drives them across a worker pool.
 
 pub mod checkpoint;
 pub mod config;
@@ -45,22 +54,27 @@ pub fn rmsnorm(x: &[f32], gain: &[f32], eps: f64, out: &mut [f32]) {
 /// Rotary position embedding applied in place to one [T, d] tensor with
 /// `n_heads` heads (pairs rotated within each head).
 pub fn apply_rope(x: &mut Tensor, n_heads: usize, theta: f64, pos_offset: usize) {
-    let (t_len, d) = x.dims2();
-    let hd = d / n_heads;
+    let (t_len, _) = x.dims2();
     for t in 0..t_len {
-        let pos = (t + pos_offset) as f64;
-        let row = x.row_mut(t);
-        for h in 0..n_heads {
-            let base = h * hd;
-            for i in 0..hd / 2 {
-                let freq = 1.0 / theta.powf(2.0 * i as f64 / hd as f64);
-                let angle = pos * freq;
-                let (sin, cos) = (angle.sin() as f32, angle.cos() as f32);
-                let a = row[base + 2 * i];
-                let b = row[base + 2 * i + 1];
-                row[base + 2 * i] = a * cos - b * sin;
-                row[base + 2 * i + 1] = a * sin + b * cos;
-            }
+        apply_rope_row(x.row_mut(t), n_heads, theta, t + pos_offset);
+    }
+}
+
+/// RoPE for a single `[d]` row at absolute position `pos` — the batched
+/// decode path rotates each sequence's row at its own position.
+pub fn apply_rope_row(row: &mut [f32], n_heads: usize, theta: f64, pos: usize) {
+    let hd = row.len() / n_heads;
+    let pos = pos as f64;
+    for h in 0..n_heads {
+        let base = h * hd;
+        for i in 0..hd / 2 {
+            let freq = 1.0 / theta.powf(2.0 * i as f64 / hd as f64);
+            let angle = pos * freq;
+            let (sin, cos) = (angle.sin() as f32, angle.cos() as f32);
+            let a = row[base + 2 * i];
+            let b = row[base + 2 * i + 1];
+            row[base + 2 * i] = a * cos - b * sin;
+            row[base + 2 * i + 1] = a * sin + b * cos;
         }
     }
 }
@@ -195,6 +209,58 @@ pub fn causal_attention(q: &Tensor, k: &Tensor, v: &Tensor, n_heads: usize) -> T
         }
     }
     out
+}
+
+/// One query row attending over a layer's quantized KV cache — the inner
+/// loop of incremental decoding, shared by [`Transformer::decode_step`]
+/// and [`Transformer::decode_step_batch`] so the single-sequence and
+/// batched paths run bit-identical math. `scores`/`kbuf`/`vbuf` are
+/// caller-owned scratch, grown to the cache length as it fills; each
+/// cached row is INT4-dequantized **once** per step into `kbuf`/`vbuf`
+/// rather than once per head.
+fn attend_over_cache(
+    cache: &LayerKvCache,
+    q: &[f32],
+    out: &mut [f32],
+    n_heads: usize,
+    scores: &mut Vec<f32>,
+    kbuf: &mut Vec<f32>,
+    vbuf: &mut Vec<f32>,
+) {
+    let d = q.len();
+    let hd = d / n_heads;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let t_len = cache.len();
+    scores.resize(t_len, 0.0);
+    kbuf.resize(t_len * d, 0.0);
+    vbuf.resize(t_len * d, 0.0);
+    for t in 0..t_len {
+        cache.k.get(t, &mut kbuf[t * d..(t + 1) * d]);
+        cache.v.get(t, &mut vbuf[t * d..(t + 1) * d]);
+    }
+    for val in out.iter_mut() {
+        *val = 0.0;
+    }
+    for hh in 0..n_heads {
+        let base = hh * hd;
+        for t in 0..t_len {
+            let krow = &kbuf[t * d..(t + 1) * d];
+            let qh = &q[base..base + hd];
+            let mut s = 0.0f32;
+            for i in 0..hd {
+                s += qh[i] * krow[base + i];
+            }
+            scores[t] = s * scale;
+        }
+        softmax_inplace(scores);
+        for t in 0..t_len {
+            let vrow = &vbuf[t * d..(t + 1) * d];
+            let w = scores[t];
+            for i in 0..hd {
+                out[base + i] += w * vrow[base + i];
+            }
+        }
+    }
 }
 
 impl Transformer {
@@ -408,11 +474,18 @@ impl Transformer {
     /// Start an incremental decoding session (per-layer INT4 KV caches +
     /// preallocated per-step scratch buffers).
     pub fn new_session(&self) -> DecodeSession {
+        self.new_session_with_capacity(0)
+    }
+
+    /// [`Self::new_session`] with KV-cache storage reserved for `tokens`
+    /// positions up front — serving knows `prompt + gen` when a request
+    /// arrives, so the cache never reallocates mid-request.
+    pub fn new_session_with_capacity(&self, tokens: usize) -> DecodeSession {
         let d = self.cfg.d_model;
         let d_ff = self.cfg.d_ff;
         DecodeSession {
             caches: (0..self.cfg.n_layers)
-                .map(|_| LayerKvCache::new(d))
+                .map(|_| LayerKvCache::with_capacity(d, tokens))
                 .collect(),
             pos: 0,
             scratch: DecodeScratch {
@@ -433,7 +506,7 @@ impl Transformer {
         }
     }
 
-    /// Feed one token; returns logits [vocab] for the next position.
+    /// Feed one token; returns logits `[vocab]` for the next position.
     /// Uses the INT4 KV cache — the serving path — running the compiled
     /// execution plans into the session's preallocated scratch buffers
     /// (one activation preparation for wq/wk/wv, one for gate/up). For FP
@@ -443,9 +516,7 @@ impl Transformer {
     /// equivalence is covered by `kv_bits: Some(4)` tests).
     pub fn decode_step(&self, sess: &mut DecodeSession, token: u16) -> Vec<f32> {
         let d = self.cfg.d_model;
-        let hd = self.cfg.head_dim();
         let nh = self.cfg.n_heads;
-        let scale = 1.0 / (hd as f32).sqrt();
         let pos = sess.pos;
         let scratch = &mut sess.scratch;
         scratch.x.copy_from_slice(self.embed.row(token as usize));
@@ -468,33 +539,16 @@ impl Transformer {
             let cache = &mut sess.caches[l];
             cache.k.push(scratch.k.row(0));
             cache.v.push(scratch.v.row(0));
-            let t_len = cache.len();
             // per-head attention over the quantized cache
-            scratch.scores.resize(t_len, 0.0);
-            for val in scratch.attn_out.data.iter_mut() {
-                *val = 0.0;
-            }
-            for hh in 0..nh {
-                let base = hh * hd;
-                for t in 0..t_len {
-                    cache.k.get(t, &mut scratch.krow);
-                    let qh = &scratch.q.row(0)[base..base + hd];
-                    let mut s = 0.0f32;
-                    for i in 0..hd {
-                        s += qh[i] * scratch.krow[base + i];
-                    }
-                    scratch.scores[t] = s * scale;
-                }
-                softmax_inplace(&mut scratch.scores);
-                for t in 0..t_len {
-                    cache.v.get(t, &mut scratch.vrow);
-                    let w = scratch.scores[t];
-                    let orow = scratch.attn_out.row_mut(0);
-                    for i in 0..hd {
-                        orow[base + i] += w * scratch.vrow[base + i];
-                    }
-                }
-            }
+            attend_over_cache(
+                cache,
+                scratch.q.row(0),
+                scratch.attn_out.row_mut(0),
+                nh,
+                &mut scratch.scores,
+                &mut scratch.krow,
+                &mut scratch.vrow,
+            );
             blk.attn.wo.exec.forward_into(&scratch.attn_out, &mut scratch.o);
             for i in 0..d {
                 scratch.x[i] += scratch.o.data[i];
@@ -528,6 +582,213 @@ impl Transformer {
         let logits = crate::kernels::dense::sgemm_wt(&scratch.h, &self.lm_head);
         sess.pos += 1;
         logits.data
+    }
+
+    /// Batched prefill: run the full-sequence forward pass **and** fill
+    /// the session's per-layer KV caches, returning the last-position
+    /// logits `[vocab]`. This is the first phase of serving a request:
+    /// one batch forward (compiled popcount execs, shared activation
+    /// preparation) instead of `tokens.len()` incremental decode steps,
+    /// after which [`Self::decode_step`] / [`Self::decode_step_batch`]
+    /// continue from the cache without ever re-running the prompt.
+    ///
+    /// K/V rows are pushed into the INT4 cache and the in-flight K/V are
+    /// fake-quantized to the *same* values before attention, so
+    /// `prefill + decode_step` agrees with a pure `decode_step` loop
+    /// (asserted by tests). The session must be fresh (`pos == 0`).
+    pub fn prefill(&self, sess: &mut DecodeSession, tokens: &[u16]) -> Vec<f32> {
+        let mut scratch = PrefillScratch::default();
+        self.prefill_with(sess, tokens, &mut scratch)
+    }
+
+    /// [`Self::prefill`] with caller-owned scratch buffers — serving
+    /// workers keep one [`PrefillScratch`] each and reuse it across every
+    /// request they handle, so the linear-layer output and norm buffers
+    /// are not reallocated per request. (Attention output and packed
+    /// activations are still produced per layer — they are
+    /// size-dependent on the prompt and cheap next to the GEMMs.)
+    pub fn prefill_with(
+        &self,
+        sess: &mut DecodeSession,
+        tokens: &[u16],
+        scratch: &mut PrefillScratch,
+    ) -> Vec<f32> {
+        let t_len = tokens.len();
+        let d = self.cfg.d_model;
+        assert!(t_len <= self.cfg.max_seq, "sequence longer than max_seq");
+        assert!(t_len > 0, "prefill requires at least one token");
+        assert!(
+            sess.pos == 0 && sess.caches.iter().all(|c| c.is_empty()),
+            "prefill requires a fresh session"
+        );
+        scratch.ensure(t_len, d, self.cfg.d_ff);
+        let x = &mut scratch.x;
+        for (t, &tok) in tokens.iter().enumerate() {
+            x.row_mut(t).copy_from_slice(self.embed.row(tok as usize));
+        }
+        for (l, blk) in self.blocks.iter().enumerate() {
+            // attention — one prepared input feeds wq/wk/wv
+            self.norm_all_into(x, &blk.attn_norm, &mut scratch.h);
+            {
+                let acts = blk.attn.wq.exec.prepare(&scratch.h);
+                blk.attn.wq.exec.forward_prepared(&acts, &mut scratch.q);
+                blk.attn.wk.exec.forward_prepared(&acts, &mut scratch.k);
+                blk.attn.wv.exec.forward_prepared(&acts, &mut scratch.v);
+            }
+            apply_rope(&mut scratch.q, self.cfg.n_heads, self.cfg.rope_theta, 0);
+            apply_rope(&mut scratch.k, self.cfg.n_heads, self.cfg.rope_theta, 0);
+            // Push raw post-RoPE rows (the cache quantizes on push), then
+            // fake-quantize the in-flight copies to the identical values
+            // so prefill attention sees exactly what decode will read.
+            let cache = &mut sess.caches[l];
+            for t in 0..t_len {
+                cache.k.push(scratch.k.row(t));
+                cache.v.push(scratch.v.row(t));
+                Kv4Store::fake_quantize(scratch.k.row_mut(t));
+                Kv4Store::fake_quantize(scratch.v.row_mut(t));
+            }
+            let attn_out = causal_attention(&scratch.q, &scratch.k, &scratch.v, self.cfg.n_heads);
+            blk.attn.wo.exec.forward_into(&attn_out, &mut scratch.o);
+            for i in 0..x.data.len() {
+                x.data[i] += scratch.o.data[i];
+            }
+            // mlp — gate/up share one prepared input
+            self.norm_all_into(x, &blk.mlp_norm, &mut scratch.h);
+            {
+                let acts = blk.mlp.gate.exec.prepare(&scratch.h);
+                blk.mlp.gate.exec.forward_prepared(&acts, &mut scratch.g);
+                blk.mlp.up.exec.forward_prepared(&acts, &mut scratch.u);
+            }
+            for i in 0..scratch.g.data.len() {
+                scratch.g.data[i] = silu(scratch.g.data[i]) * scratch.u.data[i];
+            }
+            blk.mlp.down.exec.forward_into(&scratch.g, &mut scratch.dwn);
+            for i in 0..x.data.len() {
+                x.data[i] += scratch.dwn.data[i];
+            }
+        }
+        sess.pos = t_len;
+        // logits only for the last position
+        let mut hn = Tensor::zeros(&[1, d]);
+        rmsnorm(
+            x.row(t_len - 1),
+            &self.final_norm,
+            self.cfg.rmsnorm_eps,
+            hn.row_mut(0),
+        );
+        crate::kernels::dense::sgemm_wt(&hn, &self.lm_head).data
+    }
+
+    /// Feed one token to **each** of `sessions.len()` independent decode
+    /// sessions in lockstep and return the `[batch, vocab]` next-position
+    /// logits. Per layer the batch is normed into one `[batch, d]` tensor,
+    /// activations are quantized + bit-packed **once**, and every
+    /// projection runs a single M = batch popcount GEMM
+    /// ([`crate::kernels::bwa_gemm::BwaGemm::gemm_packed_into_mt`] when
+    /// `threads > 1` and the layer is big enough to amortize a
+    /// fork/join) — amortizing the weight-bit traversal across the
+    /// whole batch instead of streaming the packed weights once per
+    /// sequence. Attention stays per-sequence over each session's INT4
+    /// cache; sequences may sit at different positions (RoPE is applied
+    /// per row at each session's own `pos`).
+    ///
+    /// Row `r` is bit-identical to `self.decode_step(&mut sessions[r],
+    /// tokens[r])` — the rows of every GEMM, norm, and attention are
+    /// computed independently (asserted by parity tests).
+    pub fn decode_step_batch(
+        &self,
+        sessions: &mut [DecodeSession],
+        tokens: &[u16],
+        threads: usize,
+    ) -> Tensor {
+        let b = sessions.len();
+        assert_eq!(tokens.len(), b, "one token per session");
+        let d = self.cfg.d_model;
+        let d_ff = self.cfg.d_ff;
+        let nh = self.cfg.n_heads;
+        // Batch buffers are allocated per step: their size follows the
+        // shrinking active set, and at `[batch, d]` scale the allocation
+        // is noise next to the per-step GEMM/attention work (prefill,
+        // the dominant cost, does reuse per-worker scratch).
+        let mut x = Tensor::zeros(&[b, d]);
+        for (r, &tok) in tokens.iter().enumerate() {
+            x.row_mut(r).copy_from_slice(self.embed.row(tok as usize));
+        }
+        let mut h = Tensor::zeros(&[b, d]);
+        let mut q = Tensor::zeros(&[b, d]);
+        let mut k = Tensor::zeros(&[b, d]);
+        let mut v = Tensor::zeros(&[b, d]);
+        let mut attn_out = Tensor::zeros(&[b, d]);
+        let mut o = Tensor::zeros(&[b, d]);
+        let mut g = Tensor::zeros(&[b, d_ff]);
+        let mut u = Tensor::zeros(&[b, d_ff]);
+        let mut dwn = Tensor::zeros(&[b, d]);
+        let mut scores = Vec::new();
+        let mut krow = vec![0.0f32; d];
+        let mut vrow = vec![0.0f32; d];
+        for (l, blk) in self.blocks.iter().enumerate() {
+            for r in 0..b {
+                rmsnorm(x.row(r), &blk.attn_norm, self.cfg.rmsnorm_eps, h.row_mut(r));
+            }
+            {
+                let acts = blk.attn.wq.exec.prepare(&h);
+                blk.attn.wq.exec.forward_prepared_mt(&acts, &mut q, threads);
+                blk.attn.wk.exec.forward_prepared_mt(&acts, &mut k, threads);
+                blk.attn.wv.exec.forward_prepared_mt(&acts, &mut v, threads);
+            }
+            for r in 0..b {
+                let pos = sessions[r].pos;
+                apply_rope_row(q.row_mut(r), nh, self.cfg.rope_theta, pos);
+                apply_rope_row(k.row_mut(r), nh, self.cfg.rope_theta, pos);
+            }
+            for r in 0..b {
+                let cache = &mut sessions[r].caches[l];
+                cache.k.push(k.row(r));
+                cache.v.push(v.row(r));
+                attend_over_cache(
+                    cache,
+                    q.row(r),
+                    attn_out.row_mut(r),
+                    nh,
+                    &mut scores,
+                    &mut krow,
+                    &mut vrow,
+                );
+            }
+            {
+                let acts = blk.attn.wo.exec.prepare(&attn_out);
+                blk.attn.wo.exec.forward_prepared_mt(&acts, &mut o, threads);
+            }
+            for i in 0..x.data.len() {
+                x.data[i] += o.data[i];
+            }
+            for r in 0..b {
+                rmsnorm(x.row(r), &blk.mlp_norm, self.cfg.rmsnorm_eps, h.row_mut(r));
+            }
+            {
+                let acts = blk.mlp.gate.exec.prepare(&h);
+                blk.mlp.gate.exec.forward_prepared_mt(&acts, &mut g, threads);
+                blk.mlp.up.exec.forward_prepared_mt(&acts, &mut u, threads);
+            }
+            for i in 0..g.data.len() {
+                g.data[i] = silu(g.data[i]) * u.data[i];
+            }
+            {
+                let acts = blk.mlp.down.exec.prepare(&g);
+                blk.mlp.down.exec.forward_prepared_mt(&acts, &mut dwn, threads);
+            }
+            for i in 0..x.data.len() {
+                x.data[i] += dwn.data[i];
+            }
+        }
+        for r in 0..b {
+            rmsnorm(x.row(r), &self.final_norm, self.cfg.rmsnorm_eps, h.row_mut(r));
+        }
+        let logits = crate::kernels::dense::sgemm_wt(&h, &self.lm_head);
+        for s in sessions.iter_mut() {
+            s.pos += 1;
+        }
+        logits
     }
 
     /// Total weight storage bytes across quantized linears + FP parts.
@@ -572,7 +833,7 @@ impl Transformer {
 /// output, norm output, and attention temporary lives here so a decode
 /// step performs no per-layer allocation for the compiled-exec path.
 struct DecodeScratch {
-    /// residual stream [d]
+    /// residual stream `[d]`
     x: Vec<f32>,
     /// RMSNorm output [1, d] (also reused for the final norm)
     h: Tensor,
@@ -595,6 +856,43 @@ pub struct DecodeSession {
     pub caches: Vec<LayerKvCache>,
     pub pos: usize,
     scratch: DecodeScratch,
+}
+
+/// Per-worker scratch for [`Transformer::prefill_with`]: the linear
+/// output and norm buffers of one full-sequence forward. A serving
+/// worker owns one and reuses it across requests; these buffers are
+/// (re)allocated only when the sequence length changes, so a steady
+/// stream of same-length prompts reuses them across every request.
+#[derive(Default)]
+pub struct PrefillScratch {
+    x: Tensor,
+    h: Tensor,
+    q: Tensor,
+    k: Tensor,
+    v: Tensor,
+    o: Tensor,
+    g: Tensor,
+    u: Tensor,
+    dwn: Tensor,
+}
+
+impl PrefillScratch {
+    fn ensure(&mut self, t_len: usize, d: usize, d_ff: usize) {
+        fn want(t: &mut Tensor, rows: usize, cols: usize) {
+            if t.shape[..] != [rows, cols] {
+                *t = Tensor::zeros(&[rows, cols]);
+            }
+        }
+        want(&mut self.x, t_len, d);
+        want(&mut self.h, t_len, d);
+        want(&mut self.q, t_len, d);
+        want(&mut self.k, t_len, d);
+        want(&mut self.v, t_len, d);
+        want(&mut self.o, t_len, d);
+        want(&mut self.g, t_len, d_ff);
+        want(&mut self.u, t_len, d_ff);
+        want(&mut self.dwn, t_len, d);
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -973,6 +1271,67 @@ mod tests {
         ];
         let delta: Vec<u64> = after.iter().zip(&before).map(|(a, b)| a - b).collect();
         assert_eq!(delta, vec![1, 0, 0, 1, 1, 0, 1], "prepare-once contract");
+    }
+
+    /// The serving-engine prefill contract: one batch forward that fills
+    /// the KV cache is interchangeable with a pure decode_step loop.
+    #[test]
+    fn prefill_matches_decode_step_loop() {
+        let model = Transformer::random(&small_cfg(), 17);
+        let tokens: Vec<u16> = vec![3, 9, 27, 1, 40, 12, 7, 33];
+        // reference: pure incremental decode
+        let mut sess_a = model.new_session();
+        let mut last_a = Vec::new();
+        for &t in &tokens {
+            last_a = model.decode_step(&mut sess_a, t);
+        }
+        // prefill the prompt minus the final token, then decode it
+        let mut sess_b = model.new_session_with_capacity(tokens.len());
+        let _ = model.prefill(&mut sess_b, &tokens[..tokens.len() - 1]);
+        assert_eq!(sess_b.pos, tokens.len() - 1);
+        let last_b = model.decode_step(&mut sess_b, tokens[tokens.len() - 1]);
+        crate::util::prop::assert_close(&last_b, &last_a, 1e-5, 1e-5).unwrap();
+        // prefilling everything yields the same last-position logits
+        let mut sess_c = model.new_session();
+        let last_c = model.prefill(&mut sess_c, &tokens);
+        crate::util::prop::assert_close(&last_c, &last_a, 1e-5, 1e-5).unwrap();
+        assert_eq!(sess_c.pos, tokens.len());
+    }
+
+    #[test]
+    #[should_panic(expected = "fresh session")]
+    fn prefill_rejects_used_session() {
+        let model = Transformer::random(&small_cfg(), 19);
+        let mut sess = model.new_session();
+        let _ = model.prefill(&mut sess, &[1, 2, 3]);
+        let _ = model.prefill(&mut sess, &[4, 5, 6]);
+    }
+
+    /// Lockstep batched decode is row-for-row identical to stepping each
+    /// session alone — including sessions at different positions.
+    #[test]
+    fn decode_step_batch_matches_individual_steps() {
+        let model = Transformer::random(&small_cfg(), 18);
+        let prompts: Vec<Vec<u16>> = vec![vec![1, 5, 9], vec![7, 2, 60, 33], vec![11]];
+        let mut indiv: Vec<DecodeSession> = prompts.iter().map(|_| model.new_session()).collect();
+        let mut batch: Vec<DecodeSession> = prompts.iter().map(|_| model.new_session()).collect();
+        for (sess, p) in indiv.iter_mut().zip(&prompts) {
+            let _ = model.prefill(sess, p);
+        }
+        for (sess, p) in batch.iter_mut().zip(&prompts) {
+            let _ = model.prefill(sess, p);
+        }
+        for toks in [vec![4u16, 8, 15], vec![9, 3, 22]] {
+            let batched = model.decode_step_batch(&mut batch, &toks, 2);
+            for (r, (sess, &t)) in indiv.iter_mut().zip(&toks).enumerate() {
+                let want = model.decode_step(sess, t);
+                crate::util::prop::assert_close(batched.row(r), &want, 1e-6, 1e-6)
+                    .unwrap_or_else(|e| panic!("row {r}: {e}"));
+            }
+        }
+        for (a, b) in indiv.iter().zip(&batch) {
+            assert_eq!(a.pos, b.pos);
+        }
     }
 
     #[test]

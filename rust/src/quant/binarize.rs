@@ -73,7 +73,7 @@ impl Default for BwaConfig {
 pub struct BwaLinear {
     pub in_features: usize,
     pub out_features: usize,
-    /// Input-channel permutation: position i reads original channel perm[i].
+    /// Input-channel permutation: position `i` reads original channel `perm[i]`.
     pub perm: Vec<usize>,
     /// Channels in the binary region (multiple of the group size).
     pub n_norm: usize,
@@ -85,7 +85,7 @@ pub struct BwaLinear {
     pub qbits: PackedBits,
     /// Packed fine-group bitmap m (out × n_norm); bit=1 ⇔ s=1.
     pub mbits: PackedBits,
-    /// α[row][group][s] flattened: idx = (row*ng + g)*2 + s.
+    /// `α[row][group][s]` flattened: idx = (row*ng + g)*2 + s.
     pub alpha: Vec<f32>,
     /// β, same layout.
     pub beta: Vec<f32>,

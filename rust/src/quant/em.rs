@@ -31,7 +31,7 @@ impl GroupQuant {
     /// Split centers into the (s, q) parameterization: fine-group s pairs
     /// the two lowest centers (s=0) and the two highest (s=1); within a
     /// pair, q=−1 is the lower center. Returns (alpha[2], beta[2]) with
-    /// ŵ = alpha[s]·q + beta[s]. For 2 centers, only s=0 is meaningful
+    /// `ŵ = alpha[s]·q + beta[s]`. For 2 centers, only s=0 is meaningful
     /// and alpha[1] = alpha[0], beta[1] = beta[0].
     pub fn to_affine(&self) -> ([f64; 2], [f64; 2]) {
         match self.centers.len() {

@@ -189,6 +189,15 @@ pub trait LinearExec: Send + Sync {
     fn prepare<'a>(&self, x: &'a Tensor) -> PreparedActs<'a>;
     /// Execute into a preallocated `[tokens, out_features]` buffer.
     fn forward_prepared(&self, acts: &PreparedActs<'_>, out: &mut Tensor);
+    /// Execute with up to `threads` worker threads splitting the token
+    /// rows of the batch. Token rows are independent, so implementations
+    /// must produce bit-identical results to [`Self::forward_prepared`];
+    /// the default ignores `threads` and runs single-threaded. Used by
+    /// the serving engine's batched decode, where one prepared batch
+    /// carries a row per in-flight sequence.
+    fn forward_prepared_mt(&self, acts: &PreparedActs<'_>, out: &mut Tensor, _threads: usize) {
+        self.forward_prepared(acts, out);
+    }
     /// Convenience for unshared inputs: prepare + execute.
     fn forward_into(&self, x: &Tensor, out: &mut Tensor) {
         let acts = self.prepare(x);
@@ -204,6 +213,39 @@ pub trait LinearExec: Send + Sync {
 /// A method that turns (layer identity, weights, calibration activations)
 /// into a [`QuantLinear`]. Implemented by the paper's method and every
 /// baseline.
+///
+/// Quantizing one linear layer with the paper's W(1+1)A(1×4) method and
+/// running it through the compiled popcount plan:
+///
+/// ```
+/// use bwa_llm::quant::{BwaQuantizer, LayerCtx, Quantizer};
+/// use bwa_llm::tensor::Tensor;
+/// use bwa_llm::util::rng::Rng;
+///
+/// let mut rng = Rng::new(1);
+/// let w = Tensor::from_vec(&[16, 128], rng.normal_vec_f32(16 * 128, 0.0, 0.1));
+/// let calib = Tensor::from_vec(&[40, 128], rng.normal_vec_f32(40 * 128, 0.0, 1.0));
+///
+/// // quantize: storage form (packed bits + affine params + outliers)
+/// let ql = BwaQuantizer::paper()
+///     .quantize_linear(&LayerCtx::other("demo.w"), &w, &calib)
+///     .unwrap();
+/// assert!(ql.weight_bits() < 16.0);
+///
+/// // compile: execution plan (the packed popcount GEMM)
+/// let exec = ql.compile();
+///
+/// // prepare once, execute into a preallocated buffer
+/// let x = Tensor::from_vec(&[4, 128], rng.normal_vec_f32(4 * 128, 0.0, 1.0));
+/// let acts = exec.prepare(&x);
+/// let mut y = Tensor::zeros(&[4, 16]);
+/// exec.forward_prepared(&acts, &mut y);
+///
+/// // the plan agrees with the dense fake-quant reference forward
+/// let reference = ql.forward(&x);
+/// let err = bwa_llm::util::prop::rel_err(&y.data, &reference.data);
+/// assert!(err < 0.02, "packed vs fake rel err {err}");
+/// ```
 pub trait Quantizer: Send + Sync {
     fn name(&self) -> String;
     fn quantize_linear(
@@ -451,13 +493,27 @@ impl LinearExec for BwaGemm {
     }
 
     fn forward_prepared(&self, acts: &PreparedActs<'_>, out: &mut Tensor) {
+        self.forward_prepared_mt(acts, out, 1);
+    }
+
+    fn forward_prepared_mt(&self, acts: &PreparedActs<'_>, out: &mut Tensor, threads: usize) {
+        // Spawning scoped threads costs tens of microseconds per call;
+        // below this effective-MAC threshold the GEMM itself is cheaper
+        // than the fork/join, so small batches (e.g. decode on a tiny
+        // model) stay single-threaded. `gemm_packed_into_mt` itself
+        // threads unconditionally — the policy lives here, the mechanism
+        // there.
+        const MT_MIN_MACS: usize = 2_000_000;
+        let (m, _) = out.dims2();
+        let macs = m * self.lin.out_features * self.lin.in_features;
+        let threads = if macs < MT_MIN_MACS { 1 } else { threads };
         match &acts.packed {
-            Some(p) if p.sig == self.sig => self.gemm_packed_into(&p.acts, out),
+            Some(p) if p.sig == self.sig => self.gemm_packed_into_mt(&p.acts, out, threads),
             // Prepared elsewhere under a different packing scheme (or not
             // at all): re-pack locally. Correct, just not shared.
             _ => {
                 let p = self.prepare_acts(acts.x);
-                self.gemm_packed_into(&p, out);
+                self.gemm_packed_into_mt(&p, out, threads);
             }
         }
     }

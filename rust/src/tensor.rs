@@ -4,7 +4,7 @@
 //! the transformer needs. Keeping it minimal keeps the hot paths legible
 //! for the performance pass.
 
-#[derive(Clone, Debug, PartialEq)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct Tensor {
     pub shape: Vec<usize>,
     pub data: Vec<f32>,
@@ -96,7 +96,7 @@ impl Tensor {
         out
     }
 
-    /// Gather columns: out[:, k] = self[:, idx[k]].
+    /// Gather columns: `out[:, k] = self[:, idx[k]]`.
     pub fn select_cols(&self, idx: &[usize]) -> Tensor {
         let (r, c) = self.dims2();
         let mut out = Tensor::zeros(&[r, idx.len()]);

@@ -7,8 +7,17 @@ cd "$(dirname "$0")/.."
 echo "== cargo build --release =="
 cargo build --release
 
-echo "== cargo test -q =="
-cargo test -q
+echo "== cargo test (unit + integration) =="
+# Doc tests run in their own step below — a bare `cargo test` would run
+# them twice. Examples and benches still compile under clippy
+# --all-targets further down.
+cargo test -q --lib --bins --tests
+
+echo "== cargo test --doc =="
+cargo test --doc -q
+
+echo "== cargo doc (rustdoc warnings are errors) =="
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 
 echo "== cargo fmt --check =="
 cargo fmt --check
