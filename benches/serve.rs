@@ -13,6 +13,12 @@
 //! parallel-over-seq speedup) are printed and recorded into
 //! `BENCH_serve.json` at the repo root so the perf trajectory tracks
 //! end-to-end serving throughput, not just kernel microbenchmarks.
+//!
+//! The bench also measures **cold start**: the model is quantized once
+//! (timed, `startup_quantize_s`), compiled into a `.bwa` artifact, and
+//! reloaded from it (timed, `startup_artifact_load_s`) — both serving
+//! backends then load that artifact, so the quantize-once/serve-many
+//! path is on the measured route.
 
 use bwa_llm::coordinator::batcher::{Backend, BatcherConfig, BatcherStats};
 use bwa_llm::coordinator::{serve_workload_stats, NativeBackend, ParallelBackend};
@@ -22,7 +28,7 @@ use bwa_llm::model::{quantize_model, Transformer};
 use bwa_llm::quant::BwaQuantizer;
 use bwa_llm::util::json::Json;
 use bwa_llm::util::rng::Rng;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 const REQUESTS: usize = 32;
 const CLIENTS: usize = 4;
@@ -85,10 +91,30 @@ fn main() {
         cfg.param_count()
     );
 
-    let cfg2 = cfg.clone();
+    // Cold start: quantize once (timed), compile to an artifact, reload
+    // it (timed). Both backends below serve the artifact-loaded model —
+    // bit-identical to the freshly quantized one (parity test-pinned).
+    let t0 = Instant::now();
+    let model = quantized(&cfg, 11);
+    let startup_quantize_s = t0.elapsed().as_secs_f64();
+    let dir = std::env::temp_dir().join("bwa_bench_serve");
+    std::fs::create_dir_all(&dir).expect("temp dir");
+    let art_path = dir.join("tiny.bwa");
+    bwa_llm::artifact::save(&model, "bwa", &art_path).expect("write artifact");
+    drop(model);
+    let t0 = Instant::now();
+    drop(bwa_llm::artifact::load(&art_path).expect("load artifact"));
+    let startup_artifact_load_s = t0.elapsed().as_secs_f64();
+    println!(
+        "startup: quantize {startup_quantize_s:.2}s vs artifact load {startup_artifact_load_s:.3}s \
+         ({:.0}x faster cold start)",
+        startup_quantize_s / startup_artifact_load_s.max(1e-9)
+    );
+
+    let path = art_path.clone();
     let (seq_name, seq_stats, seq_wall) = run(move || {
         Box::new(NativeBackend {
-            model: quantized(&cfg2, 11),
+            model: bwa_llm::artifact::load(&path).expect("artifact").model,
             label: "bwa-seq".into(),
         }) as Box<dyn Backend>
     });
@@ -99,9 +125,9 @@ fn main() {
         seq_tok_s,
     );
 
-    let cfg2 = cfg.clone();
+    let path = art_path.clone();
     let (par_name, par_stats, par_wall) = run(move || {
-        let model = quantized(&cfg2, 11);
+        let model = bwa_llm::artifact::load(&path).expect("artifact").model;
         Box::new(ParallelBackend::new(model, workers, "bwa")) as Box<dyn Backend>
     });
     let par_tok_s = par_stats.tokens_per_s;
@@ -126,7 +152,10 @@ fn main() {
         ("seq", record("bwa-seq", &seq_stats, seq_wall)),
         ("parallel", record("bwa-parallel", &par_stats, par_wall)),
         ("speedup_tok_per_s", Json::num(speedup)),
+        ("startup_quantize_s", Json::num(startup_quantize_s)),
+        ("startup_artifact_load_s", Json::num(startup_artifact_load_s)),
     ]);
     std::fs::write("BENCH_serve.json", json.to_string_pretty()).expect("write BENCH_serve.json");
     println!("wrote BENCH_serve.json");
+    std::fs::remove_file(&art_path).ok();
 }

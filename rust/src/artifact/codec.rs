@@ -1,0 +1,558 @@
+//! Quantizer codecs — how each [`QuantLinear`] storage form crosses the
+//! artifact boundary.
+//!
+//! A [`QuantLinearCodec`] owns one wire format: `encode` downcasts the
+//! trait object (via [`QuantLinear::as_any`]) and serializes its state,
+//! `decode` rebuilds the storage form from the section bytes. The codec
+//! `id` is written into the artifact header next to each layer section,
+//! so a reader knows exactly which decoder a section needs — and fails
+//! with [`ArtifactError::UnknownCodec`] instead of misparsing when it
+//! meets a layer written by a codec it does not ship.
+//!
+//! Registered codecs:
+//!
+//! | id | storage form | payload |
+//! |---|---|---|
+//! | `bwa.v1` | [`BwaLinear`] | dims + perm + packed q/m bit planes + per-(row, group, s) affine + activation config + INT8 outlier block. The dense `w_hat` is **not** shipped: it is rebuilt bit-exactly by [`BwaLinear::reconstruct_w_hat`] on decode. |
+//! | `fp32.v1` | [`FpLinear`] | dims + raw f32 weights (embedding-style FP passthrough layers). |
+//!
+//! Baseline fake-quant layers have no codec on purpose — they are
+//! comparison points, not serving configurations.
+
+use super::ArtifactError;
+use crate::quant::actquant::{ActQuantConfig, BalanceMode};
+use crate::quant::binarize::BwaLinear;
+use crate::quant::outlier::OutlierPart;
+use crate::quant::pack::{PackedBits, WORD_BITS};
+use crate::quant::rtn::RtnParams;
+use crate::quant::{FpLinear, QuantLinear};
+use crate::tensor::Tensor;
+
+/// One wire format for one concrete [`QuantLinear`] implementation.
+pub trait QuantLinearCodec: Send + Sync {
+    /// Stable identifier recorded in the artifact header (versioned, e.g.
+    /// `bwa.v1` — a breaking payload change mints a new id).
+    fn id(&self) -> &'static str;
+    /// Serialize the storage form; `None` when this codec does not handle
+    /// the concrete type behind the trait object.
+    fn encode(&self, lin: &dyn QuantLinear) -> Option<Vec<u8>>;
+    /// Rebuild the storage form from bytes produced by [`Self::encode`].
+    fn decode(&self, bytes: &[u8]) -> Result<Box<dyn QuantLinear>, ArtifactError>;
+}
+
+/// Every codec this build can read and write, in encode-probe order.
+pub static CODECS: [&dyn QuantLinearCodec; 2] = [&BwaCodec, &FpCodec];
+
+/// Encode one layer with the first codec that recognizes its concrete
+/// type; errors when no registered codec can serialize it.
+pub fn encode_linear(
+    layer: &str,
+    lin: &dyn QuantLinear,
+) -> Result<(&'static str, Vec<u8>), ArtifactError> {
+    for codec in CODECS {
+        if let Some(bytes) = codec.encode(lin) {
+            return Ok((codec.id(), bytes));
+        }
+    }
+    Err(ArtifactError::UnknownCodec {
+        layer: layer.to_string(),
+        codec: "<no codec registered for this QuantLinear impl>".to_string(),
+    })
+}
+
+/// Decode one layer section with the codec named in the header.
+pub fn decode_linear(
+    layer: &str,
+    codec_id: &str,
+    bytes: &[u8],
+) -> Result<Box<dyn QuantLinear>, ArtifactError> {
+    for codec in CODECS {
+        if codec.id() == codec_id {
+            return codec.decode(bytes).map_err(|e| e.in_layer(layer));
+        }
+    }
+    Err(ArtifactError::UnknownCodec {
+        layer: layer.to_string(),
+        codec: codec_id.to_string(),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Little-endian wire helpers
+// ---------------------------------------------------------------------------
+
+/// Append-only little-endian byte sink for codec payloads.
+struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    fn new() -> Self {
+        Self { buf: Vec::new() }
+    }
+
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn i32(&mut self, v: i32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u64s(&mut self, vs: &[u64]) {
+        for &v in vs {
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    /// u32 length prefix + raw f32 values.
+    fn f32s_with_len(&mut self, vs: &[f32]) {
+        self.u32(vs.len() as u32);
+        for &v in vs {
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    fn i8s(&mut self, vs: &[i8]) {
+        for &v in vs {
+            self.buf.push(v as u8);
+        }
+    }
+
+    fn bits(&mut self, b: &PackedBits) {
+        self.u32(b.rows as u32);
+        self.u32(b.cols as u32);
+        self.u64s(&b.words);
+    }
+}
+
+/// Validating little-endian cursor over one codec section. Every read
+/// bounds-checks before touching (or allocating for) the bytes, so a
+/// truncated or size-lying payload fails with a typed error instead of
+/// panicking or over-allocating.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], ArtifactError> {
+        if n > self.buf.len() - self.pos {
+            return Err(ArtifactError::Format(format!(
+                "payload truncated: need {n} bytes at offset {}, have {}",
+                self.pos,
+                self.buf.len() - self.pos
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, ArtifactError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, ArtifactError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn usize32(&mut self) -> Result<usize, ArtifactError> {
+        Ok(self.u32()? as usize)
+    }
+
+    fn i32(&mut self) -> Result<i32, ArtifactError> {
+        let b = self.take(4)?;
+        Ok(i32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn f32(&mut self) -> Result<f32, ArtifactError> {
+        let b = self.take(4)?;
+        Ok(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn f64(&mut self) -> Result<f64, ArtifactError> {
+        let b = self.take(8)?;
+        Ok(f64::from_le_bytes(b.try_into().expect("8 bytes")))
+    }
+
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>, ArtifactError> {
+        let bytes = self.take(checked_size(n, 4)?)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect())
+    }
+
+    fn f32s_with_len(&mut self) -> Result<Vec<f32>, ArtifactError> {
+        let n = self.usize32()?;
+        self.f32s(n)
+    }
+
+    fn u64s(&mut self, n: usize) -> Result<Vec<u64>, ArtifactError> {
+        let bytes = self.take(checked_size(n, 8)?)?;
+        Ok(bytes
+            .chunks_exact(8)
+            .map(|b| u64::from_le_bytes(b.try_into().expect("8 bytes")))
+            .collect())
+    }
+
+    fn i8s(&mut self, n: usize) -> Result<Vec<i8>, ArtifactError> {
+        let bytes = self.take(n)?;
+        Ok(bytes.iter().map(|&b| b as i8).collect())
+    }
+
+    fn bits(&mut self) -> Result<PackedBits, ArtifactError> {
+        let rows = self.usize32()?;
+        let cols = self.usize32()?;
+        let words_per_row = cols.div_ceil(WORD_BITS);
+        let words = self.u64s(
+            rows.checked_mul(words_per_row)
+                .ok_or_else(|| ArtifactError::Format("bit matrix too large".into()))?,
+        )?;
+        Ok(PackedBits {
+            rows,
+            cols,
+            words_per_row,
+            words,
+        })
+    }
+
+    /// Every byte of the section must be consumed — trailing garbage is a
+    /// format error, not silently ignored.
+    fn done(&self) -> Result<(), ArtifactError> {
+        if self.pos != self.buf.len() {
+            return Err(ArtifactError::Format(format!(
+                "{} trailing bytes after payload",
+                self.buf.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+fn checked_size(n: usize, elem: usize) -> Result<usize, ArtifactError> {
+    n.checked_mul(elem)
+        .ok_or_else(|| ArtifactError::Format("section length overflows".into()))
+}
+
+fn format_err(msg: impl Into<String>) -> ArtifactError {
+    ArtifactError::Format(msg.into())
+}
+
+// ---------------------------------------------------------------------------
+// bwa.v1 — the paper's W(1+1)A(1×4) layer
+// ---------------------------------------------------------------------------
+
+/// Codec for [`BwaLinear`]: ships the packed/compiled state only (bit
+/// planes, affine params, outliers, activation config); the dense
+/// `w_hat` is reconstructed bit-exactly on decode.
+pub struct BwaCodec;
+
+impl QuantLinearCodec for BwaCodec {
+    fn id(&self) -> &'static str {
+        "bwa.v1"
+    }
+
+    fn encode(&self, lin: &dyn QuantLinear) -> Option<Vec<u8>> {
+        let lin = lin.as_any().downcast_ref::<BwaLinear>()?;
+        let mut w = Writer::new();
+        w.u32(lin.in_features as u32);
+        w.u32(lin.out_features as u32);
+        w.u32(lin.n_norm as u32);
+        w.u32(lin.group_size as u32);
+        w.u8(lin.quantize_acts as u8);
+        w.u32(lin.act.bits);
+        w.u8(match lin.act.balance {
+            BalanceMode::None => 0,
+            BalanceMode::Paper => 1,
+            BalanceMode::LeastSquares => 2,
+        });
+        w.f64(lin.quant_loss);
+        w.u32(lin.perm.len() as u32);
+        for &p in &lin.perm {
+            w.u32(p as u32);
+        }
+        w.bits(&lin.qbits);
+        w.bits(&lin.mbits);
+        w.f32s_with_len(&lin.alpha);
+        w.f32s_with_len(&lin.beta);
+        w.u32(lin.outlier.k as u32);
+        w.u32(lin.outlier.rows as u32);
+        w.u32(lin.outlier.act_bits);
+        w.i8s(&lin.outlier.q);
+        w.u32(lin.outlier.params.len() as u32);
+        for p in &lin.outlier.params {
+            w.f32(p.scale);
+            w.i32(p.zero);
+            w.u32(p.bits);
+        }
+        Some(w.buf)
+    }
+
+    fn decode(&self, bytes: &[u8]) -> Result<Box<dyn QuantLinear>, ArtifactError> {
+        let mut r = Reader::new(bytes);
+        let in_features = r.usize32()?;
+        let out_features = r.usize32()?;
+        let n_norm = r.usize32()?;
+        let group_size = r.usize32()?;
+        if group_size == 0
+            || group_size % WORD_BITS != 0
+            || n_norm % group_size != 0
+            || n_norm > in_features
+        {
+            return Err(format_err(format!(
+                "inconsistent dims: in {in_features}, n_norm {n_norm}, group {group_size}"
+            )));
+        }
+        let quantize_acts = r.u8()? != 0;
+        let act_bits = r.u32()?;
+        // The popcount kernel is specialized to A(1×4); in release builds
+        // its plane-count debug_assert is compiled out, so an off-spec
+        // plane count must die here as a typed error, not as an
+        // out-of-bounds slice mid-request.
+        if quantize_acts && act_bits != 4 {
+            return Err(format_err(format!(
+                "act_bits {act_bits} unsupported (the packed kernel serves 4 activation planes)"
+            )));
+        }
+        let balance = match r.u8()? {
+            0 => BalanceMode::None,
+            1 => BalanceMode::Paper,
+            2 => BalanceMode::LeastSquares,
+            b => return Err(format_err(format!("bad balance mode {b}"))),
+        };
+        let quant_loss = r.f64()?;
+        let n_perm = r.usize32()?;
+        if n_perm != in_features {
+            return Err(format_err(format!(
+                "perm has {n_perm} entries for {in_features} channels"
+            )));
+        }
+        let mut perm = Vec::with_capacity(n_perm);
+        for _ in 0..n_perm {
+            let p = r.usize32()?;
+            if p >= in_features {
+                return Err(format_err(format!("perm entry {p} out of range")));
+            }
+            perm.push(p);
+        }
+        let qbits = r.bits()?;
+        let mbits = r.bits()?;
+        for (name, b) in [("qbits", &qbits), ("mbits", &mbits)] {
+            if b.rows != out_features || b.cols != n_norm {
+                return Err(format_err(format!(
+                    "{name} is {}x{}, expected {out_features}x{n_norm}",
+                    b.rows, b.cols
+                )));
+            }
+        }
+        let alpha = r.f32s_with_len()?;
+        let beta = r.f32s_with_len()?;
+        let ng = n_norm / group_size;
+        if alpha.len() != out_features * ng * 2 || beta.len() != alpha.len() {
+            return Err(format_err(format!(
+                "affine params {}x{} for {out_features} rows x {ng} groups",
+                alpha.len(),
+                beta.len()
+            )));
+        }
+        let k = r.usize32()?;
+        let rows = r.usize32()?;
+        let outlier_act_bits = r.u32()?;
+        if rows != out_features || k != in_features - n_norm {
+            return Err(format_err(format!(
+                "outlier block {rows}x{k}, expected {out_features}x{}",
+                in_features - n_norm
+            )));
+        }
+        let q = r.i8s(checked_size(rows, k)?)?;
+        let n_params = r.usize32()?;
+        if n_params != if k == 0 { 0 } else { rows } {
+            return Err(format_err(format!("{n_params} outlier params for {rows} rows")));
+        }
+        let mut params = Vec::with_capacity(n_params);
+        for _ in 0..n_params {
+            params.push(RtnParams {
+                scale: r.f32()?,
+                zero: r.i32()?,
+                bits: r.u32()?,
+            });
+        }
+        r.done()?;
+        let mut lin = BwaLinear {
+            in_features,
+            out_features,
+            perm,
+            n_norm,
+            group_size,
+            w_hat: Tensor::zeros(&[0, 0]),
+            qbits,
+            mbits,
+            alpha,
+            beta,
+            outlier: OutlierPart {
+                k,
+                rows,
+                q,
+                params,
+                act_bits: outlier_act_bits,
+            },
+            act: ActQuantConfig {
+                bits: act_bits,
+                balance,
+            },
+            quantize_acts,
+            quant_loss,
+        };
+        lin.w_hat = lin.reconstruct_w_hat();
+        Ok(Box::new(lin))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// fp32.v1 — dense FP passthrough
+// ---------------------------------------------------------------------------
+
+/// Codec for [`FpLinear`]: dims + raw f32 weights.
+pub struct FpCodec;
+
+impl QuantLinearCodec for FpCodec {
+    fn id(&self) -> &'static str {
+        "fp32.v1"
+    }
+
+    fn encode(&self, lin: &dyn QuantLinear) -> Option<Vec<u8>> {
+        let lin = lin.as_any().downcast_ref::<FpLinear>()?;
+        let (rows, cols) = lin.w.dims2();
+        let mut w = Writer::new();
+        w.u32(rows as u32);
+        w.u32(cols as u32);
+        for &v in &lin.w.data {
+            w.f32(v);
+        }
+        Some(w.buf)
+    }
+
+    fn decode(&self, bytes: &[u8]) -> Result<Box<dyn QuantLinear>, ArtifactError> {
+        let mut r = Reader::new(bytes);
+        let rows = r.usize32()?;
+        let cols = r.usize32()?;
+        let n = rows
+            .checked_mul(cols)
+            .ok_or_else(|| format_err("weight matrix too large"))?;
+        let data = r.f32s(n)?;
+        r.done()?;
+        Ok(Box::new(FpLinear {
+            w: Tensor::from_vec(&[rows, cols], data),
+        }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::binarize::{quantize_bwa, BwaConfig};
+    use crate::util::rng::Rng;
+
+    fn bwa_layer(seed: u64, cfg: &BwaConfig) -> BwaLinear {
+        let mut rng = Rng::new(seed);
+        let w = Tensor::from_vec(&[16, 128], rng.normal_vec_f32(16 * 128, 0.0, 0.1));
+        let x = Tensor::from_vec(&[40, 128], rng.normal_vec_f32(40 * 128, 0.0, 1.0));
+        quantize_bwa(&w, &x, cfg)
+    }
+
+    #[test]
+    fn bwa_roundtrip_is_bit_exact() {
+        for cfg in [
+            BwaConfig::paper(),
+            BwaConfig {
+                outlier_groups: 0,
+                ..BwaConfig::default()
+            },
+            BwaConfig::w11_a16(),
+        ] {
+            let lin = bwa_layer(1, &cfg);
+            let (id, bytes) = encode_linear("test", &lin).unwrap();
+            assert_eq!(id, "bwa.v1");
+            let back = decode_linear("test", id, &bytes).unwrap();
+            let back = back.as_any().downcast_ref::<BwaLinear>().unwrap();
+            assert_eq!(back.perm, lin.perm);
+            assert_eq!(back.qbits, lin.qbits);
+            assert_eq!(back.mbits, lin.mbits);
+            assert_eq!(back.alpha, lin.alpha);
+            assert_eq!(back.beta, lin.beta);
+            assert_eq!(back.outlier.q, lin.outlier.q);
+            assert_eq!(back.w_hat.data, lin.w_hat.data, "w_hat reconstruction");
+            assert_eq!(back.quantize_acts, lin.quantize_acts);
+            // and the forwards agree to the bit
+            let mut rng = Rng::new(7);
+            let xt = Tensor::from_vec(&[3, 128], rng.normal_vec_f32(3 * 128, 0.0, 1.0));
+            assert_eq!(back.forward(&xt).data, lin.forward(&xt).data);
+        }
+    }
+
+    #[test]
+    fn fp_roundtrip_is_bit_exact() {
+        let mut rng = Rng::new(2);
+        let lin = FpLinear {
+            w: Tensor::from_vec(&[8, 16], rng.normal_vec_f32(128, 0.0, 1.0)),
+        };
+        let (id, bytes) = encode_linear("test", &lin).unwrap();
+        assert_eq!(id, "fp32.v1");
+        let back = decode_linear("test", id, &bytes).unwrap();
+        let back = back.as_any().downcast_ref::<FpLinear>().unwrap();
+        assert_eq!(back.w.data, lin.w.data);
+        assert_eq!(back.w.shape, lin.w.shape);
+    }
+
+    #[test]
+    fn truncated_payload_is_a_format_error() {
+        let lin = bwa_layer(3, &BwaConfig::paper());
+        let (id, bytes) = encode_linear("test", &lin).unwrap();
+        for cut in [0, 1, 7, bytes.len() / 2, bytes.len() - 1] {
+            match decode_linear("test", id, &bytes[..cut]) {
+                Err(ArtifactError::Format(_)) => {}
+                Err(other) => panic!("cut {cut}: expected Format, got {other}"),
+                Ok(_) => panic!("cut {cut}: decoded a truncated payload"),
+            }
+        }
+    }
+
+    #[test]
+    fn trailing_bytes_are_a_format_error() {
+        let lin = bwa_layer(4, &BwaConfig::paper());
+        let (id, mut bytes) = encode_linear("test", &lin).unwrap();
+        bytes.push(0);
+        assert!(decode_linear("test", id, &bytes).is_err());
+    }
+
+    #[test]
+    fn unknown_codec_id_is_typed() {
+        match decode_linear("layers.0.wq", "nope.v9", &[]) {
+            Err(ArtifactError::UnknownCodec { layer, codec }) => {
+                assert_eq!(layer, "layers.0.wq");
+                assert_eq!(codec, "nope.v9");
+            }
+            Err(other) => panic!("expected UnknownCodec, got {other}"),
+            Ok(_) => panic!("decoded with an unknown codec"),
+        }
+    }
+}

@@ -1,0 +1,767 @@
+//! The quantized-artifact store — quantize once, serve many.
+//!
+//! Post-training quantization is supposed to be a one-time cost, but
+//! every entry point used to re-run the full W(1+1)A(1×4) pipeline
+//! (Hessian accumulation, EM grouping, smoothing) from the FP checkpoint
+//! on process start. This module makes the compiled model a first-class
+//! on-disk object: `bwa quantize --out artifacts/quant/<name>.bwa`
+//! writes a versioned, checksummed artifact holding everything
+//! [`crate::model::Transformer`] needs to run the packed popcount hot
+//! path — per-layer packed sign/bitmap planes, group affine scales,
+//! activation-quantizer state, INT8 outlier blocks, and the
+//! non-quantized tensors (embeddings, norms, LM head). `bwa serve
+//! --artifact` and `bwa eval --artifact` then reconstruct a
+//! serving-ready model without touching calibration data: cold start is
+//! "load packed bits", not "redo calibration".
+//!
+//! Layout (little endian), in the spirit of `model/checkpoint.rs` but
+//! for *compiled* models:
+//!
+//! ```text
+//! magic    8 bytes  "BWAART01"
+//! hdr_len  u32      JSON header byte length
+//! hdr_crc  u64      FNV-1a 64 of the header bytes
+//! header   JSON     {"version", "method", "config", "kv_bits",
+//!                    "checksum", "tensors": [...], "linears": [...]}
+//! payload  bytes    raw sections, contiguous, offsets in the header
+//! ```
+//!
+//! Integrity is two checksums: `hdr_crc` covers the JSON header (so a
+//! flipped config digit or section offset is caught before anything is
+//! trusted), and the header's `checksum` field is FNV-1a 64 over the
+//! payload (hex). `tensors` entries carry `{name, shape, offset, len}`
+//! (raw f32 LE); `linears` carry `{name, codec, offset, len}` where
+//! `codec` names the [`codec::QuantLinearCodec`] that understands the
+//! section bytes.
+//!
+//! [`load`] validates magic, format version, header shape, section
+//! bounds, and the payload checksum before any codec runs; every failure
+//! mode is a typed [`ArtifactError`]. The parity contract — pinned by
+//! tests here and in the serving stack — is that the loaded model's
+//! `forward`, `prefill` + `decode_step`, and `decode_step_batch` are
+//! **bit-identical** to the model that was saved.
+
+pub mod codec;
+
+use crate::model::config::ModelConfig;
+use crate::model::{Attention, Block, CompiledLinear, Mlp, Transformer};
+use crate::quant::QuantLinear;
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+pub const MAGIC: &[u8; 8] = b"BWAART01";
+pub const FORMAT_VERSION: u32 = 1;
+
+/// Why an artifact could not be written or read.
+#[derive(Debug)]
+pub enum ArtifactError {
+    /// Underlying filesystem failure.
+    Io(String),
+    /// Structural problem: bad magic, malformed header, section out of
+    /// bounds, truncated or inconsistent codec payload.
+    Format(String),
+    /// The file is a BWA artifact of an incompatible format version.
+    Version { found: u32, expected: u32 },
+    /// Payload bytes do not match the header checksum.
+    Corrupt(String),
+    /// A layer section was written by (or requires) a quantizer codec
+    /// this build does not register.
+    UnknownCodec { layer: String, codec: String },
+}
+
+impl std::fmt::Display for ArtifactError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::Io(m) => write!(f, "artifact: io: {m}"),
+            Self::Format(m) => write!(f, "artifact: format: {m}"),
+            Self::Version { found, expected } => {
+                write!(f, "artifact: version {found}, this build reads {expected}")
+            }
+            Self::Corrupt(m) => write!(f, "artifact: corrupt: {m}"),
+            Self::UnknownCodec { layer, codec } => {
+                write!(f, "artifact: layer {layer}: unknown quantizer codec '{codec}'")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ArtifactError {}
+
+impl ArtifactError {
+    /// Attach layer context to a structural error (codec decode paths).
+    fn in_layer(self, layer: &str) -> Self {
+        match self {
+            Self::Format(m) => Self::Format(format!("layer {layer}: {m}")),
+            other => other,
+        }
+    }
+}
+
+fn io_err(e: std::io::Error) -> ArtifactError {
+    ArtifactError::Io(e.to_string())
+}
+
+/// FNV-1a 64 over a byte stream — the payload integrity checksum.
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Header metadata carried alongside the reconstructed model.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub version: u32,
+    /// Method token recorded at quantize time (e.g. `bwa`) — reporting
+    /// labels for `eval --artifact` / `serve --artifact`.
+    pub method: String,
+    pub kv_bits: Option<u32>,
+}
+
+/// A loaded artifact: metadata + a serving-ready compiled model.
+pub struct Artifact {
+    pub meta: ArtifactMeta,
+    pub model: Transformer,
+}
+
+fn push_tensor(
+    payload: &mut Vec<u8>,
+    entries: &mut Vec<Json>,
+    name: &str,
+    shape: &[usize],
+    data: &[f32],
+) {
+    let offset = payload.len();
+    for &v in data {
+        payload.extend_from_slice(&v.to_le_bytes());
+    }
+    entries.push(Json::obj(vec![
+        ("name", Json::str(name)),
+        (
+            "shape",
+            Json::Arr(shape.iter().map(|&d| Json::num(d as f64)).collect()),
+        ),
+        ("offset", Json::num(offset as f64)),
+        ("len", Json::num((payload.len() - offset) as f64)),
+    ]));
+}
+
+fn push_linear(
+    payload: &mut Vec<u8>,
+    entries: &mut Vec<Json>,
+    name: &str,
+    lin: &dyn QuantLinear,
+) -> Result<(), ArtifactError> {
+    let (codec_id, bytes) = codec::encode_linear(name, lin)?;
+    let offset = payload.len();
+    payload.extend_from_slice(&bytes);
+    entries.push(Json::obj(vec![
+        ("name", Json::str(name)),
+        ("codec", Json::str(codec_id)),
+        ("offset", Json::num(offset as f64)),
+        ("len", Json::num(bytes.len() as f64)),
+    ]));
+    Ok(())
+}
+
+/// Serialize a compiled model. `method` is the CLI method token recorded
+/// in the header for reporting. Creates parent directories; the write is
+/// buffered end-to-end.
+pub fn save(model: &Transformer, method: &str, path: &Path) -> Result<(), ArtifactError> {
+    let mut payload: Vec<u8> = Vec::new();
+    let mut tensors: Vec<Json> = Vec::new();
+    let mut linears: Vec<Json> = Vec::new();
+
+    push_tensor(
+        &mut payload,
+        &mut tensors,
+        "embed",
+        &model.embed.shape,
+        &model.embed.data,
+    );
+    push_tensor(
+        &mut payload,
+        &mut tensors,
+        "lm_head",
+        &model.lm_head.shape,
+        &model.lm_head.data,
+    );
+    push_tensor(
+        &mut payload,
+        &mut tensors,
+        "final_norm",
+        &[model.final_norm.len()],
+        &model.final_norm,
+    );
+    for (l, blk) in model.blocks.iter().enumerate() {
+        push_tensor(
+            &mut payload,
+            &mut tensors,
+            &format!("layers.{l}.attn_norm"),
+            &[blk.attn_norm.len()],
+            &blk.attn_norm,
+        );
+        push_tensor(
+            &mut payload,
+            &mut tensors,
+            &format!("layers.{l}.mlp_norm"),
+            &[blk.mlp_norm.len()],
+            &blk.mlp_norm,
+        );
+        for (suffix, lin) in [
+            ("wq", &blk.attn.wq),
+            ("wk", &blk.attn.wk),
+            ("wv", &blk.attn.wv),
+            ("wo", &blk.attn.wo),
+            ("gate", &blk.mlp.gate),
+            ("up", &blk.mlp.up),
+            ("down", &blk.mlp.down),
+        ] {
+            push_linear(
+                &mut payload,
+                &mut linears,
+                &format!("layers.{l}.{suffix}"),
+                lin.quant.as_ref(),
+            )?;
+        }
+    }
+
+    let header = Json::obj(vec![
+        ("version", Json::num(FORMAT_VERSION as f64)),
+        ("method", Json::str(method)),
+        ("config", model.cfg.to_json()),
+        (
+            "kv_bits",
+            match model.kv_bits {
+                Some(b) => Json::num(b as f64),
+                None => Json::Null,
+            },
+        ),
+        ("checksum", Json::str(format!("{:016x}", fnv1a64(&payload)))),
+        ("tensors", Json::Arr(tensors)),
+        ("linears", Json::Arr(linears)),
+    ])
+    .to_string();
+
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir).map_err(io_err)?;
+        }
+    }
+    let mut f = BufWriter::new(std::fs::File::create(path).map_err(io_err)?);
+    f.write_all(MAGIC).map_err(io_err)?;
+    f.write_all(&(header.len() as u32).to_le_bytes())
+        .map_err(io_err)?;
+    f.write_all(&fnv1a64(header.as_bytes()).to_le_bytes())
+        .map_err(io_err)?;
+    f.write_all(header.as_bytes()).map_err(io_err)?;
+    f.write_all(&payload).map_err(io_err)?;
+    f.flush().map_err(io_err)
+}
+
+/// Bounds-checked view of one payload section.
+fn section<'p>(
+    payload: &'p [u8],
+    offset: usize,
+    len: usize,
+    what: &str,
+) -> Result<&'p [u8], ArtifactError> {
+    if offset > payload.len() || len > payload.len() - offset {
+        return Err(ArtifactError::Format(format!(
+            "section '{what}' out of bounds (offset {offset}, len {len}, payload {})",
+            payload.len()
+        )));
+    }
+    Ok(&payload[offset..offset + len])
+}
+
+fn take_tensor(map: &mut BTreeMap<String, Tensor>, name: &str) -> Result<Tensor, ArtifactError> {
+    map.remove(name)
+        .ok_or_else(|| ArtifactError::Format(format!("missing tensor section '{name}'")))
+}
+
+fn take_linear(
+    map: &mut BTreeMap<String, Box<dyn QuantLinear>>,
+    name: &str,
+) -> Result<CompiledLinear, ArtifactError> {
+    map.remove(name)
+        .map(CompiledLinear::new)
+        .ok_or_else(|| ArtifactError::Format(format!("missing linear section '{name}'")))
+}
+
+/// A norm tensor must have exactly `d_model` gains.
+fn want_norm(t: Tensor, name: &str, d_model: usize) -> Result<Vec<f32>, ArtifactError> {
+    if t.numel() != d_model {
+        return Err(ArtifactError::Format(format!(
+            "norm '{name}' has {} elements, config d_model is {d_model}",
+            t.numel()
+        )));
+    }
+    Ok(t.data)
+}
+
+/// Take + compile one block projection and check its output width
+/// against the config (input widths are validated by each codec's own
+/// internal-consistency checks).
+fn take_lin(
+    map: &mut BTreeMap<String, Box<dyn QuantLinear>>,
+    block: usize,
+    suffix: &str,
+    out: usize,
+) -> Result<CompiledLinear, ArtifactError> {
+    let name = format!("layers.{block}.{suffix}");
+    let lin = take_linear(map, &name)?;
+    if lin.exec.out_features() != out {
+        return Err(ArtifactError::Format(format!(
+            "linear '{name}' has {} output features, config expects {out}",
+            lin.exec.out_features()
+        )));
+    }
+    Ok(lin)
+}
+
+/// Load and validate an artifact, reconstructing a serving-ready
+/// [`Transformer`] (every linear decoded by its codec and compiled to
+/// its execution plan). No calibration data is read or needed.
+pub fn load(path: &Path) -> Result<Artifact, ArtifactError> {
+    let file = std::fs::File::open(path)
+        .map_err(|e| ArtifactError::Io(format!("open {}: {e}", path.display())))?;
+    let file_len = file.metadata().map_err(io_err)?.len();
+    let mut f = BufReader::new(file);
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic).map_err(io_err)?;
+    if &magic != MAGIC {
+        return Err(ArtifactError::Format(
+            "bad magic (not a BWAART01 artifact)".into(),
+        ));
+    }
+    let mut len4 = [0u8; 4];
+    f.read_exact(&mut len4).map_err(io_err)?;
+    let hdr_len = u32::from_le_bytes(len4) as usize;
+    // Validate the untrusted length against the file size before
+    // allocating — a corrupt hdr_len must be a typed error, not an OOM.
+    const PRELUDE: u64 = 8 + 4 + 8; // magic + hdr_len + hdr_crc
+    if hdr_len as u64 > file_len.saturating_sub(PRELUDE) {
+        return Err(ArtifactError::Format(format!(
+            "header length {hdr_len} exceeds file size {file_len}"
+        )));
+    }
+    let mut crc8 = [0u8; 8];
+    f.read_exact(&mut crc8).map_err(io_err)?;
+    let hdr_crc = u64::from_le_bytes(crc8);
+    let mut hdr = vec![0u8; hdr_len];
+    f.read_exact(&mut hdr)
+        .map_err(|_| ArtifactError::Format("truncated header".into()))?;
+    let got_crc = fnv1a64(&hdr);
+    if got_crc != hdr_crc {
+        return Err(ArtifactError::Corrupt(format!(
+            "header checksum {got_crc:016x} != prelude {hdr_crc:016x} (flipped header bytes)"
+        )));
+    }
+    let header = Json::parse(
+        std::str::from_utf8(&hdr).map_err(|_| ArtifactError::Format("header not utf8".into()))?,
+    )
+    .map_err(|e| ArtifactError::Format(format!("header json: {e}")))?;
+
+    // Version gate right after header integrity — a future format may
+    // move the payload checksum or section tables, so nothing below is
+    // trusted across versions (the prelude layout is fixed by fiat).
+    let version = header.usize_or("version", 0) as u32;
+    if version != FORMAT_VERSION {
+        return Err(ArtifactError::Version {
+            found: version,
+            expected: FORMAT_VERSION,
+        });
+    }
+
+    let mut payload = Vec::new();
+    f.read_to_end(&mut payload).map_err(io_err)?;
+    let want = header
+        .get("checksum")
+        .as_str()
+        .and_then(|s| u64::from_str_radix(s, 16).ok())
+        .ok_or_else(|| ArtifactError::Format("missing or malformed checksum field".into()))?;
+    let got = fnv1a64(&payload);
+    if got != want {
+        return Err(ArtifactError::Corrupt(format!(
+            "payload checksum {got:016x} != header {want:016x} (truncated or flipped bytes)"
+        )));
+    }
+
+    let cfg = ModelConfig::from_json(header.get("config"));
+    let kv_bits = header.get("kv_bits").as_usize().map(|b| b as u32);
+    let method = header.str_or("method", "?").to_string();
+
+    let mut tensors: BTreeMap<String, Tensor> = BTreeMap::new();
+    for e in header
+        .get("tensors")
+        .as_arr()
+        .ok_or_else(|| ArtifactError::Format("missing tensors list".into()))?
+    {
+        let name = e.str_or("name", "").to_string();
+        let shape: Vec<usize> = e
+            .get("shape")
+            .as_arr()
+            .ok_or_else(|| ArtifactError::Format(format!("tensor '{name}' missing shape")))?
+            .iter()
+            .map(|d| d.as_usize().unwrap_or(0))
+            .collect();
+        let (offset, len) = (e.usize_or("offset", usize::MAX), e.usize_or("len", usize::MAX));
+        let bytes = section(&payload, offset, len, &name)?;
+        let n: usize = shape.iter().product();
+        if n.checked_mul(4) != Some(bytes.len()) {
+            return Err(ArtifactError::Format(format!(
+                "tensor '{name}' shape {shape:?} does not match section of {} bytes",
+                bytes.len()
+            )));
+        }
+        let data: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+        tensors.insert(name, Tensor::from_vec(&shape, data));
+    }
+
+    let mut linears: BTreeMap<String, Box<dyn QuantLinear>> = BTreeMap::new();
+    for e in header
+        .get("linears")
+        .as_arr()
+        .ok_or_else(|| ArtifactError::Format("missing linears list".into()))?
+    {
+        let name = e.str_or("name", "").to_string();
+        let codec_id = e.str_or("codec", "");
+        let (offset, len) = (e.usize_or("offset", usize::MAX), e.usize_or("len", usize::MAX));
+        let bytes = section(&payload, offset, len, &name)?;
+        let lin = codec::decode_linear(&name, codec_id, bytes)?;
+        linears.insert(name, lin);
+    }
+
+    // Shape gate: a checksum-consistent artifact whose sections disagree
+    // with its own config must fail here as a typed error, not panic in
+    // the first forward on the batcher thread.
+    let mut blocks = Vec::with_capacity(cfg.n_layers);
+    for l in 0..cfg.n_layers {
+        blocks.push(Block {
+            attn_norm: want_norm(
+                take_tensor(&mut tensors, &format!("layers.{l}.attn_norm"))?,
+                "attn_norm",
+                cfg.d_model,
+            )?,
+            attn: Attention {
+                wq: take_lin(&mut linears, l, "wq", cfg.d_model)?,
+                wk: take_lin(&mut linears, l, "wk", cfg.d_model)?,
+                wv: take_lin(&mut linears, l, "wv", cfg.d_model)?,
+                wo: take_lin(&mut linears, l, "wo", cfg.d_model)?,
+            },
+            mlp_norm: want_norm(
+                take_tensor(&mut tensors, &format!("layers.{l}.mlp_norm"))?,
+                "mlp_norm",
+                cfg.d_model,
+            )?,
+            mlp: Mlp {
+                gate: take_lin(&mut linears, l, "gate", cfg.d_ff)?,
+                up: take_lin(&mut linears, l, "up", cfg.d_ff)?,
+                down: take_lin(&mut linears, l, "down", cfg.d_model)?,
+            },
+        });
+    }
+    for name in ["embed", "lm_head"] {
+        let t = tensors
+            .get(name)
+            .ok_or_else(|| ArtifactError::Format(format!("missing tensor section '{name}'")))?;
+        if t.shape != [cfg.vocab_size, cfg.d_model] {
+            return Err(ArtifactError::Format(format!(
+                "{name} shape {:?} does not match config ({}, {})",
+                t.shape, cfg.vocab_size, cfg.d_model
+            )));
+        }
+    }
+    let embed = take_tensor(&mut tensors, "embed")?;
+    let lm_head = take_tensor(&mut tensors, "lm_head")?;
+    let fnorm = take_tensor(&mut tensors, "final_norm")?;
+    let final_norm = want_norm(fnorm, "final_norm", cfg.d_model)?;
+    let model = Transformer {
+        embed,
+        blocks,
+        final_norm,
+        lm_head,
+        kv_bits,
+        cfg,
+    };
+    Ok(Artifact {
+        meta: ArtifactMeta {
+            version,
+            method,
+            kv_bits,
+        },
+        model,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::checkpoint::Checkpoint;
+    use crate::model::{quantize_model, DecodeSession};
+    use crate::quant::BwaQuantizer;
+    use crate::util::rng::Rng;
+
+    fn small_cfg() -> ModelConfig {
+        ModelConfig {
+            name: "artifact-test".into(),
+            vocab_size: 64,
+            d_model: 128,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 192,
+            max_seq: 64,
+            rope_theta: 10000.0,
+            rmsnorm_eps: 1e-5,
+        }
+    }
+
+    fn quantized_tiny(seed: u64) -> Transformer {
+        let ck = Checkpoint::random(&small_cfg(), seed);
+        let mut rng = Rng::new(seed ^ 0xa11);
+        let calib: Vec<Vec<u16>> = (0..4)
+            .map(|_| (0..32).map(|_| rng.below(64) as u16).collect())
+            .collect();
+        quantize_model(&ck, &BwaQuantizer::paper(), &calib, Some(4)).unwrap()
+    }
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("bwa_artifact_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    /// Hand-assemble an artifact file with a well-formed prelude around
+    /// an arbitrary header (for crafting invalid-content files).
+    fn write_raw(path: &Path, header: &str, payload: &[u8]) {
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&(header.len() as u32).to_le_bytes());
+        bytes.extend_from_slice(&fnv1a64(header.as_bytes()).to_le_bytes());
+        bytes.extend_from_slice(header.as_bytes());
+        bytes.extend_from_slice(payload);
+        std::fs::write(path, bytes).unwrap();
+    }
+
+    /// The headline parity contract: a loaded artifact is bit-identical
+    /// to the in-memory quantized model on every serving path — batch
+    /// forward, dense fake-quant reference, prefill + incremental decode
+    /// through the INT4 KV cache, and lockstep batched decode.
+    #[test]
+    fn save_load_bit_parity_on_all_serving_paths() {
+        let m = quantized_tiny(91);
+        let path = tmp("parity.bwa");
+        save(&m, "bwa", &path).unwrap();
+        let art = load(&path).unwrap();
+        assert_eq!(art.meta.version, FORMAT_VERSION);
+        assert_eq!(art.meta.method, "bwa");
+        assert_eq!(art.meta.kv_bits, Some(4));
+        let m2 = art.model;
+        assert_eq!(m2.cfg, m.cfg);
+        assert_eq!(m2.kv_bits, m.kv_bits);
+        assert_eq!(m2.bytes(), m.bytes());
+
+        let tokens: Vec<u16> = vec![3, 9, 27, 1, 40, 12, 7, 33];
+        assert_eq!(m.forward(&tokens).data, m2.forward(&tokens).data);
+        assert_eq!(
+            m.forward_reference(&tokens).data,
+            m2.forward_reference(&tokens).data,
+            "reconstructed w_hat must be bit-exact"
+        );
+
+        let mut sa = m.new_session();
+        let mut sb = m2.new_session();
+        assert_eq!(
+            m.prefill(&mut sa, &tokens[..7]),
+            m2.prefill(&mut sb, &tokens[..7])
+        );
+        assert_eq!(
+            m.decode_step(&mut sa, tokens[7]),
+            m2.decode_step(&mut sb, tokens[7])
+        );
+
+        let prime = |m: &Transformer| -> Vec<DecodeSession> {
+            let mut ss: Vec<DecodeSession> = (0..2).map(|_| m.new_session()).collect();
+            let _ = m.prefill(&mut ss[0], &tokens[..3]);
+            let _ = m.prefill(&mut ss[1], &tokens[..5]);
+            ss
+        };
+        let mut ba = prime(&m);
+        let mut bb = prime(&m2);
+        let la = m.decode_step_batch(&mut ba, &[5, 8], 2);
+        let lb = m2.decode_step_batch(&mut bb, &[5, 8], 2);
+        assert_eq!(la.data, lb.data);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn fp_model_roundtrips() {
+        let m = Transformer::random(&small_cfg(), 94);
+        let path = tmp("fp.bwa");
+        save(&m, "fp16", &path).unwrap();
+        let art = load(&path).unwrap();
+        assert_eq!(art.meta.kv_bits, None);
+        let tokens: Vec<u16> = vec![5, 6, 7, 8];
+        assert_eq!(m.forward(&tokens).data, art.model.forward(&tokens).data);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn truncated_artifact_is_rejected() {
+        let m = Transformer::random(&small_cfg(), 92);
+        let path = tmp("trunc.bwa");
+        save(&m, "fp16", &path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        // cut into the payload: the checksum no longer matches
+        std::fs::write(&path, &bytes[..bytes.len() - 9]).unwrap();
+        match load(&path) {
+            Err(ArtifactError::Corrupt(_)) => {}
+            Err(other) => panic!("expected Corrupt, got {other}"),
+            Ok(_) => panic!("loaded a truncated artifact"),
+        }
+        // cut into the header: structural failure
+        std::fs::write(&path, &bytes[..10]).unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn flipped_payload_byte_is_rejected() {
+        let m = Transformer::random(&small_cfg(), 93);
+        let path = tmp("flip.bwa");
+        save(&m, "fp16", &path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let last = bytes.len() - 1; // payload tail, far past the header
+        bytes[last] ^= 0x40;
+        std::fs::write(&path, &bytes).unwrap();
+        match load(&path) {
+            Err(ArtifactError::Corrupt(_)) => {}
+            Err(other) => panic!("expected Corrupt, got {other}"),
+            Ok(_) => panic!("loaded a corrupted artifact"),
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn flipped_header_byte_is_rejected() {
+        let model = Transformer::random(&small_cfg(), 95);
+        let path = tmp("hdrflip.bwa");
+        save(&model, "fp16", &path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        // offset 20 = first header byte (magic 8 + hdr_len 4 + hdr_crc 8);
+        // flip a config digit deep inside the JSON
+        bytes[24] ^= 0x01;
+        std::fs::write(&path, &bytes).unwrap();
+        match load(&path) {
+            Err(ArtifactError::Corrupt(m)) => assert!(m.contains("header"), "{m}"),
+            Err(other) => panic!("expected Corrupt, got {other}"),
+            Ok(_) => panic!("loaded an artifact with a corrupted header"),
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn oversized_header_length_is_rejected() {
+        let path = tmp("hdrlen.bwa");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&u32::MAX.to_le_bytes());
+        bytes.extend_from_slice(&[0u8; 16]);
+        std::fs::write(&path, bytes).unwrap();
+        match load(&path) {
+            Err(ArtifactError::Format(m)) => assert!(m.contains("header length"), "{m}"),
+            Err(other) => panic!("expected Format, got {other}"),
+            Ok(_) => panic!("loaded an artifact lying about its header size"),
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn wrong_version_is_rejected() {
+        let path = tmp("ver.bwa");
+        write_raw(&path, r#"{"version":99}"#, &[]);
+        match load(&path) {
+            Err(ArtifactError::Version { found, expected }) => {
+                assert_eq!(found, 99);
+                assert_eq!(expected, FORMAT_VERSION);
+            }
+            Err(other) => panic!("expected Version, got {other}"),
+            Ok(_) => panic!("loaded a future-version artifact"),
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn bad_magic_is_rejected() {
+        let path = tmp("magic.bwa");
+        std::fs::write(&path, b"NOTANARTIFACT000").unwrap();
+        match load(&path) {
+            Err(ArtifactError::Format(m)) => assert!(m.contains("magic"), "{m}"),
+            Err(other) => panic!("expected Format, got {other}"),
+            Ok(_) => panic!("loaded garbage"),
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn unknown_codec_in_header_is_rejected() {
+        let path = tmp("codec.bwa");
+        let header = Json::obj(vec![
+            ("version", Json::num(FORMAT_VERSION as f64)),
+            ("method", Json::str("x")),
+            ("config", small_cfg().to_json()),
+            ("kv_bits", Json::Null),
+            ("checksum", Json::str(format!("{:016x}", fnv1a64(&[])))),
+            ("tensors", Json::Arr(vec![])),
+            (
+                "linears",
+                Json::Arr(vec![Json::obj(vec![
+                    ("name", Json::str("layers.0.wq")),
+                    ("codec", Json::str("nope.v9")),
+                    ("offset", Json::num(0.0)),
+                    ("len", Json::num(0.0)),
+                ])]),
+            ),
+        ])
+        .to_string();
+        write_raw(&path, &header, &[]);
+        match load(&path) {
+            Err(ArtifactError::UnknownCodec { layer, codec }) => {
+                assert_eq!(layer, "layers.0.wq");
+                assert_eq!(codec, "nope.v9");
+            }
+            Err(other) => panic!("expected UnknownCodec, got {other}"),
+            Ok(_) => panic!("loaded with an unknown codec"),
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn baseline_without_codec_fails_to_encode() {
+        use crate::baselines::common::{ActTransform, FakeQuantLinear};
+        let lin = FakeQuantLinear {
+            w_hat: Tensor::zeros(&[4, 8]),
+            transform: ActTransform::None,
+            act_bits: Some(4),
+            n_norm: 8,
+            outlier: None,
+            wbits_eff: 4.0,
+            bytes: 16,
+        };
+        match codec::encode_linear("layers.0.wq", &lin) {
+            Err(ArtifactError::UnknownCodec { layer, .. }) => assert_eq!(layer, "layers.0.wq"),
+            Err(other) => panic!("expected UnknownCodec, got {other}"),
+            Ok(_) => panic!("baselines must not silently serialize"),
+        }
+    }
+}

@@ -89,6 +89,10 @@ impl QuantLinear for FakeQuantLinear {
         y
     }
 
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+
     fn weight_bits(&self) -> f64 {
         self.wbits_eff
     }

@@ -13,6 +13,13 @@
 //!               (full re-prefill per generated token) — the baseline the
 //!               serve bench compares the engine against.
 //!
+//! The `bwa`/`bwa-seq` backends accept a **preloaded** model: pass
+//! `--artifact <path>.bwa` (written by `bwa quantize --out`) and cold
+//! start becomes an artifact load ([`crate::artifact::load`]) instead of
+//! a full re-quantization from the FP checkpoint; the cold-start line in
+//! the serve output records which path this process paid and how long it
+//! took.
+//!
 //! Reports latency percentiles, request and token throughput, and batch
 //! statistics; see `docs/SERVING.md` for how to read the report.
 
@@ -74,7 +81,8 @@ static SERVE_SPEC: Spec = Spec {
     about: "closed-loop serving benchmark over the batching coordinator",
     flags: &[
         ("model", "artifacts/models/llama1-7b.bin", "checkpoint path"),
-        ("artifacts", "artifacts", "AOT artifacts directory"),
+        ("artifact", "", "compiled .bwa artifact — bwa/bwa-seq load it instead of re-quantizing"),
+        ("artifacts", "artifacts", "AOT artifacts directory (pjrt backend)"),
         ("backend", "pjrt", "pjrt | native | bwa | bwa-seq"),
         ("requests", "64", "total requests"),
         ("clients", "4", "concurrent client threads"),
@@ -116,34 +124,82 @@ pub fn cmd_serve(args: &Args) -> Result<(), String> {
     };
     let seed = args.u64_or("seed", 7).map_err(|e| e.to_string())?;
 
-    let ck = Checkpoint::load(Path::new(model_path)).map_err(|e| e.to_string())?;
+    let model_path = model_path.to_string();
+    let artifact_path = args.str_or("artifact", "").to_string();
     let artifacts_dir = args.str_or("artifacts", "artifacts").to_string();
     let backend_kind = backend_kind.to_string();
 
-    // PJRT handles are not Send, so the backend is constructed inside the
-    // batcher thread via this factory.
+    // Cold start happens here, before the workload clock: either load a
+    // compiled artifact (quantize once, serve many) or rebuild the model
+    // from the FP checkpoint — the report line records which path this
+    // process paid. The PJRT backend stays factory-constructed on the
+    // batcher thread (its handles are not Send).
+    let t0 = Instant::now();
+    let prepared: Option<Transformer> = match backend_kind.as_str() {
+        "pjrt" => None,
+        "native" => {
+            let ck = Checkpoint::load(Path::new(&model_path)).map_err(|e| e.to_string())?;
+            let m = Transformer::fp_from_checkpoint(&ck).map_err(|e| e.to_string())?;
+            println!("cold start: FP checkpoint load {:.2}s", t0.elapsed().as_secs_f64());
+            Some(m)
+        }
+        "bwa" | "bwa-seq" => {
+            if artifact_path.is_empty() {
+                let ck = Checkpoint::load(Path::new(&model_path)).map_err(|e| e.to_string())?;
+                let m = quantize_serving_model(&ck, seed);
+                println!(
+                    "cold start: re-quantized from checkpoint in {:.2}s (quantize once with \
+                     `bwa quantize --out`, then pass --artifact)",
+                    t0.elapsed().as_secs_f64()
+                );
+                Some(m)
+            } else {
+                let art =
+                    crate::artifact::load(Path::new(&artifact_path)).map_err(|e| e.to_string())?;
+                println!(
+                    "cold start: artifact load {:.2}s ({artifact_path}, method {})",
+                    t0.elapsed().as_secs_f64(),
+                    art.meta.method
+                );
+                Some(art.model)
+            }
+        }
+        other => return Err(format!("unknown backend '{other}'")),
+    };
+
+    // Reject an oversized workload up front (the engine and model assert
+    // the same bound, but mid-serve that panics the batcher thread).
+    if let Some(m) = &prepared {
+        let need = prompt_len + gen.saturating_sub(1);
+        if need > m.cfg.max_seq {
+            return Err(format!(
+                "prompt-len {prompt_len} + gen {gen} needs {need} positions, but model '{}' \
+                 supports max_seq {}",
+                m.cfg.name, m.cfg.max_seq
+            ));
+        }
+    }
+
     let make_backend = move || -> Box<dyn Backend> {
-        let quantized = |seed: u64| quantize_serving_model(&ck, seed);
         match backend_kind.as_str() {
             "pjrt" => {
-                let session = crate::runtime::TransformerSession::load(
-                    Path::new(&artifacts_dir),
-                    &ck,
-                )
-                .expect("load PJRT artifact (run `make artifacts`)");
+                let ck = Checkpoint::load(Path::new(&model_path)).expect("checkpoint");
+                let session =
+                    crate::runtime::TransformerSession::load(Path::new(&artifacts_dir), &ck)
+                        .expect("load PJRT artifact (run `make artifacts`)");
                 Box::new(PjrtBackend { session })
             }
             "native" => Box::new(NativeBackend {
-                model: Transformer::fp_from_checkpoint(&ck).expect("checkpoint"),
+                model: prepared.expect("prepared model"),
                 label: "native-fp".into(),
             }),
             "bwa" => Box::new(ParallelBackend::new(
-                quantized(seed),
+                prepared.expect("prepared model"),
                 workers,
                 "native-bwa W(1+1)A(1x4)",
             )),
             "bwa-seq" => Box::new(NativeBackend {
-                model: quantized(seed),
+                model: prepared.expect("prepared model"),
                 label: "native-bwa W(1+1)A(1x4) seq".into(),
             }),
             other => panic!("unknown backend '{other}'"),
@@ -157,12 +213,14 @@ pub fn cmd_serve(args: &Args) -> Result<(), String> {
 
 /// Quantize a checkpoint for serving with the paper's recipe (wiki
 /// calibration windows, W(1+1)A(1×4), INT4 KV cache) — shared by
-/// `bwa serve` and the serving example so both run the same model.
+/// `bwa serve` and the serving example so both run the same model. Runs
+/// the parallel pipeline over all cores (bit-identical to sequential).
 pub fn quantize_serving_model(ck: &Checkpoint, seed: u64) -> Transformer {
     let train = crate::data::corpus::train_split(&CorpusSpec::wiki(), 100_000);
     let calib = crate::data::calibration_windows(&train, 16, 96, seed);
     let q = crate::quant::BwaQuantizer::paper();
-    crate::model::quantize_model(ck, &q, &calib, Some(4)).expect("quantize")
+    let threads = crate::util::pool::default_threads();
+    crate::model::quantize_model_par(ck, &q, &calib, Some(4), threads).expect("quantize")
 }
 
 /// Closed-loop workload: `clients` threads each submit requests

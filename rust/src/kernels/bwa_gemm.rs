@@ -273,10 +273,17 @@ impl BwaGemm {
         let out_f = self.lin.out_features;
         let rows_per = acts.tokens.div_ceil(threads);
         std::thread::scope(|s| {
-            for (ci, chunk) in y.data.chunks_mut(rows_per * out_f).enumerate() {
+            let mut chunks = y.data.chunks_mut(rows_per * out_f).enumerate();
+            // The calling thread would otherwise idle in scope(); it takes
+            // the first span itself, saving one spawn/join per call.
+            let first = chunks.next();
+            for (ci, chunk) in chunks {
                 let t_lo = ci * rows_per;
                 let t_hi = (t_lo + rows_per).min(acts.tokens);
                 s.spawn(move || self.gemm_packed_span(acts, t_lo, t_hi, chunk));
+            }
+            if let Some((_, chunk)) = first {
+                self.gemm_packed_span(acts, 0, rows_per.min(acts.tokens), chunk);
             }
         });
     }

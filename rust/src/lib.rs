@@ -33,6 +33,18 @@
 //! `Transformer::forward_reference` for parity tests and the
 //! fake-vs-packed model bench.
 //!
+//! ## Quantize once, serve many
+//!
+//! [`artifact`] is the quantized-artifact store: `bwa quantize --out`
+//! compiles a checkpoint into a versioned, checksummed on-disk format
+//! (packed bit planes, group scales, activation-quantizer state,
+//! embeddings/norms) and `bwa serve --artifact` / `bwa eval --artifact`
+//! reconstruct a serving-ready [`model::Transformer`] from it —
+//! bit-identical to the freshly quantized model (test-pinned) — without
+//! re-running calibration. [`model::quantize_model_par`] fans the PTQ
+//! pipeline's independent projections and calibration sequences across a
+//! worker pool so the quantize step itself uses every core.
+//!
 //! ## Serving
 //!
 //! [`coordinator`] stacks a dynamic batcher and a parallel batched
@@ -58,6 +70,7 @@
 #![allow(clippy::needless_range_loop)]
 #![allow(clippy::too_many_arguments)]
 
+pub mod artifact;
 pub mod baselines;
 pub mod coordinator;
 pub mod data;

@@ -3,19 +3,24 @@
 //! Subcommands:
 //! - `datagen`  — write the synthetic corpora to artifacts/data/ (consumed
 //!                by the JAX trainer; single source of truth is Rust).
-//! - `quantize` — quantize a trained checkpoint with any method and
-//!                report layer statistics.
-//! - `eval`     — perplexity + zero-shot evaluation of a (model, method).
+//! - `genckpt`  — write a random-init checkpoint (smokes and benches).
+//! - `quantize` — quantize a trained checkpoint with any method (in
+//!                parallel, `--jobs`), report layer statistics, and
+//!                optionally compile a serving artifact (`--out`).
+//! - `eval`     — perplexity + zero-shot evaluation of a (model, method);
+//!                `--artifact` evaluates a compiled artifact directly.
 //! - `bench`    — regenerate a paper table/figure (see DESIGN.md §5).
-//! - `serve`    — run the batching coordinator over the PJRT runtime.
+//! - `serve`    — run the batching coordinator; `--artifact` serves a
+//!                compiled artifact without re-quantizing.
 
 use bwa_llm::baselines;
 use bwa_llm::data::corpus::CorpusSpec;
 use bwa_llm::eval::{evaluate, EvalBudget};
 use bwa_llm::model::checkpoint::Checkpoint;
-use bwa_llm::model::{quantize_model, Transformer};
+use bwa_llm::model::config::ModelConfig;
+use bwa_llm::model::{quantize_model_par, Transformer};
 use bwa_llm::util::cli::{Args, Spec};
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -28,6 +33,7 @@ fn main() {
     };
     let code = match args.subcommand.as_str() {
         "datagen" => cmd_datagen(&args),
+        "genckpt" => cmd_genckpt(&args),
         "quantize" => cmd_quantize(&args),
         "eval" => cmd_eval(&args),
         "bench" => bwa_llm::exps::cmd_bench(&args),
@@ -55,11 +61,18 @@ fn print_help() {
         "bwa — W(1+1)A(1x4) post-training quantization for LLMs (ACL Findings 2025 repro)\n\n\
          subcommands:\n\
          \x20 datagen   --out artifacts/data [--tokens N]\n\
-         \x20 quantize  --model artifacts/models/tiny.bin --method bwa\n\
-         \x20 eval      --model artifacts/models/tiny.bin --method bwa [--quick]\n\
+         \x20 genckpt   --config tiny|tiny-13b --out artifacts/models/tiny.bin [--seed N]\n\
+         \x20 quantize  --model artifacts/models/tiny.bin --method bwa [--jobs N]\n\
+         \x20           [--out artifacts/quant/tiny.bwa]\n\
+         \x20 eval      --model artifacts/models/tiny.bin --method bwa [--artifact f.bwa] [--quick]\n\
          \x20 bench     --exp fig1|table1|table2|table3|table4|table5|table6|table7|table9|fig3|fig4 [--quick]\n\
-         \x20 serve     --model artifacts/transformer_fp.hlo.txt [--requests N] [--batch B]\n\n\
-         methods: {}",
+         \x20 serve     [--model ckpt.bin | --artifact f.bwa] [--backend pjrt|native|bwa|bwa-seq]\n\
+         \x20           [--requests N] [--clients C] [--prompt-len P] [--gen G] [--batch B]\n\
+         \x20           [--wait-us U] [--workers W] [--seed S]\n\n\
+         methods: {}\n\n\
+         quantize once, serve many: `bwa quantize --out m.bwa` compiles the model to a\n\
+         checksummed artifact; `bwa serve --artifact m.bwa` / `bwa eval --artifact m.bwa`\n\
+         then start without re-running calibration.",
         baselines::METHOD_NAMES.join(", ")
     );
 }
@@ -111,26 +124,69 @@ fn cmd_datagen(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+static GENCKPT_SPEC: Spec = Spec {
+    name: "genckpt",
+    about: "write a random-init checkpoint (smokes/benches; trained weights come from `make artifacts`)",
+    flags: &[
+        ("config", "tiny", "model config: tiny | tiny-13b"),
+        ("out", "artifacts/models/tiny.bin", "output checkpoint path"),
+        ("seed", "1", "init seed"),
+    ],
+    switches: &[],
+};
+
+fn cmd_genckpt(args: &Args) -> Result<(), String> {
+    args.validate(&GENCKPT_SPEC).map_err(|e| e.to_string())?;
+    if args.wants_help() {
+        println!("{}", GENCKPT_SPEC.help());
+        return Ok(());
+    }
+    let cfg = match args.str_or("config", "tiny") {
+        "tiny" => ModelConfig::tiny(),
+        "tiny-13b" => ModelConfig::tiny_13b(),
+        other => return Err(format!("unknown config '{other}' (have: tiny, tiny-13b)")),
+    };
+    let out = PathBuf::from(args.str_or("out", "artifacts/models/tiny.bin"));
+    if let Some(dir) = out.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir).map_err(|e| e.to_string())?;
+        }
+    }
+    let seed = args.u64_or("seed", 1).map_err(|e| e.to_string())?;
+    Checkpoint::random(&cfg, seed).save(&out).map_err(|e| e.to_string())?;
+    println!(
+        "wrote random-init {} checkpoint to {} ({} params)",
+        cfg.name,
+        out.display(),
+        cfg.param_count()
+    );
+    Ok(())
+}
+
 static QUANTIZE_SPEC: Spec = Spec {
     name: "quantize",
-    about: "quantize a checkpoint and print layer statistics",
+    about: "quantize a checkpoint (in parallel), print layer statistics, optionally compile an artifact",
     flags: &[
         ("model", "artifacts/models/tiny.bin", "checkpoint path"),
         ("method", "bwa", "quantization method (see help for list)"),
         ("calib-seqs", "16", "calibration sequences"),
         ("calib-len", "96", "calibration sequence length"),
         ("seed", "17", "calibration sampling seed"),
+        ("jobs", "0", "quantization worker threads (0 = all cores)"),
+        ("out", "", "write a compiled serving artifact (.bwa) here"),
     ],
     switches: &[],
 };
 
-/// Shared model+method loading used by quantize/eval.
+/// Shared model+method loading used by quantize/eval. `jobs` is the
+/// parallel-quantization worker count (0 = all cores).
 pub fn load_quantized(
     model_path: &str,
     method: &str,
     calib_seqs: usize,
     calib_len: usize,
     seed: u64,
+    jobs: usize,
 ) -> Result<(Checkpoint, Transformer), String> {
     let ck = Checkpoint::load(&PathBuf::from(model_path)).map_err(|e| e.to_string())?;
     let q = baselines::by_name(method)
@@ -138,7 +194,13 @@ pub fn load_quantized(
     let train = bwa_llm::data::corpus::train_split(&CorpusSpec::wiki(), 200_000);
     let calib = bwa_llm::data::calibration_windows(&train, calib_seqs, calib_len, seed);
     let kv = if method == "fp16" { None } else { Some(4) };
-    let model = quantize_model(&ck, q.as_ref(), &calib, kv).map_err(|e| e.to_string())?;
+    let threads = if jobs == 0 {
+        bwa_llm::util::pool::default_threads()
+    } else {
+        jobs
+    };
+    let model =
+        quantize_model_par(&ck, q.as_ref(), &calib, kv, threads).map_err(|e| e.to_string())?;
     Ok((ck, model))
 }
 
@@ -150,6 +212,7 @@ fn cmd_quantize(args: &Args) -> Result<(), String> {
     }
     let model_path = args.str_or("model", "artifacts/models/tiny.bin");
     let method = args.str_or("method", "bwa");
+    let jobs = args.usize_or("jobs", 0).map_err(|e| e.to_string())?;
     let t0 = std::time::Instant::now();
     let (ck, model) = load_quantized(
         model_path,
@@ -157,6 +220,7 @@ fn cmd_quantize(args: &Args) -> Result<(), String> {
         args.usize_or("calib-seqs", 16).map_err(|e| e.to_string())?,
         args.usize_or("calib-len", 96).map_err(|e| e.to_string())?,
         args.u64_or("seed", 17).map_err(|e| e.to_string())?,
+        jobs,
     )?;
     println!(
         "quantized {} with {method} in {:.1}s",
@@ -171,6 +235,16 @@ fn cmd_quantize(args: &Args) -> Result<(), String> {
         "  compression:       {:.2}x vs FP16",
         fp.bytes() as f64 / model.bytes() as f64
     );
+    let out = args.str_or("out", "");
+    if !out.is_empty() {
+        let t0 = std::time::Instant::now();
+        bwa_llm::artifact::save(&model, method, Path::new(out)).map_err(|e| e.to_string())?;
+        let bytes = std::fs::metadata(out).map(|m| m.len()).unwrap_or(0);
+        println!(
+            "  artifact:          {out} ({bytes} bytes, {:.2}s) — load with serve/eval --artifact",
+            t0.elapsed().as_secs_f64()
+        );
+    }
     Ok(())
 }
 
@@ -180,6 +254,7 @@ static EVAL_SPEC: Spec = Spec {
     flags: &[
         ("model", "artifacts/models/tiny.bin", "checkpoint path"),
         ("method", "fp16", "quantization method"),
+        ("artifact", "", "compiled .bwa artifact (skips checkpoint load + calibration)"),
         ("seed", "17", "seed"),
     ],
     switches: &[("quick", "small evaluation budget")],
@@ -193,16 +268,29 @@ fn cmd_eval(args: &Args) -> Result<(), String> {
     }
     let model_path = args.str_or("model", "artifacts/models/tiny.bin");
     let method = args.str_or("method", "fp16");
+    let artifact_path = args.str_or("artifact", "");
     let seed = args.u64_or("seed", 17).map_err(|e| e.to_string())?;
     let budget = if args.switch("quick") {
         EvalBudget::quick()
     } else {
         EvalBudget::standard()
     };
-    let (_, model) = load_quantized(model_path, method, 16, 96, seed)?;
-    let r = evaluate(&model, method, &budget, seed);
+    let (model, method, source) = if artifact_path.is_empty() {
+        let (_, model) = load_quantized(model_path, method, 16, 96, seed, 0)?;
+        (model, method.to_string(), model_path.to_string())
+    } else {
+        let t0 = std::time::Instant::now();
+        let art = bwa_llm::artifact::load(Path::new(artifact_path)).map_err(|e| e.to_string())?;
+        println!(
+            "loaded artifact {artifact_path} in {:.2}s (method {}, no calibration run)",
+            t0.elapsed().as_secs_f64(),
+            art.meta.method
+        );
+        (art.model, art.meta.method, artifact_path.to_string())
+    };
+    let r = evaluate(&model, &method, &budget, seed);
     let mut t = bwa_llm::eval::report::Table::new(
-        &format!("eval {model_path} / {method}"),
+        &format!("eval {source} / {method}"),
         &["Wiki", "PTB", "C4", "PIQA*", "ARC-E*", "ARC-C*", "BoolQ*", "Hella*", "Wino*", "Avg"],
     );
     let mut cells: Vec<f64> = r.ppl.iter().map(|(_, p)| *p).collect();

@@ -14,7 +14,7 @@ use crate::model::config::ModelConfig;
 use crate::tensor::Tensor;
 use crate::util::json::Json;
 use std::collections::BTreeMap;
-use std::io::{Read, Write};
+use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
 pub const MAGIC: &[u8; 8] = b"BWACKPT1";
@@ -61,7 +61,9 @@ impl Checkpoint {
         ])
         .to_string();
 
-        let mut f = std::fs::File::create(path).map_err(|e| err(e.to_string()))?;
+        // Buffered writer: the per-tensor write_all calls below would
+        // otherwise each hit the file directly.
+        let mut f = BufWriter::new(std::fs::File::create(path).map_err(|e| err(e.to_string()))?);
         f.write_all(MAGIC).map_err(|e| err(e.to_string()))?;
         f.write_all(&(header.len() as u32).to_le_bytes())
             .map_err(|e| err(e.to_string()))?;
@@ -70,12 +72,13 @@ impl Checkpoint {
             let bytes: Vec<u8> = t.data.iter().flat_map(|x| x.to_le_bytes()).collect();
             f.write_all(&bytes).map_err(|e| err(e.to_string()))?;
         }
-        Ok(())
+        f.flush().map_err(|e| err(e.to_string()))
     }
 
     pub fn load(path: &Path) -> Result<Checkpoint, CkptError> {
-        let mut f = std::fs::File::open(path)
+        let file = std::fs::File::open(path)
             .map_err(|e| err(format!("open {}: {e}", path.display())))?;
+        let mut f = BufReader::new(file);
         let mut magic = [0u8; 8];
         f.read_exact(&mut magic).map_err(|e| err(e.to_string()))?;
         if &magic != MAGIC {

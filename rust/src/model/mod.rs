@@ -38,6 +38,7 @@ use crate::quant::{
     FpLinear, LayerCtx, LinearExec, LinearKind, QuantError, QuantLinear, Quantizer,
 };
 use crate::tensor::Tensor;
+use crate::util::pool::parallel_map;
 use crate::util::rng::Rng;
 use crate::util::softmax_inplace;
 
@@ -913,6 +914,73 @@ pub fn quantize_model(
     calib_seqs: &[Vec<u16>],
     kv_bits: Option<u32>,
 ) -> Result<Transformer, ModelError> {
+    quantize_model_with(ck, quantizer, calib_seqs, kv_bits, 1)
+}
+
+/// Parallel [`quantize_model`]: the block-by-block schedule is inherently
+/// sequential (each block calibrates on the previous blocks' quantized
+/// activations), but *within* a block the projections fed by one tensor
+/// (wq/wk/wv; gate/up) and the per-sequence activation propagation are
+/// independent — they fan out across up to `threads` workers
+/// ([`crate::util::pool::parallel_map`]). Every work item is a pure
+/// function of its inputs, so the output is **bit-identical** to the
+/// sequential pipeline (test-pinned). This is the engine behind
+/// `bwa quantize --jobs`.
+pub fn quantize_model_par(
+    ck: &Checkpoint,
+    quantizer: &dyn Quantizer,
+    calib_seqs: &[Vec<u16>],
+    kv_bits: Option<u32>,
+    threads: usize,
+) -> Result<Transformer, ModelError> {
+    quantize_model_with(ck, quantizer, calib_seqs, kv_bits, threads.max(1))
+}
+
+/// Quantize + compile a group of projections that share one calibration
+/// tensor, fanned across `threads` workers. Results (and errors) come
+/// back in spec order, so the parallel path reports the same first
+/// failure the sequential path would.
+fn quantize_group(
+    ck: &Checkpoint,
+    quantizer: &dyn Quantizer,
+    block: usize,
+    specs: &[(String, LinearKind)],
+    calib: &Tensor,
+    threads: usize,
+) -> Result<Vec<CompiledLinear>, ModelError> {
+    parallel_map(specs.len(), threads, |i| {
+        let (name, kind) = &specs[i];
+        let ctx = LayerCtx::new(block, name.clone(), *kind);
+        ck.get(name)
+            .map_err(ModelError::from)
+            .and_then(|w| {
+                quantizer
+                    .quantize_linear(&ctx, w, calib)
+                    .map_err(ModelError::from)
+            })
+            .map(CompiledLinear::new)
+    })
+    .into_iter()
+    .collect()
+}
+
+/// Order-preserving parallel map over calibration sequences. Each
+/// sequence is processed independently, so the result is element-wise
+/// identical to a sequential `map`.
+fn map_seqs<F>(xs: &[Tensor], threads: usize, f: F) -> Vec<Tensor>
+where
+    F: Fn(&Tensor) -> Tensor + Sync,
+{
+    parallel_map(xs.len(), threads, |i| f(&xs[i]))
+}
+
+fn quantize_model_with(
+    ck: &Checkpoint,
+    quantizer: &dyn Quantizer,
+    calib_seqs: &[Vec<u16>],
+    kv_bits: Option<u32>,
+    threads: usize,
+) -> Result<Transformer, ModelError> {
     let cfg = ck.config.clone();
     let d = cfg.d_model;
     let eps = cfg.rmsnorm_eps;
@@ -956,23 +1024,27 @@ pub fn quantize_model(
         let attn_norm = ck.get(&format!("layers.{l}.attn_norm"))?.data.clone();
         let mlp_norm = ck.get(&format!("layers.{l}.mlp_norm"))?.data.clone();
 
-        let quant_lin =
-            |name: String, kind: LinearKind, calib: &Tensor| -> Result<CompiledLinear, ModelError> {
-                let ctx = LayerCtx::new(l, name.clone(), kind);
-                let w = ck.get(&name)?;
-                Ok(CompiledLinear::new(quantizer.quantize_linear(&ctx, w, calib)?))
-            };
-
-        // --- attention projections ---
-        let h_seqs: Vec<Tensor> = xs.iter().map(|x| norm_seq(x, &attn_norm)).collect();
+        // --- attention projections (independent given h_cat: fan out) ---
+        let h_seqs = map_seqs(&xs, threads, |x| norm_seq(x, &attn_norm));
         let h_cat = concat(&h_seqs);
-        let wq = quant_lin(format!("layers.{l}.wq"), LinearKind::Query, &h_cat)?;
-        let wk = quant_lin(format!("layers.{l}.wk"), LinearKind::Key, &h_cat)?;
-        let wv = quant_lin(format!("layers.{l}.wv"), LinearKind::Value, &h_cat)?;
+        let mut qkv = quantize_group(
+            ck,
+            quantizer,
+            l,
+            &[
+                (format!("layers.{l}.wq"), LinearKind::Query),
+                (format!("layers.{l}.wk"), LinearKind::Key),
+                (format!("layers.{l}.wv"), LinearKind::Value),
+            ],
+            &h_cat,
+            threads,
+        )?;
+        let wv = qkv.pop().expect("wv");
+        let wk = qkv.pop().expect("wk");
+        let wq = qkv.pop().expect("wq");
 
         // run attention per sequence with quantized q/k/v (shared prepare)
-        let mut attn_outs = Vec::new();
-        for h in &h_seqs {
+        let attn_outs = map_seqs(&h_seqs, threads, |h| {
             let (t_len, _) = h.dims2();
             let mut q = Tensor::zeros(&[t_len, d]);
             let mut k = Tensor::zeros(&[t_len, d]);
@@ -992,27 +1064,42 @@ pub fn quantize_model(
                     Kv4Store::fake_quantize(v.row_mut(t));
                 }
             }
-            attn_outs.push(causal_attention(&q, &k, &v, cfg.n_heads));
-        }
-        let wo = quant_lin(
-            format!("layers.{l}.wo"),
-            LinearKind::AttnOut,
+            causal_attention(&q, &k, &v, cfg.n_heads)
+        });
+        let wo = quantize_group(
+            ck,
+            quantizer,
+            l,
+            &[(format!("layers.{l}.wo"), LinearKind::AttnOut)],
             &concat(&attn_outs),
-        )?;
-        for (x, a) in xs.iter_mut().zip(attn_outs.iter()) {
-            let o = wo.forward(a);
+            threads,
+        )?
+        .pop()
+        .expect("wo");
+        let os = map_seqs(&attn_outs, threads, |a| wo.forward(a));
+        for (x, o) in xs.iter_mut().zip(os.iter()) {
             for i in 0..x.data.len() {
                 x.data[i] += o.data[i];
             }
         }
 
-        // --- MLP ---
-        let h_seqs: Vec<Tensor> = xs.iter().map(|x| norm_seq(x, &mlp_norm)).collect();
+        // --- MLP (gate/up independent given h_cat: fan out) ---
+        let h_seqs = map_seqs(&xs, threads, |x| norm_seq(x, &mlp_norm));
         let h_cat = concat(&h_seqs);
-        let gate = quant_lin(format!("layers.{l}.gate"), LinearKind::MlpGate, &h_cat)?;
-        let up = quant_lin(format!("layers.{l}.up"), LinearKind::MlpUp, &h_cat)?;
-        let mut acts_out = Vec::new();
-        for h in &h_seqs {
+        let mut gu = quantize_group(
+            ck,
+            quantizer,
+            l,
+            &[
+                (format!("layers.{l}.gate"), LinearKind::MlpGate),
+                (format!("layers.{l}.up"), LinearKind::MlpUp),
+            ],
+            &h_cat,
+            threads,
+        )?;
+        let up = gu.pop().expect("up");
+        let gate = gu.pop().expect("gate");
+        let acts_out = map_seqs(&h_seqs, threads, |h| {
             let (t_len, _) = h.dims2();
             let mut g = Tensor::zeros(&[t_len, cfg.d_ff]);
             let mut u = Tensor::zeros(&[t_len, cfg.d_ff]);
@@ -1024,15 +1111,20 @@ pub fn quantize_model(
             for i in 0..g.data.len() {
                 g.data[i] = silu(g.data[i]) * u.data[i];
             }
-            acts_out.push(g);
-        }
-        let down = quant_lin(
-            format!("layers.{l}.down"),
-            LinearKind::MlpDown,
+            g
+        });
+        let down = quantize_group(
+            ck,
+            quantizer,
+            l,
+            &[(format!("layers.{l}.down"), LinearKind::MlpDown)],
             &concat(&acts_out),
-        )?;
-        for (x, a) in xs.iter_mut().zip(acts_out.iter()) {
-            let dwn = down.forward(a);
+            threads,
+        )?
+        .pop()
+        .expect("down");
+        let ds = map_seqs(&acts_out, threads, |a| down.forward(a));
+        for (x, dwn) in xs.iter_mut().zip(ds.iter()) {
             for i in 0..x.data.len() {
                 x.data[i] += dwn.data[i];
             }
@@ -1332,6 +1424,51 @@ mod tests {
         for (a, b) in indiv.iter().zip(&batch) {
             assert_eq!(a.pos, b.pos);
         }
+    }
+
+    /// The parallel PTQ pipeline is bit-identical to the sequential one:
+    /// same packed bits, same affine params, same dequantized weights,
+    /// same logits — parallelism only reorders independent work items.
+    #[test]
+    fn quantize_model_par_matches_sequential_bitwise() {
+        let cfg = small_cfg();
+        let ck = Checkpoint::random(&cfg, 21);
+        let mut rng = Rng::new(22);
+        let calib: Vec<Vec<u16>> = (0..4)
+            .map(|_| (0..32).map(|_| rng.below(64) as u16).collect())
+            .collect();
+        let seq = quantize_model(&ck, &BwaQuantizer::paper(), &calib, Some(4)).unwrap();
+        let par = quantize_model_par(&ck, &BwaQuantizer::paper(), &calib, Some(4), 4).unwrap();
+        for (a, b) in seq.blocks.iter().zip(par.blocks.iter()) {
+            for (la, lb) in [
+                (&a.attn.wq, &b.attn.wq),
+                (&a.attn.wk, &b.attn.wk),
+                (&a.attn.wv, &b.attn.wv),
+                (&a.attn.wo, &b.attn.wo),
+                (&a.mlp.gate, &b.mlp.gate),
+                (&a.mlp.up, &b.mlp.up),
+                (&a.mlp.down, &b.mlp.down),
+            ] {
+                let qa = la
+                    .quant
+                    .as_any()
+                    .downcast_ref::<crate::quant::binarize::BwaLinear>()
+                    .unwrap();
+                let qb = lb
+                    .quant
+                    .as_any()
+                    .downcast_ref::<crate::quant::binarize::BwaLinear>()
+                    .unwrap();
+                assert_eq!(qa.perm, qb.perm);
+                assert_eq!(qa.qbits.words, qb.qbits.words);
+                assert_eq!(qa.mbits.words, qb.mbits.words);
+                assert_eq!(qa.alpha, qb.alpha);
+                assert_eq!(qa.beta, qb.beta);
+                assert_eq!(qa.w_hat.data, qb.w_hat.data);
+            }
+        }
+        let tokens: Vec<u16> = (0..12).map(|_| rng.below(64) as u16).collect();
+        assert_eq!(seq.forward(&tokens).data, par.forward(&tokens).data);
     }
 
     #[test]

@@ -80,6 +80,8 @@ pub struct BwaLinear {
     pub group_size: usize,
     /// Dequantized weights [out, in] in *permuted* channel order — the
     /// fake-quant math path (bit path must agree exactly; see kernels).
+    /// Fully redundant with the packed state: bit-identical to
+    /// [`Self::reconstruct_w_hat`], so the artifact store never ships it.
     pub w_hat: Tensor,
     /// Packed sign bits q (out × n_norm).
     pub qbits: PackedBits,
@@ -125,6 +127,30 @@ impl BwaLinear {
             + self.mbits.bytes()
             + (self.alpha.len() + self.beta.len()) * 2 // fp16
             + self.outlier.bytes()
+    }
+
+    /// Recompute the dense dequantized weights from bits + affine params
+    /// + the INT8 outlier block — the exact f32 arithmetic `quantize_bwa`
+    /// uses to fill `w_hat`, so the result is **bit-identical** to the
+    /// stored tensor (test-pinned). The artifact codec rebuilds `w_hat`
+    /// with this on load instead of serializing the dense tensor.
+    pub fn reconstruct_w_hat(&self) -> Tensor {
+        let ng = self.n_groups();
+        let mut w_hat = Tensor::zeros(&[self.out_features, self.in_features]);
+        for j in 0..self.out_features {
+            let row = w_hat.row_mut(j);
+            for i in 0..self.n_norm {
+                let g = i / self.group_size;
+                let s = self.mbits.get(j, i) as usize;
+                let sign = if self.qbits.get(j, i) { 1.0f32 } else { -1.0 };
+                let idx = (j * ng + g) * 2 + s;
+                row[i] = self.alpha[idx] * sign + self.beta[idx];
+            }
+            for c in 0..(self.in_features - self.n_norm) {
+                row[self.n_norm + c] = self.outlier.dequant(j, c);
+            }
+        }
+        w_hat
     }
 
     /// Fake-quant forward: y = Ŵ·x̂ with activations quantized per token
@@ -259,10 +285,17 @@ pub fn quantize_bwa(w: &Tensor, calib: &Tensor, cfg: &BwaConfig) -> BwaLinear {
                 alpha[(j * ng + g) * 2 + s] = a2[s] as f32;
                 beta[(j * ng + g) * 2 + s] = b2[s] as f32;
             }
-            let dq = gq.dequantize();
+            // Dequantize through the *stored f32* affine params (not the
+            // f64 centers): `w_hat` must be an exact function of
+            // (bits, alpha, beta) so [`BwaLinear::reconstruct_w_hat`] —
+            // and therefore the artifact codec, which ships bits instead
+            // of dense weights — reproduces it bit for bit.
             let wh = w_hat.row_mut(j);
             for i in 0..b {
-                wh[block_start + i] = dq[i] as f32;
+                let s = s_bits[i] as usize;
+                let sign = if q_bits[i] { 1.0f32 } else { -1.0 };
+                let idx = (j * ng + g) * 2 + s;
+                wh[block_start + i] = alpha[idx] * sign + beta[idx];
                 if s_bits[i] {
                     mbits.set(j, block_start + i, true);
                 }
@@ -453,6 +486,26 @@ mod tests {
                 );
             }
         }
+    }
+
+    /// The artifact-store contract: `w_hat` is an exact function of the
+    /// packed state, so rebuilding it from bits + affine + outliers is
+    /// bit-identical — with and without an outlier region.
+    #[test]
+    fn reconstruct_w_hat_is_bit_exact() {
+        let mut rng = Rng::new(12);
+        let (w, x) = setup(&mut rng, 16, 256, 48);
+        let q = quantize_bwa(&w, &x, &BwaConfig::default());
+        assert_eq!(q.reconstruct_w_hat().data, q.w_hat.data);
+        let q0 = quantize_bwa(
+            &w,
+            &x,
+            &BwaConfig {
+                outlier_groups: 0,
+                ..BwaConfig::default()
+            },
+        );
+        assert_eq!(q0.reconstruct_w_hat().data, q0.w_hat.data);
     }
 
     #[test]

@@ -150,6 +150,10 @@ pub trait QuantLinear: Send + Sync {
     /// For the paper's method this is the dense fake-quant math over the
     /// dequantized `w_hat`; the serving path goes through [`Self::compile`].
     fn forward(&self, x: &Tensor) -> Tensor;
+    /// Concrete-type access for the artifact codec registry
+    /// ([`crate::artifact::codec`]): codecs downcast the storage form to
+    /// serialize it. Implementations return `self`.
+    fn as_any(&self) -> &dyn std::any::Any;
     /// Effective weight storage bits per element.
     fn weight_bits(&self) -> f64;
     /// Effective activation bits on the layer input.
@@ -348,6 +352,10 @@ impl QuantLinear for FpLinear {
         crate::kernels::dense::sgemm_wt(x, &self.w)
     }
 
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+
     fn weight_bits(&self) -> f64 {
         16.0
     }
@@ -446,6 +454,10 @@ impl Quantizer for BwaQuantizer {
 impl QuantLinear for binarize::BwaLinear {
     fn forward(&self, x: &Tensor) -> Tensor {
         binarize::BwaLinear::forward(self, x)
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
     }
 
     fn weight_bits(&self) -> f64 {

@@ -102,6 +102,29 @@ where
     });
 }
 
+/// Order-preserving fork/join map: returns `[f(0), f(1), .., f(n-1)]`
+/// computed across up to `threads` workers via [`parallel_for`]. Each
+/// slot is written exactly once, so the result is element-wise identical
+/// to a sequential map — the building block for the parallel PTQ
+/// pipeline's fan-outs.
+pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let slots: Mutex<Vec<Option<T>>> = Mutex::new((0..n).map(|_| None).collect());
+    parallel_for(n, threads, |i| {
+        let y = f(i);
+        slots.lock().unwrap()[i] = Some(y);
+    });
+    slots
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|t| t.expect("parallel_map slot filled"))
+        .collect()
+}
+
 /// Default worker count for this host (leaves one core for the main thread
 /// when possible).
 pub fn default_threads() -> usize {
@@ -150,6 +173,14 @@ mod tests {
         for (i, h) in hits.iter().enumerate() {
             assert_eq!(h.load(Ordering::SeqCst), 1, "index {i}");
         }
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let out = parallel_map(97, 4, |i| i * i);
+        assert_eq!(out, (0..97).map(|i| i * i).collect::<Vec<_>>());
+        let empty: Vec<usize> = parallel_map(0, 4, |_| unreachable!());
+        assert!(empty.is_empty());
     }
 
     #[test]

@@ -16,6 +16,19 @@ cargo test -q --lib --bins --tests
 echo "== cargo test --doc =="
 cargo test --doc -q
 
+echo "== artifact e2e smoke (quantize once, serve many) =="
+# Exercises the full artifact path on the tiny model: random checkpoint ->
+# parallel quantize + artifact write -> serve and eval from the artifact
+# alone (no checkpoint or calibration on the load path).
+smoke="$(mktemp -d)"
+trap 'rm -rf "$smoke"' EXIT
+target/release/bwa genckpt --config tiny --out "$smoke/tiny.bin" --seed 7
+target/release/bwa quantize --model "$smoke/tiny.bin" --method bwa \
+  --calib-seqs 4 --calib-len 48 --out "$smoke/tiny.bwa"
+target/release/bwa serve --artifact "$smoke/tiny.bwa" --backend bwa \
+  --requests 4 --clients 2 --prompt-len 12 --gen 2 --batch 4
+target/release/bwa eval --artifact "$smoke/tiny.bwa" --quick
+
 echo "== cargo doc (rustdoc warnings are errors) =="
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 

@@ -254,6 +254,57 @@ fn serve_coordinator_parallel_engine_end_to_end() {
     assert_eq!(stats.latency.len(), 12);
 }
 
+/// Quantize once, serve many — through the whole stack and the disk:
+/// a model is quantized (in parallel), compiled to a `.bwa` artifact,
+/// reloaded with no checkpoint or calibration data in sight, and the
+/// engine serves the *same greedy tokens* from the loaded artifact as
+/// from the original in-memory model.
+#[test]
+fn artifact_roundtrip_serves_identical_tokens() {
+    use bwa_llm::coordinator::batcher::Backend;
+    use bwa_llm::coordinator::ParallelBackend;
+    use bwa_llm::model::config::ModelConfig;
+    use bwa_llm::model::quantize_model_par;
+
+    let cfg = ModelConfig {
+        name: "it-artifact".into(),
+        vocab_size: 512,
+        d_model: 128,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 192,
+        max_seq: 64,
+        rope_theta: 10000.0,
+        rmsnorm_eps: 1e-5,
+    };
+    let ck = Checkpoint::random(&cfg, 29);
+    let calib: Vec<Vec<u16>> = (0..4u16)
+        .map(|s| (0..32u16).map(|t| (s * 37 + t * 11) % 512).collect())
+        .collect();
+    let model = quantize_model_par(&ck, &BwaQuantizer::paper(), &calib, Some(4), 2).unwrap();
+
+    let dir = std::env::temp_dir().join("bwa_it_artifact");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("it.bwa");
+    bwa_llm::artifact::save(&model, "bwa", &path).unwrap();
+    let loaded = bwa_llm::artifact::load(&path).unwrap();
+    assert_eq!(loaded.meta.method, "bwa");
+
+    let prompts: Vec<Vec<u16>> = (0..3u16)
+        .map(|s| (0..10u16).map(|t| (s * 101 + t * 13) % 512).collect())
+        .collect();
+    let seq_refs: Vec<&[u16]> = prompts.iter().map(|p| p.as_slice()).collect();
+    let gens = [4usize, 3, 4];
+    let from_memory = ParallelBackend::new(model, 2, "mem");
+    let from_disk = ParallelBackend::new(loaded.model, 2, "disk");
+    assert_eq!(
+        from_memory.generate_batch(&seq_refs, &gens),
+        from_disk.generate_batch(&seq_refs, &gens),
+        "artifact-loaded model diverged from the quantized model"
+    );
+    std::fs::remove_file(&path).ok();
+}
+
 /// Batcher drain policy under a pre-queued burst: exactly `n` requests
 /// served in ceil(n / max_batch) batches with the correct mean batch
 /// size — nothing dropped, nothing served twice.
