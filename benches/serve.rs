@@ -9,10 +9,18 @@
 //! - `parallel` — `ParallelBackend`, the batched engine (prefill worker
 //!                pool + lockstep KV-cached batched decode).
 //!
+//! A second, **staggered-arrival** workload (clients with think time, so
+//! requests land mid-decode of other requests) then compares the
+//! lockstep engine against the **continuous-batching scheduler**
+//! (`coordinator::scheduler`), recording TTFT/ITL percentiles and the
+//! continuous-over-lockstep throughput under the arrival pattern the
+//! scheduler exists for.
+//!
 //! Results (req/s, generated tok/s, latency percentiles, and the
-//! parallel-over-seq speedup) are printed and recorded into
-//! `BENCH_serve.json` at the repo root so the perf trajectory tracks
-//! end-to-end serving throughput, not just kernel microbenchmarks.
+//! speedups) are printed and recorded into `BENCH_serve.json` at the
+//! repo root so the perf trajectory tracks end-to-end serving
+//! throughput, not just kernel microbenchmarks. Every field is
+//! documented in `docs/SERVING.md`.
 //!
 //! The bench also measures **cold start**: the model is quantized once
 //! (timed, `startup_quantize_s`), compiled into a `.bwa` artifact, and
@@ -21,7 +29,12 @@
 //! path is on the measured route.
 
 use bwa_llm::coordinator::batcher::{Backend, BatcherConfig, BatcherStats};
-use bwa_llm::coordinator::{serve_workload_stats, NativeBackend, ParallelBackend};
+use bwa_llm::coordinator::metrics::SchedulerStats;
+use bwa_llm::coordinator::scheduler::{AdmissionPolicy, SchedulerConfig, TransformerBackend};
+use bwa_llm::coordinator::{
+    serve_continuous_load, serve_lockstep_load, serve_workload_stats, NativeBackend,
+    ParallelBackend, Workload,
+};
 use bwa_llm::model::checkpoint::Checkpoint;
 use bwa_llm::model::config::ModelConfig;
 use bwa_llm::model::{quantize_model, Transformer};
@@ -36,6 +49,10 @@ const PROMPT_LEN: usize = 24;
 const GEN: usize = 8;
 const MAX_BATCH: usize = 8;
 const SEED: u64 = 7;
+/// Think time per staggered client — long enough that arrivals land
+/// mid-decode of other requests, short enough that the pool stays busy.
+const STAGGER_US: u64 = 2500;
+const STAGGER_CLIENTS: usize = 8;
 
 fn quantized(cfg: &ModelConfig, seed: u64) -> Transformer {
     let ck = Checkpoint::random(cfg, seed);
@@ -65,9 +82,10 @@ where
 }
 
 // Throughput comes from the batcher's own serving window
-// (`BatcherStats::tokens_per_s`, clocked from the first drain after the
-// backend is built) so quantization/setup time does not dilute the
-// numbers; `wall_s` keeps the total including setup for context.
+// (`BatcherStats::tokens_per_s`, clocked from batcher-loop start — the
+// backend is already built — to channel close) so quantization/setup
+// time does not dilute the numbers; `wall_s` keeps the total including
+// setup for context.
 fn record(name: &str, stats: &BatcherStats, wall: f64) -> Json {
     Json::obj(vec![
         ("backend", Json::str(name)),
@@ -77,6 +95,32 @@ fn record(name: &str, stats: &BatcherStats, wall: f64) -> Json {
         ("req_per_s", Json::num(stats.throughput_rps)),
         ("tok_per_s", Json::num(stats.tokens_per_s)),
         ("mean_batch", Json::num(stats.mean_batch)),
+        ("p50_latency_us", Json::num(stats.latency.percentile(0.5))),
+        ("p99_latency_us", Json::num(stats.latency.percentile(0.99))),
+    ])
+}
+
+/// Like [`record`] but for the continuous scheduler's token-granular
+/// stats: TTFT/ITL percentiles and slot-pool occupancy on top of the
+/// request-level numbers.
+fn record_continuous(name: &str, stats: &SchedulerStats, wall: f64) -> Json {
+    Json::obj(vec![
+        ("backend", Json::str(name)),
+        ("requests", Json::num(stats.requests as f64)),
+        ("gen_tokens", Json::num(stats.gen_tokens as f64)),
+        ("wall_s", Json::num(wall)),
+        ("req_per_s", Json::num(stats.throughput_rps)),
+        ("tok_per_s", Json::num(stats.tokens_per_s)),
+        ("mean_active", Json::num(stats.mean_active)),
+        ("decode_steps", Json::num(stats.steps as f64)),
+        ("ttft_mean_us", Json::num(stats.ttft.mean())),
+        ("ttft_p50_us", Json::num(stats.ttft.percentile(0.5))),
+        ("ttft_p99_us", Json::num(stats.ttft.percentile(0.99))),
+        ("itl_mean_us", Json::num(stats.itl.mean())),
+        ("itl_p50_us", Json::num(stats.itl.percentile(0.5))),
+        ("itl_p99_us", Json::num(stats.itl.percentile(0.99))),
+        ("queue_wait_p50_us", Json::num(stats.queue_wait.percentile(0.5))),
+        ("queue_wait_p99_us", Json::num(stats.queue_wait.percentile(0.99))),
         ("p50_latency_us", Json::num(stats.latency.percentile(0.5))),
         ("p99_latency_us", Json::num(stats.latency.percentile(0.99))),
     ])
@@ -140,6 +184,73 @@ fn main() {
     let speedup = par_tok_s / seq_tok_s.max(1e-9);
     println!("parallel-engine speedup over per-sequence loop: {speedup:.2}x");
 
+    // --- staggered arrivals: lockstep engine vs continuous scheduler ---
+    // Same artifact-loaded model, same arrival pattern (clients with
+    // think time, so requests land while other requests are mid-decode).
+    // The lockstep engine barriers each wave; the scheduler admits at
+    // step boundaries and retires immediately — TTFT/ITL only exist on
+    // the continuous side because only it has per-token boundaries.
+    let stag = Workload {
+        requests: REQUESTS,
+        clients: STAGGER_CLIENTS,
+        prompt_len: PROMPT_LEN,
+        gen: GEN,
+        stagger: Duration::from_micros(STAGGER_US),
+        seed: SEED,
+    };
+    println!(
+        "== staggered arrivals ({} clients, {STAGGER_US}us think time) ==",
+        stag.clients
+    );
+
+    let path = art_path.clone();
+    let (ls_name, ls_stats, ls_wall) = serve_lockstep_load(
+        move || {
+            let model = bwa_llm::artifact::load(&path).expect("artifact").model;
+            Box::new(ParallelBackend::new(model, workers, "bwa")) as Box<dyn Backend>
+        },
+        &stag,
+        BatcherConfig {
+            max_batch: MAX_BATCH,
+            max_wait: Duration::from_micros(2000),
+        },
+    );
+    println!(
+        "{ls_name:<28} {:>7.2} req/s  {:>8.1} tok/s  p99 latency {:>8.0}us",
+        ls_stats.throughput_rps,
+        ls_stats.tokens_per_s,
+        ls_stats.latency.percentile(0.99),
+    );
+
+    let path = art_path.clone();
+    let (ct_name, ct_stats, ct_wall) = serve_continuous_load(
+        move || {
+            let model = bwa_llm::artifact::load(&path).expect("artifact").model;
+            TransformerBackend::new(model, workers, "bwa")
+        },
+        &stag,
+        SchedulerConfig {
+            max_active: MAX_BATCH,
+            admit: AdmissionPolicy::Eager,
+        },
+    );
+    println!(
+        "{ct_name:<28} {:>7.2} req/s  {:>8.1} tok/s  p99 latency {:>8.0}us",
+        ct_stats.throughput_rps,
+        ct_stats.tokens_per_s,
+        ct_stats.latency.percentile(0.99),
+    );
+    println!(
+        "  ttft p50 {:.0}us p99 {:.0}us | itl p50 {:.0}us p99 {:.0}us | mean active {:.2}",
+        ct_stats.ttft.percentile(0.5),
+        ct_stats.ttft.percentile(0.99),
+        ct_stats.itl.percentile(0.5),
+        ct_stats.itl.percentile(0.99),
+        ct_stats.mean_active,
+    );
+    let speedup_cont = ct_stats.tokens_per_s / ls_stats.tokens_per_s.max(1e-9);
+    println!("continuous-over-lockstep speedup (staggered arrivals): {speedup_cont:.2}x");
+
     let json = Json::obj(vec![
         ("model", Json::str(cfg.name.as_str())),
         ("params", Json::num(cfg.param_count() as f64)),
@@ -154,6 +265,17 @@ fn main() {
         ("speedup_tok_per_s", Json::num(speedup)),
         ("startup_quantize_s", Json::num(startup_quantize_s)),
         ("startup_artifact_load_s", Json::num(startup_artifact_load_s)),
+        (
+            "staggered",
+            Json::obj(vec![
+                ("stagger_us", Json::num(STAGGER_US as f64)),
+                ("clients", Json::num(STAGGER_CLIENTS as f64)),
+                ("max_active", Json::num(MAX_BATCH as f64)),
+                ("lockstep", record("bwa-lockstep", &ls_stats, ls_wall)),
+                ("continuous", record_continuous("bwa-continuous", &ct_stats, ct_wall)),
+                ("speedup_continuous_tok_per_s", Json::num(speedup_cont)),
+            ]),
+        ),
     ]);
     std::fs::write("BENCH_serve.json", json.to_string_pretty()).expect("write BENCH_serve.json");
     println!("wrote BENCH_serve.json");

@@ -9,6 +9,23 @@ use super::metrics::{Histogram, Throughput};
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
 use std::time::{Duration, Instant};
 
+/// One generated token, emitted on a request's optional stream channel
+/// (`Request::stream_tx`) the moment its decode step completes — `gen`
+/// events per request, the last one marked [`done`](StreamEvent::done),
+/// all strictly before the final [`Response`]. Only the continuous
+/// scheduler ([`super::scheduler`]) emits these; it lives here beside
+/// [`Request`]/[`Response`] because it is part of the request/response
+/// contract, not of any one serve loop.
+#[derive(Clone, Copy, Debug)]
+pub struct StreamEvent {
+    pub id: u64,
+    /// 0-based index of this token within the request's continuation.
+    pub index: usize,
+    pub token: u16,
+    /// True on the request's last token — the stream ends here.
+    pub done: bool,
+}
+
 /// Model execution backend (PJRT session, native FP, native BWA, or a
 /// test mock). Not `Send`: PJRT handles are thread-local, so the backend
 /// is constructed *on* the batcher thread (see `serve_workload`).
@@ -53,6 +70,13 @@ pub struct Request {
     pub gen: usize,
     pub submitted: Instant,
     pub resp_tx: Sender<Response>,
+    /// Per-token streaming channel, honored by the continuous scheduler
+    /// ([`super::scheduler`]): every generated token is emitted as a
+    /// [`StreamEvent`] the moment its decode step completes, before the
+    /// final [`Response`]. `None` = final response only. The lockstep
+    /// batcher ignores it — it runs whole batches to completion and has
+    /// no per-token boundary to emit from.
+    pub stream_tx: Option<Sender<StreamEvent>>,
 }
 
 #[derive(Clone, Debug)]
@@ -65,6 +89,11 @@ pub struct Response {
     /// The full greedy continuation (`gen` tokens).
     pub generated: Vec<u16>,
     pub latency: Duration,
+    /// How many requests shared this request's execution: the executed
+    /// batch size under the lockstep batcher, or — under the continuous
+    /// scheduler — the in-flight set at the step boundary where it
+    /// retired (active sessions plus, for a request that retires at its
+    /// own admission, the rest of its admission batch).
     pub batch_size: usize,
 }
 
@@ -216,6 +245,7 @@ mod tests {
                 gen: 1,
                 submitted: Instant::now(),
                 resp_tx: rtx.clone(),
+                stream_tx: None,
             })
             .unwrap();
         }
@@ -247,6 +277,7 @@ mod tests {
                 gen: 1,
                 submitted: Instant::now(),
                 resp_tx: rtx.clone(),
+                stream_tx: None,
             })
             .unwrap();
         }
@@ -280,6 +311,7 @@ mod tests {
                 gen: 1,
                 submitted: Instant::now(),
                 resp_tx: rtx.clone(),
+                stream_tx: None,
             })
             .unwrap();
         }

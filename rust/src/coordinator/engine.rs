@@ -46,39 +46,48 @@ impl ParallelBackend {
             label: label.into(),
         }
     }
+}
 
-    /// Prefill every sequence on the worker pool; returns one primed
-    /// session and the last-position logits per sequence.
-    fn prefill_pool(&self, seqs: &[&[u16]], gens: &[usize]) -> Vec<(DecodeSession, Vec<f32>)> {
-        let b = seqs.len();
-        let w = self.workers.clamp(1, b.max(1));
-        let mut slots: Vec<Option<(DecodeSession, Vec<f32>)>> = Vec::new();
-        slots.resize_with(b, || None);
-        std::thread::scope(|scope| {
-            let mut handles = Vec::with_capacity(w);
-            for wi in 0..w {
-                let model = &self.model;
-                handles.push(scope.spawn(move || {
-                    let mut part = Vec::new();
-                    let mut scratch = PrefillScratch::default();
-                    let mut i = wi;
-                    while i < b {
-                        let mut sess = model.new_session_with_capacity(seqs[i].len() + gens[i]);
-                        let logits = model.prefill_with(&mut sess, seqs[i], &mut scratch);
-                        part.push((i, sess, logits));
-                        i += w;
-                    }
-                    part
-                }));
-            }
-            for h in handles {
-                for (i, sess, logits) in h.join().expect("prefill worker") {
-                    slots[i] = Some((sess, logits));
+/// Prefill every sequence across a scoped pool of `workers` threads,
+/// each owning one `PrefillScratch` reused over its stripe of the batch;
+/// returns one primed session (INT4 KV caches filled, position set) and
+/// the last-position logits per sequence. Shared by the lockstep
+/// `ParallelBackend` (whole-batch prefill) and the continuous
+/// scheduler's `TransformerBackend` (prefill-on-join of the requests
+/// admitted at a step boundary).
+pub(crate) fn prefill_pool(
+    model: &Transformer,
+    workers: usize,
+    seqs: &[&[u16]],
+    gens: &[usize],
+) -> Vec<(DecodeSession, Vec<f32>)> {
+    let b = seqs.len();
+    let w = workers.clamp(1, b.max(1));
+    let mut slots: Vec<Option<(DecodeSession, Vec<f32>)>> = Vec::new();
+    slots.resize_with(b, || None);
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(w);
+        for wi in 0..w {
+            handles.push(scope.spawn(move || {
+                let mut part = Vec::new();
+                let mut scratch = PrefillScratch::default();
+                let mut i = wi;
+                while i < b {
+                    let mut sess = model.new_session_with_capacity(seqs[i].len() + gens[i]);
+                    let logits = model.prefill_with(&mut sess, seqs[i], &mut scratch);
+                    part.push((i, sess, logits));
+                    i += w;
                 }
+                part
+            }));
+        }
+        for h in handles {
+            for (i, sess, logits) in h.join().expect("prefill worker") {
+                slots[i] = Some((sess, logits));
             }
-        });
-        slots.into_iter().map(|s| s.expect("prefilled")).collect()
-    }
+        }
+    });
+    slots.into_iter().map(|s| s.expect("prefilled")).collect()
 }
 
 impl Backend for ParallelBackend {
@@ -92,7 +101,7 @@ impl Backend for ParallelBackend {
             return Vec::new();
         }
         let gens = vec![0usize; b];
-        self.prefill_pool(seqs, &gens)
+        prefill_pool(&self.model, self.workers, seqs, &gens)
             .into_iter()
             .map(|(_, logits)| logits)
             .collect()
@@ -115,7 +124,8 @@ impl Backend for ParallelBackend {
         // Phase 1: prefill across the worker pool.
         let mut sessions: Vec<Option<DecodeSession>> = Vec::with_capacity(b);
         let mut outs: Vec<Vec<u16>> = Vec::with_capacity(b);
-        for (i, (sess, logits)) in self.prefill_pool(seqs, gens).into_iter().enumerate() {
+        let prefilled = prefill_pool(&self.model, self.workers, seqs, gens);
+        for (i, (sess, logits)) in prefilled.into_iter().enumerate() {
             let mut gen = Vec::with_capacity(gens[i]);
             if gens[i] > 0 {
                 gen.push(argmax(&logits) as u16);

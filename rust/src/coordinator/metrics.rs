@@ -1,4 +1,6 @@
-//! Serving metrics: latency histogram (percentiles) + throughput meter.
+//! Serving metrics: latency histogram (percentiles), throughput meter,
+//! and the continuous scheduler's per-token statistics
+//! ([`SchedulerStats`]: TTFT, ITL, slot occupancy).
 
 use std::time::{Duration, Instant};
 
@@ -98,6 +100,42 @@ impl Throughput {
     pub fn tokens(&self) -> usize {
         self.tokens
     }
+}
+
+/// Final statistics returned by the continuous scheduler
+/// ([`crate::coordinator::scheduler::run_scheduler`]) when its request
+/// channel closes. Token-granular where [`super::batcher::BatcherStats`]
+/// is request-granular — the lockstep batcher has no per-token boundary
+/// to measure at, the scheduler emits every token at its own decode
+/// step. Precise definitions (what clock starts where) are in
+/// `docs/SCHEDULING.md`.
+#[derive(Debug)]
+pub struct SchedulerStats {
+    /// Time-to-first-token: request submission → its first generated
+    /// token (queueing + admission + prefill). One sample per request
+    /// with `gen >= 1`.
+    pub ttft: Histogram,
+    /// Inter-token latency: gap between consecutive token emissions of
+    /// one request. `gen - 1` samples per request.
+    pub itl: Histogram,
+    /// Submission → final response (the whole request lifetime).
+    pub latency: Histogram,
+    /// Submission → admission (time spent queued before prefill).
+    pub queue_wait: Histogram,
+    /// Requests retired.
+    pub requests: usize,
+    /// Total tokens generated across all requests.
+    pub gen_tokens: usize,
+    /// Batched decode steps executed.
+    pub steps: usize,
+    /// Mean in-flight sessions per decode step (slot-pool occupancy).
+    pub mean_active: f64,
+    /// Requests / serving window (scheduler start → last retirement —
+    /// idle time on an open channel after the final response does not
+    /// dilute the rate).
+    pub throughput_rps: f64,
+    /// Generated tokens / serving window.
+    pub tokens_per_s: f64,
 }
 
 #[cfg(test)]

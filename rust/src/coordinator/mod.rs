@@ -1,17 +1,25 @@
 //! Serving coordinator: request router + dynamic batcher + backends.
 //!
-//! `bwa serve` drives a closed-loop synthetic workload (prompts sampled
-//! from the wiki-analog corpus, each requesting a greedy continuation of
-//! `--gen` tokens) against one of four backends:
-//! - `pjrt`    — the AOT-compiled JAX transformer via the PJRT runtime
-//!               (the three-layer path: Pallas/JAX build time → HLO → Rust);
-//! - `native`  — the Rust FP transformer, per-sequence loop;
-//! - `bwa`     — the W(1+1)A(1×4) transformer on the **parallel batched
-//!               engine** ([`ParallelBackend`]: prefill worker pool +
-//!               lockstep KV-cached batched decode);
-//! - `bwa-seq` — the same quantized model on the naive per-sequence loop
-//!               (full re-prefill per generated token) — the baseline the
-//!               serve bench compares the engine against.
+//! `bwa serve` drives a synthetic workload (prompts sampled from the
+//! wiki-analog corpus, each requesting a greedy continuation of `--gen`
+//! tokens; closed loop, optionally staggered with `--stagger-us`)
+//! against one of five backends:
+//! - `pjrt`     — the AOT-compiled JAX transformer via the PJRT runtime
+//!                (the three-layer path: Pallas/JAX build time → HLO → Rust);
+//! - `native`   — the Rust FP transformer, per-sequence loop;
+//! - `bwa`      — the W(1+1)A(1×4) transformer on the **parallel batched
+//!                engine** ([`ParallelBackend`]: prefill worker pool +
+//!                lockstep KV-cached batched decode);
+//! - `bwa-seq`  — the same quantized model on the naive per-sequence loop
+//!                (full re-prefill per generated token) — the baseline the
+//!                serve bench compares the engine against;
+//! - `bwa-cont` — the same quantized model on the **continuous-batching
+//!                scheduler** ([`scheduler`]): requests are admitted into
+//!                the in-flight decode set at step boundaries
+//!                (`--max-active` slots, `--admit` policy), every token
+//!                streams as it is produced, and finished sessions retire
+//!                immediately — no batch barrier. Reports TTFT and ITL on
+//!                top of the batcher's request-level metrics.
 //!
 //! The `bwa`/`bwa-seq` backends accept a **preloaded** model: pass
 //! `--artifact <path>.bwa` (written by `bwa quantize --out`) and cold
@@ -26,14 +34,18 @@
 pub mod batcher;
 pub mod engine;
 pub mod metrics;
+pub mod scheduler;
 
 use crate::coordinator::batcher::{run_batcher, Backend, BatcherConfig, BatcherStats, Request};
+use crate::coordinator::metrics::SchedulerStats;
+use crate::coordinator::scheduler::{run_scheduler, SchedulerConfig, SessionBackend};
 use crate::data::corpus::CorpusSpec;
 use crate::model::checkpoint::Checkpoint;
 use crate::model::Transformer;
 use crate::util::cli::{Args, Spec};
 use crate::util::rng::Rng;
 pub use engine::ParallelBackend;
+pub use scheduler::TransformerBackend;
 use std::path::Path;
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
@@ -83,13 +95,16 @@ static SERVE_SPEC: Spec = Spec {
         ("model", "artifacts/models/llama1-7b.bin", "checkpoint path"),
         ("artifact", "", "compiled .bwa artifact — bwa/bwa-seq load it instead of re-quantizing"),
         ("artifacts", "artifacts", "AOT artifacts directory (pjrt backend)"),
-        ("backend", "pjrt", "pjrt | native | bwa | bwa-seq"),
+        ("backend", "pjrt", "pjrt | native | bwa | bwa-seq | bwa-cont"),
         ("requests", "64", "total requests"),
         ("clients", "4", "concurrent client threads"),
         ("prompt-len", "24", "prompt tokens per request"),
         ("gen", "4", "tokens to generate per request"),
-        ("batch", "8", "max dynamic batch size"),
-        ("wait-us", "2000", "max batching wait (us)"),
+        ("batch", "8", "max dynamic batch size (lockstep backends)"),
+        ("wait-us", "2000", "max batching wait (us, lockstep backends)"),
+        ("max-active", "8", "bwa-cont: slot-pool size (max in-flight decode sessions)"),
+        ("admit", "eager", "bwa-cont: admission policy, eager | drain"),
+        ("stagger-us", "0", "per-client think time between submissions (0 = back-to-back)"),
         ("workers", "0", "engine worker threads (0 = all cores)"),
         ("seed", "7", "workload seed"),
     ],
@@ -123,6 +138,12 @@ pub fn cmd_serve(args: &Args) -> Result<(), String> {
         n => n,
     };
     let seed = args.u64_or("seed", 7).map_err(|e| e.to_string())?;
+    let max_active = args.usize_or("max-active", 8).map_err(|e| e.to_string())?;
+    if max_active == 0 {
+        return Err("--max-active must be >= 1".into());
+    }
+    let admit: scheduler::AdmissionPolicy = args.str_or("admit", "eager").parse()?;
+    let stagger_us = args.u64_or("stagger-us", 0).map_err(|e| e.to_string())?;
 
     let model_path = model_path.to_string();
     let artifact_path = args.str_or("artifact", "").to_string();
@@ -143,7 +164,7 @@ pub fn cmd_serve(args: &Args) -> Result<(), String> {
             println!("cold start: FP checkpoint load {:.2}s", t0.elapsed().as_secs_f64());
             Some(m)
         }
-        "bwa" | "bwa-seq" => {
+        "bwa" | "bwa-seq" | "bwa-cont" => {
             if artifact_path.is_empty() {
                 let ck = Checkpoint::load(Path::new(&model_path)).map_err(|e| e.to_string())?;
                 let m = quantize_serving_model(&ck, seed);
@@ -180,6 +201,29 @@ pub fn cmd_serve(args: &Args) -> Result<(), String> {
         }
     }
 
+    let load = Workload {
+        requests: n_requests,
+        clients,
+        prompt_len,
+        gen,
+        stagger: Duration::from_micros(stagger_us),
+        seed,
+    };
+
+    // The continuous scheduler drives its own serve loop (admission at
+    // step boundaries instead of batch drains), so it branches off here.
+    if backend_kind == "bwa-cont" {
+        let model = prepared.expect("prepared model");
+        let scfg = SchedulerConfig { max_active, admit };
+        let (name, stats, wall) = serve_continuous_load(
+            move || TransformerBackend::new(model, workers, "native-bwa W(1+1)A(1x4)"),
+            &load,
+            scfg,
+        );
+        println!("{}", continuous_report(&name, &load, &stats, wall));
+        return Ok(());
+    }
+
     let make_backend = move || -> Box<dyn Backend> {
         match backend_kind.as_str() {
             "pjrt" => {
@@ -206,8 +250,8 @@ pub fn cmd_serve(args: &Args) -> Result<(), String> {
         }
     };
 
-    let report = serve_workload(make_backend, n_requests, clients, prompt_len, gen, cfg, seed);
-    println!("{report}");
+    let (name, stats, wall) = serve_lockstep_load(make_backend, &load, cfg);
+    println!("{}", lockstep_report(&name, load.clients, load.gen, &stats, wall));
     Ok(())
 }
 
@@ -223,12 +267,198 @@ pub fn quantize_serving_model(ck: &Checkpoint, seed: u64) -> Transformer {
     crate::model::quantize_model_par(ck, &q, &calib, Some(4), threads).expect("quantize")
 }
 
+/// A synthetic serve workload: how many requests, from how many client
+/// threads, and how they arrive.
+///
+/// Clients are closed-loop (each waits for its response before its next
+/// submission). With `stagger` zero they submit back-to-back — the
+/// classic saturating load. A non-zero `stagger` adds per-client think
+/// time, so requests arrive spread across time and *mid-decode of other
+/// requests* — the arrival pattern that separates the continuous
+/// scheduler from the lockstep batcher (see `docs/SCHEDULING.md`).
+#[derive(Clone, Copy, Debug)]
+pub struct Workload {
+    pub requests: usize,
+    pub clients: usize,
+    pub prompt_len: usize,
+    /// Greedy tokens generated per request.
+    pub gen: usize,
+    /// Per-client think time before each submission after the first;
+    /// client `c`'s first submission is offset by `c * stagger / clients`
+    /// so clients start out of phase.
+    pub stagger: Duration,
+    pub seed: u64,
+}
+
+/// Spawn the client threads for `load` against a server loop running on
+/// its own scoped thread (the backend is constructed *on* that thread —
+/// PJRT handles are thread-local). Returns the server's result and the
+/// wall-clock seconds from first spawn to last retirement.
+fn drive_workload<T, FS>(load: &Workload, server: FS) -> (T, f64)
+where
+    T: Send,
+    FS: FnOnce(mpsc::Receiver<Request>) -> T + Send,
+{
+    let (tx, rx) = mpsc::channel::<Request>();
+    let t0 = Instant::now();
+    let out = std::thread::scope(|s| {
+        let server = s.spawn(move || server(rx));
+
+        // Distribute requests across clients, spreading the remainder over
+        // the first `requests % clients` so exactly `requests` are served
+        // (a plain `n / clients` silently dropped the remainder).
+        let clients = load.clients.max(1);
+        let per_client = load.requests / clients;
+        let remainder = load.requests % clients;
+        for c in 0..load.clients {
+            let tx = tx.clone();
+            let n_mine = per_client + usize::from(c < remainder);
+            let id_base = c * per_client + c.min(remainder);
+            let load = *load;
+            s.spawn(move || {
+                let mut rng = Rng::new(load.seed ^ (c as u64) << 16);
+                let stream =
+                    crate::data::corpus::train_split(&CorpusSpec::wiki(), 20_000 + c * 1000);
+                let (rtx, rrx) = mpsc::channel();
+                if !load.stagger.is_zero() {
+                    std::thread::sleep(load.stagger * c as u32 / clients as u32);
+                }
+                for i in 0..n_mine {
+                    if i > 0 && !load.stagger.is_zero() {
+                        std::thread::sleep(load.stagger);
+                    }
+                    let start = rng.below(stream.len() - load.prompt_len);
+                    let tokens = stream[start..start + load.prompt_len].to_vec();
+                    tx.send(Request {
+                        id: (id_base + i) as u64,
+                        tokens,
+                        gen: load.gen,
+                        submitted: Instant::now(),
+                        resp_tx: rtx.clone(),
+                        stream_tx: None,
+                    })
+                    .expect("server alive");
+                    // closed loop: wait for the response before next req
+                    let _ = rrx.recv();
+                }
+            });
+        }
+        drop(tx);
+        server.join().expect("server thread")
+    });
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Run `load` through the lockstep dynamic batcher ([`run_batcher`]) —
+/// the `pjrt` / `native` / `bwa` / `bwa-seq` serve path. Returns
+/// `(backend name, stats, wall seconds)`.
+pub fn serve_lockstep_load<F>(
+    make_backend: F,
+    load: &Workload,
+    cfg: BatcherConfig,
+) -> (String, BatcherStats, f64)
+where
+    F: FnOnce() -> Box<dyn Backend> + Send,
+{
+    let ((name, stats), wall) = drive_workload(load, move |rx| {
+        let backend = make_backend();
+        let name = backend.name();
+        (name, run_batcher(rx, backend.as_ref(), cfg))
+    });
+    (name, stats, wall)
+}
+
+/// Run `load` through the continuous-batching scheduler
+/// ([`run_scheduler`]) — the `bwa-cont` serve path. Returns
+/// `(backend name, stats, wall seconds)`; [`SchedulerStats`] adds
+/// per-token TTFT/ITL on top of the batcher's request-level numbers.
+pub fn serve_continuous_load<B, F>(
+    make_backend: F,
+    load: &Workload,
+    cfg: SchedulerConfig,
+) -> (String, SchedulerStats, f64)
+where
+    B: SessionBackend,
+    F: FnOnce() -> B + Send,
+{
+    let ((name, stats), wall) = drive_workload(load, move |rx| {
+        let backend = make_backend();
+        (backend.name(), run_scheduler(rx, &backend, cfg))
+    });
+    (name, stats, wall)
+}
+
+/// Format the lockstep serve report printed by `bwa serve`. Throughput
+/// comes from the batcher's own serving window
+/// ([`BatcherStats::throughput_rps`], loop start → channel close) so the
+/// line is clock-comparable with [`continuous_report`]'s — `wall time`
+/// keeps the total including setup/teardown for context.
+fn lockstep_report(
+    name: &str,
+    clients: usize,
+    gen: usize,
+    stats: &BatcherStats,
+    wall: f64,
+) -> String {
+    format!(
+        "== serve report ({name}) ==\n\
+         requests:    {}\n\
+         clients:     {clients}\n\
+         gen/request: {gen}\n\
+         wall time:   {wall:.2}s\n\
+         throughput:  {:.1} req/s | {:.1} gen tok/s\n\
+         mean batch:  {:.2} (over {} batches)\n\
+         {}\n\
+         {}",
+        stats.requests,
+        stats.throughput_rps,
+        stats.tokens_per_s,
+        stats.mean_batch,
+        stats.batches,
+        stats.latency.report("latency"),
+        stats.queue_wait.report("queue wait"),
+    )
+}
+
+/// Format the continuous-scheduler serve report printed by
+/// `bwa serve --backend bwa-cont` — the lockstep report plus the
+/// token-granular lines (TTFT, ITL, slot occupancy); field definitions
+/// in `docs/SCHEDULING.md`.
+pub fn continuous_report(name: &str, load: &Workload, stats: &SchedulerStats, wall: f64) -> String {
+    format!(
+        "== serve report ({name}) ==\n\
+         requests:    {}\n\
+         clients:     {}\n\
+         gen/request: {}\n\
+         wall time:   {wall:.2}s\n\
+         throughput:  {:.1} req/s | {:.1} gen tok/s\n\
+         mean active: {:.2} (over {} decode steps)\n\
+         {}\n\
+         {}\n\
+         {}\n\
+         {}",
+        stats.requests,
+        load.clients,
+        load.gen,
+        stats.throughput_rps,
+        stats.tokens_per_s,
+        stats.mean_active,
+        stats.steps,
+        stats.ttft.report("ttft"),
+        stats.itl.report("itl"),
+        stats.latency.report("latency"),
+        stats.queue_wait.report("queue wait"),
+    )
+}
+
 /// Closed-loop workload: `clients` threads each submit requests
 /// back-to-back (each asking for a greedy continuation of `gen` tokens)
 /// until `n_requests` total are served. The backend is constructed on
 /// the batcher thread (PJRT handles are thread-local). Returns the
 /// formatted serve report; [`serve_workload_stats`] exposes the raw
-/// numbers for benches.
+/// numbers for benches, and [`serve_lockstep_load`] /
+/// [`serve_continuous_load`] take a full [`Workload`] (staggered
+/// arrivals, continuous scheduler).
 ///
 /// ```
 /// use bwa_llm::coordinator::batcher::{Backend, BatcherConfig};
@@ -276,25 +506,7 @@ where
 {
     let (name, stats, wall) =
         serve_workload_stats(make_backend, n_requests, clients, prompt_len, gen, cfg, seed);
-    format!(
-        "== serve report ({}) ==\n\
-         requests:    {}\n\
-         clients:     {clients}\n\
-         gen/request: {gen}\n\
-         wall time:   {wall:.2}s\n\
-         throughput:  {:.1} req/s | {:.1} gen tok/s\n\
-         mean batch:  {:.2} (over {} batches)\n\
-         {}\n\
-         {}",
-        name,
-        stats.requests,
-        stats.requests as f64 / wall,
-        stats.gen_tokens as f64 / wall,
-        stats.mean_batch,
-        stats.batches,
-        stats.latency.report("latency"),
-        stats.queue_wait.report("queue wait"),
-    )
+    lockstep_report(&name, clients, gen, &stats, wall)
 }
 
 /// [`serve_workload`] returning the raw `(backend name, stats, wall
@@ -311,51 +523,15 @@ pub fn serve_workload_stats<F>(
 where
     F: FnOnce() -> Box<dyn Backend> + Send,
 {
-    let (tx, rx) = mpsc::channel::<Request>();
-    let t0 = Instant::now();
-
-    let (name, stats) = std::thread::scope(|s| {
-        let batcher = s.spawn(move || {
-            let backend = make_backend();
-            let name = backend.name();
-            (name, run_batcher(rx, backend.as_ref(), cfg))
-        });
-
-        // Distribute requests across clients, spreading the remainder over
-        // the first `n_requests % clients` so exactly `n_requests` are
-        // served (a plain `n / clients` silently dropped the remainder).
-        let per_client = n_requests / clients.max(1);
-        let remainder = n_requests % clients.max(1);
-        for c in 0..clients {
-            let tx = tx.clone();
-            let n_mine = per_client + usize::from(c < remainder);
-            let id_base = c * per_client + c.min(remainder);
-            s.spawn(move || {
-                let mut rng = Rng::new(seed ^ (c as u64) << 16);
-                let stream =
-                    crate::data::corpus::train_split(&CorpusSpec::wiki(), 20_000 + c * 1000);
-                let (rtx, rrx) = mpsc::channel();
-                for i in 0..n_mine {
-                    let start = rng.below(stream.len() - prompt_len);
-                    let tokens = stream[start..start + prompt_len].to_vec();
-                    tx.send(Request {
-                        id: (id_base + i) as u64,
-                        tokens,
-                        gen,
-                        submitted: Instant::now(),
-                        resp_tx: rtx.clone(),
-                    })
-                    .expect("batcher alive");
-                    // closed loop: wait for the response before next req
-                    let _ = rrx.recv();
-                }
-            });
-        }
-        drop(tx);
-        batcher.join().expect("batcher thread")
-    });
-
-    (name, stats, t0.elapsed().as_secs_f64())
+    let load = Workload {
+        requests: n_requests,
+        clients,
+        prompt_len,
+        gen,
+        stagger: Duration::ZERO,
+        seed,
+    };
+    serve_lockstep_load(make_backend, &load, cfg)
 }
 
 #[cfg(test)]

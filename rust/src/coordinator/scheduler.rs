@@ -1,0 +1,838 @@
+//! Continuous-batching scheduler: admit at step boundaries, stream
+//! every token, retire finished sessions immediately.
+//!
+//! The lockstep engine ([`super::engine::ParallelBackend`]) drains a
+//! batch, runs it to completion, and only then looks at the queue — a
+//! request arriving one instant after a drain waits out the *longest*
+//! generation in flight before its prefill even starts. The
+//! [`Scheduler`] removes that barrier:
+//!
+//! - a **slot pool** holds up to `max_active` in-flight
+//!   [`DecodeSession`]s;
+//! - at every **step boundary** queued requests are admitted into free
+//!   slots ([`AdmissionPolicy::Eager`]) and prefilled on the worker pool
+//!   ([`SessionBackend::prefill_batch`] — the same scoped-thread pool the
+//!   lockstep engine uses), which also yields their first token;
+//! - one **batched decode step** then advances the whole ragged active
+//!   set — sessions at different positions, admitted at different
+//!   boundaries — via [`crate::model::Transformer::decode_step_batch_refs`];
+//! - each token is **streamed** to the request's optional
+//!   [`StreamEvent`] channel the moment its step completes, and finished
+//!   sessions retire immediately, freeing their slot for the next
+//!   admission instead of idling until the batch drains.
+//!
+//! Time-to-first-token and inter-token latency are recorded per token
+//! into [`SchedulerStats`] (see `docs/SCHEDULING.md` for the precise
+//! clock definitions). Output is **bit-identical per sequence** to the
+//! lockstep engine and to sequential `prefill` + `decode_step`, because
+//! every GEMM/norm/attention row of a batched decode step is computed
+//! independently — admission order changes *when* a token is computed,
+//! never its value (test-pinned below).
+//!
+//! # Example: two staggered requests through a mock backend
+//!
+//! The scheduler is generic over [`SessionBackend`], so the serve loop
+//! can be driven deterministically with a mock model. Request 1 arrives
+//! while request 0 is mid-decode and joins the active set at the next
+//! step boundary — before request 0 finishes:
+//!
+//! ```
+//! use bwa_llm::coordinator::batcher::Request;
+//! use bwa_llm::coordinator::scheduler::{
+//!     AdmissionPolicy, Scheduler, SchedulerConfig, SessionBackend,
+//! };
+//! use std::sync::mpsc;
+//! use std::time::Instant;
+//!
+//! /// Greedy next token = (sum of the sequence so far) % 7.
+//! struct Mock;
+//! fn next(seq: &[u16]) -> u16 {
+//!     (seq.iter().map(|&t| t as usize).sum::<usize>() % 7) as u16
+//! }
+//! impl SessionBackend for Mock {
+//!     type Session = Vec<u16>; // the session is just the sequence so far
+//!     fn name(&self) -> String {
+//!         "mock".into()
+//!     }
+//!     fn prefill_batch(&self, prompts: &[&[u16]], _gens: &[usize]) -> Vec<(Vec<u16>, u16)> {
+//!         prompts.iter().map(|p| (p.to_vec(), next(p))).collect()
+//!     }
+//!     fn decode_batch(&self, sessions: &mut [&mut Vec<u16>], tokens: &[u16]) -> Vec<u16> {
+//!         sessions
+//!             .iter_mut()
+//!             .zip(tokens)
+//!             .map(|(s, &t)| {
+//!                 s.push(t);
+//!                 next(s)
+//!             })
+//!             .collect()
+//!     }
+//! }
+//!
+//! let cfg = SchedulerConfig { max_active: 2, admit: AdmissionPolicy::Eager };
+//! let mut sched = Scheduler::new(&Mock, cfg);
+//! let (rtx, rrx) = mpsc::channel();
+//! let req = |id: u64, tokens: Vec<u16>, gen: usize| Request {
+//!     id,
+//!     tokens,
+//!     gen,
+//!     submitted: Instant::now(),
+//!     resp_tx: rtx.clone(),
+//!     stream_tx: None,
+//! };
+//!
+//! sched.submit(req(0, vec![1, 2, 3], 4));
+//! sched.step(); // admits + prefills request 0, decodes its first step
+//! assert_eq!(sched.active(), 1);
+//!
+//! // request 1 arrives mid-decode and joins at the next step boundary
+//! sched.submit(req(1, vec![4, 5], 3));
+//! sched.step();
+//! assert_eq!(sched.active(), 2, "joined before request 0 finished");
+//!
+//! while sched.step() {} // run the pool dry
+//! let stats = sched.finish();
+//! assert_eq!(stats.requests, 2);
+//! assert_eq!(stats.gen_tokens, 4 + 3);
+//!
+//! let mut got: Vec<(u64, usize)> = rrx.try_iter().map(|r| (r.id, r.generated.len())).collect();
+//! got.sort_unstable();
+//! assert_eq!(got, vec![(0, 4), (1, 3)]);
+//! ```
+
+use super::batcher::{Request, Response, StreamEvent};
+use super::engine::prefill_pool;
+use super::metrics::{Histogram, SchedulerStats};
+use crate::model::{DecodeSession, Transformer};
+use crate::util::argmax;
+use std::collections::VecDeque;
+use std::sync::mpsc::{Receiver, Sender, TryRecvError};
+use std::time::Instant;
+
+/// When queued requests may enter the slot pool.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdmissionPolicy {
+    /// Admit whenever a slot is free — at *every* step boundary
+    /// (continuous batching; the default).
+    Eager,
+    /// Admit only when the active set has fully drained — lockstep-style
+    /// waves through the scheduler's own loop, kept as the degenerate
+    /// policy an operator can A/B against `eager` with everything else
+    /// held fixed.
+    Drain,
+}
+
+impl std::str::FromStr for AdmissionPolicy {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "eager" => Ok(AdmissionPolicy::Eager),
+            "drain" => Ok(AdmissionPolicy::Drain),
+            other => Err(format!("unknown admission policy '{other}' (have: eager, drain)")),
+        }
+    }
+}
+
+/// Scheduler knobs — surfaced on the `serve` CLI as `--max-active` and
+/// `--admit`; sizing guidance lives in `docs/SCHEDULING.md`.
+#[derive(Clone, Copy, Debug)]
+pub struct SchedulerConfig {
+    /// Slot-pool size: the most decode sessions kept in flight at once.
+    /// Also the admission batch bound — at most this many prefills run
+    /// per step boundary.
+    pub max_active: usize,
+    pub admit: AdmissionPolicy,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        Self {
+            max_active: 8,
+            admit: AdmissionPolicy::Eager,
+        }
+    }
+}
+
+/// What the scheduler needs from a model: prefill prompts into fresh
+/// per-request sessions (this is where the worker pool lives) and
+/// advance a ragged set of sessions one greedy token. Implemented by
+/// [`TransformerBackend`] for real serving and by tiny mocks in tests
+/// and the module doctest.
+pub trait SessionBackend {
+    /// Per-request decode state (KV caches + position for the real
+    /// model).
+    type Session;
+
+    fn name(&self) -> String;
+
+    /// Prefill each prompt into a fresh session, returning the primed
+    /// session and the first greedy token per prompt. `gens` lets the
+    /// implementation size each session's KV storage up front.
+    fn prefill_batch(&self, prompts: &[&[u16]], gens: &[usize]) -> Vec<(Self::Session, u16)>;
+
+    /// Feed `tokens[i]` to `sessions[i]` (one lockstep position each —
+    /// the sessions may sit at *different* absolute positions) and
+    /// return the next greedy token per session.
+    fn decode_batch(&self, sessions: &mut [&mut Self::Session], tokens: &[u16]) -> Vec<u16>;
+}
+
+/// The real-model [`SessionBackend`]: prefill-on-join across the scoped
+/// worker pool (shared with the lockstep engine) and ragged batched
+/// decode via [`Transformer::decode_step_batch_refs`] — the packed
+/// popcount kernel with one activation pack + M = batch GEMMs per
+/// projection.
+pub struct TransformerBackend {
+    pub model: Transformer,
+    /// Worker threads for prefill-on-join and the batched-decode GEMMs.
+    pub workers: usize,
+    pub label: String,
+}
+
+impl TransformerBackend {
+    pub fn new(model: Transformer, workers: usize, label: impl Into<String>) -> Self {
+        Self {
+            model,
+            workers: workers.max(1),
+            label: label.into(),
+        }
+    }
+}
+
+impl SessionBackend for TransformerBackend {
+    type Session = DecodeSession;
+
+    fn name(&self) -> String {
+        format!("{} [continuous x{}]", self.label, self.workers)
+    }
+
+    fn prefill_batch(&self, prompts: &[&[u16]], gens: &[usize]) -> Vec<(DecodeSession, u16)> {
+        prefill_pool(&self.model, self.workers, prompts, gens)
+            .into_iter()
+            .map(|(sess, logits)| (sess, argmax(&logits) as u16))
+            .collect()
+    }
+
+    fn decode_batch(&self, sessions: &mut [&mut DecodeSession], tokens: &[u16]) -> Vec<u16> {
+        let logits = self.model.decode_step_batch_refs(sessions, tokens, self.workers);
+        (0..sessions.len()).map(|r| argmax(logits.row(r)) as u16).collect()
+    }
+}
+
+/// One in-flight request: its session, what it has generated, and the
+/// timing state the per-token metrics need.
+struct Slot<S> {
+    id: u64,
+    gen: usize,
+    session: S,
+    generated: Vec<u16>,
+    submitted: Instant,
+    /// When this request's latest token was emitted (ITL clock).
+    last_emit: Instant,
+    resp_tx: Sender<Response>,
+    stream_tx: Option<Sender<StreamEvent>>,
+}
+
+/// The continuous-batching serve loop, step by step.
+///
+/// [`submit`](Self::submit) queues a request; [`step`](Self::step) runs
+/// one step boundary (admission, then one batched decode step over the
+/// active set, then immediate retirement of finished sessions);
+/// [`finish`](Self::finish) returns the accumulated [`SchedulerStats`].
+/// [`run_scheduler`] wraps this in a channel loop for serving;
+/// tests and the doctest drive `submit`/`step` directly so admission
+/// timing is deterministic.
+pub struct Scheduler<'a, B: SessionBackend> {
+    backend: &'a B,
+    cfg: SchedulerConfig,
+    queue: VecDeque<Request>,
+    active: Vec<Slot<B::Session>>,
+    ttft: Histogram,
+    itl: Histogram,
+    latency: Histogram,
+    queue_wait: Histogram,
+    /// Serving-window clock: throughput is measured from scheduler
+    /// construction to the *last retirement*, so idle time spent blocked
+    /// on an open request channel after the final response does not
+    /// dilute the reported rates.
+    started: Instant,
+    last_retire: Instant,
+    gen_tokens: usize,
+    steps: usize,
+    active_sum: usize,
+    retired: usize,
+}
+
+impl<'a, B: SessionBackend> Scheduler<'a, B> {
+    pub fn new(backend: &'a B, cfg: SchedulerConfig) -> Self {
+        assert!(cfg.max_active >= 1, "scheduler needs at least one slot");
+        let now = Instant::now();
+        Self {
+            backend,
+            cfg,
+            queue: VecDeque::new(),
+            active: Vec::new(),
+            ttft: Histogram::default(),
+            itl: Histogram::default(),
+            latency: Histogram::default(),
+            queue_wait: Histogram::default(),
+            started: now,
+            last_retire: now,
+            gen_tokens: 0,
+            steps: 0,
+            active_sum: 0,
+            retired: 0,
+        }
+    }
+
+    /// Queue a request. It enters the decode set at the next step
+    /// boundary with a free slot (under [`AdmissionPolicy::Eager`]).
+    pub fn submit(&mut self, req: Request) {
+        self.queue.push_back(req);
+    }
+
+    /// Requests queued but not yet admitted.
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Sessions currently in flight (admitted, not yet retired).
+    pub fn active(&self) -> usize {
+        self.active.len()
+    }
+
+    /// Nothing queued and nothing in flight.
+    pub fn is_idle(&self) -> bool {
+        self.queue.is_empty() && self.active.is_empty()
+    }
+
+    /// Run one step boundary: admit queued requests into free slots
+    /// (prefilling them on the worker pool, which emits their first
+    /// token), advance the whole active set one batched decode step, and
+    /// retire every session that reached its `gen` budget. Returns
+    /// `false` if there was nothing to do (idle).
+    pub fn step(&mut self) -> bool {
+        let mut progressed = false;
+
+        // --- admission ---
+        let admit_ok = match self.cfg.admit {
+            AdmissionPolicy::Eager => true,
+            AdmissionPolicy::Drain => self.active.is_empty(),
+        };
+        if admit_ok && self.active.len() < self.cfg.max_active && !self.queue.is_empty() {
+            let n = (self.cfg.max_active - self.active.len()).min(self.queue.len());
+            let batch: Vec<Request> = self.queue.drain(..n).collect();
+            let t_admit = Instant::now();
+            for r in &batch {
+                self.queue_wait.record(t_admit - r.submitted);
+            }
+            let prompts: Vec<&[u16]> = batch.iter().map(|r| r.tokens.as_slice()).collect();
+            let gens: Vec<usize> = batch.iter().map(|r| r.gen).collect();
+            let prefilled = self.backend.prefill_batch(&prompts, &gens);
+            debug_assert_eq!(prefilled.len(), batch.len());
+            // The in-flight set at this boundary: everything already
+            // active plus the whole admission batch — what a request
+            // retiring at admission (gen <= 1) shared its prefill with.
+            let boundary_set = self.active.len() + batch.len();
+            for (req, (session, first)) in batch.into_iter().zip(prefilled) {
+                let now = Instant::now();
+                let mut slot = Slot {
+                    id: req.id,
+                    gen: req.gen,
+                    session,
+                    generated: Vec::with_capacity(req.gen),
+                    submitted: req.submitted,
+                    last_emit: now,
+                    resp_tx: req.resp_tx,
+                    stream_tx: req.stream_tx,
+                };
+                if slot.gen > 0 {
+                    // prefill produced the first token: TTFT stops here
+                    self.ttft.record(now - slot.submitted);
+                    slot.generated.push(first);
+                    self.gen_tokens += 1;
+                    if let Some(tx) = &slot.stream_tx {
+                        let _ = tx.send(StreamEvent {
+                            id: slot.id,
+                            index: 0,
+                            token: first,
+                            done: slot.gen == 1,
+                        });
+                    }
+                }
+                if slot.generated.len() >= slot.gen {
+                    // gen <= 1: done without ever occupying a decode slot
+                    self.retire(slot, boundary_set);
+                } else {
+                    self.active.push(slot);
+                }
+            }
+            progressed = true;
+        }
+
+        // --- one batched decode step over the ragged active set ---
+        if !self.active.is_empty() {
+            self.steps += 1;
+            self.active_sum += self.active.len();
+            let tokens: Vec<u16> = self
+                .active
+                .iter()
+                .map(|s| *s.generated.last().expect("active slot has a token"))
+                .collect();
+            let mut sessions: Vec<&mut B::Session> =
+                self.active.iter_mut().map(|s| &mut s.session).collect();
+            let next = self.backend.decode_batch(&mut sessions, &tokens);
+            drop(sessions);
+            debug_assert_eq!(next.len(), self.active.len());
+            let now = Instant::now();
+            for (slot, &tok) in self.active.iter_mut().zip(next.iter()) {
+                self.itl.record(now - slot.last_emit);
+                slot.last_emit = now;
+                slot.generated.push(tok);
+                self.gen_tokens += 1;
+                if let Some(tx) = &slot.stream_tx {
+                    let _ = tx.send(StreamEvent {
+                        id: slot.id,
+                        index: slot.generated.len() - 1,
+                        token: tok,
+                        done: slot.generated.len() == slot.gen,
+                    });
+                }
+            }
+            // --- immediate retirement: free slots without draining ---
+            // Every request finishing on this step shared the same
+            // step_set-wide decode batch — captured once, so same-step
+            // siblings all report the same in-flight size.
+            let step_set = self.active.len();
+            let mut i = 0;
+            while i < self.active.len() {
+                if self.active[i].generated.len() >= self.active[i].gen {
+                    let slot = self.active.swap_remove(i);
+                    self.retire(slot, step_set);
+                } else {
+                    i += 1;
+                }
+            }
+            progressed = true;
+        }
+
+        progressed
+    }
+
+    fn retire(&mut self, slot: Slot<B::Session>, in_flight: usize) {
+        let lat = slot.submitted.elapsed();
+        self.latency.record(lat);
+        self.retired += 1;
+        self.last_retire = Instant::now();
+        let next = slot.generated.first().copied().unwrap_or(0);
+        let _ = slot.resp_tx.send(Response {
+            id: slot.id,
+            next_token: next,
+            generated: slot.generated,
+            latency: lat,
+            batch_size: in_flight,
+        });
+    }
+
+    /// Consume the scheduler and return the accumulated statistics.
+    /// Requests still queued or in flight are dropped unserved (their
+    /// response channel closes) — [`run_scheduler`] only calls this once
+    /// idle with the request channel disconnected.
+    pub fn finish(self) -> SchedulerStats {
+        // Serving window: construction -> last retirement (NOT "now" —
+        // run_scheduler may have sat idle on an open channel after the
+        // last response, and that wait must not dilute the rates).
+        let window = self.last_retire.duration_since(self.started).as_secs_f64().max(1e-9);
+        SchedulerStats {
+            mean_active: self.active_sum as f64 / self.steps.max(1) as f64,
+            ttft: self.ttft,
+            itl: self.itl,
+            latency: self.latency,
+            queue_wait: self.queue_wait,
+            requests: self.retired,
+            gen_tokens: self.gen_tokens,
+            steps: self.steps,
+            throughput_rps: self.retired as f64 / window,
+            tokens_per_s: self.gen_tokens as f64 / window,
+        }
+    }
+}
+
+/// Run the continuous serve loop until the request channel closes and
+/// every accepted request has retired. Blocking call — spawn on its own
+/// thread (the backend is constructed *on* that thread, same discipline
+/// as [`super::batcher::run_batcher`]).
+///
+/// Arrivals are folded in without ever stalling decode: before each step
+/// the channel is drained non-blockingly, so a request that lands
+/// mid-flight is admitted at the next step boundary; the loop only
+/// blocks on the channel when the scheduler is completely idle.
+pub fn run_scheduler<B: SessionBackend>(
+    rx: Receiver<Request>,
+    backend: &B,
+    cfg: SchedulerConfig,
+) -> SchedulerStats {
+    let mut sched = Scheduler::new(backend, cfg);
+    let mut open = true;
+    loop {
+        // opportunistic, non-blocking drain at the step boundary
+        while open {
+            match rx.try_recv() {
+                Ok(r) => sched.submit(r),
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => open = false,
+            }
+        }
+        if sched.is_idle() {
+            if !open {
+                break;
+            }
+            // nothing in flight: block until the next arrival
+            match rx.recv() {
+                Ok(r) => sched.submit(r),
+                Err(_) => open = false,
+            }
+            continue;
+        }
+        sched.step();
+    }
+    sched.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::batcher::Backend;
+    use crate::coordinator::ParallelBackend;
+    use crate::model::checkpoint::Checkpoint;
+    use crate::model::config::ModelConfig;
+    use crate::model::quantize_model;
+    use crate::quant::BwaQuantizer;
+    use crate::util::rng::Rng;
+    use std::sync::mpsc;
+
+    /// Deterministic mock model: greedy next token = (sum so far) % 31.
+    struct MockBackend;
+
+    fn mock_next(seq: &[u16]) -> u16 {
+        (seq.iter().map(|&t| t as usize).sum::<usize>() % 31) as u16
+    }
+
+    impl SessionBackend for MockBackend {
+        type Session = Vec<u16>;
+
+        fn name(&self) -> String {
+            "mock".into()
+        }
+
+        fn prefill_batch(&self, prompts: &[&[u16]], _gens: &[usize]) -> Vec<(Vec<u16>, u16)> {
+            prompts.iter().map(|p| (p.to_vec(), mock_next(p))).collect()
+        }
+
+        fn decode_batch(&self, sessions: &mut [&mut Vec<u16>], tokens: &[u16]) -> Vec<u16> {
+            sessions
+                .iter_mut()
+                .zip(tokens)
+                .map(|(s, &t)| {
+                    s.push(t);
+                    mock_next(s)
+                })
+                .collect()
+        }
+    }
+
+    fn req(id: u64, tokens: Vec<u16>, gen: usize, rtx: &mpsc::Sender<Response>) -> Request {
+        Request {
+            id,
+            tokens,
+            gen,
+            submitted: Instant::now(),
+            resp_tx: rtx.clone(),
+            stream_tx: None,
+        }
+    }
+
+    /// Reference continuation the mock backend must produce.
+    fn mock_reference(prompt: &[u16], gen: usize) -> Vec<u16> {
+        let mut seq = prompt.to_vec();
+        let mut out = Vec::new();
+        for _ in 0..gen {
+            let t = mock_next(&seq);
+            out.push(t);
+            seq.push(t);
+        }
+        out
+    }
+
+    fn small_cfg() -> ModelConfig {
+        ModelConfig {
+            name: "sched-test".into(),
+            vocab_size: 64,
+            d_model: 128,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 192,
+            max_seq: 64,
+            rope_theta: 10000.0,
+            rmsnorm_eps: 1e-5,
+        }
+    }
+
+    fn quantized_model(seed: u64) -> Transformer {
+        let ck = Checkpoint::random(&small_cfg(), seed);
+        let mut rng = Rng::new(seed ^ 0x9e37);
+        let calib: Vec<Vec<u16>> = (0..4)
+            .map(|_| (0..32).map(|_| rng.below(64) as u16).collect())
+            .collect();
+        quantize_model(&ck, &BwaQuantizer::paper(), &calib, Some(4)).unwrap()
+    }
+
+    fn prompts(rng: &mut Rng, n: usize, len: usize) -> Vec<Vec<u16>> {
+        (0..n)
+            .map(|_| (0..len).map(|_| rng.below(64) as u16).collect())
+            .collect()
+    }
+
+    /// The tentpole parity pin: continuous scheduler == lockstep engine
+    /// == sequential prefill + decode_step, per sequence, with requests
+    /// force-staggered across step boundaries and a slot pool smaller
+    /// than the workload so admission happens mid-decode.
+    #[test]
+    fn continuous_matches_lockstep_and_sequential() {
+        let model = quantized_model(71);
+        let mut rng = Rng::new(72);
+        let seqs = prompts(&mut rng, 5, 12);
+        let seq_refs: Vec<&[u16]> = seqs.iter().map(|s| s.as_slice()).collect();
+        let gens = [4usize, 1, 3, 5, 2];
+
+        // sequential reference: one sequence at a time, no batching
+        let mut want = Vec::new();
+        for (s, &g) in seq_refs.iter().zip(gens.iter()) {
+            let mut sess = model.new_session();
+            let mut logits = model.prefill(&mut sess, s);
+            let mut out = Vec::new();
+            for step in 0..g {
+                let next = argmax(&logits) as u16;
+                out.push(next);
+                if step + 1 < g {
+                    logits = model.decode_step(&mut sess, next);
+                }
+            }
+            want.push(out);
+        }
+
+        // lockstep engine on the same weights
+        let lockstep = ParallelBackend::new(quantized_model(71), 2, "lockstep")
+            .generate_batch(&seq_refs, &gens);
+        assert_eq!(lockstep, want, "lockstep engine diverged from sequential");
+
+        // continuous: 3 requests up front, 2 arriving mid-decode, into a
+        // 3-slot pool — admission interleaves with decode steps
+        let backend = TransformerBackend::new(quantized_model(71), 2, "cont");
+        let cfg = SchedulerConfig {
+            max_active: 3,
+            admit: AdmissionPolicy::Eager,
+        };
+        let mut sched = Scheduler::new(&backend, cfg);
+        let (rtx, rrx) = mpsc::channel();
+        for i in 0..3 {
+            sched.submit(req(i as u64, seqs[i].clone(), gens[i], &rtx));
+        }
+        sched.step();
+        sched.step();
+        for i in 3..5 {
+            sched.submit(req(i as u64, seqs[i].clone(), gens[i], &rtx));
+        }
+        while sched.step() {}
+        let stats = sched.finish();
+        drop(rtx);
+
+        let mut got = vec![Vec::new(); 5];
+        for resp in rrx.try_iter() {
+            got[resp.id as usize] = resp.generated;
+        }
+        assert_eq!(got, want, "continuous scheduler diverged from sequential");
+        assert_eq!(stats.requests, 5);
+        assert_eq!(stats.gen_tokens, gens.iter().sum::<usize>());
+        assert_eq!(stats.ttft.len(), 5);
+        assert_eq!(
+            stats.itl.len(),
+            gens.iter().map(|g| g - 1).sum::<usize>(),
+            "gen - 1 inter-token gaps per request"
+        );
+    }
+
+    /// The admission pin: a request submitted while decode is in flight
+    /// joins the active set at the next step boundary — and retires —
+    /// before the earlier request finishes. Driven synchronously so the
+    /// interleaving is deterministic.
+    #[test]
+    fn request_arriving_mid_decode_joins_before_active_drains() {
+        let backend = MockBackend;
+        let mut sched = Scheduler::new(&backend, SchedulerConfig::default());
+        let (rtx, rrx) = mpsc::channel();
+
+        sched.submit(req(0, vec![1, 2, 3], 6, &rtx));
+        assert!(sched.step()); // admit + prefill + first decode step
+        assert_eq!(sched.active(), 1);
+        assert_eq!(sched.queued(), 0);
+
+        // request 1 arrives mid-decode of request 0
+        sched.submit(req(1, vec![4], 3, &rtx));
+        sched.step();
+        assert_eq!(
+            sched.active(),
+            2,
+            "late arrival must join the in-flight set, not wait for a drain"
+        );
+        assert!(
+            rrx.try_recv().is_err(),
+            "request 0 must still be in flight when request 1 joins"
+        );
+
+        while sched.step() {}
+        let stats = sched.finish();
+        drop(rtx);
+        let order: Vec<u64> = rrx.try_iter().map(|r| r.id).collect();
+        assert_eq!(
+            order,
+            vec![1, 0],
+            "the shorter late request retires first — no batch barrier"
+        );
+        assert_eq!(stats.requests, 2);
+    }
+
+    /// Every generated token is streamed, in order, with the last one
+    /// marked done — and the stream completes before the final response.
+    #[test]
+    fn streaming_emits_every_token_before_final_response() {
+        let backend = MockBackend;
+        let mut sched = Scheduler::new(&backend, SchedulerConfig::default());
+        let (rtx, rrx) = mpsc::channel();
+        let (stx, srx) = mpsc::channel();
+        sched.submit(Request {
+            id: 9,
+            tokens: vec![5, 6],
+            gen: 4,
+            submitted: Instant::now(),
+            resp_tx: rtx,
+            stream_tx: Some(stx),
+        });
+        while sched.step() {}
+        let resp = rrx.try_recv().expect("final response");
+        let events: Vec<StreamEvent> = srx.try_iter().collect();
+        assert_eq!(events.len(), 4);
+        for (i, ev) in events.iter().enumerate() {
+            assert_eq!(ev.id, 9);
+            assert_eq!(ev.index, i);
+            assert_eq!(ev.done, i == 3);
+        }
+        let streamed: Vec<u16> = events.iter().map(|e| e.token).collect();
+        assert_eq!(streamed, resp.generated);
+        assert_eq!(resp.generated, mock_reference(&[5, 6], 4));
+    }
+
+    /// The slot pool is a hard bound: with max_active 2 and 7 queued
+    /// requests, the active set never exceeds 2 and everything is still
+    /// served.
+    #[test]
+    fn slot_pool_never_exceeds_max_active() {
+        let backend = MockBackend;
+        let cfg = SchedulerConfig {
+            max_active: 2,
+            admit: AdmissionPolicy::Eager,
+        };
+        let mut sched = Scheduler::new(&backend, cfg);
+        let (rtx, rrx) = mpsc::channel();
+        for i in 0..7u64 {
+            sched.submit(req(i, vec![i as u16 + 1], 3, &rtx));
+        }
+        loop {
+            let progressed = sched.step();
+            assert!(sched.active() <= 2, "slot pool overflowed");
+            if !progressed {
+                break;
+            }
+        }
+        let stats = sched.finish();
+        drop(rtx);
+        assert_eq!(stats.requests, 7);
+        assert_eq!(rrx.try_iter().count(), 7);
+        assert!(stats.mean_active > 1.0, "pool should actually batch");
+    }
+
+    /// `drain` really is the lockstep-wave policy: a mid-flight arrival
+    /// waits until the active set empties before it is admitted.
+    #[test]
+    fn drain_policy_holds_arrivals_until_the_pool_empties() {
+        let backend = MockBackend;
+        let cfg = SchedulerConfig {
+            max_active: 4,
+            admit: AdmissionPolicy::Drain,
+        };
+        let mut sched = Scheduler::new(&backend, cfg);
+        let (rtx, rrx) = mpsc::channel();
+        sched.submit(req(0, vec![7], 4, &rtx));
+        sched.step(); // admit + first decode
+        sched.submit(req(1, vec![8], 1, &rtx));
+        while sched.active() > 0 {
+            assert_eq!(sched.queued(), 1, "drain policy must hold the arrival");
+            sched.step();
+        }
+        while sched.step() {}
+        let stats = sched.finish();
+        drop(rtx);
+        let order: Vec<u64> = rrx.try_iter().map(|r| r.id).collect();
+        assert_eq!(order, vec![0, 1], "wave order: 0 drains fully, then 1");
+        assert_eq!(stats.requests, 2);
+    }
+
+    /// The channel loop: requests submitted from another thread are all
+    /// served with correct continuations, and the stats account for
+    /// every token.
+    #[test]
+    fn run_scheduler_serves_all_channel_requests() {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let handle = std::thread::spawn(move || {
+            run_scheduler(
+                rx,
+                &MockBackend,
+                SchedulerConfig {
+                    max_active: 4,
+                    admit: AdmissionPolicy::Eager,
+                },
+            )
+        });
+        let (rtx, rrx) = mpsc::channel();
+        for id in 0..40u64 {
+            let gen = 1 + (id as usize % 3);
+            tx.send(Request {
+                id,
+                tokens: vec![id as u16, 3],
+                gen,
+                submitted: Instant::now(),
+                resp_tx: rtx.clone(),
+                stream_tx: None,
+            })
+            .unwrap();
+        }
+        drop(tx);
+        drop(rtx);
+        let mut seen = 0;
+        while let Ok(resp) = rrx.recv() {
+            let gen = 1 + (resp.id as usize % 3);
+            assert_eq!(resp.generated, mock_reference(&[resp.id as u16, 3], gen));
+            assert_eq!(resp.next_token, resp.generated[0]);
+            seen += 1;
+        }
+        let stats = handle.join().unwrap();
+        assert_eq!(seen, 40);
+        assert_eq!(stats.requests, 40);
+        assert_eq!(
+            stats.gen_tokens,
+            (0..40).map(|id| 1 + (id as usize % 3)).sum::<usize>()
+        );
+        assert_eq!(stats.ttft.len(), 40);
+        assert_eq!(stats.latency.len(), 40);
+    }
+}

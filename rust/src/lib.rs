@@ -53,8 +53,17 @@
 //! ([`model::Transformer::prefill_with`], filling the INT4 KV cache) and
 //! then decoded in lockstep ([`model::Transformer::decode_step_batch`],
 //! one shared activation pack + M = batch popcount GEMMs per
-//! projection). See `docs/ARCHITECTURE.md` for the layer diagram and
-//! the paper-equation → code map, and `docs/SERVING.md` for `bwa serve`.
+//! projection). The **continuous-batching scheduler**
+//! ([`coordinator::scheduler`]) replaces the batch barrier for the
+//! `bwa-cont` serve path: a slot pool of decode sessions, admission of
+//! queued requests at step boundaries (prefill-on-join on the same
+//! worker pool, ragged batched decode via
+//! [`model::Transformer::decode_step_batch_refs`]), per-token streaming
+//! with TTFT/ITL metrics, and immediate retirement — bit-identical per
+//! sequence to the lockstep engine. See `docs/ARCHITECTURE.md` for the
+//! layer diagram and the paper-equation → code map, `docs/SERVING.md`
+//! for `bwa serve`, and `docs/SCHEDULING.md` for the scheduler's
+//! request lifecycle and metric definitions.
 //!
 //! Layers (see DESIGN.md):
 //! - L1: Pallas kernel (python, build time) — `python/compile/kernels/`

@@ -10,8 +10,10 @@
 //! - `eval`     — perplexity + zero-shot evaluation of a (model, method);
 //!                `--artifact` evaluates a compiled artifact directly.
 //! - `bench`    — regenerate a paper table/figure (see DESIGN.md §5).
-//! - `serve`    — run the batching coordinator; `--artifact` serves a
-//!                compiled artifact without re-quantizing.
+//! - `serve`    — run the serving coordinator (lockstep batcher or the
+//!                continuous-batching scheduler, `--backend bwa-cont`);
+//!                `--artifact` serves a compiled artifact without
+//!                re-quantizing.
 
 use bwa_llm::baselines;
 use bwa_llm::data::corpus::CorpusSpec;
@@ -66,9 +68,11 @@ fn print_help() {
          \x20           [--out artifacts/quant/tiny.bwa]\n\
          \x20 eval      --model artifacts/models/tiny.bin --method bwa [--artifact f.bwa] [--quick]\n\
          \x20 bench     --exp fig1|table1|table2|table3|table4|table5|table6|table7|table9|fig3|fig4 [--quick]\n\
-         \x20 serve     [--model ckpt.bin | --artifact f.bwa] [--backend pjrt|native|bwa|bwa-seq]\n\
+         \x20 serve     [--model ckpt.bin | --artifact f.bwa]\n\
+         \x20           [--backend pjrt|native|bwa|bwa-seq|bwa-cont]\n\
          \x20           [--requests N] [--clients C] [--prompt-len P] [--gen G] [--batch B]\n\
-         \x20           [--wait-us U] [--workers W] [--seed S]\n\n\
+         \x20           [--wait-us U] [--workers W] [--seed S] [--stagger-us U]\n\
+         \x20           [--max-active N] [--admit eager|drain]   (bwa-cont scheduler knobs)\n\n\
          methods: {}\n\n\
          quantize once, serve many: `bwa quantize --out m.bwa` compiles the model to a\n\
          checksummed artifact; `bwa serve --artifact m.bwa` / `bwa eval --artifact m.bwa`\n\

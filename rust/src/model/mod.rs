@@ -702,6 +702,24 @@ impl Transformer {
         tokens: &[u16],
         threads: usize,
     ) -> Tensor {
+        let mut refs: Vec<&mut DecodeSession> = sessions.iter_mut().collect();
+        self.decode_step_batch_refs(&mut refs, tokens, threads)
+    }
+
+    /// [`Self::decode_step_batch`] over `&mut` references instead of a
+    /// contiguous slice of sessions. The continuous scheduler
+    /// ([`crate::coordinator::scheduler`]) keeps each session inside its
+    /// slot struct and hands the *ragged active subset* in by reference —
+    /// sessions at different positions, admitted at different step
+    /// boundaries — without moving sessions in and out of the slots every
+    /// step. Row semantics are identical to [`Self::decode_step_batch`]:
+    /// row `r` is bit-identical to `decode_step(sessions[r], tokens[r])`.
+    pub fn decode_step_batch_refs(
+        &self,
+        sessions: &mut [&mut DecodeSession],
+        tokens: &[u16],
+        threads: usize,
+    ) -> Tensor {
         let b = sessions.len();
         assert_eq!(tokens.len(), b, "one token per session");
         let d = self.cfg.d_model;

@@ -27,6 +27,11 @@ target/release/bwa quantize --model "$smoke/tiny.bin" --method bwa \
   --calib-seqs 4 --calib-len 48 --out "$smoke/tiny.bwa"
 target/release/bwa serve --artifact "$smoke/tiny.bwa" --backend bwa \
   --requests 4 --clients 2 --prompt-len 12 --gen 2 --batch 4
+# Continuous-batching scheduler: staggered arrivals (think-time clients)
+# admitted mid-flight into the slot pool, streamed decode, TTFT/ITL report.
+target/release/bwa serve --artifact "$smoke/tiny.bwa" --backend bwa-cont \
+  --requests 6 --clients 3 --prompt-len 12 --gen 3 \
+  --max-active 4 --admit eager --stagger-us 2000
 target/release/bwa eval --artifact "$smoke/tiny.bwa" --quick
 
 echo "== cargo doc (rustdoc warnings are errors) =="

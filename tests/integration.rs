@@ -333,6 +333,7 @@ fn batcher_drains_burst_in_full_batches() {
             gen: 2,
             submitted: Instant::now(),
             resp_tx: rtx.clone(),
+            stream_tx: None,
         })
         .unwrap();
     }
@@ -357,4 +358,66 @@ fn batcher_drains_burst_in_full_batches() {
     assert_eq!(stats.batches, 2, "16 pre-queued requests at max_batch 8");
     assert!((stats.mean_batch - 8.0).abs() < 1e-9, "{}", stats.mean_batch);
     assert_eq!(stats.gen_tokens, 32);
+}
+
+/// The continuous-batching scheduler through the whole stack (staggered
+/// clients → mpsc → run_scheduler → TransformerBackend) on a quantized
+/// random checkpoint: every request is served, every token is accounted
+/// at token granularity (one TTFT sample per request, gen-1 ITL samples
+/// per request), and occupancy respects the slot-pool bound. (Whether
+/// requests *overlap* here depends on host timing; deterministic
+/// overlap/admission pins live in `coordinator/scheduler.rs` tests.)
+#[test]
+fn continuous_scheduler_serves_staggered_arrivals_end_to_end() {
+    use bwa_llm::coordinator::scheduler::{AdmissionPolicy, SchedulerConfig, TransformerBackend};
+    use bwa_llm::coordinator::{serve_continuous_load, Workload};
+    use bwa_llm::model::config::ModelConfig;
+    use std::time::Duration;
+
+    let cfg = ModelConfig {
+        name: "it-cont".into(),
+        vocab_size: 512,
+        d_model: 128,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 192,
+        max_seq: 64,
+        rope_theta: 10000.0,
+        rmsnorm_eps: 1e-5,
+    };
+    let ck = Checkpoint::random(&cfg, 37);
+    let calib: Vec<Vec<u16>> = (0..4u16)
+        .map(|s| (0..32u16).map(|t| (s * 37 + t * 11) % 512).collect())
+        .collect();
+    let load = Workload {
+        requests: 12,
+        clients: 3,
+        prompt_len: 10,
+        gen: 3,
+        stagger: Duration::from_micros(500),
+        seed: 13,
+    };
+    let (name, stats, _wall) = serve_continuous_load(
+        move || {
+            let model = quantize_model(&ck, &BwaQuantizer::paper(), &calib, Some(4)).unwrap();
+            TransformerBackend::new(model, 2, "it-bwa-cont")
+        },
+        &load,
+        SchedulerConfig {
+            max_active: 4,
+            admit: AdmissionPolicy::Eager,
+        },
+    );
+    assert!(name.contains("continuous"), "{name}");
+    assert_eq!(stats.requests, 12);
+    assert_eq!(stats.gen_tokens, 12 * 3, "every request generates gen tokens");
+    assert_eq!(stats.ttft.len(), 12, "one TTFT sample per request");
+    assert_eq!(stats.itl.len(), 12 * 2, "gen - 1 ITL samples per request");
+    assert_eq!(stats.latency.len(), 12);
+    assert!(
+        (1.0..=4.0).contains(&stats.mean_active),
+        "occupancy must stay within the slot-pool bound, got {}",
+        stats.mean_active
+    );
+    assert!(stats.steps >= 2, "multi-token decode must take batched steps");
 }
