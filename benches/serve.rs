@@ -16,6 +16,15 @@
 //! continuous-over-lockstep throughput under the arrival pattern the
 //! scheduler exists for.
 //!
+//! A third, **shared-prefix** workload (every client leads with the same
+//! system-prompt tokens) compares the continuous scheduler cold
+//! (private contiguous caches, full prefill per request) against the
+//! **paged KV pool** (`kvpool`): admissions after the first adopt the
+//! cached prefix blocks and prefill only their suffix. Recorded under
+//! `shared_prefix` in `BENCH_serve.json`: `prefix_hit_rate`,
+//! `prefix_tokens_reused`, `kv_blocks_peak`, and
+//! `speedup_prefix_tok_per_s`.
+//!
 //! Results (req/s, generated tok/s, latency percentiles, and the
 //! speedups) are printed and recorded into `BENCH_serve.json` at the
 //! repo root so the perf trajectory tracks end-to-end serving
@@ -35,6 +44,7 @@ use bwa_llm::coordinator::{
     serve_continuous_load, serve_lockstep_load, serve_workload_stats, NativeBackend,
     ParallelBackend, Workload,
 };
+use bwa_llm::kvpool::KvPoolConfig;
 use bwa_llm::model::checkpoint::Checkpoint;
 use bwa_llm::model::config::ModelConfig;
 use bwa_llm::model::{quantize_model, Transformer};
@@ -53,6 +63,11 @@ const SEED: u64 = 7;
 /// mid-decode of other requests, short enough that the pool stays busy.
 const STAGGER_US: u64 = 2500;
 const STAGGER_CLIENTS: usize = 8;
+/// Shared system-prompt length for the prefix-reuse workload: spans two
+/// full KV blocks, so every post-cold admission adopts 16 cached rows.
+const SHARED_PREFIX: usize = 16;
+const KV_BLOCK_TOKENS: usize = 8;
+const KV_BLOCKS: usize = 512;
 
 fn quantized(cfg: &ModelConfig, seed: u64) -> Transformer {
     let ck = Checkpoint::random(cfg, seed);
@@ -102,9 +117,28 @@ fn record(name: &str, stats: &BatcherStats, wall: f64) -> Json {
 
 /// Like [`record`] but for the continuous scheduler's token-granular
 /// stats: TTFT/ITL percentiles and slot-pool occupancy on top of the
-/// request-level numbers.
+/// request-level numbers. A backend serving from a paged KV pool adds
+/// the pool-occupancy and prefix-reuse fields.
 fn record_continuous(name: &str, stats: &SchedulerStats, wall: f64) -> Json {
-    Json::obj(vec![
+    let mut fields = record_continuous_fields(name, stats, wall);
+    if let Some(kv) = &stats.kv {
+        fields.push(("kv_blocks", Json::num(kv.blocks_capacity as f64)));
+        fields.push(("kv_block_tokens", Json::num(kv.block_tokens as f64)));
+        fields.push(("kv_blocks_peak", Json::num(kv.blocks_peak as f64)));
+        fields.push(("kv_blocks_in_use", Json::num(kv.blocks_in_use as f64)));
+        fields.push(("prefix_hit_rate", Json::num(kv.hit_rate())));
+        fields.push(("prefix_hits", Json::num(kv.prefix_hits as f64)));
+        fields.push(("prefix_tokens_reused", Json::num(kv.prefix_tokens_reused as f64)));
+    }
+    Json::obj(fields)
+}
+
+fn record_continuous_fields(
+    name: &str,
+    stats: &SchedulerStats,
+    wall: f64,
+) -> Vec<(&'static str, Json)> {
+    vec![
         ("backend", Json::str(name)),
         ("requests", Json::num(stats.requests as f64)),
         ("gen_tokens", Json::num(stats.gen_tokens as f64)),
@@ -123,7 +157,7 @@ fn record_continuous(name: &str, stats: &SchedulerStats, wall: f64) -> Json {
         ("queue_wait_p99_us", Json::num(stats.queue_wait.percentile(0.99))),
         ("p50_latency_us", Json::num(stats.latency.percentile(0.5))),
         ("p99_latency_us", Json::num(stats.latency.percentile(0.99))),
-    ])
+    ]
 }
 
 fn main() {
@@ -195,6 +229,7 @@ fn main() {
         clients: STAGGER_CLIENTS,
         prompt_len: PROMPT_LEN,
         gen: GEN,
+        shared_prefix: 0,
         stagger: Duration::from_micros(STAGGER_US),
         seed: SEED,
     };
@@ -251,6 +286,81 @@ fn main() {
     let speedup_cont = ct_stats.tokens_per_s / ls_stats.tokens_per_s.max(1e-9);
     println!("continuous-over-lockstep speedup (staggered arrivals): {speedup_cont:.2}x");
 
+    // --- shared-prefix arrivals: continuous scheduler, cold vs paged ---
+    // Every client leads with the same SHARED_PREFIX system-prompt
+    // tokens. The cold side re-prefills that prefix for every request
+    // (private contiguous caches); the paged side serves it from the
+    // block pool after the first admission — prefill work drops from
+    // prompt_len to prompt_len - matched per request.
+    let spfx = Workload {
+        requests: REQUESTS,
+        clients: STAGGER_CLIENTS,
+        prompt_len: PROMPT_LEN,
+        gen: GEN,
+        shared_prefix: SHARED_PREFIX,
+        stagger: Duration::from_micros(STAGGER_US),
+        seed: SEED,
+    };
+    println!(
+        "== shared-prefix arrivals ({SHARED_PREFIX} of {PROMPT_LEN} prompt tokens shared, \
+         {KV_BLOCKS} kv blocks x {KV_BLOCK_TOKENS} tok) =="
+    );
+    let scfg = SchedulerConfig {
+        max_active: MAX_BATCH,
+        admit: AdmissionPolicy::Eager,
+    };
+    let path = art_path.clone();
+    let (cold_name, cold_stats, cold_wall) = serve_continuous_load(
+        move || {
+            let model = bwa_llm::artifact::load(&path).expect("artifact").model;
+            TransformerBackend::new(model, workers, "bwa")
+        },
+        &spfx,
+        scfg,
+    );
+    println!(
+        "{cold_name:<28} {:>7.2} req/s  {:>8.1} tok/s  (no prefix reuse)",
+        cold_stats.throughput_rps,
+        cold_stats.tokens_per_s,
+    );
+    let path = art_path.clone();
+    let (re_name, re_stats, re_wall) = serve_continuous_load(
+        move || {
+            let model = bwa_llm::artifact::load(&path).expect("artifact").model;
+            TransformerBackend::with_kv_pool(
+                model,
+                workers,
+                "bwa",
+                KvPoolConfig {
+                    blocks: KV_BLOCKS,
+                    block_tokens: KV_BLOCK_TOKENS,
+                },
+            )
+        },
+        &spfx,
+        scfg,
+    );
+    let re_kv = re_stats.kv.expect("paged backend reports kv stats");
+    println!(
+        "{re_name:<28} {:>7.2} req/s  {:>8.1} tok/s",
+        re_stats.throughput_rps,
+        re_stats.tokens_per_s,
+    );
+    println!(
+        "  prefix hits {}/{} (rate {:.2}) | {} prompt tokens reused | kv blocks peak {}/{}",
+        re_kv.prefix_hits,
+        re_kv.prefix_requests,
+        re_kv.hit_rate(),
+        re_kv.prefix_tokens_reused,
+        re_kv.blocks_peak,
+        re_kv.blocks_capacity,
+    );
+    let speedup_prefix = re_stats.tokens_per_s / cold_stats.tokens_per_s.max(1e-9);
+    println!(
+        "prefix-reuse speedup over cold continuous (shared-prefix arrivals): \
+         {speedup_prefix:.2}x"
+    );
+
     let json = Json::obj(vec![
         ("model", Json::str(cfg.name.as_str())),
         ("params", Json::num(cfg.param_count() as f64)),
@@ -274,6 +384,23 @@ fn main() {
                 ("lockstep", record("bwa-lockstep", &ls_stats, ls_wall)),
                 ("continuous", record_continuous("bwa-continuous", &ct_stats, ct_wall)),
                 ("speedup_continuous_tok_per_s", Json::num(speedup_cont)),
+            ]),
+        ),
+        (
+            "shared_prefix",
+            Json::obj(vec![
+                ("shared_prefix_tokens", Json::num(SHARED_PREFIX as f64)),
+                ("kv_blocks", Json::num(KV_BLOCKS as f64)),
+                ("kv_block_tokens", Json::num(KV_BLOCK_TOKENS as f64)),
+                ("stagger_us", Json::num(STAGGER_US as f64)),
+                ("clients", Json::num(STAGGER_CLIENTS as f64)),
+                ("max_active", Json::num(MAX_BATCH as f64)),
+                ("cold", record_continuous("bwa-cont-cold", &cold_stats, cold_wall)),
+                ("reuse", record_continuous("bwa-cont-prefix", &re_stats, re_wall)),
+                ("prefix_hit_rate", Json::num(re_kv.hit_rate())),
+                ("prefix_tokens_reused", Json::num(re_kv.prefix_tokens_reused as f64)),
+                ("kv_blocks_peak", Json::num(re_kv.blocks_peak as f64)),
+                ("speedup_prefix_tok_per_s", Json::num(speedup_prefix)),
             ]),
         ),
     ]);

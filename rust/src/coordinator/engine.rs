@@ -61,28 +61,60 @@ pub(crate) fn prefill_pool(
     seqs: &[&[u16]],
     gens: &[usize],
 ) -> Vec<(DecodeSession, Vec<f32>)> {
+    let sessions = seqs
+        .iter()
+        .zip(gens)
+        .map(|(s, &g)| model.new_session_with_capacity(s.len() + g))
+        .collect();
+    prefill_pool_seeded(model, workers, sessions, seqs)
+}
+
+/// [`prefill_pool`] for **pre-seeded** sessions: each session arrives
+/// with its KV caches already covering `pos` rows (an adopted shared
+/// prefix from the [`crate::kvpool::PrefixIndex`], or empty for a cold
+/// start) and is advanced through
+/// [`Transformer::prefill_suffix_with`] — only the uncached suffix of
+/// each prompt is computed. Same striping and per-worker
+/// [`PrefillScratch`] reuse as the cold pool; returns sessions and
+/// last-position logits in input order. This is the continuous
+/// scheduler's prefill path when a KV pool is configured.
+pub(crate) fn prefill_pool_seeded(
+    model: &Transformer,
+    workers: usize,
+    sessions: Vec<DecodeSession>,
+    seqs: &[&[u16]],
+) -> Vec<(DecodeSession, Vec<f32>)> {
     let b = seqs.len();
+    assert_eq!(sessions.len(), b, "one seeded session per prompt");
     let w = workers.clamp(1, b.max(1));
+    let mut parts: Vec<Vec<(usize, DecodeSession)>> = (0..w).map(|_| Vec::new()).collect();
+    for (i, sess) in sessions.into_iter().enumerate() {
+        parts[i % w].push((i, sess));
+    }
     let mut slots: Vec<Option<(DecodeSession, Vec<f32>)>> = Vec::new();
     slots.resize_with(b, || None);
     std::thread::scope(|scope| {
         let mut handles = Vec::with_capacity(w);
-        for wi in 0..w {
+        for part in parts {
             handles.push(scope.spawn(move || {
-                let mut part = Vec::new();
+                let mut out = Vec::with_capacity(part.len());
                 let mut scratch = PrefillScratch::default();
-                let mut i = wi;
-                while i < b {
-                    let mut sess = model.new_session_with_capacity(seqs[i].len() + gens[i]);
-                    let logits = model.prefill_with(&mut sess, seqs[i], &mut scratch);
-                    part.push((i, sess, logits));
-                    i += w;
+                for (i, mut sess) in part {
+                    // A session with no adopted prefix is a cold prefill
+                    // — take the hot path (no whole-cache readback); the
+                    // two are pinned bit-identical.
+                    let logits = if sess.pos == 0 {
+                        model.prefill_with(&mut sess, seqs[i], &mut scratch)
+                    } else {
+                        model.prefill_suffix_with(&mut sess, seqs[i], &mut scratch)
+                    };
+                    out.push((i, sess, logits));
                 }
-                part
+                out
             }));
         }
         for h in handles {
-            for (i, sess, logits) in h.join().expect("prefill worker") {
+            for (i, sess, logits) in h.join().expect("seeded prefill worker") {
                 slots[i] = Some((sess, logits));
             }
         }

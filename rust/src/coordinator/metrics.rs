@@ -102,6 +102,41 @@ impl Throughput {
     }
 }
 
+/// KV block-pool occupancy and prefix-reuse counters, reported by a
+/// continuous backend serving from a paged KV pool
+/// ([`crate::kvpool::BlockPool`]); `None` in [`SchedulerStats`] when the
+/// backend uses private contiguous caches. Definitions (and the block
+/// math an operator sizes `--kv-blocks` with) live in
+/// `docs/SCHEDULING.md`.
+#[derive(Clone, Copy, Debug)]
+pub struct KvCacheStats {
+    /// Rows (token positions) per block (`--block-size`).
+    pub block_tokens: usize,
+    /// Pool capacity in physical blocks (`--kv-blocks`). One request
+    /// holding `r` rows costs `ceil(r / block_tokens) × n_layers × 2`
+    /// physical blocks.
+    pub blocks_capacity: usize,
+    /// Blocks allocated at the end of the run — sessions have retired,
+    /// so these are the blocks pinned by the prefix index (the reusable
+    /// cache), not a leak.
+    pub blocks_in_use: usize,
+    /// High-water mark of allocated blocks over the run.
+    pub blocks_peak: usize,
+    /// Requests admitted through the paged path.
+    pub prefix_requests: usize,
+    /// Admissions whose prompt matched ≥ 1 cached row.
+    pub prefix_hits: usize,
+    /// Total prompt rows adopted from the cache instead of prefilled.
+    pub prefix_tokens_reused: usize,
+}
+
+impl KvCacheStats {
+    /// Fraction of admissions that reused any cached prefix.
+    pub fn hit_rate(&self) -> f64 {
+        self.prefix_hits as f64 / (self.prefix_requests.max(1)) as f64
+    }
+}
+
 /// Final statistics returned by the continuous scheduler
 /// ([`crate::coordinator::scheduler::run_scheduler`]) when its request
 /// channel closes. Token-granular where [`super::batcher::BatcherStats`]
@@ -136,6 +171,34 @@ pub struct SchedulerStats {
     pub throughput_rps: f64,
     /// Generated tokens / serving window.
     pub tokens_per_s: f64,
+    /// KV block-pool occupancy + prefix-reuse counters; `None` unless
+    /// the backend serves from a paged KV pool.
+    pub kv: Option<KvCacheStats>,
+}
+
+#[cfg(test)]
+mod kv_tests {
+    use super::KvCacheStats;
+
+    #[test]
+    fn hit_rate_is_hits_over_requests() {
+        let s = KvCacheStats {
+            block_tokens: 16,
+            blocks_capacity: 64,
+            blocks_in_use: 8,
+            blocks_peak: 32,
+            prefix_requests: 8,
+            prefix_hits: 6,
+            prefix_tokens_reused: 96,
+        };
+        assert!((s.hit_rate() - 0.75).abs() < 1e-12);
+        let empty = KvCacheStats {
+            prefix_requests: 0,
+            prefix_hits: 0,
+            ..s
+        };
+        assert_eq!(empty.hit_rate(), 0.0);
+    }
 }
 
 #[cfg(test)]

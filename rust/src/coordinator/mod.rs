@@ -18,8 +18,14 @@
 //!                the in-flight decode set at step boundaries
 //!                (`--max-active` slots, `--admit` policy), every token
 //!                streams as it is produced, and finished sessions retire
-//!                immediately — no batch barrier. Reports TTFT and ITL on
-//!                top of the batcher's request-level metrics.
+//!                immediately — no batch barrier. Serves its INT4 KV
+//!                caches from the **paged KV pool** ([`crate::kvpool`]):
+//!                `--kv-blocks` blocks of `--block-size` rows gate
+//!                admission by actual memory, and prompts sharing a
+//!                cached prefix (`--shared-prefix` makes every client
+//!                lead with one system prompt) skip re-prefilling it.
+//!                Reports TTFT/ITL plus pool occupancy and prefix-hit
+//!                lines on top of the batcher's request-level metrics.
 //!
 //! The `bwa`/`bwa-seq` backends accept a **preloaded** model: pass
 //! `--artifact <path>.bwa` (written by `bwa quantize --out`) and cold
@@ -40,6 +46,7 @@ use crate::coordinator::batcher::{run_batcher, Backend, BatcherConfig, BatcherSt
 use crate::coordinator::metrics::SchedulerStats;
 use crate::coordinator::scheduler::{run_scheduler, SchedulerConfig, SessionBackend};
 use crate::data::corpus::CorpusSpec;
+use crate::kvpool::KvPoolConfig;
 use crate::model::checkpoint::Checkpoint;
 use crate::model::Transformer;
 use crate::util::cli::{Args, Spec};
@@ -104,6 +111,9 @@ static SERVE_SPEC: Spec = Spec {
         ("wait-us", "2000", "max batching wait (us, lockstep backends)"),
         ("max-active", "8", "bwa-cont: slot-pool size (max in-flight decode sessions)"),
         ("admit", "eager", "bwa-cont: admission policy, eager | drain"),
+        ("kv-blocks", "0", "bwa-cont: KV block-pool capacity in physical blocks (0 = auto-size)"),
+        ("block-size", "16", "bwa-cont: KV-cache rows (token positions) per block"),
+        ("shared-prefix", "0", "workload: common system-prompt tokens leading every prompt"),
         ("stagger-us", "0", "per-client think time between submissions (0 = back-to-back)"),
         ("workers", "0", "engine worker threads (0 = all cores)"),
         ("seed", "7", "workload seed"),
@@ -144,6 +154,18 @@ pub fn cmd_serve(args: &Args) -> Result<(), String> {
     }
     let admit: scheduler::AdmissionPolicy = args.str_or("admit", "eager").parse()?;
     let stagger_us = args.u64_or("stagger-us", 0).map_err(|e| e.to_string())?;
+    let kv_blocks = args.usize_or("kv-blocks", 0).map_err(|e| e.to_string())?;
+    let block_tokens = args.usize_or("block-size", 16).map_err(|e| e.to_string())?;
+    if block_tokens == 0 {
+        return Err("--block-size must be >= 1".into());
+    }
+    let shared_prefix = args.usize_or("shared-prefix", 0).map_err(|e| e.to_string())?;
+    if shared_prefix >= prompt_len.max(1) {
+        return Err(format!(
+            "--shared-prefix {shared_prefix} must be smaller than --prompt-len {prompt_len} \
+             (at least one prompt token must differ per request)"
+        ));
+    }
 
     let model_path = model_path.to_string();
     let artifact_path = args.str_or("artifact", "").to_string();
@@ -188,16 +210,63 @@ pub fn cmd_serve(args: &Args) -> Result<(), String> {
         other => return Err(format!("unknown backend '{other}'")),
     };
 
-    // Reject an oversized workload up front (the engine and model assert
-    // the same bound, but mid-serve that panics the batcher thread).
+    // Reject an unservable workload up front, with the check derived
+    // from how the chosen backend actually backs its KV cache.
+    let mut kv_cfg: Option<KvPoolConfig> = None;
     if let Some(m) = &prepared {
-        let need = prompt_len + gen.saturating_sub(1);
-        if need > m.cfg.max_seq {
-            return Err(format!(
-                "prompt-len {prompt_len} + gen {gen} needs {need} positions, but model '{}' \
-                 supports max_seq {}",
-                m.cfg.name, m.cfg.max_seq
-            ));
+        if backend_kind == "bwa-cont" {
+            // Paged path: the model's context window still bounds each
+            // request (RoPE positions past max_seq are outside the
+            // model's contract, and every other serving path refuses
+            // them)...
+            let rows = prompt_len + gen.saturating_sub(1);
+            if rows > m.cfg.max_seq {
+                return Err(format!(
+                    "prompt-len {prompt_len} + gen {gen} needs {rows} positions, but model \
+                     '{}' supports max_seq {} — lower --prompt-len/--gen",
+                    m.cfg.name, m.cfg.max_seq
+                ));
+            }
+            // ...while *capacity* is the KV block pool, not a contiguous
+            // per-request reservation. The worst-case budget comes from
+            // the same formula admission reserves with
+            // (`KvPoolConfig::worst_case_blocks`; block math in
+            // docs/SCHEDULING.md).
+            let mut pool_cfg = KvPoolConfig {
+                blocks: 0,
+                block_tokens,
+            };
+            let per_request = pool_cfg.worst_case_blocks(prompt_len, gen, m.cfg.n_layers);
+            pool_cfg.blocks = if kv_blocks == 0 {
+                // auto-size: every slot's worst case, x2 so the prefix
+                // cache can retain published prompts between requests
+                2 * max_active * per_request
+            } else {
+                kv_blocks
+            };
+            if per_request > pool_cfg.blocks {
+                return Err(format!(
+                    "one request needs up to {per_request} KV blocks ({rows} rows at \
+                     {block_tokens} tokens/block x {} layers x K/V), but the pool holds \
+                     {} — raise --kv-blocks (or --block-size), or shrink \
+                     --prompt-len/--gen",
+                    m.cfg.n_layers, pool_cfg.blocks
+                ));
+            }
+            kv_cfg = Some(pool_cfg);
+        } else {
+            // Lockstep backends reserve one private contiguous
+            // prompt + gen cache per request, bounded by max_seq (the
+            // engine and model assert the same; mid-serve that would
+            // panic the batcher thread).
+            let need = prompt_len + gen.saturating_sub(1);
+            if need > m.cfg.max_seq {
+                return Err(format!(
+                    "prompt-len {prompt_len} + gen {gen} needs {need} contiguous KV rows, \
+                     but model '{}' supports max_seq {} — lower --prompt-len/--gen",
+                    m.cfg.name, m.cfg.max_seq
+                ));
+            }
         }
     }
 
@@ -206,6 +275,7 @@ pub fn cmd_serve(args: &Args) -> Result<(), String> {
         clients,
         prompt_len,
         gen,
+        shared_prefix,
         stagger: Duration::from_micros(stagger_us),
         seed,
     };
@@ -214,9 +284,21 @@ pub fn cmd_serve(args: &Args) -> Result<(), String> {
     // step boundaries instead of batch drains), so it branches off here.
     if backend_kind == "bwa-cont" {
         let model = prepared.expect("prepared model");
+        let pool_cfg = kv_cfg.expect("bwa-cont sized its pool above");
+        println!(
+            "kv pool: {} blocks x {} tokens/block ({} layers x K/V)",
+            pool_cfg.blocks, pool_cfg.block_tokens, model.cfg.n_layers
+        );
         let scfg = SchedulerConfig { max_active, admit };
         let (name, stats, wall) = serve_continuous_load(
-            move || TransformerBackend::new(model, workers, "native-bwa W(1+1)A(1x4)"),
+            move || {
+                TransformerBackend::with_kv_pool(
+                    model,
+                    workers,
+                    "native-bwa W(1+1)A(1x4)",
+                    pool_cfg,
+                )
+            },
             &load,
             scfg,
         );
@@ -283,6 +365,13 @@ pub struct Workload {
     pub prompt_len: usize,
     /// Greedy tokens generated per request.
     pub gen: usize,
+    /// Leading tokens shared by **every** client's prompts — the
+    /// system-prompt pattern. The shared prefix is sampled once from the
+    /// workload seed (identical across clients); each request appends
+    /// its own `prompt_len - shared_prefix` random tokens. With the
+    /// paged `bwa-cont` backend this is the workload that exercises
+    /// prefix reuse: only the first admission prefills the prefix.
+    pub shared_prefix: usize,
     /// Per-client think time before each submission after the first;
     /// client `c`'s first submission is offset by `c * stagger / clients`
     /// so clients start out of phase.
@@ -319,6 +408,16 @@ where
                 let mut rng = Rng::new(load.seed ^ (c as u64) << 16);
                 let stream =
                     crate::data::corpus::train_split(&CorpusSpec::wiki(), 20_000 + c * 1000);
+                // The shared system prefix is a function of the workload
+                // seed alone, so every client derives the same tokens.
+                let shared: Vec<u16> = if load.shared_prefix > 0 {
+                    let sys = crate::data::corpus::train_split(&CorpusSpec::wiki(), 20_000);
+                    let start = (load.seed as usize).wrapping_mul(131)
+                        % (sys.len() - load.shared_prefix);
+                    sys[start..start + load.shared_prefix].to_vec()
+                } else {
+                    Vec::new()
+                };
                 let (rtx, rrx) = mpsc::channel();
                 if !load.stagger.is_zero() {
                     std::thread::sleep(load.stagger * c as u32 / clients as u32);
@@ -327,8 +426,10 @@ where
                     if i > 0 && !load.stagger.is_zero() {
                         std::thread::sleep(load.stagger);
                     }
+                    let suffix = load.prompt_len - load.shared_prefix;
                     let start = rng.below(stream.len() - load.prompt_len);
-                    let tokens = stream[start..start + load.prompt_len].to_vec();
+                    let mut tokens = shared.clone();
+                    tokens.extend_from_slice(&stream[start..start + suffix]);
                     tx.send(Request {
                         id: (id_base + i) as u64,
                         tokens,
@@ -425,7 +526,7 @@ fn lockstep_report(
 /// token-granular lines (TTFT, ITL, slot occupancy); field definitions
 /// in `docs/SCHEDULING.md`.
 pub fn continuous_report(name: &str, load: &Workload, stats: &SchedulerStats, wall: f64) -> String {
-    format!(
+    let mut report = format!(
         "== serve report ({name}) ==\n\
          requests:    {}\n\
          clients:     {}\n\
@@ -448,7 +549,22 @@ pub fn continuous_report(name: &str, load: &Workload, stats: &SchedulerStats, wa
         stats.itl.report("itl"),
         stats.latency.report("latency"),
         stats.queue_wait.report("queue wait"),
-    )
+    );
+    if let Some(kv) = &stats.kv {
+        report.push_str(&format!(
+            "\nkv pool:     {}/{} blocks in use (peak {}, {} tok/block)\n\
+             prefix hits: {}/{} admissions (rate {:.2}) | {} prompt tokens reused",
+            kv.blocks_in_use,
+            kv.blocks_capacity,
+            kv.blocks_peak,
+            kv.block_tokens,
+            kv.prefix_hits,
+            kv.prefix_requests,
+            kv.hit_rate(),
+            kv.prefix_tokens_reused,
+        ));
+    }
+    report
 }
 
 /// Closed-loop workload: `clients` threads each submit requests
@@ -528,6 +644,7 @@ where
         clients,
         prompt_len,
         gen,
+        shared_prefix: 0,
         stagger: Duration::ZERO,
         seed,
     };

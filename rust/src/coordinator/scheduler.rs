@@ -29,6 +29,25 @@
 //! independently — admission order changes *when* a token is computed,
 //! never its value (test-pinned below).
 //!
+//! # KV memory as the admission gate
+//!
+//! A backend built with [`TransformerBackend::with_kv_pool`] serves its
+//! INT4 KV caches from a paged [`BlockPool`] instead of private
+//! contiguous allocations. Admission then goes through
+//! [`SessionBackend::try_reserve`]: the backend matches the prompt
+//! against its [`PrefixIndex`] (adopting the longest cached
+//! block-aligned prefix — refcount bumps, no recompute), reserves the
+//! request's remaining block budget against the pool, and evicts
+//! least-recently-used cached prefixes if that is what it takes. A
+//! request whose budget does not fit stays queued (FIFO — nothing
+//! behind it jumps ahead), so the scheduler admits by **actual memory**,
+//! not just slot count, and can never exceed the configured block
+//! budget (test-pinned). Prefill then computes only the unmatched
+//! suffix ([`Transformer::prefill_suffix_with`]) — bit-identical to a
+//! cold prefill — and publishes the new prompt blocks for the next
+//! request to reuse. Retiring sessions release their blocks; pool
+//! occupancy and prefix-hit counters land in [`SchedulerStats::kv`].
+//!
 //! # Example: two staggered requests through a mock backend
 //!
 //! The scheduler is generic over [`SessionBackend`], so the serve loop
@@ -101,12 +120,14 @@
 //! ```
 
 use super::batcher::{Request, Response, StreamEvent};
-use super::engine::prefill_pool;
-use super::metrics::{Histogram, SchedulerStats};
+use super::engine::{prefill_pool, prefill_pool_seeded};
+use super::metrics::{Histogram, KvCacheStats, SchedulerStats};
+use crate::kvpool::{BlockPool, KvPoolConfig, PrefixIndex, PrefixMatch};
 use crate::model::{DecodeSession, Transformer};
 use crate::util::argmax;
 use std::collections::VecDeque;
 use std::sync::mpsc::{Receiver, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 /// When queued requests may enter the slot pool.
@@ -175,27 +196,148 @@ pub trait SessionBackend {
     /// the sessions may sit at *different* absolute positions) and
     /// return the next greedy token per session.
     fn decode_batch(&self, sessions: &mut [&mut Self::Session], tokens: &[u16]) -> Vec<u16>;
+
+    /// Secure whatever capacity admitting `(prompt, gen)` needs at this
+    /// step boundary — for a paged-KV backend, match the prompt against
+    /// the prefix cache and reserve the remaining block budget (evicting
+    /// reusable cache if necessary). `false` keeps the request queued.
+    ///
+    /// Contract: the scheduler passes every `try_reserve == true`
+    /// request of a boundary to [`Self::prefill_batch`], in reservation
+    /// order, before the next boundary. The default (backends without a
+    /// memory budget) admits everything.
+    fn try_reserve(&self, prompt: &[u16], gen: usize) -> bool {
+        let _ = (prompt, gen);
+        true
+    }
+
+    /// KV pool occupancy + prefix-reuse counters, if this backend serves
+    /// from a paged KV pool.
+    fn kv_stats(&self) -> Option<KvCacheStats> {
+        None
+    }
+}
+
+/// A prefix match adopted at reservation time, waiting for its
+/// `prefill_batch` — the adoption pins the matched blocks so eviction
+/// between reservation and prefill cannot invalidate the budget.
+struct PendingAdmission {
+    prompt: Vec<u16>,
+    matched: PrefixMatch,
+}
+
+/// Prefix-reuse counters accumulated by the paged admission path.
+#[derive(Clone, Copy, Default)]
+struct PrefixCounters {
+    requests: usize,
+    hits: usize,
+    tokens_reused: usize,
+}
+
+/// Paged-KV serving state for a [`TransformerBackend`]: the block pool,
+/// the prefix index, reservations adopted but not yet prefilled, and
+/// reuse counters. Locks are taken only at admission/publish boundaries
+/// on the scheduler thread — decode reads never touch them.
+struct KvServing {
+    pool: Arc<BlockPool>,
+    index: Mutex<PrefixIndex>,
+    pending: Mutex<VecDeque<PendingAdmission>>,
+    stats: Mutex<PrefixCounters>,
+}
+
+impl Drop for KvServing {
+    fn drop(&mut self) {
+        // Reservations that never reached prefill still hold adopted
+        // block references — release them so the pool balances.
+        for pa in self.pending.lock().unwrap().drain(..) {
+            pa.matched.release(&self.pool);
+        }
+    }
 }
 
 /// The real-model [`SessionBackend`]: prefill-on-join across the scoped
 /// worker pool (shared with the lockstep engine) and ragged batched
 /// decode via [`Transformer::decode_step_batch_refs`] — the packed
 /// popcount kernel with one activation pack + M = batch GEMMs per
-/// projection.
+/// projection. Built [`with_kv_pool`](Self::with_kv_pool), it serves the
+/// KV caches from a paged block pool with shared-prefix reuse and gates
+/// admission on actual free blocks.
 pub struct TransformerBackend {
     pub model: Transformer,
     /// Worker threads for prefill-on-join and the batched-decode GEMMs.
     pub workers: usize,
     pub label: String,
+    kv: Option<KvServing>,
 }
 
 impl TransformerBackend {
+    /// Backend with private contiguous KV caches (one `prompt + gen`
+    /// allocation per request) — no sharing, no memory gate.
     pub fn new(model: Transformer, workers: usize, label: impl Into<String>) -> Self {
         Self {
             model,
             workers: workers.max(1),
             label: label.into(),
+            kv: None,
         }
+    }
+
+    /// Backend serving its KV caches from a paged [`BlockPool`] of
+    /// `cfg.blocks` blocks × `cfg.block_tokens` rows, with a
+    /// [`PrefixIndex`] for shared-prefix reuse. Admission
+    /// ([`SessionBackend::try_reserve`]) is gated on the pool's free
+    /// blocks; prompts prefill only their uncached suffix and publish
+    /// their blocks for later requests.
+    pub fn with_kv_pool(
+        model: Transformer,
+        workers: usize,
+        label: impl Into<String>,
+        cfg: KvPoolConfig,
+    ) -> Self {
+        let n_layers = model.cfg.n_layers;
+        Self {
+            model,
+            workers: workers.max(1),
+            label: label.into(),
+            kv: Some(KvServing {
+                pool: Arc::new(BlockPool::new(cfg)),
+                index: Mutex::new(PrefixIndex::new(cfg.block_tokens, n_layers)),
+                pending: Mutex::new(VecDeque::new()),
+                stats: Mutex::new(PrefixCounters::default()),
+            }),
+        }
+    }
+
+    /// The KV block pool, if this backend was built with one — tests and
+    /// the serve CLI read occupancy from it.
+    pub fn kv_pool(&self) -> Option<&Arc<BlockPool>> {
+        self.kv.as_ref().map(|kv| &kv.pool)
+    }
+
+    /// Drop every cached prefix, releasing the index's block references
+    /// (sessions in flight keep theirs). After this and all retirements,
+    /// the pool reads zero blocks in use — the leak check.
+    pub fn clear_prefix_cache(&self) {
+        if let Some(kv) = &self.kv {
+            kv.index.lock().unwrap().clear(&kv.pool);
+        }
+    }
+
+    /// Physical blocks a request still needs after prefix reuse: the
+    /// worst case ([`KvPoolConfig::worst_case_blocks`] — the same
+    /// formula the serve CLI validates against) minus the matched *full*
+    /// blocks. A matched partial tail is copy-on-written by its adopter,
+    /// so it does not reduce the budget.
+    fn blocks_needed(
+        &self,
+        pool: &BlockPool,
+        prompt_len: usize,
+        gen: usize,
+        matched: &PrefixMatch,
+    ) -> usize {
+        let n_layers = self.model.cfg.n_layers;
+        let worst = pool.config().worst_case_blocks(prompt_len, gen, n_layers);
+        worst - matched.full_blocks(pool.block_tokens()) * n_layers * 2
     }
 }
 
@@ -203,19 +345,107 @@ impl SessionBackend for TransformerBackend {
     type Session = DecodeSession;
 
     fn name(&self) -> String {
-        format!("{} [continuous x{}]", self.label, self.workers)
+        match &self.kv {
+            None => format!("{} [continuous x{}]", self.label, self.workers),
+            Some(kv) => format!(
+                "{} [continuous x{}, paged kv {}x{}]",
+                self.label,
+                self.workers,
+                kv.pool.capacity(),
+                kv.pool.block_tokens()
+            ),
+        }
     }
 
     fn prefill_batch(&self, prompts: &[&[u16]], gens: &[usize]) -> Vec<(DecodeSession, u16)> {
-        prefill_pool(&self.model, self.workers, prompts, gens)
-            .into_iter()
-            .map(|(sess, logits)| (sess, argmax(&logits) as u16))
-            .collect()
+        let Some(kv) = &self.kv else {
+            return prefill_pool(&self.model, self.workers, prompts, gens)
+                .into_iter()
+                .map(|(sess, logits)| (sess, argmax(&logits) as u16))
+                .collect();
+        };
+        // Adopt each prompt's cached prefix (usually pre-adopted at
+        // reservation) and seed sessions; one index lock for the batch.
+        let mut sessions = Vec::with_capacity(prompts.len());
+        {
+            let mut index = kv.index.lock().unwrap();
+            let mut pending = kv.pending.lock().unwrap();
+            let mut counters = kv.stats.lock().unwrap();
+            for &p in prompts {
+                let matched = match pending.front() {
+                    Some(pa) if pa.prompt == p => {
+                        pending.pop_front().expect("checked front").matched
+                    }
+                    // No (or misaligned) reservation — a direct library
+                    // call. Match now instead.
+                    _ => index.lookup(p, &kv.pool),
+                };
+                counters.requests += 1;
+                if matched.rows > 0 {
+                    counters.hits += 1;
+                    counters.tokens_reused += matched.rows;
+                }
+                sessions.push(self.model.new_session_from_prefix(&kv.pool, matched));
+            }
+        }
+        // Suffix prefill across the worker pool (cold sessions prefill
+        // the whole prompt; warm ones only what the cache misses).
+        let mut out = prefill_pool_seeded(&self.model, self.workers, sessions, prompts);
+        // Publish the freshly computed prompt blocks for future reuse.
+        {
+            let mut index = kv.index.lock().unwrap();
+            for (i, (sess, _)) in out.iter_mut().enumerate() {
+                let per_layer: Vec<_> = sess
+                    .caches
+                    .iter_mut()
+                    .filter_map(|c| c.freeze_prefix(prompts[i].len()))
+                    .collect();
+                debug_assert_eq!(per_layer.len(), sess.caches.len());
+                index.insert(prompts[i], &per_layer, &kv.pool);
+            }
+        }
+        out.into_iter().map(|(sess, logits)| (sess, argmax(&logits) as u16)).collect()
     }
 
     fn decode_batch(&self, sessions: &mut [&mut DecodeSession], tokens: &[u16]) -> Vec<u16> {
         let logits = self.model.decode_step_batch_refs(sessions, tokens, self.workers);
         (0..sessions.len()).map(|r| argmax(logits.row(r)) as u16).collect()
+    }
+
+    fn try_reserve(&self, prompt: &[u16], gen: usize) -> bool {
+        let Some(kv) = &self.kv else { return true };
+        let mut index = kv.index.lock().unwrap();
+        // Adopting here (not just probing) pins the matched blocks, so a
+        // same-boundary eviction for a later request cannot shrink this
+        // match and break its budget.
+        let matched = index.lookup(prompt, &kv.pool);
+        let needed = self.blocks_needed(&kv.pool, prompt.len(), gen, &matched);
+        if !kv.pool.try_reserve(needed) {
+            index.evict_lru(&kv.pool, needed);
+            if !kv.pool.try_reserve(needed) {
+                matched.release(&kv.pool);
+                return false;
+            }
+        }
+        kv.pending.lock().unwrap().push_back(PendingAdmission {
+            prompt: prompt.to_vec(),
+            matched,
+        });
+        true
+    }
+
+    fn kv_stats(&self) -> Option<KvCacheStats> {
+        let kv = self.kv.as_ref()?;
+        let c = *kv.stats.lock().unwrap();
+        Some(KvCacheStats {
+            block_tokens: kv.pool.block_tokens(),
+            blocks_capacity: kv.pool.capacity(),
+            blocks_in_use: kv.pool.in_use(),
+            blocks_peak: kv.pool.peak(),
+            prefix_requests: c.requests,
+            prefix_hits: c.hits,
+            prefix_tokens_reused: c.tokens_reused,
+        })
     }
 }
 
@@ -320,20 +550,39 @@ impl<'a, B: SessionBackend> Scheduler<'a, B> {
             AdmissionPolicy::Drain => self.active.is_empty(),
         };
         if admit_ok && self.active.len() < self.cfg.max_active && !self.queue.is_empty() {
-            let n = (self.cfg.max_active - self.active.len()).min(self.queue.len());
-            let batch: Vec<Request> = self.queue.drain(..n).collect();
+            // Admit from the queue head while a slot is free AND the
+            // backend can reserve the request's KV budget. FIFO: the
+            // first request that does not fit holds everything behind
+            // it — retirements (and cache eviction inside try_reserve)
+            // free capacity at later boundaries.
+            let max_new = self.cfg.max_active - self.active.len();
+            let mut batch: Vec<Request> = Vec::new();
+            while batch.len() < max_new {
+                let Some(head) = self.queue.front() else { break };
+                if !self.backend.try_reserve(&head.tokens, head.gen) {
+                    break;
+                }
+                batch.push(self.queue.pop_front().expect("checked front"));
+            }
             let t_admit = Instant::now();
             for r in &batch {
                 self.queue_wait.record(t_admit - r.submitted);
             }
             let prompts: Vec<&[u16]> = batch.iter().map(|r| r.tokens.as_slice()).collect();
             let gens: Vec<usize> = batch.iter().map(|r| r.gen).collect();
-            let prefilled = self.backend.prefill_batch(&prompts, &gens);
+            let prefilled = if batch.is_empty() {
+                Vec::new()
+            } else {
+                self.backend.prefill_batch(&prompts, &gens)
+            };
             debug_assert_eq!(prefilled.len(), batch.len());
             // The in-flight set at this boundary: everything already
             // active plus the whole admission batch — what a request
             // retiring at admission (gen <= 1) shared its prefill with.
             let boundary_set = self.active.len() + batch.len();
+            // A boundary where the head could not reserve admits nothing
+            // — that is not progress (capacity frees at retirements).
+            progressed = !batch.is_empty();
             for (req, (session, first)) in batch.into_iter().zip(prefilled) {
                 let now = Instant::now();
                 let mut slot = Slot {
@@ -367,7 +616,6 @@ impl<'a, B: SessionBackend> Scheduler<'a, B> {
                     self.active.push(slot);
                 }
             }
-            progressed = true;
         }
 
         // --- one batched decode step over the ragged active set ---
@@ -454,6 +702,7 @@ impl<'a, B: SessionBackend> Scheduler<'a, B> {
             steps: self.steps,
             throughput_rps: self.retired as f64 / window,
             tokens_per_s: self.gen_tokens as f64 / window,
+            kv: self.backend.kv_stats(),
         }
     }
 }
@@ -494,7 +743,18 @@ pub fn run_scheduler<B: SessionBackend>(
             }
             continue;
         }
-        sched.step();
+        let progressed = sched.step();
+        if !progressed && sched.active() == 0 && sched.queued() > 0 {
+            // The queue head failed its KV reservation with nothing in
+            // flight: no retirement will ever free capacity, and
+            // try_reserve already evicted everything evictable. The
+            // workload is misconfigured for this pool — fail loudly
+            // (the serve CLI validates this up front).
+            panic!(
+                "queued request can never fit the KV block pool even with the prefix \
+                 cache evicted — raise --kv-blocks, or shrink --prompt-len/--gen"
+            );
+        }
     }
     sched.finish()
 }
@@ -785,6 +1045,160 @@ mod tests {
         let order: Vec<u64> = rrx.try_iter().map(|r| r.id).collect();
         assert_eq!(order, vec![0, 1], "wave order: 0 drains fully, then 1");
         assert_eq!(stats.requests, 2);
+    }
+
+    /// The paged-KV parity pin: the scheduler over a paged, prefix-
+    /// reusing backend produces exactly the tokens of the contiguous
+    /// backend and of sequential prefill + decode_step — with a shared
+    /// system prefix across the workload so later admissions really do
+    /// adopt cached blocks, and a block size that divides neither the
+    /// prefix nor the prompt.
+    #[test]
+    fn paged_prefix_reusing_scheduler_matches_contiguous_and_sequential() {
+        let model = quantized_model(81);
+        let mut rng = Rng::new(82);
+        let shared: Vec<u16> = (0..10).map(|_| rng.below(64) as u16).collect();
+        let seqs: Vec<Vec<u16>> = (0..5)
+            .map(|_| {
+                let mut s = shared.clone();
+                s.extend((0..4).map(|_| rng.below(64) as u16));
+                s
+            })
+            .collect();
+        let gens = [4usize, 1, 3, 5, 2];
+
+        // sequential reference: one sequence at a time, no batching
+        let mut want = Vec::new();
+        for (s, &g) in seqs.iter().zip(gens.iter()) {
+            let mut sess = model.new_session();
+            let mut logits = model.prefill(&mut sess, s);
+            let mut out = Vec::new();
+            for step in 0..g {
+                let next = argmax(&logits) as u16;
+                out.push(next);
+                if step + 1 < g {
+                    logits = model.decode_step(&mut sess, next);
+                }
+            }
+            want.push(out);
+        }
+
+        let drive = |backend: &TransformerBackend| -> (Vec<Vec<u16>>, SchedulerStats) {
+            let cfg = SchedulerConfig {
+                max_active: 3,
+                admit: AdmissionPolicy::Eager,
+            };
+            let mut sched = Scheduler::new(backend, cfg);
+            let (rtx, rrx) = mpsc::channel();
+            for i in 0..3 {
+                sched.submit(req(i as u64, seqs[i].clone(), gens[i], &rtx));
+            }
+            sched.step();
+            sched.step();
+            for i in 3..5 {
+                sched.submit(req(i as u64, seqs[i].clone(), gens[i], &rtx));
+            }
+            while sched.step() {}
+            let stats = sched.finish();
+            drop(rtx);
+            let mut got = vec![Vec::new(); 5];
+            for resp in rrx.try_iter() {
+                got[resp.id as usize] = resp.generated;
+            }
+            (got, stats)
+        };
+
+        let contiguous = TransformerBackend::new(quantized_model(81), 2, "cont");
+        let (got, stats) = drive(&contiguous);
+        assert_eq!(got, want, "contiguous scheduler diverged from sequential");
+        assert!(stats.kv.is_none(), "contiguous backend reports no kv stats");
+
+        let paged = TransformerBackend::with_kv_pool(
+            quantized_model(81),
+            2,
+            "cont-paged",
+            KvPoolConfig {
+                blocks: 512,
+                block_tokens: 4,
+            },
+        );
+        let (got, stats) = drive(&paged);
+        assert_eq!(got, want, "paged prefix-reusing scheduler diverged");
+        let kv = stats.kv.expect("paged backend reports kv stats");
+        assert_eq!(kv.prefix_requests, 5);
+        assert!(
+            kv.prefix_hits >= 2,
+            "requests admitted after the first boundary must hit the shared prefix \
+             (hits = {})",
+            kv.prefix_hits
+        );
+        // the 10-token shared prefix spans 2 full 4-row blocks
+        assert!(kv.prefix_tokens_reused >= 8 * 2, "reused {}", kv.prefix_tokens_reused);
+        assert!(kv.blocks_peak <= kv.blocks_capacity);
+
+        // release-on-retire: all sessions are gone; only the prefix
+        // cache pins blocks, and clearing it empties the pool.
+        let pool = paged.kv_pool().unwrap();
+        assert!(pool.in_use() > 0, "index retains published prefixes");
+        paged.clear_prefix_cache();
+        assert_eq!(pool.in_use(), 0, "no leaked blocks after a full workload");
+    }
+
+    /// The admission-pressure pin: with a pool that fits roughly one
+    /// request, the scheduler holds the queue instead of overflowing the
+    /// budget — `in_use` never exceeds capacity (the pool would panic on
+    /// an over-allocation), every request is still served, and clearing
+    /// the cache after the run leaves zero blocks in use.
+    #[test]
+    fn scheduler_never_exceeds_the_block_budget_under_pressure() {
+        let backend = TransformerBackend::with_kv_pool(
+            quantized_model(83),
+            2,
+            "tight",
+            KvPoolConfig {
+                blocks: 12,
+                block_tokens: 8,
+            },
+        );
+        let pool = backend.kv_pool().unwrap().clone();
+        // cold request: prompt 12 + gen 4 - 1 = 15 rows -> 2 blocks per
+        // stream, + 1 published-tail CoW = 3; x 2 layers x K/V = 12 —
+        // exactly the capacity, so admissions are strictly one at a time.
+        let cfg = SchedulerConfig {
+            max_active: 4,
+            admit: AdmissionPolicy::Eager,
+        };
+        let mut sched = Scheduler::new(&backend, cfg);
+        let (rtx, rrx) = mpsc::channel();
+        let mut rng = Rng::new(84);
+        for i in 0..5u64 {
+            let p: Vec<u16> = (0..12).map(|_| rng.below(64) as u16).collect();
+            sched.submit(req(i, p, 4, &rtx));
+        }
+        let mut held_back = false;
+        loop {
+            let progressed = sched.step();
+            assert!(
+                pool.in_use() <= pool.capacity(),
+                "scheduler exceeded the configured block budget"
+            );
+            if sched.active() > 0 && sched.queued() > 0 {
+                held_back = true;
+            }
+            if !progressed {
+                break;
+            }
+        }
+        assert!(sched.is_idle(), "a blocked queue with nothing active would deadlock");
+        let stats = sched.finish();
+        drop(rtx);
+        assert_eq!(stats.requests, 5, "pressure must delay requests, not drop them");
+        assert_eq!(rrx.try_iter().count(), 5);
+        assert!(held_back, "the tight pool must actually defer admissions");
+        let kv = stats.kv.expect("kv stats");
+        assert!(kv.blocks_peak <= kv.blocks_capacity);
+        backend.clear_prefix_cache();
+        assert_eq!(pool.in_use(), 0, "retire + cache clear leaves no blocks behind");
     }
 
     /// The channel loop: requests submitted from another thread are all

@@ -1,0 +1,643 @@
+//! The block arena ([`BlockPool`]) and the paged INT4 row store
+//! ([`PagedKv4Store`]) that allocates from it.
+
+use crate::quant::rtn::RtnParams;
+use std::sync::{Arc, Mutex};
+
+/// Index of a block slot in the pool's arena.
+pub type BlockId = u32;
+
+/// Sizing knobs for a [`BlockPool`] — surfaced on the serve CLI as
+/// `--kv-blocks` and `--block-size`.
+#[derive(Clone, Copy, Debug)]
+pub struct KvPoolConfig {
+    /// Arena capacity in physical blocks. Each (layer, K|V) stream of a
+    /// session consumes its own blocks, so one request holding `r` rows
+    /// costs `ceil(r / block_tokens) × n_layers × 2` blocks.
+    pub blocks: usize,
+    /// Rows (token positions) per block.
+    pub block_tokens: usize,
+}
+
+impl KvPoolConfig {
+    /// Worst-case physical blocks one request can hold with **no**
+    /// prefix reuse — the single source of truth for the serve CLI's
+    /// up-front capacity check and the scheduler's admission budget
+    /// (which subtracts matched full blocks from this). Per
+    /// (layer, K|V) stream: `ceil(rows / block_tokens)` for
+    /// `rows = prompt_len + gen − 1`, plus one more when the prompt ends
+    /// mid-block *and* the request decodes on (`gen > 1`) — its
+    /// published prompt-tail block stays behind as cache while the
+    /// session copy-on-writes a fresh block for its own continuation.
+    pub fn worst_case_blocks(&self, prompt_len: usize, gen: usize, n_layers: usize) -> usize {
+        let rows = prompt_len + gen.saturating_sub(1);
+        let published_tail_cow = usize::from(prompt_len % self.block_tokens != 0 && gen > 1);
+        (rows.div_ceil(self.block_tokens) + published_tail_cow) * n_layers * 2
+    }
+}
+
+/// One block's payload: up to `block_tokens` quantized rows — exactly
+/// the contiguous store's representation, cut at block granularity.
+#[derive(Clone, Debug, Default)]
+pub struct BlockData {
+    /// packed nibbles, two per byte, row-major.
+    bytes: Vec<u8>,
+    /// per-token quantization params; `params.len()` is the row count.
+    params: Vec<RtnParams>,
+}
+
+impl BlockData {
+    fn with_capacity(rows: usize, d: usize) -> Self {
+        Self {
+            bytes: Vec::with_capacity(rows * d / 2),
+            params: Vec::with_capacity(rows),
+        }
+    }
+
+    /// Rows currently stored in this block.
+    pub fn rows(&self) -> usize {
+        self.params.len()
+    }
+}
+
+struct Entry {
+    /// Live references: one per store page + one per index entry.
+    refs: u32,
+    /// Set once the block is frozen for sharing; `None` while a single
+    /// store still owns (and appends to) the data inline.
+    data: Option<Arc<BlockData>>,
+}
+
+struct PoolState {
+    entries: Vec<Entry>,
+    free: Vec<BlockId>,
+    in_use: usize,
+    peak: usize,
+    /// Blocks promised to admitted-but-not-yet-allocated work
+    /// ([`BlockPool::try_reserve`]); each successful alloc consumes one
+    /// outstanding reservation, so `in_use + outstanding` is the pool's
+    /// committed total and admission gates on what remains.
+    outstanding: usize,
+}
+
+/// Fixed-capacity arena of ref-counted KV blocks with free-list
+/// alloc/release. Data lives in the owning [`PagedKv4Store`] pages (or
+/// behind `Arc`s once shared) — the pool's mutex guards only ids,
+/// refcounts, and the admission budget, so cache *reads* never lock.
+pub struct BlockPool {
+    block_tokens: usize,
+    capacity: usize,
+    state: Mutex<PoolState>,
+}
+
+impl std::fmt::Debug for BlockPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("BlockPool")
+            .field("capacity", &self.capacity)
+            .field("block_tokens", &self.block_tokens)
+            .field("in_use", &self.in_use())
+            .finish()
+    }
+}
+
+impl BlockPool {
+    pub fn new(cfg: KvPoolConfig) -> Self {
+        assert!(cfg.blocks >= 1, "pool needs at least one block");
+        assert!(cfg.block_tokens >= 1, "blocks need at least one row");
+        Self {
+            block_tokens: cfg.block_tokens,
+            capacity: cfg.blocks,
+            state: Mutex::new(PoolState {
+                entries: Vec::new(),
+                free: Vec::new(),
+                in_use: 0,
+                peak: 0,
+                outstanding: 0,
+            }),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
+    /// The sizing this pool was built with (for budget math via
+    /// [`KvPoolConfig::worst_case_blocks`]).
+    pub fn config(&self) -> KvPoolConfig {
+        KvPoolConfig {
+            blocks: self.capacity,
+            block_tokens: self.block_tokens,
+        }
+    }
+
+    /// Blocks a stream of `rows` quantized rows occupies.
+    pub fn blocks_for(&self, rows: usize) -> usize {
+        rows.div_ceil(self.block_tokens)
+    }
+
+    /// Blocks currently allocated (refcount > 0).
+    pub fn in_use(&self) -> usize {
+        self.state.lock().unwrap().in_use
+    }
+
+    /// High-water mark of [`Self::in_use`] over the pool's lifetime.
+    pub fn peak(&self) -> usize {
+        self.state.lock().unwrap().peak
+    }
+
+    /// Capacity not yet allocated *or* promised to an admitted request.
+    pub fn free_uncommitted(&self) -> usize {
+        let s = self.state.lock().unwrap();
+        self.capacity - (s.in_use + s.outstanding).min(self.capacity)
+    }
+
+    /// Promise `blocks` future allocations to a request being admitted.
+    /// Returns `false` (reserving nothing) if the committed total would
+    /// exceed capacity — the caller should evict or hold the request
+    /// queued. Every later [`Self::try_alloc`] consumes one outstanding
+    /// reservation, keeping the committed total an invariant of
+    /// admission rather than of allocation order.
+    pub fn try_reserve(&self, blocks: usize) -> bool {
+        let mut s = self.state.lock().unwrap();
+        if s.in_use + s.outstanding + blocks > self.capacity {
+            return false;
+        }
+        s.outstanding += blocks;
+        true
+    }
+
+    /// Allocate a block (refcount 1, data owned by the caller). `None`
+    /// when the arena is full — admission sizing is supposed to make
+    /// that unreachable on the serving path.
+    pub fn try_alloc(&self) -> Option<BlockId> {
+        let mut s = self.state.lock().unwrap();
+        let id = if let Some(id) = s.free.pop() {
+            s.entries[id as usize] = Entry { refs: 1, data: None };
+            id
+        } else if s.entries.len() < self.capacity {
+            s.entries.push(Entry { refs: 1, data: None });
+            (s.entries.len() - 1) as BlockId
+        } else {
+            return None;
+        };
+        s.in_use += 1;
+        s.peak = s.peak.max(s.in_use);
+        s.outstanding = s.outstanding.saturating_sub(1);
+        Some(id)
+    }
+
+    /// Register the frozen payload of `id` so other stores can adopt it.
+    pub fn publish(&self, id: BlockId, data: Arc<BlockData>) {
+        let mut s = self.state.lock().unwrap();
+        let e = &mut s.entries[id as usize];
+        debug_assert!(e.refs > 0, "publishing a freed block");
+        e.data = Some(data);
+    }
+
+    /// Take an additional reference on `id` (index entries, adopted
+    /// pages).
+    pub fn retain(&self, id: BlockId) {
+        let mut s = self.state.lock().unwrap();
+        let e = &mut s.entries[id as usize];
+        debug_assert!(e.refs > 0, "retaining a freed block");
+        e.refs += 1;
+    }
+
+    /// Reference `id` and clone its published payload — how a new
+    /// session adopts a cached prefix block. `None` if the block was
+    /// never published or has been released.
+    pub fn adopt(&self, id: BlockId) -> Option<Arc<BlockData>> {
+        let mut s = self.state.lock().unwrap();
+        let e = &mut s.entries[id as usize];
+        if e.refs == 0 {
+            return None;
+        }
+        let data = e.data.clone()?;
+        e.refs += 1;
+        Some(data)
+    }
+
+    /// Drop one reference; at zero the slot returns to the free list.
+    pub fn release(&self, id: BlockId) {
+        let mut s = self.state.lock().unwrap();
+        let e = &mut s.entries[id as usize];
+        debug_assert!(e.refs > 0, "double release");
+        e.refs -= 1;
+        if e.refs == 0 {
+            e.data = None;
+            s.free.push(id);
+            s.in_use -= 1;
+        }
+    }
+}
+
+/// One page of a [`PagedKv4Store`]: either exclusively owned (the store
+/// may append) or a shared, read-only reference into the pool.
+enum Page {
+    Owned { id: BlockId, data: BlockData },
+    Shared { id: BlockId, data: Arc<BlockData> },
+}
+
+impl Page {
+    fn id(&self) -> BlockId {
+        match self {
+            Page::Owned { id, .. } | Page::Shared { id, .. } => *id,
+        }
+    }
+
+    fn data(&self) -> &BlockData {
+        match self {
+            Page::Owned { data, .. } => data,
+            Page::Shared { data, .. } => data,
+        }
+    }
+}
+
+/// Paged drop-in for the contiguous `Kv4Store`: the same append-only
+/// 4-bit row store, backed by pool blocks instead of one `Vec`. The row
+/// math of `push`/`get`/`dot`/`axpy` is copied verbatim from the
+/// contiguous store, so the two backings are bit-identical row for row
+/// (test-pinned) — relocation cannot change a per-token-quantized value.
+pub struct PagedKv4Store {
+    pub d: usize,
+    len: usize,
+    pool: Arc<BlockPool>,
+    pages: Vec<Page>,
+}
+
+impl std::fmt::Debug for PagedKv4Store {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PagedKv4Store")
+            .field("d", &self.d)
+            .field("len", &self.len)
+            .field("pages", &self.pages.len())
+            .finish()
+    }
+}
+
+impl PagedKv4Store {
+    pub fn new(d: usize, pool: Arc<BlockPool>) -> Self {
+        assert!(d % 2 == 0, "d must be even for nibble packing");
+        Self {
+            d,
+            len: 0,
+            pool,
+            pages: Vec::new(),
+        }
+    }
+
+    /// Store seeded with an adopted prefix: `pages` are shared blocks
+    /// (refcounts already bumped by [`BlockPool::adopt`]) covering
+    /// `rows` rows — every page full except possibly the last (a shared
+    /// partial tail, which the first post-adoption [`Self::push`]
+    /// copies on write).
+    pub fn from_prefix(
+        d: usize,
+        pool: Arc<BlockPool>,
+        pages: Vec<(BlockId, Arc<BlockData>)>,
+        rows: usize,
+    ) -> Self {
+        assert!(d % 2 == 0, "d must be even for nibble packing");
+        let bs = pool.block_tokens();
+        assert!(rows <= pages.len() * bs, "prefix rows exceed adopted pages");
+        assert!(pages.len() <= rows.div_ceil(bs), "adopted pages beyond prefix rows");
+        for (i, (_, data)) in pages.iter().enumerate() {
+            let need = (rows - i * bs).min(bs);
+            assert!(data.rows() >= need, "adopted block shorter than its span");
+        }
+        Self {
+            d,
+            len: rows,
+            pool,
+            pages: pages
+                .into_iter()
+                .map(|(id, data)| Page::Shared { id, data })
+                .collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The pool this store allocates from.
+    pub fn pool(&self) -> &Arc<BlockPool> {
+        &self.pool
+    }
+
+    /// Quantize and append one row, allocating a fresh block at each
+    /// block boundary and copy-on-writing a shared partial tail.
+    /// Panics if the pool is exhausted — the scheduler reserves a
+    /// session's whole block budget at admission precisely so this
+    /// cannot happen mid-request.
+    pub fn push(&mut self, row: &[f32]) {
+        assert_eq!(row.len(), self.d);
+        let bs = self.pool.block_tokens();
+        let off = self.len % bs;
+        if off == 0 {
+            let id = self.alloc_block();
+            self.pages.push(Page::Owned {
+                id,
+                data: BlockData::with_capacity(bs, self.d),
+            });
+        } else if matches!(self.pages.last(), Some(Page::Shared { .. })) {
+            // Copy-on-write: the tail block is shared (a published
+            // prompt tail, or an adopted one) — divergent continuations
+            // must not write into it.
+            let id = self.alloc_block();
+            let Some(Page::Shared { id: old, data }) = self.pages.pop() else {
+                unreachable!("checked shared tail");
+            };
+            let mut copy = BlockData::with_capacity(bs, self.d);
+            copy.bytes.extend_from_slice(&data.bytes[..off * self.d / 2]);
+            copy.params.extend_from_slice(&data.params[..off]);
+            drop(data);
+            self.pool.release(old);
+            self.pages.push(Page::Owned { id, data: copy });
+        }
+        let Some(Page::Owned { data, .. }) = self.pages.last_mut() else {
+            unreachable!("tail page is owned after boundary/CoW handling");
+        };
+        let p = RtnParams::fit(row, 4);
+        for pair in row.chunks_exact(2) {
+            let lo = p.quantize_one(pair[0]) as u8;
+            let hi = p.quantize_one(pair[1]) as u8;
+            data.bytes.push(lo | (hi << 4));
+        }
+        data.params.push(p);
+        self.len += 1;
+    }
+
+    fn alloc_block(&self) -> BlockId {
+        self.pool.try_alloc().expect(
+            "KV block pool exhausted mid-request — admission must reserve a session's \
+             block budget up front (raise --kv-blocks)",
+        )
+    }
+
+    /// Locate row `t`: its packed bytes and params inside its block.
+    #[inline]
+    fn row(&self, t: usize) -> (&[u8], &RtnParams) {
+        let bs = self.pool.block_tokens();
+        let data = self.pages[t / bs].data();
+        let off = t % bs;
+        (&data.bytes[off * self.d / 2..(off + 1) * self.d / 2], &data.params[off])
+    }
+
+    /// Dequantize row `t` into `out`.
+    pub fn get(&self, t: usize, out: &mut [f32]) {
+        assert!(t < self.len);
+        assert_eq!(out.len(), self.d);
+        let (bytes, p) = self.row(t);
+        for (i, &b) in bytes.iter().enumerate() {
+            out[2 * i] = p.dequantize_one((b & 0x0F) as i32);
+            out[2 * i + 1] = p.dequantize_one((b >> 4) as i32);
+        }
+    }
+
+    /// Dot product of row `t` with a query slice (dequantize on the fly).
+    pub fn dot(&self, t: usize, q: &[f32]) -> f32 {
+        debug_assert!(t < self.len);
+        debug_assert_eq!(q.len(), self.d);
+        let (bytes, p) = self.row(t);
+        let mut acc_q = 0.0f32; // Σ q_i · code_i
+        let mut acc_s = 0.0f32; // Σ q_i  (for the zero-point term)
+        for (i, &b) in bytes.iter().enumerate() {
+            let c0 = (b & 0x0F) as f32;
+            let c1 = (b >> 4) as f32;
+            acc_q += q[2 * i] * c0 + q[2 * i + 1] * c1;
+            acc_s += q[2 * i] + q[2 * i + 1];
+        }
+        p.scale * (acc_q - p.zero as f32 * acc_s)
+    }
+
+    /// out += w · row_t (dequantized) — the attention value accumulation.
+    pub fn axpy(&self, t: usize, w: f32, out: &mut [f32]) {
+        debug_assert!(t < self.len);
+        debug_assert_eq!(out.len(), self.d);
+        let (bytes, p) = self.row(t);
+        for (i, &b) in bytes.iter().enumerate() {
+            out[2 * i] += w * p.dequantize_one((b & 0x0F) as i32);
+            out[2 * i + 1] += w * p.dequantize_one((b >> 4) as i32);
+        }
+    }
+
+    /// Freeze every page covering rows `[0, rows)` for sharing: owned
+    /// pages move behind an `Arc` and are published to the pool; already
+    /// shared pages are returned as-is. Returns one block id per page in
+    /// row order — what the prefix index records. The store keeps its
+    /// own reference to every page (reads continue lock-free); its next
+    /// append into a frozen partial tail triggers copy-on-write.
+    pub fn freeze_prefix(&mut self, rows: usize) -> Vec<BlockId> {
+        assert!(rows <= self.len, "freezing rows the store does not hold");
+        let bs = self.pool.block_tokens();
+        let n_pages = rows.div_ceil(bs);
+        let mut ids = Vec::with_capacity(n_pages);
+        for page in self.pages.iter_mut().take(n_pages) {
+            if let Page::Owned { id, data } = page {
+                let id = *id;
+                let arc = Arc::new(std::mem::take(data));
+                self.pool.publish(id, arc.clone());
+                *page = Page::Shared { id, data: arc };
+            }
+            ids.push(page.id());
+        }
+        ids
+    }
+
+    /// Storage bytes held by this store's pages (packed nibbles +
+    /// params), mirroring the contiguous store's accounting.
+    pub fn bytes(&self) -> usize {
+        self.pages
+            .iter()
+            .map(|p| p.data().bytes.len() + p.data().rows() * 8)
+            .sum()
+    }
+}
+
+impl Drop for PagedKv4Store {
+    fn drop(&mut self) {
+        for page in &self.pages {
+            self.pool.release(page.id());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::kv_cache::Kv4Store;
+    use crate::util::rng::Rng;
+
+    fn pool(blocks: usize, bs: usize) -> Arc<BlockPool> {
+        Arc::new(BlockPool::new(KvPoolConfig {
+            blocks,
+            block_tokens: bs,
+        }))
+    }
+
+    #[test]
+    fn alloc_release_recycles_through_the_free_list() {
+        let p = pool(2, 4);
+        let a = p.try_alloc().unwrap();
+        let b = p.try_alloc().unwrap();
+        assert_eq!(p.in_use(), 2);
+        assert!(p.try_alloc().is_none(), "capacity is a hard bound");
+        p.release(a);
+        assert_eq!(p.in_use(), 1);
+        let c = p.try_alloc().unwrap();
+        assert_eq!(c, a, "freed slot is recycled");
+        p.release(b);
+        p.release(c);
+        assert_eq!(p.in_use(), 0);
+        assert_eq!(p.peak(), 2);
+    }
+
+    #[test]
+    fn reservations_gate_the_committed_total() {
+        let p = pool(4, 4);
+        assert!(p.try_reserve(3));
+        assert_eq!(p.free_uncommitted(), 1);
+        assert!(!p.try_reserve(2), "over-commit refused");
+        // each alloc consumes one outstanding reservation
+        let a = p.try_alloc().unwrap();
+        assert_eq!(p.free_uncommitted(), 1);
+        assert!(p.try_reserve(1));
+        assert_eq!(p.free_uncommitted(), 0);
+        p.release(a);
+        assert_eq!(p.free_uncommitted(), 1);
+    }
+
+    #[test]
+    fn refcounted_block_survives_until_last_release() {
+        let p = pool(2, 4);
+        let id = p.try_alloc().unwrap();
+        p.publish(id, Arc::new(BlockData::default()));
+        let adopted = p.adopt(id).expect("published block adoptable");
+        p.release(id); // original owner drops out
+        assert_eq!(p.in_use(), 1, "adopter still holds the block");
+        drop(adopted);
+        p.release(id);
+        assert_eq!(p.in_use(), 0);
+        assert!(p.adopt(id).is_none(), "freed block is not adoptable");
+    }
+
+    /// Paged == contiguous, bit for bit, for get/dot/axpy — including
+    /// rows straddling block boundaries and a block size that does not
+    /// divide the row count.
+    #[test]
+    fn paged_matches_contiguous_across_block_boundaries() {
+        let mut rng = Rng::new(91);
+        let d = 32;
+        let bs = 5; // 13 rows -> 2 full blocks + a 3-row tail
+        let rows: Vec<Vec<f32>> = (0..13).map(|_| rng.normal_vec_f32(d, 0.1, 1.3)).collect();
+        let mut flat = Kv4Store::new(d);
+        let mut paged = PagedKv4Store::new(d, pool(16, bs));
+        for r in &rows {
+            flat.push(r);
+            paged.push(r);
+        }
+        assert_eq!(paged.len(), flat.len);
+        let q = rng.normal_vec_f32(d, 0.0, 1.0);
+        let mut a = vec![0.0f32; d];
+        let mut b = vec![0.0f32; d];
+        let mut acc_a = vec![0.0f32; d];
+        let mut acc_b = vec![0.0f32; d];
+        for t in 0..rows.len() {
+            flat.get(t, &mut a);
+            paged.get(t, &mut b);
+            assert_eq!(a, b, "get row {t}");
+            assert_eq!(flat.dot(t, &q), paged.dot(t, &q), "dot row {t}");
+            flat.axpy(t, 0.37, &mut acc_a);
+            paged.axpy(t, 0.37, &mut acc_b);
+            assert_eq!(acc_a, acc_b, "axpy row {t}");
+        }
+        assert_eq!(paged.bytes(), flat.bytes());
+    }
+
+    /// Two stores sharing a partial tail block diverge via copy-on-write:
+    /// the shared rows stay bit-identical in both, the appended rows
+    /// differ, and the original block's contents are never mutated.
+    #[test]
+    fn cow_divergence_on_a_shared_tail_block() {
+        let mut rng = Rng::new(92);
+        let d = 16;
+        let bs = 4;
+        let p = pool(16, bs);
+        let mut a = PagedKv4Store::new(d, p.clone());
+        let rows: Vec<Vec<f32>> = (0..7).map(|_| rng.normal_vec_f32(d, 0.0, 1.0)).collect();
+        for r in &rows {
+            a.push(r);
+        }
+        // publish a's 7 rows (1 full block + a 3-row partial tail)
+        let ids = a.freeze_prefix(7);
+        assert_eq!(ids.len(), 2);
+        let adopted: Vec<(BlockId, Arc<BlockData>)> = ids
+            .iter()
+            .map(|&id| (id, p.adopt(id).expect("published")))
+            .collect();
+        let mut b = PagedKv4Store::from_prefix(d, p.clone(), adopted, 7);
+        assert_eq!(b.len(), 7);
+        let in_use_before = p.in_use();
+
+        // divergent appends: each store CoWs its own copy of the tail
+        let ra = rng.normal_vec_f32(d, 0.5, 1.0);
+        let rb = rng.normal_vec_f32(d, -0.5, 1.0);
+        a.push(&ra);
+        b.push(&rb);
+        assert_eq!(p.in_use(), in_use_before + 2, "one CoW copy per diverging store");
+
+        let mut va = vec![0.0f32; d];
+        let mut vb = vec![0.0f32; d];
+        for t in 0..7 {
+            a.get(t, &mut va);
+            b.get(t, &mut vb);
+            assert_eq!(va, vb, "shared prefix row {t} must stay identical");
+        }
+        a.get(7, &mut va);
+        b.get(7, &mut vb);
+        assert_ne!(va, vb, "post-fork rows diverge");
+
+        // a's row 7 equals pushing the same row into a fresh store
+        let mut fresh = Kv4Store::new(d);
+        for r in &rows {
+            fresh.push(r);
+        }
+        fresh.push(&ra);
+        let mut want = vec![0.0f32; d];
+        fresh.get(7, &mut want);
+        assert_eq!(va, want, "CoW must not perturb the appended row");
+    }
+
+    /// Dropping stores releases every block back to the pool — no leaks
+    /// even with shared pages in the mix.
+    #[test]
+    fn drop_releases_all_blocks() {
+        let mut rng = Rng::new(93);
+        let d = 16;
+        let p = pool(8, 4);
+        {
+            let mut a = PagedKv4Store::new(d, p.clone());
+            for _ in 0..6 {
+                a.push(&rng.normal_vec_f32(d, 0.0, 1.0));
+            }
+            let ids = a.freeze_prefix(6);
+            let adopted: Vec<_> =
+                ids.iter().map(|&id| (id, p.adopt(id).unwrap())).collect();
+            let b = PagedKv4Store::from_prefix(d, p.clone(), adopted, 6);
+            assert!(p.in_use() > 0);
+            drop(a);
+            assert!(p.in_use() > 0, "b still references the shared pages");
+            drop(b);
+        }
+        assert_eq!(p.in_use(), 0, "retired stores must leak nothing");
+    }
+}

@@ -1,0 +1,53 @@
+//! Paged INT4 KV-cache pool with shared-prefix reuse.
+//!
+//! The contiguous [`crate::model::kv_cache::Kv4Store`] gives every
+//! request a private `prompt + gen`-row allocation per layer, and two
+//! requests that share a prompt prefix (the dominant real-world pattern:
+//! a common system prompt) each re-run prefill from token zero. This
+//! module turns both costs from per-request into amortized ones:
+//!
+//! - [`BlockPool`] — a fixed-capacity arena of ref-counted, fixed-size
+//!   token **blocks** (packed INT4 nibbles + per-token
+//!   [`RtnParams`](crate::quant::rtn::RtnParams)), with free-list
+//!   alloc/release. The pool is the serving stack's KV *memory budget*:
+//!   the scheduler admits against `capacity - committed`, not slot
+//!   count.
+//! - [`PagedKv4Store`] — a drop-in behind the contiguous store's read
+//!   API (`get`/`dot`/`axpy` locate the row's block run and run the
+//!   identical nibble math), so `LayerKvCache` and every
+//!   `Transformer` serving path work unchanged and **bit-identically**:
+//!   per-token quantization means relocating a row into a block cannot
+//!   change its value. Appending to a *shared* partial tail block
+//!   triggers copy-on-write, so divergent continuations never corrupt a
+//!   shared prefix.
+//! - [`PrefixIndex`] — a trie over token ids at block granularity.
+//!   Admission matches an incoming prompt's longest cached
+//!   block-aligned prefix (plus a stored partial prompt tail), bumps
+//!   refcounts, and prefills only the suffix
+//!   ([`crate::model::Transformer::prefill_suffix_with`]). The reuse is
+//!   **exact**, not approximate: causal attention makes prefix KV a
+//!   function of the prefix tokens alone, and the cache stores the
+//!   already-quantized rows, so a reused prefix is bit-identical to
+//!   recomputing it.
+//!
+//! Ownership model: block *data* lives either inline in the one store
+//! that is still appending to it (`Owned`) or behind an `Arc` once the
+//! block has been published for sharing (`Shared`) — readers never take
+//! a lock; the pool's mutex guards only the id/refcount bookkeeping.
+//! Sessions release their refs on drop (retire), the index holds its own
+//! refs so published prefixes survive request churn, and
+//! [`PrefixIndex::evict_lru`] trims the least-recently-used entries when
+//! admission needs the capacity back.
+//!
+//! Wiring: `coordinator::scheduler` gates admission on
+//! [`BlockPool::try_reserve`] and serves prefix hits through
+//! `TransformerBackend::with_kv_pool`; `bwa serve --backend bwa-cont`
+//! exposes `--kv-blocks`, `--block-size`, and the `--shared-prefix`
+//! workload knob. See `docs/SCHEDULING.md` ("KV memory & admission")
+//! for the block math and metric definitions.
+
+mod block;
+mod prefix;
+
+pub use block::{BlockData, BlockId, BlockPool, KvPoolConfig, PagedKv4Store};
+pub use prefix::{AdoptedBlock, PrefixIndex, PrefixMatch};

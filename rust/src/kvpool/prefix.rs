@@ -1,0 +1,540 @@
+//! Block-granularity prefix trie over token ids: find the longest
+//! cached prefix of an incoming prompt, adopt its blocks, and publish a
+//! freshly prefilled prompt for the next request to reuse.
+
+use super::block::{BlockData, BlockId, BlockPool};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// One adopted block: its pool id (refcount already bumped) and the
+/// shared payload to read rows from.
+pub struct AdoptedBlock {
+    pub id: BlockId,
+    pub data: Arc<BlockData>,
+}
+
+/// Result of [`PrefixIndex::lookup`]: `rows` cached rows adopted per
+/// layer stream. `rows == 0` (empty `layers`) is a miss. The caller owns
+/// the references — seed a session with them
+/// ([`crate::model::Transformer::new_session_from_prefix`]) or release
+/// them.
+pub struct PrefixMatch {
+    /// Prompt rows covered by the adopted blocks (block-aligned full
+    /// chunks plus an optional partial-tail span).
+    pub rows: usize,
+    /// Per layer: the adopted K-block chain and V-block chain.
+    pub layers: Vec<(Vec<AdoptedBlock>, Vec<AdoptedBlock>)>,
+}
+
+impl PrefixMatch {
+    /// A miss: prefill must start from token zero.
+    pub fn empty() -> Self {
+        Self {
+            rows: 0,
+            layers: Vec::new(),
+        }
+    }
+
+    /// Full blocks per stream in this match (the tail span, if any, is
+    /// copy-on-written by its adopter and so does not reduce the
+    /// adopter's new-block budget).
+    pub fn full_blocks(&self, block_tokens: usize) -> usize {
+        self.rows / block_tokens
+    }
+
+    /// Release every adopted reference back to `pool` — for a match the
+    /// caller decided not to use. (Seeding a session instead *transfers*
+    /// the references: the session's paged stores release them on drop.)
+    pub fn release(self, pool: &BlockPool) {
+        for (ks, vs) in self.layers {
+            for b in ks.into_iter().chain(vs) {
+                pool.release(b.id);
+            }
+        }
+    }
+}
+
+/// A published partial prompt tail hanging off a trie node: fewer than
+/// `block_tokens` tokens, shared so an identical continuation can adopt
+/// the rows and copy-on-write when it diverges.
+struct Tail {
+    tokens: Vec<u16>,
+    /// Per layer (K block, V block) — index-held references.
+    layers: Vec<(BlockId, BlockId)>,
+    last_use: u64,
+}
+
+struct Node {
+    parent: usize,
+    /// This node's chunk (empty for the root).
+    key: Vec<u16>,
+    children: HashMap<Vec<u16>, usize>,
+    /// Per layer (K block, V block) for this chunk — index-held
+    /// references (empty for the root).
+    layers: Vec<(BlockId, BlockId)>,
+    tails: Vec<Tail>,
+    last_use: u64,
+}
+
+/// Trie over token ids at block granularity. Each depth-`k` node is one
+/// published full block per (layer, K|V) stream covering prompt rows
+/// `[(k-1)·bs, k·bs)`; matching is exact chunk equality, so a lookup
+/// adopts only KV that is bit-identical to what prefill would recompute
+/// (causal attention: prefix KV depends on the prefix tokens alone).
+/// The index holds its own pool references, so published prefixes
+/// survive session retirement until [`Self::evict_lru`] reclaims them.
+///
+/// Not internally synchronized — the serving backend wraps it in a
+/// `Mutex` and takes it only at admission/publish boundaries; decode
+/// reads never touch the index.
+pub struct PrefixIndex {
+    block_tokens: usize,
+    n_layers: usize,
+    nodes: Vec<Option<Node>>,
+    free_nodes: Vec<usize>,
+    clock: u64,
+}
+
+impl PrefixIndex {
+    pub fn new(block_tokens: usize, n_layers: usize) -> Self {
+        assert!(block_tokens >= 1);
+        Self {
+            block_tokens,
+            n_layers,
+            nodes: vec![Some(Node {
+                parent: usize::MAX,
+                key: Vec::new(),
+                children: HashMap::new(),
+                layers: Vec::new(),
+                tails: Vec::new(),
+                last_use: 0,
+            })],
+            free_nodes: Vec::new(),
+            clock: 0,
+        }
+    }
+
+    fn node(&self, id: usize) -> &Node {
+        self.nodes[id].as_ref().expect("live node")
+    }
+
+    fn node_mut(&mut self, id: usize) -> &mut Node {
+        self.nodes[id].as_mut().expect("live node")
+    }
+
+    /// Longest cached prefix of `prompt`, *without* adopting anything —
+    /// what admission costing uses. Matching is capped at
+    /// `prompt.len() - 1`: at least one token is always left for the
+    /// suffix prefill to produce first-token logits from.
+    pub fn match_rows(&self, prompt: &[u16]) -> usize {
+        let (chain, tail) = self.walk(prompt);
+        chain.len() * self.block_tokens + tail.map_or(0, |(_, rows)| rows)
+    }
+
+    /// Walk the trie: matched node chain (full blocks) plus the best
+    /// partial-tail match `(tail index in the last matched node, rows)`.
+    fn walk(&self, prompt: &[u16]) -> (Vec<usize>, Option<(usize, usize)>) {
+        let bs = self.block_tokens;
+        let max_rows = prompt.len().saturating_sub(1);
+        let mut chain = Vec::new();
+        let mut node = 0usize;
+        for chunk in prompt.chunks_exact(bs) {
+            if (chain.len() + 1) * bs > max_rows {
+                break;
+            }
+            match self.node(node).children.get(chunk) {
+                Some(&child) => {
+                    node = child;
+                    chain.push(child);
+                }
+                None => break,
+            }
+        }
+        let matched = chain.len() * bs;
+        let remaining = &prompt[matched..];
+        let budget = max_rows - matched;
+        let mut best: Option<(usize, usize)> = None;
+        for (ti, tail) in self.node(node).tails.iter().enumerate() {
+            let mut rows = 0;
+            for (a, b) in tail.tokens.iter().zip(remaining.iter()) {
+                if a != b || rows >= budget {
+                    break;
+                }
+                rows += 1;
+            }
+            let beats = match best {
+                None => rows > 0,
+                Some((_, r)) => rows > r,
+            };
+            if beats {
+                best = Some((ti, rows));
+            }
+        }
+        (chain, best)
+    }
+
+    /// Match `prompt`'s longest cached block-aligned prefix (plus a
+    /// stored partial tail), bump refcounts on every matched block, and
+    /// return the adopted chains. The caller prefills only the suffix.
+    pub fn lookup(&mut self, prompt: &[u16], pool: &BlockPool) -> PrefixMatch {
+        self.clock += 1;
+        let clock = self.clock;
+        let (chain, tail) = self.walk(prompt);
+        if chain.is_empty() && tail.is_none() {
+            return PrefixMatch::empty();
+        }
+        let last = chain.last().copied().unwrap_or(0);
+        let mut layers: Vec<(Vec<AdoptedBlock>, Vec<AdoptedBlock>)> =
+            (0..self.n_layers).map(|_| (Vec::new(), Vec::new())).collect();
+        let mut rows = 0;
+        for &node_id in &chain {
+            let blocks = self.node(node_id).layers.clone();
+            let Some(adopted) = adopt_chunk(pool, &blocks) else {
+                // Unreachable while the index holds its references —
+                // defensive: the already-adopted chain is still a valid
+                // (shorter) prefix, so return it.
+                return PrefixMatch { rows, layers };
+            };
+            commit_chunk(&mut layers, adopted);
+            self.node_mut(node_id).last_use = clock;
+            rows += self.block_tokens;
+        }
+        if let Some((ti, tail_rows)) = tail {
+            let blocks = self.node(last).tails[ti].layers.clone();
+            if let Some(adopted) = adopt_chunk(pool, &blocks) {
+                commit_chunk(&mut layers, adopted);
+                self.node_mut(last).tails[ti].last_use = clock;
+                rows += tail_rows;
+            }
+        }
+        PrefixMatch { rows, layers }
+    }
+
+    /// Publish a just-prefilled prompt: `per_layer` holds, per layer,
+    /// the (K ids, V ids) block chains covering the prompt (from
+    /// `LayerKvCache::freeze_prefix`). Chunks already in the trie are
+    /// left as-is (first publisher wins); new chunks and a new partial
+    /// tail take index-held references on their blocks.
+    pub fn insert(
+        &mut self,
+        prompt: &[u16],
+        per_layer: &[(Vec<BlockId>, Vec<BlockId>)],
+        pool: &BlockPool,
+    ) {
+        assert_eq!(per_layer.len(), self.n_layers);
+        self.clock += 1;
+        let clock = self.clock;
+        let bs = self.block_tokens;
+        let full = prompt.len() / bs;
+        let n_pages = prompt.len().div_ceil(bs);
+        for (ks, vs) in per_layer {
+            assert_eq!(ks.len(), n_pages, "freeze must cover the whole prompt");
+            assert_eq!(vs.len(), n_pages, "freeze must cover the whole prompt");
+        }
+        let mut node = 0usize;
+        for (i, chunk) in prompt.chunks_exact(bs).enumerate() {
+            let existing = self.node(node).children.get(chunk).copied();
+            if let Some(child) = existing {
+                node = child;
+                self.node_mut(node).last_use = clock;
+                continue;
+            }
+            let blocks: Vec<(BlockId, BlockId)> =
+                per_layer.iter().map(|(ks, vs)| (ks[i], vs[i])).collect();
+            for &(k, v) in &blocks {
+                pool.retain(k);
+                pool.retain(v);
+            }
+            let child = self.new_node(Node {
+                parent: node,
+                key: chunk.to_vec(),
+                children: HashMap::new(),
+                layers: blocks,
+                tails: Vec::new(),
+                last_use: clock,
+            });
+            self.node_mut(node).children.insert(chunk.to_vec(), child);
+            node = child;
+        }
+        let remaining = &prompt[full * bs..];
+        if remaining.is_empty() || self.node(node).tails.iter().any(|t| t.tokens == remaining) {
+            return;
+        }
+        let blocks: Vec<(BlockId, BlockId)> =
+            per_layer.iter().map(|(ks, vs)| (ks[full], vs[full])).collect();
+        for &(k, v) in &blocks {
+            pool.retain(k);
+            pool.retain(v);
+        }
+        self.node_mut(node).tails.push(Tail {
+            tokens: remaining.to_vec(),
+            layers: blocks,
+            last_use: clock,
+        });
+    }
+
+    fn new_node(&mut self, node: Node) -> usize {
+        if let Some(id) = self.free_nodes.pop() {
+            self.nodes[id] = Some(node);
+            id
+        } else {
+            self.nodes.push(Some(node));
+            self.nodes.len() - 1
+        }
+    }
+
+    /// Release index references least-recently-used first until the pool
+    /// has `need` uncommitted blocks free (or nothing evictable is
+    /// left). Tails and childless leaf nodes are the candidates; evicting
+    /// a leaf can expose its parent on the next round. Blocks still
+    /// referenced by live sessions lose only their index entry — their
+    /// memory returns to the pool when those sessions retire.
+    pub fn evict_lru(&mut self, pool: &BlockPool, need: usize) {
+        while pool.free_uncommitted() < need {
+            // LRU candidate: any tail, or any childless+tailless node.
+            // Linear scan per eviction — O(nodes) each — chosen for
+            // simplicity; tries here hold distinct *published prompts*
+            // (not tokens), small at current scale. Revisit with an
+            // intrusive LRU list if eviction ever shows up in profiles.
+            let mut best_lu = u64::MAX;
+            let mut best: Option<(usize, Option<usize>)> = None; // (node, tail idx)
+            for (id, slot) in self.nodes.iter().enumerate() {
+                let Some(node) = slot else { continue };
+                for (ti, tail) in node.tails.iter().enumerate() {
+                    if tail.last_use < best_lu {
+                        best_lu = tail.last_use;
+                        best = Some((id, Some(ti)));
+                    }
+                }
+                let leaf = id != 0 && node.children.is_empty() && node.tails.is_empty();
+                if leaf && node.last_use < best_lu {
+                    best_lu = node.last_use;
+                    best = Some((id, None));
+                }
+            }
+            let Some((id, tail)) = best else { return };
+            match tail {
+                Some(ti) => {
+                    let t = self.node_mut(id).tails.swap_remove(ti);
+                    for (k, v) in t.layers {
+                        pool.release(k);
+                        pool.release(v);
+                    }
+                }
+                None => {
+                    let node = self.nodes[id].take().expect("live node");
+                    self.node_mut(node.parent).children.remove(&node.key);
+                    for (k, v) in node.layers {
+                        pool.release(k);
+                        pool.release(v);
+                    }
+                    self.free_nodes.push(id);
+                }
+            }
+        }
+    }
+
+    /// Drop every index entry, releasing all index-held references —
+    /// used on shutdown and by leak tests ("no blocks in use once the
+    /// index is cleared and every session has retired").
+    pub fn clear(&mut self, pool: &BlockPool) {
+        for slot in self.nodes.iter_mut().skip(1) {
+            let Some(node) = slot.take() else { continue };
+            release_node(pool, node);
+        }
+        let root = self.node_mut(0);
+        root.children.clear();
+        let tails = std::mem::take(&mut root.tails);
+        for t in tails {
+            for (k, v) in t.layers {
+                pool.release(k);
+                pool.release(v);
+            }
+        }
+        self.free_nodes = (1..self.nodes.len()).collect();
+    }
+}
+
+/// Adopt one chunk's per-layer (K, V) blocks all-or-nothing.
+fn adopt_chunk(
+    pool: &BlockPool,
+    blocks: &[(BlockId, BlockId)],
+) -> Option<Vec<(AdoptedBlock, AdoptedBlock)>> {
+    let mut got = Vec::with_capacity(blocks.len());
+    for &(k, v) in blocks {
+        let kd = pool.adopt(k);
+        let vd = pool.adopt(v);
+        match (kd, vd) {
+            (Some(kd), Some(vd)) => got.push((
+                AdoptedBlock { id: k, data: kd },
+                AdoptedBlock { id: v, data: vd },
+            )),
+            (kd, vd) => {
+                if kd.is_some() {
+                    pool.release(k);
+                }
+                if vd.is_some() {
+                    pool.release(v);
+                }
+                for (a, b) in got {
+                    pool.release(a.id);
+                    pool.release(b.id);
+                }
+                return None;
+            }
+        }
+    }
+    Some(got)
+}
+
+fn commit_chunk(
+    layers: &mut [(Vec<AdoptedBlock>, Vec<AdoptedBlock>)],
+    adopted: Vec<(AdoptedBlock, AdoptedBlock)>,
+) {
+    for (l, (k, v)) in adopted.into_iter().enumerate() {
+        layers[l].0.push(k);
+        layers[l].1.push(v);
+    }
+}
+
+fn release_node(pool: &BlockPool, node: Node) {
+    for (k, v) in node.layers {
+        pool.release(k);
+        pool.release(v);
+    }
+    for t in node.tails {
+        for (k, v) in t.layers {
+            pool.release(k);
+            pool.release(v);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvpool::{KvPoolConfig, PagedKv4Store};
+    use crate::util::rng::Rng;
+
+    fn pool(blocks: usize, bs: usize) -> Arc<BlockPool> {
+        Arc::new(BlockPool::new(KvPoolConfig {
+            blocks,
+            block_tokens: bs,
+        }))
+    }
+
+    /// Publish one single-layer "prompt": a K store and a V store
+    /// holding `prompt.len()` rows, frozen and inserted.
+    fn publish(
+        index: &mut PrefixIndex,
+        pool: &Arc<BlockPool>,
+        prompt: &[u16],
+        d: usize,
+        seed: u64,
+    ) -> (PagedKv4Store, PagedKv4Store) {
+        let mut rng = Rng::new(seed);
+        let mut k = PagedKv4Store::new(d, pool.clone());
+        let mut v = PagedKv4Store::new(d, pool.clone());
+        for _ in prompt {
+            k.push(&rng.normal_vec_f32(d, 0.0, 1.0));
+            v.push(&rng.normal_vec_f32(d, 0.0, 1.0));
+        }
+        let ks = k.freeze_prefix(prompt.len());
+        let vs = v.freeze_prefix(prompt.len());
+        index.insert(prompt, &[(ks, vs)], pool);
+        (k, v)
+    }
+
+    #[test]
+    fn match_is_block_aligned_and_capped_below_the_full_prompt() {
+        let p = pool(64, 4);
+        let mut idx = PrefixIndex::new(4, 1);
+        let prompt: Vec<u16> = (0..10).collect(); // 2 full blocks + tail [8, 9]
+        let _stores = publish(&mut idx, &p, &prompt, 8, 1);
+
+        // same first block, divergent second block: block-aligned match
+        let q: Vec<u16> = vec![0, 1, 2, 3, 99, 98, 97, 96, 5];
+        assert_eq!(idx.match_rows(&q), 4);
+
+        // identical prompt: 2 full blocks + 1 tail row (capped at len-1)
+        assert_eq!(idx.match_rows(&prompt), 9);
+
+        // prompt extending the published one: full blocks + whole tail
+        let longer: Vec<u16> = (0..16).collect();
+        assert_eq!(idx.match_rows(&longer), 10);
+
+        // diverging inside the first block: no block-aligned match
+        let r: Vec<u16> = vec![0, 1, 7, 3, 4, 5];
+        assert_eq!(idx.match_rows(&r), 0);
+
+        // exactly one published block as the whole prompt: the cap
+        // leaves the final token for the suffix prefill, so the full
+        // block cannot be matched — only nothing or a shorter tail.
+        let one: Vec<u16> = (0..4).collect();
+        assert_eq!(idx.match_rows(&one), 0);
+    }
+
+    #[test]
+    fn lookup_adopts_and_release_balances() {
+        let p = pool(64, 4);
+        let mut idx = PrefixIndex::new(4, 1);
+        let prompt: Vec<u16> = (0..10).collect();
+        let stores = publish(&mut idx, &p, &prompt, 8, 2);
+        let baseline = p.in_use();
+
+        let m = idx.lookup(&(0..16).collect::<Vec<u16>>(), &p);
+        assert_eq!(m.rows, 10, "2 full blocks + the whole 2-row tail");
+        assert_eq!(m.layers.len(), 1);
+        assert_eq!(m.layers[0].0.len(), 3, "2 full K blocks + shared tail");
+        assert_eq!(m.full_blocks(4), 2);
+        // adoption bumped refcounts but allocated nothing new
+        assert_eq!(p.in_use(), baseline);
+        m.release(&p);
+        assert_eq!(p.in_use(), baseline);
+        drop(stores);
+        // the index still pins the published blocks after the stores die
+        assert_eq!(p.in_use(), 6, "2 full + 1 tail, for K and for V");
+    }
+
+    #[test]
+    fn eviction_frees_lru_entries_until_capacity_is_available() {
+        let bs = 4;
+        let p = pool(6, bs);
+        let mut idx = PrefixIndex::new(bs, 1);
+        // two published single-block prompts: 2 blocks each (K + V)
+        let a: Vec<u16> = (0..4).collect();
+        let b: Vec<u16> = (100..104).collect();
+        let sa = publish(&mut idx, &p, &a, 8, 3);
+        let sb = publish(&mut idx, &p, &b, 8, 4);
+        drop((sa, sb));
+        assert_eq!(p.in_use(), 4, "index pins both chains");
+
+        // touch `a` (via a longer probe — matching is capped below the
+        // full prompt) so `b` becomes the LRU chain
+        let probe_a: Vec<u16> = (0..6).collect();
+        let m = idx.lookup(&probe_a, &p);
+        assert_eq!(m.rows, 4);
+        m.release(&p);
+
+        idx.evict_lru(&p, 4);
+        assert!(p.free_uncommitted() >= 4);
+        assert_eq!(idx.match_rows(&probe_a), 4, "recently used chain survives");
+        assert_eq!(idx.match_rows(&(100..106).collect::<Vec<u16>>()), 0, "LRU chain evicted");
+
+        idx.clear(&p);
+        assert_eq!(p.in_use(), 0, "clear releases every index reference");
+    }
+
+    /// A prompt shorter than one block publishes a root tail that a
+    /// longer identical-prefix prompt can adopt (and CoW past).
+    #[test]
+    fn sub_block_prompt_is_shared_via_a_root_tail() {
+        let p = pool(16, 8);
+        let mut idx = PrefixIndex::new(8, 1);
+        let prompt: Vec<u16> = vec![5, 6, 7];
+        let _stores = publish(&mut idx, &p, &prompt, 8, 5);
+        assert_eq!(idx.match_rows(&[5, 6, 7, 8, 9]), 3);
+        assert_eq!(idx.match_rows(&[5, 6, 7]), 2, "capped at len - 1");
+        assert_eq!(idx.match_rows(&[5, 9, 7, 8]), 1, "tail matches token-wise");
+    }
+}

@@ -60,10 +60,20 @@
 //! worker pool, ragged batched decode via
 //! [`model::Transformer::decode_step_batch_refs`]), per-token streaming
 //! with TTFT/ITL metrics, and immediate retirement — bit-identical per
-//! sequence to the lockstep engine. See `docs/ARCHITECTURE.md` for the
-//! layer diagram and the paper-equation → code map, `docs/SERVING.md`
-//! for `bwa serve`, and `docs/SCHEDULING.md` for the scheduler's
-//! request lifecycle and metric definitions.
+//! sequence to the lockstep engine.
+//!
+//! The continuous path serves its INT4 KV cache from the **paged
+//! KV-cache pool** ([`kvpool`]): a fixed-capacity arena of ref-counted
+//! token blocks ([`kvpool::BlockPool`]) behind a drop-in paged store
+//! ([`kvpool::PagedKv4Store`], bit-identical to the contiguous
+//! [`model::kv_cache::Kv4Store`]), with a block-granularity prefix trie
+//! ([`kvpool::PrefixIndex`]) that lets admission reuse a cached shared
+//! prompt prefix — refcount bumps instead of re-prefilling from token
+//! zero — and gates admission on actual free blocks rather than slot
+//! count. See `docs/ARCHITECTURE.md` for the layer diagram and the
+//! paper-equation → code map, `docs/SERVING.md` for `bwa serve`, and
+//! `docs/SCHEDULING.md` for the scheduler's request lifecycle, the KV
+//! block math, and metric definitions.
 //!
 //! Layers (see DESIGN.md):
 //! - L1: Pallas kernel (python, build time) — `python/compile/kernels/`
@@ -86,6 +96,7 @@ pub mod data;
 pub mod eval;
 pub mod exps;
 pub mod kernels;
+pub mod kvpool;
 pub mod linalg;
 pub mod model;
 pub mod quant;

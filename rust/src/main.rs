@@ -72,7 +72,9 @@ fn print_help() {
          \x20           [--backend pjrt|native|bwa|bwa-seq|bwa-cont]\n\
          \x20           [--requests N] [--clients C] [--prompt-len P] [--gen G] [--batch B]\n\
          \x20           [--wait-us U] [--workers W] [--seed S] [--stagger-us U]\n\
-         \x20           [--max-active N] [--admit eager|drain]   (bwa-cont scheduler knobs)\n\n\
+         \x20           [--shared-prefix P]                      (common system-prompt prefix)\n\
+         \x20           [--max-active N] [--admit eager|drain]   (bwa-cont scheduler knobs)\n\
+         \x20           [--kv-blocks N] [--block-size T]         (bwa-cont paged KV pool)\n\n\
          methods: {}\n\n\
          quantize once, serve many: `bwa quantize --out m.bwa` compiles the model to a\n\
          checksummed artifact; `bwa serve --artifact m.bwa` / `bwa eval --artifact m.bwa`\n\

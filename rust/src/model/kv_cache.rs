@@ -6,8 +6,18 @@
 //! `dot`/`axpy` operate on the quantized representation, so the cache
 //! really holds 4-bit state — the batch (non-cached) forward applies the
 //! identical fake quantization, and tests assert the two paths agree.
+//!
+//! Two backings implement that representation behind one [`KvStore`]
+//! facade: the private contiguous [`Kv4Store`] (one `Vec` per request)
+//! and the pool-backed [`PagedKv4Store`](crate::kvpool::PagedKv4Store)
+//! (fixed-size ref-counted blocks, shared-prefix reuse — see
+//! [`crate::kvpool`]). Because quantization is per token, a row's bits
+//! are identical wherever it lives, and the two backings are pinned
+//! bit-identical on every serving path.
 
+use crate::kvpool::{AdoptedBlock, BlockId, BlockPool, PagedKv4Store};
 use crate::quant::rtn::RtnParams;
+use std::sync::Arc;
 
 /// Append-only 4-bit vector store of `d`-dimensional rows.
 #[derive(Clone, Debug)]
@@ -24,9 +34,15 @@ impl Kv4Store {
         Self::with_capacity(d, 0)
     }
 
-    /// Store with room for `rows` vectors reserved up front (serving
-    /// knows `prompt + gen` per request, so the cache never reallocates
-    /// mid-request).
+    /// Contiguous store with room for `rows` vectors reserved up front.
+    /// This is the *private* backing: lockstep serving knows
+    /// `prompt + gen` per request and reserves it here, so this `Vec`
+    /// never reallocates mid-request — at the cost of every request
+    /// paying its worst case. The paged backing
+    /// ([`crate::kvpool::PagedKv4Store`]) instead allocates fixed-size
+    /// blocks from a shared [`crate::kvpool::BlockPool`] on demand and
+    /// can share a prompt prefix between requests; both sit behind
+    /// [`KvStore`] and hold bit-identical rows.
     pub fn with_capacity(d: usize, rows: usize) -> Self {
         assert!(d % 2 == 0, "d must be even for nibble packing");
         Self {
@@ -103,36 +119,146 @@ impl Kv4Store {
     }
 }
 
+/// One INT4 row store behind either backing. Every method forwards to
+/// the same per-row math, so the choice of backing never changes a
+/// value — only where the bits live and whether they can be shared.
+#[derive(Debug)]
+pub enum KvStore {
+    /// Private contiguous `Vec` (lockstep serving, one per request).
+    Contiguous(Kv4Store),
+    /// Pool-backed paged store (continuous serving, prefix sharing).
+    Paged(PagedKv4Store),
+}
+
+impl KvStore {
+    pub fn len(&self) -> usize {
+        match self {
+            KvStore::Contiguous(s) => s.len,
+            KvStore::Paged(s) => s.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Quantize and append one row.
+    pub fn push(&mut self, row: &[f32]) {
+        match self {
+            KvStore::Contiguous(s) => s.push(row),
+            KvStore::Paged(s) => s.push(row),
+        }
+    }
+
+    /// Dequantize row `t` into `out`.
+    pub fn get(&self, t: usize, out: &mut [f32]) {
+        match self {
+            KvStore::Contiguous(s) => s.get(t, out),
+            KvStore::Paged(s) => s.get(t, out),
+        }
+    }
+
+    /// Dot product of row `t` with a query slice.
+    pub fn dot(&self, t: usize, q: &[f32]) -> f32 {
+        match self {
+            KvStore::Contiguous(s) => s.dot(t, q),
+            KvStore::Paged(s) => s.dot(t, q),
+        }
+    }
+
+    /// out += w · row_t (dequantized).
+    pub fn axpy(&self, t: usize, w: f32, out: &mut [f32]) {
+        match self {
+            KvStore::Contiguous(s) => s.axpy(t, w, out),
+            KvStore::Paged(s) => s.axpy(t, w, out),
+        }
+    }
+
+    pub fn bytes(&self) -> usize {
+        match self {
+            KvStore::Contiguous(s) => s.bytes(),
+            KvStore::Paged(s) => s.bytes(),
+        }
+    }
+
+    /// The paged backing, if that is what this store is — publishing a
+    /// prefix to the [`crate::kvpool::PrefixIndex`] needs it.
+    pub fn as_paged_mut(&mut self) -> Option<&mut PagedKv4Store> {
+        match self {
+            KvStore::Contiguous(_) => None,
+            KvStore::Paged(s) => Some(s),
+        }
+    }
+}
+
 /// Per-layer K and V stores for one sequence.
-#[derive(Clone, Debug)]
+#[derive(Debug)]
 pub struct LayerKvCache {
-    pub k: Kv4Store,
-    pub v: Kv4Store,
+    pub k: KvStore,
+    pub v: KvStore,
 }
 
 impl LayerKvCache {
     pub fn new(d: usize) -> Self {
         Self {
-            k: Kv4Store::new(d),
-            v: Kv4Store::new(d),
+            k: KvStore::Contiguous(Kv4Store::new(d)),
+            v: KvStore::Contiguous(Kv4Store::new(d)),
         }
     }
 
-    /// K and V stores with `rows` positions reserved (see
+    /// Contiguous K and V stores with `rows` positions reserved (see
     /// [`Kv4Store::with_capacity`]).
     pub fn with_capacity(d: usize, rows: usize) -> Self {
         Self {
-            k: Kv4Store::with_capacity(d, rows),
-            v: Kv4Store::with_capacity(d, rows),
+            k: KvStore::Contiguous(Kv4Store::with_capacity(d, rows)),
+            v: KvStore::Contiguous(Kv4Store::with_capacity(d, rows)),
         }
     }
 
+    /// Empty paged K and V stores allocating blocks from `pool`.
+    pub fn paged(d: usize, pool: &Arc<BlockPool>) -> Self {
+        Self {
+            k: KvStore::Paged(PagedKv4Store::new(d, pool.clone())),
+            v: KvStore::Paged(PagedKv4Store::new(d, pool.clone())),
+        }
+    }
+
+    /// Paged K and V stores seeded with `rows` rows of adopted prefix
+    /// blocks (refcounts already held by the caller's
+    /// [`crate::kvpool::PrefixMatch`]).
+    pub fn paged_from_prefix(
+        d: usize,
+        pool: &Arc<BlockPool>,
+        k_blocks: Vec<AdoptedBlock>,
+        v_blocks: Vec<AdoptedBlock>,
+        rows: usize,
+    ) -> Self {
+        let to_pages = |blocks: Vec<AdoptedBlock>| {
+            blocks.into_iter().map(|b| (b.id, b.data)).collect::<Vec<_>>()
+        };
+        let k = PagedKv4Store::from_prefix(d, pool.clone(), to_pages(k_blocks), rows);
+        let v = PagedKv4Store::from_prefix(d, pool.clone(), to_pages(v_blocks), rows);
+        Self {
+            k: KvStore::Paged(k),
+            v: KvStore::Paged(v),
+        }
+    }
+
+    /// Freeze the K and V blocks covering rows `[0, rows)` for sharing;
+    /// `None` if this cache is contiguous (nothing shareable). Returns
+    /// the (K ids, V ids) chains the prefix index records.
+    pub fn freeze_prefix(&mut self, rows: usize) -> Option<(Vec<BlockId>, Vec<BlockId>)> {
+        let ks = self.k.as_paged_mut()?.freeze_prefix(rows);
+        let vs = self.v.as_paged_mut()?.freeze_prefix(rows);
+        Some((ks, vs))
+    }
+
     pub fn len(&self) -> usize {
-        self.k.len
+        self.k.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.k.len == 0
+        self.k.is_empty()
     }
 }
 

@@ -31,6 +31,7 @@ pub mod checkpoint;
 pub mod config;
 pub mod kv_cache;
 
+use crate::kvpool::{BlockPool, PrefixMatch};
 use crate::model::checkpoint::{Checkpoint, CkptError};
 use crate::model::config::ModelConfig;
 use crate::model::kv_cache::{Kv4Store, LayerKvCache};
@@ -41,6 +42,7 @@ use crate::tensor::Tensor;
 use crate::util::pool::parallel_map;
 use crate::util::rng::Rng;
 use crate::util::softmax_inplace;
+use std::sync::Arc;
 
 /// RMSNorm with learned gain.
 pub fn rmsnorm(x: &[f32], gain: &[f32], eps: f64, out: &mut [f32]) {
@@ -203,6 +205,56 @@ pub fn causal_attention(q: &Tensor, k: &Tensor, v: &Tensor, n_heads: usize) -> T
             for tk in 0..=tq {
                 let w = scores[tk];
                 let vrow = &v.row(tk)[base..base + hd];
+                for i in 0..hd {
+                    orow[i] += w * vrow[i];
+                }
+            }
+        }
+    }
+    out
+}
+
+/// [`causal_attention`] for **suffix** queries over fully materialized
+/// K/V rows covering positions `[0, pos_offset + T)` — the warm-prefill
+/// inner loop ([`Transformer::prefill_suffix_with`]). Query row `tq`
+/// sits at absolute position `pos_offset + tq` and attends causally over
+/// all earlier rows of `k`/`v` (flat `[pos_offset + T, d]`, row-major —
+/// here: the session's KV cache dequantized once per layer). With
+/// `pos_offset == 0` and identical K/V values this computes exactly
+/// [`causal_attention`], loop order and all, so the cold and warm
+/// prefill paths are bit-identical (test-pinned).
+fn causal_attention_cached(
+    q: &Tensor,
+    k: &[f32],
+    v: &[f32],
+    n_heads: usize,
+    pos_offset: usize,
+) -> Tensor {
+    let (t_len, d) = q.dims2();
+    debug_assert_eq!(k.len(), (pos_offset + t_len) * d);
+    debug_assert_eq!(v.len(), (pos_offset + t_len) * d);
+    let hd = d / n_heads;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut out = Tensor::zeros(&[t_len, d]);
+    let mut scores = vec![0.0f32; pos_offset + t_len];
+    for h in 0..n_heads {
+        let base = h * hd;
+        for tq in 0..t_len {
+            let abs = pos_offset + tq;
+            let qrow = &q.row(tq)[base..base + hd];
+            for tk in 0..=abs {
+                let krow = &k[tk * d + base..tk * d + base + hd];
+                let mut s = 0.0f32;
+                for i in 0..hd {
+                    s += qrow[i] * krow[i];
+                }
+                scores[tk] = s * scale;
+            }
+            softmax_inplace(&mut scores[..=abs]);
+            let orow = &mut out.row_mut(tq)[base..base + hd];
+            for tk in 0..=abs {
+                let w = scores[tk];
+                let vrow = &v[tk * d + base..tk * d + base + hd];
                 for i in 0..hd {
                     orow[i] += w * vrow[i];
                 }
@@ -478,17 +530,72 @@ impl Transformer {
         self.new_session_with_capacity(0)
     }
 
-    /// [`Self::new_session`] with KV-cache storage reserved for `tokens`
-    /// positions up front — serving knows `prompt + gen` when a request
-    /// arrives, so the cache never reallocates mid-request.
+    /// [`Self::new_session`] with **contiguous** KV-cache storage
+    /// reserved for `tokens` positions up front — lockstep serving knows
+    /// `prompt + gen` when a request arrives and pays each request's
+    /// worst case privately, so that `Vec` never reallocates
+    /// mid-request. The continuous scheduler instead uses the paged
+    /// backing ([`Self::new_session_paged`] /
+    /// [`Self::new_session_from_prefix`]): fixed-size blocks allocated
+    /// on demand from a shared [`BlockPool`], bit-identical rows, and
+    /// shared-prefix reuse across requests.
     pub fn new_session_with_capacity(&self, tokens: usize) -> DecodeSession {
+        let d = self.cfg.d_model;
+        self.session_with_caches(
+            (0..self.cfg.n_layers)
+                .map(|_| LayerKvCache::with_capacity(d, tokens))
+                .collect(),
+            0,
+        )
+    }
+
+    /// Session whose per-layer KV caches allocate fixed-size blocks from
+    /// `pool` instead of private contiguous `Vec`s — same bits, shared
+    /// budget (see [`crate::kvpool`]).
+    pub fn new_session_paged(&self, pool: &Arc<BlockPool>) -> DecodeSession {
+        let d = self.cfg.d_model;
+        self.session_with_caches(
+            (0..self.cfg.n_layers).map(|_| LayerKvCache::paged(d, pool)).collect(),
+            0,
+        )
+    }
+
+    /// Paged session seeded with an adopted cached prefix: the caches
+    /// start at `prefix.rows` rows of shared blocks and `pos` is set to
+    /// match, so [`Self::prefill_suffix_with`] computes only the
+    /// remaining prompt tokens. An empty match yields a fresh paged
+    /// session.
+    pub fn new_session_from_prefix(
+        &self,
+        pool: &Arc<BlockPool>,
+        prefix: PrefixMatch,
+    ) -> DecodeSession {
+        if prefix.rows == 0 {
+            return self.new_session_paged(pool);
+        }
+        assert_eq!(
+            prefix.layers.len(),
+            self.cfg.n_layers,
+            "prefix match must cover every layer"
+        );
+        let d = self.cfg.d_model;
+        let rows = prefix.rows;
+        self.session_with_caches(
+            prefix
+                .layers
+                .into_iter()
+                .map(|(ks, vs)| LayerKvCache::paged_from_prefix(d, pool, ks, vs, rows))
+                .collect(),
+            rows,
+        )
+    }
+
+    fn session_with_caches(&self, caches: Vec<LayerKvCache>, pos: usize) -> DecodeSession {
         let d = self.cfg.d_model;
         let d_ff = self.cfg.d_ff;
         DecodeSession {
-            caches: (0..self.cfg.n_layers)
-                .map(|_| LayerKvCache::with_capacity(d, tokens))
-                .collect(),
-            pos: 0,
+            caches,
+            pos,
             scratch: DecodeScratch {
                 x: vec![0.0; d],
                 h: Tensor::zeros(&[1, d]),
@@ -669,6 +776,112 @@ impl Transformer {
             }
         }
         sess.pos = t_len;
+        // logits only for the last position
+        let mut hn = Tensor::zeros(&[1, d]);
+        rmsnorm(
+            x.row(t_len - 1),
+            &self.final_norm,
+            self.cfg.rmsnorm_eps,
+            hn.row_mut(0),
+        );
+        crate::kernels::dense::sgemm_wt(&hn, &self.lm_head).data
+    }
+
+    /// Warm prefill: run the batch forward for only the **suffix** of
+    /// `tokens` that the session's KV caches do not already cover
+    /// (`sess.pos` rows — typically an adopted shared prefix from the
+    /// [`crate::kvpool::PrefixIndex`]), filling the caches for the
+    /// suffix and returning the last-position logits `[vocab]`.
+    ///
+    /// This is exact, not approximate: causal attention makes prefix KV
+    /// a pure function of the prefix tokens, and the cache stores the
+    /// already-quantized rows, so attending over reused rows is
+    /// bit-identical to recomputing them. With `sess.pos == 0` this *is*
+    /// a cold prefill, bit-identical to [`Self::prefill_with`]
+    /// (test-pinned) — suffix queries read K/V dequantized from the
+    /// cache, which equals the cold path's in-flight fake-quantized
+    /// values because `push` + `get` round-trips the same nibbles.
+    ///
+    /// At least one suffix token is required (the prefix index caps
+    /// matches at `prompt_len - 1` for exactly this reason): logits come
+    /// from the final token's forward pass.
+    pub fn prefill_suffix_with(
+        &self,
+        sess: &mut DecodeSession,
+        tokens: &[u16],
+        scratch: &mut PrefillScratch,
+    ) -> Vec<f32> {
+        let total = tokens.len();
+        let m = sess.pos;
+        let d = self.cfg.d_model;
+        assert!(total <= self.cfg.max_seq, "sequence longer than max_seq");
+        assert!(m < total, "suffix prefill needs at least one uncached token");
+        assert!(
+            sess.caches.iter().all(|c| c.len() == m),
+            "session caches must cover exactly the reused prefix"
+        );
+        let t_len = total - m;
+        scratch.ensure(t_len, d, self.cfg.d_ff);
+        let x = &mut scratch.x;
+        for t in 0..t_len {
+            x.row_mut(t).copy_from_slice(self.embed.row(tokens[m + t] as usize));
+        }
+        // Whole-cache K/V dequantization buffers, reused across layers
+        // and (via the worker's scratch) across requests.
+        scratch.kfull.resize(total * d, 0.0);
+        scratch.vfull.resize(total * d, 0.0);
+        for (l, blk) in self.blocks.iter().enumerate() {
+            // attention — one prepared input feeds wq/wk/wv
+            self.norm_all_into(x, &blk.attn_norm, &mut scratch.h);
+            {
+                let acts = blk.attn.wq.exec.prepare(&scratch.h);
+                blk.attn.wq.exec.forward_prepared(&acts, &mut scratch.q);
+                blk.attn.wk.exec.forward_prepared(&acts, &mut scratch.k);
+                blk.attn.wv.exec.forward_prepared(&acts, &mut scratch.v);
+            }
+            apply_rope(&mut scratch.q, self.cfg.n_heads, self.cfg.rope_theta, m);
+            apply_rope(&mut scratch.k, self.cfg.n_heads, self.cfg.rope_theta, m);
+            // Push the suffix rows (the cache quantizes on push), then
+            // read the *whole* cache back — prefix rows adopted from the
+            // pool and suffix rows just written — so suffix attention
+            // sees exactly what decode will read.
+            let cache = &mut sess.caches[l];
+            for t in 0..t_len {
+                cache.k.push(scratch.k.row(t));
+                cache.v.push(scratch.v.row(t));
+            }
+            debug_assert_eq!(cache.len(), total);
+            for t in 0..total {
+                cache.k.get(t, &mut scratch.kfull[t * d..(t + 1) * d]);
+                cache.v.get(t, &mut scratch.vfull[t * d..(t + 1) * d]);
+            }
+            let attn_out = causal_attention_cached(
+                &scratch.q,
+                &scratch.kfull[..total * d],
+                &scratch.vfull[..total * d],
+                self.cfg.n_heads,
+                m,
+            );
+            blk.attn.wo.exec.forward_into(&attn_out, &mut scratch.o);
+            for i in 0..x.data.len() {
+                x.data[i] += scratch.o.data[i];
+            }
+            // mlp — gate/up share one prepared input
+            self.norm_all_into(x, &blk.mlp_norm, &mut scratch.h);
+            {
+                let acts = blk.mlp.gate.exec.prepare(&scratch.h);
+                blk.mlp.gate.exec.forward_prepared(&acts, &mut scratch.g);
+                blk.mlp.up.exec.forward_prepared(&acts, &mut scratch.u);
+            }
+            for i in 0..scratch.g.data.len() {
+                scratch.g.data[i] = silu(scratch.g.data[i]) * scratch.u.data[i];
+            }
+            blk.mlp.down.exec.forward_into(&scratch.g, &mut scratch.dwn);
+            for i in 0..x.data.len() {
+                x.data[i] += scratch.dwn.data[i];
+            }
+        }
+        sess.pos = total;
         // logits only for the last position
         let mut hn = Tensor::zeros(&[1, d]);
         rmsnorm(
@@ -893,6 +1106,10 @@ pub struct PrefillScratch {
     g: Tensor,
     u: Tensor,
     dwn: Tensor,
+    /// Whole-cache K/V dequantization buffers for the warm suffix path
+    /// ([`Transformer::prefill_suffix_with`]); unused by cold prefill.
+    kfull: Vec<f32>,
+    vfull: Vec<f32>,
 }
 
 impl PrefillScratch {
@@ -1514,6 +1731,116 @@ mod tests {
             Err(other) => panic!("expected quant error, got {other}"),
             Ok(_) => panic!("expected quantization to fail"),
         }
+    }
+
+    /// The paged-KV parity contract, part 1: a paged session is
+    /// bit-identical to a contiguous one through prefill + decode_step
+    /// and through lockstep decode_step_batch — with a block size that
+    /// divides neither the prompt length nor the total, so rows straddle
+    /// block boundaries on every path.
+    #[test]
+    fn paged_sessions_match_contiguous_on_decode_paths() {
+        use crate::kvpool::KvPoolConfig;
+        let cfg = small_cfg();
+        let ck = Checkpoint::random(&cfg, 23);
+        let mut rng = Rng::new(24);
+        let calib: Vec<Vec<u16>> = (0..4)
+            .map(|_| (0..32).map(|_| rng.below(64) as u16).collect())
+            .collect();
+        let model = quantize_model(&ck, &BwaQuantizer::paper(), &calib, Some(4)).unwrap();
+        let pool = Arc::new(BlockPool::new(KvPoolConfig {
+            blocks: 256,
+            block_tokens: 5,
+        }));
+
+        // prefill + decode_step
+        let prompt: Vec<u16> = (0..12).map(|_| rng.below(64) as u16).collect();
+        let mut flat = model.new_session_with_capacity(prompt.len() + 4);
+        let mut paged = model.new_session_paged(&pool);
+        let a = model.prefill(&mut flat, &prompt);
+        let b = model.prefill(&mut paged, &prompt);
+        assert_eq!(a, b, "prefill logits must be bit-identical across backings");
+        for &t in &[7u16, 21, 3, 40] {
+            let a = model.decode_step(&mut flat, t);
+            let b = model.decode_step(&mut paged, t);
+            assert_eq!(a, b, "decode_step diverged between backings");
+        }
+
+        // lockstep decode_step_batch over paged sessions
+        let prompts: Vec<Vec<u16>> = vec![vec![1, 5, 9], vec![7, 2, 60, 33, 8, 11, 2], vec![11]];
+        let mut indiv: Vec<DecodeSession> =
+            prompts.iter().map(|_| model.new_session()).collect();
+        let mut batch: Vec<DecodeSession> =
+            prompts.iter().map(|_| model.new_session_paged(&pool)).collect();
+        for (sess, p) in indiv.iter_mut().zip(&prompts) {
+            let _ = model.prefill(sess, p);
+        }
+        for (sess, p) in batch.iter_mut().zip(&prompts) {
+            let _ = model.prefill(sess, p);
+        }
+        for toks in [vec![4u16, 8, 15], vec![9, 3, 22]] {
+            let batched = model.decode_step_batch(&mut batch, &toks, 2);
+            for (r, (sess, &t)) in indiv.iter_mut().zip(&toks).enumerate() {
+                let want = model.decode_step(sess, t);
+                assert_eq!(batched.row(r), &want[..], "batched row {r} diverged");
+            }
+        }
+        drop(flat);
+        drop(paged);
+        drop(batch);
+        assert_eq!(pool.in_use(), 0, "retired paged sessions must release every block");
+    }
+
+    /// The paged-KV parity contract, part 2: warm suffix prefill — cold
+    /// (`pos == 0`) it is bit-identical to `prefill`, and a session that
+    /// adopts a cached prefix through the `PrefixIndex` produces the
+    /// same logits as a cold full prefill, then stays bit-identical
+    /// through subsequent decode steps.
+    #[test]
+    fn suffix_prefill_and_prefix_reuse_match_cold_prefill() {
+        use crate::kvpool::{KvPoolConfig, PrefixIndex};
+        let cfg = small_cfg();
+        let model = Transformer::random(&cfg, 29);
+        let pool = Arc::new(BlockPool::new(KvPoolConfig {
+            blocks: 256,
+            block_tokens: 5,
+        }));
+        let mut index = PrefixIndex::new(5, cfg.n_layers);
+        let prompt: Vec<u16> = vec![3, 9, 27, 1, 40, 12, 7, 33, 20, 2, 14, 6];
+        let mut scratch = PrefillScratch::default();
+
+        // cold references: contiguous prefill and paged suffix-from-zero
+        let mut cold = model.new_session();
+        let want = model.prefill(&mut cold, &prompt);
+        let mut paged = model.new_session_paged(&pool);
+        let got = model.prefill_suffix_with(&mut paged, &prompt, &mut scratch);
+        assert_eq!(got, want, "suffix prefill from pos 0 must equal cold prefill");
+
+        // publish the prompt, then serve it again through the index
+        let per_layer: Vec<_> = paged
+            .caches
+            .iter_mut()
+            .map(|c| c.freeze_prefix(prompt.len()).expect("paged cache"))
+            .collect();
+        index.insert(&prompt, &per_layer, &pool);
+        let m = index.lookup(&prompt, &pool);
+        assert_eq!(m.rows, 11, "2 full 5-row blocks + 1 shared tail row");
+        let mut warm = model.new_session_from_prefix(&pool, m);
+        let got = model.prefill_suffix_with(&mut warm, &prompt, &mut scratch);
+        assert_eq!(got, want, "prefix-reusing prefill must equal cold prefill");
+
+        // and decode stays bit-identical after the reuse (the first push
+        // copy-on-writes the shared tail block)
+        for &t in &[5u16, 18, 2, 61] {
+            let a = model.decode_step(&mut cold, t);
+            let b = model.decode_step(&mut warm, t);
+            assert_eq!(a, b, "decode after prefix reuse diverged");
+        }
+
+        drop(paged);
+        drop(warm);
+        index.clear(&pool);
+        assert_eq!(pool.in_use(), 0, "index clear + session drop releases everything");
     }
 
     #[test]

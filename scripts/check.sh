@@ -32,6 +32,15 @@ target/release/bwa serve --artifact "$smoke/tiny.bwa" --backend bwa \
 target/release/bwa serve --artifact "$smoke/tiny.bwa" --backend bwa-cont \
   --requests 6 --clients 3 --prompt-len 12 --gen 3 \
   --max-active 4 --admit eager --stagger-us 2000
+# Paged KV pool with shared-prefix reuse: every client leads with the same
+# 10-token system prompt spanning >1 KV block (block-size 4), so admissions
+# after the first adopt cached blocks — the report must show prefix hits.
+kvout="$(target/release/bwa serve --artifact "$smoke/tiny.bwa" --backend bwa-cont \
+  --requests 8 --clients 2 --prompt-len 14 --gen 3 --shared-prefix 10 \
+  --kv-blocks 256 --block-size 4 --max-active 4 --admit eager --stagger-us 2000)"
+echo "$kvout"
+echo "$kvout" | grep -E 'prefix hits: [1-9][0-9]*/8' \
+  || { echo "expected a nonzero prefix hit rate in the bwa-cont report"; exit 1; }
 target/release/bwa eval --artifact "$smoke/tiny.bwa" --quick
 
 echo "== cargo doc (rustdoc warnings are errors) =="

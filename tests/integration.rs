@@ -394,6 +394,7 @@ fn continuous_scheduler_serves_staggered_arrivals_end_to_end() {
         clients: 3,
         prompt_len: 10,
         gen: 3,
+        shared_prefix: 0,
         stagger: Duration::from_micros(500),
         seed: 13,
     };
@@ -420,4 +421,79 @@ fn continuous_scheduler_serves_staggered_arrivals_end_to_end() {
         stats.mean_active
     );
     assert!(stats.steps >= 2, "multi-token decode must take batched steps");
+}
+
+/// The paged KV pool through the whole stack: a shared-prefix workload
+/// (every client leads with the same system prompt) against
+/// `TransformerBackend::with_kv_pool`. Every request is served; the
+/// closed loop guarantees at most `clients` requests land in the first
+/// admission boundary, so later admissions must hit the published
+/// prefix — a nonzero hit rate and reused-token count are deterministic
+/// even though exact overlap is host-timing dependent.
+#[test]
+fn shared_prefix_workload_reuses_cached_blocks_end_to_end() {
+    use bwa_llm::coordinator::scheduler::{AdmissionPolicy, SchedulerConfig, TransformerBackend};
+    use bwa_llm::coordinator::{serve_continuous_load, Workload};
+    use bwa_llm::kvpool::KvPoolConfig;
+    use bwa_llm::model::config::ModelConfig;
+    use std::time::Duration;
+
+    let cfg = ModelConfig {
+        name: "it-kvpool".into(),
+        vocab_size: 512,
+        d_model: 128,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 192,
+        max_seq: 64,
+        rope_theta: 10000.0,
+        rmsnorm_eps: 1e-5,
+    };
+    let ck = Checkpoint::random(&cfg, 41);
+    let calib: Vec<Vec<u16>> = (0..4u16)
+        .map(|s| (0..32u16).map(|t| (s * 29 + t * 13) % 512).collect())
+        .collect();
+    let load = Workload {
+        requests: 10,
+        clients: 2,
+        prompt_len: 20,
+        gen: 3,
+        shared_prefix: 16, // 2 full 8-row blocks reusable per admission
+        stagger: Duration::from_micros(500),
+        seed: 19,
+    };
+    let (name, stats, _wall) = serve_continuous_load(
+        move || {
+            let model = quantize_model(&ck, &BwaQuantizer::paper(), &calib, Some(4)).unwrap();
+            TransformerBackend::with_kv_pool(
+                model,
+                2,
+                "it-bwa-kvpool",
+                KvPoolConfig {
+                    blocks: 256,
+                    block_tokens: 8,
+                },
+            )
+        },
+        &load,
+        SchedulerConfig {
+            max_active: 4,
+            admit: AdmissionPolicy::Eager,
+        },
+    );
+    assert!(name.contains("paged kv"), "{name}");
+    assert_eq!(stats.requests, 10);
+    assert_eq!(stats.gen_tokens, 10 * 3);
+    let kv = stats.kv.expect("paged backend reports kv stats");
+    assert_eq!(kv.prefix_requests, 10);
+    // 2 closed-loop clients -> at most 2 admissions in the first (cold)
+    // boundary; the other >= 8 requests must adopt the shared prefix.
+    assert!(kv.prefix_hits >= 8, "prefix hits {} of 10", kv.prefix_hits);
+    assert!(
+        kv.prefix_tokens_reused >= 8 * 16,
+        "each hit reuses >= 16 shared-prefix rows, got {}",
+        kv.prefix_tokens_reused
+    );
+    assert!(kv.blocks_peak <= kv.blocks_capacity, "budget respected");
+    assert!(kv.blocks_in_use > 0, "the prefix cache retains published blocks");
 }
