@@ -25,6 +25,15 @@
 //! `prefix_tokens_reused`, `kv_blocks_peak`, and
 //! `speedup_prefix_tok_per_s`.
 //!
+//! A fourth, **network** workload (under the `network` key) puts the
+//! same artifact-loaded model behind the TCP front-end
+//! (`server::start`) and drives it over loopback with concurrent
+//! `Client` connections replaying the same seeded prompts: it records
+//! **client-observed** TTFT/ITL (request written → `token` frames read
+//! off the socket) alongside the scheduler-observed distributions, so
+//! the wire + front-end overhead of the streaming protocol is a
+//! measured number, not a guess.
+//!
 //! Results (req/s, generated tok/s, latency percentiles, and the
 //! speedups) are printed and recorded into `BENCH_serve.json` at the
 //! repo root so the perf trajectory tracks end-to-end serving
@@ -38,17 +47,19 @@
 //! path is on the measured route.
 
 use bwa_llm::coordinator::batcher::{Backend, BatcherConfig, BatcherStats};
-use bwa_llm::coordinator::metrics::SchedulerStats;
+use bwa_llm::coordinator::metrics::{Histogram, SchedulerStats};
 use bwa_llm::coordinator::scheduler::{AdmissionPolicy, SchedulerConfig, TransformerBackend};
 use bwa_llm::coordinator::{
-    serve_continuous_load, serve_lockstep_load, serve_workload_stats, NativeBackend,
-    ParallelBackend, Workload,
+    client_prompts, serve_continuous_load, serve_lockstep_load, serve_workload_stats,
+    NativeBackend, ParallelBackend, Workload,
 };
 use bwa_llm::kvpool::KvPoolConfig;
 use bwa_llm::model::checkpoint::Checkpoint;
 use bwa_llm::model::config::ModelConfig;
+use bwa_llm::model::sampling::GenConfig;
 use bwa_llm::model::{quantize_model, Transformer};
 use bwa_llm::quant::BwaQuantizer;
+use bwa_llm::server::{self, Client, RequestLimits, ServerConfig};
 use bwa_llm::util::json::Json;
 use bwa_llm::util::rng::Rng;
 use std::time::{Duration, Instant};
@@ -68,6 +79,9 @@ const STAGGER_CLIENTS: usize = 8;
 const SHARED_PREFIX: usize = 16;
 const KV_BLOCK_TOKENS: usize = 8;
 const KV_BLOCKS: usize = 512;
+/// In-flight bound for the network workload — high enough that the
+/// closed-loop clients never trip the busy rejection.
+const NET_MAX_QUEUE: usize = 64;
 
 fn quantized(cfg: &ModelConfig, seed: u64) -> Transformer {
     let ck = Checkpoint::random(cfg, seed);
@@ -361,6 +375,107 @@ fn main() {
          {speedup_prefix:.2}x"
     );
 
+    // --- network serving: the TCP front-end over loopback ---
+    // The same artifact-loaded model behind `server::start`; CLIENTS
+    // connections drive the same seeded prompts over real sockets with
+    // the default greedy config. Client-observed TTFT/ITL (frames read
+    // off the socket) ride next to the scheduler-observed histograms —
+    // the per-token delta is the wire + front-end overhead.
+    let net_load = Workload {
+        requests: REQUESTS,
+        clients: CLIENTS,
+        prompt_len: PROMPT_LEN,
+        gen: GEN,
+        shared_prefix: 0,
+        stagger: Duration::ZERO,
+        seed: SEED,
+    };
+    println!("== network serving (loopback TCP, {CLIENTS} connections) ==");
+    let pool = KvPoolConfig {
+        blocks: KV_BLOCKS,
+        block_tokens: KV_BLOCK_TOKENS,
+    };
+    let limits = RequestLimits::for_model(&cfg, Some(pool));
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+    let path = art_path.clone();
+    let t0 = Instant::now();
+    let handle = server::start(
+        listener,
+        move || {
+            let model = bwa_llm::artifact::load(&path).expect("artifact").model;
+            TransformerBackend::with_kv_pool(model, workers, "bwa", pool)
+        },
+        ServerConfig {
+            scheduler: scfg,
+            max_queue: NET_MAX_QUEUE,
+            limits,
+            model: cfg.name.clone(),
+        },
+    )
+    .expect("start server");
+    let addr = handle.addr().to_string();
+    let client_threads: Vec<_> = (0..CLIENTS)
+        .map(|c| {
+            let addr = addr.clone();
+            let prompts = client_prompts(&net_load, c, REQUESTS / CLIENTS);
+            std::thread::spawn(move || {
+                let mut client = Client::connect(&addr).expect("connect");
+                let mut ttft = Histogram::default();
+                let mut itl = Histogram::default();
+                let mut total = Histogram::default();
+                let mut tokens = 0usize;
+                for (i, p) in prompts.iter().enumerate() {
+                    let g = client
+                        .generate(i as u64, p, GEN, &GenConfig::default())
+                        .expect("generate");
+                    tokens += g.tokens.len();
+                    ttft.record(g.ttft);
+                    for d in &g.itl {
+                        itl.record(*d);
+                    }
+                    total.record(g.total);
+                }
+                (ttft, itl, total, tokens)
+            })
+        })
+        .collect();
+    let mut client_ttft = Histogram::default();
+    let mut client_itl = Histogram::default();
+    let mut client_total = Histogram::default();
+    let mut net_tokens = 0usize;
+    for t in client_threads {
+        let (ttft, itl, total, tokens) = t.join().expect("client thread");
+        client_ttft.merge(&ttft);
+        client_itl.merge(&itl);
+        client_total.merge(&total);
+        net_tokens += tokens;
+    }
+    let net_stats = handle.shutdown();
+    let net_wall = t0.elapsed().as_secs_f64();
+    let sched = &net_stats.scheduler;
+    println!(
+        "bwa-cont over TCP            {:>7.2} req/s  {:>8.1} tok/s  \
+         ({} served, {} busy / {} capacity rejections)",
+        sched.throughput_rps,
+        sched.tokens_per_s,
+        net_stats.served,
+        net_stats.rejected_busy,
+        net_stats.rejected_capacity,
+    );
+    println!(
+        "  client ttft p50 {:.0}us p99 {:.0}us | scheduler ttft p50 {:.0}us p99 {:.0}us",
+        client_ttft.percentile(0.5),
+        client_ttft.percentile(0.99),
+        sched.ttft.percentile(0.5),
+        sched.ttft.percentile(0.99),
+    );
+    let ttft_overhead_us = client_ttft.mean() - sched.ttft.mean();
+    let itl_overhead_us = client_itl.mean() - sched.itl.mean();
+    println!(
+        "  wire + front-end overhead: ttft {ttft_overhead_us:.0}us, itl {itl_overhead_us:.0}us \
+         (client-observed mean minus scheduler-observed mean)"
+    );
+
     let json = Json::obj(vec![
         ("model", Json::str(cfg.name.as_str())),
         ("params", Json::num(cfg.param_count() as f64)),
@@ -401,6 +516,32 @@ fn main() {
                 ("prefix_tokens_reused", Json::num(re_kv.prefix_tokens_reused as f64)),
                 ("kv_blocks_peak", Json::num(re_kv.blocks_peak as f64)),
                 ("speedup_prefix_tok_per_s", Json::num(speedup_prefix)),
+            ]),
+        ),
+        (
+            "network",
+            Json::obj(vec![
+                ("clients", Json::num(CLIENTS as f64)),
+                ("max_queue", Json::num(NET_MAX_QUEUE as f64)),
+                ("served", Json::num(net_stats.served as f64)),
+                ("rejected_busy", Json::num(net_stats.rejected_busy as f64)),
+                ("rejected_capacity", Json::num(net_stats.rejected_capacity as f64)),
+                ("client_tokens", Json::num(net_tokens as f64)),
+                ("client_ttft_mean_us", Json::num(client_ttft.mean())),
+                ("client_ttft_p50_us", Json::num(client_ttft.percentile(0.5))),
+                ("client_ttft_p90_us", Json::num(client_ttft.percentile(0.9))),
+                ("client_ttft_p99_us", Json::num(client_ttft.percentile(0.99))),
+                ("client_itl_mean_us", Json::num(client_itl.mean())),
+                ("client_itl_p50_us", Json::num(client_itl.percentile(0.5))),
+                ("client_itl_p99_us", Json::num(client_itl.percentile(0.99))),
+                ("client_total_p50_us", Json::num(client_total.percentile(0.5))),
+                ("client_total_p99_us", Json::num(client_total.percentile(0.99))),
+                ("ttft_wire_overhead_us", Json::num(ttft_overhead_us)),
+                ("itl_wire_overhead_us", Json::num(itl_overhead_us)),
+                (
+                    "scheduler",
+                    record_continuous("bwa-cont-net", &net_stats.scheduler, net_wall),
+                ),
             ]),
         ),
     ]);

@@ -6,6 +6,7 @@
 //! [`Backend`], and returns per-request responses with latency metadata.
 
 use super::metrics::{Histogram, Throughput};
+use crate::model::sampling::GenConfig;
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
 use std::time::{Duration, Instant};
 
@@ -77,6 +78,11 @@ pub struct Request {
     /// batcher ignores it — it runs whole batches to completion and has
     /// no per-token boundary to emit from.
     pub stream_tx: Option<Sender<StreamEvent>>,
+    /// Per-request generation config (sampling + stop tokens), honored
+    /// by the continuous scheduler. The default is greedy argmax — the
+    /// exact selection every serve path used before configs existed —
+    /// and the lockstep batcher only supports that default.
+    pub cfg: GenConfig,
 }
 
 #[derive(Clone, Debug)]
@@ -246,6 +252,7 @@ mod tests {
                 submitted: Instant::now(),
                 resp_tx: rtx.clone(),
                 stream_tx: None,
+                cfg: GenConfig::default(),
             })
             .unwrap();
         }
@@ -278,6 +285,7 @@ mod tests {
                 submitted: Instant::now(),
                 resp_tx: rtx.clone(),
                 stream_tx: None,
+                cfg: GenConfig::default(),
             })
             .unwrap();
         }
@@ -312,6 +320,7 @@ mod tests {
                 submitted: Instant::now(),
                 resp_tx: rtx.clone(),
                 stream_tx: None,
+                cfg: GenConfig::default(),
             })
             .unwrap();
         }

@@ -16,6 +16,13 @@ impl Histogram {
         self.samples_us.push(d.as_secs_f64() * 1e6);
     }
 
+    /// Fold another histogram's samples into this one — used to combine
+    /// per-client-thread measurements (e.g. client-observed TTFT across
+    /// the network bench's connections) into one distribution.
+    pub fn merge(&mut self, other: &Histogram) {
+        self.samples_us.extend_from_slice(&other.samples_us);
+    }
+
     pub fn len(&self) -> usize {
         self.samples_us.len()
     }
@@ -171,6 +178,10 @@ pub struct SchedulerStats {
     pub throughput_rps: f64,
     /// Generated tokens / serving window.
     pub tokens_per_s: f64,
+    /// Requests that ended early because they produced one of their
+    /// configured stop tokens (the stop token itself is still emitted
+    /// and counted in `gen_tokens`).
+    pub stop_hits: usize,
     /// KV block-pool occupancy + prefix-reuse counters; `None` unless
     /// the backend serves from a paged KV pool.
     pub kv: Option<KvCacheStats>,
@@ -215,6 +226,20 @@ mod tests {
         assert!(h.percentile(0.9) <= h.percentile(0.99));
         assert!((h.percentile(0.5) - 50.0).abs() <= 2.0);
         assert_eq!(h.len(), 100);
+    }
+
+    #[test]
+    fn merge_combines_samples() {
+        let mut a = Histogram::default();
+        let mut b = Histogram::default();
+        for i in 1..=10 {
+            a.record(Duration::from_micros(i));
+            b.record(Duration::from_micros(100 + i));
+        }
+        a.merge(&b);
+        assert_eq!(a.len(), 20);
+        assert!(a.percentile(0.99) >= 100.0, "merged tail comes from b");
+        assert_eq!(b.len(), 10, "merge must not consume the source");
     }
 
     #[test]

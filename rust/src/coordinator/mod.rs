@@ -36,6 +36,13 @@
 //!
 //! Reports latency percentiles, request and token throughput, and batch
 //! statistics; see `docs/SERVING.md` for how to read the report.
+//!
+//! With `--listen <addr>` (bwa-cont only), `bwa serve` skips the
+//! synthetic workload entirely and exposes the continuous scheduler
+//! over TCP instead — the newline-delimited JSON protocol of
+//! [`crate::server`] (`docs/PROTOCOL.md`), driven by `bwa client` or any
+//! socket client. Per-request sampling configs
+//! ([`crate::model::sampling::GenConfig`]) ride in on the wire.
 
 pub mod batcher;
 pub mod engine;
@@ -48,6 +55,7 @@ use crate::coordinator::scheduler::{run_scheduler, SchedulerConfig, SessionBacke
 use crate::data::corpus::CorpusSpec;
 use crate::kvpool::KvPoolConfig;
 use crate::model::checkpoint::Checkpoint;
+use crate::model::sampling::GenConfig;
 use crate::model::Transformer;
 use crate::util::cli::{Args, Spec};
 use crate::util::rng::Rng;
@@ -95,7 +103,9 @@ impl Backend for PjrtBackend {
     }
 }
 
-static SERVE_SPEC: Spec = Spec {
+/// Flag spec for `bwa serve` — `pub` so the help-text sync test in
+/// `main.rs` can assert every accepted flag is documented.
+pub static SERVE_SPEC: Spec = Spec {
     name: "serve",
     about: "closed-loop serving benchmark over the batching coordinator",
     flags: &[
@@ -117,6 +127,9 @@ static SERVE_SPEC: Spec = Spec {
         ("stagger-us", "0", "per-client think time between submissions (0 = back-to-back)"),
         ("workers", "0", "engine worker threads (0 = all cores)"),
         ("seed", "7", "workload seed"),
+        ("listen", "", "serve over TCP on this address (e.g. 127.0.0.1:8491) instead of \
+          driving the synthetic workload; bwa-cont only — see docs/PROTOCOL.md"),
+        ("max-queue", "64", "network serve: queued-request bound before busy rejection"),
     ],
     switches: &[],
 };
@@ -151,6 +164,16 @@ pub fn cmd_serve(args: &Args) -> Result<(), String> {
     let max_active = args.usize_or("max-active", 8).map_err(|e| e.to_string())?;
     if max_active == 0 {
         return Err("--max-active must be >= 1".into());
+    }
+    let listen = args.str_or("listen", "").to_string();
+    let max_queue = args.usize_or("max-queue", 64).map_err(|e| e.to_string())?;
+    if !listen.is_empty() && backend_kind != "bwa-cont" {
+        return Err(format!(
+            "--listen requires --backend bwa-cont (the streaming scheduler); got '{backend_kind}'"
+        ));
+    }
+    if max_queue == 0 {
+        return Err("--max-queue must be >= 1".into());
     }
     let admit: scheduler::AdmissionPolicy = args.str_or("admit", "eager").parse()?;
     let stagger_us = args.u64_or("stagger-us", 0).map_err(|e| e.to_string())?;
@@ -290,6 +313,18 @@ pub fn cmd_serve(args: &Args) -> Result<(), String> {
             pool_cfg.blocks, pool_cfg.block_tokens, model.cfg.n_layers
         );
         let scfg = SchedulerConfig { max_active, admit };
+        if !listen.is_empty() {
+            // Network front-end: expose the scheduler over TCP instead
+            // of driving the synthetic workload (docs/PROTOCOL.md).
+            return crate::server::serve_listen(
+                &listen,
+                model,
+                workers,
+                pool_cfg,
+                scfg,
+                max_queue,
+            );
+        }
         let (name, stats, wall) = serve_continuous_load(
             move || {
                 TransformerBackend::with_kv_pool(
@@ -379,6 +414,35 @@ pub struct Workload {
     pub seed: u64,
 }
 
+/// The exact prompt sequence client `c` of `load` submits: `n` prompts,
+/// each the workload's shared system prefix plus a fresh seeded suffix.
+/// This is the *definition* of the synthetic workload — [`drive_workload`]
+/// consumes it in-process, and `bwa client` replays the same function
+/// over TCP, which is what lets the network smoke test compare streamed
+/// tokens against an in-process run of the same seed bit-for-bit.
+pub fn client_prompts(load: &Workload, c: usize, n: usize) -> Vec<Vec<u16>> {
+    let mut rng = Rng::new(load.seed ^ (c as u64) << 16);
+    let stream = crate::data::corpus::train_split(&CorpusSpec::wiki(), 20_000 + c * 1000);
+    // The shared system prefix is a function of the workload seed alone,
+    // so every client derives the same tokens.
+    let shared: Vec<u16> = if load.shared_prefix > 0 {
+        let sys = crate::data::corpus::train_split(&CorpusSpec::wiki(), 20_000);
+        let start = (load.seed as usize).wrapping_mul(131) % (sys.len() - load.shared_prefix);
+        sys[start..start + load.shared_prefix].to_vec()
+    } else {
+        Vec::new()
+    };
+    (0..n)
+        .map(|_| {
+            let suffix = load.prompt_len - load.shared_prefix;
+            let start = rng.below(stream.len() - load.prompt_len);
+            let mut tokens = shared.clone();
+            tokens.extend_from_slice(&stream[start..start + suffix]);
+            tokens
+        })
+        .collect()
+}
+
 /// Spawn the client threads for `load` against a server loop running on
 /// its own scoped thread (the backend is constructed *on* that thread —
 /// PJRT handles are thread-local). Returns the server's result and the
@@ -405,31 +469,15 @@ where
             let id_base = c * per_client + c.min(remainder);
             let load = *load;
             s.spawn(move || {
-                let mut rng = Rng::new(load.seed ^ (c as u64) << 16);
-                let stream =
-                    crate::data::corpus::train_split(&CorpusSpec::wiki(), 20_000 + c * 1000);
-                // The shared system prefix is a function of the workload
-                // seed alone, so every client derives the same tokens.
-                let shared: Vec<u16> = if load.shared_prefix > 0 {
-                    let sys = crate::data::corpus::train_split(&CorpusSpec::wiki(), 20_000);
-                    let start = (load.seed as usize).wrapping_mul(131)
-                        % (sys.len() - load.shared_prefix);
-                    sys[start..start + load.shared_prefix].to_vec()
-                } else {
-                    Vec::new()
-                };
+                let prompts = client_prompts(&load, c, n_mine);
                 let (rtx, rrx) = mpsc::channel();
                 if !load.stagger.is_zero() {
                     std::thread::sleep(load.stagger * c as u32 / clients as u32);
                 }
-                for i in 0..n_mine {
+                for (i, tokens) in prompts.into_iter().enumerate() {
                     if i > 0 && !load.stagger.is_zero() {
                         std::thread::sleep(load.stagger);
                     }
-                    let suffix = load.prompt_len - load.shared_prefix;
-                    let start = rng.below(stream.len() - load.prompt_len);
-                    let mut tokens = shared.clone();
-                    tokens.extend_from_slice(&stream[start..start + suffix]);
                     tx.send(Request {
                         id: (id_base + i) as u64,
                         tokens,
@@ -437,6 +485,7 @@ where
                         submitted: Instant::now(),
                         resp_tx: rtx.clone(),
                         stream_tx: None,
+                        cfg: GenConfig::default(),
                     })
                     .expect("server alive");
                     // closed loop: wait for the response before next req
@@ -550,6 +599,12 @@ pub fn continuous_report(name: &str, load: &Workload, stats: &SchedulerStats, wa
         stats.latency.report("latency"),
         stats.queue_wait.report("queue wait"),
     );
+    if stats.stop_hits > 0 {
+        report.push_str(&format!(
+            "\nstop hits:   {} requests ended at a stop token",
+            stats.stop_hits
+        ));
+    }
     if let Some(kv) = &stats.kv {
         report.push_str(&format!(
             "\nkv pool:     {}/{} blocks in use (peak {}, {} tok/block)\n\

@@ -29,6 +29,24 @@
 //! independently — admission order changes *when* a token is computed,
 //! never its value (test-pinned below).
 //!
+//! # Per-request sampling and stop tokens
+//!
+//! Every [`Request`] carries a
+//! [`GenConfig`](crate::model::sampling::GenConfig)
+//! ([`crate::model::sampling`]): the scheduler builds one seeded
+//! [`Sampler`](crate::model::sampling::Sampler) per admitted slot and
+//! routes all token selection through
+//! [`SessionBackend::prefill_batch_sampled`] /
+//! [`SessionBackend::decode_batch_sampled`]. The default config is
+//! greedy argmax — the sampler literally calls [`crate::util::argmax`]
+//! and draws no randomness — so the bit-parity pins above are untouched;
+//! non-greedy configs sample deterministically from the config's seed.
+//! Stop tokens are enforced *scheduler-side*: the moment a slot produces
+//! one of its configured stop ids, the token is streamed with
+//! [`StreamEvent::done`] set, the slot retires (KV blocks released like
+//! any retirement), and the remaining `gen` budget is abandoned
+//! ([`SchedulerStats::stop_hits`] counts these early exits).
+//!
 //! # KV memory as the admission gate
 //!
 //! A backend built with [`TransformerBackend::with_kv_pool`] serves its
@@ -60,6 +78,7 @@
 //! use bwa_llm::coordinator::scheduler::{
 //!     AdmissionPolicy, Scheduler, SchedulerConfig, SessionBackend,
 //! };
+//! use bwa_llm::model::sampling::GenConfig;
 //! use std::sync::mpsc;
 //! use std::time::Instant;
 //!
@@ -98,6 +117,7 @@
 //!     submitted: Instant::now(),
 //!     resp_tx: rtx.clone(),
 //!     stream_tx: None,
+//!     cfg: GenConfig::default(),
 //! };
 //!
 //! sched.submit(req(0, vec![1, 2, 3], 4));
@@ -123,6 +143,7 @@ use super::batcher::{Request, Response, StreamEvent};
 use super::engine::{prefill_pool, prefill_pool_seeded};
 use super::metrics::{Histogram, KvCacheStats, SchedulerStats};
 use crate::kvpool::{BlockPool, KvPoolConfig, PrefixIndex, PrefixMatch};
+use crate::model::sampling::Sampler;
 use crate::model::{DecodeSession, Transformer};
 use crate::util::argmax;
 use std::collections::VecDeque;
@@ -196,6 +217,37 @@ pub trait SessionBackend {
     /// the sessions may sit at *different* absolute positions) and
     /// return the next greedy token per session.
     fn decode_batch(&self, sessions: &mut [&mut Self::Session], tokens: &[u16]) -> Vec<u16>;
+
+    /// [`prefill_batch`](Self::prefill_batch) with per-request token
+    /// selection: `samplers[i]` picks prompt `i`'s first token from the
+    /// prefill logits. The default ignores the samplers and delegates to
+    /// the greedy `prefill_batch` — correct for the default (greedy)
+    /// [`GenConfig`](crate::model::sampling::GenConfig) and for mock
+    /// backends that never expose logits; backends with real logits
+    /// ([`TransformerBackend`]) override it.
+    fn prefill_batch_sampled(
+        &self,
+        prompts: &[&[u16]],
+        gens: &[usize],
+        samplers: &mut [Sampler],
+    ) -> Vec<(Self::Session, u16)> {
+        let _ = samplers;
+        self.prefill_batch(prompts, gens)
+    }
+
+    /// [`decode_batch`](Self::decode_batch) with per-request token
+    /// selection: `samplers[i]` picks session `i`'s next token from its
+    /// logits row. Same default-delegation contract as
+    /// [`prefill_batch_sampled`](Self::prefill_batch_sampled).
+    fn decode_batch_sampled(
+        &self,
+        sessions: &mut [&mut Self::Session],
+        tokens: &[u16],
+        samplers: &mut [&mut Sampler],
+    ) -> Vec<u16> {
+        let _ = samplers;
+        self.decode_batch(sessions, tokens)
+    }
 
     /// Secure whatever capacity admitting `(prompt, gen)` needs at this
     /// step boundary — for a paged-KV backend, match the prompt against
@@ -339,30 +391,14 @@ impl TransformerBackend {
         let worst = pool.config().worst_case_blocks(prompt_len, gen, n_layers);
         worst - matched.full_blocks(pool.block_tokens()) * n_layers * 2
     }
-}
 
-impl SessionBackend for TransformerBackend {
-    type Session = DecodeSession;
-
-    fn name(&self) -> String {
-        match &self.kv {
-            None => format!("{} [continuous x{}]", self.label, self.workers),
-            Some(kv) => format!(
-                "{} [continuous x{}, paged kv {}x{}]",
-                self.label,
-                self.workers,
-                kv.pool.capacity(),
-                kv.pool.block_tokens()
-            ),
-        }
-    }
-
-    fn prefill_batch(&self, prompts: &[&[u16]], gens: &[usize]) -> Vec<(DecodeSession, u16)> {
+    /// Prefill each prompt into a fresh session and return the raw
+    /// last-position logits — the shared body of `prefill_batch`
+    /// (greedy argmax) and `prefill_batch_sampled` (per-request
+    /// selection). Handles both the contiguous and the paged-KV path.
+    fn prefill_logits(&self, prompts: &[&[u16]], gens: &[usize]) -> Vec<(DecodeSession, Vec<f32>)> {
         let Some(kv) = &self.kv else {
-            return prefill_pool(&self.model, self.workers, prompts, gens)
-                .into_iter()
-                .map(|(sess, logits)| (sess, argmax(&logits) as u16))
-                .collect();
+            return prefill_pool(&self.model, self.workers, prompts, gens);
         };
         // Adopt each prompt's cached prefix (usually pre-adopted at
         // reservation) and seed sessions; one index lock for the batch.
@@ -404,12 +440,68 @@ impl SessionBackend for TransformerBackend {
                 index.insert(prompts[i], &per_layer, &kv.pool);
             }
         }
-        out.into_iter().map(|(sess, logits)| (sess, argmax(&logits) as u16)).collect()
+        out
+    }
+}
+
+impl SessionBackend for TransformerBackend {
+    type Session = DecodeSession;
+
+    fn name(&self) -> String {
+        match &self.kv {
+            None => format!("{} [continuous x{}]", self.label, self.workers),
+            Some(kv) => format!(
+                "{} [continuous x{}, paged kv {}x{}]",
+                self.label,
+                self.workers,
+                kv.pool.capacity(),
+                kv.pool.block_tokens()
+            ),
+        }
+    }
+
+    fn prefill_batch(&self, prompts: &[&[u16]], gens: &[usize]) -> Vec<(DecodeSession, u16)> {
+        self.prefill_logits(prompts, gens)
+            .into_iter()
+            .map(|(sess, logits)| (sess, argmax(&logits) as u16))
+            .collect()
     }
 
     fn decode_batch(&self, sessions: &mut [&mut DecodeSession], tokens: &[u16]) -> Vec<u16> {
         let logits = self.model.decode_step_batch_refs(sessions, tokens, self.workers);
         (0..sessions.len()).map(|r| argmax(logits.row(r)) as u16).collect()
+    }
+
+    fn prefill_batch_sampled(
+        &self,
+        prompts: &[&[u16]],
+        gens: &[usize],
+        samplers: &mut [Sampler],
+    ) -> Vec<(DecodeSession, u16)> {
+        debug_assert_eq!(samplers.len(), prompts.len());
+        self.prefill_logits(prompts, gens)
+            .into_iter()
+            .zip(samplers.iter_mut())
+            .map(|((sess, logits), sampler)| {
+                let first = sampler.select(&logits);
+                (sess, first)
+            })
+            .collect()
+    }
+
+    fn decode_batch_sampled(
+        &self,
+        sessions: &mut [&mut DecodeSession],
+        tokens: &[u16],
+        samplers: &mut [&mut Sampler],
+    ) -> Vec<u16> {
+        debug_assert_eq!(samplers.len(), sessions.len());
+        let logits = self.model.decode_step_batch_refs(sessions, tokens, self.workers);
+        samplers
+            .iter_mut()
+            .enumerate()
+            .map(|(r, sampler)| sampler.select(logits.row(r)))
+            .collect()
     }
 
     fn try_reserve(&self, prompt: &[u16], gen: usize) -> bool {
@@ -455,7 +547,14 @@ struct Slot<S> {
     id: u64,
     gen: usize,
     session: S,
+    /// Per-request token selector + stop-token membership, built from
+    /// the request's [`GenConfig`](crate::model::sampling::GenConfig).
+    sampler: Sampler,
     generated: Vec<u16>,
+    /// Set when the request's stream is over — `gen` budget exhausted or
+    /// a stop token produced. A finished slot retires at the end of the
+    /// boundary that finished it.
+    finished: bool,
     submitted: Instant,
     /// When this request's latest token was emitted (ITL clock).
     last_emit: Instant,
@@ -491,6 +590,7 @@ pub struct Scheduler<'a, B: SessionBackend> {
     steps: usize,
     active_sum: usize,
     retired: usize,
+    stop_hits: usize,
 }
 
 impl<'a, B: SessionBackend> Scheduler<'a, B> {
@@ -512,6 +612,7 @@ impl<'a, B: SessionBackend> Scheduler<'a, B> {
             steps: 0,
             active_sum: 0,
             retired: 0,
+            stop_hits: 0,
         }
     }
 
@@ -570,10 +671,11 @@ impl<'a, B: SessionBackend> Scheduler<'a, B> {
             }
             let prompts: Vec<&[u16]> = batch.iter().map(|r| r.tokens.as_slice()).collect();
             let gens: Vec<usize> = batch.iter().map(|r| r.gen).collect();
+            let mut samplers: Vec<Sampler> = batch.iter().map(|r| r.cfg.sampler()).collect();
             let prefilled = if batch.is_empty() {
                 Vec::new()
             } else {
-                self.backend.prefill_batch(&prompts, &gens)
+                self.backend.prefill_batch_sampled(&prompts, &gens, &mut samplers)
             };
             debug_assert_eq!(prefilled.len(), batch.len());
             // The in-flight set at this boundary: everything already
@@ -583,13 +685,17 @@ impl<'a, B: SessionBackend> Scheduler<'a, B> {
             // A boundary where the head could not reserve admits nothing
             // — that is not progress (capacity frees at retirements).
             progressed = !batch.is_empty();
-            for (req, (session, first)) in batch.into_iter().zip(prefilled) {
+            for ((req, sampler), (session, first)) in
+                batch.into_iter().zip(samplers).zip(prefilled)
+            {
                 let now = Instant::now();
                 let mut slot = Slot {
                     id: req.id,
                     gen: req.gen,
                     session,
+                    sampler,
                     generated: Vec::with_capacity(req.gen),
+                    finished: req.gen == 0,
                     submitted: req.submitted,
                     last_emit: now,
                     resp_tx: req.resp_tx,
@@ -600,17 +706,25 @@ impl<'a, B: SessionBackend> Scheduler<'a, B> {
                     self.ttft.record(now - slot.submitted);
                     slot.generated.push(first);
                     self.gen_tokens += 1;
+                    if slot.sampler.is_stop(first) {
+                        self.stop_hits += 1;
+                        slot.finished = true;
+                    }
+                    if slot.generated.len() >= slot.gen {
+                        slot.finished = true;
+                    }
                     if let Some(tx) = &slot.stream_tx {
                         let _ = tx.send(StreamEvent {
                             id: slot.id,
                             index: 0,
                             token: first,
-                            done: slot.gen == 1,
+                            done: slot.finished,
                         });
                     }
                 }
-                if slot.generated.len() >= slot.gen {
-                    // gen <= 1: done without ever occupying a decode slot
+                if slot.finished {
+                    // gen <= 1 or first-token stop: done without ever
+                    // occupying a decode slot
                     self.retire(slot, boundary_set);
                 } else {
                     self.active.push(slot);
@@ -627,10 +741,19 @@ impl<'a, B: SessionBackend> Scheduler<'a, B> {
                 .iter()
                 .map(|s| *s.generated.last().expect("active slot has a token"))
                 .collect();
-            let mut sessions: Vec<&mut B::Session> =
-                self.active.iter_mut().map(|s| &mut s.session).collect();
-            let next = self.backend.decode_batch(&mut sessions, &tokens);
+            // Split each slot into disjoint &mut session / &mut sampler
+            // borrows so the backend can run the batched GEMM and the
+            // per-row selection in one call.
+            let mut sessions: Vec<&mut B::Session> = Vec::with_capacity(self.active.len());
+            let mut samplers: Vec<&mut Sampler> = Vec::with_capacity(self.active.len());
+            for slot in self.active.iter_mut() {
+                let Slot { session, sampler, .. } = slot;
+                sessions.push(session);
+                samplers.push(sampler);
+            }
+            let next = self.backend.decode_batch_sampled(&mut sessions, &tokens, &mut samplers);
             drop(sessions);
+            drop(samplers);
             debug_assert_eq!(next.len(), self.active.len());
             let now = Instant::now();
             for (slot, &tok) in self.active.iter_mut().zip(next.iter()) {
@@ -638,12 +761,19 @@ impl<'a, B: SessionBackend> Scheduler<'a, B> {
                 slot.last_emit = now;
                 slot.generated.push(tok);
                 self.gen_tokens += 1;
+                if slot.sampler.is_stop(tok) {
+                    self.stop_hits += 1;
+                    slot.finished = true;
+                }
+                if slot.generated.len() >= slot.gen {
+                    slot.finished = true;
+                }
                 if let Some(tx) = &slot.stream_tx {
                     let _ = tx.send(StreamEvent {
                         id: slot.id,
                         index: slot.generated.len() - 1,
                         token: tok,
-                        done: slot.generated.len() == slot.gen,
+                        done: slot.finished,
                     });
                 }
             }
@@ -654,7 +784,7 @@ impl<'a, B: SessionBackend> Scheduler<'a, B> {
             let step_set = self.active.len();
             let mut i = 0;
             while i < self.active.len() {
-                if self.active[i].generated.len() >= self.active[i].gen {
+                if self.active[i].finished {
                     let slot = self.active.swap_remove(i);
                     self.retire(slot, step_set);
                 } else {
@@ -702,6 +832,7 @@ impl<'a, B: SessionBackend> Scheduler<'a, B> {
             steps: self.steps,
             throughput_rps: self.retired as f64 / window,
             tokens_per_s: self.gen_tokens as f64 / window,
+            stop_hits: self.stop_hits,
             kv: self.backend.kv_stats(),
         }
     }
@@ -767,6 +898,7 @@ mod tests {
     use crate::model::checkpoint::Checkpoint;
     use crate::model::config::ModelConfig;
     use crate::model::quantize_model;
+    use crate::model::sampling::GenConfig;
     use crate::quant::BwaQuantizer;
     use crate::util::rng::Rng;
     use std::sync::mpsc;
@@ -809,6 +941,7 @@ mod tests {
             submitted: Instant::now(),
             resp_tx: rtx.clone(),
             stream_tx: None,
+            cfg: GenConfig::default(),
         }
     }
 
@@ -977,6 +1110,7 @@ mod tests {
             submitted: Instant::now(),
             resp_tx: rtx,
             stream_tx: Some(stx),
+            cfg: GenConfig::default(),
         });
         while sched.step() {}
         let resp = rrx.try_recv().expect("final response");
@@ -1227,6 +1361,7 @@ mod tests {
                 submitted: Instant::now(),
                 resp_tx: rtx.clone(),
                 stream_tx: None,
+                cfg: GenConfig::default(),
             })
             .unwrap();
         }
@@ -1248,5 +1383,147 @@ mod tests {
         );
         assert_eq!(stats.ttft.len(), 40);
         assert_eq!(stats.latency.len(), 40);
+    }
+
+    /// The sampling pin, both directions: a default (greedy) GenConfig
+    /// through the scheduler's sampled path is bit-identical to
+    /// sequential prefill + decode_step, while a temperature > 0 config
+    /// replays identically from its seed and actually diverges from
+    /// greedy.
+    #[test]
+    fn sampled_decode_is_seed_deterministic_and_greedy_stays_bit_identical() {
+        let mut rng = Rng::new(95);
+        let prompt: Vec<u16> = (0..12).map(|_| rng.below(64) as u16).collect();
+        let gen = 8usize;
+
+        // sequential greedy reference
+        let model = quantized_model(94);
+        let mut sess = model.new_session();
+        let mut logits = model.prefill(&mut sess, &prompt);
+        let mut want = Vec::new();
+        for step in 0..gen {
+            let next = argmax(&logits) as u16;
+            want.push(next);
+            if step + 1 < gen {
+                logits = model.decode_step(&mut sess, next);
+            }
+        }
+
+        let drive = |cfg: GenConfig| -> Vec<u16> {
+            let backend = TransformerBackend::new(quantized_model(94), 2, "samp");
+            let mut sched = Scheduler::new(&backend, SchedulerConfig::default());
+            let (rtx, rrx) = mpsc::channel();
+            sched.submit(Request {
+                id: 0,
+                tokens: prompt.clone(),
+                gen,
+                submitted: Instant::now(),
+                resp_tx: rtx,
+                stream_tx: None,
+                cfg,
+            });
+            while sched.step() {}
+            sched.finish();
+            rrx.try_recv().expect("final response").generated
+        };
+
+        let greedy = drive(GenConfig::default());
+        assert_eq!(greedy, want, "default GenConfig must stay bit-identical to sequential");
+
+        let sampled_cfg = GenConfig {
+            temperature: 1.5,
+            top_k: 16,
+            top_p: 0.95,
+            seed: 7,
+            stop: Vec::new(),
+        };
+        let a = drive(sampled_cfg.clone());
+        let b = drive(sampled_cfg);
+        assert_eq!(a, b, "same seed + config must replay identical tokens");
+        assert_eq!(a.len(), gen);
+        assert_ne!(a, want, "temperature 1.5 sampling should diverge from argmax");
+    }
+
+    /// The stop-token pin: generation halts the moment the configured
+    /// stop id is produced mid-stream, the final StreamEvent is marked
+    /// done, the remaining gen budget is abandoned, and the retired
+    /// session's KV blocks all return to the pool.
+    #[test]
+    fn stop_token_halts_midstream_marks_done_and_releases_blocks() {
+        // Find a model seed whose greedy continuation contains a token
+        // whose *first* occurrence is mid-stream — that token is the
+        // stop id, so the stop triggers strictly after the first token
+        // and strictly before the budget runs out.
+        let gen = 6usize;
+        let mut picked = None;
+        for model_seed in [91u64, 191, 291, 391] {
+            let model = quantized_model(model_seed);
+            let mut rng = Rng::new(model_seed ^ 1);
+            let prompt: Vec<u16> = (0..12).map(|_| rng.below(64) as u16).collect();
+            let mut sess = model.new_session();
+            let mut logits = model.prefill(&mut sess, &prompt);
+            let mut want = Vec::new();
+            for step in 0..gen {
+                let next = argmax(&logits) as u16;
+                want.push(next);
+                if step + 1 < gen {
+                    logits = model.decode_step(&mut sess, next);
+                }
+            }
+            if let Some(stop_at) = (1..gen).find(|&i| !want[..i].contains(&want[i])) {
+                picked = Some((model_seed, prompt, want, stop_at));
+                break;
+            }
+        }
+        let (model_seed, prompt, want, stop_at) =
+            picked.expect("some seed yields a mid-stream first occurrence");
+        let stop = want[stop_at];
+
+        let backend = TransformerBackend::with_kv_pool(
+            quantized_model(model_seed),
+            2,
+            "stop",
+            KvPoolConfig {
+                blocks: 512,
+                block_tokens: 4,
+            },
+        );
+        let pool = backend.kv_pool().unwrap().clone();
+        let mut sched = Scheduler::new(&backend, SchedulerConfig::default());
+        let (rtx, rrx) = mpsc::channel();
+        let (stx, srx) = mpsc::channel();
+        sched.submit(Request {
+            id: 3,
+            tokens: prompt,
+            gen,
+            submitted: Instant::now(),
+            resp_tx: rtx,
+            stream_tx: Some(stx),
+            cfg: GenConfig {
+                stop: vec![stop],
+                ..GenConfig::default()
+            },
+        });
+        while sched.step() {}
+        let stats = sched.finish();
+        let resp = rrx.try_recv().expect("final response");
+        assert_eq!(
+            resp.generated,
+            want[..=stop_at].to_vec(),
+            "generation must truncate exactly at the stop token"
+        );
+        let events: Vec<StreamEvent> = srx.try_iter().collect();
+        assert_eq!(events.len(), stop_at + 1, "no events after the stop token");
+        for (i, ev) in events.iter().enumerate() {
+            assert_eq!(ev.index, i);
+            assert_eq!(ev.done, i == stop_at, "only the stop token is marked done");
+        }
+        assert_eq!(events.last().unwrap().token, stop);
+        assert_eq!(stats.stop_hits, 1);
+        assert_eq!(stats.gen_tokens, stop_at + 1, "remaining gen budget is abandoned");
+        // The retired session released its blocks; after dropping the
+        // published prefixes too, the pool must read completely empty.
+        backend.clear_prefix_cache();
+        assert_eq!(pool.in_use(), 0, "stop-token retirement must release all KV blocks");
     }
 }

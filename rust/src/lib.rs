@@ -70,10 +70,19 @@
 //! ([`kvpool::PrefixIndex`]) that lets admission reuse a cached shared
 //! prompt prefix — refcount bumps instead of re-prefilling from token
 //! zero — and gates admission on actual free blocks rather than slot
-//! count. See `docs/ARCHITECTURE.md` for the layer diagram and the
-//! paper-equation → code map, `docs/SERVING.md` for `bwa serve`, and
-//! `docs/SCHEDULING.md` for the scheduler's request lifecycle, the KV
-//! block math, and metric definitions.
+//! count.
+//!
+//! [`server`] puts the scheduler on the network: `bwa serve --listen`
+//! accepts concurrent TCP connections speaking newline-delimited JSON
+//! (`docs/PROTOCOL.md`), streams every generated token back the moment
+//! the scheduler emits it, and carries a per-request sampling config
+//! ([`model::sampling::GenConfig`]: temperature / top-k / top-p under a
+//! seeded RNG, plus stop tokens) — greedy argmax stays the default, so
+//! the network path is bit-identical to the in-process one. `bwa client`
+//! is the matching reference client. See `docs/ARCHITECTURE.md` for the
+//! layer diagram and the paper-equation → code map, `docs/SERVING.md`
+//! for `bwa serve`, and `docs/SCHEDULING.md` for the scheduler's request
+//! lifecycle, the KV block math, and metric definitions.
 //!
 //! Layers (see DESIGN.md):
 //! - L1: Pallas kernel (python, build time) — `python/compile/kernels/`
@@ -101,5 +110,6 @@ pub mod linalg;
 pub mod model;
 pub mod quant;
 pub mod runtime;
+pub mod server;
 pub mod tensor;
 pub mod util;

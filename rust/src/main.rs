@@ -13,7 +13,12 @@
 //! - `serve`    — run the serving coordinator (lockstep batcher or the
 //!                continuous-batching scheduler, `--backend bwa-cont`);
 //!                `--artifact` serves a compiled artifact without
-//!                re-quantizing.
+//!                re-quantizing; `--listen` exposes the scheduler over
+//!                TCP (newline-delimited JSON, see docs/PROTOCOL.md).
+//! - `client`   — drive a `serve --listen` server over TCP with the
+//!                synthetic workload's prompts and per-request sampling
+//!                configs; `--verify-artifact` checks the streamed
+//!                tokens bit-for-bit against an in-process greedy run.
 
 use bwa_llm::baselines;
 use bwa_llm::data::corpus::CorpusSpec;
@@ -40,6 +45,7 @@ fn main() {
         "eval" => cmd_eval(&args),
         "bench" => bwa_llm::exps::cmd_bench(&args),
         "serve" => bwa_llm::coordinator::cmd_serve(&args),
+        "client" => bwa_llm::server::cmd_client(&args),
         "" | "help" => {
             print_help();
             Ok(())
@@ -58,8 +64,11 @@ fn main() {
     std::process::exit(code);
 }
 
-fn print_help() {
-    println!(
+/// The top-level help text. Kept in a function (not inlined into
+/// [`print_help`]) so the flag-sync test below can assert every flag
+/// `serve` and `client` accept is documented here.
+fn help_text() -> String {
+    format!(
         "bwa — W(1+1)A(1x4) post-training quantization for LLMs (ACL Findings 2025 repro)\n\n\
          subcommands:\n\
          \x20 datagen   --out artifacts/data [--tokens N]\n\
@@ -68,19 +77,62 @@ fn print_help() {
          \x20           [--out artifacts/quant/tiny.bwa]\n\
          \x20 eval      --model artifacts/models/tiny.bin --method bwa [--artifact f.bwa] [--quick]\n\
          \x20 bench     --exp fig1|table1|table2|table3|table4|table5|table6|table7|table9|fig3|fig4 [--quick]\n\
-         \x20 serve     [--model ckpt.bin | --artifact f.bwa]\n\
+         \x20 serve     [--model ckpt.bin | --artifact f.bwa] [--artifacts dir]\n\
          \x20           [--backend pjrt|native|bwa|bwa-seq|bwa-cont]\n\
          \x20           [--requests N] [--clients C] [--prompt-len P] [--gen G] [--batch B]\n\
          \x20           [--wait-us U] [--workers W] [--seed S] [--stagger-us U]\n\
          \x20           [--shared-prefix P]                      (common system-prompt prefix)\n\
          \x20           [--max-active N] [--admit eager|drain]   (bwa-cont scheduler knobs)\n\
-         \x20           [--kv-blocks N] [--block-size T]         (bwa-cont paged KV pool)\n\n\
+         \x20           [--kv-blocks N] [--block-size T]         (bwa-cont paged KV pool)\n\
+         \x20           [--listen ADDR] [--max-queue N]          (TCP front-end; docs/PROTOCOL.md)\n\
+         \x20 client    [--addr HOST:PORT] [--requests N] [--prompt-len P] [--gen G]\n\
+         \x20           [--shared-prefix P] [--seed S]           (same prompts `serve` drives)\n\
+         \x20           [--temperature T] [--top-k K] [--top-p P] [--sample-seed S]\n\
+         \x20           [--stop ID,ID,...] [--verify-artifact f.bwa] [--shutdown]\n\n\
          methods: {}\n\n\
          quantize once, serve many: `bwa quantize --out m.bwa` compiles the model to a\n\
          checksummed artifact; `bwa serve --artifact m.bwa` / `bwa eval --artifact m.bwa`\n\
-         then start without re-running calibration.",
+         then start without re-running calibration.\n\n\
+         serve over the network: `bwa serve --backend bwa-cont --artifact m.bwa --listen\n\
+         127.0.0.1:8491` streams tokens to `bwa client` connections as newline-delimited\n\
+         JSON with per-request sampling configs (docs/PROTOCOL.md, docs/SERVING.md).",
         baselines::METHOD_NAMES.join(", ")
-    );
+    )
+}
+
+fn print_help() {
+    println!("{}", help_text());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::help_text;
+
+    /// Every flag `serve` and `client` accept must appear in the
+    /// top-level help — adding a flag without documenting it here is a
+    /// test failure, not a silent docs gap.
+    #[test]
+    fn help_documents_every_serve_and_client_flag() {
+        let help = help_text();
+        for (flag, _, _) in bwa_llm::coordinator::SERVE_SPEC.flags {
+            assert!(
+                help.contains(&format!("--{flag}")),
+                "serve flag --{flag} missing from help text"
+            );
+        }
+        for (flag, _, _) in bwa_llm::server::CLIENT_SPEC.flags {
+            assert!(
+                help.contains(&format!("--{flag}")),
+                "client flag --{flag} missing from help text"
+            );
+        }
+        for (switch, _) in bwa_llm::server::CLIENT_SPEC.switches {
+            assert!(
+                help.contains(&format!("--{switch}")),
+                "client switch --{switch} missing from help text"
+            );
+        }
+    }
 }
 
 static DATAGEN_SPEC: Spec = Spec {

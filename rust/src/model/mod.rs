@@ -30,6 +30,7 @@
 pub mod checkpoint;
 pub mod config;
 pub mod kv_cache;
+pub mod sampling;
 
 use crate::kvpool::{BlockPool, PrefixMatch};
 use crate::model::checkpoint::{Checkpoint, CkptError};

@@ -1,0 +1,308 @@
+//! Per-request generation configs and the seeded token sampler.
+//!
+//! Every serving request carries a [`GenConfig`]: how to pick the next
+//! token from the model's logits (greedy argmax, or seeded
+//! temperature / top-k / top-p sampling) and when to stop early (stop
+//! token ids). The continuous scheduler
+//! ([`crate::coordinator::scheduler`]) builds one [`Sampler`] per
+//! admitted request from its config and consults it at every
+//! token-selection point.
+//!
+//! The **default config is greedy argmax** (`temperature == 0`), and the
+//! greedy path calls [`crate::util::argmax`] directly — no RNG draw, no
+//! float massaging — so every bit-parity pin in the repo (sequential ==
+//! lockstep == continuous == paged) survives sampling support untouched.
+//! Non-greedy selection is still fully deterministic given the config's
+//! `seed`: the sampler owns a private xoshiro256** stream
+//! ([`crate::util::rng::Rng`]) seeded from it, one draw per token.
+//!
+//! Selection order (the conventional pipeline): scale logits by
+//! `1/temperature`, keep the `top_k` highest (0 = all), keep the
+//! smallest probability-ranked prefix whose mass reaches `top_p`
+//! (1.0 = all), renormalize, sample. Ties rank by lower token id first,
+//! so candidate order — and therefore the sampled stream — is
+//! deterministic even with equal logits.
+
+use crate::util::argmax;
+use crate::util::rng::Rng;
+
+/// Per-request generation config, carried on the wire and on
+/// [`crate::coordinator::batcher::Request`]. The default is greedy
+/// argmax with no stop tokens — bit-identical to every pre-sampling
+/// serving path.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GenConfig {
+    /// Softmax temperature. `0` (the default) means **greedy argmax** —
+    /// no randomness at all; values `> 0` enable seeded sampling.
+    pub temperature: f32,
+    /// Keep only the `top_k` highest-logit tokens before sampling.
+    /// `0` = no top-k cut.
+    pub top_k: usize,
+    /// Nucleus cutoff: keep the smallest probability-ranked prefix with
+    /// cumulative mass `>= top_p`. `1.0` = no nucleus cut.
+    pub top_p: f32,
+    /// Seed for this request's private sampling stream. Two requests
+    /// with identical prompt + config produce identical tokens.
+    pub seed: u64,
+    /// Stop token ids: generation halts as soon as one is *produced*
+    /// (the stop token is emitted and marked final; the remaining `gen`
+    /// budget is abandoned).
+    pub stop: Vec<u16>,
+}
+
+impl Default for GenConfig {
+    fn default() -> Self {
+        Self {
+            temperature: 0.0,
+            top_k: 0,
+            top_p: 1.0,
+            seed: 0,
+            stop: Vec::new(),
+        }
+    }
+}
+
+impl GenConfig {
+    /// Greedy configs take the exact argmax path (no RNG construction
+    /// cost, no float scaling) — the serving default.
+    pub fn is_greedy(&self) -> bool {
+        self.temperature <= 0.0
+    }
+
+    /// Reject configs that cannot select a token sensibly: non-finite or
+    /// negative temperature, or a `top_p` outside `(0, 1]`.
+    pub fn validate(&self) -> Result<(), String> {
+        if !self.temperature.is_finite() || self.temperature < 0.0 {
+            return Err(format!(
+                "temperature must be a finite value >= 0, got {}",
+                self.temperature
+            ));
+        }
+        if !(self.top_p > 0.0 && self.top_p <= 1.0) {
+            return Err(format!("top_p must be in (0, 1], got {}", self.top_p));
+        }
+        Ok(())
+    }
+
+    /// Build this config's per-request [`Sampler`] (seeds the private
+    /// RNG stream).
+    pub fn sampler(&self) -> Sampler {
+        Sampler::new(self.clone())
+    }
+}
+
+/// One request's token selector: the [`GenConfig`] plus its private
+/// seeded RNG stream. The scheduler holds one per in-flight slot and
+/// calls [`select`](Self::select) wherever it previously took a bare
+/// argmax.
+#[derive(Clone, Debug)]
+pub struct Sampler {
+    cfg: GenConfig,
+    rng: Rng,
+}
+
+impl Sampler {
+    pub fn new(cfg: GenConfig) -> Self {
+        let rng = Rng::new(cfg.seed);
+        Self { cfg, rng }
+    }
+
+    /// Whether `token` is one of this request's stop ids.
+    pub fn is_stop(&self, token: u16) -> bool {
+        self.cfg.stop.contains(&token)
+    }
+
+    /// Pick the next token from `logits`. Greedy configs return
+    /// `argmax(logits)` exactly (first index on ties) and consume no
+    /// randomness; sampling configs draw once from the private stream.
+    pub fn select(&mut self, logits: &[f32]) -> u16 {
+        if self.cfg.is_greedy() {
+            return argmax(logits) as u16;
+        }
+        sample_logits(
+            logits,
+            self.cfg.temperature,
+            self.cfg.top_k,
+            self.cfg.top_p,
+            &mut self.rng,
+        ) as u16
+    }
+}
+
+/// Temperature / top-k / top-p sampling over raw logits, one RNG draw.
+/// Exposed as a free function so the filtering math is unit-testable on
+/// hand-built logit vectors without a model in sight.
+pub fn sample_logits(
+    logits: &[f32],
+    temperature: f32,
+    top_k: usize,
+    top_p: f32,
+    rng: &mut Rng,
+) -> usize {
+    assert!(!logits.is_empty(), "cannot sample from empty logits");
+    // Candidates ranked by logit descending; equal logits rank by lower
+    // index so the candidate order is deterministic.
+    let mut idx: Vec<usize> = (0..logits.len()).collect();
+    idx.sort_by(|&a, &b| {
+        logits[b]
+            .partial_cmp(&logits[a])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    if top_k > 0 && top_k < idx.len() {
+        idx.truncate(top_k);
+    }
+    // Max-subtracted softmax over the survivors at the given
+    // temperature; idx[0] holds the largest surviving logit.
+    let t = f64::from(temperature.max(1e-6));
+    let m = f64::from(logits[idx[0]]);
+    let mut probs: Vec<f64> = idx
+        .iter()
+        .map(|&i| ((f64::from(logits[i]) - m) / t).exp())
+        .collect();
+    let sum: f64 = probs.iter().sum();
+    for p in &mut probs {
+        *p /= sum;
+    }
+    // Nucleus cut: probs are already descending (same order as idx), so
+    // the nucleus is the shortest prefix reaching top_p mass. At least
+    // one candidate always survives.
+    if top_p < 1.0 {
+        let mut cum = 0.0;
+        let mut keep = probs.len();
+        for (i, &p) in probs.iter().enumerate() {
+            cum += p;
+            if cum >= f64::from(top_p) {
+                keep = i + 1;
+                break;
+            }
+        }
+        idx.truncate(keep);
+        probs.truncate(keep);
+    }
+    let mass: f64 = probs.iter().sum();
+    let mut x = rng.f64() * mass;
+    for (&i, &p) in idx.iter().zip(probs.iter()) {
+        x -= p;
+        if x <= 0.0 {
+            return i;
+        }
+    }
+    *idx.last().expect("nonempty candidate set")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_is_greedy_and_bit_identical_to_argmax() {
+        let cfg = GenConfig::default();
+        assert!(cfg.is_greedy());
+        let mut sampler = cfg.sampler();
+        let mut rng = Rng::new(99);
+        for _ in 0..50 {
+            let logits: Vec<f32> = (0..32).map(|_| rng.normal_f32(0.0, 2.0)).collect();
+            assert_eq!(sampler.select(&logits) as usize, argmax(&logits));
+        }
+        // ties resolve to the first index, exactly like argmax
+        assert_eq!(sampler.select(&[1.0, 3.0, 3.0]), 1);
+    }
+
+    #[test]
+    fn low_temperature_concentrates_high_temperature_spreads() {
+        // logits [0, 4]: at temperature 0.25 the gap is 16 nats — the
+        // top token wins every draw; at temperature 8 the gap is 0.5
+        // nats and both tokens must appear.
+        let logits = [0.0f32, 4.0];
+        let mut rng = Rng::new(5);
+        for _ in 0..1000 {
+            assert_eq!(sample_logits(&logits, 0.25, 0, 1.0, &mut rng), 1);
+        }
+        let mut counts = [0usize; 2];
+        for _ in 0..2000 {
+            counts[sample_logits(&logits, 8.0, 0, 1.0, &mut rng)] += 1;
+        }
+        // p(token 0) = 1 / (1 + e^0.5) ~= 0.378; expect ~755 of 2000
+        assert!(
+            (600..=900).contains(&counts[0]),
+            "temperature 8 should leave both tokens live, got {counts:?}"
+        );
+    }
+
+    #[test]
+    fn top_k_filters_to_the_k_highest_logits() {
+        let logits = [5.0f32, 4.0, 3.0, 2.0, 1.0];
+        let mut rng = Rng::new(7);
+        let mut counts = [0usize; 5];
+        for _ in 0..500 {
+            counts[sample_logits(&logits, 1.0, 2, 1.0, &mut rng)] += 1;
+        }
+        assert_eq!(counts[2] + counts[3] + counts[4], 0, "top-k 2 leaked: {counts:?}");
+        // p(token 1 | top-2) = 1 / (1 + e) ~= 0.27 — both survivors appear
+        assert!(counts[0] > 0 && counts[1] > 0, "both top-2 tokens should appear: {counts:?}");
+    }
+
+    #[test]
+    fn top_p_keeps_the_smallest_prefix_reaching_the_mass() {
+        // Logits built as ln(p): softmax at temperature 1 recovers
+        // exactly p = [0.5, 0.3, 0.15, 0.05]. top_p 0.75 keeps {0, 1}
+        // (cumulative 0.5 then 0.8 >= 0.75) and nothing else.
+        let logits: Vec<f32> = [0.5f32, 0.3, 0.15, 0.05].iter().map(|p| p.ln()).collect();
+        let mut rng = Rng::new(11);
+        let mut counts = [0usize; 4];
+        for _ in 0..500 {
+            counts[sample_logits(&logits, 1.0, 0, 0.75, &mut rng)] += 1;
+        }
+        assert_eq!(counts[2] + counts[3], 0, "nucleus leaked: {counts:?}");
+        // renormalized p(token 1) = 0.3 / 0.8 = 0.375 — it must appear
+        assert!(counts[0] > 0 && counts[1] > 0, "both nucleus tokens should appear: {counts:?}");
+    }
+
+    #[test]
+    fn sampling_is_deterministic_from_the_config_seed() {
+        let cfg = GenConfig {
+            temperature: 1.3,
+            top_k: 8,
+            top_p: 0.9,
+            seed: 42,
+            stop: Vec::new(),
+        };
+        let mut rng = Rng::new(3);
+        let logit_rows: Vec<Vec<f32>> =
+            (0..40).map(|_| (0..24).map(|_| rng.normal_f32(0.0, 2.0)).collect()).collect();
+        let run = |cfg: &GenConfig| -> Vec<u16> {
+            let mut s = cfg.sampler();
+            logit_rows.iter().map(|l| s.select(l)).collect()
+        };
+        assert_eq!(run(&cfg), run(&cfg), "same seed must replay the same tokens");
+        let other = GenConfig { seed: 43, ..cfg.clone() };
+        assert_ne!(run(&cfg), run(&other), "different seeds should diverge");
+    }
+
+    #[test]
+    fn stop_membership_checks_the_config_list() {
+        let cfg = GenConfig {
+            stop: vec![3, 17],
+            ..GenConfig::default()
+        };
+        let s = cfg.sampler();
+        assert!(s.is_stop(3));
+        assert!(s.is_stop(17));
+        assert!(!s.is_stop(4));
+        assert!(!GenConfig::default().sampler().is_stop(0));
+    }
+
+    #[test]
+    fn validate_rejects_bad_temperature_and_top_p() {
+        assert!(GenConfig::default().validate().is_ok());
+        let bad_t = GenConfig { temperature: f32::NAN, ..GenConfig::default() };
+        assert!(bad_t.validate().is_err());
+        let neg_t = GenConfig { temperature: -1.0, ..GenConfig::default() };
+        assert!(neg_t.validate().is_err());
+        let bad_p = GenConfig { top_p: 0.0, ..GenConfig::default() };
+        assert!(bad_p.validate().is_err());
+        let nan_p = GenConfig { top_p: f32::NAN, ..GenConfig::default() };
+        assert!(nan_p.validate().is_err());
+    }
+}

@@ -1,0 +1,377 @@
+//! Library client for the TCP serving front-end, plus the `bwa client`
+//! subcommand built on it.
+//!
+//! [`Client`] speaks the protocol in [`super::protocol`] over one
+//! blocking connection: `connect` consumes the server's `hello`,
+//! [`generate`](Client::generate) sends one request and consumes its
+//! token stream, measuring **client-observed** TTFT (request written →
+//! first `token` frame read) alongside the **scheduler-observed** latency
+//! the server reports in its `final` frame — the gap between the two is
+//! the wire + front-end overhead the network bench quantifies.
+//!
+//! The `bwa client` subcommand replays
+//! [`client_prompts`](crate::coordinator::client_prompts) — the *same*
+//! seeded prompt definition `serve`'s in-process driver uses — so a
+//! loopback run is comparable token-for-token with an in-process one,
+//! which is exactly what `scripts/check.sh`'s network smoke does via
+//! `--verify-artifact`.
+
+use super::protocol::{
+    decode_server, encode_client, ClientFrame, ServeError, ServerFrame, PROTOCOL_VERSION,
+};
+use crate::coordinator::metrics::Histogram;
+use crate::coordinator::{client_prompts, Workload};
+use crate::model::sampling::GenConfig;
+use crate::model::Transformer;
+use crate::util::cli::{Args, Spec};
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::TcpStream;
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+/// One completed generation as the client observed it.
+#[derive(Clone, Debug)]
+pub struct Generation {
+    /// The streamed continuation (cross-checked against the `final`
+    /// frame's copy — a disagreement is a protocol error).
+    pub tokens: Vec<u16>,
+    /// Client-observed time-to-first-token: request written → first
+    /// `token` frame read. For a `gen == 0` request this equals `total`.
+    pub ttft: Duration,
+    /// Client-observed inter-token latencies: the gap between reading
+    /// consecutive `token` frames (`tokens.len() - 1` samples).
+    pub itl: Vec<Duration>,
+    /// Request written → `final` frame read.
+    pub total: Duration,
+    /// In-flight set size the request retired against, server-side.
+    pub batch_size: usize,
+    /// Scheduler-observed request latency (submission → retirement) in
+    /// microseconds, from the `final` frame.
+    pub server_latency_us: u64,
+}
+
+/// One blocking connection to a `serve --listen` server.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+    /// Model name the server announced in its `hello` frame.
+    pub server_model: String,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client, ServeError> {
+        let stream = TcpStream::connect(addr)
+            .map_err(|e| ServeError::Io(format!("connect {addr}: {e}")))?;
+        let _ = stream.set_nodelay(true);
+        let read_half = stream
+            .try_clone()
+            .map_err(|e| ServeError::Io(format!("clone stream: {e}")))?;
+        let mut client = Client {
+            reader: BufReader::new(read_half),
+            writer: BufWriter::new(stream),
+            server_model: String::new(),
+        };
+        match client.read_frame()? {
+            ServerFrame::Hello { version, model } => {
+                if version != PROTOCOL_VERSION {
+                    return Err(ServeError::Protocol(format!(
+                        "server speaks protocol v{version}, this client v{PROTOCOL_VERSION}"
+                    )));
+                }
+                client.server_model = model;
+            }
+            other => {
+                return Err(ServeError::Protocol(format!(
+                    "expected hello, got {other:?}"
+                )))
+            }
+        }
+        Ok(client)
+    }
+
+    fn send(&mut self, frame: &ClientFrame) -> Result<(), ServeError> {
+        let io = |e: std::io::Error| ServeError::Io(format!("send: {e}"));
+        self.writer
+            .write_all(encode_client(frame).as_bytes())
+            .map_err(io)?;
+        self.writer.write_all(b"\n").map_err(io)?;
+        self.writer.flush().map_err(io)
+    }
+
+    fn read_frame(&mut self) -> Result<ServerFrame, ServeError> {
+        let mut line = String::new();
+        match self.reader.read_line(&mut line) {
+            Ok(0) => Err(ServeError::Io("server closed the connection".into())),
+            Ok(_) => decode_server(&line),
+            Err(e) => Err(ServeError::Io(format!("read: {e}"))),
+        }
+    }
+
+    /// Send one `generate` request and consume its whole stream. Typed
+    /// server rejections ([`ServeError::Busy`], [`ServeError::Capacity`],
+    /// [`ServeError::BadRequest`]) come back as `Err` and leave the
+    /// connection usable for the next request.
+    pub fn generate(
+        &mut self,
+        id: u64,
+        tokens: &[u16],
+        gen: usize,
+        cfg: &GenConfig,
+    ) -> Result<Generation, ServeError> {
+        let t0 = Instant::now();
+        self.send(&ClientFrame::Generate {
+            id,
+            tokens: tokens.to_vec(),
+            gen,
+            cfg: cfg.clone(),
+        })?;
+        let mut streamed: Vec<u16> = Vec::with_capacity(gen);
+        let mut ttft: Option<Duration> = None;
+        let mut itl: Vec<Duration> = Vec::new();
+        let mut last_token: Option<Instant> = None;
+        loop {
+            match self.read_frame()? {
+                ServerFrame::Token {
+                    id: rid,
+                    index,
+                    token,
+                    ..
+                } => {
+                    if rid != id {
+                        return Err(ServeError::Protocol(format!(
+                            "token for request {rid}, expected {id}"
+                        )));
+                    }
+                    if index != streamed.len() {
+                        return Err(ServeError::Protocol(format!(
+                            "out-of-order stream: token index {index}, expected {}",
+                            streamed.len()
+                        )));
+                    }
+                    let now = Instant::now();
+                    if ttft.is_none() {
+                        ttft = Some(now - t0);
+                    }
+                    if let Some(prev) = last_token {
+                        itl.push(now - prev);
+                    }
+                    last_token = Some(now);
+                    streamed.push(token);
+                }
+                ServerFrame::Final {
+                    id: rid,
+                    tokens: full,
+                    latency_us,
+                    batch_size,
+                } => {
+                    if rid != id {
+                        return Err(ServeError::Protocol(format!(
+                            "final for request {rid}, expected {id}"
+                        )));
+                    }
+                    if full != streamed {
+                        return Err(ServeError::Protocol(
+                            "final continuation disagrees with streamed tokens".into(),
+                        ));
+                    }
+                    let total = t0.elapsed();
+                    return Ok(Generation {
+                        tokens: full,
+                        ttft: ttft.unwrap_or(total),
+                        itl,
+                        total,
+                        batch_size,
+                        server_latency_us: latency_us,
+                    });
+                }
+                ServerFrame::Error { error, .. } => return Err(error),
+                ServerFrame::Bye => {
+                    return Err(ServeError::Protocol("server shut down mid-request".into()))
+                }
+                ServerFrame::Hello { .. } => {
+                    return Err(ServeError::Protocol("unexpected hello mid-stream".into()))
+                }
+            }
+        }
+    }
+
+    /// Ask the server to drain every in-flight session and exit, waiting
+    /// for its `bye`. Consumes the client — the connection is done.
+    pub fn shutdown_server(mut self) -> Result<(), ServeError> {
+        self.send(&ClientFrame::Shutdown)?;
+        loop {
+            match self.read_frame() {
+                Ok(ServerFrame::Bye) => return Ok(()),
+                Ok(_) => continue, // stray frames from earlier requests
+                Err(ServeError::Io(_)) => return Ok(()), // closed without bye
+                Err(e) => return Err(e),
+            }
+        }
+    }
+}
+
+/// CLI spec for `bwa client` — the help-sync test in `main.rs` asserts
+/// every flag and switch listed here appears in the top-level help text.
+pub static CLIENT_SPEC: Spec = Spec {
+    name: "client",
+    about: "drive a `serve --listen` server over TCP with the synthetic workload's prompts",
+    flags: &[
+        ("addr", "127.0.0.1:8491", "server address (host:port)"),
+        ("requests", "4", "requests to send (sequentially, over one connection)"),
+        ("prompt-len", "24", "prompt tokens per request"),
+        ("gen", "8", "tokens to generate per request"),
+        ("shared-prefix", "0", "leading tokens shared by every prompt"),
+        (
+            "seed",
+            "7",
+            "workload seed — the same prompts `serve` would drive in-process",
+        ),
+        ("temperature", "0", "sampling temperature (0 = greedy argmax)"),
+        ("top-k", "0", "sample only among the k highest logits (0 = all)"),
+        ("top-p", "1", "nucleus sampling: smallest prefix reaching this mass"),
+        (
+            "sample-seed",
+            "0",
+            "sampler seed; request i samples with sample-seed + i",
+        ),
+        ("stop", "", "comma-separated stop token ids"),
+        (
+            "verify-artifact",
+            "",
+            "check streamed tokens against an in-process greedy run of this .bwa artifact",
+        ),
+    ],
+    switches: &[(
+        "shutdown",
+        "ask the server to drain and exit after the last request",
+    )],
+};
+
+/// Sequential greedy reference run, honoring stop tokens the same way
+/// the scheduler does (the stop token is emitted, then the request
+/// ends) — what `--verify-artifact` compares streamed tokens against.
+fn greedy_reference(model: &Transformer, prompt: &[u16], gen: usize, stop: &[u16]) -> Vec<u16> {
+    let mut sess = model.new_session();
+    let mut logits = model.prefill(&mut sess, prompt);
+    let mut out = Vec::with_capacity(gen);
+    while out.len() < gen {
+        let t = crate::util::argmax(&logits) as u16;
+        out.push(t);
+        if stop.contains(&t) || out.len() == gen {
+            break;
+        }
+        logits = model.decode_step(&mut sess, t);
+    }
+    out
+}
+
+fn parse_stop(s: &str) -> Result<Vec<u16>, String> {
+    s.split(',')
+        .map(str::trim)
+        .filter(|p| !p.is_empty())
+        .map(|p| {
+            p.parse::<u16>()
+                .map_err(|_| format!("--stop: '{p}' is not a token id"))
+        })
+        .collect()
+}
+
+/// The `bwa client` subcommand.
+pub fn cmd_client(args: &Args) -> Result<(), String> {
+    args.validate(&CLIENT_SPEC).map_err(|e| e.to_string())?;
+    if args.wants_help() {
+        println!("{}", CLIENT_SPEC.help());
+        return Ok(());
+    }
+    let addr = args.str_or("addr", "127.0.0.1:8491");
+    let requests = args.usize_or("requests", 4).map_err(|e| e.to_string())?;
+    let prompt_len = args.usize_or("prompt-len", 24).map_err(|e| e.to_string())?;
+    let gen = args.usize_or("gen", 8).map_err(|e| e.to_string())?;
+    let shared_prefix = args.usize_or("shared-prefix", 0).map_err(|e| e.to_string())?;
+    let seed = args.u64_or("seed", 7).map_err(|e| e.to_string())?;
+    if prompt_len == 0 || shared_prefix > prompt_len {
+        return Err("need --prompt-len >= 1 and --shared-prefix <= --prompt-len".into());
+    }
+    let base_cfg = GenConfig {
+        temperature: args.f64_or("temperature", 0.0).map_err(|e| e.to_string())? as f32,
+        top_k: args.usize_or("top-k", 0).map_err(|e| e.to_string())?,
+        top_p: args.f64_or("top-p", 1.0).map_err(|e| e.to_string())? as f32,
+        seed: args.u64_or("sample-seed", 0).map_err(|e| e.to_string())?,
+        stop: parse_stop(args.str_or("stop", ""))?,
+    };
+    base_cfg.validate()?;
+
+    let verify_path = args.str_or("verify-artifact", "");
+    let reference_model = if verify_path.is_empty() {
+        None
+    } else {
+        if !base_cfg.is_greedy() {
+            return Err("--verify-artifact needs greedy decoding (--temperature 0)".into());
+        }
+        let art = crate::artifact::load(Path::new(verify_path)).map_err(|e| e.to_string())?;
+        Some(art.model)
+    };
+
+    let load = Workload {
+        requests,
+        clients: 1,
+        prompt_len,
+        gen,
+        shared_prefix,
+        stagger: Duration::ZERO,
+        seed,
+    };
+    let prompts = client_prompts(&load, 0, requests);
+
+    let mut client = Client::connect(addr).map_err(|e| e.to_string())?;
+    println!(
+        "connected to {addr} (model {}, protocol v{PROTOCOL_VERSION})",
+        client.server_model
+    );
+    let mut ttft = Histogram::default();
+    let mut total = Histogram::default();
+    let mut tokens_out = 0usize;
+    for (i, prompt) in prompts.iter().enumerate() {
+        let cfg = GenConfig {
+            seed: base_cfg.seed.wrapping_add(i as u64),
+            ..base_cfg.clone()
+        };
+        let g = client
+            .generate(i as u64, prompt, gen, &cfg)
+            .map_err(|e| format!("request {i}: {e}"))?;
+        if let Some(model) = &reference_model {
+            let want = greedy_reference(model, prompt, gen, &cfg.stop);
+            if g.tokens != want {
+                return Err(format!(
+                    "request {i}: streamed tokens {:?} != in-process greedy reference {:?}",
+                    g.tokens, want
+                ));
+            }
+        }
+        tokens_out += g.tokens.len();
+        ttft.record(g.ttft);
+        total.record(g.total);
+        println!(
+            "req {i}: {} tokens, client ttft {:.1}ms, total {:.1}ms \
+             (server latency {:.1}ms, batch {})",
+            g.tokens.len(),
+            g.ttft.as_secs_f64() * 1e3,
+            g.total.as_secs_f64() * 1e3,
+            g.server_latency_us as f64 / 1e3,
+            g.batch_size
+        );
+    }
+    println!(
+        "client: {requests} requests, {tokens_out} tokens\n{}\n{}",
+        ttft.report("client ttft"),
+        total.report("client total")
+    );
+    if !verify_path.is_empty() {
+        println!("verify: all streamed tokens match the in-process greedy reference");
+    }
+    if args.switch("shutdown") {
+        client.shutdown_server().map_err(|e| e.to_string())?;
+        println!("server shutdown requested (drained and stopped)");
+    }
+    Ok(())
+}

@@ -1,0 +1,858 @@
+//! TCP serving front-end for the continuous-batching scheduler.
+//!
+//! `bwa serve --backend bwa-cont --listen ADDR` swaps the synthetic
+//! workload driver for a network front-end: a std-lib [`TcpListener`]
+//! accepts concurrent connections speaking newline-delimited JSON
+//! ([`protocol`], documented in `docs/PROTOCOL.md`), every request is fed
+//! into the scheduler's request channel, and every
+//! [`StreamEvent`](crate::coordinator::batcher::StreamEvent) the
+//! scheduler emits is written back as a `token` frame the moment it
+//! exists — the client sees tokens at decode-step granularity, not at
+//! request completion.
+//!
+//! Thread shape: one scheduler thread (owns the backend; the backend
+//! type is not `Send`, so it is constructed *on* that thread), one
+//! accept thread, one handler thread per connection. A connection
+//! serves one `generate` at a time; concurrency comes from concurrent
+//! connections, exactly like the in-process workload's closed-loop
+//! clients.
+//!
+//! Admission control happens *before* a request reaches the scheduler:
+//!
+//! - **backpressure** — at most `--max-queue` requests may be in flight
+//!   (queued + active) across all connections; the next one is rejected
+//!   with the typed `busy` error instead of growing the queue without
+//!   bound.
+//! - **capacity** — a request whose worst-case KV footprint
+//!   ([`KvPoolConfig::worst_case_blocks`]) exceeds the whole pool, or
+//!   whose rows exceed the model's context window, can never be admitted;
+//!   it is rejected with the typed `capacity` error instead of hanging in
+//!   the admission queue forever. This is the same block math the
+//!   scheduler's admission gate reserves with.
+//!
+//! Shutdown (a client `shutdown` frame, or [`ServerHandle::shutdown`])
+//! is drain-based: the accept loop stops, handlers finish their
+//! in-flight requests and say `bye`, the request channel closes, and the
+//! scheduler runs its normal drain — every active session retires and
+//! releases its KV blocks before [`run_scheduler`] returns its stats.
+
+pub mod client;
+pub mod protocol;
+
+pub use client::{cmd_client, Client, Generation, CLIENT_SPEC};
+pub use protocol::{ClientFrame, ServeError, ServerFrame, PROTOCOL_VERSION};
+
+use crate::coordinator::batcher::Request;
+use crate::coordinator::metrics::SchedulerStats;
+use crate::coordinator::scheduler::{
+    run_scheduler, SchedulerConfig, SessionBackend, TransformerBackend,
+};
+use crate::kvpool::KvPoolConfig;
+use crate::model::config::ModelConfig;
+use crate::model::sampling::GenConfig;
+use crate::model::Transformer;
+use protocol::{decode_client, encode_server};
+use std::io::{BufRead, BufReader, BufWriter, ErrorKind, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Sender};
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// How long a handler blocks in `read_line` before re-checking the
+/// shutdown flag. Partial lines survive across timeouts — `read_line`
+/// appends to its buffer, so a frame split across timeout windows is
+/// reassembled, never truncated.
+const READ_TICK: Duration = Duration::from_millis(25);
+
+/// Per-request admission limits, checked handler-side before a request
+/// is submitted to the scheduler.
+#[derive(Clone, Debug)]
+pub struct RequestLimits {
+    pub vocab_size: usize,
+    pub max_seq: usize,
+    pub n_layers: usize,
+    /// `Some` when the backend serves from a paged KV pool: requests
+    /// whose worst-case block footprint exceeds the pool get the typed
+    /// `capacity` rejection.
+    pub kv: Option<KvPoolConfig>,
+}
+
+impl RequestLimits {
+    pub fn for_model(cfg: &ModelConfig, kv: Option<KvPoolConfig>) -> Self {
+        Self {
+            vocab_size: cfg.vocab_size,
+            max_seq: cfg.max_seq,
+            n_layers: cfg.n_layers,
+            kv,
+        }
+    }
+
+    /// Validate one `generate` request. [`ServeError::BadRequest`] for
+    /// payloads the model cannot consume, [`ServeError::Capacity`] for
+    /// requests no admission gate could ever admit.
+    pub fn check(&self, tokens: &[u16], gen: usize) -> Result<(), ServeError> {
+        if tokens.is_empty() {
+            return Err(ServeError::BadRequest("empty prompt".into()));
+        }
+        if let Some(&t) = tokens.iter().find(|&&t| t as usize >= self.vocab_size) {
+            return Err(ServeError::BadRequest(format!(
+                "token {t} out of vocabulary (vocab_size {})",
+                self.vocab_size
+            )));
+        }
+        let rows = tokens.len() + gen.saturating_sub(1);
+        if rows > self.max_seq {
+            return Err(ServeError::Capacity(format!(
+                "prompt {} + gen {} needs {rows} positions > model max_seq {}",
+                tokens.len(),
+                gen,
+                self.max_seq
+            )));
+        }
+        if let Some(kv) = &self.kv {
+            let need = kv.worst_case_blocks(tokens.len(), gen, self.n_layers);
+            if need > kv.blocks {
+                return Err(ServeError::Capacity(format!(
+                    "request needs up to {need} KV blocks > pool capacity {} \
+                     (resize with --kv-blocks / --block-size)",
+                    kv.blocks
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Everything [`start`] needs besides the listener and the backend.
+pub struct ServerConfig {
+    pub scheduler: SchedulerConfig,
+    /// In-flight request bound (queued + active, across all
+    /// connections) before the typed `busy` rejection.
+    pub max_queue: usize,
+    pub limits: RequestLimits,
+    /// Model name reported in the `hello` frame.
+    pub model: String,
+}
+
+/// Counters shared between the accept loop and the handler threads.
+#[derive(Default)]
+struct Shared {
+    shutdown: AtomicBool,
+    /// Requests submitted to the scheduler and not yet answered.
+    in_flight: AtomicUsize,
+    served: AtomicUsize,
+    rejected_busy: AtomicUsize,
+    rejected_capacity: AtomicUsize,
+    rejected_bad: AtomicUsize,
+}
+
+/// Final server statistics: the scheduler's own stats (scheduler-observed
+/// TTFT/ITL, KV occupancy) plus the front-end's served/rejected counters.
+#[derive(Debug)]
+pub struct ServerStats {
+    pub scheduler: SchedulerStats,
+    pub served: usize,
+    pub rejected_busy: usize,
+    pub rejected_capacity: usize,
+    pub rejected_bad: usize,
+}
+
+/// A running server. Dropping the handle does **not** stop the server —
+/// call [`shutdown`](Self::shutdown) (or let a client send the
+/// `shutdown` frame and [`wait`](Self::wait)).
+pub struct ServerHandle {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    accept: thread::JoinHandle<()>,
+    sched: thread::JoinHandle<SchedulerStats>,
+}
+
+impl ServerHandle {
+    /// The bound address — with `--listen 127.0.0.1:0` this is where the
+    /// OS actually put the server.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Signal shutdown, then [`wait`](Self::wait).
+    pub fn shutdown(self) -> ServerStats {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.wait()
+    }
+
+    /// Block until the server stops (a client sent `shutdown`, or
+    /// [`shutdown`](Self::shutdown) was called): joins the accept loop,
+    /// which joins every handler (draining their in-flight requests),
+    /// which closes the request channel, which lets the scheduler drain
+    /// every active session and return its stats.
+    pub fn wait(self) -> ServerStats {
+        self.accept.join().expect("accept thread panicked");
+        let scheduler = self.sched.join().expect("scheduler thread panicked");
+        ServerStats {
+            scheduler,
+            served: self.shared.served.load(Ordering::SeqCst),
+            rejected_busy: self.shared.rejected_busy.load(Ordering::SeqCst),
+            rejected_capacity: self.shared.rejected_capacity.load(Ordering::SeqCst),
+            rejected_bad: self.shared.rejected_bad.load(Ordering::SeqCst),
+        }
+    }
+}
+
+/// Start serving on an already-bound listener. `make_backend` runs on
+/// the scheduler thread (backends are not `Send`). Returns immediately;
+/// the handle's [`wait`](ServerHandle::wait) collects the stats.
+pub fn start<B, F>(
+    listener: TcpListener,
+    make_backend: F,
+    cfg: ServerConfig,
+) -> std::io::Result<ServerHandle>
+where
+    B: SessionBackend,
+    F: FnOnce() -> B + Send + 'static,
+{
+    let ServerConfig {
+        scheduler,
+        max_queue,
+        limits,
+        model,
+    } = cfg;
+    listener.set_nonblocking(true)?;
+    let addr = listener.local_addr()?;
+    let (tx, rx) = mpsc::channel::<Request>();
+    let shared = Arc::new(Shared::default());
+
+    let sched = thread::Builder::new()
+        .name("bwa-scheduler".into())
+        .spawn(move || {
+            let backend = make_backend();
+            run_scheduler(rx, &backend, scheduler)
+        })?;
+
+    let accept_shared = Arc::clone(&shared);
+    let accept = thread::Builder::new()
+        .name("bwa-accept".into())
+        .spawn(move || accept_loop(listener, tx, accept_shared, limits, max_queue, model))?;
+
+    Ok(ServerHandle {
+        addr,
+        shared,
+        accept,
+        sched,
+    })
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    tx: Sender<Request>,
+    shared: Arc<Shared>,
+    limits: RequestLimits,
+    max_queue: usize,
+    model: String,
+) {
+    let mut handlers = Vec::new();
+    loop {
+        if shared.shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let tx = tx.clone();
+                let shared = Arc::clone(&shared);
+                let limits = limits.clone();
+                let model = model.clone();
+                handlers.push(thread::spawn(move || {
+                    handle_conn(stream, tx, shared, limits, max_queue, model)
+                }));
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => thread::sleep(Duration::from_millis(2)),
+            Err(_) => break,
+        }
+    }
+    for h in handlers {
+        let _ = h.join();
+    }
+    // `tx` (and every handler's clone) is gone here: the scheduler's
+    // channel closes and it drains to completion.
+}
+
+fn send_frame(w: &mut BufWriter<TcpStream>, frame: &ServerFrame) -> std::io::Result<()> {
+    w.write_all(encode_server(frame).as_bytes())?;
+    w.write_all(b"\n")?;
+    // flush per frame: streamed tokens must hit the wire the moment the
+    // scheduler emits them, not when a buffer happens to fill.
+    w.flush()
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    tx: Sender<Request>,
+    shared: Arc<Shared>,
+    limits: RequestLimits,
+    max_queue: usize,
+    model: String,
+) {
+    let _ = stream.set_nodelay(true);
+    if stream.set_read_timeout(Some(READ_TICK)).is_err() {
+        return;
+    }
+    let Ok(read_half) = stream.try_clone() else {
+        return;
+    };
+    let mut reader = BufReader::new(read_half);
+    let mut writer = BufWriter::new(stream);
+    if send_frame(
+        &mut writer,
+        &ServerFrame::Hello {
+            version: PROTOCOL_VERSION,
+            model,
+        },
+    )
+    .is_err()
+    {
+        return;
+    }
+
+    let mut line = String::new();
+    loop {
+        if shared.shutdown.load(Ordering::SeqCst) {
+            let _ = send_frame(&mut writer, &ServerFrame::Bye);
+            return;
+        }
+        match reader.read_line(&mut line) {
+            Ok(0) => return, // client closed the connection
+            Ok(_) => {
+                if !line.ends_with('\n') {
+                    return; // EOF mid-frame
+                }
+                let text = std::mem::take(&mut line);
+                let text = text.trim();
+                if text.is_empty() {
+                    continue;
+                }
+                match decode_client(text) {
+                    Ok(ClientFrame::Generate {
+                        id,
+                        tokens,
+                        gen,
+                        cfg,
+                    }) => {
+                        if handle_generate(
+                            &mut writer,
+                            &tx,
+                            &shared,
+                            &limits,
+                            max_queue,
+                            id,
+                            tokens,
+                            gen,
+                            cfg,
+                        )
+                        .is_err()
+                        {
+                            return;
+                        }
+                    }
+                    Ok(ClientFrame::Shutdown) => {
+                        shared.shutdown.store(true, Ordering::SeqCst);
+                        let _ = send_frame(&mut writer, &ServerFrame::Bye);
+                        return;
+                    }
+                    Err(error) => {
+                        shared.rejected_bad.fetch_add(1, Ordering::SeqCst);
+                        if send_frame(&mut writer, &ServerFrame::Error { id: None, error })
+                            .is_err()
+                        {
+                            return;
+                        }
+                    }
+                }
+            }
+            // timeout tick: `line` may hold a partial frame — keep it,
+            // the next read_line call appends the rest.
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => continue,
+            Err(_) => return,
+        }
+    }
+}
+
+/// Run one `generate` request to completion: admission checks, submit,
+/// stream every token frame, then the final frame. `Err` means the
+/// connection is dead (write failure) — the request itself still ran to
+/// completion scheduler-side so the in-flight gauge stays truthful.
+#[allow(clippy::too_many_arguments)]
+fn handle_generate(
+    writer: &mut BufWriter<TcpStream>,
+    tx: &Sender<Request>,
+    shared: &Shared,
+    limits: &RequestLimits,
+    max_queue: usize,
+    id: u64,
+    tokens: Vec<u16>,
+    gen: usize,
+    cfg: GenConfig,
+) -> std::io::Result<()> {
+    if let Err(error) = limits.check(&tokens, gen) {
+        match &error {
+            ServeError::Capacity(_) => shared.rejected_capacity.fetch_add(1, Ordering::SeqCst),
+            _ => shared.rejected_bad.fetch_add(1, Ordering::SeqCst),
+        };
+        return send_frame(writer, &ServerFrame::Error { id: Some(id), error });
+    }
+
+    // Backpressure: claim an in-flight slot before submitting; give it
+    // back immediately if that pushed us past the bound.
+    let depth = shared.in_flight.fetch_add(1, Ordering::SeqCst);
+    if depth >= max_queue {
+        shared.in_flight.fetch_sub(1, Ordering::SeqCst);
+        shared.rejected_busy.fetch_add(1, Ordering::SeqCst);
+        return send_frame(
+            writer,
+            &ServerFrame::Error {
+                id: Some(id),
+                error: ServeError::Busy(format!("{max_queue} requests already in flight")),
+            },
+        );
+    }
+
+    let (resp_tx, resp_rx) = mpsc::channel();
+    let (stream_tx, stream_rx) = mpsc::channel();
+    let submitted = tx.send(Request {
+        id,
+        tokens,
+        gen,
+        submitted: Instant::now(),
+        resp_tx,
+        stream_tx: Some(stream_tx),
+        cfg,
+    });
+    if submitted.is_err() {
+        shared.in_flight.fetch_sub(1, Ordering::SeqCst);
+        return send_frame(
+            writer,
+            &ServerFrame::Error {
+                id: Some(id),
+                error: ServeError::Protocol("server is shutting down".into()),
+            },
+        );
+    }
+
+    // Stream token frames as the scheduler emits them. A write failure
+    // stops writing but NOT draining — the response must still be
+    // awaited so the in-flight gauge and served counter stay correct.
+    let mut write_err = None;
+    for ev in stream_rx.iter() {
+        if write_err.is_none() {
+            write_err = send_frame(
+                writer,
+                &ServerFrame::Token {
+                    id,
+                    index: ev.index,
+                    token: ev.token,
+                    done: ev.done,
+                },
+            )
+            .err();
+        }
+        if ev.done {
+            break;
+        }
+    }
+    let resp = resp_rx.recv();
+    shared.in_flight.fetch_sub(1, Ordering::SeqCst);
+    match resp {
+        Ok(resp) => {
+            shared.served.fetch_add(1, Ordering::SeqCst);
+            if write_err.is_none() {
+                write_err = send_frame(
+                    writer,
+                    &ServerFrame::Final {
+                        id,
+                        tokens: resp.generated,
+                        latency_us: resp.latency.as_micros() as u64,
+                        batch_size: resp.batch_size,
+                    },
+                )
+                .err();
+            }
+        }
+        // scheduler stopped without answering — shutdown race; the
+        // connection is closing anyway.
+        Err(_) => write_err = Some(std::io::Error::from(ErrorKind::BrokenPipe)),
+    }
+    match write_err {
+        Some(e) => Err(e),
+        None => Ok(()),
+    }
+}
+
+/// The operator-facing end-of-run report: front-end counters plus the
+/// scheduler's own token-granular stats.
+pub fn network_report(stats: &ServerStats) -> String {
+    let s = &stats.scheduler;
+    let mut r = format!(
+        "== network serve report ==\n\
+         served:      {} requests ({} tokens)\n\
+         rejected:    {} busy, {} capacity, {} bad",
+        stats.served, s.gen_tokens, stats.rejected_busy, stats.rejected_capacity, stats.rejected_bad
+    );
+    for line in [
+        s.ttft.report("ttft"),
+        s.itl.report("itl"),
+        s.latency.report("latency"),
+        s.queue_wait.report("queue_wait"),
+    ] {
+        r.push('\n');
+        r.push_str(&line);
+    }
+    r.push_str(&format!(
+        "\nthroughput:  {:.1} req/s, {:.1} tok/s\nsteps:       {} (mean active {:.2})",
+        s.throughput_rps, s.tokens_per_s, s.steps, s.mean_active
+    ));
+    if s.stop_hits > 0 {
+        r.push_str(&format!(
+            "\nstop hits:   {} requests ended at a stop token",
+            s.stop_hits
+        ));
+    }
+    if let Some(kv) = &s.kv {
+        r.push_str(&format!(
+            "\nkv pool:     peak {}/{} blocks, {} pinned by prefix cache\n\
+             prefix reuse: {}/{} admissions hit ({} rows adopted)",
+            kv.blocks_peak,
+            kv.blocks_capacity,
+            kv.blocks_in_use,
+            kv.prefix_hits,
+            kv.prefix_requests,
+            kv.prefix_tokens_reused
+        ));
+    }
+    r
+}
+
+/// The `serve --listen` entry point (called from
+/// [`crate::coordinator::cmd_serve`] on the `bwa-cont` path): bind,
+/// serve until a client sends `shutdown`, print the report.
+pub fn serve_listen(
+    addr: &str,
+    model: Transformer,
+    workers: usize,
+    pool_cfg: KvPoolConfig,
+    scfg: SchedulerConfig,
+    max_queue: usize,
+) -> Result<(), String> {
+    let limits = RequestLimits::for_model(&model.cfg, Some(pool_cfg));
+    let label = model.cfg.name.clone();
+    let listener = TcpListener::bind(addr).map_err(|e| format!("bind {addr}: {e}"))?;
+    let cfg = ServerConfig {
+        scheduler: scfg,
+        max_queue,
+        limits,
+        model: label,
+    };
+    let handle = start(
+        listener,
+        move || {
+            TransformerBackend::with_kv_pool(model, workers, "native-bwa W(1+1)A(1x4)", pool_cfg)
+        },
+        cfg,
+    )
+    .map_err(|e| format!("server start: {e}"))?;
+    // scripts/check.sh greps this exact prefix to learn the bound port.
+    println!("listening on {}", handle.addr());
+    let stats = handle.wait();
+    println!("{}", network_report(&stats));
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::scheduler::AdmissionPolicy;
+    use std::sync::mpsc::Receiver;
+    use std::sync::Mutex;
+
+    fn mock_next(seq: &[u16]) -> u16 {
+        (seq.iter().map(|&t| t as usize).sum::<usize>() % 31) as u16
+    }
+
+    fn mock_reference(prompt: &[u16], gen: usize) -> Vec<u16> {
+        let mut seq = prompt.to_vec();
+        let mut out = Vec::new();
+        for _ in 0..gen {
+            let t = mock_next(&seq);
+            out.push(t);
+            seq.push(t);
+        }
+        out
+    }
+
+    /// Same mock as the scheduler's: logits put all mass on (sum % 31).
+    struct MockBackend;
+
+    impl SessionBackend for MockBackend {
+        type Session = Vec<u16>;
+
+        fn name(&self) -> String {
+            "mock".into()
+        }
+
+        fn prefill_batch(&self, prompts: &[&[u16]], _gens: &[usize]) -> Vec<(Vec<u16>, u16)> {
+            prompts.iter().map(|p| (p.to_vec(), mock_next(p))).collect()
+        }
+
+        fn decode_batch(&self, sessions: &mut [&mut Vec<u16>], tokens: &[u16]) -> Vec<u16> {
+            sessions
+                .iter_mut()
+                .zip(tokens)
+                .map(|(s, &t)| {
+                    s.push(t);
+                    mock_next(s)
+                })
+                .collect()
+        }
+    }
+
+    /// Mock whose prefill blocks on a gate channel, signalling entry —
+    /// lets a test hold a request "active" deterministically.
+    struct GateBackend {
+        entered: Sender<()>,
+        gate: Mutex<Receiver<()>>,
+    }
+
+    impl SessionBackend for GateBackend {
+        type Session = Vec<u16>;
+
+        fn name(&self) -> String {
+            "gate".into()
+        }
+
+        fn prefill_batch(&self, prompts: &[&[u16]], _gens: &[usize]) -> Vec<(Vec<u16>, u16)> {
+            let _ = self.entered.send(());
+            self.gate.lock().unwrap().recv().expect("gate open");
+            prompts.iter().map(|p| (p.to_vec(), mock_next(p))).collect()
+        }
+
+        fn decode_batch(&self, sessions: &mut [&mut Vec<u16>], tokens: &[u16]) -> Vec<u16> {
+            sessions
+                .iter_mut()
+                .zip(tokens)
+                .map(|(s, &t)| {
+                    s.push(t);
+                    mock_next(s)
+                })
+                .collect()
+        }
+    }
+
+    fn test_limits() -> RequestLimits {
+        RequestLimits {
+            vocab_size: 31,
+            max_seq: 4096,
+            n_layers: 1,
+            kv: None,
+        }
+    }
+
+    fn start_mock(max_queue: usize, limits: RequestLimits) -> ServerHandle {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        start(
+            listener,
+            || MockBackend,
+            ServerConfig {
+                scheduler: SchedulerConfig {
+                    max_active: 4,
+                    admit: AdmissionPolicy::Eager,
+                },
+                max_queue,
+                limits,
+                model: "mock".into(),
+            },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn loopback_greedy_stream_matches_in_process_reference() {
+        let handle = start_mock(16, test_limits());
+        let mut client = Client::connect(&handle.addr().to_string()).unwrap();
+        assert_eq!(client.server_model, "mock");
+        let prompts: [&[u16]; 3] = [&[1, 2, 3], &[7, 7], &[30, 4, 9, 2]];
+        for (i, prompt) in prompts.iter().enumerate() {
+            let g = client
+                .generate(i as u64, prompt, 6, &GenConfig::default())
+                .unwrap();
+            assert_eq!(g.tokens, mock_reference(prompt, 6), "prompt {i}");
+            assert!(g.ttft <= g.total);
+            assert!(g.batch_size >= 1);
+        }
+        client.shutdown_server().unwrap();
+        let stats = handle.wait();
+        assert_eq!(stats.served, 3);
+        assert_eq!(stats.scheduler.requests, 3);
+        assert_eq!(stats.rejected_busy + stats.rejected_capacity + stats.rejected_bad, 0);
+    }
+
+    #[test]
+    fn queue_bound_rejects_with_typed_busy_error() {
+        let (entered_tx, entered_rx) = mpsc::channel();
+        let (gate_tx, gate_rx) = mpsc::channel();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let handle = start(
+            listener,
+            move || GateBackend {
+                entered: entered_tx,
+                gate: Mutex::new(gate_rx),
+            },
+            ServerConfig {
+                scheduler: SchedulerConfig {
+                    max_active: 4,
+                    admit: AdmissionPolicy::Eager,
+                },
+                max_queue: 1,
+                limits: test_limits(),
+                model: "gate".into(),
+            },
+        )
+        .unwrap();
+        let addr = handle.addr().to_string();
+
+        // Client A's request enters prefill and blocks on the gate,
+        // holding the single in-flight slot.
+        let addr_a = addr.clone();
+        let a = thread::spawn(move || {
+            let mut client = Client::connect(&addr_a).unwrap();
+            client.generate(0, &[1, 2, 3], 4, &GenConfig::default())
+        });
+        entered_rx.recv().unwrap();
+
+        // Client B is over the bound: typed busy, not a hang.
+        let mut b = Client::connect(&addr).unwrap();
+        let err = b
+            .generate(1, &[4, 5], 2, &GenConfig::default())
+            .unwrap_err();
+        assert!(matches!(err, ServeError::Busy(_)), "got {err}");
+
+        // Open the gate: A completes normally and bit-exactly.
+        gate_tx.send(()).unwrap();
+        let g = a.join().unwrap().unwrap();
+        assert_eq!(g.tokens, mock_reference(&[1, 2, 3], 4));
+
+        drop(b);
+        let stats = handle.shutdown();
+        assert_eq!(stats.served, 1);
+        assert_eq!(stats.rejected_busy, 1);
+        drop(gate_tx); // keep the gate alive until the scheduler drained
+    }
+
+    #[test]
+    fn capacity_and_bad_request_rejections_are_typed() {
+        let limits = RequestLimits {
+            vocab_size: 31,
+            max_seq: 64,
+            n_layers: 2,
+            kv: Some(KvPoolConfig {
+                blocks: 8,
+                block_tokens: 4,
+            }),
+        };
+        let handle = start_mock(16, limits);
+        let mut client = Client::connect(&handle.addr().to_string()).unwrap();
+
+        // KV block budget: 4 + 59 rows -> 16 blocks/stream x 2 layers x
+        // K/V = 64 > 8-block pool, even though max_seq would allow it.
+        let err = client
+            .generate(0, &[1, 2, 3, 4], 60, &GenConfig::default())
+            .unwrap_err();
+        assert!(matches!(err, ServeError::Capacity(_)), "got {err}");
+
+        // Context window: 4 + 99 rows > max_seq 64.
+        let err = client
+            .generate(1, &[1, 2, 3, 4], 100, &GenConfig::default())
+            .unwrap_err();
+        assert!(matches!(err, ServeError::Capacity(_)), "got {err}");
+
+        // Out-of-vocabulary token and empty prompt are the client's
+        // fault, not a capacity problem.
+        let err = client.generate(2, &[31], 1, &GenConfig::default()).unwrap_err();
+        assert!(matches!(err, ServeError::BadRequest(_)), "got {err}");
+        let err = client.generate(3, &[], 1, &GenConfig::default()).unwrap_err();
+        assert!(matches!(err, ServeError::BadRequest(_)), "got {err}");
+
+        // The connection survives rejections and still serves.
+        let g = client.generate(4, &[5, 6], 3, &GenConfig::default()).unwrap();
+        assert_eq!(g.tokens, mock_reference(&[5, 6], 3));
+
+        client.shutdown_server().unwrap();
+        let stats = handle.wait();
+        assert_eq!(stats.served, 1);
+        assert_eq!(stats.rejected_capacity, 2);
+        assert_eq!(stats.rejected_bad, 2);
+    }
+
+    #[test]
+    fn per_request_sampling_rides_the_wire() {
+        let handle = start_mock(16, test_limits());
+        let mut client = Client::connect(&handle.addr().to_string()).unwrap();
+        let cfg = GenConfig {
+            temperature: 1.0,
+            top_k: 0,
+            top_p: 1.0,
+            seed: 11,
+            stop: Vec::new(),
+        };
+        // The mock's logits are one-hot, so any sampler agrees with
+        // greedy — what this pins is that a non-default cfg survives the
+        // wire and still produces a working stream.
+        let g = client.generate(0, &[2, 9], 5, &cfg).unwrap();
+        assert_eq!(g.tokens, mock_reference(&[2, 9], 5));
+
+        // A stop token in the reference continuation halts the stream
+        // early, server-side.
+        let full = mock_reference(&[2, 9], 5);
+        let stop = full[2];
+        let cfg = GenConfig {
+            stop: vec![stop],
+            ..GenConfig::default()
+        };
+        let g = client.generate(1, &[2, 9], 5, &cfg).unwrap();
+        assert_eq!(g.tokens, full[..=2].to_vec());
+
+        client.shutdown_server().unwrap();
+        let stats = handle.wait();
+        assert_eq!(stats.scheduler.stop_hits, 1);
+    }
+
+    #[test]
+    fn limits_check_covers_every_rejection_class() {
+        let limits = RequestLimits {
+            vocab_size: 100,
+            max_seq: 32,
+            n_layers: 3,
+            kv: Some(KvPoolConfig {
+                blocks: 24,
+                block_tokens: 4,
+            }),
+        };
+        assert!(limits.check(&[1, 2, 3], 4).is_ok());
+        assert!(matches!(limits.check(&[], 1), Err(ServeError::BadRequest(_))));
+        assert!(matches!(
+            limits.check(&[1, 100], 1),
+            Err(ServeError::BadRequest(_))
+        ));
+        assert!(matches!(
+            limits.check(&[1; 30], 8),
+            Err(ServeError::Capacity(_))
+        ));
+        // fits max_seq (4 + 19 = 23 <= 32) but needs
+        // ceil(23/4) + tail_cow = 7 blocks x 3 layers x 2 = 42 > 24.
+        assert!(matches!(
+            limits.check(&[1, 2, 3, 4], 20),
+            Err(ServeError::Capacity(_))
+        ));
+        // without a pool the same request is only bounded by max_seq
+        let no_kv = RequestLimits { kv: None, ..limits };
+        assert!(no_kv.check(&[1, 2, 3, 4], 20).is_ok());
+    }
+}

@@ -1,0 +1,433 @@
+//! Wire protocol for the TCP serving front-end: newline-delimited JSON
+//! frames, one frame per line, built on [`crate::util::json::Json`].
+//!
+//! Full field-by-field documentation lives in `docs/PROTOCOL.md`; the
+//! shape in brief:
+//!
+//! - client → server: `generate` (a prompt, a `gen` budget, and an
+//!   optional per-request `cfg` carrying the
+//!   [`GenConfig`](crate::model::sampling::GenConfig) sampling fields)
+//!   and `shutdown` (drain and stop the whole server).
+//! - server → client: `hello` (version + model, once per connection),
+//!   `token` (one streamed token, sent the moment the scheduler emits
+//!   it; `done` marks the last), `final` (the complete continuation plus
+//!   scheduler-side latency metadata), `error` (typed: see
+//!   [`ServeError`]), and `bye` (connection closing on shutdown).
+//!
+//! Request ids are client-scoped echoes: the server copies the id of the
+//! `generate` frame into its `token`/`final`/`error` frames and never
+//! interprets it. Numbers ride as JSON doubles, so `seed` values above
+//! 2^53 lose precision on the wire — irrelevant for reproducibility as
+//! long as client and server agree, which a double guarantees.
+
+use crate::model::sampling::GenConfig;
+use crate::util::json::Json;
+
+/// Protocol version, sent in the `hello` frame. Clients should refuse a
+/// version they do not know.
+pub const PROTOCOL_VERSION: usize = 1;
+
+/// Typed serving errors — the `code` field of an `error` frame. The
+/// distinction the clients care about: [`Busy`](Self::Busy) means *retry
+/// later* (transient backpressure), [`Capacity`](Self::Capacity) means
+/// *this request can never be served* by this server's KV pool or
+/// context window, [`BadRequest`](Self::BadRequest) means the frame
+/// itself was malformed or out of the model's vocabulary.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ServeError {
+    /// The server's queued-request bound (`--max-queue`) is reached;
+    /// retry after backing off.
+    Busy(String),
+    /// The request exceeds fixed server capacity (KV block budget or
+    /// context window) and would never be admitted — reusing the same
+    /// worst-case block math admission reserves with.
+    Capacity(String),
+    /// Malformed frame, empty prompt, or out-of-vocabulary token.
+    BadRequest(String),
+    /// The peer spoke something that is not the protocol (client-side
+    /// this also covers unexpected frames and unknown error codes).
+    Protocol(String),
+    /// Transport failure (client-side only; never sent on the wire).
+    Io(String),
+}
+
+impl ServeError {
+    /// The wire `code` string.
+    pub fn code(&self) -> &'static str {
+        match self {
+            ServeError::Busy(_) => "busy",
+            ServeError::Capacity(_) => "capacity",
+            ServeError::BadRequest(_) => "bad_request",
+            ServeError::Protocol(_) => "protocol",
+            ServeError::Io(_) => "io",
+        }
+    }
+
+    pub fn message(&self) -> &str {
+        match self {
+            ServeError::Busy(m)
+            | ServeError::Capacity(m)
+            | ServeError::BadRequest(m)
+            | ServeError::Protocol(m)
+            | ServeError::Io(m) => m,
+        }
+    }
+
+    /// Rebuild a typed error from its wire `code` + `message` (the
+    /// client side of an `error` frame). Unknown codes degrade to
+    /// [`Protocol`](Self::Protocol) instead of being dropped.
+    pub fn from_wire(code: &str, message: &str) -> ServeError {
+        let m = message.to_string();
+        match code {
+            "busy" => ServeError::Busy(m),
+            "capacity" => ServeError::Capacity(m),
+            "bad_request" => ServeError::BadRequest(m),
+            "protocol" => ServeError::Protocol(m),
+            other => ServeError::Protocol(format!("unknown error code '{other}': {m}")),
+        }
+    }
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}: {}", self.code(), self.message())
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// Frames a client sends.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ClientFrame {
+    /// Generate `gen` tokens from `tokens` under `cfg`, streaming each
+    /// one back as a [`ServerFrame::Token`].
+    Generate {
+        id: u64,
+        tokens: Vec<u16>,
+        gen: usize,
+        cfg: GenConfig,
+    },
+    /// Drain every in-flight session, release all KV blocks, and stop
+    /// the server process.
+    Shutdown,
+}
+
+/// Frames the server sends.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ServerFrame {
+    /// First frame on every connection.
+    Hello { version: usize, model: String },
+    /// One streamed token, emitted the moment the scheduler produced it.
+    Token {
+        id: u64,
+        index: usize,
+        token: u16,
+        done: bool,
+    },
+    /// End of a request: the full continuation plus scheduler-observed
+    /// latency (`latency_us`, submission → retirement) and the in-flight
+    /// set size the request retired against.
+    Final {
+        id: u64,
+        tokens: Vec<u16>,
+        latency_us: u64,
+        batch_size: usize,
+    },
+    /// Typed rejection; `id` echoes the offending request when known.
+    Error { id: Option<u64>, error: ServeError },
+    /// The server is shutting down; the connection closes after this.
+    Bye,
+}
+
+fn tokens_to_json(tokens: &[u16]) -> Json {
+    Json::Arr(tokens.iter().map(|&t| Json::num(f64::from(t))).collect())
+}
+
+fn tokens_from_json(j: &Json, what: &str) -> Result<Vec<u16>, ServeError> {
+    let arr = j
+        .as_arr()
+        .ok_or_else(|| ServeError::BadRequest(format!("'{what}' must be an array of token ids")))?;
+    arr.iter()
+        .map(|v| {
+            v.as_usize()
+                .filter(|&t| t <= u16::MAX as usize)
+                .map(|t| t as u16)
+                .ok_or_else(|| {
+                    ServeError::BadRequest(format!("'{what}' entries must be integers in [0, 65535]"))
+                })
+        })
+        .collect()
+}
+
+/// Serialize a [`GenConfig`] as the `cfg` object of a `generate` frame.
+pub fn genconfig_to_json(cfg: &GenConfig) -> Json {
+    Json::obj(vec![
+        ("temperature", Json::num(f64::from(cfg.temperature))),
+        ("top_k", Json::num(cfg.top_k as f64)),
+        ("top_p", Json::num(f64::from(cfg.top_p))),
+        ("seed", Json::num(cfg.seed as f64)),
+        ("stop", tokens_to_json(&cfg.stop)),
+    ])
+}
+
+/// Parse the optional `cfg` object of a `generate` frame. Missing fields
+/// (or the whole object) fall back to the greedy default, and the result
+/// is validated — a config the sampler cannot honor is a
+/// [`ServeError::BadRequest`].
+pub fn genconfig_from_json(j: &Json) -> Result<GenConfig, ServeError> {
+    let d = GenConfig::default();
+    let cfg = GenConfig {
+        temperature: j.f64_or("temperature", f64::from(d.temperature)) as f32,
+        top_k: j.usize_or("top_k", d.top_k),
+        top_p: j.f64_or("top_p", f64::from(d.top_p)) as f32,
+        seed: j.f64_or("seed", d.seed as f64) as u64,
+        stop: if matches!(j.get("stop"), Json::Null) {
+            Vec::new()
+        } else {
+            tokens_from_json(j.get("stop"), "cfg.stop")?
+        },
+    };
+    cfg.validate().map_err(ServeError::BadRequest)?;
+    Ok(cfg)
+}
+
+/// Serialize a client frame as one JSON line (no trailing newline — the
+/// writer appends it).
+pub fn encode_client(frame: &ClientFrame) -> String {
+    let j = match frame {
+        ClientFrame::Generate { id, tokens, gen, cfg } => Json::obj(vec![
+            ("type", Json::str("generate")),
+            ("id", Json::num(*id as f64)),
+            ("tokens", tokens_to_json(tokens)),
+            ("gen", Json::num(*gen as f64)),
+            ("cfg", genconfig_to_json(cfg)),
+        ]),
+        ClientFrame::Shutdown => Json::obj(vec![("type", Json::str("shutdown"))]),
+    };
+    j.to_string()
+}
+
+/// Serialize a server frame as one JSON line (no trailing newline).
+pub fn encode_server(frame: &ServerFrame) -> String {
+    let j = match frame {
+        ServerFrame::Hello { version, model } => Json::obj(vec![
+            ("type", Json::str("hello")),
+            ("version", Json::num(*version as f64)),
+            ("model", Json::str(model.clone())),
+        ]),
+        ServerFrame::Token { id, index, token, done } => Json::obj(vec![
+            ("type", Json::str("token")),
+            ("id", Json::num(*id as f64)),
+            ("index", Json::num(*index as f64)),
+            ("token", Json::num(f64::from(*token))),
+            ("done", Json::Bool(*done)),
+        ]),
+        ServerFrame::Final { id, tokens, latency_us, batch_size } => Json::obj(vec![
+            ("type", Json::str("final")),
+            ("id", Json::num(*id as f64)),
+            ("tokens", tokens_to_json(tokens)),
+            ("latency_us", Json::num(*latency_us as f64)),
+            ("batch_size", Json::num(*batch_size as f64)),
+        ]),
+        ServerFrame::Error { id, error } => {
+            let mut pairs = vec![
+                ("type", Json::str("error")),
+                ("code", Json::str(error.code())),
+                ("message", Json::str(error.message())),
+            ];
+            if let Some(id) = id {
+                pairs.push(("id", Json::num(*id as f64)));
+            }
+            Json::obj(pairs)
+        }
+        ServerFrame::Bye => Json::obj(vec![("type", Json::str("bye"))]),
+    };
+    j.to_string()
+}
+
+fn frame_json(line: &str) -> Result<Json, ServeError> {
+    Json::parse(line.trim()).map_err(|e| ServeError::Protocol(format!("bad frame: {e}")))
+}
+
+fn frame_u64(j: &Json, key: &str) -> Result<u64, ServeError> {
+    j.get(key)
+        .as_f64()
+        .filter(|x| *x >= 0.0 && x.fract() == 0.0)
+        .map(|x| x as u64)
+        .ok_or_else(|| ServeError::Protocol(format!("'{key}' must be a non-negative integer")))
+}
+
+/// Parse one client line. Frame-shape problems are
+/// [`ServeError::Protocol`]; semantically invalid `generate` payloads
+/// (bad tokens, unusable cfg) are [`ServeError::BadRequest`].
+pub fn decode_client(line: &str) -> Result<ClientFrame, ServeError> {
+    let j = frame_json(line)?;
+    match j.str_or("type", "") {
+        "generate" => Ok(ClientFrame::Generate {
+            id: frame_u64(&j, "id")?,
+            tokens: tokens_from_json(j.get("tokens"), "tokens")?,
+            gen: j
+                .get("gen")
+                .as_usize()
+                .ok_or_else(|| ServeError::Protocol("'gen' must be a non-negative integer".into()))?,
+            cfg: match j.get("cfg") {
+                Json::Null => GenConfig::default(),
+                cfg => genconfig_from_json(cfg)?,
+            },
+        }),
+        "shutdown" => Ok(ClientFrame::Shutdown),
+        other => Err(ServeError::Protocol(format!("unknown client frame type '{other}'"))),
+    }
+}
+
+/// Parse one server line (the client side of the connection).
+pub fn decode_server(line: &str) -> Result<ServerFrame, ServeError> {
+    let j = frame_json(line)?;
+    match j.str_or("type", "") {
+        "hello" => Ok(ServerFrame::Hello {
+            version: j.usize_or("version", 0),
+            model: j.str_or("model", "").to_string(),
+        }),
+        "token" => Ok(ServerFrame::Token {
+            id: frame_u64(&j, "id")?,
+            index: j
+                .get("index")
+                .as_usize()
+                .ok_or_else(|| ServeError::Protocol("'index' must be an integer".into()))?,
+            token: j
+                .get("token")
+                .as_usize()
+                .filter(|&t| t <= u16::MAX as usize)
+                .map(|t| t as u16)
+                .ok_or_else(|| ServeError::Protocol("'token' must be a u16".into()))?,
+            done: j.bool_or("done", false),
+        }),
+        "final" => Ok(ServerFrame::Final {
+            id: frame_u64(&j, "id")?,
+            tokens: tokens_from_json(j.get("tokens"), "tokens")
+                .map_err(|e| ServeError::Protocol(e.message().to_string()))?,
+            latency_us: frame_u64(&j, "latency_us")?,
+            batch_size: j.usize_or("batch_size", 1),
+        }),
+        "error" => Ok(ServerFrame::Error {
+            id: j.get("id").as_f64().map(|x| x as u64),
+            error: ServeError::from_wire(j.str_or("code", ""), j.str_or("message", "")),
+        }),
+        "bye" => Ok(ServerFrame::Bye),
+        other => Err(ServeError::Protocol(format!("unknown server frame type '{other}'"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generate_frame_round_trips_with_full_config() {
+        let frame = ClientFrame::Generate {
+            id: 12,
+            tokens: vec![3, 0, 65535],
+            gen: 8,
+            cfg: GenConfig {
+                temperature: 0.8,
+                top_k: 40,
+                top_p: 0.9,
+                seed: 123,
+                stop: vec![2, 7],
+            },
+        };
+        let line = encode_client(&frame);
+        assert_eq!(decode_client(&line).unwrap(), frame);
+    }
+
+    #[test]
+    fn generate_without_cfg_defaults_to_greedy() {
+        let line = r#"{"type":"generate","id":0,"tokens":[1,2,3],"gen":4}"#;
+        let ClientFrame::Generate { cfg, tokens, gen, .. } = decode_client(line).unwrap() else {
+            panic!("expected generate");
+        };
+        assert_eq!(cfg, GenConfig::default());
+        assert!(cfg.is_greedy());
+        assert_eq!(tokens, vec![1, 2, 3]);
+        assert_eq!(gen, 4);
+    }
+
+    #[test]
+    fn shutdown_round_trips() {
+        let line = encode_client(&ClientFrame::Shutdown);
+        assert_eq!(decode_client(&line).unwrap(), ClientFrame::Shutdown);
+    }
+
+    #[test]
+    fn server_frames_round_trip() {
+        let frames = [
+            ServerFrame::Hello {
+                version: PROTOCOL_VERSION,
+                model: "tiny".into(),
+            },
+            ServerFrame::Token {
+                id: 4,
+                index: 2,
+                token: 17,
+                done: true,
+            },
+            ServerFrame::Final {
+                id: 4,
+                tokens: vec![9, 8, 17],
+                latency_us: 1234,
+                batch_size: 3,
+            },
+            ServerFrame::Error {
+                id: Some(4),
+                error: ServeError::Busy("queue full".into()),
+            },
+            ServerFrame::Error {
+                id: None,
+                error: ServeError::Capacity("too many blocks".into()),
+            },
+            ServerFrame::Bye,
+        ];
+        for f in &frames {
+            let line = encode_server(f);
+            assert_eq!(&decode_server(&line).unwrap(), f, "{line}");
+        }
+    }
+
+    #[test]
+    fn malformed_frames_are_protocol_errors() {
+        assert!(matches!(decode_client("not json"), Err(ServeError::Protocol(_))));
+        assert!(matches!(
+            decode_client(r#"{"type":"nope"}"#),
+            Err(ServeError::Protocol(_))
+        ));
+        assert!(matches!(
+            decode_client(r#"{"type":"generate","id":0,"tokens":"x","gen":1}"#),
+            Err(ServeError::BadRequest(_))
+        ));
+        assert!(matches!(
+            decode_client(r#"{"type":"generate","id":0,"tokens":[70000],"gen":1}"#),
+            Err(ServeError::BadRequest(_))
+        ));
+        // an unusable sampling config is caught at decode time
+        assert!(matches!(
+            decode_client(r#"{"type":"generate","id":0,"tokens":[1],"gen":1,"cfg":{"top_p":0}}"#),
+            Err(ServeError::BadRequest(_))
+        ));
+    }
+
+    #[test]
+    fn error_codes_survive_the_wire() {
+        for err in [
+            ServeError::Busy("b".into()),
+            ServeError::Capacity("c".into()),
+            ServeError::BadRequest("r".into()),
+            ServeError::Protocol("p".into()),
+        ] {
+            assert_eq!(ServeError::from_wire(err.code(), err.message()), err);
+        }
+        assert!(matches!(
+            ServeError::from_wire("mystery", "?"),
+            ServeError::Protocol(_)
+        ));
+    }
+}

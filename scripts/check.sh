@@ -43,6 +43,32 @@ echo "$kvout" | grep -E 'prefix hits: [1-9][0-9]*/8' \
   || { echo "expected a nonzero prefix hit rate in the bwa-cont report"; exit 1; }
 target/release/bwa eval --artifact "$smoke/tiny.bwa" --quick
 
+echo "== network e2e smoke (serve --listen + client over loopback) =="
+# The TCP front-end end-to-end: a background server on an OS-assigned
+# loopback port, driven by the client subcommand with the same seeded
+# workload prompts. --verify-artifact re-runs every prompt in-process
+# (sequential greedy) and fails on any token mismatch, so the streamed
+# tokens are checked bit-for-bit against a local run; --shutdown drains
+# the server, whose exit (via `wait`) proves clean shutdown.
+target/release/bwa serve --artifact "$smoke/tiny.bwa" --backend bwa-cont \
+  --listen 127.0.0.1:0 --max-active 4 --kv-blocks 256 --block-size 4 \
+  --max-queue 8 > "$smoke/server.log" 2>&1 &
+server_pid=$!
+addr=""
+for _ in $(seq 1 100); do
+  addr="$(sed -n 's/^listening on //p' "$smoke/server.log")"
+  [ -n "$addr" ] && break
+  kill -0 "$server_pid" 2>/dev/null \
+    || { echo "server died before listening:"; cat "$smoke/server.log"; exit 1; }
+  sleep 0.1
+done
+[ -n "$addr" ] || { echo "server never reported its address"; cat "$smoke/server.log"; exit 1; }
+target/release/bwa client --addr "$addr" --requests 3 --prompt-len 12 --gen 3 \
+  --seed 7 --verify-artifact "$smoke/tiny.bwa" --shutdown
+wait "$server_pid" || { echo "server exited nonzero:"; cat "$smoke/server.log"; exit 1; }
+grep -q 'network serve report' "$smoke/server.log" \
+  || { echo "expected the network serve report after shutdown:"; cat "$smoke/server.log"; exit 1; }
+
 echo "== cargo doc (rustdoc warnings are errors) =="
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 

@@ -311,6 +311,7 @@ fn artifact_roundtrip_serves_identical_tokens() {
 #[test]
 fn batcher_drains_burst_in_full_batches() {
     use bwa_llm::coordinator::batcher::{run_batcher, Backend, BatcherConfig, Request};
+    use bwa_llm::model::sampling::GenConfig;
     use std::sync::mpsc;
     use std::time::{Duration, Instant};
 
@@ -334,6 +335,7 @@ fn batcher_drains_burst_in_full_batches() {
             submitted: Instant::now(),
             resp_tx: rtx.clone(),
             stream_tx: None,
+            cfg: GenConfig::default(),
         })
         .unwrap();
     }
@@ -496,4 +498,186 @@ fn shared_prefix_workload_reuses_cached_blocks_end_to_end() {
     );
     assert!(kv.blocks_peak <= kv.blocks_capacity, "budget respected");
     assert!(kv.blocks_in_use > 0, "the prefix cache retains published blocks");
+}
+
+/// The TCP front-end through the whole stack: a `server::start` instance
+/// over a quantized random checkpoint with a paged KV pool, driven by
+/// the library [`Client`](bwa_llm::server::Client) over loopback with
+/// the *same* seeded prompts the in-process driver would submit
+/// ([`client_prompts`](bwa_llm::coordinator::client_prompts)). Under the
+/// default greedy config every streamed continuation must be
+/// bit-identical to a sequential in-process run of the same model —
+/// the acceptance pin for the network path.
+#[test]
+fn network_server_streams_bit_identical_to_in_process_run() {
+    use bwa_llm::coordinator::scheduler::{AdmissionPolicy, SchedulerConfig, TransformerBackend};
+    use bwa_llm::coordinator::{client_prompts, Workload};
+    use bwa_llm::kvpool::KvPoolConfig;
+    use bwa_llm::model::config::ModelConfig;
+    use bwa_llm::model::sampling::GenConfig;
+    use bwa_llm::server::{self, Client, RequestLimits, ServerConfig};
+    use std::net::TcpListener;
+    use std::time::Duration;
+
+    let cfg = ModelConfig {
+        name: "it-net".into(),
+        vocab_size: 512,
+        d_model: 128,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 192,
+        max_seq: 64,
+        rope_theta: 10000.0,
+        rmsnorm_eps: 1e-5,
+    };
+    let ck = Checkpoint::random(&cfg, 53);
+    let calib: Vec<Vec<u16>> = (0..4u16)
+        .map(|s| (0..32u16).map(|t| (s * 31 + t * 7) % 512).collect())
+        .collect();
+    let model = quantize_model(&ck, &BwaQuantizer::paper(), &calib, Some(4)).unwrap();
+
+    let load = Workload {
+        requests: 4,
+        clients: 1,
+        prompt_len: 12,
+        gen: 4,
+        shared_prefix: 0,
+        stagger: Duration::ZERO,
+        seed: 23,
+    };
+    let prompts = client_prompts(&load, 0, load.requests);
+
+    // in-process sequential greedy reference, before the model moves
+    // into the server's backend thread
+    let want: Vec<Vec<u16>> = prompts
+        .iter()
+        .map(|p| {
+            let mut sess = model.new_session();
+            let mut logits = model.prefill(&mut sess, p);
+            let mut out = Vec::new();
+            for _ in 0..load.gen {
+                let t = bwa_llm::util::argmax(&logits) as u16;
+                out.push(t);
+                if out.len() == load.gen {
+                    break;
+                }
+                logits = model.decode_step(&mut sess, t);
+            }
+            out
+        })
+        .collect();
+
+    let pool = KvPoolConfig {
+        blocks: 256,
+        block_tokens: 8,
+    };
+    let limits = RequestLimits::for_model(&model.cfg, Some(pool));
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let handle = server::start(
+        listener,
+        move || TransformerBackend::with_kv_pool(model, 2, "it-net-bwa", pool),
+        ServerConfig {
+            scheduler: SchedulerConfig {
+                max_active: 4,
+                admit: AdmissionPolicy::Eager,
+            },
+            max_queue: 8,
+            limits,
+            model: "it-net".into(),
+        },
+    )
+    .unwrap();
+
+    let mut client = Client::connect(&handle.addr().to_string()).unwrap();
+    assert_eq!(client.server_model, "it-net");
+    for (i, (prompt, want)) in prompts.iter().zip(&want).enumerate() {
+        let g = client
+            .generate(i as u64, prompt, load.gen, &GenConfig::default())
+            .unwrap();
+        assert_eq!(
+            &g.tokens, want,
+            "request {i}: network stream diverged from the in-process greedy run"
+        );
+        assert!(g.ttft <= g.total);
+    }
+    client.shutdown_server().unwrap();
+    let stats = handle.wait();
+    assert_eq!(stats.served, load.requests);
+    assert_eq!(stats.scheduler.requests, load.requests);
+    assert_eq!(stats.scheduler.gen_tokens, load.requests * load.gen);
+    let kv = stats.scheduler.kv.expect("paged backend reports kv stats");
+    assert!(kv.blocks_peak <= kv.blocks_capacity);
+}
+
+/// A request whose worst-case KV footprint exceeds the whole
+/// `--kv-blocks` pool must get the typed `capacity` error over the wire
+/// instead of hanging in the admission queue forever; the connection
+/// stays usable and smaller requests still serve.
+#[test]
+fn network_capacity_rejection_over_the_wire() {
+    use bwa_llm::coordinator::scheduler::{AdmissionPolicy, SchedulerConfig, TransformerBackend};
+    use bwa_llm::kvpool::KvPoolConfig;
+    use bwa_llm::model::config::ModelConfig;
+    use bwa_llm::model::sampling::GenConfig;
+    use bwa_llm::server::{self, Client, RequestLimits, ServeError, ServerConfig};
+    use std::net::TcpListener;
+
+    let cfg = ModelConfig {
+        name: "it-cap".into(),
+        vocab_size: 512,
+        d_model: 128,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 192,
+        max_seq: 64,
+        rope_theta: 10000.0,
+        rmsnorm_eps: 1e-5,
+    };
+    let ck = Checkpoint::random(&cfg, 59);
+    let calib: Vec<Vec<u16>> = (0..4u16)
+        .map(|s| (0..32u16).map(|t| (s * 41 + t * 5) % 512).collect())
+        .collect();
+    let model = quantize_model(&ck, &BwaQuantizer::paper(), &calib, Some(4)).unwrap();
+
+    // A pool so small that a full-length request cannot ever fit:
+    // 12 + 39 rows -> ceil(51/8) + tail = 8 blocks x 2 layers x K/V = 32 > 24.
+    let pool = KvPoolConfig {
+        blocks: 24,
+        block_tokens: 8,
+    };
+    let limits = RequestLimits::for_model(&model.cfg, Some(pool));
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let handle = server::start(
+        listener,
+        move || TransformerBackend::with_kv_pool(model, 2, "it-cap-bwa", pool),
+        ServerConfig {
+            scheduler: SchedulerConfig {
+                max_active: 2,
+                admit: AdmissionPolicy::Eager,
+            },
+            max_queue: 8,
+            limits,
+            model: "it-cap".into(),
+        },
+    )
+    .unwrap();
+
+    let mut client = Client::connect(&handle.addr().to_string()).unwrap();
+    let prompt: Vec<u16> = (0..12u16).map(|t| (t * 17) % 512).collect();
+    let err = client
+        .generate(0, &prompt, 40, &GenConfig::default())
+        .unwrap_err();
+    assert!(
+        matches!(err, ServeError::Capacity(_)),
+        "expected typed capacity error, got {err}"
+    );
+
+    // a request that fits the pool still serves on the same connection
+    let g = client.generate(1, &prompt, 2, &GenConfig::default()).unwrap();
+    assert_eq!(g.tokens.len(), 2);
+
+    client.shutdown_server().unwrap();
+    let stats = handle.wait();
+    assert_eq!(stats.served, 1);
+    assert_eq!(stats.rejected_capacity, 1);
 }
