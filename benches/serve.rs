@@ -25,7 +25,13 @@
 //! `prefix_tokens_reused`, `kv_blocks_peak`, and
 //! `speedup_prefix_tok_per_s`.
 //!
-//! A fourth, **network** workload (under the `network` key) puts the
+//! A fourth, **speculative** workload (under the `speculative` key)
+//! runs greedy decode over repetitive prompts with prompt-lookup
+//! drafting off vs on (`--spec-k`): the token streams are asserted
+//! identical, and the record captures `accept_rate`, `tokens_per_step`,
+//! and `speedup_spec_tok_per_s` — the step-compression speculation buys.
+//!
+//! A fifth, **network** workload (under the `network` key) puts the
 //! same artifact-loaded model behind the TCP front-end
 //! (`server::start`) and drives it over loopback with concurrent
 //! `Client` connections replaying the same seeded prompts: it records
@@ -48,7 +54,9 @@
 
 use bwa_llm::coordinator::batcher::{Backend, BatcherConfig, BatcherStats};
 use bwa_llm::coordinator::metrics::{Histogram, SchedulerStats};
-use bwa_llm::coordinator::scheduler::{AdmissionPolicy, SchedulerConfig, TransformerBackend};
+use bwa_llm::coordinator::scheduler::{
+    AdmissionPolicy, Request, Scheduler, SchedulerConfig, TransformerBackend,
+};
 use bwa_llm::coordinator::{
     client_prompts, serve_continuous_load, serve_lockstep_load, serve_workload_stats,
     NativeBackend, ParallelBackend, Workload,
@@ -62,6 +70,7 @@ use bwa_llm::quant::BwaQuantizer;
 use bwa_llm::server::{self, Client, RequestLimits, ServerConfig};
 use bwa_llm::util::json::Json;
 use bwa_llm::util::rng::Rng;
+use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
 const REQUESTS: usize = 32;
@@ -82,6 +91,15 @@ const KV_BLOCKS: usize = 512;
 /// In-flight bound for the network workload — high enough that the
 /// closed-loop clients never trip the busy rejection.
 const NET_MAX_QUEUE: usize = 64;
+/// Draft length for the speculative workload.
+const SPEC_K: usize = 4;
+/// Generation length for the speculative workload — longer than GEN so
+/// the prompt-lookup drafter has generated context to mine.
+const SPEC_GEN: usize = 16;
+/// Period of the repetitive prompts in the speculative workload: each
+/// prompt is a random 4-token motif tiled to PROMPT_LEN, the pattern
+/// prompt-lookup drafting feeds on.
+const SPEC_PERIOD: usize = 4;
 
 fn quantized(cfg: &ModelConfig, seed: u64) -> Transformer {
     let ck = Checkpoint::random(cfg, seed);
@@ -135,6 +153,17 @@ fn record(name: &str, stats: &BatcherStats, wall: f64) -> Json {
 /// the pool-occupancy and prefix-reuse fields.
 fn record_continuous(name: &str, stats: &SchedulerStats, wall: f64) -> Json {
     let mut fields = record_continuous_fields(name, stats, wall);
+    if let Some(sp) = &stats.spec {
+        fields.push(("spec_k", Json::num(sp.k as f64)));
+        fields.push(("spec_drafted", Json::num(sp.drafted as f64)));
+        fields.push(("spec_accepted", Json::num(sp.accepted as f64)));
+        fields.push(("spec_accept_rate", Json::num(sp.accept_rate())));
+        fields.push(("spec_verifications", Json::num(sp.verifications as f64)));
+        fields.push((
+            "tokens_per_step",
+            Json::num(stats.gen_tokens as f64 / stats.steps.max(1) as f64),
+        ));
+    }
     if let Some(kv) = &stats.kv {
         fields.push(("kv_blocks", Json::num(kv.blocks_capacity as f64)));
         fields.push(("kv_block_tokens", Json::num(kv.block_tokens as f64)));
@@ -281,6 +310,7 @@ fn main() {
         SchedulerConfig {
             max_active: MAX_BATCH,
             admit: AdmissionPolicy::Eager,
+            spec_k: 0,
         },
     );
     println!(
@@ -322,6 +352,7 @@ fn main() {
     let scfg = SchedulerConfig {
         max_active: MAX_BATCH,
         admit: AdmissionPolicy::Eager,
+        spec_k: 0,
     };
     let path = art_path.clone();
     let (cold_name, cold_stats, cold_wall) = serve_continuous_load(
@@ -374,6 +405,94 @@ fn main() {
         "prefix-reuse speedup over cold continuous (shared-prefix arrivals): \
          {speedup_prefix:.2}x"
     );
+
+    // --- speculative decoding: prompt-lookup drafts, spec off vs on ---
+    // Repetitive prompts (a 4-token motif tiled to PROMPT_LEN) give the
+    // prompt-lookup drafter n-grams to mine; greedy decode with and
+    // without --spec-k over the same prompts must produce identical
+    // tokens (asserted here, not just test-pinned), so the delta is
+    // pure step-compression: accepted drafts per verification turn into
+    // multiple tokens per decode step.
+    let spec_prompts: Vec<Vec<u16>> = {
+        let mut rng = Rng::new(SEED ^ 0x5bec);
+        (0..REQUESTS)
+            .map(|_| {
+                let motif: Vec<u16> = (0..SPEC_PERIOD)
+                    .map(|_| rng.below(cfg.vocab_size) as u16)
+                    .collect();
+                (0..PROMPT_LEN).map(|i| motif[i % SPEC_PERIOD]).collect()
+            })
+            .collect()
+    };
+    println!(
+        "== speculative decoding (prompt-lookup, k={SPEC_K}, {SPEC_GEN} gen tokens, \
+         period-{SPEC_PERIOD} prompts) =="
+    );
+    let drive_spec = |spec_k: usize| -> (Vec<Vec<u16>>, SchedulerStats, f64) {
+        let model = bwa_llm::artifact::load(&art_path).expect("artifact").model;
+        let backend = TransformerBackend::new(model, workers, "bwa");
+        let t0 = Instant::now();
+        let mut sched = Scheduler::new(
+            &backend,
+            SchedulerConfig {
+                max_active: MAX_BATCH,
+                admit: AdmissionPolicy::Eager,
+                spec_k,
+            },
+        );
+        let (rtx, rrx) = mpsc::channel();
+        for (i, p) in spec_prompts.iter().enumerate() {
+            sched.submit(Request {
+                id: i as u64,
+                tokens: p.clone(),
+                gen: SPEC_GEN,
+                submitted: Instant::now(),
+                resp_tx: rtx.clone(),
+                stream_tx: None,
+                cfg: GenConfig::default(),
+            });
+        }
+        while sched.step() {}
+        let stats = sched.finish();
+        drop(rtx);
+        let mut got = vec![Vec::new(); REQUESTS];
+        for resp in rrx.try_iter() {
+            got[resp.id as usize] = resp.generated;
+        }
+        (got, stats, t0.elapsed().as_secs_f64())
+    };
+    let (spec_off_tokens, spec_off_stats, spec_off_wall) = drive_spec(0);
+    let (spec_on_tokens, spec_on_stats, spec_on_wall) = drive_spec(SPEC_K);
+    assert_eq!(
+        spec_on_tokens, spec_off_tokens,
+        "speculative greedy decode must be token-identical to plain decode"
+    );
+    let sp = spec_on_stats.spec.as_ref().expect("spec stats with spec_k > 0");
+    println!(
+        "bwa-cont spec off            {:>7.2} req/s  {:>8.1} tok/s  {} decode steps",
+        spec_off_stats.throughput_rps, spec_off_stats.tokens_per_s, spec_off_stats.steps,
+    );
+    println!(
+        "bwa-cont spec k={SPEC_K}            {:>7.2} req/s  {:>8.1} tok/s  {} decode steps",
+        spec_on_stats.throughput_rps, spec_on_stats.tokens_per_s, spec_on_stats.steps,
+    );
+    println!(
+        "  accepted {}/{} drafts (rate {:.2}) over {} verifications | \
+         {:.2} tokens/step (off: {:.2}) | accept-len hist {:?}",
+        sp.accepted,
+        sp.drafted,
+        sp.accept_rate(),
+        sp.verifications,
+        spec_on_stats.gen_tokens as f64 / spec_on_stats.steps.max(1) as f64,
+        spec_off_stats.gen_tokens as f64 / spec_off_stats.steps.max(1) as f64,
+        sp.accept_hist,
+    );
+    let speedup_spec = spec_on_stats.tokens_per_s / spec_off_stats.tokens_per_s.max(1e-9);
+    println!("speculative speedup over plain continuous (repetitive prompts): {speedup_spec:.2}x");
+    let spec_accept_rate = sp.accept_rate();
+    let spec_drafted = sp.drafted;
+    let spec_accepted = sp.accepted;
+    let spec_verifications = sp.verifications;
 
     // --- network serving: the TCP front-end over loopback ---
     // The same artifact-loaded model behind `server::start`; CLIENTS
@@ -516,6 +635,22 @@ fn main() {
                 ("prefix_tokens_reused", Json::num(re_kv.prefix_tokens_reused as f64)),
                 ("kv_blocks_peak", Json::num(re_kv.blocks_peak as f64)),
                 ("speedup_prefix_tok_per_s", Json::num(speedup_prefix)),
+            ]),
+        ),
+        (
+            "speculative",
+            Json::obj(vec![
+                ("spec_k", Json::num(SPEC_K as f64)),
+                ("gen", Json::num(SPEC_GEN as f64)),
+                ("prompt_period", Json::num(SPEC_PERIOD as f64)),
+                ("max_active", Json::num(MAX_BATCH as f64)),
+                ("off", record_continuous("bwa-cont-spec-off", &spec_off_stats, spec_off_wall)),
+                ("on", record_continuous("bwa-cont-spec-on", &spec_on_stats, spec_on_wall)),
+                ("accept_rate", Json::num(spec_accept_rate)),
+                ("drafted", Json::num(spec_drafted as f64)),
+                ("accepted", Json::num(spec_accepted as f64)),
+                ("verifications", Json::num(spec_verifications as f64)),
+                ("speedup_spec_tok_per_s", Json::num(speedup_spec)),
             ]),
         ),
         (

@@ -144,6 +144,47 @@ impl KvCacheStats {
     }
 }
 
+/// Speculative-decoding counters, reported when the scheduler ran with
+/// `--spec-k > 0`; `None` in [`SchedulerStats`] otherwise. Definitions
+/// (and the greedy-identity argument that makes these pure speed
+/// metrics) live in `docs/SCHEDULING.md`.
+#[derive(Clone, Debug)]
+pub struct SpecStats {
+    /// Configured draft length (`--spec-k`).
+    pub k: usize,
+    /// Draft tokens proposed across all verification steps.
+    pub drafted: usize,
+    /// Draft tokens accepted (matched the model's own argmax at their
+    /// position). Every accepted token saved one decode step.
+    pub accepted: usize,
+    /// Decode steps that ran the batched verification forward (a step
+    /// with an empty draft falls back to plain decode and counts in
+    /// neither `drafted` nor here).
+    pub verifications: usize,
+    /// Histogram of accepted-prefix lengths: `accept_hist[j]` counts
+    /// verifications that accepted exactly `j` draft tokens
+    /// (`0 ..= k`).
+    pub accept_hist: Vec<usize>,
+}
+
+impl SpecStats {
+    /// Counters for draft length `k`, all zero.
+    pub fn new(k: usize) -> Self {
+        Self {
+            k,
+            drafted: 0,
+            accepted: 0,
+            verifications: 0,
+            accept_hist: vec![0; k + 1],
+        }
+    }
+
+    /// Fraction of proposed draft tokens the model accepted.
+    pub fn accept_rate(&self) -> f64 {
+        self.accepted as f64 / self.drafted.max(1) as f64
+    }
+}
+
 /// Final statistics returned by the continuous scheduler
 /// ([`crate::coordinator::scheduler::run_scheduler`]) when its request
 /// channel closes. Token-granular where [`super::batcher::BatcherStats`]
@@ -185,6 +226,28 @@ pub struct SchedulerStats {
     /// KV block-pool occupancy + prefix-reuse counters; `None` unless
     /// the backend serves from a paged KV pool.
     pub kv: Option<KvCacheStats>,
+    /// Speculative-decoding counters; `None` unless the scheduler ran
+    /// with `--spec-k > 0` against a verification-capable backend.
+    pub spec: Option<SpecStats>,
+}
+
+#[cfg(test)]
+mod spec_tests {
+    use super::SpecStats;
+
+    #[test]
+    fn accept_rate_is_accepted_over_drafted() {
+        let mut s = SpecStats::new(4);
+        assert_eq!(s.accept_hist.len(), 5, "histogram covers 0..=k");
+        assert_eq!(s.accept_rate(), 0.0, "no drafts yet");
+        s.drafted = 8;
+        s.accepted = 6;
+        s.verifications = 2;
+        s.accept_hist[4] += 1;
+        s.accept_hist[2] += 1;
+        assert!((s.accept_rate() - 0.75).abs() < 1e-12);
+        assert_eq!(s.accept_hist.iter().sum::<usize>(), s.verifications);
+    }
 }
 
 #[cfg(test)]

@@ -24,8 +24,15 @@
 //!                admission by actual memory, and prompts sharing a
 //!                cached prefix (`--shared-prefix` makes every client
 //!                lead with one system prompt) skip re-prefilling it.
-//!                Reports TTFT/ITL plus pool occupancy and prefix-hit
-//!                lines on top of the batcher's request-level metrics.
+//!                With `--spec-k N` each greedy request also runs
+//!                **prompt-lookup speculative decoding**
+//!                ([`speculative`]): up to N tokens drafted from the
+//!                request's own stream are verified in one batched
+//!                suffix forward per step — token-identical to plain
+//!                decode, multiple tokens per step when drafts hit.
+//!                Reports TTFT/ITL plus pool occupancy, prefix-hit, and
+//!                spec-acceptance lines on top of the batcher's
+//!                request-level metrics.
 //!
 //! The `bwa`/`bwa-seq` backends accept a **preloaded** model: pass
 //! `--artifact <path>.bwa` (written by `bwa quantize --out`) and cold
@@ -48,6 +55,7 @@ pub mod batcher;
 pub mod engine;
 pub mod metrics;
 pub mod scheduler;
+pub mod speculative;
 
 use crate::coordinator::batcher::{run_batcher, Backend, BatcherConfig, BatcherStats, Request};
 use crate::coordinator::metrics::SchedulerStats;
@@ -121,6 +129,7 @@ pub static SERVE_SPEC: Spec = Spec {
         ("wait-us", "2000", "max batching wait (us, lockstep backends)"),
         ("max-active", "8", "bwa-cont: slot-pool size (max in-flight decode sessions)"),
         ("admit", "eager", "bwa-cont: admission policy, eager | drain"),
+        ("spec-k", "0", "bwa-cont: speculative prompt-lookup draft tokens per step (0 = off)"),
         ("kv-blocks", "0", "bwa-cont: KV block-pool capacity in physical blocks (0 = auto-size)"),
         ("block-size", "16", "bwa-cont: KV-cache rows (token positions) per block"),
         ("shared-prefix", "0", "workload: common system-prompt tokens leading every prompt"),
@@ -176,6 +185,12 @@ pub fn cmd_serve(args: &Args) -> Result<(), String> {
         return Err("--max-queue must be >= 1".into());
     }
     let admit: scheduler::AdmissionPolicy = args.str_or("admit", "eager").parse()?;
+    let spec_k = args.usize_or("spec-k", 0).map_err(|e| e.to_string())?;
+    if spec_k > 0 && backend_kind != "bwa-cont" {
+        return Err(format!(
+            "--spec-k requires --backend bwa-cont (the continuous scheduler); got '{backend_kind}'"
+        ));
+    }
     let stagger_us = args.u64_or("stagger-us", 0).map_err(|e| e.to_string())?;
     let kv_blocks = args.usize_or("kv-blocks", 0).map_err(|e| e.to_string())?;
     let block_tokens = args.usize_or("block-size", 16).map_err(|e| e.to_string())?;
@@ -312,7 +327,7 @@ pub fn cmd_serve(args: &Args) -> Result<(), String> {
             "kv pool: {} blocks x {} tokens/block ({} layers x K/V)",
             pool_cfg.blocks, pool_cfg.block_tokens, model.cfg.n_layers
         );
-        let scfg = SchedulerConfig { max_active, admit };
+        let scfg = SchedulerConfig { max_active, admit, spec_k };
         if !listen.is_empty() {
             // Network front-end: expose the scheduler over TCP instead
             // of driving the synthetic workload (docs/PROTOCOL.md).
@@ -617,6 +632,19 @@ pub fn continuous_report(name: &str, load: &Workload, stats: &SchedulerStats, wa
             kv.prefix_requests,
             kv.hit_rate(),
             kv.prefix_tokens_reused,
+        ));
+    }
+    if let Some(spec) = &stats.spec {
+        report.push_str(&format!(
+            "\nspec accepted: {}/{} draft tokens (rate {:.2}, k={}) over {} verifications\n\
+             tokens/step: {:.2} | accept-len hist {:?}",
+            spec.accepted,
+            spec.drafted,
+            spec.accept_rate(),
+            spec.k,
+            spec.verifications,
+            stats.gen_tokens as f64 / stats.steps.max(1) as f64,
+            spec.accept_hist,
         ));
     }
     report

@@ -47,6 +47,30 @@
 //! any retirement), and the remaining `gen` budget is abandoned
 //! ([`SchedulerStats::stop_hits`] counts these early exits).
 //!
+//! # Speculative decoding (`--spec-k`)
+//!
+//! With `spec_k > 0` the scheduler drafts up to `spec_k` tokens per
+//! greedy slot from a per-request prompt-lookup drafter
+//! ([`super::speculative`] — n-gram lookup over the request's own
+//! prompt + generated stream, no second model) and verifies the whole
+//! draft in **one** multi-position forward
+//! ([`SessionBackend::verify_batch`], backed by
+//! [`Transformer::prefill_suffix_logits_with`]): the longest prefix
+//! matching the model's own argmax is accepted and the model's
+//! correction/bonus token rides along, so a step can emit several
+//! tokens for roughly one step's latency. Acceptance-by-argmax makes
+//! the output **token-identical to plain greedy decode** (the
+//! greedy-identity argument is in [`super::speculative`]; pinned by a
+//! seeded parity matrix below). Drafts are clamped against the slot's
+//! remaining `gen` and the backend's [`SessionBackend::rows_budget`],
+//! so a drafter proposing past `max_seq` or the session's block
+//! reservation degrades to a plain step instead of a capacity error;
+//! empty drafts, sampled requests, and verification-less backends all
+//! take the plain path. Rejected draft rows are rolled back
+//! ([`crate::model::DecodeSession::truncate`]) so KV accounting matches
+//! a never-drafted session; acceptance counters land in
+//! [`SchedulerStats::spec`].
+//!
 //! # KV memory as the admission gate
 //!
 //! A backend built with [`TransformerBackend::with_kv_pool`] serves its
@@ -107,7 +131,7 @@
 //!     }
 //! }
 //!
-//! let cfg = SchedulerConfig { max_active: 2, admit: AdmissionPolicy::Eager };
+//! let cfg = SchedulerConfig { max_active: 2, admit: AdmissionPolicy::Eager, spec_k: 0 };
 //! let mut sched = Scheduler::new(&Mock, cfg);
 //! let (rtx, rrx) = mpsc::channel();
 //! let req = |id: u64, tokens: Vec<u16>, gen: usize| Request {
@@ -141,10 +165,11 @@
 
 use super::batcher::{Request, Response, StreamEvent};
 use super::engine::{prefill_pool, prefill_pool_seeded};
-use super::metrics::{Histogram, KvCacheStats, SchedulerStats};
+use super::metrics::{Histogram, KvCacheStats, SchedulerStats, SpecStats};
+use super::speculative::PromptLookupDrafter;
 use crate::kvpool::{BlockPool, KvPoolConfig, PrefixIndex, PrefixMatch};
 use crate::model::sampling::Sampler;
-use crate::model::{DecodeSession, Transformer};
+use crate::model::{DecodeSession, PrefillScratch, Transformer};
 use crate::util::argmax;
 use std::collections::VecDeque;
 use std::sync::mpsc::{Receiver, Sender, TryRecvError};
@@ -185,6 +210,14 @@ pub struct SchedulerConfig {
     /// per step boundary.
     pub max_active: usize,
     pub admit: AdmissionPolicy,
+    /// Speculative prompt-lookup draft length per decode step
+    /// (`--spec-k`); `0` — the default — disables speculation. Only
+    /// greedy requests against a backend with
+    /// [`SessionBackend::supports_verify`] are drafted; everything else
+    /// silently takes the plain one-token step. See
+    /// [`super::speculative`] for the drafting rule and the
+    /// greedy-identity argument.
+    pub spec_k: usize,
 }
 
 impl Default for SchedulerConfig {
@@ -192,6 +225,7 @@ impl Default for SchedulerConfig {
         Self {
             max_active: 8,
             admit: AdmissionPolicy::Eager,
+            spec_k: 0,
         }
     }
 }
@@ -267,6 +301,50 @@ pub trait SessionBackend {
     /// from a paged KV pool.
     fn kv_stats(&self) -> Option<KvCacheStats> {
         None
+    }
+
+    /// Whether this backend implements
+    /// [`verify_batch`](Self::verify_batch). The scheduler only drafts
+    /// against backends that can score a multi-token suffix; with the
+    /// default (`false`) speculation silently stays off even when
+    /// `spec_k > 0`.
+    fn supports_verify(&self) -> bool {
+        false
+    }
+
+    /// Score `drafts[i]` for `sessions[i]`: feed `[tokens[i],
+    /// drafts[i]..]` through the model in one multi-position forward and
+    /// return, per session, the tokens the model *itself* emits — the
+    /// longest prefix of the draft matching the model's own greedy choice
+    /// at each position, plus exactly one more model-chosen token (the
+    /// correction on a mismatch, the bonus token on a full accept). The
+    /// returned vector is never empty; `len - 1` drafts were accepted.
+    ///
+    /// Contract: the implementation must leave each session exactly as if
+    /// the emitted tokens minus the final (not yet fed) one had been
+    /// decoded plainly — rejected draft rows rolled back, KV accounting
+    /// identical to a never-drafted session.
+    ///
+    /// Only called when [`supports_verify`](Self::supports_verify) is
+    /// `true` and the step's draft is non-empty.
+    fn verify_batch(
+        &self,
+        sessions: &mut [&mut Self::Session],
+        tokens: &[u16],
+        drafts: &[&[u16]],
+    ) -> Vec<Vec<u16>> {
+        let _ = (sessions, tokens, drafts);
+        unreachable!("verify_batch called on a backend without supports_verify")
+    }
+
+    /// Rows the backend can still append to `session` (remaining model
+    /// context). The scheduler clamps drafts so one verification feeds at
+    /// most this many rows — a drafter proposing past `max_seq` (or past
+    /// the session's block reservation) degrades to a plain step instead
+    /// of a capacity error. Default: unbounded.
+    fn rows_budget(&self, session: &Self::Session) -> usize {
+        let _ = session;
+        usize::MAX
     }
 }
 
@@ -442,6 +520,46 @@ impl TransformerBackend {
         }
         out
     }
+
+    /// Verify one slot's draft: one multi-position suffix forward scores
+    /// `[last, d1..dk]`, greedy acceptance keeps the longest prefix where
+    /// the draft equals the model's own argmax, and the session rolls
+    /// back to exactly the rows a never-drafted session would hold
+    /// (the final emitted token — correction or bonus — is not yet fed,
+    /// same as plain decode's last token).
+    fn verify_one(
+        &self,
+        sess: &mut DecodeSession,
+        last: u16,
+        draft: &[u16],
+        scratch: &mut PrefillScratch,
+    ) -> Vec<u16> {
+        let pos0 = sess.pos;
+        let mut suffix = Vec::with_capacity(1 + draft.len());
+        suffix.push(last);
+        suffix.extend_from_slice(draft);
+        let logits = self.model.prefill_suffix_logits_with(sess, &suffix, scratch);
+        let mut emitted = Vec::with_capacity(draft.len() + 1);
+        let mut all_accepted = true;
+        for (j, &d) in draft.iter().enumerate() {
+            let e = argmax(logits.row(j)) as u16;
+            emitted.push(e);
+            if e != d {
+                all_accepted = false;
+                break;
+            }
+        }
+        if all_accepted {
+            // Full accept: the last row's argmax is a bonus token for
+            // free — k + 1 tokens out of one forward.
+            emitted.push(argmax(logits.row(draft.len())) as u16);
+        }
+        let keep = pos0 + emitted.len();
+        if keep < sess.pos {
+            sess.truncate(keep);
+        }
+        emitted
+    }
 }
 
 impl SessionBackend for TransformerBackend {
@@ -539,6 +657,33 @@ impl SessionBackend for TransformerBackend {
             prefix_tokens_reused: c.tokens_reused,
         })
     }
+
+    fn supports_verify(&self) -> bool {
+        true
+    }
+
+    fn verify_batch(
+        &self,
+        sessions: &mut [&mut DecodeSession],
+        tokens: &[u16],
+        drafts: &[&[u16]],
+    ) -> Vec<Vec<u16>> {
+        debug_assert_eq!(sessions.len(), tokens.len());
+        debug_assert_eq!(sessions.len(), drafts.len());
+        // Each slot's verification is one suffix forward whose GEMMs are
+        // already M = (1 + k)-row batches — the popcount kernel's batch
+        // amortization — so slots run sequentially on one scratch.
+        let mut scratch = PrefillScratch::default();
+        sessions
+            .iter_mut()
+            .zip(tokens.iter().zip(drafts.iter()))
+            .map(|(sess, (&last, &draft))| self.verify_one(sess, last, draft, &mut scratch))
+            .collect()
+    }
+
+    fn rows_budget(&self, session: &DecodeSession) -> usize {
+        self.model.cfg.max_seq.saturating_sub(session.pos)
+    }
 }
 
 /// One in-flight request: its session, what it has generated, and the
@@ -560,6 +705,12 @@ struct Slot<S> {
     last_emit: Instant,
     resp_tx: Sender<Response>,
     stream_tx: Option<Sender<StreamEvent>>,
+    /// Prompt-lookup drafter ([`super::speculative`]); `Some` only when
+    /// the scheduler runs with `spec_k > 0` against a
+    /// verification-capable backend *and* this request decodes greedily
+    /// (sampled requests always take the plain step — a sampled pick is
+    /// not a pure function of the logits, so drafts cannot be verified).
+    drafter: Option<PromptLookupDrafter>,
 }
 
 /// The continuous-batching serve loop, step by step.
@@ -591,6 +742,9 @@ pub struct Scheduler<'a, B: SessionBackend> {
     active_sum: usize,
     retired: usize,
     stop_hits: usize,
+    /// Speculative-decoding counters; `Some` iff `cfg.spec_k > 0` and
+    /// the backend supports verification.
+    spec: Option<SpecStats>,
 }
 
 impl<'a, B: SessionBackend> Scheduler<'a, B> {
@@ -613,6 +767,11 @@ impl<'a, B: SessionBackend> Scheduler<'a, B> {
             active_sum: 0,
             retired: 0,
             stop_hits: 0,
+            spec: if cfg.spec_k > 0 && backend.supports_verify() {
+                Some(SpecStats::new(cfg.spec_k))
+            } else {
+                None
+            },
         }
     }
 
@@ -689,6 +848,11 @@ impl<'a, B: SessionBackend> Scheduler<'a, B> {
                 batch.into_iter().zip(samplers).zip(prefilled)
             {
                 let now = Instant::now();
+                // Greedy multi-token requests get a drafter when
+                // speculation is on; it sees the prompt now and every
+                // emitted token as it streams.
+                let drafter = (self.spec.is_some() && sampler.is_greedy() && req.gen > 1)
+                    .then(|| PromptLookupDrafter::new(&req.tokens));
                 let mut slot = Slot {
                     id: req.id,
                     gen: req.gen,
@@ -700,11 +864,15 @@ impl<'a, B: SessionBackend> Scheduler<'a, B> {
                     last_emit: now,
                     resp_tx: req.resp_tx,
                     stream_tx: req.stream_tx,
+                    drafter,
                 };
                 if slot.gen > 0 {
                     // prefill produced the first token: TTFT stops here
                     self.ttft.record(now - slot.submitted);
                     slot.generated.push(first);
+                    if let Some(dr) = &mut slot.drafter {
+                        dr.push(first);
+                    }
                     self.gen_tokens += 1;
                     if slot.sampler.is_stop(first) {
                         self.stop_hits += 1;
@@ -741,40 +909,127 @@ impl<'a, B: SessionBackend> Scheduler<'a, B> {
                 .iter()
                 .map(|s| *s.generated.last().expect("active slot has a token"))
                 .collect();
-            // Split each slot into disjoint &mut session / &mut sampler
-            // borrows so the backend can run the batched GEMM and the
-            // per-row selection in one call.
-            let mut sessions: Vec<&mut B::Session> = Vec::with_capacity(self.active.len());
-            let mut samplers: Vec<&mut Sampler> = Vec::with_capacity(self.active.len());
-            for slot in self.active.iter_mut() {
-                let Slot { session, sampler, .. } = slot;
-                sessions.push(session);
-                samplers.push(sampler);
+            // Propose a clamped draft per slot (empty = plain decode).
+            // The clamp is what turns would-be capacity errors into
+            // plain steps: a verification feeds `1 + draft` rows, so the
+            // draft must leave one row of the backend's budget for the
+            // anchor token AND stay within the slot's remaining `gen`
+            // budget minus one (the final emitted token is never fed —
+            // same as plain decode's last token), which also keeps the
+            // session inside the block reservation admission made.
+            let drafts: Vec<Vec<u16>> = self
+                .active
+                .iter()
+                .map(|slot| match &slot.drafter {
+                    Some(dr) => {
+                        let remaining = slot.gen - slot.generated.len();
+                        let budget = self.backend.rows_budget(&slot.session);
+                        let k = self
+                            .cfg
+                            .spec_k
+                            .min(remaining.saturating_sub(1))
+                            .min(budget.saturating_sub(1));
+                        dr.draft(k)
+                    }
+                    None => Vec::new(),
+                })
+                .collect();
+            let mut next: Vec<Vec<u16>> = vec![Vec::new(); self.active.len()];
+            // Plain subset: one ragged batched decode step. Split each
+            // slot into disjoint &mut session / &mut sampler borrows so
+            // the backend can run the batched GEMM and the per-row
+            // selection in one call.
+            {
+                let mut sessions: Vec<&mut B::Session> = Vec::new();
+                let mut samplers: Vec<&mut Sampler> = Vec::new();
+                let mut toks: Vec<u16> = Vec::new();
+                let mut idxs: Vec<usize> = Vec::new();
+                for (i, slot) in self.active.iter_mut().enumerate() {
+                    if !drafts[i].is_empty() {
+                        continue;
+                    }
+                    let Slot { session, sampler, .. } = slot;
+                    sessions.push(session);
+                    samplers.push(sampler);
+                    toks.push(tokens[i]);
+                    idxs.push(i);
+                }
+                if !sessions.is_empty() {
+                    let out =
+                        self.backend.decode_batch_sampled(&mut sessions, &toks, &mut samplers);
+                    debug_assert_eq!(out.len(), idxs.len());
+                    for (j, &i) in idxs.iter().enumerate() {
+                        next[i].push(out[j]);
+                    }
+                }
             }
-            let next = self.backend.decode_batch_sampled(&mut sessions, &tokens, &mut samplers);
-            drop(sessions);
-            drop(samplers);
-            debug_assert_eq!(next.len(), self.active.len());
+            // Speculative subset: one batched verification scores every
+            // slot's whole draft; the longest accepted prefix plus the
+            // model's own correction/bonus token all emit this step.
+            {
+                let mut sessions: Vec<&mut B::Session> = Vec::new();
+                let mut toks: Vec<u16> = Vec::new();
+                let mut dlist: Vec<&[u16]> = Vec::new();
+                let mut idxs: Vec<usize> = Vec::new();
+                for (i, slot) in self.active.iter_mut().enumerate() {
+                    if drafts[i].is_empty() {
+                        continue;
+                    }
+                    sessions.push(&mut slot.session);
+                    toks.push(tokens[i]);
+                    dlist.push(drafts[i].as_slice());
+                    idxs.push(i);
+                }
+                if !sessions.is_empty() {
+                    let emitted = self.backend.verify_batch(&mut sessions, &toks, &dlist);
+                    debug_assert_eq!(emitted.len(), idxs.len());
+                    let spec = self.spec.as_mut().expect("drafts exist only with spec on");
+                    for (j, &i) in idxs.iter().enumerate() {
+                        debug_assert!(!emitted[j].is_empty(), "verify emits at least one token");
+                        let accepted = emitted[j].len() - 1;
+                        debug_assert!(accepted <= dlist[j].len());
+                        spec.drafted += dlist[j].len();
+                        spec.accepted += accepted;
+                        spec.verifications += 1;
+                        spec.accept_hist[accepted] += 1;
+                        next[i] = emitted[j].clone();
+                    }
+                }
+            }
+            // In-order emission: every token a step produced streams with
+            // its own index; all tokens of one step share one emission
+            // instant (the first carries the step's ITL gap, the rest
+            // land at ~0 — they genuinely arrived together). Tokens past
+            // a stop or the `gen` budget are discarded unsent.
             let now = Instant::now();
-            for (slot, &tok) in self.active.iter_mut().zip(next.iter()) {
-                self.itl.record(now - slot.last_emit);
-                slot.last_emit = now;
-                slot.generated.push(tok);
-                self.gen_tokens += 1;
-                if slot.sampler.is_stop(tok) {
-                    self.stop_hits += 1;
-                    slot.finished = true;
-                }
-                if slot.generated.len() >= slot.gen {
-                    slot.finished = true;
-                }
-                if let Some(tx) = &slot.stream_tx {
-                    let _ = tx.send(StreamEvent {
-                        id: slot.id,
-                        index: slot.generated.len() - 1,
-                        token: tok,
-                        done: slot.finished,
-                    });
+            for (slot, toks) in self.active.iter_mut().zip(next.iter()) {
+                debug_assert!(!toks.is_empty(), "every active slot stepped");
+                for &tok in toks {
+                    self.itl.record(now - slot.last_emit);
+                    slot.last_emit = now;
+                    slot.generated.push(tok);
+                    if let Some(dr) = &mut slot.drafter {
+                        dr.push(tok);
+                    }
+                    self.gen_tokens += 1;
+                    if slot.sampler.is_stop(tok) {
+                        self.stop_hits += 1;
+                        slot.finished = true;
+                    }
+                    if slot.generated.len() >= slot.gen {
+                        slot.finished = true;
+                    }
+                    if let Some(tx) = &slot.stream_tx {
+                        let _ = tx.send(StreamEvent {
+                            id: slot.id,
+                            index: slot.generated.len() - 1,
+                            token: tok,
+                            done: slot.finished,
+                        });
+                    }
+                    if slot.finished {
+                        break;
+                    }
                 }
             }
             // --- immediate retirement: free slots without draining ---
@@ -834,6 +1089,7 @@ impl<'a, B: SessionBackend> Scheduler<'a, B> {
             tokens_per_s: self.gen_tokens as f64 / window,
             stop_hits: self.stop_hits,
             kv: self.backend.kv_stats(),
+            spec: self.spec,
         }
     }
 }
@@ -931,6 +1187,36 @@ mod tests {
                 })
                 .collect()
         }
+
+        fn supports_verify(&self) -> bool {
+            true
+        }
+
+        fn verify_batch(
+            &self,
+            sessions: &mut [&mut Vec<u16>],
+            tokens: &[u16],
+            drafts: &[&[u16]],
+        ) -> Vec<Vec<u16>> {
+            sessions
+                .iter_mut()
+                .zip(tokens.iter().zip(drafts.iter()))
+                .map(|(s, (&last, &draft))| {
+                    s.push(last);
+                    let mut emitted = Vec::new();
+                    for &d in draft {
+                        let next = mock_next(s);
+                        emitted.push(next);
+                        if next != d {
+                            return emitted;
+                        }
+                        s.push(d);
+                    }
+                    emitted.push(mock_next(s));
+                    emitted
+                })
+                .collect()
+        }
     }
 
     fn req(id: u64, tokens: Vec<u16>, gen: usize, rtx: &mpsc::Sender<Response>) -> Request {
@@ -1025,6 +1311,7 @@ mod tests {
         let cfg = SchedulerConfig {
             max_active: 3,
             admit: AdmissionPolicy::Eager,
+            spec_k: 0,
         };
         let mut sched = Scheduler::new(&backend, cfg);
         let (rtx, rrx) = mpsc::channel();
@@ -1135,6 +1422,7 @@ mod tests {
         let cfg = SchedulerConfig {
             max_active: 2,
             admit: AdmissionPolicy::Eager,
+            spec_k: 0,
         };
         let mut sched = Scheduler::new(&backend, cfg);
         let (rtx, rrx) = mpsc::channel();
@@ -1163,6 +1451,7 @@ mod tests {
         let cfg = SchedulerConfig {
             max_active: 4,
             admit: AdmissionPolicy::Drain,
+            spec_k: 0,
         };
         let mut sched = Scheduler::new(&backend, cfg);
         let (rtx, rrx) = mpsc::channel();
@@ -1221,6 +1510,7 @@ mod tests {
             let cfg = SchedulerConfig {
                 max_active: 3,
                 admit: AdmissionPolicy::Eager,
+                spec_k: 0,
             };
             let mut sched = Scheduler::new(backend, cfg);
             let (rtx, rrx) = mpsc::channel();
@@ -1301,6 +1591,7 @@ mod tests {
         let cfg = SchedulerConfig {
             max_active: 4,
             admit: AdmissionPolicy::Eager,
+            spec_k: 0,
         };
         let mut sched = Scheduler::new(&backend, cfg);
         let (rtx, rrx) = mpsc::channel();
@@ -1348,6 +1639,7 @@ mod tests {
                 SchedulerConfig {
                     max_active: 4,
                     admit: AdmissionPolicy::Eager,
+                    spec_k: 0,
                 },
             )
         });
@@ -1525,5 +1817,477 @@ mod tests {
         // published prefixes too, the pool must read completely empty.
         backend.clear_prefix_cache();
         assert_eq!(pool.in_use(), 0, "stop-token retirement must release all KV blocks");
+    }
+
+    /// The speculative parity matrix: for every (seed, workload shape,
+    /// spec_k) combination, greedy decode through the drafting +
+    /// batched-verification path emits exactly the tokens of plain
+    /// decode. spec_k = 0 is the plain baseline in the same harness,
+    /// the constant-zero workload maximises draft hits, and random
+    /// prompts exercise rejection at every depth.
+    #[test]
+    fn speculative_decode_is_token_identical_to_plain_across_the_matrix() {
+        let mut combos = 0usize;
+        for seed in [11u64, 12, 13] {
+            for repetitive in [true, false] {
+                let mut rng = Rng::new(seed);
+                let reqs: Vec<(Vec<u16>, usize)> = (0..4)
+                    .map(|i| {
+                        let len = 4 + rng.below(8) as usize;
+                        let p: Vec<u16> = if repetitive {
+                            vec![0; len]
+                        } else {
+                            (0..len).map(|_| rng.below(31) as u16).collect()
+                        };
+                        (p, 3 + i * 2)
+                    })
+                    .collect();
+                for spec_k in [0usize, 2, 4, 8] {
+                    combos += 1;
+                    let backend = MockBackend;
+                    let cfg = SchedulerConfig {
+                        max_active: 3,
+                        admit: AdmissionPolicy::Eager,
+                        spec_k,
+                    };
+                    let mut sched = Scheduler::new(&backend, cfg);
+                    let (rtx, rrx) = mpsc::channel();
+                    for (i, (p, g)) in reqs.iter().enumerate() {
+                        sched.submit(req(i as u64, p.clone(), *g, &rtx));
+                    }
+                    while sched.step() {}
+                    let stats = sched.finish();
+                    drop(rtx);
+                    let mut got = vec![Vec::new(); reqs.len()];
+                    for resp in rrx.try_iter() {
+                        got[resp.id as usize] = resp.generated;
+                    }
+                    for (i, (p, g)) in reqs.iter().enumerate() {
+                        assert_eq!(
+                            got[i],
+                            mock_reference(p, *g),
+                            "seed {seed} repetitive {repetitive} spec_k {spec_k} req {i}"
+                        );
+                    }
+                    let total_gen: usize = reqs.iter().map(|(_, g)| *g).sum();
+                    assert_eq!(stats.gen_tokens, total_gen);
+                    match stats.spec {
+                        None => {
+                            assert_eq!(spec_k, 0, "spec stats appear exactly when spec_k > 0")
+                        }
+                        Some(ref sp) => {
+                            assert!(spec_k > 0);
+                            assert_eq!(sp.k, spec_k);
+                            assert!(sp.accepted <= sp.drafted);
+                            assert_eq!(sp.accept_hist.iter().sum::<usize>(), sp.verifications);
+                            if repetitive {
+                                assert!(
+                                    sp.accepted > 0,
+                                    "constant-zero streams must accept drafts \
+                                     (seed {seed} spec_k {spec_k})"
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        assert!(combos >= 20, "parity matrix covers at least 20 combos, got {combos}");
+    }
+
+    /// The transformer parity pin under speculation: for two model seeds
+    /// and every spec_k, drafting + batched suffix verification
+    /// reproduces sequential prefill + decode_step exactly — over both
+    /// the contiguous backend and the paged prefix-reusing backend,
+    /// whose end-of-run pool occupancy must not depend on spec_k
+    /// (partial-acceptance rollback leaks no blocks).
+    #[test]
+    fn speculative_transformer_decode_matches_sequential() {
+        for model_seed in [71u64, 81] {
+            let model = quantized_model(model_seed);
+            let mut rng = Rng::new(model_seed ^ 5);
+            // shared prefix + repetitive tails: the drafter has repeating
+            // n-grams to hit while rejections still occur
+            let shared: Vec<u16> = (0..9).map(|_| rng.below(64) as u16).collect();
+            let seqs: Vec<Vec<u16>> = (0..4)
+                .map(|i| {
+                    let mut s = shared.clone();
+                    s.extend(std::iter::repeat(i as u16 + 1).take(4));
+                    s
+                })
+                .collect();
+            let gens = [6usize, 3, 5, 4];
+
+            let mut want = Vec::new();
+            for (s, &g) in seqs.iter().zip(gens.iter()) {
+                let mut sess = model.new_session();
+                let mut logits = model.prefill(&mut sess, s);
+                let mut out = Vec::new();
+                for step in 0..g {
+                    let next = argmax(&logits) as u16;
+                    out.push(next);
+                    if step + 1 < g {
+                        logits = model.decode_step(&mut sess, next);
+                    }
+                }
+                want.push(out);
+            }
+
+            let drive = |spec_k: usize, paged: bool| -> (Vec<Vec<u16>>, SchedulerStats) {
+                let backend = if paged {
+                    TransformerBackend::with_kv_pool(
+                        quantized_model(model_seed),
+                        2,
+                        "spec-paged",
+                        KvPoolConfig {
+                            blocks: 512,
+                            block_tokens: 4,
+                        },
+                    )
+                } else {
+                    TransformerBackend::new(quantized_model(model_seed), 2, "spec")
+                };
+                let cfg = SchedulerConfig {
+                    max_active: 3,
+                    admit: AdmissionPolicy::Eager,
+                    spec_k,
+                };
+                let mut sched = Scheduler::new(&backend, cfg);
+                let (rtx, rrx) = mpsc::channel();
+                for (i, s) in seqs.iter().enumerate() {
+                    sched.submit(req(i as u64, s.clone(), gens[i], &rtx));
+                }
+                while sched.step() {}
+                let stats = sched.finish();
+                drop(rtx);
+                let mut got = vec![Vec::new(); seqs.len()];
+                for resp in rrx.try_iter() {
+                    got[resp.id as usize] = resp.generated;
+                }
+                (got, stats)
+            };
+
+            let mut paged_in_use = Vec::new();
+            for spec_k in [0usize, 2, 4, 8] {
+                let (got, stats) = drive(spec_k, false);
+                assert_eq!(got, want, "contiguous spec_k {spec_k} model {model_seed}");
+                if let Some(sp) = &stats.spec {
+                    assert_eq!(sp.accept_hist.iter().sum::<usize>(), sp.verifications);
+                    assert!(sp.accepted <= sp.drafted);
+                }
+                let (got, stats) = drive(spec_k, true);
+                assert_eq!(got, want, "paged spec_k {spec_k} model {model_seed}");
+                let kv = stats.kv.expect("paged backend reports kv stats");
+                assert!(kv.blocks_peak <= kv.blocks_capacity);
+                paged_in_use.push(kv.blocks_in_use);
+            }
+            assert!(
+                paged_in_use.iter().all(|&b| b == paged_in_use[0]),
+                "end-of-run pool occupancy must not depend on spec_k \
+                 (rollback must leak no blocks): {paged_in_use:?}"
+            );
+        }
+    }
+
+    /// Stop token inside an accepted draft batch: verification accepts
+    /// four draft tokens in one step, the emission loop hits the stop id
+    /// on the third, and the leftover accepted tokens are discarded —
+    /// never streamed, never counted.
+    #[test]
+    fn stop_token_inside_an_accepted_batch_discards_the_leftovers() {
+        // prompt = [1] followed by its own continuation: the mock stream
+        // cycles 1,2,4,8,16 (the cycle sums to 31 = the mock modulus),
+        // so the prompt holds one aligned period and the drafter's
+        // 1-gram match drafts [2,4,8,16] on the very first decode step.
+        let prompt = vec![1u16, 1, 2, 4, 8, 16];
+        let want_full = mock_reference(&prompt, 12);
+        assert_eq!(&want_full[..6], &[1, 2, 4, 8, 16, 1], "mock stream must cycle");
+        let backend = MockBackend;
+        let cfg = SchedulerConfig {
+            max_active: 1,
+            admit: AdmissionPolicy::Eager,
+            spec_k: 4,
+        };
+        let mut sched = Scheduler::new(&backend, cfg);
+        let (rtx, rrx) = mpsc::channel();
+        let (stx, srx) = mpsc::channel();
+        sched.submit(Request {
+            id: 4,
+            tokens: prompt,
+            gen: 12,
+            submitted: Instant::now(),
+            resp_tx: rtx,
+            stream_tx: Some(stx),
+            cfg: GenConfig {
+                stop: vec![8],
+                ..GenConfig::default()
+            },
+        });
+        while sched.step() {}
+        let stats = sched.finish();
+        let resp = rrx.try_recv().expect("final response");
+        assert_eq!(resp.generated, vec![1, 2, 4, 8], "truncated at the stop id");
+        let events: Vec<StreamEvent> = srx.try_iter().collect();
+        assert_eq!(events.len(), 4, "nothing streams after the stop token");
+        for (i, ev) in events.iter().enumerate() {
+            assert_eq!(ev.index, i);
+            assert_eq!(ev.done, i == 3, "only the stop token is marked done");
+        }
+        assert_eq!(events.last().unwrap().token, 8);
+        assert_eq!(stats.stop_hits, 1);
+        assert_eq!(stats.gen_tokens, 4, "discarded accept-tail tokens are not counted");
+        let sp = stats.spec.expect("spec stats");
+        assert!(sp.accepted >= 4, "the batch containing the stop was accepted in full");
+        assert_eq!(stats.steps, 1, "one verification step covers tokens 2..=8");
+    }
+
+    /// The stream-event contract survives multi-token steps: a fully
+    /// accepting workload (constant-zero mock stream) emits several
+    /// tokens per step, yet events arrive with consecutive indices, one
+    /// ITL sample per token gap, and strictly fewer decode steps than
+    /// plain decode would need.
+    #[test]
+    fn multi_token_accept_steps_keep_the_stream_contract() {
+        let backend = MockBackend;
+        let cfg = SchedulerConfig {
+            max_active: 1,
+            admit: AdmissionPolicy::Eager,
+            spec_k: 4,
+        };
+        let mut sched = Scheduler::new(&backend, cfg);
+        let (rtx, rrx) = mpsc::channel();
+        let (stx, srx) = mpsc::channel();
+        let gen = 12usize;
+        sched.submit(Request {
+            id: 2,
+            tokens: vec![0, 0],
+            gen,
+            submitted: Instant::now(),
+            resp_tx: rtx,
+            stream_tx: Some(stx),
+            cfg: GenConfig::default(),
+        });
+        while sched.step() {}
+        let stats = sched.finish();
+        let resp = rrx.try_recv().expect("final response");
+        assert_eq!(resp.generated, mock_reference(&[0, 0], gen));
+        let events: Vec<StreamEvent> = srx.try_iter().collect();
+        assert_eq!(events.len(), gen);
+        for (i, ev) in events.iter().enumerate() {
+            assert_eq!(ev.id, 2);
+            assert_eq!(ev.index, i, "multi-token steps must keep indices consecutive");
+            assert_eq!(ev.done, i == gen - 1);
+        }
+        let streamed: Vec<u16> = events.iter().map(|e| e.token).collect();
+        assert_eq!(streamed, resp.generated);
+        assert_eq!(stats.itl.len(), gen - 1, "one ITL sample per gap, even intra-step");
+        assert_eq!(stats.ttft.len(), 1);
+        let sp = stats.spec.expect("spec stats");
+        assert!(sp.accepted > 0, "the constant stream must accept drafts");
+        assert!(
+            stats.steps < gen - 1,
+            "acceptance must compress decode steps: {} steps for {gen} tokens",
+            stats.steps,
+        );
+        assert_eq!(sp.accept_hist.iter().sum::<usize>(), sp.verifications);
+    }
+
+    /// Sampled (non-greedy) requests bypass the drafter entirely: with
+    /// spec_k = 4 configured, a temperature > 0 request replays exactly
+    /// the spec-off sampled tokens, and no verifications are recorded.
+    #[test]
+    fn sampled_requests_bypass_speculation() {
+        let mut rng = Rng::new(23);
+        let prompt: Vec<u16> = (0..12).map(|_| rng.below(64) as u16).collect();
+        let sampled_cfg = GenConfig {
+            temperature: 1.5,
+            top_k: 16,
+            top_p: 0.95,
+            seed: 7,
+            stop: Vec::new(),
+        };
+        let drive = |spec_k: usize| -> (Vec<u16>, SchedulerStats) {
+            let backend = TransformerBackend::new(quantized_model(24), 2, "samp-spec");
+            let cfg = SchedulerConfig {
+                max_active: 2,
+                admit: AdmissionPolicy::Eager,
+                spec_k,
+            };
+            let mut sched = Scheduler::new(&backend, cfg);
+            let (rtx, rrx) = mpsc::channel();
+            sched.submit(Request {
+                id: 0,
+                tokens: prompt.clone(),
+                gen: 8,
+                submitted: Instant::now(),
+                resp_tx: rtx,
+                stream_tx: None,
+                cfg: sampled_cfg.clone(),
+            });
+            while sched.step() {}
+            let stats = sched.finish();
+            (rrx.try_recv().expect("final response").generated, stats)
+        };
+        let (plain, _) = drive(0);
+        let (spec, stats) = drive(4);
+        assert_eq!(spec, plain, "sampled decode must be untouched by --spec-k");
+        let sp = stats.spec.expect("spec stats exist whenever spec_k > 0");
+        assert_eq!(sp.verifications, 0, "non-greedy slots never enter the verify path");
+        assert_eq!(sp.drafted, 0);
+    }
+
+    /// Deterministic clamp pin: a backend with a hard row budget (the
+    /// mock analogue of max_seq / the block reservation) panics if
+    /// verification ever appends rows past it. With prompt + gen - 1
+    /// exactly equal to the budget and a constant-zero stream (the
+    /// drafter proposes at every step), the scheduler must trim every
+    /// draft to the rows that fit and fall back to a plain step for the
+    /// final token instead of erroring.
+    #[test]
+    fn drafts_are_clamped_to_the_row_budget_not_errored() {
+        struct BoundedMock {
+            max_rows: usize,
+        }
+        impl SessionBackend for BoundedMock {
+            type Session = Vec<u16>;
+            fn name(&self) -> String {
+                "bounded-mock".into()
+            }
+            fn prefill_batch(&self, prompts: &[&[u16]], _gens: &[usize]) -> Vec<(Vec<u16>, u16)> {
+                prompts.iter().map(|p| (p.to_vec(), mock_next(p))).collect()
+            }
+            fn decode_batch(&self, sessions: &mut [&mut Vec<u16>], tokens: &[u16]) -> Vec<u16> {
+                sessions
+                    .iter_mut()
+                    .zip(tokens)
+                    .map(|(s, &t)| {
+                        s.push(t);
+                        assert!(s.len() <= self.max_rows, "decode overflowed the row budget");
+                        mock_next(s)
+                    })
+                    .collect()
+            }
+            fn supports_verify(&self) -> bool {
+                true
+            }
+            fn verify_batch(
+                &self,
+                sessions: &mut [&mut Vec<u16>],
+                tokens: &[u16],
+                drafts: &[&[u16]],
+            ) -> Vec<Vec<u16>> {
+                sessions
+                    .iter_mut()
+                    .zip(tokens.iter().zip(drafts.iter()))
+                    .map(|(s, (&last, &draft))| {
+                        assert!(
+                            s.len() + 1 + draft.len() <= self.max_rows,
+                            "an unclamped draft overflowed the row budget: {} rows + 1 + {}",
+                            s.len(),
+                            draft.len()
+                        );
+                        s.push(last);
+                        let mut emitted = Vec::new();
+                        for &d in draft {
+                            let next = mock_next(s);
+                            emitted.push(next);
+                            if next != d {
+                                return emitted;
+                            }
+                            s.push(d);
+                        }
+                        emitted.push(mock_next(s));
+                        emitted
+                    })
+                    .collect()
+            }
+            fn rows_budget(&self, session: &Vec<u16>) -> usize {
+                self.max_rows - session.len()
+            }
+        }
+
+        let max_rows = 20usize;
+        let prompt = vec![0u16; 6];
+        let gen = 15usize; // 6 + 15 - 1 == 20 == max_rows
+        let backend = BoundedMock { max_rows };
+        let cfg = SchedulerConfig {
+            max_active: 1,
+            admit: AdmissionPolicy::Eager,
+            spec_k: 8,
+        };
+        let mut sched = Scheduler::new(&backend, cfg);
+        let (rtx, rrx) = mpsc::channel();
+        sched.submit(req(0, prompt.clone(), gen, &rtx));
+        while sched.step() {}
+        let stats = sched.finish();
+        drop(rtx);
+        let resp = rrx.try_recv().expect("final response");
+        assert_eq!(resp.generated, mock_reference(&prompt, gen));
+        assert_eq!(stats.gen_tokens, gen);
+        let sp = stats.spec.expect("spec stats");
+        assert!(sp.accepted > 0, "the constant stream must accept drafts");
+    }
+
+    /// The max_seq boundary on the real model: a request whose peak
+    /// cache footprint (prompt + gen - 1 rows) exactly fills max_seq
+    /// runs with spec_k 8 on a highly repetitive prompt, completes
+    /// token-identical to sequential on both backends, and the paged
+    /// pool reads empty after the run — the clamp turns would-be
+    /// overflows into shorter drafts or plain steps.
+    #[test]
+    fn draft_clamp_holds_at_the_max_seq_boundary() {
+        let model = quantized_model(97);
+        let prompt = vec![7u16; 25];
+        let gen = 40usize; // 25 + 40 - 1 == 64 == max_seq
+
+        let mut sess = model.new_session();
+        let mut logits = model.prefill(&mut sess, &prompt);
+        let mut want = Vec::new();
+        for step in 0..gen {
+            let next = argmax(&logits) as u16;
+            want.push(next);
+            if step + 1 < gen {
+                logits = model.decode_step(&mut sess, next);
+            }
+        }
+
+        for paged in [false, true] {
+            let backend = if paged {
+                TransformerBackend::with_kv_pool(
+                    quantized_model(97),
+                    2,
+                    "clamp-paged",
+                    KvPoolConfig {
+                        blocks: 64,
+                        block_tokens: 8,
+                    },
+                )
+            } else {
+                TransformerBackend::new(quantized_model(97), 2, "clamp")
+            };
+            let cfg = SchedulerConfig {
+                max_active: 1,
+                admit: AdmissionPolicy::Eager,
+                spec_k: 8,
+            };
+            let mut sched = Scheduler::new(&backend, cfg);
+            let (rtx, rrx) = mpsc::channel();
+            sched.submit(req(0, prompt.clone(), gen, &rtx));
+            while sched.step() {}
+            let stats = sched.finish();
+            drop(rtx);
+            let resp = rrx.try_recv().expect("final response");
+            assert_eq!(resp.generated, want, "paged={paged} diverged at the boundary");
+            assert_eq!(stats.gen_tokens, gen);
+            assert!(stats.spec.is_some());
+            if paged {
+                backend.clear_prefix_cache();
+                assert_eq!(
+                    backend.kv_pool().unwrap().in_use(),
+                    0,
+                    "rollback across block boundaries must leak nothing"
+                );
+            }
+        }
     }
 }

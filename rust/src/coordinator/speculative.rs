@@ -1,0 +1,150 @@
+//! Prompt-lookup speculative drafting (`--spec-k`).
+//!
+//! The drafter is **model-free**: it proposes the next `k` tokens by
+//! n-gram lookup over the request's own context (prompt + everything
+//! generated so far), betting that decoding revisits spans it has
+//! already seen — the repetitive/structured workloads a binarized
+//! deployment targets. No second model, no new weights: the draft
+//! costs a substring scan, and the W(1+1)A(1×4) popcount forward makes
+//! *verifying* all k drafts in one batched suffix pass
+//! ([`crate::model::Transformer::prefill_suffix_logits_with`]) nearly
+//! as cheap as a single decode step.
+//!
+//! ## Drafting rule
+//!
+//! Let the context be `c[0..len]`. For `n = max_ngram` down to `1`,
+//! find the **most recent** earlier occurrence of the context's length-n
+//! suffix (an occurrence strictly before the suffix itself, with at
+//! least one following token); the draft is the up-to-`k` tokens that
+//! followed that occurrence. Longer suffix matches win over more recent
+//! shorter ones; no match at any `n` yields an empty draft and the
+//! scheduler falls back to the plain single-token step.
+//!
+//! ## Why greedy acceptance is exact
+//!
+//! The verifier feeds `[last_emitted, d1..dk]` through the suffix
+//! forward and takes the argmax at every position. Row `j`'s logits are
+//! a pure function of the tokens before it — the same function a plain
+//! decode step computes — so as long as drafted tokens are only
+//! *accepted* while they equal the argmax at their own position, the
+//! emitted sequence is exactly what plain greedy decode would have
+//! produced, token for token, for any draft the lookup proposes (a bad
+//! draft costs speed, never correctness). The scheduler pins this
+//! parity across every serving path; sampled (non-greedy) requests
+//! bypass drafting entirely because a sampled selection is not a pure
+//! function of the logits.
+
+/// Per-request n-gram drafter over the request's own token stream. The
+/// scheduler owns one per slot (greedy requests only), feeds it every
+/// emitted token via [`push`](Self::push), and asks for up to `spec_k`
+/// draft tokens before each decode step.
+#[derive(Clone, Debug)]
+pub struct PromptLookupDrafter {
+    /// prompt + emitted tokens, in order.
+    ctx: Vec<u16>,
+    /// longest suffix length tried by the lookup.
+    max_ngram: usize,
+}
+
+/// Longest context suffix the drafter tries to match. Small on purpose:
+/// prompt-lookup wins come from exact local repetition, and a 3-gram
+/// anchor already makes accidental matches rare at serving vocab sizes.
+pub const MAX_NGRAM: usize = 3;
+
+impl PromptLookupDrafter {
+    /// Drafter seeded with the request's prompt.
+    pub fn new(prompt: &[u16]) -> Self {
+        Self {
+            ctx: prompt.to_vec(),
+            max_ngram: MAX_NGRAM,
+        }
+    }
+
+    /// Record one emitted token (the scheduler calls this for the
+    /// prefill token and for every token an accept step emits).
+    pub fn push(&mut self, token: u16) {
+        self.ctx.push(token);
+    }
+
+    /// Tokens of context the drafter has seen (prompt + emitted).
+    pub fn context_len(&self) -> usize {
+        self.ctx.len()
+    }
+
+    /// Propose up to `k` tokens expected to follow the current context.
+    /// Empty when `k == 0` or no context suffix has recurred — the
+    /// caller then runs a plain decode step.
+    pub fn draft(&self, k: usize) -> Vec<u16> {
+        if k == 0 || self.ctx.is_empty() {
+            return Vec::new();
+        }
+        let len = self.ctx.len();
+        for n in (1..=self.max_ngram.min(len)).rev() {
+            let suffix = &self.ctx[len - n..];
+            // Most recent earlier occurrence with ≥ 1 following token:
+            // candidate starts run from just before the suffix down to 0.
+            for i in (0..len - n).rev() {
+                if &self.ctx[i..i + n] == suffix {
+                    let cont = &self.ctx[i + n..(i + n + k).min(len)];
+                    if !cont.is_empty() {
+                        return cont.to_vec();
+                    }
+                }
+            }
+        }
+        Vec::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn draft_continues_the_matched_ngram() {
+        let d = PromptLookupDrafter::new(&[1, 2, 3, 9, 40, 1, 2, 3]);
+        // suffix [1,2,3] recurs at the start; 9 and 40 followed it
+        assert_eq!(d.draft(1), vec![9]);
+        assert_eq!(d.draft(2), vec![9, 40]);
+        assert_eq!(d.draft(8), vec![9, 40, 1, 2, 3], "draft clips at the context end");
+    }
+
+    #[test]
+    fn most_recent_occurrence_wins() {
+        // [1,2] occurs twice before the suffix; the later one (followed
+        // by 7) must be preferred over the earlier one (followed by 5).
+        let d = PromptLookupDrafter::new(&[1, 2, 5, 1, 2, 7, 1, 2]);
+        assert_eq!(d.draft(1), vec![7]);
+        assert_eq!(d.draft(3), vec![7, 1, 2]);
+    }
+
+    #[test]
+    fn longer_suffix_match_beats_a_more_recent_shorter_one() {
+        // 3-gram [1,2,3] matched at the start (followed by 4) wins over
+        // the more recent unigram [3] (followed by 9).
+        let d = PromptLookupDrafter::new(&[1, 2, 3, 4, 3, 9, 1, 2, 3]);
+        assert_eq!(d.draft(1), vec![4]);
+    }
+
+    #[test]
+    fn push_extends_the_lookup_context() {
+        let mut d = PromptLookupDrafter::new(&[8, 15, 16]);
+        assert_eq!(d.draft(4), Vec::<u16>::new(), "no repetition yet");
+        for t in [23, 8, 15] {
+            d.push(t);
+        }
+        assert_eq!(d.context_len(), 6);
+        // suffix [8,15] now recurs: 16 then 23 followed it
+        assert_eq!(d.draft(2), vec![16, 23]);
+    }
+
+    #[test]
+    fn no_match_or_zero_k_drafts_nothing() {
+        let d = PromptLookupDrafter::new(&[1, 2, 3, 4, 5]);
+        assert_eq!(d.draft(4), Vec::<u16>::new(), "all-distinct context has no match");
+        let rep = PromptLookupDrafter::new(&[1, 2, 1, 2]);
+        assert_eq!(rep.draft(0), Vec::<u16>::new(), "k = 0 is speculation off");
+        let empty = PromptLookupDrafter::new(&[]);
+        assert_eq!(empty.draft(4), Vec::<u16>::new());
+    }
+}

@@ -58,6 +58,14 @@ impl BlockData {
     pub fn rows(&self) -> usize {
         self.params.len()
     }
+
+    /// Drop every row past `rows` — speculative-decode rollback trimming
+    /// rejected draft rows out of an owned tail block.
+    fn truncate_rows(&mut self, rows: usize, d: usize) {
+        debug_assert!(rows <= self.rows(), "truncating rows the block does not hold");
+        self.bytes.truncate(rows * d / 2);
+        self.params.truncate(rows);
+    }
 }
 
 struct Entry {
@@ -231,6 +239,28 @@ impl BlockPool {
             e.data = None;
             s.free.push(id);
             s.in_use -= 1;
+        }
+    }
+
+    /// [`release`](Self::release) for a speculative rollback: when the
+    /// block frees, one outstanding reservation is re-credited. The
+    /// rolling-back session's admission budget covered this block and the
+    /// session may legitimately re-allocate it at a later step — without
+    /// the re-credit, each open-then-reject cycle across a block boundary
+    /// would consume a reservation that still has a real future alloc
+    /// behind it, letting admission over-commit a tight pool.
+    /// `in_use + outstanding` is unchanged, so the reserve invariant
+    /// holds.
+    pub fn release_rolled_back(&self, id: BlockId) {
+        let mut s = self.state.lock().unwrap();
+        let e = &mut s.entries[id as usize];
+        debug_assert!(e.refs > 0, "double release");
+        e.refs -= 1;
+        if e.refs == 0 {
+            e.data = None;
+            s.free.push(id);
+            s.in_use -= 1;
+            s.outstanding += 1;
         }
     }
 }
@@ -453,6 +483,43 @@ impl PagedKv4Store {
         ids
     }
 
+    /// Roll the store back to `rows` rows — speculative-decode rollback
+    /// of rejected draft positions. Whole tail pages past the new length
+    /// are released to the pool; a partially-kept **owned** tail page is
+    /// trimmed in place. Draft rows are only ever appended into owned
+    /// pages ([`Self::push`] copy-on-writes a shared tail before
+    /// writing), so a partially-kept *shared* page can only occur when
+    /// the truncation point falls inside an adopted prefix — its extra
+    /// rows are read-only and unreachable past `len`, so it is left
+    /// untouched and the next `push` copy-on-writes exactly the kept
+    /// rows. After rollback the pool's `in_use` accounting is identical
+    /// to a store that never pushed the rejected rows (test-pinned).
+    pub fn truncate(&mut self, rows: usize) {
+        assert!(rows <= self.len, "truncating rows the store does not hold");
+        if rows == self.len {
+            return;
+        }
+        let bs = self.pool.block_tokens();
+        let keep_pages = rows.div_ceil(bs);
+        while self.pages.len() > keep_pages {
+            let page = self.pages.pop().expect("page count checked");
+            match page {
+                // Draft pages are owned by this store alone: freeing one
+                // re-credits the reservation that paid for it, since the
+                // session may re-allocate the same block a step later.
+                Page::Owned { id, .. } => self.pool.release_rolled_back(id),
+                Page::Shared { id, .. } => self.pool.release(id),
+            }
+        }
+        let keep_in_last = rows - (keep_pages.saturating_sub(1)) * bs;
+        if rows % bs != 0 {
+            if let Some(Page::Owned { data, .. }) = self.pages.last_mut() {
+                data.truncate_rows(keep_in_last, self.d);
+            }
+        }
+        self.len = rows;
+    }
+
     /// Storage bytes held by this store's pages (packed nibbles +
     /// params), mirroring the contiguous store's accounting.
     pub fn bytes(&self) -> usize {
@@ -615,6 +682,102 @@ mod tests {
         let mut want = vec![0.0f32; d];
         fresh.get(7, &mut want);
         assert_eq!(va, want, "CoW must not perturb the appended row");
+    }
+
+    /// Speculative rollback: after truncating j rejected draft rows
+    /// away, the pool's in-use accounting and every surviving row are
+    /// identical to a twin store that never pushed them.
+    #[test]
+    fn truncate_matches_a_never_drafted_store() {
+        let mut rng = Rng::new(94);
+        let d = 16;
+        let bs = 4;
+        let rows: Vec<Vec<f32>> = (0..11).map(|_| rng.normal_vec_f32(d, 0.0, 1.0)).collect();
+        // drafted: pushes 7 rows, then 4 draft rows (spilling into a new
+        // block), then rejects all 4. plain: pushes the 7 rows only.
+        let pd = pool(16, bs);
+        let pp = pool(16, bs);
+        let mut drafted = PagedKv4Store::new(d, pd.clone());
+        let mut plain = PagedKv4Store::new(d, pp.clone());
+        for r in &rows[..7] {
+            drafted.push(r);
+            plain.push(r);
+        }
+        for r in &rows[7..] {
+            drafted.push(r);
+        }
+        assert_eq!(pd.in_use(), 3, "11 rows span 3 blocks");
+        drafted.truncate(7);
+        assert_eq!(drafted.len(), 7);
+        assert_eq!(pd.in_use(), pp.in_use(), "rollback must release the draft tail block");
+        assert_eq!(pd.in_use(), 2, "no leaked tail blocks");
+        let (mut a, mut b) = (vec![0.0f32; d], vec![0.0f32; d]);
+        for t in 0..7 {
+            drafted.get(t, &mut a);
+            plain.get(t, &mut b);
+            assert_eq!(a, b, "surviving row {t}");
+        }
+        // the store keeps working after rollback: appends land where the
+        // rejected rows were and match a never-drafted store bit for bit.
+        drafted.push(&rows[8]);
+        plain.push(&rows[8]);
+        drafted.get(7, &mut a);
+        plain.get(7, &mut b);
+        assert_eq!(a, b, "post-rollback append");
+        assert_eq!(pd.in_use(), pp.in_use());
+    }
+
+    /// Rollback across a copy-on-write tail: a store that adopted a
+    /// shared partial tail, CoW'd it by drafting, and then rejected all
+    /// but one draft row ends with the same pool accounting as a twin
+    /// that decoded the surviving row without ever drafting — the CoW is
+    /// "unwound" to exactly the never-drafted shape.
+    #[test]
+    fn truncate_unwinds_cow_tail_to_plain_decode_accounting() {
+        let mut rng = Rng::new(95);
+        let d = 16;
+        let bs = 4;
+        let p = pool(16, bs);
+        let mut publisher = PagedKv4Store::new(d, p.clone());
+        let rows: Vec<Vec<f32>> = (0..7).map(|_| rng.normal_vec_f32(d, 0.0, 1.0)).collect();
+        for r in &rows {
+            publisher.push(r);
+        }
+        let ids = publisher.freeze_prefix(7);
+        let adopt = |pool: &Arc<BlockPool>| {
+            ids.iter()
+                .map(|&id| (id, pool.adopt(id).expect("published")))
+                .collect::<Vec<_>>()
+        };
+        let mut drafted = PagedKv4Store::from_prefix(d, p.clone(), adopt(&p), 7);
+        let mut plain = PagedKv4Store::from_prefix(d, p.clone(), adopt(&p), 7);
+        let cont: Vec<Vec<f32>> = (0..4).map(|_| rng.normal_vec_f32(d, 0.3, 1.0)).collect();
+        // drafted CoWs the shared 3-row tail and speculates 4 rows ahead
+        // (rows 7..11, spilling into a fresh block); plain decodes row 7.
+        for r in &cont {
+            drafted.push(r);
+        }
+        plain.push(&cont[0]);
+        drafted.truncate(8); // reject rows 8..11
+        let in_use_with_both = p.in_use();
+        let (mut a, mut b) = (vec![0.0f32; d], vec![0.0f32; d]);
+        for t in 0..8 {
+            drafted.get(t, &mut a);
+            plain.get(t, &mut b);
+            assert_eq!(a, b, "row {t} identical after CoW rollback");
+        }
+        // Dropping each store must release the same number of blocks —
+        // i.e. the drafted store holds exactly the blocks of a
+        // never-drafted one (its CoW copy trimmed, its spill released).
+        drop(drafted);
+        let after_drafted = p.in_use();
+        drop(plain);
+        let after_plain = p.in_use();
+        assert_eq!(
+            in_use_with_both - after_drafted,
+            after_drafted - after_plain,
+            "drafted-then-rolled-back store holds the same blocks as a plain one"
+        );
     }
 
     /// Dropping stores releases every block back to the pool — no leaks

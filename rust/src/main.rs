@@ -83,6 +83,7 @@ fn help_text() -> String {
          \x20           [--wait-us U] [--workers W] [--seed S] [--stagger-us U]\n\
          \x20           [--shared-prefix P]                      (common system-prompt prefix)\n\
          \x20           [--max-active N] [--admit eager|drain]   (bwa-cont scheduler knobs)\n\
+         \x20           [--spec-k K]                             (bwa-cont speculative drafts/step)\n\
          \x20           [--kv-blocks N] [--block-size T]         (bwa-cont paged KV pool)\n\
          \x20           [--listen ADDR] [--max-queue N]          (TCP front-end; docs/PROTOCOL.md)\n\
          \x20 client    [--addr HOST:PORT] [--requests N] [--prompt-len P] [--gen G]\n\

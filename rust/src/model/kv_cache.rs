@@ -105,6 +105,15 @@ impl Kv4Store {
         }
     }
 
+    /// Drop every row past `rows` — speculative-decode rollback of
+    /// rejected draft positions.
+    pub fn truncate(&mut self, rows: usize) {
+        assert!(rows <= self.len, "truncating rows the store does not hold");
+        self.data.truncate(rows * self.d / 2);
+        self.params.truncate(rows);
+        self.len = rows;
+    }
+
     /// Apply the cache's quantization to a row without storing it — the
     /// batch forward uses this so both paths share one code path.
     pub fn fake_quantize(row: &mut [f32]) {
@@ -171,6 +180,17 @@ impl KvStore {
         match self {
             KvStore::Contiguous(s) => s.axpy(t, w, out),
             KvStore::Paged(s) => s.axpy(t, w, out),
+        }
+    }
+
+    /// Drop every row past `rows` — speculative-decode rollback. Both
+    /// backings land in the identical post-rollback state as a store
+    /// that never held the rejected rows (the paged backing also returns
+    /// whole rejected tail blocks to its pool).
+    pub fn truncate(&mut self, rows: usize) {
+        match self {
+            KvStore::Contiguous(s) => s.truncate(rows),
+            KvStore::Paged(s) => s.truncate(rows),
         }
     }
 
@@ -251,6 +271,13 @@ impl LayerKvCache {
         let ks = self.k.as_paged_mut()?.freeze_prefix(rows);
         let vs = self.v.as_paged_mut()?.freeze_prefix(rows);
         Some((ks, vs))
+    }
+
+    /// Roll both streams back to `rows` positions — speculative-decode
+    /// rollback of rejected draft tokens.
+    pub fn truncate(&mut self, rows: usize) {
+        self.k.truncate(rows);
+        self.v.truncate(rows);
     }
 
     pub fn len(&self) -> usize {
@@ -334,6 +361,34 @@ mod tests {
         store.get(0, &mut out);
         let err = prop::rel_err(&out, &row);
         assert!(err < 0.1, "int4 kv error {err}");
+    }
+
+    #[test]
+    fn truncate_then_repush_matches_a_never_drafted_store() {
+        let mut rng = Rng::new(5);
+        let d = 32;
+        let rows: Vec<Vec<f32>> = (0..8).map(|_| rng.normal_vec_f32(d, 0.0, 1.0)).collect();
+        let mut drafted = Kv4Store::new(d);
+        let mut plain = Kv4Store::new(d);
+        for r in &rows[..5] {
+            drafted.push(r);
+            plain.push(r);
+        }
+        for r in &rows[5..] {
+            drafted.push(r); // speculative rows, all rejected below
+        }
+        drafted.truncate(5);
+        assert_eq!(drafted.len, 5);
+        assert_eq!(drafted.bytes(), plain.bytes(), "rollback frees the draft rows' bytes");
+        drafted.push(&rows[6]);
+        plain.push(&rows[6]);
+        let mut a = vec![0.0f32; d];
+        let mut b = vec![0.0f32; d];
+        for t in 0..6 {
+            drafted.get(t, &mut a);
+            plain.get(t, &mut b);
+            assert_eq!(a, b, "row {t} after rollback + repush");
+        }
     }
 
     #[test]

@@ -812,20 +812,83 @@ impl Transformer {
         tokens: &[u16],
         scratch: &mut PrefillScratch,
     ) -> Vec<f32> {
-        let total = tokens.len();
+        assert!(sess.pos < tokens.len(), "suffix prefill needs at least one uncached token");
+        let t_len = self.prefill_suffix_body(sess, &tokens[sess.pos..], scratch);
+        let d = self.cfg.d_model;
+        // logits only for the last position
+        let mut hn = Tensor::zeros(&[1, d]);
+        rmsnorm(
+            scratch.x.row(t_len - 1),
+            &self.final_norm,
+            self.cfg.rmsnorm_eps,
+            hn.row_mut(0),
+        );
+        crate::kernels::dense::sgemm_wt(&hn, &self.lm_head).data
+    }
+
+    /// [`Self::prefill_suffix_with`] generalized to return logits at
+    /// **every** suffix position, `[suffix.len(), vocab]` — the
+    /// verification forward of speculative decoding. Unlike
+    /// `prefill_suffix_with` it takes only the **uncached suffix** (the
+    /// caller need not reconstruct the full history; the session's
+    /// `pos` rows of cache stand in for it). Row `t` holds the logits
+    /// after consuming the cached context plus `suffix[..t + 1]`, so
+    /// feeding `[last_emitted, d1..dk]` scores all k drafted tokens
+    /// with one batched popcount GEMM per projection: row `t`'s argmax
+    /// is exactly what a plain decode step at that position would emit
+    /// (token-level identical, test-pinned — the layer loop is shared
+    /// code, the only difference is projecting every row of the final
+    /// hidden state instead of the last one).
+    ///
+    /// The session's caches gain one row per suffix token; a verifier
+    /// that rejects draft positions rolls them back with
+    /// [`DecodeSession::truncate`].
+    pub fn prefill_suffix_logits_with(
+        &self,
+        sess: &mut DecodeSession,
+        suffix: &[u16],
+        scratch: &mut PrefillScratch,
+    ) -> Tensor {
+        let t_len = self.prefill_suffix_body(sess, suffix, scratch);
+        // logits for every suffix position — scratch.h is free after the
+        // layer loop, so norm the whole final hidden state into it and
+        // run one [t_len, vocab] GEMM.
+        for t in 0..t_len {
+            rmsnorm(
+                scratch.x.row(t),
+                &self.final_norm,
+                self.cfg.rmsnorm_eps,
+                scratch.h.row_mut(t),
+            );
+        }
+        crate::kernels::dense::sgemm_wt(&scratch.h, &self.lm_head)
+    }
+
+    /// Shared layer loop of the warm suffix forwards: embeds the suffix,
+    /// runs every block (filling the KV caches), advances `sess.pos`,
+    /// and leaves the final hidden states in `scratch.x[..t_len]`.
+    /// Returns `t_len` (the suffix length); the callers differ only in
+    /// which rows they project to logits.
+    fn prefill_suffix_body(
+        &self,
+        sess: &mut DecodeSession,
+        suffix: &[u16],
+        scratch: &mut PrefillScratch,
+    ) -> usize {
         let m = sess.pos;
+        let total = m + suffix.len();
         let d = self.cfg.d_model;
         assert!(total <= self.cfg.max_seq, "sequence longer than max_seq");
-        assert!(m < total, "suffix prefill needs at least one uncached token");
+        assert!(!suffix.is_empty(), "suffix prefill needs at least one uncached token");
         assert!(
             sess.caches.iter().all(|c| c.len() == m),
             "session caches must cover exactly the reused prefix"
         );
-        let t_len = total - m;
+        let t_len = suffix.len();
         scratch.ensure(t_len, d, self.cfg.d_ff);
         let x = &mut scratch.x;
         for t in 0..t_len {
-            x.row_mut(t).copy_from_slice(self.embed.row(tokens[m + t] as usize));
+            x.row_mut(t).copy_from_slice(self.embed.row(suffix[t] as usize));
         }
         // Whole-cache K/V dequantization buffers, reused across layers
         // and (via the worker's scratch) across requests.
@@ -883,15 +946,7 @@ impl Transformer {
             }
         }
         sess.pos = total;
-        // logits only for the last position
-        let mut hn = Tensor::zeros(&[1, d]);
-        rmsnorm(
-            x.row(t_len - 1),
-            &self.final_norm,
-            self.cfg.rmsnorm_eps,
-            hn.row_mut(0),
-        );
-        crate::kernels::dense::sgemm_wt(&hn, &self.lm_head).data
+        t_len
     }
 
     /// Feed one token to **each** of `sessions.len()` independent decode
@@ -1089,6 +1144,22 @@ pub struct DecodeSession {
     pub caches: Vec<LayerKvCache>,
     pub pos: usize,
     scratch: DecodeScratch,
+}
+
+impl DecodeSession {
+    /// Roll the session back to `rows` positions, dropping the KV rows
+    /// past that point from every layer — speculative-decode rollback of
+    /// rejected draft tokens. Paged caches release whole rejected tail
+    /// blocks to their pool; the session then continues decoding from
+    /// `pos == rows` exactly as if the rejected rows were never fed
+    /// (bit-identical, test-pinned).
+    pub fn truncate(&mut self, rows: usize) {
+        assert!(rows <= self.pos, "truncating past the session position");
+        for c in &mut self.caches {
+            c.truncate(rows);
+        }
+        self.pos = rows;
+    }
 }
 
 /// Per-worker scratch for [`Transformer::prefill_with`]: the linear
@@ -1842,6 +1913,103 @@ mod tests {
         drop(warm);
         index.clear(&pool);
         assert_eq!(pool.in_use(), 0, "index clear + session drop releases everything");
+    }
+
+    /// The speculative-verification contract, part 1: the multi-position
+    /// suffix forward returns one logits row per suffix token, row `t`
+    /// agreeing with a plain decode step at the same position (same
+    /// greedy token; the last row is bit-identical to
+    /// `prefill_suffix_with`, which shares the layer loop).
+    #[test]
+    fn suffix_logits_rows_track_decode_steps() {
+        fn argmax(l: &[f32]) -> usize {
+            let mut best = 0;
+            for i in 1..l.len() {
+                if l[i] > l[best] {
+                    best = i;
+                }
+            }
+            best
+        }
+        let model = Transformer::random(&small_cfg(), 31);
+        let prompt: Vec<u16> = vec![3, 9, 27, 1, 40, 12, 7, 33];
+        let cont: Vec<u16> = vec![5, 18, 2, 61];
+        let mut scratch = PrefillScratch::default();
+
+        // reference: plain incremental decode of the continuation
+        let mut ref_sess = model.new_session();
+        let _ = model.prefill(&mut ref_sess, &prompt);
+        let ref_logits: Vec<Vec<f32>> =
+            cont.iter().map(|&t| model.decode_step(&mut ref_sess, t)).collect();
+
+        // verify forward: all continuation rows in one suffix pass
+        let mut spec_sess = model.new_session();
+        let _ = model.prefill(&mut spec_sess, &prompt);
+        let rows = model.prefill_suffix_logits_with(&mut spec_sess, &cont, &mut scratch);
+        assert_eq!(rows.shape, vec![cont.len(), small_cfg().vocab_size]);
+        assert_eq!(spec_sess.pos, prompt.len() + cont.len());
+        for (t, want) in ref_logits.iter().enumerate() {
+            crate::util::prop::assert_close(rows.row(t), want, 1e-3, 1e-3)
+                .unwrap_or_else(|e| panic!("suffix row {t} vs decode step: {e}"));
+            assert_eq!(
+                argmax(rows.row(t)),
+                argmax(want),
+                "greedy token diverged at suffix row {t}"
+            );
+        }
+
+        // last row == the single-logit suffix forward, bit for bit
+        let mut all: Vec<u16> = prompt.clone();
+        all.extend_from_slice(&cont);
+        let mut single = model.new_session();
+        let _ = model.prefill(&mut single, &prompt);
+        let last = model.prefill_suffix_with(&mut single, &all, &mut scratch);
+        assert_eq!(rows.row(cont.len() - 1), &last[..], "last-row projection");
+    }
+
+    /// The speculative-verification contract, part 2: rolling rejected
+    /// draft rows back with [`DecodeSession::truncate`] leaves the
+    /// session decoding exactly like one that never saw them — for both
+    /// cache backings, with the paged pool's block accounting restored.
+    #[test]
+    fn truncate_rolls_back_speculative_rows() {
+        use crate::kvpool::KvPoolConfig;
+        let model = Transformer::random(&small_cfg(), 37);
+        let pool = Arc::new(BlockPool::new(KvPoolConfig {
+            blocks: 256,
+            block_tokens: 5,
+        }));
+        let prompt: Vec<u16> = vec![4, 19, 2, 57, 8, 30, 12];
+        let mut scratch = PrefillScratch::default();
+        for paged in [false, true] {
+            let mk = || {
+                if paged {
+                    model.new_session_paged(&pool)
+                } else {
+                    model.new_session()
+                }
+            };
+            // reference: accept one continuation token, then decode on
+            let mut ref_sess = mk();
+            let _ = model.prefill(&mut ref_sess, &prompt);
+            let _ = model.decode_step(&mut ref_sess, 21);
+            let ref_next = model.decode_step(&mut ref_sess, 44);
+
+            // speculative: feed [21, 9, 50] as a suffix, reject the last
+            // two draft rows, then decode the same token
+            let mut spec = mk();
+            let _ = model.prefill(&mut spec, &prompt);
+            let _ = model.prefill_suffix_logits_with(&mut spec, &[21, 9, 50], &mut scratch);
+            spec.truncate(prompt.len() + 1);
+            assert_eq!(spec.pos, ref_sess.pos - 1);
+            for c in &spec.caches {
+                assert_eq!(c.len(), prompt.len() + 1);
+            }
+            let spec_next = model.decode_step(&mut spec, 44);
+            crate::util::prop::assert_close(&spec_next, &ref_next, 1e-3, 1e-3)
+                .unwrap_or_else(|e| panic!("post-rollback decode (paged={paged}): {e}"));
+        }
+        assert_eq!(pool.in_use(), 0, "rollback + drop must release every block");
     }
 
     #[test]

@@ -112,6 +112,15 @@ impl Sampler {
         self.cfg.stop.contains(&token)
     }
 
+    /// Whether this request selects greedily (see
+    /// [`GenConfig::is_greedy`]). The scheduler's speculative path is
+    /// gated on this: only greedy requests are drafted, because only the
+    /// argmax acceptance rule is provably token-identical to plain
+    /// decode — sampled requests fall back to the single-token step.
+    pub fn is_greedy(&self) -> bool {
+        self.cfg.is_greedy()
+    }
+
     /// Pick the next token from `logits`. Greedy configs return
     /// `argmax(logits)` exactly (first index on ties) and consume no
     /// randomness; sampling configs draw once from the private stream.

@@ -528,6 +528,21 @@ pub fn network_report(stats: &ServerStats) -> String {
             kv.prefix_tokens_reused
         ));
     }
+    if let Some(spec) = &s.spec {
+        // scripts/check.sh greps the `spec accepted:` prefix for a
+        // nonzero count in its --spec-k smoke.
+        r.push_str(&format!(
+            "\nspec accepted: {}/{} draft tokens (rate {:.2}, k={}) over {} verifications\n\
+             tokens/step: {:.2} | accept-len hist {:?}",
+            spec.accepted,
+            spec.drafted,
+            spec.accept_rate(),
+            spec.k,
+            spec.verifications,
+            s.gen_tokens as f64 / s.steps.max(1) as f64,
+            spec.accept_hist,
+        ));
+    }
     r
 }
 
@@ -612,6 +627,36 @@ mod tests {
                 })
                 .collect()
         }
+
+        fn supports_verify(&self) -> bool {
+            true
+        }
+
+        fn verify_batch(
+            &self,
+            sessions: &mut [&mut Vec<u16>],
+            tokens: &[u16],
+            drafts: &[&[u16]],
+        ) -> Vec<Vec<u16>> {
+            sessions
+                .iter_mut()
+                .zip(tokens.iter().zip(drafts.iter()))
+                .map(|(s, (&last, &draft))| {
+                    s.push(last);
+                    let mut emitted = Vec::new();
+                    for &d in draft {
+                        let next = mock_next(s);
+                        emitted.push(next);
+                        if next != d {
+                            return emitted;
+                        }
+                        s.push(d);
+                    }
+                    emitted.push(mock_next(s));
+                    emitted
+                })
+                .collect()
+        }
     }
 
     /// Mock whose prefill blocks on a gate channel, signalling entry —
@@ -655,7 +700,7 @@ mod tests {
         }
     }
 
-    fn start_mock(max_queue: usize, limits: RequestLimits) -> ServerHandle {
+    fn start_mock_spec(max_queue: usize, limits: RequestLimits, spec_k: usize) -> ServerHandle {
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         start(
             listener,
@@ -664,6 +709,7 @@ mod tests {
                 scheduler: SchedulerConfig {
                     max_active: 4,
                     admit: AdmissionPolicy::Eager,
+                    spec_k,
                 },
                 max_queue,
                 limits,
@@ -671,6 +717,10 @@ mod tests {
             },
         )
         .unwrap()
+    }
+
+    fn start_mock(max_queue: usize, limits: RequestLimits) -> ServerHandle {
+        start_mock_spec(max_queue, limits, 0)
     }
 
     #[test]
@@ -694,6 +744,45 @@ mod tests {
         assert_eq!(stats.rejected_busy + stats.rejected_capacity + stats.rejected_bad, 0);
     }
 
+    /// Speculative decoding over the wire: a `--spec-k` server streams
+    /// the exact token sequence a plain server produces — multi-token
+    /// accept steps just deliver their `token` frames in bursts, and the
+    /// `final` frame carries the same sequence. The mock's constant
+    /// stream guarantees nonzero acceptance, so the parity pin is
+    /// exercised, not vacuous.
+    #[test]
+    fn loopback_speculative_stream_matches_plain_serving() {
+        let handle = start_mock_spec(16, test_limits(), 4);
+        let mut client = Client::connect(&handle.addr().to_string()).unwrap();
+        // sum % 31 of an all-zero context stays 0, so prompt [0, 0]
+        // settles into a constant stream the prompt-lookup drafter nails
+        // every step; the other prompts exercise miss-then-hit paths.
+        let prompts: [&[u16]; 3] = [&[0, 0], &[1, 30, 1, 30, 1, 30], &[2, 9, 4]];
+        for (i, prompt) in prompts.iter().enumerate() {
+            let g = client
+                .generate(i as u64, prompt, 12, &GenConfig::default())
+                .unwrap();
+            assert_eq!(g.tokens, mock_reference(prompt, 12), "prompt {i}");
+        }
+        client.shutdown_server().unwrap();
+        let stats = handle.wait();
+        assert_eq!(stats.served, 3);
+        let spec = stats.scheduler.spec.expect("spec stats when --spec-k is on");
+        assert!(spec.accepted > 0, "constant stream must accept drafts");
+        assert!(spec.verifications > 0);
+        assert_eq!(spec.accept_hist.iter().sum::<usize>(), spec.verifications);
+        // Plain decode spends exactly one step per token after the
+        // prefill token (steps + requests == gen_tokens); accepted
+        // drafts push it strictly below.
+        assert!(
+            stats.scheduler.steps + stats.served < stats.scheduler.gen_tokens,
+            "accepted drafts must compress steps ({} steps + {} firsts vs {} tokens)",
+            stats.scheduler.steps,
+            stats.served,
+            stats.scheduler.gen_tokens
+        );
+    }
+
     #[test]
     fn queue_bound_rejects_with_typed_busy_error() {
         let (entered_tx, entered_rx) = mpsc::channel();
@@ -709,6 +798,7 @@ mod tests {
                 scheduler: SchedulerConfig {
                     max_active: 4,
                     admit: AdmissionPolicy::Eager,
+                    spec_k: 0,
                 },
                 max_queue: 1,
                 limits: test_limits(),

@@ -41,6 +41,15 @@ kvout="$(target/release/bwa serve --artifact "$smoke/tiny.bwa" --backend bwa-con
 echo "$kvout"
 echo "$kvout" | grep -E 'prefix hits: [1-9][0-9]*/8' \
   || { echo "expected a nonzero prefix hit rate in the bwa-cont report"; exit 1; }
+# Speculative decoding: prompt-lookup drafting over each session's own
+# tokens, batched verification, greedy-identical output (test-pinned).
+# Greedy streams of the tiny model settle into short cycles well within
+# 40 tokens, so the drafter must land nonzero accepted drafts here.
+specout="$(target/release/bwa serve --artifact "$smoke/tiny.bwa" --backend bwa-cont \
+  --requests 4 --clients 2 --prompt-len 8 --gen 40 --max-active 4 --spec-k 4)"
+echo "$specout"
+echo "$specout" | grep -E 'spec accepted: [1-9][0-9]*/' \
+  || { echo "expected nonzero accepted drafts in the --spec-k report"; exit 1; }
 target/release/bwa eval --artifact "$smoke/tiny.bwa" --quick
 
 echo "== network e2e smoke (serve --listen + client over loopback) =="
@@ -52,7 +61,7 @@ echo "== network e2e smoke (serve --listen + client over loopback) =="
 # the server, whose exit (via `wait`) proves clean shutdown.
 target/release/bwa serve --artifact "$smoke/tiny.bwa" --backend bwa-cont \
   --listen 127.0.0.1:0 --max-active 4 --kv-blocks 256 --block-size 4 \
-  --max-queue 8 > "$smoke/server.log" 2>&1 &
+  --max-queue 8 --spec-k 4 > "$smoke/server.log" 2>&1 &
 server_pid=$!
 addr=""
 for _ in $(seq 1 100); do
@@ -63,11 +72,17 @@ for _ in $(seq 1 100); do
   sleep 0.1
 done
 [ -n "$addr" ] || { echo "server never reported its address"; cat "$smoke/server.log"; exit 1; }
-target/release/bwa client --addr "$addr" --requests 3 --prompt-len 12 --gen 3 \
+# --gen 40: long enough for greedy streams to cycle so the server-side
+# speculative drafter (--spec-k 4 above) lands accepted drafts, while
+# --verify-artifact still pins every streamed token to a local
+# sequential greedy run — speculation over the wire, token-identical.
+target/release/bwa client --addr "$addr" --requests 3 --prompt-len 12 --gen 40 \
   --seed 7 --verify-artifact "$smoke/tiny.bwa" --shutdown
 wait "$server_pid" || { echo "server exited nonzero:"; cat "$smoke/server.log"; exit 1; }
 grep -q 'network serve report' "$smoke/server.log" \
   || { echo "expected the network serve report after shutdown:"; cat "$smoke/server.log"; exit 1; }
+grep -E 'spec accepted: [1-9][0-9]*/' "$smoke/server.log" \
+  || { echo "expected nonzero accepted drafts in the server log:"; cat "$smoke/server.log"; exit 1; }
 
 echo "== cargo doc (rustdoc warnings are errors) =="
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
