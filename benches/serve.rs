@@ -31,6 +31,15 @@
 //! identical, and the record captures `accept_rate`, `tokens_per_step`,
 //! and `speedup_spec_tok_per_s` — the step-compression speculation buys.
 //!
+//! The speculative baseline doubles as the **telemetry-overhead**
+//! probe (under the `obs_overhead` key): the identical spec-off
+//! workload reruns with `obs::set_enabled(true)`, turning on the
+//! kernel-layer counters that sit on the pinned GEMM path. The token
+//! streams are asserted identical (telemetry never touches parity) and
+//! the enabled side must hold at least half the disabled throughput —
+//! a deliberately generous bound that still catches a counter landing
+//! on the hot path by accident.
+//!
 //! A fifth, **network** workload (under the `network` key) puts the
 //! same artifact-loaded model behind the TCP front-end
 //! (`server::start`) and drives it over loopback with concurrent
@@ -38,7 +47,10 @@
 //! **client-observed** TTFT/ITL (request written → `token` frames read
 //! off the socket) alongside the scheduler-observed distributions, so
 //! the wire + front-end overhead of the streaming protocol is a
-//! measured number, not a guess.
+//! measured number, not a guess. The server runs with a live telemetry
+//! registry (`obs::ObsOptions`), and the record's `stage_*_ms` fields
+//! are derived from the registry's stage histograms — the same numbers
+//! a `stats` wire frame would report.
 //!
 //! Results (req/s, generated tok/s, latency percentiles, and the
 //! speedups) are printed and recorded into `BENCH_serve.json` at the
@@ -66,6 +78,7 @@ use bwa_llm::model::checkpoint::Checkpoint;
 use bwa_llm::model::config::ModelConfig;
 use bwa_llm::model::sampling::GenConfig;
 use bwa_llm::model::{quantize_model, Transformer};
+use bwa_llm::obs::{self, LogHistogram, ObsOptions};
 use bwa_llm::quant::BwaQuantizer;
 use bwa_llm::server::{self, Client, RequestLimits, ServerConfig};
 use bwa_llm::util::json::Json;
@@ -142,8 +155,8 @@ fn record(name: &str, stats: &BatcherStats, wall: f64) -> Json {
         ("req_per_s", Json::num(stats.throughput_rps)),
         ("tok_per_s", Json::num(stats.tokens_per_s)),
         ("mean_batch", Json::num(stats.mean_batch)),
-        ("p50_latency_us", Json::num(stats.latency.percentile(0.5))),
-        ("p99_latency_us", Json::num(stats.latency.percentile(0.99))),
+        ("p50_latency_us", Json::num(stats.latency.percentile(0.5).unwrap_or(0.0))),
+        ("p99_latency_us", Json::num(stats.latency.percentile(0.99).unwrap_or(0.0))),
     ])
 }
 
@@ -190,16 +203,16 @@ fn record_continuous_fields(
         ("tok_per_s", Json::num(stats.tokens_per_s)),
         ("mean_active", Json::num(stats.mean_active)),
         ("decode_steps", Json::num(stats.steps as f64)),
-        ("ttft_mean_us", Json::num(stats.ttft.mean())),
-        ("ttft_p50_us", Json::num(stats.ttft.percentile(0.5))),
-        ("ttft_p99_us", Json::num(stats.ttft.percentile(0.99))),
-        ("itl_mean_us", Json::num(stats.itl.mean())),
-        ("itl_p50_us", Json::num(stats.itl.percentile(0.5))),
-        ("itl_p99_us", Json::num(stats.itl.percentile(0.99))),
-        ("queue_wait_p50_us", Json::num(stats.queue_wait.percentile(0.5))),
-        ("queue_wait_p99_us", Json::num(stats.queue_wait.percentile(0.99))),
-        ("p50_latency_us", Json::num(stats.latency.percentile(0.5))),
-        ("p99_latency_us", Json::num(stats.latency.percentile(0.99))),
+        ("ttft_mean_us", Json::num(stats.ttft.mean().unwrap_or(0.0))),
+        ("ttft_p50_us", Json::num(stats.ttft.percentile(0.5).unwrap_or(0.0))),
+        ("ttft_p99_us", Json::num(stats.ttft.percentile(0.99).unwrap_or(0.0))),
+        ("itl_mean_us", Json::num(stats.itl.mean().unwrap_or(0.0))),
+        ("itl_p50_us", Json::num(stats.itl.percentile(0.5).unwrap_or(0.0))),
+        ("itl_p99_us", Json::num(stats.itl.percentile(0.99).unwrap_or(0.0))),
+        ("queue_wait_p50_us", Json::num(stats.queue_wait.percentile(0.5).unwrap_or(0.0))),
+        ("queue_wait_p99_us", Json::num(stats.queue_wait.percentile(0.99).unwrap_or(0.0))),
+        ("p50_latency_us", Json::num(stats.latency.percentile(0.5).unwrap_or(0.0))),
+        ("p99_latency_us", Json::num(stats.latency.percentile(0.99).unwrap_or(0.0))),
     ]
 }
 
@@ -297,7 +310,7 @@ fn main() {
         "{ls_name:<28} {:>7.2} req/s  {:>8.1} tok/s  p99 latency {:>8.0}us",
         ls_stats.throughput_rps,
         ls_stats.tokens_per_s,
-        ls_stats.latency.percentile(0.99),
+        ls_stats.latency.percentile(0.99).unwrap_or(0.0),
     );
 
     let path = art_path.clone();
@@ -317,14 +330,14 @@ fn main() {
         "{ct_name:<28} {:>7.2} req/s  {:>8.1} tok/s  p99 latency {:>8.0}us",
         ct_stats.throughput_rps,
         ct_stats.tokens_per_s,
-        ct_stats.latency.percentile(0.99),
+        ct_stats.latency.percentile(0.99).unwrap_or(0.0),
     );
     println!(
         "  ttft p50 {:.0}us p99 {:.0}us | itl p50 {:.0}us p99 {:.0}us | mean active {:.2}",
-        ct_stats.ttft.percentile(0.5),
-        ct_stats.ttft.percentile(0.99),
-        ct_stats.itl.percentile(0.5),
-        ct_stats.itl.percentile(0.99),
+        ct_stats.ttft.percentile(0.5).unwrap_or(0.0),
+        ct_stats.ttft.percentile(0.99).unwrap_or(0.0),
+        ct_stats.itl.percentile(0.5).unwrap_or(0.0),
+        ct_stats.itl.percentile(0.99).unwrap_or(0.0),
         ct_stats.mean_active,
     );
     let speedup_cont = ct_stats.tokens_per_s / ls_stats.tokens_per_s.max(1e-9);
@@ -450,6 +463,7 @@ fn main() {
                 resp_tx: rtx.clone(),
                 stream_tx: None,
                 cfg: GenConfig::default(),
+                trace: None,
             });
         }
         while sched.step() {}
@@ -494,6 +508,37 @@ fn main() {
     let spec_accepted = sp.accepted;
     let spec_verifications = sp.verifications;
 
+    // --- telemetry overhead: kernel counters off vs on ---
+    // The spec-off run above executed with telemetry disabled (the
+    // process default), so it is the baseline. Rerun the identical
+    // workload with the kernel-layer counters enabled — the only
+    // instruments that sit on the pinned GEMM path — and bound the
+    // slowdown. The 2x bound is deliberately generous (these are
+    // relaxed fetch_adds amortized over whole matmuls) so the assert
+    // documents "no measurable overhead" without flaking on loaded
+    // machines.
+    assert!(!obs::enabled(), "benches must start with telemetry off");
+    let gemm_calls_before = obs::global().kernel.gemm_calls.get();
+    obs::set_enabled(true);
+    let (obs_on_tokens, obs_on_stats, _obs_on_wall) = drive_spec(0);
+    obs::set_enabled(false);
+    assert_eq!(
+        obs_on_tokens, spec_off_tokens,
+        "telemetry must never change the token stream"
+    );
+    let obs_gemm_calls = obs::global().kernel.gemm_calls.get() - gemm_calls_before;
+    assert!(obs_gemm_calls > 0, "enabled run must record kernel GEMM calls");
+    let obs_ratio = obs_on_stats.tokens_per_s / spec_off_stats.tokens_per_s.max(1e-9);
+    assert!(
+        obs_ratio > 0.5,
+        "telemetry-on decode fell below half the telemetry-off speed: {obs_ratio:.2}x"
+    );
+    println!(
+        "== telemetry overhead (kernel counters) ==\n\
+         off {:.1} tok/s | on {:.1} tok/s ({:.2}x, {} gemm calls counted)",
+        spec_off_stats.tokens_per_s, obs_on_stats.tokens_per_s, obs_ratio, obs_gemm_calls,
+    );
+
     // --- network serving: the TCP front-end over loopback ---
     // The same artifact-loaded model behind `server::start`; CLIENTS
     // connections drive the same seeded prompts over real sockets with
@@ -517,6 +562,9 @@ fn main() {
     let limits = RequestLimits::for_model(&cfg, Some(pool));
     let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("bind loopback");
     let path = art_path.clone();
+    // A live per-run registry: the scheduler and front-end record into
+    // it while serving, and the stage_*_ms fields below read it back.
+    let net_obs = ObsOptions::default();
     let t0 = Instant::now();
     let handle = server::start(
         listener,
@@ -529,6 +577,7 @@ fn main() {
             max_queue: NET_MAX_QUEUE,
             limits,
             model: cfg.name.clone(),
+            obs: net_obs.clone(),
         },
     )
     .expect("start server");
@@ -583,16 +632,29 @@ fn main() {
     );
     println!(
         "  client ttft p50 {:.0}us p99 {:.0}us | scheduler ttft p50 {:.0}us p99 {:.0}us",
-        client_ttft.percentile(0.5),
-        client_ttft.percentile(0.99),
-        sched.ttft.percentile(0.5),
-        sched.ttft.percentile(0.99),
+        client_ttft.percentile(0.5).unwrap_or(0.0),
+        client_ttft.percentile(0.99).unwrap_or(0.0),
+        sched.ttft.percentile(0.5).unwrap_or(0.0),
+        sched.ttft.percentile(0.99).unwrap_or(0.0),
     );
-    let ttft_overhead_us = client_ttft.mean() - sched.ttft.mean();
-    let itl_overhead_us = client_itl.mean() - sched.itl.mean();
+    let ttft_overhead_us = client_ttft.mean().unwrap_or(0.0) - sched.ttft.mean().unwrap_or(0.0);
+    let itl_overhead_us = client_itl.mean().unwrap_or(0.0) - sched.itl.mean().unwrap_or(0.0);
     println!(
         "  wire + front-end overhead: ttft {ttft_overhead_us:.0}us, itl {itl_overhead_us:.0}us \
          (client-observed mean minus scheduler-observed mean)"
+    );
+    // Total time in each scheduler stage, read from the telemetry
+    // registry the server ran with (count x exact mean per stage).
+    let stage_ms = |h: &LogHistogram| h.mean_us().unwrap_or(0.0) * h.count() as f64 / 1000.0;
+    let sm = &net_obs.registry.scheduler;
+    println!(
+        "  stage split (registry): admission {:.1}ms | prefill {:.1}ms | decode {:.1}ms | \
+         verify {:.1}ms | emit {:.1}ms",
+        stage_ms(&sm.stage_admission_us),
+        stage_ms(&sm.stage_prefill_us),
+        stage_ms(&sm.stage_decode_us),
+        stage_ms(&sm.stage_verify_us),
+        stage_ms(&sm.stage_emit_us),
     );
 
     let json = Json::obj(vec![
@@ -654,6 +716,15 @@ fn main() {
             ]),
         ),
         (
+            "obs_overhead",
+            Json::obj(vec![
+                ("tok_per_s_disabled", Json::num(spec_off_stats.tokens_per_s)),
+                ("tok_per_s_enabled", Json::num(obs_on_stats.tokens_per_s)),
+                ("enabled_over_disabled", Json::num(obs_ratio)),
+                ("kernel_gemm_calls", Json::num(obs_gemm_calls as f64)),
+            ]),
+        ),
+        (
             "network",
             Json::obj(vec![
                 ("clients", Json::num(CLIENTS as f64)),
@@ -662,17 +733,22 @@ fn main() {
                 ("rejected_busy", Json::num(net_stats.rejected_busy as f64)),
                 ("rejected_capacity", Json::num(net_stats.rejected_capacity as f64)),
                 ("client_tokens", Json::num(net_tokens as f64)),
-                ("client_ttft_mean_us", Json::num(client_ttft.mean())),
-                ("client_ttft_p50_us", Json::num(client_ttft.percentile(0.5))),
-                ("client_ttft_p90_us", Json::num(client_ttft.percentile(0.9))),
-                ("client_ttft_p99_us", Json::num(client_ttft.percentile(0.99))),
-                ("client_itl_mean_us", Json::num(client_itl.mean())),
-                ("client_itl_p50_us", Json::num(client_itl.percentile(0.5))),
-                ("client_itl_p99_us", Json::num(client_itl.percentile(0.99))),
-                ("client_total_p50_us", Json::num(client_total.percentile(0.5))),
-                ("client_total_p99_us", Json::num(client_total.percentile(0.99))),
+                ("client_ttft_mean_us", Json::num(client_ttft.mean().unwrap_or(0.0))),
+                ("client_ttft_p50_us", Json::num(client_ttft.percentile(0.5).unwrap_or(0.0))),
+                ("client_ttft_p90_us", Json::num(client_ttft.percentile(0.9).unwrap_or(0.0))),
+                ("client_ttft_p99_us", Json::num(client_ttft.percentile(0.99).unwrap_or(0.0))),
+                ("client_itl_mean_us", Json::num(client_itl.mean().unwrap_or(0.0))),
+                ("client_itl_p50_us", Json::num(client_itl.percentile(0.5).unwrap_or(0.0))),
+                ("client_itl_p99_us", Json::num(client_itl.percentile(0.99).unwrap_or(0.0))),
+                ("client_total_p50_us", Json::num(client_total.percentile(0.5).unwrap_or(0.0))),
+                ("client_total_p99_us", Json::num(client_total.percentile(0.99).unwrap_or(0.0))),
                 ("ttft_wire_overhead_us", Json::num(ttft_overhead_us)),
                 ("itl_wire_overhead_us", Json::num(itl_overhead_us)),
+                ("stage_admission_ms", Json::num(stage_ms(&sm.stage_admission_us))),
+                ("stage_prefill_ms", Json::num(stage_ms(&sm.stage_prefill_us))),
+                ("stage_decode_ms", Json::num(stage_ms(&sm.stage_decode_us))),
+                ("stage_verify_ms", Json::num(stage_ms(&sm.stage_verify_us))),
+                ("stage_emit_ms", Json::num(stage_ms(&sm.stage_emit_us))),
                 (
                     "scheduler",
                     record_continuous("bwa-cont-net", &net_stats.scheduler, net_wall),

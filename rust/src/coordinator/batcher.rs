@@ -83,6 +83,14 @@ pub struct Request {
     /// exact selection every serve path used before configs existed —
     /// and the lockstep batcher only supports that default.
     pub cfg: GenConfig,
+    /// Lifecycle trace span ([`crate::obs::Trace`]), honored by the
+    /// continuous scheduler: the submitter creates it (carrying its own
+    /// flight-recorder sink), the scheduler marks
+    /// reserved/prefill/first-token/step events, and retirement writes
+    /// one JSONL record. `None` — the default everywhere telemetry is
+    /// off — costs a single branch per mark site. The lockstep batcher
+    /// ignores it.
+    pub trace: Option<crate::obs::Trace>,
 }
 
 #[derive(Clone, Debug)]
@@ -253,6 +261,7 @@ mod tests {
                 resp_tx: rtx.clone(),
                 stream_tx: None,
                 cfg: GenConfig::default(),
+                trace: None,
             })
             .unwrap();
         }
@@ -286,6 +295,7 @@ mod tests {
                 resp_tx: rtx.clone(),
                 stream_tx: None,
                 cfg: GenConfig::default(),
+                trace: None,
             })
             .unwrap();
         }
@@ -321,6 +331,7 @@ mod tests {
                 resp_tx: rtx.clone(),
                 stream_tx: None,
                 cfg: GenConfig::default(),
+                trace: None,
             })
             .unwrap();
         }

@@ -31,32 +31,40 @@ impl Histogram {
         self.samples_us.is_empty()
     }
 
-    pub fn percentile(&self, p: f64) -> f64 {
+    /// Exact percentile (nearest-rank over every recorded sample), or
+    /// `None` for an empty histogram — an absent distribution is not a
+    /// zero-latency one.
+    pub fn percentile(&self, p: f64) -> Option<f64> {
         if self.samples_us.is_empty() {
-            return 0.0;
+            return None;
         }
         let mut s = self.samples_us.clone();
         s.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let idx = ((s.len() - 1) as f64 * p).round() as usize;
-        s[idx]
+        Some(s[idx])
     }
 
-    pub fn mean(&self) -> f64 {
+    /// Mean of every recorded sample; `None` when empty.
+    pub fn mean(&self) -> Option<f64> {
         if self.samples_us.is_empty() {
-            return 0.0;
+            return None;
         }
-        self.samples_us.iter().sum::<f64>() / self.samples_us.len() as f64
+        Some(self.samples_us.iter().sum::<f64>() / self.samples_us.len() as f64)
     }
 
     pub fn report(&self, name: &str) -> String {
-        format!(
-            "{name}: n={} mean={:.0}us p50={:.0}us p90={:.0}us p99={:.0}us",
-            self.len(),
+        match (
             self.mean(),
             self.percentile(0.5),
             self.percentile(0.9),
             self.percentile(0.99),
-        )
+        ) {
+            (Some(mean), Some(p50), Some(p90), Some(p99)) => format!(
+                "{name}: n={} mean={mean:.0}us p50={p50:.0}us p90={p90:.0}us p99={p99:.0}us",
+                self.len(),
+            ),
+            _ => format!("{name}: n=0"),
+        }
     }
 }
 
@@ -198,8 +206,16 @@ pub struct SchedulerStats {
     /// token (queueing + admission + prefill). One sample per request
     /// with `gen >= 1`.
     pub ttft: Histogram,
-    /// Inter-token latency: gap between consecutive token emissions of
-    /// one request. `gen - 1` samples per request.
+    /// Inter-token latency, defined as inter-*step* latency: one sample
+    /// per slot per decode step, measuring the gap since that slot's
+    /// previous emission instant. Under plain decode every step emits
+    /// exactly one token, so this is the classic per-token gap
+    /// (`gen - 1` samples per request); under speculative decoding a
+    /// verification step can emit several tokens *at one instant*, and
+    /// that burst is one sample — not `k` zero-length gaps that would
+    /// silently deflate the mean/p99 (identity:
+    /// `itl.len() == Σ per-step active-slot count`; see
+    /// docs/SCHEDULING.md).
     pub itl: Histogram,
     /// Submission → final response (the whole request lifetime).
     pub latency: Histogram,
@@ -287,7 +303,7 @@ mod tests {
         }
         assert!(h.percentile(0.5) <= h.percentile(0.9));
         assert!(h.percentile(0.9) <= h.percentile(0.99));
-        assert!((h.percentile(0.5) - 50.0).abs() <= 2.0);
+        assert!((h.percentile(0.5).unwrap() - 50.0).abs() <= 2.0);
         assert_eq!(h.len(), 100);
     }
 
@@ -301,15 +317,41 @@ mod tests {
         }
         a.merge(&b);
         assert_eq!(a.len(), 20);
-        assert!(a.percentile(0.99) >= 100.0, "merged tail comes from b");
+        assert!(a.percentile(0.99).unwrap() >= 100.0, "merged tail comes from b");
         assert_eq!(b.len(), 10, "merge must not consume the source");
     }
 
     #[test]
-    fn empty_histogram_is_zero() {
+    fn empty_histogram_answers_none_not_zero() {
         let h = Histogram::default();
-        assert_eq!(h.percentile(0.5), 0.0);
-        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.percentile(0.5), None);
+        assert_eq!(h.percentile(0.99), None);
+        assert_eq!(h.mean(), None);
+        assert_eq!(h.report("empty"), "empty: n=0");
+    }
+
+    #[test]
+    fn single_sample_is_every_percentile() {
+        let mut h = Histogram::default();
+        h.record(Duration::from_micros(250));
+        for p in [0.0, 0.5, 0.9, 0.99, 1.0] {
+            assert_eq!(h.percentile(p), Some(250.0), "p{p}");
+        }
+        assert_eq!(h.mean(), Some(250.0));
+    }
+
+    #[test]
+    fn merging_an_empty_histogram_changes_nothing() {
+        let mut a = Histogram::default();
+        a.record(Duration::from_micros(40));
+        let empty = Histogram::default();
+        a.merge(&empty);
+        assert_eq!(a.len(), 1);
+        assert_eq!(a.percentile(0.5), Some(40.0));
+        // and merging *into* an empty one adopts the source's samples
+        let mut e = Histogram::default();
+        e.merge(&a);
+        assert_eq!(e.percentile(0.99), Some(40.0));
     }
 
     #[test]

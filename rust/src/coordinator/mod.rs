@@ -59,18 +59,20 @@ pub mod speculative;
 
 use crate::coordinator::batcher::{run_batcher, Backend, BatcherConfig, BatcherStats, Request};
 use crate::coordinator::metrics::SchedulerStats;
-use crate::coordinator::scheduler::{run_scheduler, SchedulerConfig, SessionBackend};
+use crate::coordinator::scheduler::{run_scheduler_obs, SchedulerConfig, SessionBackend};
 use crate::data::corpus::CorpusSpec;
 use crate::kvpool::KvPoolConfig;
 use crate::model::checkpoint::Checkpoint;
 use crate::model::sampling::GenConfig;
 use crate::model::Transformer;
+use crate::obs::{FlightRecorder, ObsOptions, Trace};
 use crate::util::cli::{Args, Spec};
 use crate::util::rng::Rng;
 pub use engine::ParallelBackend;
 pub use scheduler::TransformerBackend;
 use std::path::Path;
 use std::sync::mpsc;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Native (in-process Rust) backend over any Transformer.
@@ -139,6 +141,10 @@ pub static SERVE_SPEC: Spec = Spec {
         ("listen", "", "serve over TCP on this address (e.g. 127.0.0.1:8491) instead of \
           driving the synthetic workload; bwa-cont only — see docs/PROTOCOL.md"),
         ("max-queue", "64", "network serve: queued-request bound before busy rejection"),
+        ("trace-out", "", "bwa-cont: write one JSONL lifecycle record per request to this \
+          file (size-rotated flight recorder — docs/OBSERVABILITY.md)"),
+        ("stats-every", "0", "bwa-cont: print a `stats: {json}` snapshot line every N \
+          scheduler steps (0 = off)"),
     ],
     switches: &[],
 };
@@ -189,6 +195,14 @@ pub fn cmd_serve(args: &Args) -> Result<(), String> {
     if spec_k > 0 && backend_kind != "bwa-cont" {
         return Err(format!(
             "--spec-k requires --backend bwa-cont (the continuous scheduler); got '{backend_kind}'"
+        ));
+    }
+    let trace_out = args.str_or("trace-out", "").to_string();
+    let stats_every = args.usize_or("stats-every", 0).map_err(|e| e.to_string())?;
+    if (!trace_out.is_empty() || stats_every > 0) && backend_kind != "bwa-cont" {
+        return Err(format!(
+            "--trace-out / --stats-every require --backend bwa-cont (the instrumented \
+             scheduler); got '{backend_kind}'"
         ));
     }
     let stagger_us = args.u64_or("stagger-us", 0).map_err(|e| e.to_string())?;
@@ -328,6 +342,23 @@ pub fn cmd_serve(args: &Args) -> Result<(), String> {
             pool_cfg.blocks, pool_cfg.block_tokens, model.cfg.n_layers
         );
         let scfg = SchedulerConfig { max_active, admit, spec_k };
+        // Telemetry: the serve process records into the process-global
+        // registry (so kernel and KV-pool counters land in the same
+        // snapshot as the scheduler's), optionally with a flight
+        // recorder for per-request JSONL traces.
+        let recorder = if trace_out.is_empty() {
+            None
+        } else {
+            let rec = FlightRecorder::create(Path::new(&trace_out), 0)
+                .map_err(|e| format!("--trace-out {trace_out}: {e}"))?;
+            Some(Arc::new(rec))
+        };
+        crate::obs::set_enabled(true);
+        let obs = ObsOptions {
+            registry: crate::obs::global_arc(),
+            stats_every,
+            recorder,
+        };
         if !listen.is_empty() {
             // Network front-end: expose the scheduler over TCP instead
             // of driving the synthetic workload (docs/PROTOCOL.md).
@@ -338,9 +369,10 @@ pub fn cmd_serve(args: &Args) -> Result<(), String> {
                 pool_cfg,
                 scfg,
                 max_queue,
+                obs,
             );
         }
-        let (name, stats, wall) = serve_continuous_load(
+        let (name, stats, wall) = serve_continuous_load_obs(
             move || {
                 TransformerBackend::with_kv_pool(
                     model,
@@ -351,6 +383,7 @@ pub fn cmd_serve(args: &Args) -> Result<(), String> {
             },
             &load,
             scfg,
+            obs,
         );
         println!("{}", continuous_report(&name, &load, &stats, wall));
         return Ok(());
@@ -467,6 +500,22 @@ where
     T: Send,
     FS: FnOnce(mpsc::Receiver<Request>) -> T + Send,
 {
+    drive_workload_traced(load, None, server)
+}
+
+/// [`drive_workload`] with an optional flight-recorder sink: when set,
+/// every synthetic request carries a [`Trace`] and retires into one
+/// JSONL record — the in-process equivalent of the network front-end's
+/// `--trace-out` wiring.
+fn drive_workload_traced<T, FS>(
+    load: &Workload,
+    recorder: Option<Arc<FlightRecorder>>,
+    server: FS,
+) -> (T, f64)
+where
+    T: Send,
+    FS: FnOnce(mpsc::Receiver<Request>) -> T + Send,
+{
     let (tx, rx) = mpsc::channel::<Request>();
     let t0 = Instant::now();
     let out = std::thread::scope(|s| {
@@ -480,6 +529,7 @@ where
         let remainder = load.requests % clients;
         for c in 0..load.clients {
             let tx = tx.clone();
+            let recorder = recorder.clone();
             let n_mine = per_client + usize::from(c < remainder);
             let id_base = c * per_client + c.min(remainder);
             let load = *load;
@@ -493,14 +543,16 @@ where
                     if i > 0 && !load.stagger.is_zero() {
                         std::thread::sleep(load.stagger);
                     }
+                    let id = (id_base + i) as u64;
                     tx.send(Request {
-                        id: (id_base + i) as u64,
+                        id,
                         tokens,
                         gen: load.gen,
                         submitted: Instant::now(),
                         resp_tx: rtx.clone(),
                         stream_tx: None,
                         cfg: GenConfig::default(),
+                        trace: recorder.as_ref().map(|r| Trace::new(Arc::clone(r), id)),
                     })
                     .expect("server alive");
                     // closed loop: wait for the response before next req
@@ -534,9 +586,10 @@ where
 }
 
 /// Run `load` through the continuous-batching scheduler
-/// ([`run_scheduler`]) — the `bwa-cont` serve path. Returns
-/// `(backend name, stats, wall seconds)`; [`SchedulerStats`] adds
-/// per-token TTFT/ITL on top of the batcher's request-level numbers.
+/// ([`run_scheduler_obs`] with default telemetry) — the `bwa-cont`
+/// serve path. Returns `(backend name, stats, wall seconds)`;
+/// [`SchedulerStats`] adds per-token TTFT/ITL on top of the batcher's
+/// request-level numbers.
 pub fn serve_continuous_load<B, F>(
     make_backend: F,
     load: &Workload,
@@ -546,9 +599,28 @@ where
     B: SessionBackend,
     F: FnOnce() -> B + Send,
 {
-    let ((name, stats), wall) = drive_workload(load, move |rx| {
+    serve_continuous_load_obs(make_backend, load, cfg, ObsOptions::default())
+}
+
+/// [`serve_continuous_load`] with explicit telemetry wiring: the
+/// scheduler records into `obs.registry`, every request carries a trace
+/// span when `obs.recorder` is set, and `obs.stats_every` prints
+/// periodic snapshot lines — what `bwa serve --backend bwa-cont
+/// --trace-out/--stats-every` runs.
+pub fn serve_continuous_load_obs<B, F>(
+    make_backend: F,
+    load: &Workload,
+    cfg: SchedulerConfig,
+    obs: ObsOptions,
+) -> (String, SchedulerStats, f64)
+where
+    B: SessionBackend,
+    F: FnOnce() -> B + Send,
+{
+    let recorder = obs.recorder.clone();
+    let ((name, stats), wall) = drive_workload_traced(load, recorder, move |rx| {
         let backend = make_backend();
-        (backend.name(), run_scheduler(rx, &backend, cfg))
+        (backend.name(), run_scheduler_obs(rx, &backend, cfg, obs))
     });
     (name, stats, wall)
 }

@@ -21,9 +21,16 @@
 //!   sessions retire immediately, freeing their slot for the next
 //!   admission instead of idling until the batch drains.
 //!
-//! Time-to-first-token and inter-token latency are recorded per token
-//! into [`SchedulerStats`] (see `docs/SCHEDULING.md` for the precise
-//! clock definitions). Output is **bit-identical per sequence** to the
+//! Time-to-first-token is recorded per request and inter-step latency
+//! (ITL) once per participating slot per decode step — all tokens a
+//! multi-token speculative step emits arrive *together*, so the step
+//! gap is the only real latency (see `docs/SCHEDULING.md` for the
+//! precise clock definitions and the identity `itl samples ==
+//! slot-step participations`). Every counter also lands in the run's
+//! [`Registry`](crate::obs::Registry) ([`Scheduler::with_obs`]), which
+//! the `stats` wire command snapshots live and [`Scheduler::finish`]
+//! reads back — report and snapshot share one source of truth. Output
+//! is **bit-identical per sequence** to the
 //! lockstep engine and to sequential `prefill` + `decode_step`, because
 //! every GEMM/norm/attention row of a batched decode step is computed
 //! independently — admission order changes *when* a token is computed,
@@ -142,6 +149,7 @@
 //!     resp_tx: rtx.clone(),
 //!     stream_tx: None,
 //!     cfg: GenConfig::default(),
+//!     trace: None,
 //! };
 //!
 //! sched.submit(req(0, vec![1, 2, 3], 4));
@@ -170,11 +178,12 @@ use super::speculative::PromptLookupDrafter;
 use crate::kvpool::{BlockPool, KvPoolConfig, PrefixIndex, PrefixMatch};
 use crate::model::sampling::Sampler;
 use crate::model::{DecodeSession, PrefillScratch, Transformer};
+use crate::obs::{ObsOptions, Trace};
 use crate::util::argmax;
 use std::collections::VecDeque;
 use std::sync::mpsc::{Receiver, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// When queued requests may enter the slot pool.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -498,6 +507,9 @@ impl TransformerBackend {
                 if matched.rows > 0 {
                     counters.hits += 1;
                     counters.tokens_reused += matched.rows;
+                    if crate::obs::enabled() {
+                        crate::obs::global().kvpool.prefix_hits.incr(1);
+                    }
                 }
                 sessions.push(self.model.new_session_from_prefix(&kv.pool, matched));
             }
@@ -705,6 +717,9 @@ struct Slot<S> {
     last_emit: Instant,
     resp_tx: Sender<Response>,
     stream_tx: Option<Sender<StreamEvent>>,
+    /// Lifecycle trace span carried over from the request; marked at
+    /// the stage boundaries and written out at retirement.
+    trace: Option<Trace>,
     /// Prompt-lookup drafter ([`super::speculative`]); `Some` only when
     /// the scheduler runs with `spec_k > 0` against a
     /// verification-capable backend *and* this request decodes greedily
@@ -737,18 +752,30 @@ pub struct Scheduler<'a, B: SessionBackend> {
     /// dilute the reported rates.
     started: Instant,
     last_retire: Instant,
-    gen_tokens: usize,
-    steps: usize,
-    active_sum: usize,
-    retired: usize,
-    stop_hits: usize,
-    /// Speculative-decoding counters; `Some` iff `cfg.spec_k > 0` and
-    /// the backend supports verification.
+    /// Telemetry wiring: the registry is the *only* home of the
+    /// scheduler's scalar counters (steps, tokens, requests, ...) —
+    /// [`finish`](Self::finish) reads them back, so the end-of-run
+    /// report and a live `stats` snapshot can never disagree.
+    obs: ObsOptions,
+    /// Speculative-decoding accept histogram; `Some` iff `cfg.spec_k >
+    /// 0` and the backend supports verification. The scalar spec
+    /// counters live in the registry.
     spec: Option<SpecStats>,
 }
 
 impl<'a, B: SessionBackend> Scheduler<'a, B> {
+    /// Scheduler with a fresh, isolated telemetry registry (the right
+    /// default for tests and library callers).
     pub fn new(backend: &'a B, cfg: SchedulerConfig) -> Self {
+        Self::with_obs(backend, cfg, ObsOptions::default())
+    }
+
+    /// Scheduler recording into the caller's registry — the serve
+    /// binary passes [`crate::obs::global_arc`] so kernel, KV-pool,
+    /// scheduler, and server metrics land in one snapshot. A nonzero
+    /// `obs.stats_every` prints a `stats: {json}` snapshot line every N
+    /// decode steps.
+    pub fn with_obs(backend: &'a B, cfg: SchedulerConfig, obs: ObsOptions) -> Self {
         assert!(cfg.max_active >= 1, "scheduler needs at least one slot");
         let now = Instant::now();
         Self {
@@ -762,11 +789,7 @@ impl<'a, B: SessionBackend> Scheduler<'a, B> {
             queue_wait: Histogram::default(),
             started: now,
             last_retire: now,
-            gen_tokens: 0,
-            steps: 0,
-            active_sum: 0,
-            retired: 0,
-            stop_hits: 0,
+            obs,
             spec: if cfg.spec_k > 0 && backend.supports_verify() {
                 Some(SpecStats::new(cfg.spec_k))
             } else {
@@ -815,6 +838,7 @@ impl<'a, B: SessionBackend> Scheduler<'a, B> {
             // first request that does not fit holds everything behind
             // it — retirements (and cache eviction inside try_reserve)
             // free capacity at later boundaries.
+            let t_stage = Instant::now();
             let max_new = self.cfg.max_active - self.active.len();
             let mut batch: Vec<Request> = Vec::new();
             while batch.len() < max_new {
@@ -825,16 +849,25 @@ impl<'a, B: SessionBackend> Scheduler<'a, B> {
                 batch.push(self.queue.pop_front().expect("checked front"));
             }
             let t_admit = Instant::now();
-            for r in &batch {
+            for r in &mut batch {
                 self.queue_wait.record(t_admit - r.submitted);
+                self.obs.registry.scheduler.queue_wait_us.record(t_admit - r.submitted);
+                if let Some(tr) = &mut r.trace {
+                    tr.mark_reserved(t_admit);
+                }
             }
             let prompts: Vec<&[u16]> = batch.iter().map(|r| r.tokens.as_slice()).collect();
             let gens: Vec<usize> = batch.iter().map(|r| r.gen).collect();
             let mut samplers: Vec<Sampler> = batch.iter().map(|r| r.cfg.sampler()).collect();
+            let mut prefill_d = Duration::ZERO;
             let prefilled = if batch.is_empty() {
                 Vec::new()
             } else {
-                self.backend.prefill_batch_sampled(&prompts, &gens, &mut samplers)
+                let t0 = Instant::now();
+                let out = self.backend.prefill_batch_sampled(&prompts, &gens, &mut samplers);
+                prefill_d = t0.elapsed();
+                self.obs.registry.scheduler.stage_prefill_us.record(prefill_d);
+                out
             };
             debug_assert_eq!(prefilled.len(), batch.len());
             // The in-flight set at this boundary: everything already
@@ -864,18 +897,26 @@ impl<'a, B: SessionBackend> Scheduler<'a, B> {
                     last_emit: now,
                     resp_tx: req.resp_tx,
                     stream_tx: req.stream_tx,
+                    trace: req.trace,
                     drafter,
                 };
+                if let Some(tr) = &mut slot.trace {
+                    tr.mark_prefill(now);
+                }
                 if slot.gen > 0 {
                     // prefill produced the first token: TTFT stops here
                     self.ttft.record(now - slot.submitted);
+                    self.obs.registry.scheduler.ttft_us.record(now - slot.submitted);
+                    if let Some(tr) = &mut slot.trace {
+                        tr.mark_first_token(now);
+                    }
                     slot.generated.push(first);
                     if let Some(dr) = &mut slot.drafter {
                         dr.push(first);
                     }
-                    self.gen_tokens += 1;
+                    self.obs.registry.scheduler.gen_tokens.incr(1);
                     if slot.sampler.is_stop(first) {
-                        self.stop_hits += 1;
+                        self.obs.registry.scheduler.stop_hits.incr(1);
                         slot.finished = true;
                     }
                     if slot.generated.len() >= slot.gen {
@@ -898,12 +939,21 @@ impl<'a, B: SessionBackend> Scheduler<'a, B> {
                     self.active.push(slot);
                 }
             }
+            // Admission bookkeeping time = the whole block minus the
+            // prefill call it wraps (prefill has its own stage).
+            let d = t_stage.elapsed().saturating_sub(prefill_d);
+            self.obs.registry.scheduler.stage_admission_us.record(d);
         }
 
         // --- one batched decode step over the ragged active set ---
         if !self.active.is_empty() {
-            self.steps += 1;
-            self.active_sum += self.active.len();
+            {
+                let m = &self.obs.registry.scheduler;
+                m.steps.incr(1);
+                m.slot_steps.incr(self.active.len() as u64);
+                m.active_slots.set(self.active.len() as i64);
+                m.queue_depth.set(self.queue.len() as i64);
+            }
             let tokens: Vec<u16> = self
                 .active
                 .iter()
@@ -955,8 +1005,10 @@ impl<'a, B: SessionBackend> Scheduler<'a, B> {
                     idxs.push(i);
                 }
                 if !sessions.is_empty() {
+                    let t0 = Instant::now();
                     let out =
                         self.backend.decode_batch_sampled(&mut sessions, &toks, &mut samplers);
+                    self.obs.registry.scheduler.stage_decode_us.record(t0.elapsed());
                     debug_assert_eq!(out.len(), idxs.len());
                     for (j, &i) in idxs.iter().enumerate() {
                         next[i].push(out[j]);
@@ -981,39 +1033,47 @@ impl<'a, B: SessionBackend> Scheduler<'a, B> {
                     idxs.push(i);
                 }
                 if !sessions.is_empty() {
+                    let t0 = Instant::now();
                     let emitted = self.backend.verify_batch(&mut sessions, &toks, &dlist);
+                    self.obs.registry.scheduler.stage_verify_us.record(t0.elapsed());
+                    let m = &self.obs.registry.scheduler;
                     debug_assert_eq!(emitted.len(), idxs.len());
                     let spec = self.spec.as_mut().expect("drafts exist only with spec on");
                     for (j, &i) in idxs.iter().enumerate() {
                         debug_assert!(!emitted[j].is_empty(), "verify emits at least one token");
                         let accepted = emitted[j].len() - 1;
                         debug_assert!(accepted <= dlist[j].len());
-                        spec.drafted += dlist[j].len();
-                        spec.accepted += accepted;
-                        spec.verifications += 1;
+                        m.spec_drafted.incr(dlist[j].len() as u64);
+                        m.spec_accepted.incr(accepted as u64);
+                        m.spec_verifications.incr(1);
                         spec.accept_hist[accepted] += 1;
                         next[i] = emitted[j].clone();
                     }
                 }
             }
-            // In-order emission: every token a step produced streams with
-            // its own index; all tokens of one step share one emission
-            // instant (the first carries the step's ITL gap, the rest
-            // land at ~0 — they genuinely arrived together). Tokens past
-            // a stop or the `gen` budget are discarded unsent.
+            // In-order emission: every token a step produced streams
+            // with its own index; all tokens of one step share one
+            // emission instant — they genuinely arrived together, so
+            // ITL is recorded once per slot per step (the *inter-step*
+            // gap), not once per token. Tokens past a stop or the `gen`
+            // budget are discarded unsent.
             let now = Instant::now();
             for (slot, toks) in self.active.iter_mut().zip(next.iter()) {
                 debug_assert!(!toks.is_empty(), "every active slot stepped");
+                let gap = now - slot.last_emit;
+                self.itl.record(gap);
+                self.obs.registry.scheduler.itl_us.record(gap);
+                slot.last_emit = now;
+                let mut emitted = 0usize;
                 for &tok in toks {
-                    self.itl.record(now - slot.last_emit);
-                    slot.last_emit = now;
                     slot.generated.push(tok);
+                    emitted += 1;
                     if let Some(dr) = &mut slot.drafter {
                         dr.push(tok);
                     }
-                    self.gen_tokens += 1;
+                    self.obs.registry.scheduler.gen_tokens.incr(1);
                     if slot.sampler.is_stop(tok) {
-                        self.stop_hits += 1;
+                        self.obs.registry.scheduler.stop_hits.incr(1);
                         slot.finished = true;
                     }
                     if slot.generated.len() >= slot.gen {
@@ -1031,6 +1091,9 @@ impl<'a, B: SessionBackend> Scheduler<'a, B> {
                         break;
                     }
                 }
+                if let Some(tr) = &mut slot.trace {
+                    tr.mark_step(now, emitted);
+                }
             }
             // --- immediate retirement: free slots without draining ---
             // Every request finishing on this step shared the same
@@ -1046,6 +1109,14 @@ impl<'a, B: SessionBackend> Scheduler<'a, B> {
                     i += 1;
                 }
             }
+            self.obs.registry.scheduler.stage_emit_us.record(now.elapsed());
+            if self.obs.stats_every > 0 {
+                let n = self.obs.registry.scheduler.steps.get();
+                if n % self.obs.stats_every as u64 == 0 {
+                    let snap = self.obs.registry.snapshot().to_string();
+                    println!("stats: {snap}");
+                }
+            }
             progressed = true;
         }
 
@@ -1054,9 +1125,14 @@ impl<'a, B: SessionBackend> Scheduler<'a, B> {
 
     fn retire(&mut self, slot: Slot<B::Session>, in_flight: usize) {
         let lat = slot.submitted.elapsed();
+        let now = Instant::now();
         self.latency.record(lat);
-        self.retired += 1;
-        self.last_retire = Instant::now();
+        self.obs.registry.scheduler.latency_us.record(lat);
+        self.obs.registry.scheduler.requests.incr(1);
+        self.last_retire = now;
+        if let Some(trace) = slot.trace {
+            trace.finish(now, slot.generated.len());
+        }
         let next = slot.generated.first().copied().unwrap_or(0);
         let _ = slot.resp_tx.send(Response {
             id: slot.id,
@@ -1076,20 +1152,42 @@ impl<'a, B: SessionBackend> Scheduler<'a, B> {
         // run_scheduler may have sat idle on an open channel after the
         // last response, and that wait must not dilute the rates).
         let window = self.last_retire.duration_since(self.started).as_secs_f64().max(1e-9);
+        // Scalar counters are read back from the registry — the report
+        // below and any `stats` snapshot taken mid-run share exactly
+        // one set of accumulators.
+        let (steps, retired, gen_tokens, slot_steps, stop_hits) = {
+            let m = &self.obs.registry.scheduler;
+            (
+                m.steps.get() as usize,
+                m.requests.get() as usize,
+                m.gen_tokens.get() as usize,
+                m.slot_steps.get() as usize,
+                m.stop_hits.get() as usize,
+            )
+        };
+        let spec = {
+            let m = &self.obs.registry.scheduler;
+            self.spec.map(|mut sp| {
+                sp.drafted = m.spec_drafted.get() as usize;
+                sp.accepted = m.spec_accepted.get() as usize;
+                sp.verifications = m.spec_verifications.get() as usize;
+                sp
+            })
+        };
         SchedulerStats {
-            mean_active: self.active_sum as f64 / self.steps.max(1) as f64,
+            mean_active: slot_steps as f64 / steps.max(1) as f64,
             ttft: self.ttft,
             itl: self.itl,
             latency: self.latency,
             queue_wait: self.queue_wait,
-            requests: self.retired,
-            gen_tokens: self.gen_tokens,
-            steps: self.steps,
-            throughput_rps: self.retired as f64 / window,
-            tokens_per_s: self.gen_tokens as f64 / window,
-            stop_hits: self.stop_hits,
+            requests: retired,
+            gen_tokens,
+            steps,
+            throughput_rps: retired as f64 / window,
+            tokens_per_s: gen_tokens as f64 / window,
+            stop_hits,
             kv: self.backend.kv_stats(),
-            spec: self.spec,
+            spec,
         }
     }
 }
@@ -1108,7 +1206,19 @@ pub fn run_scheduler<B: SessionBackend>(
     backend: &B,
     cfg: SchedulerConfig,
 ) -> SchedulerStats {
-    let mut sched = Scheduler::new(backend, cfg);
+    run_scheduler_obs(rx, backend, cfg, ObsOptions::default())
+}
+
+/// [`run_scheduler`] recording into the caller's telemetry wiring —
+/// the network server passes its registry (and `--stats-every`) here so
+/// the serve loop and any live `stats` snapshot share one registry.
+pub fn run_scheduler_obs<B: SessionBackend>(
+    rx: Receiver<Request>,
+    backend: &B,
+    cfg: SchedulerConfig,
+    obs: ObsOptions,
+) -> SchedulerStats {
+    let mut sched = Scheduler::with_obs(backend, cfg, obs);
     let mut open = true;
     loop {
         // opportunistic, non-blocking drain at the step boundary
@@ -1228,6 +1338,7 @@ mod tests {
             resp_tx: rtx.clone(),
             stream_tx: None,
             cfg: GenConfig::default(),
+            trace: None,
         }
     }
 
@@ -1338,7 +1449,7 @@ mod tests {
         assert_eq!(
             stats.itl.len(),
             gens.iter().map(|g| g - 1).sum::<usize>(),
-            "gen - 1 inter-token gaps per request"
+            "plain decode: one inter-step ITL sample per slot per step = gen - 1 per request"
         );
     }
 
@@ -1398,6 +1509,7 @@ mod tests {
             resp_tx: rtx,
             stream_tx: Some(stx),
             cfg: GenConfig::default(),
+            trace: None,
         });
         while sched.step() {}
         let resp = rrx.try_recv().expect("final response");
@@ -1654,6 +1766,7 @@ mod tests {
                 resp_tx: rtx.clone(),
                 stream_tx: None,
                 cfg: GenConfig::default(),
+                trace: None,
             })
             .unwrap();
         }
@@ -1713,6 +1826,7 @@ mod tests {
                 resp_tx: rtx,
                 stream_tx: None,
                 cfg,
+                trace: None,
             });
             while sched.step() {}
             sched.finish();
@@ -1795,6 +1909,7 @@ mod tests {
                 stop: vec![stop],
                 ..GenConfig::default()
             },
+            trace: None,
         });
         while sched.step() {}
         let stats = sched.finish();
@@ -2022,6 +2137,7 @@ mod tests {
                 stop: vec![8],
                 ..GenConfig::default()
             },
+            trace: None,
         });
         while sched.step() {}
         let stats = sched.finish();
@@ -2043,9 +2159,10 @@ mod tests {
 
     /// The stream-event contract survives multi-token steps: a fully
     /// accepting workload (constant-zero mock stream) emits several
-    /// tokens per step, yet events arrive with consecutive indices, one
-    /// ITL sample per token gap, and strictly fewer decode steps than
-    /// plain decode would need.
+    /// tokens per step, yet events arrive with consecutive indices, ITL
+    /// records one *inter-step* sample per slot per step (a multi-token
+    /// accept is one arrival, not several), and strictly fewer decode
+    /// steps than plain decode would need.
     #[test]
     fn multi_token_accept_steps_keep_the_stream_contract() {
         let backend = MockBackend;
@@ -2066,6 +2183,7 @@ mod tests {
             resp_tx: rtx,
             stream_tx: Some(stx),
             cfg: GenConfig::default(),
+            trace: None,
         });
         while sched.step() {}
         let stats = sched.finish();
@@ -2080,7 +2198,19 @@ mod tests {
         }
         let streamed: Vec<u16> = events.iter().map(|e| e.token).collect();
         assert_eq!(streamed, resp.generated);
-        assert_eq!(stats.itl.len(), gen - 1, "one ITL sample per gap, even intra-step");
+        // The ITL identity under speculation: one sample per slot per
+        // step (max_active = 1, so exactly `steps` samples) — NOT one
+        // per token, which would fabricate ~0us gaps for tokens that
+        // arrived together in one accepted batch.
+        assert_eq!(
+            stats.itl.len(),
+            stats.steps,
+            "ITL is inter-step: one sample per participating slot per step"
+        );
+        assert!(
+            stats.itl.len() < gen - 1,
+            "multi-token accepts must yield fewer ITL samples than token gaps"
+        );
         assert_eq!(stats.ttft.len(), 1);
         let sp = stats.spec.expect("spec stats");
         assert!(sp.accepted > 0, "the constant stream must accept drafts");
@@ -2123,6 +2253,7 @@ mod tests {
                 resp_tx: rtx,
                 stream_tx: None,
                 cfg: sampled_cfg.clone(),
+                trace: None,
             });
             while sched.step() {}
             let stats = sched.finish();
@@ -2289,5 +2420,99 @@ mod tests {
                 );
             }
         }
+    }
+
+    /// The single-source-of-truth pin: a registry snapshot taken after
+    /// the run and the end-of-run stats agree exactly on every scalar
+    /// counter, because `finish()` reads them back from the same
+    /// registry the `stats` wire command snapshots.
+    #[test]
+    fn registry_snapshot_matches_the_end_of_run_stats_exactly() {
+        let registry = Arc::new(crate::obs::Registry::new());
+        let obs = ObsOptions {
+            registry: Arc::clone(&registry),
+            stats_every: 0,
+            recorder: None,
+        };
+        let backend = MockBackend;
+        let cfg = SchedulerConfig {
+            max_active: 3,
+            admit: AdmissionPolicy::Eager,
+            spec_k: 2,
+        };
+        let mut sched = Scheduler::with_obs(&backend, cfg, obs);
+        let (rtx, rrx) = mpsc::channel();
+        for i in 0..6u64 {
+            sched.submit(req(i, vec![i as u16 + 1, 2], 1 + i as usize % 4, &rtx));
+        }
+        while sched.step() {}
+        let stats = sched.finish();
+        drop(rtx);
+        assert_eq!(rrx.try_iter().count(), 6);
+        let snap = registry.snapshot();
+        let counters = snap.get("counters");
+        let n = |name: &str| counters.get(name).as_usize().unwrap();
+        assert_eq!(n("scheduler.requests"), stats.requests);
+        assert_eq!(n("scheduler.gen_tokens"), stats.gen_tokens);
+        assert_eq!(n("scheduler.steps"), stats.steps);
+        assert_eq!(n("scheduler.stop_hits"), stats.stop_hits);
+        let sp = stats.spec.expect("spec stats with spec_k > 0");
+        assert_eq!(n("scheduler.spec_drafted"), sp.drafted);
+        assert_eq!(n("scheduler.spec_accepted"), sp.accepted);
+        assert_eq!(n("scheduler.spec_verifications"), sp.verifications);
+        // The ITL identity: one inter-step sample per participating
+        // slot per step — exactly `slot_steps` samples, in both the
+        // exact histogram and its registry mirror.
+        assert_eq!(stats.itl.len(), n("scheduler.slot_steps"));
+        assert_eq!(registry.scheduler.itl_us.count() as usize, stats.itl.len());
+        assert_eq!(registry.scheduler.ttft_us.count() as usize, stats.ttft.len());
+        assert_eq!(registry.scheduler.latency_us.count() as usize, stats.latency.len());
+        assert_eq!(registry.scheduler.queue_wait_us.count() as usize, stats.queue_wait.len());
+    }
+
+    /// Trace spans ride requests end to end: every traced request
+    /// writes exactly one JSONL record whose step/token accounting
+    /// matches its generation; untraced requests cost nothing and write
+    /// nothing.
+    #[test]
+    fn traced_requests_write_one_complete_jsonl_record_each() {
+        let dir = std::env::temp_dir().join("bwa_sched_trace_test");
+        std::fs::create_dir_all(&dir).expect("temp dir");
+        let path = dir.join("trace.jsonl");
+        let rec = Arc::new(crate::obs::FlightRecorder::create(&path, 0).expect("create"));
+        let backend = MockBackend;
+        let mut sched = Scheduler::new(&backend, SchedulerConfig::default());
+        let (rtx, rrx) = mpsc::channel();
+        let gens = [4usize, 1, 3];
+        for (i, &g) in gens.iter().enumerate() {
+            let mut r = req(i as u64, vec![i as u16 + 1, 5], g, &rtx);
+            r.trace = Some(Trace::new(Arc::clone(&rec), r.id));
+            sched.submit(r);
+        }
+        // one untraced request alongside — must not appear in the file
+        sched.submit(req(9, vec![7], 2, &rtx));
+        while sched.step() {}
+        sched.finish();
+        drop(rtx);
+        assert_eq!(rrx.try_iter().count(), 4);
+        let text = std::fs::read_to_string(&path).expect("trace file");
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3, "one record per traced retired request");
+        let mut seen = vec![false; 3];
+        for line in lines {
+            let j = crate::util::json::Json::parse(line).expect("valid json line");
+            let id = j.get("id").as_usize().expect("id");
+            seen[id] = true;
+            let gen = gens[id];
+            assert_eq!(j.get("gen_tokens").as_usize(), Some(gen));
+            // prefill emits token 0; each plain decode step emits one
+            // more, so a traced request records gen - 1 step marks
+            assert_eq!(j.get("decode_steps").as_usize(), Some(gen - 1));
+            assert!(j.get("reserved_us").as_f64().is_some());
+            assert!(j.get("prefill_done_us").as_f64().is_some());
+            assert!(j.get("first_token_us").as_f64().is_some());
+            assert!(j.get("retired_us").as_f64().is_some());
+        }
+        assert!(seen.iter().all(|&s| s), "every traced id shows up");
     }
 }

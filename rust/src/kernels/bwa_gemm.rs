@@ -153,8 +153,28 @@ impl BwaGemm {
     /// per-input preparation step of the plan/execute API.
     pub fn prepare_acts(&self, x: &Tensor) -> PackedActs {
         self.pack_calls.fetch_add(1, Ordering::Relaxed);
+        if crate::obs::enabled() {
+            crate::obs::global().kernel.act_packs.incr(1);
+        }
         let xp = x.select_cols(&self.lin.perm);
         self.pack_activations(&xp)
+    }
+
+    /// Work counters for one logical GEMM over `acts` — no clocks: the
+    /// kernel is bit-parity-pinned, so telemetry reports *work* (calls,
+    /// rows, packed weight-plane bytes) and timing stays at the
+    /// scheduler's stage boundaries. One relaxed load + branch when
+    /// telemetry is off.
+    #[inline]
+    fn note_gemm(&self, acts: &PackedActs) {
+        if crate::obs::enabled() {
+            let k = &crate::obs::global().kernel;
+            k.gemm_calls.incr(1);
+            k.gemm_rows.incr(acts.tokens as u64);
+            // q + m bit planes, words_per_plane u64 words each, per row
+            let bytes = self.lin.out_features * acts.words_per_plane * 16;
+            k.plane_bytes.incr(bytes as u64);
+        }
     }
 
     /// Quantize + pack a batch of (already permuted!) activations.
@@ -248,6 +268,7 @@ impl BwaGemm {
             (acts.tokens, self.lin.out_features),
             "output buffer shape mismatch"
         );
+        self.note_gemm(acts);
         self.gemm_packed_span(acts, 0, acts.tokens, &mut y.data);
     }
 
@@ -265,6 +286,7 @@ impl BwaGemm {
             (acts.tokens, self.lin.out_features),
             "output buffer shape mismatch"
         );
+        self.note_gemm(acts);
         let threads = threads.clamp(1, acts.tokens.max(1));
         if threads == 1 {
             self.gemm_packed_span(acts, 0, acts.tokens, &mut y.data);

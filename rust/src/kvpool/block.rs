@@ -195,6 +195,11 @@ impl BlockPool {
         s.in_use += 1;
         s.peak = s.peak.max(s.in_use);
         s.outstanding = s.outstanding.saturating_sub(1);
+        if crate::obs::enabled() {
+            let m = &crate::obs::global().kvpool;
+            m.block_allocs.incr(1);
+            m.blocks_in_use.set(s.in_use as i64);
+        }
         Some(id)
     }
 
@@ -239,6 +244,11 @@ impl BlockPool {
             e.data = None;
             s.free.push(id);
             s.in_use -= 1;
+            if crate::obs::enabled() {
+                let m = &crate::obs::global().kvpool;
+                m.block_releases.incr(1);
+                m.blocks_in_use.set(s.in_use as i64);
+            }
         }
     }
 
@@ -261,6 +271,11 @@ impl BlockPool {
             s.free.push(id);
             s.in_use -= 1;
             s.outstanding += 1;
+            if crate::obs::enabled() {
+                let m = &crate::obs::global().kvpool;
+                m.block_releases.incr(1);
+                m.blocks_in_use.set(s.in_use as i64);
+            }
         }
     }
 }
@@ -392,6 +407,9 @@ impl PagedKv4Store {
             drop(data);
             self.pool.release(old);
             self.pages.push(Page::Owned { id, data: copy });
+            if crate::obs::enabled() {
+                crate::obs::global().kvpool.cow_copies.incr(1);
+            }
         }
         let Some(Page::Owned { data, .. }) = self.pages.last_mut() else {
             unreachable!("tail page is owned after boundary/CoW handling");

@@ -108,6 +108,7 @@ pub mod kernels;
 pub mod kvpool;
 pub mod linalg;
 pub mod model;
+pub mod obs;
 pub mod quant;
 pub mod runtime;
 pub mod server;

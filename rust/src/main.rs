@@ -86,10 +86,11 @@ fn help_text() -> String {
          \x20           [--spec-k K]                             (bwa-cont speculative drafts/step)\n\
          \x20           [--kv-blocks N] [--block-size T]         (bwa-cont paged KV pool)\n\
          \x20           [--listen ADDR] [--max-queue N]          (TCP front-end; docs/PROTOCOL.md)\n\
+         \x20           [--trace-out FILE] [--stats-every N]     (telemetry; docs/OBSERVABILITY.md)\n\
          \x20 client    [--addr HOST:PORT] [--requests N] [--prompt-len P] [--gen G]\n\
          \x20           [--shared-prefix P] [--seed S]           (same prompts `serve` drives)\n\
          \x20           [--temperature T] [--top-k K] [--top-p P] [--sample-seed S]\n\
-         \x20           [--stop ID,ID,...] [--verify-artifact f.bwa] [--shutdown]\n\n\
+         \x20           [--stop ID,ID,...] [--verify-artifact f.bwa] [--stats] [--shutdown]\n\n\
          methods: {}\n\n\
          quantize once, serve many: `bwa quantize --out m.bwa` compiles the model to a\n\
          checksummed artifact; `bwa serve --artifact m.bwa` / `bwa eval --artifact m.bwa`\n\

@@ -1,0 +1,92 @@
+//! Live telemetry: the metric [`Registry`], per-request [`Trace`]
+//! spans, and the JSONL [`FlightRecorder`] — the layer
+//! `docs/OBSERVABILITY.md` documents end to end.
+//!
+//! ## Two registries, one rule
+//!
+//! - **Per-run registries.** Every
+//!   [`Scheduler`](crate::coordinator::scheduler::Scheduler) and every
+//!   TCP server own an `Arc<Registry>` (fresh by default): scheduler
+//!   and server instrumentation always records into it, and the
+//!   end-of-run stats are *read back from it*, so the report and a live
+//!   `stats` snapshot share one source of truth. Fresh-by-default keeps
+//!   parallel tests isolated.
+//! - **The global registry.** The kernel and KV-pool layers sit under
+//!   the model and cannot be handed a per-run registry without
+//!   threading telemetry through bit-parity-pinned signatures. They
+//!   record into [`global`] instead, gated by the process-wide
+//!   [`enabled`] flag — one relaxed atomic load and a branch when
+//!   disabled (the default), so the hot path pays nothing until an
+//!   operator opts in. The `bwa serve` binary calls
+//!   [`set_enabled`]`(true)` and passes [`global_arc`] as its per-run
+//!   registry, so a single snapshot covers every layer.
+//!
+//! No instrument ever reads a clock inside pinned compute: kernels
+//! report *work* (calls, rows, bytes), and all timing happens at
+//! scheduler stage boundaries with instants the scheduler already
+//! takes.
+
+pub mod registry;
+pub mod trace;
+
+pub use registry::{
+    Counter, Gauge, KernelMetrics, KvPoolMetrics, LogHistogram, Registry, SchedulerMetrics,
+    ServerMetrics, SNAPSHOT_VERSION,
+};
+pub use trace::{FlightRecorder, Trace, DEFAULT_MAX_BYTES};
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, OnceLock};
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static GLOBAL: OnceLock<Arc<Registry>> = OnceLock::new();
+
+/// Is global hot-path instrumentation (kernel, KV pool) on? One relaxed
+/// load — call sites branch on this before touching [`global`].
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn global hot-path instrumentation on or off (process-wide). The
+/// serve binary enables it at startup; tests that assert on [`global`]
+/// counters should instead use a per-run registry.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// The process-wide registry (created on first use).
+pub fn global() -> &'static Registry {
+    GLOBAL.get_or_init(|| Arc::new(Registry::new())).as_ref()
+}
+
+/// The process-wide registry as a shareable handle — what the serve
+/// binary passes to the scheduler and server so all layers land in one
+/// snapshot.
+pub fn global_arc() -> Arc<Registry> {
+    Arc::clone(GLOBAL.get_or_init(|| Arc::new(Registry::new())))
+}
+
+/// Observability wiring handed to the serving entry points: which
+/// registry to record into, how often to print a snapshot line, and
+/// where (if anywhere) to write per-request trace records.
+#[derive(Clone)]
+pub struct ObsOptions {
+    pub registry: Arc<Registry>,
+    /// Print `stats: {snapshot}` every N scheduler steps (0 = off).
+    pub stats_every: usize,
+    /// Flight recorder for per-request JSONL traces (`--trace-out`).
+    pub recorder: Option<Arc<FlightRecorder>>,
+}
+
+impl Default for ObsOptions {
+    /// A fresh, isolated registry with no periodic output and no
+    /// recorder — the right default for tests and library callers.
+    fn default() -> Self {
+        ObsOptions {
+            registry: Arc::new(Registry::new()),
+            stats_every: 0,
+            recorder: None,
+        }
+    }
+}

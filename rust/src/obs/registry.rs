@@ -1,0 +1,459 @@
+//! The metric registry: lock-free named counters, gauges, and
+//! log-bucketed latency histograms, organized by layer.
+//!
+//! Every instrument is a plain atomic — recording is a relaxed
+//! `fetch_add`, never a lock — so instrumentation can sit on the serving
+//! hot path. The registry itself is a *typed* struct (one field per
+//! metric, grouped into per-layer sections) rather than a string-keyed
+//! map: the metric set is fixed at compile time, call sites hold `&'static`
+//! field references instead of hashing names, and
+//! [`Registry::snapshot`] is the single place the wire names live. The
+//! exact name/unit/clock of every metric is cataloged in
+//! `docs/OBSERVABILITY.md`.
+//!
+//! ## Histogram precision
+//!
+//! [`LogHistogram`] buckets samples by power of two (bucket *i* holds
+//! `[2^(i-1), 2^i)` microseconds), so `record` is two relaxed atomic
+//! adds and percentile extraction interpolates inside one bucket —
+//! bounded error (a bucket spans 2×), constant memory, safe to read
+//! while writers are live. The scheduler keeps its exact sample-vector
+//! [`Histogram`](crate::coordinator::metrics::Histogram) for the
+//! end-of-run report; the registry histograms are the *live* view the
+//! `stats` wire command serves mid-run. Counters and gauges have no
+//! such gap: the end-of-run report reads them from the registry, so the
+//! two can never drift.
+
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+
+/// Schema version of [`Registry::snapshot`] — bumped whenever a metric
+/// is renamed or its meaning changes, so dashboards can refuse
+/// snapshots they do not understand.
+pub const SNAPSHOT_VERSION: usize = 1;
+
+/// Monotonically increasing event count. Relaxed atomics: totals are
+/// exact, cross-counter ordering is not guaranteed mid-run.
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn incr(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A point-in-time level (queue depth, blocks in use). Signed so
+/// decrements racing ahead of increments cannot wrap.
+#[derive(Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, d: i64) {
+        self.0.fetch_add(d, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Power-of-two bucket count: bucket 47 holds everything above ~2^46 us
+/// (~2 years), so no latency can overflow the array.
+const BUCKETS: usize = 48;
+
+/// Log-bucketed latency histogram in microseconds. `record` is
+/// lock-free; percentiles are extracted by cumulative walk with linear
+/// interpolation inside the landing bucket (error bounded by the 2×
+/// bucket span).
+pub struct LogHistogram {
+    buckets: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        LogHistogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+        }
+    }
+}
+
+impl LogHistogram {
+    /// Bucket index: 0 holds exactly 0us, bucket `i` holds
+    /// `[2^(i-1), 2^i - 1]` us.
+    fn bucket(us: u64) -> usize {
+        (64 - us.leading_zeros() as usize).min(BUCKETS - 1)
+    }
+
+    pub fn record_us(&self, us: u64) {
+        self.buckets[Self::bucket(us)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    pub fn record(&self, d: std::time::Duration) {
+        self.record_us(d.as_micros() as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Exact mean (the sum is kept exactly); `None` when empty.
+    pub fn mean_us(&self) -> Option<f64> {
+        let n = self.count();
+        if n == 0 {
+            return None;
+        }
+        Some(self.sum_us.load(Ordering::Relaxed) as f64 / n as f64)
+    }
+
+    /// `p` in [0, 1]; `None` when empty. Interpolated within the
+    /// landing bucket, so the result is within one bucket span (2×) of
+    /// the exact order statistic.
+    pub fn percentile(&self, p: f64) -> Option<f64> {
+        let counts: Vec<u64> = self
+            .buckets
+            .iter()
+            .map(|b| b.load(Ordering::Relaxed))
+            .collect();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return None;
+        }
+        let rank = ((p * total as f64).ceil() as u64).clamp(1, total);
+        let mut cum = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if cum + c >= rank {
+                if i == 0 {
+                    return Some(0.0);
+                }
+                let lo = (1u64 << (i - 1)) as f64;
+                let hi = ((1u64 << i) - 1) as f64;
+                let frac = (rank - cum) as f64 / c as f64;
+                return Some(lo + frac * (hi - lo));
+            }
+            cum += c;
+        }
+        // Writers racing the reads above can only make `total` smaller
+        // than the per-bucket sum, never larger, so this is unreachable;
+        // answer conservatively rather than panic in a telemetry path.
+        Some((1u64 << (BUCKETS - 1)) as f64)
+    }
+
+    /// Snapshot as `{count, mean_us, p50_us, p95_us, p99_us}`; the
+    /// moments are `null` when the histogram is empty.
+    pub fn to_json(&self) -> Json {
+        let opt = |v: Option<f64>| v.map(Json::num).unwrap_or(Json::Null);
+        Json::obj(vec![
+            ("count", Json::num(self.count() as f64)),
+            ("mean_us", opt(self.mean_us())),
+            ("p50_us", opt(self.percentile(0.50))),
+            ("p95_us", opt(self.percentile(0.95))),
+            ("p99_us", opt(self.percentile(0.99))),
+        ])
+    }
+}
+
+/// Kernel-layer work counters. No timers: the popcount GEMM is a
+/// bit-parity-pinned compute path, so the kernel reports *work*
+/// (calls, rows, bytes) and the scheduler's stage histograms supply
+/// the time; see `docs/OBSERVABILITY.md`.
+#[derive(Default)]
+pub struct KernelMetrics {
+    /// Packed popcount GEMM invocations (single- and multi-threaded
+    /// entries both count once per logical GEMM).
+    pub gemm_calls: Counter,
+    /// Activation rows (tokens) pushed through those GEMMs.
+    pub gemm_rows: Counter,
+    /// Packed weight-plane bytes streamed by those GEMMs.
+    pub plane_bytes: Counter,
+    /// Activation quantize+bit-pack operations (one per prepared input,
+    /// shared across the projections that reuse the pack).
+    pub act_packs: Counter,
+}
+
+/// Paged KV-cache pool counters and occupancy.
+#[derive(Default)]
+pub struct KvPoolMetrics {
+    pub block_allocs: Counter,
+    pub block_releases: Counter,
+    /// Copy-on-write block materializations (a shared block went
+    /// private because a stream appended into it).
+    pub cow_copies: Counter,
+    /// Admissions that adopted cached prefix blocks.
+    pub prefix_hits: Counter,
+    /// Blocks currently allocated (live refcounts), set by the pool
+    /// under its own lock.
+    pub blocks_in_use: Gauge,
+}
+
+/// Continuous-batching scheduler counters, gauges, and latency/stage
+/// histograms. These counters are the *source of truth*: the end-of-run
+/// [`SchedulerStats`](crate::coordinator::metrics::SchedulerStats) is
+/// built by reading them back, so the report and a live `stats`
+/// snapshot can never disagree.
+#[derive(Default)]
+pub struct SchedulerMetrics {
+    /// Decode/verify steps executed.
+    pub steps: Counter,
+    /// Generated tokens emitted (first tokens included).
+    pub gen_tokens: Counter,
+    /// Requests retired.
+    pub requests: Counter,
+    /// Requests that ended on a stop token.
+    pub stop_hits: Counter,
+    /// Slot participations summed over steps (`Σ active.len()` at each
+    /// step) — `mean_active = slot_steps / steps`, and the ITL identity
+    /// `itl_samples == slot_steps` (one inter-step sample per
+    /// participating slot per step; see docs/SCHEDULING.md).
+    pub slot_steps: Counter,
+    pub spec_drafted: Counter,
+    pub spec_accepted: Counter,
+    pub spec_verifications: Counter,
+    /// Requests waiting for admission, set at each step boundary.
+    pub queue_depth: Gauge,
+    /// Slots decoding, set at each step boundary.
+    pub active_slots: Gauge,
+    pub ttft_us: LogHistogram,
+    pub itl_us: LogHistogram,
+    pub latency_us: LogHistogram,
+    pub queue_wait_us: LogHistogram,
+    /// Step-time split, clocked at scheduler stage boundaries only
+    /// (admission bookkeeping, prefill call, decode call, verify call,
+    /// emit/retire fan-out) — never inside pinned compute.
+    pub stage_admission_us: LogHistogram,
+    pub stage_prefill_us: LogHistogram,
+    pub stage_decode_us: LogHistogram,
+    pub stage_verify_us: LogHistogram,
+    pub stage_emit_us: LogHistogram,
+}
+
+/// TCP front-end counters.
+#[derive(Default)]
+pub struct ServerMetrics {
+    /// Connections accepted.
+    pub connections: Counter,
+    pub frames_generate: Counter,
+    pub frames_stats: Counter,
+    pub frames_shutdown: Counter,
+    /// Requests answered with a `final` frame.
+    pub served: Counter,
+    /// Typed `error` frames sent, by wire code.
+    pub errors_busy: Counter,
+    pub errors_capacity: Counter,
+    pub errors_bad_request: Counter,
+    pub errors_protocol: Counter,
+    /// Requests submitted to the scheduler and not yet answered.
+    pub in_flight: Gauge,
+}
+
+/// One process-/run-wide set of instruments. `Registry::default()` is
+/// all zeros; recording is always lock-free. A fresh registry per
+/// scheduler run gives test isolation; the serve binary routes every
+/// layer into [`crate::obs::global`] so one snapshot covers the whole
+/// process.
+#[derive(Default)]
+pub struct Registry {
+    pub kernel: KernelMetrics,
+    pub kvpool: KvPoolMetrics,
+    pub scheduler: SchedulerMetrics,
+    pub server: ServerMetrics,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// The versioned JSON snapshot served by the `stats` wire command
+    /// and the `--stats-every` periodic line:
+    /// `{version, counters: {name: n}, gauges: {name: v},
+    /// histograms: {name: {count, mean_us, p50_us, p95_us, p99_us}}}`.
+    /// Names are `layer.metric`, cataloged in `docs/OBSERVABILITY.md`.
+    pub fn snapshot(&self) -> Json {
+        let counters: Vec<(&str, &Counter)> = vec![
+            ("kernel.gemm_calls", &self.kernel.gemm_calls),
+            ("kernel.gemm_rows", &self.kernel.gemm_rows),
+            ("kernel.plane_bytes", &self.kernel.plane_bytes),
+            ("kernel.act_packs", &self.kernel.act_packs),
+            ("kvpool.block_allocs", &self.kvpool.block_allocs),
+            ("kvpool.block_releases", &self.kvpool.block_releases),
+            ("kvpool.cow_copies", &self.kvpool.cow_copies),
+            ("kvpool.prefix_hits", &self.kvpool.prefix_hits),
+            ("scheduler.steps", &self.scheduler.steps),
+            ("scheduler.gen_tokens", &self.scheduler.gen_tokens),
+            ("scheduler.requests", &self.scheduler.requests),
+            ("scheduler.stop_hits", &self.scheduler.stop_hits),
+            ("scheduler.slot_steps", &self.scheduler.slot_steps),
+            ("scheduler.spec_drafted", &self.scheduler.spec_drafted),
+            ("scheduler.spec_accepted", &self.scheduler.spec_accepted),
+            (
+                "scheduler.spec_verifications",
+                &self.scheduler.spec_verifications,
+            ),
+            ("server.connections", &self.server.connections),
+            ("server.frames_generate", &self.server.frames_generate),
+            ("server.frames_stats", &self.server.frames_stats),
+            ("server.frames_shutdown", &self.server.frames_shutdown),
+            ("server.served", &self.server.served),
+            ("server.errors_busy", &self.server.errors_busy),
+            ("server.errors_capacity", &self.server.errors_capacity),
+            ("server.errors_bad_request", &self.server.errors_bad_request),
+            ("server.errors_protocol", &self.server.errors_protocol),
+        ];
+        let gauges: Vec<(&str, &Gauge)> = vec![
+            ("kvpool.blocks_in_use", &self.kvpool.blocks_in_use),
+            ("scheduler.queue_depth", &self.scheduler.queue_depth),
+            ("scheduler.active_slots", &self.scheduler.active_slots),
+            ("server.in_flight", &self.server.in_flight),
+        ];
+        let hists: Vec<(&str, &LogHistogram)> = vec![
+            ("scheduler.ttft_us", &self.scheduler.ttft_us),
+            ("scheduler.itl_us", &self.scheduler.itl_us),
+            ("scheduler.latency_us", &self.scheduler.latency_us),
+            ("scheduler.queue_wait_us", &self.scheduler.queue_wait_us),
+            (
+                "scheduler.stage.admission_us",
+                &self.scheduler.stage_admission_us,
+            ),
+            (
+                "scheduler.stage.prefill_us",
+                &self.scheduler.stage_prefill_us,
+            ),
+            ("scheduler.stage.decode_us", &self.scheduler.stage_decode_us),
+            ("scheduler.stage.verify_us", &self.scheduler.stage_verify_us),
+            ("scheduler.stage.emit_us", &self.scheduler.stage_emit_us),
+        ];
+        Json::obj(vec![
+            ("version", Json::num(SNAPSHOT_VERSION as f64)),
+            (
+                "counters",
+                Json::obj(
+                    counters
+                        .into_iter()
+                        .map(|(k, c)| (k, Json::num(c.get() as f64)))
+                        .collect(),
+                ),
+            ),
+            (
+                "gauges",
+                Json::obj(
+                    gauges
+                        .into_iter()
+                        .map(|(k, g)| (k, Json::num(g.get() as f64)))
+                        .collect(),
+                ),
+            ),
+            (
+                "histograms",
+                Json::obj(hists.into_iter().map(|(k, h)| (k, h.to_json())).collect()),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn counter_and_gauge_are_plain_accumulators() {
+        let c = Counter::default();
+        c.incr(3);
+        c.incr(4);
+        assert_eq!(c.get(), 7);
+        let g = Gauge::default();
+        g.set(5);
+        g.add(-2);
+        assert_eq!(g.get(), 3);
+    }
+
+    #[test]
+    fn empty_log_histogram_answers_none() {
+        let h = LogHistogram::default();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean_us(), None);
+        assert_eq!(h.percentile(0.5), None);
+        assert_eq!(h.percentile(0.99), None);
+        let j = h.to_json();
+        assert_eq!(j.get("count").as_f64(), Some(0.0));
+        assert_eq!(*j.get("p50_us"), crate::util::json::Json::Null);
+    }
+
+    #[test]
+    fn log_histogram_percentiles_are_within_one_bucket() {
+        let h = LogHistogram::default();
+        for us in 1..=1000u64 {
+            h.record_us(us);
+        }
+        assert_eq!(h.count(), 1000);
+        // exact mean even though the distribution is bucketed
+        assert!((h.mean_us().unwrap() - 500.5).abs() < 1e-9);
+        // log-bucketed percentiles: within a factor of 2 of exact
+        let p50 = h.percentile(0.5).unwrap();
+        assert!((250.0..=1000.0).contains(&p50), "p50 = {p50}");
+        let p99 = h.percentile(0.99).unwrap();
+        assert!((495.0..=1023.0).contains(&p99), "p99 = {p99}");
+        assert!(h.percentile(0.5).unwrap() <= h.percentile(0.99).unwrap());
+    }
+
+    #[test]
+    fn log_histogram_single_sample_is_its_own_percentile_bucket() {
+        let h = LogHistogram::default();
+        h.record(Duration::from_micros(700));
+        // 700us lands in bucket [512, 1023]; every percentile must
+        // answer inside that bucket.
+        for p in [0.0, 0.5, 0.95, 0.99, 1.0] {
+            let v = h.percentile(p).unwrap();
+            assert!((512.0..=1023.0).contains(&v), "p{p} = {v}");
+        }
+        assert_eq!(h.mean_us(), Some(700.0));
+    }
+
+    #[test]
+    fn zero_duration_lands_in_the_zero_bucket() {
+        let h = LogHistogram::default();
+        h.record_us(0);
+        assert_eq!(h.percentile(0.5), Some(0.0));
+        assert_eq!(h.mean_us(), Some(0.0));
+    }
+
+    #[test]
+    fn snapshot_is_versioned_and_round_trips_through_json() {
+        let r = Registry::new();
+        r.scheduler.steps.incr(42);
+        r.scheduler.ttft_us.record_us(1500);
+        r.server.in_flight.set(3);
+        let snap = r.snapshot();
+        let back = Json::parse(&snap.to_string()).expect("snapshot parses");
+        assert_eq!(back.get("version").as_usize(), Some(SNAPSHOT_VERSION));
+        assert_eq!(
+            back.get("counters").get("scheduler.steps").as_usize(),
+            Some(42)
+        );
+        assert_eq!(
+            back.get("gauges").get("server.in_flight").as_usize(),
+            Some(3)
+        );
+        let ttft = back.get("histograms").get("scheduler.ttft_us");
+        assert_eq!(ttft.get("count").as_usize(), Some(1));
+        assert!(ttft.get("p50_us").as_f64().unwrap() >= 1024.0);
+    }
+}

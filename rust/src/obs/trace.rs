@@ -1,0 +1,273 @@
+//! Per-request trace spans and the JSONL flight recorder.
+//!
+//! A [`Trace`] rides on a
+//! [`Request`](crate::coordinator::batcher::Request): the submitter
+//! (TCP handler or in-process workload driver) creates it at enqueue
+//! time, the scheduler marks lifecycle events at the monotonic
+//! timestamps it already takes at its stage boundaries
+//! (queued → reserved → prefill → first-token → each decode step →
+//! retired), and retirement writes the whole span as **one JSONL
+//! record** to the [`FlightRecorder`]. The trace carries its own sink
+//! handle, so the scheduler needs no recorder plumbing and a request
+//! without a trace costs a single `Option` branch per mark.
+//!
+//! All timestamps are offsets in microseconds from the `queued`
+//! instant, taken from [`std::time::Instant`] (monotonic; never
+//! wall-clock, and never read inside pinned compute — the scheduler
+//! passes in the instants it already measured). The record schema is
+//! documented in `docs/OBSERVABILITY.md`.
+//!
+//! The recorder is a buffered, size-rotated JSONL file: when a record
+//! would push the file past `max_bytes`, the current file is renamed to
+//! `<path>.1` (replacing any previous rotation) and a fresh file is
+//! started — a bounded-disk flight recorder, not an unbounded log. IO
+//! errors are swallowed: telemetry must never take down serving.
+
+use crate::util::json::Json;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::PathBuf;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Default rotation threshold for `--trace-out` files.
+pub const DEFAULT_MAX_BYTES: u64 = 64 * 1024 * 1024;
+
+struct RecorderFile {
+    out: BufWriter<File>,
+    written: u64,
+}
+
+/// Size-rotated JSONL sink; one line per retired request. Shared by
+/// every in-flight [`Trace`] via `Arc`.
+pub struct FlightRecorder {
+    path: PathBuf,
+    max_bytes: u64,
+    file: Mutex<Option<RecorderFile>>,
+}
+
+impl FlightRecorder {
+    /// Create (truncate) the recorder file. `max_bytes` bounds the file
+    /// size before rotation to `<path>.1`; 0 means
+    /// [`DEFAULT_MAX_BYTES`].
+    pub fn create(path: impl Into<PathBuf>, max_bytes: u64) -> std::io::Result<FlightRecorder> {
+        let path = path.into();
+        let out = BufWriter::new(File::create(&path)?);
+        Ok(FlightRecorder {
+            path,
+            max_bytes: if max_bytes == 0 {
+                DEFAULT_MAX_BYTES
+            } else {
+                max_bytes
+            },
+            file: Mutex::new(Some(RecorderFile { out, written: 0 })),
+        })
+    }
+
+    /// Path the recorder rotates the current file to.
+    pub fn rotated_path(&self) -> PathBuf {
+        let mut os = self.path.clone().into_os_string();
+        os.push(".1");
+        PathBuf::from(os)
+    }
+
+    /// Append one record as a single JSON line, rotating first if the
+    /// line would push the file past `max_bytes`. Flushes per record —
+    /// a flight recorder that loses its tail on a crash is useless —
+    /// and swallows IO errors after poisoning the writer so a dead disk
+    /// degrades to "no traces", not a serving failure.
+    pub fn write_record(&self, record: &Json) {
+        let mut line = record.to_string();
+        line.push('\n');
+        let mut guard = self.file.lock().unwrap_or_else(|e| e.into_inner());
+        let Some(f) = guard.as_mut() else {
+            return; // a previous IO error retired this recorder
+        };
+        if f.written > 0 && f.written + line.len() as u64 > self.max_bytes {
+            let rotated = self.rotated_path();
+            let ok = f.out.flush().is_ok() && std::fs::rename(&self.path, &rotated).is_ok();
+            match File::create(&self.path) {
+                Ok(file) if ok => {
+                    f.out = BufWriter::new(file);
+                    f.written = 0;
+                }
+                _ => {
+                    *guard = None;
+                    return;
+                }
+            }
+        }
+        let f = guard.as_mut().expect("writer present");
+        if f.out.write_all(line.as_bytes()).is_err() || f.out.flush().is_err() {
+            *guard = None;
+            return;
+        }
+        f.written += line.len() as u64;
+    }
+}
+
+/// One per-step trace event: offset from `queued` and how many tokens
+/// that step emitted for this request (1 for plain decode, up to
+/// `spec_k + 1` for an accepted speculative batch).
+#[derive(Clone, Copy, Debug)]
+struct StepMark {
+    t_us: u64,
+    tokens: u32,
+}
+
+/// The lifecycle span of one request. Created by the submitter at
+/// enqueue time; marked by the scheduler; written to the recorder at
+/// retirement by [`finish`](Trace::finish).
+pub struct Trace {
+    sink: std::sync::Arc<FlightRecorder>,
+    id: u64,
+    queued: Instant,
+    reserved_us: Option<u64>,
+    prefill_done_us: Option<u64>,
+    first_token_us: Option<u64>,
+    steps: Vec<StepMark>,
+}
+
+impl Trace {
+    pub fn new(sink: std::sync::Arc<FlightRecorder>, id: u64) -> Trace {
+        Trace {
+            sink,
+            id,
+            queued: Instant::now(),
+            reserved_us: None,
+            prefill_done_us: None,
+            first_token_us: None,
+            steps: Vec::new(),
+        }
+    }
+
+    fn off_us(&self, now: Instant) -> u64 {
+        now.saturating_duration_since(self.queued).as_micros() as u64
+    }
+
+    /// Admission reserved KV blocks / a slot for this request.
+    pub fn mark_reserved(&mut self, now: Instant) {
+        self.reserved_us = Some(self.off_us(now));
+    }
+
+    /// Prefill finished (the first token exists).
+    pub fn mark_prefill(&mut self, now: Instant) {
+        self.prefill_done_us = Some(self.off_us(now));
+    }
+
+    /// The first token was emitted to the stream.
+    pub fn mark_first_token(&mut self, now: Instant) {
+        self.first_token_us = Some(self.off_us(now));
+    }
+
+    /// One decode/verify step emitted `tokens` tokens for this request.
+    pub fn mark_step(&mut self, now: Instant, tokens: usize) {
+        self.steps.push(StepMark {
+            t_us: self.off_us(now),
+            tokens: tokens as u32,
+        });
+    }
+
+    /// Retire: write the whole span as one JSONL record. Offsets are
+    /// microseconds since `queued`; missing phases (a request retired
+    /// at prefill has no decode steps) serialize as `null`.
+    pub fn finish(self, now: Instant, gen_tokens: usize) {
+        let opt = |v: Option<u64>| v.map(|u| Json::num(u as f64)).unwrap_or(Json::Null);
+        let steps = Json::Arr(
+            self.steps
+                .iter()
+                .map(|s| {
+                    Json::obj(vec![
+                        ("t_us", Json::num(s.t_us as f64)),
+                        ("tokens", Json::num(f64::from(s.tokens))),
+                    ])
+                })
+                .collect(),
+        );
+        let record = Json::obj(vec![
+            ("v", Json::num(1.0)),
+            ("id", Json::num(self.id as f64)),
+            ("reserved_us", opt(self.reserved_us)),
+            ("prefill_done_us", opt(self.prefill_done_us)),
+            ("first_token_us", opt(self.first_token_us)),
+            ("decode_steps", Json::num(self.steps.len() as f64)),
+            ("steps", steps),
+            ("retired_us", Json::num(self.off_us(now) as f64)),
+            ("gen_tokens", Json::num(gen_tokens as f64)),
+        ]);
+        self.sink.write_record(&record);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("bwa_obs_trace_tests");
+        std::fs::create_dir_all(&dir).expect("temp dir");
+        dir.join(name)
+    }
+
+    #[test]
+    fn trace_writes_one_well_formed_jsonl_record() {
+        let path = tmp("one_record.jsonl");
+        let rec = Arc::new(FlightRecorder::create(&path, 0).expect("create"));
+        let mut t = Trace::new(Arc::clone(&rec), 7);
+        let now = Instant::now();
+        t.mark_reserved(now);
+        t.mark_prefill(now);
+        t.mark_first_token(now);
+        t.mark_step(now, 1);
+        t.mark_step(now, 3);
+        t.finish(now, 5);
+        let text = std::fs::read_to_string(&path).expect("read back");
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 1);
+        let j = Json::parse(lines[0]).expect("valid json line");
+        assert_eq!(j.get("v").as_usize(), Some(1));
+        assert_eq!(j.get("id").as_usize(), Some(7));
+        assert_eq!(j.get("gen_tokens").as_usize(), Some(5));
+        assert_eq!(j.get("decode_steps").as_usize(), Some(2));
+        let steps = j.get("steps").as_arr().expect("steps array");
+        assert_eq!(steps[1].get("tokens").as_usize(), Some(3));
+        // offsets are monotone: queued (0) <= reserved <= retired
+        let reserved = j.get("reserved_us").as_f64().expect("reserved");
+        let retired = j.get("retired_us").as_f64().expect("retired");
+        assert!(reserved <= retired);
+    }
+
+    #[test]
+    fn unmarked_phases_serialize_as_null() {
+        let path = tmp("null_phases.jsonl");
+        let rec = Arc::new(FlightRecorder::create(&path, 0).expect("create"));
+        let t = Trace::new(Arc::clone(&rec), 0);
+        t.finish(Instant::now(), 0);
+        let text = std::fs::read_to_string(&path).expect("read back");
+        let j = Json::parse(text.lines().next().expect("one line")).expect("json");
+        assert_eq!(*j.get("first_token_us"), Json::Null);
+        assert_eq!(j.get("steps").as_arr().map(<[Json]>::len), Some(0));
+    }
+
+    #[test]
+    fn recorder_rotates_by_size() {
+        let path = tmp("rotate.jsonl");
+        // Tiny cap: every record is ~60 bytes, so the third write must
+        // rotate the first two out to `<path>.1`.
+        let rec = FlightRecorder::create(&path, 150).expect("create");
+        let record = Json::obj(vec![("v", Json::num(1.0)), ("pad", Json::str("x".repeat(40)))]);
+        rec.write_record(&record);
+        rec.write_record(&record);
+        rec.write_record(&record);
+        let rotated = rec.rotated_path();
+        let kept = std::fs::read_to_string(&path).expect("current file");
+        let old = std::fs::read_to_string(&rotated).expect("rotated file");
+        assert_eq!(kept.lines().count(), 1, "current file restarted");
+        assert_eq!(old.lines().count(), 2, "rotation kept the full prefix");
+        for line in kept.lines().chain(old.lines()) {
+            Json::parse(line).expect("every line stays valid json");
+        }
+        std::fs::remove_file(rotated).ok();
+    }
+}

@@ -191,7 +191,22 @@ impl Client {
                 ServerFrame::Hello { .. } => {
                     return Err(ServeError::Protocol("unexpected hello mid-stream".into()))
                 }
+                ServerFrame::Stats { .. } => {
+                    return Err(ServeError::Protocol("unexpected stats mid-stream".into()))
+                }
             }
+        }
+    }
+
+    /// Fetch a live telemetry snapshot (the `stats` wire command): the
+    /// server registry's versioned snapshot, counters and percentiles
+    /// across every instrumented layer. Leaves the connection usable.
+    pub fn stats(&mut self) -> Result<crate::util::json::Json, ServeError> {
+        self.send(&ClientFrame::Stats)?;
+        match self.read_frame()? {
+            ServerFrame::Stats { snapshot } => Ok(snapshot),
+            ServerFrame::Error { error, .. } => Err(error),
+            other => Err(ServeError::Protocol(format!("expected stats, got {other:?}"))),
         }
     }
 
@@ -241,10 +256,16 @@ pub static CLIENT_SPEC: Spec = Spec {
             "check streamed tokens against an in-process greedy run of this .bwa artifact",
         ),
     ],
-    switches: &[(
-        "shutdown",
-        "ask the server to drain and exit after the last request",
-    )],
+    switches: &[
+        (
+            "stats",
+            "fetch and print the server's live stats snapshot (JSON) after the requests",
+        ),
+        (
+            "shutdown",
+            "ask the server to drain and exit after the last request",
+        ),
+    ],
 };
 
 /// Sequential greedy reference run, honoring stop tokens the same way
@@ -368,6 +389,10 @@ pub fn cmd_client(args: &Args) -> Result<(), String> {
     );
     if !verify_path.is_empty() {
         println!("verify: all streamed tokens match the in-process greedy reference");
+    }
+    if args.switch("stats") {
+        let snapshot = client.stats().map_err(|e| e.to_string())?;
+        print!("{}", snapshot.to_string_pretty());
     }
     if args.switch("shutdown") {
         client.shutdown_server().map_err(|e| e.to_string())?;

@@ -45,12 +45,13 @@ pub use protocol::{ClientFrame, ServeError, ServerFrame, PROTOCOL_VERSION};
 use crate::coordinator::batcher::Request;
 use crate::coordinator::metrics::SchedulerStats;
 use crate::coordinator::scheduler::{
-    run_scheduler, SchedulerConfig, SessionBackend, TransformerBackend,
+    run_scheduler_obs, SchedulerConfig, SessionBackend, TransformerBackend,
 };
 use crate::kvpool::KvPoolConfig;
 use crate::model::config::ModelConfig;
 use crate::model::sampling::GenConfig;
 use crate::model::Transformer;
+use crate::obs::{ObsOptions, Trace};
 use protocol::{decode_client, encode_server};
 use std::io::{BufRead, BufReader, BufWriter, ErrorKind, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -134,18 +135,22 @@ pub struct ServerConfig {
     pub limits: RequestLimits,
     /// Model name reported in the `hello` frame.
     pub model: String,
+    /// Telemetry wiring: the registry every layer records into (and the
+    /// `stats` frame snapshots), the flight-recorder sink traced
+    /// requests write to, and the periodic stats cadence. The default is
+    /// a fresh registry with tracing off.
+    pub obs: ObsOptions,
 }
 
-/// Counters shared between the accept loop and the handler threads.
-#[derive(Default)]
+/// State shared between the accept loop and the handler threads. All
+/// counting lives in the obs registry (`server.*` metrics) — the one
+/// atomic counter kept here is the in-flight *gate*, which needs the
+/// fetch-add-then-check claim protocol a plain counter cannot express.
 struct Shared {
     shutdown: AtomicBool,
     /// Requests submitted to the scheduler and not yet answered.
     in_flight: AtomicUsize,
-    served: AtomicUsize,
-    rejected_busy: AtomicUsize,
-    rejected_capacity: AtomicUsize,
-    rejected_bad: AtomicUsize,
+    obs: ObsOptions,
 }
 
 /// Final server statistics: the scheduler's own stats (scheduler-observed
@@ -190,12 +195,16 @@ impl ServerHandle {
     pub fn wait(self) -> ServerStats {
         self.accept.join().expect("accept thread panicked");
         let scheduler = self.sched.join().expect("scheduler thread panicked");
+        // The front-end counters are read back from the registry — the
+        // same numbers a `stats` frame snapshots, so report and snapshot
+        // cannot drift.
+        let m = &self.shared.obs.registry.server;
         ServerStats {
             scheduler,
-            served: self.shared.served.load(Ordering::SeqCst),
-            rejected_busy: self.shared.rejected_busy.load(Ordering::SeqCst),
-            rejected_capacity: self.shared.rejected_capacity.load(Ordering::SeqCst),
-            rejected_bad: self.shared.rejected_bad.load(Ordering::SeqCst),
+            served: m.served.get() as usize,
+            rejected_busy: m.errors_busy.get() as usize,
+            rejected_capacity: m.errors_capacity.get() as usize,
+            rejected_bad: (m.errors_bad_request.get() + m.errors_protocol.get()) as usize,
         }
     }
 }
@@ -217,17 +226,22 @@ where
         max_queue,
         limits,
         model,
+        obs,
     } = cfg;
     listener.set_nonblocking(true)?;
     let addr = listener.local_addr()?;
     let (tx, rx) = mpsc::channel::<Request>();
-    let shared = Arc::new(Shared::default());
+    let shared = Arc::new(Shared {
+        shutdown: AtomicBool::new(false),
+        in_flight: AtomicUsize::new(0),
+        obs: obs.clone(),
+    });
 
     let sched = thread::Builder::new()
         .name("bwa-scheduler".into())
         .spawn(move || {
             let backend = make_backend();
-            run_scheduler(rx, &backend, scheduler)
+            run_scheduler_obs(rx, &backend, scheduler, obs)
         })?;
 
     let accept_shared = Arc::clone(&shared);
@@ -258,6 +272,7 @@ fn accept_loop(
         }
         match listener.accept() {
             Ok((stream, _)) => {
+                shared.obs.registry.server.connections.incr(1);
                 let tx = tx.clone();
                 let shared = Arc::clone(&shared);
                 let limits = limits.clone();
@@ -338,6 +353,7 @@ fn handle_conn(
                         gen,
                         cfg,
                     }) => {
+                        shared.obs.registry.server.frames_generate.incr(1);
                         if handle_generate(
                             &mut writer,
                             &tx,
@@ -354,13 +370,25 @@ fn handle_conn(
                             return;
                         }
                     }
+                    Ok(ClientFrame::Stats) => {
+                        shared.obs.registry.server.frames_stats.incr(1);
+                        let snapshot = shared.obs.registry.snapshot();
+                        if send_frame(&mut writer, &ServerFrame::Stats { snapshot }).is_err() {
+                            return;
+                        }
+                    }
                     Ok(ClientFrame::Shutdown) => {
+                        shared.obs.registry.server.frames_shutdown.incr(1);
                         shared.shutdown.store(true, Ordering::SeqCst);
                         let _ = send_frame(&mut writer, &ServerFrame::Bye);
                         return;
                     }
                     Err(error) => {
-                        shared.rejected_bad.fetch_add(1, Ordering::SeqCst);
+                        let m = &shared.obs.registry.server;
+                        match &error {
+                            ServeError::BadRequest(_) => m.errors_bad_request.incr(1),
+                            _ => m.errors_protocol.incr(1),
+                        }
                         if send_frame(&mut writer, &ServerFrame::Error { id: None, error })
                             .is_err()
                         {
@@ -393,10 +421,11 @@ fn handle_generate(
     gen: usize,
     cfg: GenConfig,
 ) -> std::io::Result<()> {
+    let metrics = &shared.obs.registry.server;
     if let Err(error) = limits.check(&tokens, gen) {
         match &error {
-            ServeError::Capacity(_) => shared.rejected_capacity.fetch_add(1, Ordering::SeqCst),
-            _ => shared.rejected_bad.fetch_add(1, Ordering::SeqCst),
+            ServeError::Capacity(_) => metrics.errors_capacity.incr(1),
+            _ => metrics.errors_bad_request.incr(1),
         };
         return send_frame(writer, &ServerFrame::Error { id: Some(id), error });
     }
@@ -406,7 +435,7 @@ fn handle_generate(
     let depth = shared.in_flight.fetch_add(1, Ordering::SeqCst);
     if depth >= max_queue {
         shared.in_flight.fetch_sub(1, Ordering::SeqCst);
-        shared.rejected_busy.fetch_add(1, Ordering::SeqCst);
+        metrics.errors_busy.incr(1);
         return send_frame(
             writer,
             &ServerFrame::Error {
@@ -415,9 +444,15 @@ fn handle_generate(
             },
         );
     }
+    metrics.in_flight.set((depth + 1) as i64);
 
     let (resp_tx, resp_rx) = mpsc::channel();
     let (stream_tx, stream_rx) = mpsc::channel();
+    let trace = shared
+        .obs
+        .recorder
+        .as_ref()
+        .map(|sink| Trace::new(Arc::clone(sink), id));
     let submitted = tx.send(Request {
         id,
         tokens,
@@ -426,9 +461,11 @@ fn handle_generate(
         resp_tx,
         stream_tx: Some(stream_tx),
         cfg,
+        trace,
     });
     if submitted.is_err() {
         shared.in_flight.fetch_sub(1, Ordering::SeqCst);
+        metrics.in_flight.set(shared.in_flight.load(Ordering::SeqCst) as i64);
         return send_frame(
             writer,
             &ServerFrame::Error {
@@ -461,9 +498,10 @@ fn handle_generate(
     }
     let resp = resp_rx.recv();
     shared.in_flight.fetch_sub(1, Ordering::SeqCst);
+    metrics.in_flight.set(shared.in_flight.load(Ordering::SeqCst) as i64);
     match resp {
         Ok(resp) => {
-            shared.served.fetch_add(1, Ordering::SeqCst);
+            metrics.served.incr(1);
             if write_err.is_none() {
                 write_err = send_frame(
                     writer,
@@ -556,6 +594,7 @@ pub fn serve_listen(
     pool_cfg: KvPoolConfig,
     scfg: SchedulerConfig,
     max_queue: usize,
+    obs: ObsOptions,
 ) -> Result<(), String> {
     let limits = RequestLimits::for_model(&model.cfg, Some(pool_cfg));
     let label = model.cfg.name.clone();
@@ -565,6 +604,7 @@ pub fn serve_listen(
         max_queue,
         limits,
         model: label,
+        obs,
     };
     let handle = start(
         listener,
@@ -714,6 +754,7 @@ mod tests {
                 max_queue,
                 limits,
                 model: "mock".into(),
+                obs: ObsOptions::default(),
             },
         )
         .unwrap()
@@ -803,6 +844,7 @@ mod tests {
                 max_queue: 1,
                 limits: test_limits(),
                 model: "gate".into(),
+                obs: ObsOptions::default(),
             },
         )
         .unwrap();
@@ -912,6 +954,89 @@ mod tests {
         client.shutdown_server().unwrap();
         let stats = handle.wait();
         assert_eq!(stats.scheduler.stop_hits, 1);
+    }
+
+    /// The `stats` wire command: counters are zero before work, grow
+    /// monotonically across generates, and the last snapshot agrees
+    /// exactly with the end-of-run report — one source of truth.
+    #[test]
+    fn stats_snapshots_are_monotonic_and_match_the_final_report() {
+        let handle = start_mock(16, test_limits());
+        let mut client = Client::connect(&handle.addr().to_string()).unwrap();
+
+        let snap0 = client.stats().unwrap();
+        let counter = |s: &crate::util::json::Json, k: &str| {
+            s.get("counters").get(k).as_usize().unwrap_or(usize::MAX)
+        };
+        assert_eq!(snap0.get("version").as_usize(), Some(crate::obs::SNAPSHOT_VERSION));
+        assert_eq!(counter(&snap0, "server.served"), 0);
+        assert_eq!(counter(&snap0, "scheduler.gen_tokens"), 0);
+
+        client.generate(0, &[1, 2, 3], 6, &GenConfig::default()).unwrap();
+        let snap1 = client.stats().unwrap();
+        assert_eq!(counter(&snap1, "server.served"), 1);
+        assert_eq!(counter(&snap1, "scheduler.gen_tokens"), 6);
+        assert_eq!(counter(&snap1, "server.frames_generate"), 1);
+
+        client.generate(1, &[7, 7], 4, &GenConfig::default()).unwrap();
+        let snap2 = client.stats().unwrap();
+        for key in ["server.served", "scheduler.gen_tokens", "scheduler.steps"] {
+            assert!(
+                counter(&snap2, key) > counter(&snap1, key),
+                "{key} must grow across generates"
+            );
+        }
+        assert_eq!(counter(&snap2, "scheduler.gen_tokens"), 10);
+
+        client.shutdown_server().unwrap();
+        let stats = handle.wait();
+        // snapshot == report: the wire snapshot taken after the last
+        // request must agree with every counter the report prints.
+        assert_eq!(counter(&snap2, "server.served"), stats.served);
+        assert_eq!(counter(&snap2, "scheduler.gen_tokens"), stats.scheduler.gen_tokens);
+        assert_eq!(counter(&snap2, "scheduler.requests"), stats.scheduler.requests);
+        assert_eq!(counter(&snap2, "scheduler.steps"), stats.scheduler.steps);
+    }
+
+    /// An unknown frame type gets the typed `protocol` error on the
+    /// wire — and the connection survives to serve real frames after.
+    #[test]
+    fn unknown_command_is_a_typed_protocol_error() {
+        use std::io::{BufRead, BufReader, Write};
+        let handle = start_mock(16, test_limits());
+        let mut stream = std::net::TcpStream::connect(handle.addr()).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap(); // hello
+        assert!(matches!(
+            protocol::decode_server(&line).unwrap(),
+            ServerFrame::Hello { .. }
+        ));
+
+        stream.write_all(b"{\"type\":\"wat\"}\n").unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        let ServerFrame::Error { id, error } = protocol::decode_server(&line).unwrap() else {
+            panic!("expected error frame, got {line}");
+        };
+        assert_eq!(id, None);
+        assert!(matches!(error, ServeError::Protocol(_)), "got {error}");
+
+        // same connection still answers a stats frame
+        stream.write_all(b"{\"type\":\"stats\"}\n").unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        let ServerFrame::Stats { snapshot } = protocol::decode_server(&line).unwrap() else {
+            panic!("expected stats frame, got {line}");
+        };
+        assert_eq!(
+            snapshot.get("counters").get("server.errors_protocol").as_usize(),
+            Some(1)
+        );
+
+        drop(stream);
+        let stats = handle.shutdown();
+        assert_eq!(stats.rejected_bad, 1, "protocol rejections land in the report");
     }
 
     #[test]

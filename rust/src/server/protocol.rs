@@ -6,13 +6,16 @@
 //!
 //! - client → server: `generate` (a prompt, a `gen` budget, and an
 //!   optional per-request `cfg` carrying the
-//!   [`GenConfig`](crate::model::sampling::GenConfig) sampling fields)
-//!   and `shutdown` (drain and stop the whole server).
+//!   [`GenConfig`](crate::model::sampling::GenConfig) sampling fields),
+//!   `stats` (fetch a live telemetry snapshot), and `shutdown` (drain
+//!   and stop the whole server).
 //! - server → client: `hello` (version + model, once per connection),
 //!   `token` (one streamed token, sent the moment the scheduler emits
 //!   it; `done` marks the last), `final` (the complete continuation plus
-//!   scheduler-side latency metadata), `error` (typed: see
-//!   [`ServeError`]), and `bye` (connection closing on shutdown).
+//!   scheduler-side latency metadata), `stats` (a versioned
+//!   [`crate::obs::Registry`] snapshot, echoing a `stats` request),
+//!   `error` (typed: see [`ServeError`]), and `bye` (connection closing
+//!   on shutdown).
 //!
 //! Request ids are client-scoped echoes: the server copies the id of the
 //! `generate` frame into its `token`/`final`/`error` frames and never
@@ -107,6 +110,10 @@ pub enum ClientFrame {
         gen: usize,
         cfg: GenConfig,
     },
+    /// Fetch a live telemetry snapshot ([`ServerFrame::Stats`]) —
+    /// counters, gauges, and latency-histogram percentiles across every
+    /// instrumented layer. Read-only; never perturbs serving state.
+    Stats,
     /// Drain every in-flight session, release all KV blocks, and stop
     /// the server process.
     Shutdown,
@@ -133,6 +140,12 @@ pub enum ServerFrame {
         latency_us: u64,
         batch_size: usize,
     },
+    /// Live telemetry snapshot, answering a [`ClientFrame::Stats`]. The
+    /// payload is the [`crate::obs::Registry`] snapshot verbatim —
+    /// `{"version": .., "counters": {..}, "gauges": {..},
+    /// "histograms": {..}}` — so the wire format is versioned by the
+    /// snapshot itself, not the protocol.
+    Stats { snapshot: Json },
     /// Typed rejection; `id` echoes the offending request when known.
     Error { id: Option<u64>, error: ServeError },
     /// The server is shutting down; the connection closes after this.
@@ -202,6 +215,7 @@ pub fn encode_client(frame: &ClientFrame) -> String {
             ("gen", Json::num(*gen as f64)),
             ("cfg", genconfig_to_json(cfg)),
         ]),
+        ClientFrame::Stats => Json::obj(vec![("type", Json::str("stats"))]),
         ClientFrame::Shutdown => Json::obj(vec![("type", Json::str("shutdown"))]),
     };
     j.to_string()
@@ -228,6 +242,10 @@ pub fn encode_server(frame: &ServerFrame) -> String {
             ("tokens", tokens_to_json(tokens)),
             ("latency_us", Json::num(*latency_us as f64)),
             ("batch_size", Json::num(*batch_size as f64)),
+        ]),
+        ServerFrame::Stats { snapshot } => Json::obj(vec![
+            ("type", Json::str("stats")),
+            ("snapshot", snapshot.clone()),
         ]),
         ServerFrame::Error { id, error } => {
             let mut pairs = vec![
@@ -275,6 +293,7 @@ pub fn decode_client(line: &str) -> Result<ClientFrame, ServeError> {
                 cfg => genconfig_from_json(cfg)?,
             },
         }),
+        "stats" => Ok(ClientFrame::Stats),
         "shutdown" => Ok(ClientFrame::Shutdown),
         other => Err(ServeError::Protocol(format!("unknown client frame type '{other}'"))),
     }
@@ -308,6 +327,9 @@ pub fn decode_server(line: &str) -> Result<ServerFrame, ServeError> {
                 .map_err(|e| ServeError::Protocol(e.message().to_string()))?,
             latency_us: frame_u64(&j, "latency_us")?,
             batch_size: j.usize_or("batch_size", 1),
+        }),
+        "stats" => Ok(ServerFrame::Stats {
+            snapshot: j.get("snapshot").clone(),
         }),
         "error" => Ok(ServerFrame::Error {
             id: j.get("id").as_f64().map(|x| x as u64),
@@ -356,6 +378,32 @@ mod tests {
     fn shutdown_round_trips() {
         let line = encode_client(&ClientFrame::Shutdown);
         assert_eq!(decode_client(&line).unwrap(), ClientFrame::Shutdown);
+    }
+
+    #[test]
+    fn stats_frames_round_trip_with_a_real_snapshot() {
+        let line = encode_client(&ClientFrame::Stats);
+        assert_eq!(decode_client(&line).unwrap(), ClientFrame::Stats);
+
+        // the server-side payload is a genuine registry snapshot, so the
+        // round trip covers the actual wire shape, not a toy object
+        let reg = crate::obs::Registry::new();
+        reg.scheduler.steps.incr(41);
+        reg.scheduler.ttft_us.record_us(1500);
+        let frame = ServerFrame::Stats { snapshot: reg.snapshot() };
+        let decoded = decode_server(&encode_server(&frame)).unwrap();
+        assert_eq!(decoded, frame);
+        let ServerFrame::Stats { snapshot } = decoded else {
+            panic!("expected stats");
+        };
+        assert_eq!(
+            snapshot.get("counters").get("scheduler.steps").as_usize(),
+            Some(41)
+        );
+        assert_eq!(
+            snapshot.get("version").as_usize(),
+            Some(crate::obs::SNAPSHOT_VERSION)
+        );
     }
 
     #[test]

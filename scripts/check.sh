@@ -84,6 +84,40 @@ grep -q 'network serve report' "$smoke/server.log" \
 grep -E 'spec accepted: [1-9][0-9]*/' "$smoke/server.log" \
   || { echo "expected nonzero accepted drafts in the server log:"; cat "$smoke/server.log"; exit 1; }
 
+echo "== telemetry smoke (stats wire command + flight recorder) =="
+# Live observability end to end: the server runs with a JSONL trace
+# recorder and periodic `stats:` snapshot lines; after bit-verified
+# generations the client fetches a `stats` snapshot over the wire
+# (nonzero scheduler.steps proves the registry is live), and the trace
+# file must hold one complete lifecycle record (retired_us) per request.
+target/release/bwa serve --artifact "$smoke/tiny.bwa" --backend bwa-cont \
+  --listen 127.0.0.1:0 --max-active 4 --kv-blocks 256 --block-size 4 \
+  --max-queue 8 --spec-k 4 --trace-out "$smoke/trace.jsonl" --stats-every 5 \
+  > "$smoke/obs-server.log" 2>&1 &
+obs_pid=$!
+addr=""
+for _ in $(seq 1 100); do
+  addr="$(sed -n 's/^listening on //p' "$smoke/obs-server.log")"
+  [ -n "$addr" ] && break
+  kill -0 "$obs_pid" 2>/dev/null \
+    || { echo "obs server died before listening:"; cat "$smoke/obs-server.log"; exit 1; }
+  sleep 0.1
+done
+[ -n "$addr" ] || { echo "obs server never reported its address"; cat "$smoke/obs-server.log"; exit 1; }
+target/release/bwa client --addr "$addr" --requests 3 --prompt-len 12 --gen 40 \
+  --seed 7 --verify-artifact "$smoke/tiny.bwa"
+statsout="$(target/release/bwa client --addr "$addr" --requests 0 --stats)"
+echo "$statsout" | grep -E '"scheduler.steps": [1-9]' \
+  || { echo "stats snapshot missing nonzero scheduler.steps:"; echo "$statsout"; exit 1; }
+echo "$statsout" | grep -E '"server.served": 3' \
+  || { echo "stats snapshot missing server.served = 3:"; echo "$statsout"; exit 1; }
+target/release/bwa client --addr "$addr" --requests 0 --shutdown
+wait "$obs_pid" || { echo "obs server exited nonzero:"; cat "$smoke/obs-server.log"; exit 1; }
+grep -q '^stats: ' "$smoke/obs-server.log" \
+  || { echo "expected periodic stats lines in the server log:"; cat "$smoke/obs-server.log"; exit 1; }
+[ "$(grep -c '"retired_us"' "$smoke/trace.jsonl")" -eq 3 ] \
+  || { echo "expected 3 complete trace records:"; cat "$smoke/trace.jsonl"; exit 1; }
+
 echo "== cargo doc (rustdoc warnings are errors) =="
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 

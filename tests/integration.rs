@@ -336,6 +336,7 @@ fn batcher_drains_burst_in_full_batches() {
             resp_tx: rtx.clone(),
             stream_tx: None,
             cfg: GenConfig::default(),
+            trace: None,
         })
         .unwrap();
     }
@@ -409,6 +410,7 @@ fn continuous_scheduler_serves_staggered_arrivals_end_to_end() {
         SchedulerConfig {
             max_active: 4,
             admit: AdmissionPolicy::Eager,
+            spec_k: 0,
         },
     );
     assert!(name.contains("continuous"), "{name}");
@@ -481,6 +483,7 @@ fn shared_prefix_workload_reuses_cached_blocks_end_to_end() {
         SchedulerConfig {
             max_active: 4,
             admit: AdmissionPolicy::Eager,
+            spec_k: 0,
         },
     );
     assert!(name.contains("paged kv"), "{name}");
@@ -580,10 +583,12 @@ fn network_server_streams_bit_identical_to_in_process_run() {
             scheduler: SchedulerConfig {
                 max_active: 4,
                 admit: AdmissionPolicy::Eager,
+                spec_k: 0,
             },
             max_queue: 8,
             limits,
             model: "it-net".into(),
+            obs: bwa_llm::obs::ObsOptions::default(),
         },
     )
     .unwrap();
@@ -654,10 +659,12 @@ fn network_capacity_rejection_over_the_wire() {
             scheduler: SchedulerConfig {
                 max_active: 2,
                 admit: AdmissionPolicy::Eager,
+                spec_k: 0,
             },
             max_queue: 8,
             limits,
             model: "it-cap".into(),
+            obs: bwa_llm::obs::ObsOptions::default(),
         },
     )
     .unwrap();
