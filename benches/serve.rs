@@ -52,6 +52,17 @@
 //! are derived from the registry's stage histograms — the same numbers
 //! a `stats` wire frame would report.
 //!
+//! A sixth, **hostile-mix** workload (under the `hostile` key) lands a
+//! few very long batch-class prompts in the middle of the staggered
+//! interactive stream, twice: once with monolithic prefill (a long
+//! admission stalls every in-flight decode for the whole prompt) and
+//! once with `--prefill-chunk` + SLO preemption (the stall is capped at
+//! one chunk and a blocked interactive arrival may evict the long
+//! prefill back to the queue; evicted rows resume through the prefix
+//! index). Recorded: per-class TTFT/ITL percentiles, `preemptions`,
+//! `prefill_chunks`, and the interactive p99-ITL ratio between the two
+//! runs — the number chunking exists to improve.
+//!
 //! Results (req/s, generated tok/s, latency percentiles, and the
 //! speedups) are printed and recorded into `BENCH_serve.json` at the
 //! repo root so the perf trajectory tracks end-to-end serving
@@ -67,7 +78,7 @@
 use bwa_llm::coordinator::batcher::{Backend, BatcherConfig, BatcherStats};
 use bwa_llm::coordinator::metrics::{Histogram, SchedulerStats};
 use bwa_llm::coordinator::scheduler::{
-    AdmissionPolicy, Request, Scheduler, SchedulerConfig, TransformerBackend,
+    Priority, Request, SchedPolicy, Scheduler, SchedulerConfig, TransformerBackend,
 };
 use bwa_llm::coordinator::{
     client_prompts, serve_continuous_load, serve_lockstep_load, serve_workload_stats,
@@ -113,6 +124,13 @@ const SPEC_GEN: usize = 16;
 /// prompt is a random 4-token motif tiled to PROMPT_LEN, the pattern
 /// prompt-lookup drafting feeds on.
 const SPEC_PERIOD: usize = 4;
+/// Long batch-class requests mixed into the hostile workload.
+const HOSTILE_LONG_REQUESTS: usize = 2;
+/// Prompt length of each long batch request — 4x the interactive
+/// prompts, and within the tiny model's 160-row budget with GEN to go.
+const HOSTILE_LONG_PROMPT: usize = 96;
+/// Chunk size for the chunked half of the hostile comparison.
+const HOSTILE_CHUNK: usize = 16;
 
 fn quantized(cfg: &ModelConfig, seed: u64) -> Transformer {
     let ck = Checkpoint::random(cfg, seed);
@@ -185,6 +203,32 @@ fn record_continuous(name: &str, stats: &SchedulerStats, wall: f64) -> Json {
         fields.push(("prefix_hit_rate", Json::num(kv.hit_rate())));
         fields.push(("prefix_hits", Json::num(kv.prefix_hits as f64)));
         fields.push(("prefix_tokens_reused", Json::num(kv.prefix_tokens_reused as f64)));
+    }
+    if stats.prefill_chunks > 0 || stats.preemptions > 0 {
+        fields.push(("prefill_chunks", Json::num(stats.prefill_chunks as f64)));
+        fields.push(("preemptions", Json::num(stats.preemptions as f64)));
+    }
+    if stats.classes.iter().any(|c| c.requests > 0 && c.label != "interactive") {
+        // Per-class latency only matters once more than the default
+        // class is in play — a single-class run would repeat the
+        // top-level histograms.
+        let classes: Vec<Json> = stats
+            .classes
+            .iter()
+            .filter(|c| c.requests > 0)
+            .map(|c| {
+                Json::obj(vec![
+                    ("class", Json::str(c.label)),
+                    ("requests", Json::num(c.requests as f64)),
+                    ("preemptions", Json::num(c.preemptions as f64)),
+                    ("ttft_p50_us", Json::num(c.ttft.percentile(0.5).unwrap_or(0.0))),
+                    ("ttft_p99_us", Json::num(c.ttft.percentile(0.99).unwrap_or(0.0))),
+                    ("itl_p50_us", Json::num(c.itl.percentile(0.5).unwrap_or(0.0))),
+                    ("itl_p99_us", Json::num(c.itl.percentile(0.99).unwrap_or(0.0))),
+                ])
+            })
+            .collect();
+        fields.push(("classes", Json::Arr(classes)));
     }
     Json::obj(fields)
 }
@@ -288,6 +332,8 @@ fn main() {
         shared_prefix: 0,
         stagger: Duration::from_micros(STAGGER_US),
         seed: SEED,
+        long_requests: 0,
+        long_prompt_len: 0,
     };
     println!(
         "== staggered arrivals ({} clients, {STAGGER_US}us think time) ==",
@@ -322,7 +368,7 @@ fn main() {
         &stag,
         SchedulerConfig {
             max_active: MAX_BATCH,
-            admit: AdmissionPolicy::Eager,
+            policy: SchedPolicy::eager(),
             spec_k: 0,
         },
     );
@@ -357,6 +403,8 @@ fn main() {
         shared_prefix: SHARED_PREFIX,
         stagger: Duration::from_micros(STAGGER_US),
         seed: SEED,
+        long_requests: 0,
+        long_prompt_len: 0,
     };
     println!(
         "== shared-prefix arrivals ({SHARED_PREFIX} of {PROMPT_LEN} prompt tokens shared, \
@@ -364,7 +412,7 @@ fn main() {
     );
     let scfg = SchedulerConfig {
         max_active: MAX_BATCH,
-        admit: AdmissionPolicy::Eager,
+        policy: SchedPolicy::eager(),
         spec_k: 0,
     };
     let path = art_path.clone();
@@ -449,7 +497,7 @@ fn main() {
             &backend,
             SchedulerConfig {
                 max_active: MAX_BATCH,
-                admit: AdmissionPolicy::Eager,
+                policy: SchedPolicy::eager(),
                 spec_k,
             },
         );
@@ -463,6 +511,7 @@ fn main() {
                 resp_tx: rtx.clone(),
                 stream_tx: None,
                 cfg: GenConfig::default(),
+                priority: Priority::default(),
                 trace: None,
             });
         }
@@ -553,6 +602,8 @@ fn main() {
         shared_prefix: 0,
         stagger: Duration::ZERO,
         seed: SEED,
+        long_requests: 0,
+        long_prompt_len: 0,
     };
     println!("== network serving (loopback TCP, {CLIENTS} connections) ==");
     let pool = KvPoolConfig {
@@ -657,6 +708,78 @@ fn main() {
         stage_ms(&sm.stage_emit_us),
     );
 
+    // --- hostile mix: long batch prefills vs interactive latency ---
+    // The staggered interactive stream again, now sharing the machine
+    // with HOSTILE_LONG_REQUESTS batch-class prompts 4x the interactive
+    // length. Run 1 prefills monolithically: every long admission
+    // freezes in-flight decodes for the whole prompt. Run 2 chunks
+    // prefill at HOSTILE_CHUNK rows per step and keeps preemption on,
+    // so a blocked interactive arrival can evict a long prefill back to
+    // the queue; both runs serve the paged pool, so evicted rows
+    // re-enter through the prefix index rather than re-prefilling.
+    let hostile = Workload {
+        requests: REQUESTS,
+        clients: STAGGER_CLIENTS,
+        prompt_len: PROMPT_LEN,
+        gen: GEN,
+        shared_prefix: 0,
+        stagger: Duration::from_micros(STAGGER_US),
+        seed: SEED,
+        long_requests: HOSTILE_LONG_REQUESTS,
+        long_prompt_len: HOSTILE_LONG_PROMPT,
+    };
+    println!(
+        "== hostile mix ({HOSTILE_LONG_REQUESTS} batch prompts of {HOSTILE_LONG_PROMPT} tokens \
+         vs {REQUESTS} interactive, chunk 0 vs {HOSTILE_CHUNK}) =="
+    );
+    let run_hostile = |chunk: usize| {
+        let path = art_path.clone();
+        serve_continuous_load(
+            move || {
+                let model = bwa_llm::artifact::load(&path).expect("artifact").model;
+                TransformerBackend::with_kv_pool(model, workers, "bwa", pool)
+            },
+            &hostile,
+            SchedulerConfig {
+                max_active: MAX_BATCH,
+                spec_k: 0,
+                policy: SchedPolicy {
+                    prefill_chunk: chunk,
+                    ..SchedPolicy::eager()
+                },
+            },
+        )
+    };
+    let (_, mono_stats, mono_wall) = run_hostile(0);
+    let (_, chunk_stats, chunk_wall) = run_hostile(HOSTILE_CHUNK);
+    assert!(
+        chunk_stats.prefill_chunks > 0,
+        "chunked hostile run must split its prefills"
+    );
+    let hostile_line = |tag: &str, s: &SchedulerStats| {
+        let i = &s.classes[Priority::Interactive.index()];
+        println!(
+            "{tag:<28} {:>7.2} req/s  {:>8.1} tok/s  interactive ttft p99 {:>8.0}us  \
+             itl p99 {:>7.0}us  ({} preemptions, {} chunk steps)",
+            s.throughput_rps,
+            s.tokens_per_s,
+            i.ttft.percentile(0.99).unwrap_or(0.0),
+            i.itl.percentile(0.99).unwrap_or(0.0),
+            s.preemptions,
+            s.prefill_chunks,
+        );
+    };
+    hostile_line("bwa-cont monolithic", &mono_stats);
+    hostile_line("bwa-cont chunked", &chunk_stats);
+    let itl_p99 =
+        |s: &SchedulerStats| s.classes[Priority::Interactive.index()].itl.percentile(0.99);
+    let hostile_itl_ratio =
+        itl_p99(&mono_stats).unwrap_or(0.0) / itl_p99(&chunk_stats).unwrap_or(0.0).max(1e-9);
+    println!(
+        "interactive p99-ITL improvement from chunking + preemption (hostile mix): \
+         {hostile_itl_ratio:.2}x"
+    );
+
     let json = Json::obj(vec![
         ("model", Json::str(cfg.name.as_str())),
         ("params", Json::num(cfg.param_count() as f64)),
@@ -722,6 +845,19 @@ fn main() {
                 ("tok_per_s_enabled", Json::num(obs_on_stats.tokens_per_s)),
                 ("enabled_over_disabled", Json::num(obs_ratio)),
                 ("kernel_gemm_calls", Json::num(obs_gemm_calls as f64)),
+            ]),
+        ),
+        (
+            "hostile",
+            Json::obj(vec![
+                ("long_requests", Json::num(HOSTILE_LONG_REQUESTS as f64)),
+                ("long_prompt_len", Json::num(HOSTILE_LONG_PROMPT as f64)),
+                ("prefill_chunk", Json::num(HOSTILE_CHUNK as f64)),
+                ("max_active", Json::num(MAX_BATCH as f64)),
+                ("stagger_us", Json::num(STAGGER_US as f64)),
+                ("monolithic", record_continuous("bwa-cont-mono", &mono_stats, mono_wall)),
+                ("chunked", record_continuous("bwa-cont-chunked", &chunk_stats, chunk_wall)),
+                ("interactive_itl_p99_ratio", Json::num(hostile_itl_ratio)),
             ]),
         ),
         (

@@ -83,6 +83,10 @@ pub struct Request {
     /// exact selection every serve path used before configs existed —
     /// and the lockstep batcher only supports that default.
     pub cfg: GenConfig,
+    /// Priority class ([`super::scheduler::Priority`]), honored by the
+    /// continuous scheduler's admission order and preemption rules; the
+    /// default is `Interactive`. The lockstep batcher ignores it.
+    pub priority: super::scheduler::Priority,
     /// Lifecycle trace span ([`crate::obs::Trace`]), honored by the
     /// continuous scheduler: the submitter creates it (carrying its own
     /// flight-recorder sink), the scheduler marks
@@ -261,6 +265,7 @@ mod tests {
                 resp_tx: rtx.clone(),
                 stream_tx: None,
                 cfg: GenConfig::default(),
+                priority: crate::coordinator::scheduler::Priority::default(),
                 trace: None,
             })
             .unwrap();
@@ -295,6 +300,7 @@ mod tests {
                 resp_tx: rtx.clone(),
                 stream_tx: None,
                 cfg: GenConfig::default(),
+                priority: crate::coordinator::scheduler::Priority::default(),
                 trace: None,
             })
             .unwrap();
@@ -331,6 +337,7 @@ mod tests {
                 resp_tx: rtx.clone(),
                 stream_tx: None,
                 cfg: GenConfig::default(),
+                priority: crate::coordinator::scheduler::Priority::default(),
                 trace: None,
             })
             .unwrap();

@@ -52,6 +52,17 @@ impl Histogram {
         Some(self.samples_us.iter().sum::<f64>() / self.samples_us.len() as f64)
     }
 
+    /// Fraction of samples at or under `limit_us` — SLO attainment
+    /// against a microsecond target. `None` when empty (an absent
+    /// distribution is neither 0% nor 100% attainment).
+    pub fn share_within_us(&self, limit_us: f64) -> Option<f64> {
+        if self.samples_us.is_empty() {
+            return None;
+        }
+        let within = self.samples_us.iter().filter(|&&s| s <= limit_us).count();
+        Some(within as f64 / self.samples_us.len() as f64)
+    }
+
     pub fn report(&self, name: &str) -> String {
         match (
             self.mean(),
@@ -193,6 +204,53 @@ impl SpecStats {
     }
 }
 
+/// Per-priority-class serving statistics
+/// ([`Priority`](crate::coordinator::scheduler::Priority)): latency
+/// distributions split by class plus SLO attainment against the class's
+/// configured targets. One entry per class in [`SchedulerStats::classes`],
+/// in priority order.
+#[derive(Debug)]
+pub struct ClassStats {
+    /// Class name (`interactive` | `batch`).
+    pub label: &'static str,
+    /// Requests of this class retired.
+    pub requests: usize,
+    /// Times a slot of this class was preempted back to the queue (a
+    /// request preempted twice counts twice).
+    pub preemptions: usize,
+    /// TTFT restricted to this class — one sample per request with
+    /// `gen >= 1`, recorded at its *first* token (a preempted-then-
+    /// resumed request still has exactly one sample).
+    pub ttft: Histogram,
+    /// ITL restricted to this class (same inter-step definition as
+    /// [`SchedulerStats::itl`]).
+    pub itl: Histogram,
+    /// Configured TTFT target in µs; `0` = no target.
+    pub ttft_slo_us: u64,
+    /// Configured ITL target in µs; `0` = no target.
+    pub itl_slo_us: u64,
+}
+
+impl ClassStats {
+    /// Fraction of this class's TTFT samples within the target; `None`
+    /// when no target is configured or no samples exist.
+    pub fn ttft_attainment(&self) -> Option<f64> {
+        if self.ttft_slo_us == 0 {
+            return None;
+        }
+        self.ttft.share_within_us(self.ttft_slo_us as f64)
+    }
+
+    /// Fraction of this class's ITL samples within the target; `None`
+    /// when no target is configured or no samples exist.
+    pub fn itl_attainment(&self) -> Option<f64> {
+        if self.itl_slo_us == 0 {
+            return None;
+        }
+        self.itl.share_within_us(self.itl_slo_us as f64)
+    }
+}
+
 /// Final statistics returned by the continuous scheduler
 /// ([`crate::coordinator::scheduler::run_scheduler`]) when its request
 /// channel closes. Token-granular where [`super::batcher::BatcherStats`]
@@ -239,6 +297,15 @@ pub struct SchedulerStats {
     /// configured stop tokens (the stop token itself is still emitted
     /// and counted in `gen_tokens`).
     pub stop_hits: usize,
+    /// Prefill chunks fed (`--prefill-chunk > 0` boundaries only);
+    /// `0` when chunking is off or the backend cannot chunk.
+    pub prefill_chunks: usize,
+    /// Slots preempted back to the queue across the run.
+    pub preemptions: usize,
+    /// Per-priority-class distributions + SLO attainment, in priority
+    /// order (`interactive`, `batch`). Always present; classes with no
+    /// traffic report zero requests and empty histograms.
+    pub classes: Vec<ClassStats>,
     /// KV block-pool occupancy + prefix-reuse counters; `None` unless
     /// the backend serves from a paged KV pool.
     pub kv: Option<KvCacheStats>,
@@ -352,6 +419,36 @@ mod tests {
         let mut e = Histogram::default();
         e.merge(&a);
         assert_eq!(e.percentile(0.99), Some(40.0));
+    }
+
+    #[test]
+    fn share_within_us_is_exact_and_none_when_empty() {
+        let mut h = Histogram::default();
+        assert_eq!(h.share_within_us(100.0), None, "empty is not 0% or 100%");
+        for i in 1..=10u64 {
+            h.record(Duration::from_micros(i * 10));
+        }
+        assert!((h.share_within_us(50.0).unwrap() - 0.5).abs() < 1e-12);
+        assert_eq!(h.share_within_us(1000.0), Some(1.0));
+        assert_eq!(h.share_within_us(0.0), Some(0.0));
+    }
+
+    #[test]
+    fn class_attainment_is_none_without_a_target_and_exact_with_one() {
+        let mut ttft = Histogram::default();
+        ttft.record(Duration::from_micros(80));
+        ttft.record(Duration::from_micros(120));
+        let s = ClassStats {
+            label: "interactive",
+            requests: 2,
+            preemptions: 1,
+            ttft,
+            itl: Histogram::default(),
+            ttft_slo_us: 100,
+            itl_slo_us: 0,
+        };
+        assert!((s.ttft_attainment().unwrap() - 0.5).abs() < 1e-12);
+        assert_eq!(s.itl_attainment(), None, "no target configured");
     }
 
     #[test]

@@ -56,6 +56,8 @@ pub mod engine;
 pub mod metrics;
 pub mod scheduler;
 pub mod speculative;
+#[cfg(test)]
+mod torture;
 
 use crate::coordinator::batcher::{run_batcher, Backend, BatcherConfig, BatcherStats, Request};
 use crate::coordinator::metrics::SchedulerStats;
@@ -132,6 +134,16 @@ pub static SERVE_SPEC: Spec = Spec {
         ("max-active", "8", "bwa-cont: slot-pool size (max in-flight decode sessions)"),
         ("admit", "eager", "bwa-cont: admission policy, eager | drain"),
         ("spec-k", "0", "bwa-cont: speculative prompt-lookup draft tokens per step (0 = off)"),
+        ("prefill-chunk", "0", "bwa-cont: prefill at most this many prompt tokens per step, \
+          interleaved with decode (0 = whole prompt at admission)"),
+        ("slo-ttft-us", "0", "bwa-cont: interactive-class TTFT target in us — preemption \
+          patience and attainment reporting (0 = no target, preempt immediately)"),
+        ("slo-itl-us", "0", "bwa-cont: interactive-class inter-token-latency target in us \
+          for attainment reporting (0 = no target)"),
+        ("long-requests", "0", "workload: extra batch-priority requests with long prompts, \
+          submitted by a dedicated client (0 = none)"),
+        ("long-prompt-len", "0", "workload: prompt tokens per long request (requires \
+          --long-requests >= 1)"),
         ("kv-blocks", "0", "bwa-cont: KV block-pool capacity in physical blocks (0 = auto-size)"),
         ("block-size", "16", "bwa-cont: KV-cache rows (token positions) per block"),
         ("shared-prefix", "0", "workload: common system-prompt tokens leading every prompt"),
@@ -146,7 +158,10 @@ pub static SERVE_SPEC: Spec = Spec {
         ("stats-every", "0", "bwa-cont: print a `stats: {json}` snapshot line every N \
           scheduler steps (0 = off)"),
     ],
-    switches: &[],
+    switches: &[(
+        "no-preempt",
+        "bwa-cont: never evict an active slot for a blocked higher-priority request",
+    )],
 };
 
 pub fn cmd_serve(args: &Args) -> Result<(), String> {
@@ -196,6 +211,23 @@ pub fn cmd_serve(args: &Args) -> Result<(), String> {
         return Err(format!(
             "--spec-k requires --backend bwa-cont (the continuous scheduler); got '{backend_kind}'"
         ));
+    }
+    let prefill_chunk = args.usize_or("prefill-chunk", 0).map_err(|e| e.to_string())?;
+    let slo_ttft_us = args.u64_or("slo-ttft-us", 0).map_err(|e| e.to_string())?;
+    let slo_itl_us = args.u64_or("slo-itl-us", 0).map_err(|e| e.to_string())?;
+    let no_preempt = args.switch("no-preempt");
+    if (prefill_chunk > 0 || slo_ttft_us > 0 || slo_itl_us > 0 || no_preempt)
+        && backend_kind != "bwa-cont"
+    {
+        return Err(format!(
+            "--prefill-chunk / --slo-ttft-us / --slo-itl-us / --no-preempt require \
+             --backend bwa-cont (the continuous scheduler); got '{backend_kind}'"
+        ));
+    }
+    let long_requests = args.usize_or("long-requests", 0).map_err(|e| e.to_string())?;
+    let long_prompt_len = args.usize_or("long-prompt-len", 0).map_err(|e| e.to_string())?;
+    if long_requests > 0 && long_prompt_len == 0 {
+        return Err("--long-requests needs --long-prompt-len >= 1".into());
     }
     let trace_out = args.str_or("trace-out", "").to_string();
     let stats_every = args.usize_or("stats-every", 0).map_err(|e| e.to_string())?;
@@ -265,17 +297,24 @@ pub fn cmd_serve(args: &Args) -> Result<(), String> {
     // Reject an unservable workload up front, with the check derived
     // from how the chosen backend actually backs its KV cache.
     let mut kv_cfg: Option<KvPoolConfig> = None;
+    // The longest prompt any request submits — long batch requests
+    // included — drives both the context-window check and KV sizing.
+    let max_prompt = if long_requests > 0 {
+        prompt_len.max(long_prompt_len)
+    } else {
+        prompt_len
+    };
     if let Some(m) = &prepared {
         if backend_kind == "bwa-cont" {
             // Paged path: the model's context window still bounds each
             // request (RoPE positions past max_seq are outside the
             // model's contract, and every other serving path refuses
             // them)...
-            let rows = prompt_len + gen.saturating_sub(1);
+            let rows = max_prompt + gen.saturating_sub(1);
             if rows > m.cfg.max_seq {
                 return Err(format!(
-                    "prompt-len {prompt_len} + gen {gen} needs {rows} positions, but model \
-                     '{}' supports max_seq {} — lower --prompt-len/--gen",
+                    "longest prompt {max_prompt} + gen {gen} needs {rows} positions, but model \
+                     '{}' supports max_seq {} — lower --prompt-len/--long-prompt-len/--gen",
                     m.cfg.name, m.cfg.max_seq
                 ));
             }
@@ -288,7 +327,7 @@ pub fn cmd_serve(args: &Args) -> Result<(), String> {
                 blocks: 0,
                 block_tokens,
             };
-            let per_request = pool_cfg.worst_case_blocks(prompt_len, gen, m.cfg.n_layers);
+            let per_request = pool_cfg.worst_case_blocks(max_prompt, gen, m.cfg.n_layers);
             pool_cfg.blocks = if kv_blocks == 0 {
                 // auto-size: every slot's worst case, x2 so the prefix
                 // cache can retain published prompts between requests
@@ -311,10 +350,10 @@ pub fn cmd_serve(args: &Args) -> Result<(), String> {
             // prompt + gen cache per request, bounded by max_seq (the
             // engine and model assert the same; mid-serve that would
             // panic the batcher thread).
-            let need = prompt_len + gen.saturating_sub(1);
+            let need = max_prompt + gen.saturating_sub(1);
             if need > m.cfg.max_seq {
                 return Err(format!(
-                    "prompt-len {prompt_len} + gen {gen} needs {need} contiguous KV rows, \
+                    "longest prompt {max_prompt} + gen {gen} needs {need} contiguous KV rows, \
                      but model '{}' supports max_seq {} — lower --prompt-len/--gen",
                     m.cfg.name, m.cfg.max_seq
                 ));
@@ -330,6 +369,8 @@ pub fn cmd_serve(args: &Args) -> Result<(), String> {
         shared_prefix,
         stagger: Duration::from_micros(stagger_us),
         seed,
+        long_requests,
+        long_prompt_len,
     };
 
     // The continuous scheduler drives its own serve loop (admission at
@@ -341,7 +382,21 @@ pub fn cmd_serve(args: &Args) -> Result<(), String> {
             "kv pool: {} blocks x {} tokens/block ({} layers x K/V)",
             pool_cfg.blocks, pool_cfg.block_tokens, model.cfg.n_layers
         );
-        let scfg = SchedulerConfig { max_active, admit, spec_k };
+        let mut slo = [scheduler::SloTarget::default(); scheduler::Priority::COUNT];
+        slo[scheduler::Priority::Interactive.index()] = scheduler::SloTarget {
+            ttft_us: slo_ttft_us,
+            itl_us: slo_itl_us,
+        };
+        let scfg = SchedulerConfig {
+            max_active,
+            spec_k,
+            policy: scheduler::SchedPolicy {
+                admit,
+                prefill_chunk,
+                preempt: !no_preempt,
+                slo,
+            },
+        };
         // Telemetry: the serve process records into the process-global
         // registry (so kernel and KV-pool counters land in the same
         // snapshot as the scheduler's), optionally with a flight
@@ -460,6 +515,14 @@ pub struct Workload {
     /// so clients start out of phase.
     pub stagger: Duration,
     pub seed: u64,
+    /// Extra long-prompt requests submitted at `Batch` priority by one
+    /// dedicated additional client thread, on top of `requests` — the
+    /// "hostile mix" knob: a few huge prefills competing with many short
+    /// interactive requests (see `docs/SCHEDULING.md`). `0` = none.
+    pub long_requests: usize,
+    /// Prompt tokens per long request ([`long_prompts`] samples them
+    /// from the same corpus, seeded independently of the short clients).
+    pub long_prompt_len: usize,
 }
 
 /// The exact prompt sequence client `c` of `load` submits: `n` prompts,
@@ -487,6 +550,21 @@ pub fn client_prompts(load: &Workload, c: usize, n: usize) -> Vec<Vec<u16>> {
             let mut tokens = shared.clone();
             tokens.extend_from_slice(&stream[start..start + suffix]);
             tokens
+        })
+        .collect()
+}
+
+/// The prompt sequence the dedicated long-request client submits when
+/// `load.long_requests > 0`: `n` prompts of `long_prompt_len` corpus
+/// tokens each, seeded independently of every short client so adding
+/// long requests never perturbs the short prompts.
+pub fn long_prompts(load: &Workload, n: usize) -> Vec<Vec<u16>> {
+    let mut rng = Rng::new(load.seed ^ 0x4C4F_4E47); // "LONG"
+    let stream = crate::data::corpus::train_split(&CorpusSpec::wiki(), 40_000);
+    (0..n)
+        .map(|_| {
+            let start = rng.below(stream.len() - load.long_prompt_len);
+            stream[start..start + load.long_prompt_len].to_vec()
         })
         .collect()
 }
@@ -552,10 +630,39 @@ where
                         resp_tx: rtx.clone(),
                         stream_tx: None,
                         cfg: GenConfig::default(),
+                        priority: scheduler::Priority::Interactive,
                         trace: recorder.as_ref().map(|r| Trace::new(Arc::clone(r), id)),
                     })
                     .expect("server alive");
                     // closed loop: wait for the response before next req
+                    let _ = rrx.recv();
+                }
+            });
+        }
+        // The hostile-mix client: long batch-priority prompts submitted
+        // back-to-back from one extra thread, ids after every short
+        // request's.
+        if load.long_requests > 0 {
+            let tx = tx.clone();
+            let recorder = recorder.clone();
+            let load = *load;
+            s.spawn(move || {
+                let prompts = long_prompts(&load, load.long_requests);
+                let (rtx, rrx) = mpsc::channel();
+                for (i, tokens) in prompts.into_iter().enumerate() {
+                    let id = (load.requests + i) as u64;
+                    tx.send(Request {
+                        id,
+                        tokens,
+                        gen: load.gen,
+                        submitted: Instant::now(),
+                        resp_tx: rtx.clone(),
+                        stream_tx: None,
+                        cfg: GenConfig::default(),
+                        priority: scheduler::Priority::Batch,
+                        trace: recorder.as_ref().map(|r| Trace::new(Arc::clone(r), id)),
+                    })
+                    .expect("server alive");
                     let _ = rrx.recv();
                 }
             });
@@ -719,6 +826,35 @@ pub fn continuous_report(name: &str, load: &Workload, stats: &SchedulerStats, wa
             spec.accept_hist,
         ));
     }
+    // scripts/check.sh greps the `prefill chunks:` and `preemptions:`
+    // prefixes for nonzero counts in its hostile-mix smoke.
+    if stats.prefill_chunks > 0 {
+        report.push_str(&format!(
+            "\nprefill chunks: {} partial prefill steps",
+            stats.prefill_chunks
+        ));
+    }
+    if stats.preemptions > 0 {
+        report.push_str(&format!(
+            "\npreemptions: {} slots preempted back to the queue",
+            stats.preemptions
+        ));
+    }
+    for c in &stats.classes {
+        if c.requests == 0 && c.preemptions == 0 {
+            continue;
+        }
+        report.push_str(&format!(
+            "\nclass {}: {} requests, {} preemptions",
+            c.label, c.requests, c.preemptions
+        ));
+        if let Some(a) = c.ttft_attainment() {
+            report.push_str(&format!(", ttft slo {:.0}%", a * 100.0));
+        }
+        if let Some(a) = c.itl_attainment() {
+            report.push_str(&format!(", itl slo {:.0}%", a * 100.0));
+        }
+    }
     report
 }
 
@@ -802,6 +938,8 @@ where
         shared_prefix: 0,
         stagger: Duration::ZERO,
         seed,
+        long_requests: 0,
+        long_prompt_len: 0,
     };
     serve_lockstep_load(make_backend, &load, cfg)
 }

@@ -10,9 +10,11 @@
 //! - a **slot pool** holds up to `max_active` in-flight
 //!   [`DecodeSession`]s;
 //! - at every **step boundary** queued requests are admitted into free
-//!   slots ([`AdmissionPolicy::Eager`]) and prefilled on the worker pool
-//!   ([`SessionBackend::prefill_batch`] — the same scoped-thread pool the
-//!   lockstep engine uses), which also yields their first token;
+//!   slots in `(priority, submission)` order ([`SchedPolicy`]) and
+//!   prefilled on the worker pool ([`SessionBackend::prefill_batch`] —
+//!   the same scoped-thread pool the lockstep engine uses), which also
+//!   yields their first token; with `prefill_chunk > 0` prefill is
+//!   instead spread over multiple boundaries (below);
 //! - one **batched decode step** then advances the whole ragged active
 //!   set — sessions at different positions, admitted at different
 //!   boundaries — via [`crate::model::Transformer::decode_step_batch_refs`];
@@ -20,6 +22,50 @@
 //!   [`StreamEvent`] channel the moment its step completes, and finished
 //!   sessions retire immediately, freeing their slot for the next
 //!   admission instead of idling until the batch drains.
+//!
+//! The request lifecycle is `queued → prefilling (chunked mode) →
+//! active → retired`, with one optional loop: a running slot can be
+//! **preempted back to the queue** (`active → queued`) by a blocked
+//! higher-priority candidate, and later re-admitted — resuming through
+//! the prefix cache — until it retires. Every request retires exactly
+//! once (torture-tested in `super::torture`).
+//!
+//! # Chunked prefill and SLO-aware preemption ([`SchedPolicy`])
+//!
+//! A long prompt prefilled whole at one boundary stalls every active
+//! decode stream for the entire prefill — head-of-line blocking in the
+//! ITL tail. With `prefill_chunk > 0` (CLI `--prefill-chunk`) the
+//! scheduler instead admits the request into a `Prefilling` slot and
+//! feeds at most that many prompt rows per boundary
+//! ([`SessionBackend::prefill_chunk`], backed by
+//! [`Transformer::prefill_suffix_with`] — a half-prefilled session is
+//! just a session with a shorter cached prefix), interleaved with the
+//! decode steps of the active slots. The chunk that feeds the final row
+//! yields the first token and promotes the slot to decoding. Chunked
+//! prefill is **bit-identical** to whole-prompt prefill for every chunk
+//! size (test-pinned): attention is causal, so a row's K/V and logits
+//! depend only on the rows before it, never on how many arrived
+//! together.
+//!
+//! Every request carries a [`Priority`] class ([`Request::priority`],
+//! wire field `priority`). Admission always picks the lowest
+//! `(priority, submission seq)` candidate; within a class the order is
+//! FIFO, and a blocked candidate holds everything behind it (no
+//! starvation by opportunistic re-admission). When the candidate is
+//! blocked — no free slot, or [`SessionBackend::try_reserve`] fails —
+//! and it has waited at least its class's TTFT target
+//! ([`SloTarget::ttft_us`]; `0` = immediately), the scheduler preempts
+//! the most recently admitted slot of *strictly lower* priority: the
+//! victim's computed rows are published to the prefix cache
+//! ([`SessionBackend::preempt_session`]), its unconsumed block
+//! reservation is refunded, and it re-enters the queue carrying its
+//! sampler (RNG stream intact) and generated-so-far tokens. On
+//! re-admission it reserves for `prompt + generated` and resumes
+//! bit-identically — the resumed stream equals the never-preempted one
+//! (test-pinned, including mid-chunk preemption). `preempt: false`
+//! (`--no-preempt`) disables the mechanism; [`SloTarget::itl_us`] is
+//! reporting-only (per-class attainment in
+//! [`ClassStats`](super::metrics::ClassStats)).
 //!
 //! Time-to-first-token is recorded per request and inter-step latency
 //! (ITL) once per participating slot per decode step — all tokens a
@@ -88,10 +134,13 @@
 //! block-aligned prefix — refcount bumps, no recompute), reserves the
 //! request's remaining block budget against the pool, and evicts
 //! least-recently-used cached prefixes if that is what it takes. A
-//! request whose budget does not fit stays queued (FIFO — nothing
-//! behind it jumps ahead), so the scheduler admits by **actual memory**,
+//! request whose budget does not fit stays queued (head-of-class
+//! blocking — nothing behind it jumps ahead; preemption, above, is the
+//! only escape hatch), so the scheduler admits by **actual memory**,
 //! not just slot count, and can never exceed the configured block
-//! budget (test-pinned). Prefill then computes only the unmatched
+//! budget (test-pinned). Reserved-but-undrawn blocks are refunded at
+//! retirement or preemption ([`SessionBackend::release_session`]), so
+//! an early stop cannot strand reservations. Prefill then computes only the unmatched
 //! suffix ([`Transformer::prefill_suffix_with`]) — bit-identical to a
 //! cold prefill — and publishes the new prompt blocks for the next
 //! request to reuse. Retiring sessions release their blocks; pool
@@ -107,7 +156,7 @@
 //! ```
 //! use bwa_llm::coordinator::batcher::Request;
 //! use bwa_llm::coordinator::scheduler::{
-//!     AdmissionPolicy, Scheduler, SchedulerConfig, SessionBackend,
+//!     Priority, SchedPolicy, Scheduler, SchedulerConfig, SessionBackend,
 //! };
 //! use bwa_llm::model::sampling::GenConfig;
 //! use std::sync::mpsc;
@@ -138,7 +187,7 @@
 //!     }
 //! }
 //!
-//! let cfg = SchedulerConfig { max_active: 2, admit: AdmissionPolicy::Eager, spec_k: 0 };
+//! let cfg = SchedulerConfig { max_active: 2, spec_k: 0, policy: SchedPolicy::eager() };
 //! let mut sched = Scheduler::new(&Mock, cfg);
 //! let (rtx, rrx) = mpsc::channel();
 //! let req = |id: u64, tokens: Vec<u16>, gen: usize| Request {
@@ -149,6 +198,7 @@
 //!     resp_tx: rtx.clone(),
 //!     stream_tx: None,
 //!     cfg: GenConfig::default(),
+//!     priority: Priority::default(),
 //!     trace: None,
 //! };
 //!
@@ -173,7 +223,7 @@
 
 use super::batcher::{Request, Response, StreamEvent};
 use super::engine::{prefill_pool, prefill_pool_seeded};
-use super::metrics::{Histogram, KvCacheStats, SchedulerStats, SpecStats};
+use super::metrics::{ClassStats, Histogram, KvCacheStats, SchedulerStats, SpecStats};
 use super::speculative::PromptLookupDrafter;
 use crate::kvpool::{BlockPool, KvPoolConfig, PrefixIndex, PrefixMatch};
 use crate::model::sampling::Sampler;
@@ -210,15 +260,138 @@ impl std::str::FromStr for AdmissionPolicy {
     }
 }
 
-/// Scheduler knobs — surfaced on the `serve` CLI as `--max-active` and
-/// `--admit`; sizing guidance lives in `docs/SCHEDULING.md`.
+/// Per-request priority class, carried on [`Request`] and the wire
+/// `generate` frame (`priority`). The derived order is the scheduling
+/// order — `Interactive < Batch` — and the scheduler always admits the
+/// lowest `(priority, submission seq)` candidate first.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Priority {
+    /// Latency-sensitive traffic (the default): admitted first, and —
+    /// when blocked past its TTFT target — allowed to preempt `Batch`
+    /// work ([`SchedPolicy::preempt`]).
+    #[default]
+    Interactive,
+    /// Throughput traffic: yields slots and KV blocks to `Interactive`
+    /// arrivals under pressure and resumes through the prefix cache.
+    Batch,
+}
+
+impl Priority {
+    /// Number of classes — sizes the per-class arrays
+    /// ([`SchedPolicy::slo`], per-class stats).
+    pub const COUNT: usize = 2;
+
+    /// Dense index into per-class arrays, aligned with [`Self::all`].
+    pub fn index(self) -> usize {
+        match self {
+            Priority::Interactive => 0,
+            Priority::Batch => 1,
+        }
+    }
+
+    /// Wire/CLI spelling (`interactive` | `batch`).
+    pub fn label(self) -> &'static str {
+        match self {
+            Priority::Interactive => "interactive",
+            Priority::Batch => "batch",
+        }
+    }
+
+    /// Every class in scheduling order, aligned with [`Self::index`].
+    pub fn all() -> [Priority; Priority::COUNT] {
+        [Priority::Interactive, Priority::Batch]
+    }
+}
+
+impl std::str::FromStr for Priority {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "interactive" => Ok(Priority::Interactive),
+            "batch" => Ok(Priority::Batch),
+            other => Err(format!("unknown priority '{other}' (have: interactive, batch)")),
+        }
+    }
+}
+
+/// Per-class latency targets in microseconds (`--slo-ttft-us`,
+/// `--slo-itl-us`). `0` — the default — means "no target": a blocked
+/// candidate of that class is *immediately* preemption-eligible, and
+/// attainment reporting skips the class.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SloTarget {
+    /// Target time-to-first-token. Doubles as preemption patience: a
+    /// queued candidate blocked at a boundary may evict lower-priority
+    /// work once it has waited this long.
+    pub ttft_us: u64,
+    /// Target inter-token latency. Reporting only (per-class attainment
+    /// in [`ClassStats`](super::metrics::ClassStats)): steady-state ITL
+    /// is protected by chunking/preempting *other* requests, not by a
+    /// threshold on this one.
+    pub itl_us: u64,
+}
+
+/// The scheduling policy: when to admit, how finely to chunk prefill,
+/// and when a blocked higher-priority candidate may preempt running
+/// work. Grown from the original two-variant [`AdmissionPolicy`], which
+/// survives as the `admit` field.
+#[derive(Clone, Copy, Debug)]
+pub struct SchedPolicy {
+    /// When queued requests may enter the slot pool at all.
+    pub admit: AdmissionPolicy,
+    /// Prefill at most this many prompt rows per step boundary,
+    /// interleaved with decode (`--prefill-chunk`); `0` — the default —
+    /// prefills whole prompts at admission. Needs a backend with
+    /// [`SessionBackend::supports_chunked_prefill`]; others silently
+    /// fall back to whole-prompt prefill. Bit-identical to unchunked
+    /// for every chunk size (test-pinned).
+    pub prefill_chunk: usize,
+    /// Allow a blocked higher-priority candidate past its TTFT target
+    /// to preempt the most recently admitted strictly-lower-priority
+    /// slot back to the queue (`--no-preempt` clears this). Preempted
+    /// work resumes bit-identically through the prefix cache.
+    pub preempt: bool,
+    /// Per-class SLO targets, indexed by [`Priority::index`].
+    pub slo: [SloTarget; Priority::COUNT],
+}
+
+impl Default for SchedPolicy {
+    fn default() -> Self {
+        Self {
+            admit: AdmissionPolicy::Eager,
+            prefill_chunk: 0,
+            preempt: true,
+            slo: [SloTarget::default(); Priority::COUNT],
+        }
+    }
+}
+
+impl SchedPolicy {
+    /// Continuous batching with whole-prompt prefill — the default.
+    pub fn eager() -> Self {
+        Self::default()
+    }
+
+    /// Lockstep-style waves ([`AdmissionPolicy::Drain`]); everything
+    /// else default.
+    pub fn drain() -> Self {
+        Self {
+            admit: AdmissionPolicy::Drain,
+            ..Self::default()
+        }
+    }
+}
+
+/// Scheduler knobs — surfaced on the `serve` CLI as `--max-active`,
+/// `--spec-k`, and the [`SchedPolicy`] flags; sizing guidance lives in
+/// `docs/SCHEDULING.md`.
 #[derive(Clone, Copy, Debug)]
 pub struct SchedulerConfig {
-    /// Slot-pool size: the most decode sessions kept in flight at once.
-    /// Also the admission batch bound — at most this many prefills run
-    /// per step boundary.
+    /// Slot-pool size: the most in-flight sessions (prefilling +
+    /// decoding) at once. Also the admission batch bound — at most this
+    /// many prefills run per step boundary.
     pub max_active: usize,
-    pub admit: AdmissionPolicy,
     /// Speculative prompt-lookup draft length per decode step
     /// (`--spec-k`); `0` — the default — disables speculation. Only
     /// greedy requests against a backend with
@@ -227,14 +400,17 @@ pub struct SchedulerConfig {
     /// [`super::speculative`] for the drafting rule and the
     /// greedy-identity argument.
     pub spec_k: usize,
+    /// Admission order, chunked prefill, and preemption
+    /// ([`SchedPolicy`]).
+    pub policy: SchedPolicy,
 }
 
 impl Default for SchedulerConfig {
     fn default() -> Self {
         Self {
             max_active: 8,
-            admit: AdmissionPolicy::Eager,
             spec_k: 0,
+            policy: SchedPolicy::default(),
         }
     }
 }
@@ -355,6 +531,58 @@ pub trait SessionBackend {
         let _ = session;
         usize::MAX
     }
+
+    /// Whether this backend implements the chunked-prefill pair
+    /// [`begin_session`](Self::begin_session) /
+    /// [`prefill_chunk`](Self::prefill_chunk). With the default
+    /// (`false`) the scheduler silently falls back to whole-prompt
+    /// prefill even when `prefill_chunk > 0`.
+    fn supports_chunked_prefill(&self) -> bool {
+        false
+    }
+
+    /// Open an empty session for `context` (the full token sequence the
+    /// session will be prefilled with) sized for `gen` more tokens, and
+    /// return it plus the number of rows already cached (prefix-cache
+    /// adoption — those rows are never fed again). Only called after a
+    /// matching [`try_reserve`](Self::try_reserve) succeeded, and only
+    /// when [`supports_chunked_prefill`](Self::supports_chunked_prefill).
+    fn begin_session(&self, context: &[u16], gen: usize) -> (Self::Session, usize) {
+        let _ = (context, gen);
+        unreachable!("begin_session called on a backend without supports_chunked_prefill")
+    }
+
+    /// Feed the next `take` rows of `context` into a session opened by
+    /// [`begin_session`](Self::begin_session). Returns `None` while
+    /// prompt rows remain; feeding the final row returns
+    /// `Some(first_token)` — selected by `sampler` from the last-row
+    /// logits, exactly the token whole-prompt prefill would have picked —
+    /// and publishes the prompt's KV blocks for prefix reuse.
+    fn prefill_chunk(
+        &self,
+        session: &mut Self::Session,
+        context: &[u16],
+        take: usize,
+        sampler: &mut Sampler,
+    ) -> Option<u16> {
+        let _ = (session, context, take, sampler);
+        unreachable!("prefill_chunk called on a backend without supports_chunked_prefill")
+    }
+
+    /// Dispose of a session at retirement, refunding any
+    /// reserved-but-undrawn KV blocks. The default just drops it.
+    fn release_session(&self, session: Self::Session) {
+        drop(session);
+    }
+
+    /// Dispose of a preempted session, first publishing its computed
+    /// rows (a prefix of `context`, the victim's prompt + generated
+    /// tokens) to the prefix cache so re-admission resumes warm. The
+    /// default ignores `context` and releases like a retirement.
+    fn preempt_session(&self, session: Self::Session, context: &[u16]) {
+        let _ = context;
+        self.release_session(session);
+    }
 }
 
 /// A prefix match adopted at reservation time, waiting for its
@@ -363,6 +591,10 @@ pub trait SessionBackend {
 struct PendingAdmission {
     prompt: Vec<u16>,
     matched: PrefixMatch,
+    /// Blocks reserved for this admission — carried onto the session
+    /// ([`DecodeSession::reserved_blocks`]) so the unconsumed remainder
+    /// can be refunded at retirement/preemption.
+    reserved: usize,
 }
 
 /// Prefix-reuse counters accumulated by the paged admission path.
@@ -387,9 +619,11 @@ struct KvServing {
 impl Drop for KvServing {
     fn drop(&mut self) {
         // Reservations that never reached prefill still hold adopted
-        // block references — release them so the pool balances.
+        // block references and an outstanding reservation — release
+        // both so the pool balances.
         for pa in self.pending.lock().unwrap().drain(..) {
             pa.matched.release(&self.pool);
+            self.pool.unreserve(pa.reserved);
         }
     }
 }
@@ -495,13 +729,14 @@ impl TransformerBackend {
             let mut pending = kv.pending.lock().unwrap();
             let mut counters = kv.stats.lock().unwrap();
             for &p in prompts {
-                let matched = match pending.front() {
+                let (matched, reserved) = match pending.front() {
                     Some(pa) if pa.prompt == p => {
-                        pending.pop_front().expect("checked front").matched
+                        let pa = pending.pop_front().expect("checked front");
+                        (pa.matched, pa.reserved)
                     }
                     // No (or misaligned) reservation — a direct library
                     // call. Match now instead.
-                    _ => index.lookup(p, &kv.pool),
+                    _ => (index.lookup(p, &kv.pool), 0),
                 };
                 counters.requests += 1;
                 if matched.rows > 0 {
@@ -511,7 +746,9 @@ impl TransformerBackend {
                         crate::obs::global().kvpool.prefix_hits.incr(1);
                     }
                 }
-                sessions.push(self.model.new_session_from_prefix(&kv.pool, matched));
+                let mut sess = self.model.new_session_from_prefix(&kv.pool, matched);
+                sess.reserved_blocks = reserved;
+                sessions.push(sess);
             }
         }
         // Suffix prefill across the worker pool (cold sessions prefill
@@ -652,6 +889,7 @@ impl SessionBackend for TransformerBackend {
         kv.pending.lock().unwrap().push_back(PendingAdmission {
             prompt: prompt.to_vec(),
             matched,
+            reserved: needed,
         });
         true
     }
@@ -696,6 +934,149 @@ impl SessionBackend for TransformerBackend {
     fn rows_budget(&self, session: &DecodeSession) -> usize {
         self.model.cfg.max_seq.saturating_sub(session.pos)
     }
+
+    fn supports_chunked_prefill(&self) -> bool {
+        true
+    }
+
+    fn begin_session(&self, context: &[u16], gen: usize) -> (DecodeSession, usize) {
+        let Some(kv) = &self.kv else {
+            let cap = context.len() + gen.saturating_sub(1);
+            return (self.model.new_session_with_capacity(cap), 0);
+        };
+        // Same adoption-or-lookup dance as `prefill_logits`, minus the
+        // suffix forward — chunks feed it over the next boundaries.
+        let mut index = kv.index.lock().unwrap();
+        let mut pending = kv.pending.lock().unwrap();
+        let mut counters = kv.stats.lock().unwrap();
+        let (matched, reserved) = match pending.front() {
+            Some(pa) if pa.prompt == context => {
+                let pa = pending.pop_front().expect("checked front");
+                (pa.matched, pa.reserved)
+            }
+            _ => (index.lookup(context, &kv.pool), 0),
+        };
+        counters.requests += 1;
+        if matched.rows > 0 {
+            counters.hits += 1;
+            counters.tokens_reused += matched.rows;
+            if crate::obs::enabled() {
+                crate::obs::global().kvpool.prefix_hits.incr(1);
+            }
+        }
+        let rows = matched.rows;
+        let mut sess = self.model.new_session_from_prefix(&kv.pool, matched);
+        sess.reserved_blocks = reserved;
+        (sess, rows)
+    }
+
+    fn prefill_chunk(
+        &self,
+        session: &mut DecodeSession,
+        context: &[u16],
+        take: usize,
+        sampler: &mut Sampler,
+    ) -> Option<u16> {
+        let end = session.pos + take;
+        debug_assert!(end <= context.len(), "chunk past the context end");
+        let mut scratch = PrefillScratch::default();
+        let logits = self.model.prefill_suffix_with(session, &context[..end], &mut scratch);
+        if end < context.len() {
+            return None;
+        }
+        // Final chunk: publish the prompt blocks for prefix reuse, same
+        // as whole-prompt prefill does after its forward.
+        if let Some(kv) = &self.kv {
+            let mut index = kv.index.lock().unwrap();
+            let per_layer: Vec<_> = session
+                .caches
+                .iter_mut()
+                .filter_map(|c| c.freeze_prefix(context.len()))
+                .collect();
+            debug_assert_eq!(per_layer.len(), session.caches.len());
+            index.insert(context, &per_layer, &kv.pool);
+        }
+        Some(sampler.select(&logits))
+    }
+
+    fn release_session(&self, session: DecodeSession) {
+        if let Some(kv) = &self.kv {
+            kv.pool.unreserve(session.unconsumed_reservation());
+        }
+        drop(session);
+    }
+
+    fn preempt_session(&self, session: DecodeSession, context: &[u16]) {
+        let mut sess = session;
+        if let Some(kv) = &self.kv {
+            // Publish every computed row — `pos` rows of `context` are
+            // in the cache (= context.len() - 1 for a decoding victim,
+            // = rows fed so far for a mid-prefill one) — so the
+            // re-admitted request's lookup adopts them instead of
+            // recomputing.
+            let rows = sess.pos.min(context.len());
+            if rows > 0 {
+                let mut index = kv.index.lock().unwrap();
+                let per_layer: Vec<_> = sess
+                    .caches
+                    .iter_mut()
+                    .filter_map(|c| c.freeze_prefix(rows))
+                    .collect();
+                if per_layer.len() == sess.caches.len() {
+                    index.insert(&context[..rows], &per_layer, &kv.pool);
+                }
+            }
+            kv.pool.unreserve(sess.unconsumed_reservation());
+        }
+        drop(sess);
+    }
+}
+
+/// Decode state carried across a preemption: the full token context the
+/// resumed session must be rebuilt from, and the sampler mid-stream (its
+/// RNG state makes the resumed pick sequence equal the never-preempted
+/// one).
+struct ResumeState {
+    /// `prompt ++ generated-so-far` — what re-admission reserves for,
+    /// prefills (minus the prefix-cache hit), and seeds the drafter with.
+    context: Vec<u16>,
+    sampler: Sampler,
+}
+
+/// A queue entry: the request plus its submission sequence number (the
+/// FIFO tiebreak within a priority class — preserved across preemption
+/// so a preempted request re-enters at its original rank) and, for
+/// preempted work, the state to resume from.
+struct Queued {
+    req: Request,
+    seq: u64,
+    resume: Option<ResumeState>,
+}
+
+impl Queued {
+    /// The token sequence admission must reserve and prefill for.
+    fn context(&self) -> &[u16] {
+        match &self.resume {
+            Some(rs) => &rs.context,
+            None => &self.req.tokens,
+        }
+    }
+
+    /// Tokens still to generate (net of pre-preemption output).
+    fn remaining_gen(&self) -> usize {
+        self.req.gen.saturating_sub(self.context().len() - self.req.tokens.len())
+    }
+}
+
+/// Where an in-flight slot is in its lifecycle.
+enum SlotState {
+    /// Chunked prefill in progress: `fed` of `context.len()` rows are in
+    /// the session (including any prefix-cache adoption). Advances by
+    /// one chunk per step boundary; feeding the last row promotes the
+    /// slot to [`SlotState::Decoding`].
+    Prefilling { context: Vec<u16>, fed: usize },
+    /// Normal decode: participates in the batched decode step.
+    Decoding,
 }
 
 /// One in-flight request: its session, what it has generated, and the
@@ -703,6 +1084,17 @@ impl SessionBackend for TransformerBackend {
 struct Slot<S> {
     id: u64,
     gen: usize,
+    /// The original request prompt — kept so preemption can rebuild the
+    /// [`Request`] (resume context = `prompt ++ generated`).
+    prompt: Vec<u16>,
+    priority: Priority,
+    /// Submission sequence number (stable across preemption).
+    seq: u64,
+    /// Admission sequence number — bumps on every (re-)admission; the
+    /// preemption victim is the *most recently admitted* lower-priority
+    /// slot (it has the least sunk work).
+    admit_seq: u64,
+    state: SlotState,
     session: S,
     /// Per-request token selector + stop-token membership, built from
     /// the request's [`GenConfig`](crate::model::sampling::GenConfig).
@@ -737,11 +1129,27 @@ struct Slot<S> {
 /// [`run_scheduler`] wraps this in a channel loop for serving;
 /// tests and the doctest drive `submit`/`step` directly so admission
 /// timing is deterministic.
+/// Per-priority-class accumulators, folded into
+/// [`ClassStats`](super::metrics::ClassStats) at [`Scheduler::finish`].
+#[derive(Default)]
+struct ClassAccum {
+    requests: usize,
+    preemptions: usize,
+    ttft: Histogram,
+    itl: Histogram,
+}
+
 pub struct Scheduler<'a, B: SessionBackend> {
     backend: &'a B,
     cfg: SchedulerConfig,
-    queue: VecDeque<Request>,
+    queue: VecDeque<Queued>,
     active: Vec<Slot<B::Session>>,
+    /// Next submission sequence number ([`Queued::seq`]).
+    next_seq: u64,
+    /// Total (re-)admissions — the source of [`Slot::admit_seq`].
+    admissions: u64,
+    /// Per-class accumulators, indexed by [`Priority::index`].
+    classes: [ClassAccum; Priority::COUNT],
     ttft: Histogram,
     itl: Histogram,
     latency: Histogram,
@@ -783,6 +1191,9 @@ impl<'a, B: SessionBackend> Scheduler<'a, B> {
             cfg,
             queue: VecDeque::new(),
             active: Vec::new(),
+            next_seq: 0,
+            admissions: 0,
+            classes: Default::default(),
             ttft: Histogram::default(),
             itl: Histogram::default(),
             latency: Histogram::default(),
@@ -799,9 +1210,12 @@ impl<'a, B: SessionBackend> Scheduler<'a, B> {
     }
 
     /// Queue a request. It enters the decode set at the next step
-    /// boundary with a free slot (under [`AdmissionPolicy::Eager`]).
+    /// boundary with a free slot (under [`AdmissionPolicy::Eager`]), in
+    /// `(priority, submission)` order.
     pub fn submit(&mut self, req: Request) {
-        self.queue.push_back(req);
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.queue.push_back(Queued { req, seq, resume: None });
     }
 
     /// Requests queued but not yet admitted.
@@ -826,39 +1240,78 @@ impl<'a, B: SessionBackend> Scheduler<'a, B> {
     /// `false` if there was nothing to do (idle).
     pub fn step(&mut self) -> bool {
         let mut progressed = false;
+        let chunked =
+            self.cfg.policy.prefill_chunk > 0 && self.backend.supports_chunked_prefill();
 
-        // --- admission ---
-        let admit_ok = match self.cfg.admit {
+        // --- admission (+ preemption) ---
+        let admit_ok = match self.cfg.policy.admit {
             AdmissionPolicy::Eager => true,
             AdmissionPolicy::Drain => self.active.is_empty(),
         };
-        if admit_ok && self.active.len() < self.cfg.max_active && !self.queue.is_empty() {
-            // Admit from the queue head while a slot is free AND the
-            // backend can reserve the request's KV budget. FIFO: the
-            // first request that does not fit holds everything behind
-            // it — retirements (and cache eviction inside try_reserve)
-            // free capacity at later boundaries.
+        if admit_ok && !self.queue.is_empty() {
+            // Admit the lowest (priority, submission) candidate while a
+            // slot is free AND the backend can reserve its KV budget.
+            // Within a class the order is FIFO: a candidate that does
+            // not fit holds everything at-or-behind its rank —
+            // retirements (and cache eviction inside try_reserve) free
+            // capacity at later boundaries, and a blocked candidate past
+            // its TTFT patience may preempt lower-priority work now.
             let t_stage = Instant::now();
-            let max_new = self.cfg.max_active - self.active.len();
-            let mut batch: Vec<Request> = Vec::new();
-            while batch.len() < max_new {
-                let Some(head) = self.queue.front() else { break };
-                if !self.backend.try_reserve(&head.tokens, head.gen) {
+            let mut batch: Vec<Queued> = Vec::new();
+            loop {
+                let Some(ci) = (0..self.queue.len())
+                    .min_by_key(|&i| (self.queue[i].req.priority, self.queue[i].seq))
+                else {
+                    break;
+                };
+                let cand = &self.queue[ci];
+                let prio = cand.req.priority;
+                let patience =
+                    Duration::from_micros(self.cfg.policy.slo[prio.index()].ttft_us);
+                let eligible = self.cfg.policy.preempt
+                    && t_stage.duration_since(cand.req.submitted) >= patience;
+                if self.active.len() + batch.len() >= self.cfg.max_active {
+                    if eligible && self.preempt_one(prio) {
+                        continue;
+                    }
                     break;
                 }
-                batch.push(self.queue.pop_front().expect("checked front"));
-            }
-            let t_admit = Instant::now();
-            for r in &mut batch {
-                self.queue_wait.record(t_admit - r.submitted);
-                self.obs.registry.scheduler.queue_wait_us.record(t_admit - r.submitted);
-                if let Some(tr) = &mut r.trace {
-                    tr.mark_reserved(t_admit);
+                if !self.backend.try_reserve(cand.context(), cand.remaining_gen()) {
+                    if eligible && self.preempt_one(prio) {
+                        continue;
+                    }
+                    break;
+                }
+                let mut q = self.queue.remove(ci).expect("candidate index in range");
+                let t_admit = Instant::now();
+                self.queue_wait.record(t_admit - q.req.submitted);
+                self.obs.registry.scheduler.queue_wait_us.record(t_admit - q.req.submitted);
+                if q.resume.is_none() {
+                    if let Some(tr) = &mut q.req.trace {
+                        tr.mark_reserved(t_admit);
+                    }
+                }
+                if chunked {
+                    // Chunked mode: open a Prefilling slot now; the
+                    // chunk-advance phase below feeds the prompt.
+                    self.admit_chunked(q);
+                    progressed = true;
+                } else {
+                    batch.push(q);
                 }
             }
-            let prompts: Vec<&[u16]> = batch.iter().map(|r| r.tokens.as_slice()).collect();
-            let gens: Vec<usize> = batch.iter().map(|r| r.gen).collect();
-            let mut samplers: Vec<Sampler> = batch.iter().map(|r| r.cfg.sampler()).collect();
+            let prompts: Vec<&[u16]> = batch.iter().map(|q| q.context()).collect();
+            let gens: Vec<usize> = batch.iter().map(|q| q.remaining_gen()).collect();
+            let mut samplers: Vec<Sampler> = batch
+                .iter()
+                .map(|q| match &q.resume {
+                    // Resumed mid-stream: the carried sampler's RNG
+                    // state makes the pick sequence equal the
+                    // never-preempted one.
+                    Some(rs) => rs.sampler.clone(),
+                    None => q.req.cfg.sampler(),
+                })
+                .collect();
             let mut prefill_d = Duration::ZERO;
             let prefilled = if batch.is_empty() {
                 Vec::new()
@@ -874,25 +1327,44 @@ impl<'a, B: SessionBackend> Scheduler<'a, B> {
             // active plus the whole admission batch — what a request
             // retiring at admission (gen <= 1) shared its prefill with.
             let boundary_set = self.active.len() + batch.len();
-            // A boundary where the head could not reserve admits nothing
+            // A boundary where no candidate could reserve admits nothing
             // — that is not progress (capacity frees at retirements).
-            progressed = !batch.is_empty();
-            for ((req, sampler), (session, first)) in
+            progressed = progressed || !batch.is_empty();
+            for ((q, sampler), (session, first)) in
                 batch.into_iter().zip(samplers).zip(prefilled)
             {
+                let Queued { mut req, seq, resume } = q;
                 let now = Instant::now();
+                // A resumed slot re-enters with its pre-preemption
+                // output; its prefill token continues that stream.
+                let generated: Vec<u16> = match &resume {
+                    Some(rs) => rs.context[req.tokens.len()..].to_vec(),
+                    None => Vec::with_capacity(req.gen),
+                };
+                let remaining = req.gen - generated.len();
                 // Greedy multi-token requests get a drafter when
-                // speculation is on; it sees the prompt now and every
-                // emitted token as it streams.
-                let drafter = (self.spec.is_some() && sampler.is_greedy() && req.gen > 1)
-                    .then(|| PromptLookupDrafter::new(&req.tokens));
+                // speculation is on; it sees the full context now and
+                // every emitted token as it streams.
+                let drafter = (self.spec.is_some() && sampler.is_greedy() && remaining > 1)
+                    .then(|| match &resume {
+                        Some(rs) => PromptLookupDrafter::new(&rs.context),
+                        None => PromptLookupDrafter::new(&req.tokens),
+                    });
+                self.admissions += 1;
+                let finished = generated.len() >= req.gen;
+                let fresh = generated.is_empty();
                 let mut slot = Slot {
                     id: req.id,
                     gen: req.gen,
+                    prompt: std::mem::take(&mut req.tokens),
+                    priority: req.priority,
+                    seq,
+                    admit_seq: self.admissions,
+                    state: SlotState::Decoding,
                     session,
                     sampler,
-                    generated: Vec::with_capacity(req.gen),
-                    finished: req.gen == 0,
+                    generated,
+                    finished,
                     submitted: req.submitted,
                     last_emit: now,
                     resp_tx: req.resp_tx,
@@ -900,15 +1372,22 @@ impl<'a, B: SessionBackend> Scheduler<'a, B> {
                     trace: req.trace,
                     drafter,
                 };
-                if let Some(tr) = &mut slot.trace {
-                    tr.mark_prefill(now);
-                }
-                if slot.gen > 0 {
-                    // prefill produced the first token: TTFT stops here
-                    self.ttft.record(now - slot.submitted);
-                    self.obs.registry.scheduler.ttft_us.record(now - slot.submitted);
+                if fresh {
                     if let Some(tr) = &mut slot.trace {
-                        tr.mark_first_token(now);
+                        tr.mark_prefill(now);
+                    }
+                }
+                if slot.generated.len() < slot.gen {
+                    if fresh {
+                        // prefill produced the first token: TTFT stops
+                        // here (resumed slots recorded theirs at first
+                        // admission — no second sample)
+                        self.ttft.record(now - slot.submitted);
+                        self.obs.registry.scheduler.ttft_us.record(now - slot.submitted);
+                        self.classes[slot.priority.index()].ttft.record(now - slot.submitted);
+                        if let Some(tr) = &mut slot.trace {
+                            tr.mark_first_token(now);
+                        }
                     }
                     slot.generated.push(first);
                     if let Some(dr) = &mut slot.drafter {
@@ -925,7 +1404,7 @@ impl<'a, B: SessionBackend> Scheduler<'a, B> {
                     if let Some(tx) = &slot.stream_tx {
                         let _ = tx.send(StreamEvent {
                             id: slot.id,
-                            index: 0,
+                            index: slot.generated.len() - 1,
                             token: first,
                             done: slot.finished,
                         });
@@ -945,19 +1424,69 @@ impl<'a, B: SessionBackend> Scheduler<'a, B> {
             self.obs.registry.scheduler.stage_admission_us.record(d);
         }
 
-        // --- one batched decode step over the ragged active set ---
-        if !self.active.is_empty() {
+        // --- chunk advance: one prefill chunk per Prefilling slot ---
+        if chunked {
+            let chunk = self.cfg.policy.prefill_chunk;
+            let mut i = 0;
+            while i < self.active.len() {
+                if !matches!(self.active[i].state, SlotState::Prefilling { .. }) {
+                    i += 1;
+                    continue;
+                }
+                let t0 = Instant::now();
+                let first = {
+                    let slot = &mut self.active[i];
+                    let SlotState::Prefilling { context, fed } = &mut slot.state else {
+                        unreachable!("checked above")
+                    };
+                    let take = chunk.min(context.len() - *fed);
+                    let out =
+                        self.backend.prefill_chunk(&mut slot.session, context, take, &mut slot.sampler);
+                    *fed += take;
+                    debug_assert_eq!(out.is_some(), *fed == context.len());
+                    out
+                };
+                {
+                    let m = &self.obs.registry.scheduler;
+                    m.prefill_chunks.incr(1);
+                    m.stage_prefill_chunk_us.record(t0.elapsed());
+                }
+                progressed = true;
+                if let Some(first) = first {
+                    self.promote(i, first);
+                    if self.active[i].finished {
+                        // first-token stop or gen == 1: retire in place
+                        let set = self.active.len();
+                        let slot = self.active.swap_remove(i);
+                        self.retire(slot, set);
+                        continue; // re-examine the swapped-in slot
+                    }
+                }
+                i += 1;
+            }
+        }
+
+        // --- one batched decode step over the Decoding subset ---
+        // (in chunked mode Prefilling slots sit out decode — their
+        // boundary work was the chunk above)
+        let decoding: Vec<usize> = self
+            .active
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| matches!(s.state, SlotState::Decoding))
+            .map(|(i, _)| i)
+            .collect();
+        if !decoding.is_empty() {
             {
                 let m = &self.obs.registry.scheduler;
                 m.steps.incr(1);
-                m.slot_steps.incr(self.active.len() as u64);
+                m.slot_steps.incr(decoding.len() as u64);
                 m.active_slots.set(self.active.len() as i64);
                 m.queue_depth.set(self.queue.len() as i64);
             }
-            let tokens: Vec<u16> = self
-                .active
+            let tokens: Vec<u16> = decoding
                 .iter()
-                .map(|s| *s.generated.last().expect("active slot has a token"))
+                .map(|&i| *self.active[i].generated.last().expect("decoding slot has a token"))
                 .collect();
             // Propose a clamped draft per slot (empty = plain decode).
             // The clamp is what turns would-be capacity errors into
@@ -967,24 +1496,27 @@ impl<'a, B: SessionBackend> Scheduler<'a, B> {
             // budget minus one (the final emitted token is never fed —
             // same as plain decode's last token), which also keeps the
             // session inside the block reservation admission made.
-            let drafts: Vec<Vec<u16>> = self
-                .active
+            let drafts: Vec<Vec<u16>> = decoding
                 .iter()
-                .map(|slot| match &slot.drafter {
-                    Some(dr) => {
-                        let remaining = slot.gen - slot.generated.len();
-                        let budget = self.backend.rows_budget(&slot.session);
-                        let k = self
-                            .cfg
-                            .spec_k
-                            .min(remaining.saturating_sub(1))
-                            .min(budget.saturating_sub(1));
-                        dr.draft(k)
+                .map(|&i| {
+                    let slot = &self.active[i];
+                    match &slot.drafter {
+                        Some(dr) => {
+                            let remaining = slot.gen - slot.generated.len();
+                            let budget = self.backend.rows_budget(&slot.session);
+                            let k = self
+                                .cfg
+                                .spec_k
+                                .min(remaining.saturating_sub(1))
+                                .min(budget.saturating_sub(1));
+                            dr.draft(k)
+                        }
+                        None => Vec::new(),
                     }
-                    None => Vec::new(),
                 })
                 .collect();
-            let mut next: Vec<Vec<u16>> = vec![Vec::new(); self.active.len()];
+            // `next[dj]` = tokens emitted for decoding[dj] this step.
+            let mut next: Vec<Vec<u16>> = vec![Vec::new(); decoding.len()];
             // Plain subset: one ragged batched decode step. Split each
             // slot into disjoint &mut session / &mut sampler borrows so
             // the backend can run the batched GEMM and the per-row
@@ -994,15 +1526,21 @@ impl<'a, B: SessionBackend> Scheduler<'a, B> {
                 let mut samplers: Vec<&mut Sampler> = Vec::new();
                 let mut toks: Vec<u16> = Vec::new();
                 let mut idxs: Vec<usize> = Vec::new();
+                let mut dj = 0usize;
                 for (i, slot) in self.active.iter_mut().enumerate() {
-                    if !drafts[i].is_empty() {
+                    if decoding.get(dj) != Some(&i) {
+                        continue;
+                    }
+                    let d = dj;
+                    dj += 1;
+                    if !drafts[d].is_empty() {
                         continue;
                     }
                     let Slot { session, sampler, .. } = slot;
                     sessions.push(session);
                     samplers.push(sampler);
-                    toks.push(tokens[i]);
-                    idxs.push(i);
+                    toks.push(tokens[d]);
+                    idxs.push(d);
                 }
                 if !sessions.is_empty() {
                     let t0 = Instant::now();
@@ -1010,8 +1548,8 @@ impl<'a, B: SessionBackend> Scheduler<'a, B> {
                         self.backend.decode_batch_sampled(&mut sessions, &toks, &mut samplers);
                     self.obs.registry.scheduler.stage_decode_us.record(t0.elapsed());
                     debug_assert_eq!(out.len(), idxs.len());
-                    for (j, &i) in idxs.iter().enumerate() {
-                        next[i].push(out[j]);
+                    for (j, &d) in idxs.iter().enumerate() {
+                        next[d].push(out[j]);
                     }
                 }
             }
@@ -1023,14 +1561,20 @@ impl<'a, B: SessionBackend> Scheduler<'a, B> {
                 let mut toks: Vec<u16> = Vec::new();
                 let mut dlist: Vec<&[u16]> = Vec::new();
                 let mut idxs: Vec<usize> = Vec::new();
+                let mut dj = 0usize;
                 for (i, slot) in self.active.iter_mut().enumerate() {
-                    if drafts[i].is_empty() {
+                    if decoding.get(dj) != Some(&i) {
+                        continue;
+                    }
+                    let d = dj;
+                    dj += 1;
+                    if drafts[d].is_empty() {
                         continue;
                     }
                     sessions.push(&mut slot.session);
-                    toks.push(tokens[i]);
-                    dlist.push(drafts[i].as_slice());
-                    idxs.push(i);
+                    toks.push(tokens[d]);
+                    dlist.push(drafts[d].as_slice());
+                    idxs.push(d);
                 }
                 if !sessions.is_empty() {
                     let t0 = Instant::now();
@@ -1039,7 +1583,7 @@ impl<'a, B: SessionBackend> Scheduler<'a, B> {
                     let m = &self.obs.registry.scheduler;
                     debug_assert_eq!(emitted.len(), idxs.len());
                     let spec = self.spec.as_mut().expect("drafts exist only with spec on");
-                    for (j, &i) in idxs.iter().enumerate() {
+                    for (j, &d) in idxs.iter().enumerate() {
                         debug_assert!(!emitted[j].is_empty(), "verify emits at least one token");
                         let accepted = emitted[j].len() - 1;
                         debug_assert!(accepted <= dlist[j].len());
@@ -1047,7 +1591,7 @@ impl<'a, B: SessionBackend> Scheduler<'a, B> {
                         m.spec_accepted.incr(accepted as u64);
                         m.spec_verifications.incr(1);
                         spec.accept_hist[accepted] += 1;
-                        next[i] = emitted[j].clone();
+                        next[d] = emitted[j].clone();
                     }
                 }
             }
@@ -1058,11 +1602,14 @@ impl<'a, B: SessionBackend> Scheduler<'a, B> {
             // gap), not once per token. Tokens past a stop or the `gen`
             // budget are discarded unsent.
             let now = Instant::now();
-            for (slot, toks) in self.active.iter_mut().zip(next.iter()) {
-                debug_assert!(!toks.is_empty(), "every active slot stepped");
+            for (dj, &i) in decoding.iter().enumerate() {
+                let slot = &mut self.active[i];
+                let toks = &next[dj];
+                debug_assert!(!toks.is_empty(), "every decoding slot stepped");
                 let gap = now - slot.last_emit;
                 self.itl.record(gap);
                 self.obs.registry.scheduler.itl_us.record(gap);
+                self.classes[slot.priority.index()].itl.record(gap);
                 slot.last_emit = now;
                 let mut emitted = 0usize;
                 for &tok in toks {
@@ -1123,13 +1670,171 @@ impl<'a, B: SessionBackend> Scheduler<'a, B> {
         progressed
     }
 
+    /// Admit one reserved request into a `Prefilling` slot (chunked
+    /// mode): open its session (adopting any cached prefix) and let the
+    /// chunk-advance phase feed the prompt over the next boundaries.
+    fn admit_chunked(&mut self, q: Queued) {
+        let Queued { mut req, seq, resume } = q;
+        let now = Instant::now();
+        let (context, sampler) = match resume {
+            Some(rs) => (rs.context, rs.sampler),
+            None => (req.tokens.clone(), req.cfg.sampler()),
+        };
+        let generated: Vec<u16> = context[req.tokens.len()..].to_vec();
+        let remaining = req.gen - generated.len();
+        let (session, cached) = self.backend.begin_session(&context, remaining);
+        debug_assert!(cached < context.len(), "prefix adoption caps at len - 1");
+        let drafter = (self.spec.is_some() && sampler.is_greedy() && remaining > 1)
+            .then(|| PromptLookupDrafter::new(&context));
+        self.admissions += 1;
+        let finished = generated.len() >= req.gen;
+        let slot = Slot {
+            id: req.id,
+            gen: req.gen,
+            prompt: std::mem::take(&mut req.tokens),
+            priority: req.priority,
+            seq,
+            admit_seq: self.admissions,
+            state: SlotState::Prefilling { context, fed: cached },
+            session,
+            sampler,
+            generated,
+            finished,
+            submitted: req.submitted,
+            last_emit: now,
+            resp_tx: req.resp_tx,
+            stream_tx: req.stream_tx,
+            trace: req.trace,
+            drafter,
+        };
+        if slot.finished {
+            // gen == 0: nothing to generate — retire without prefilling.
+            let set = self.active.len() + 1;
+            self.retire(slot, set);
+        } else {
+            self.active.push(slot);
+        }
+    }
+
+    /// A `Prefilling` slot fed its final prompt row: emit the token
+    /// whole-prompt prefill would have produced and join the decode set.
+    /// A *resumed* slot's promote token is mid-stream — no TTFT (already
+    /// recorded at its first admission) and no ITL sample (ITL counts
+    /// decode-step participations only, keeping the `itl samples ==
+    /// slot-step participations` identity exact).
+    fn promote(&mut self, i: usize, first: u16) {
+        let now = Instant::now();
+        let slot = &mut self.active[i];
+        slot.state = SlotState::Decoding;
+        let fresh = slot.generated.is_empty();
+        if fresh {
+            if let Some(tr) = &mut slot.trace {
+                tr.mark_prefill(now);
+            }
+        }
+        if slot.generated.len() < slot.gen {
+            if fresh {
+                self.ttft.record(now - slot.submitted);
+                self.obs.registry.scheduler.ttft_us.record(now - slot.submitted);
+                self.classes[slot.priority.index()].ttft.record(now - slot.submitted);
+                if let Some(tr) = &mut slot.trace {
+                    tr.mark_first_token(now);
+                }
+            }
+            slot.last_emit = now;
+            slot.generated.push(first);
+            if let Some(dr) = &mut slot.drafter {
+                dr.push(first);
+            }
+            self.obs.registry.scheduler.gen_tokens.incr(1);
+            if slot.sampler.is_stop(first) {
+                self.obs.registry.scheduler.stop_hits.incr(1);
+                slot.finished = true;
+            }
+            if slot.generated.len() >= slot.gen {
+                slot.finished = true;
+            }
+            if let Some(tx) = &slot.stream_tx {
+                let _ = tx.send(StreamEvent {
+                    id: slot.id,
+                    index: slot.generated.len() - 1,
+                    token: first,
+                    done: slot.finished,
+                });
+            }
+        }
+    }
+
+    /// Evict the most recently admitted slot of *strictly lower*
+    /// priority than `below` back to the queue: publish its computed
+    /// rows to the prefix cache, refund its KV hold
+    /// ([`SessionBackend::preempt_session`]), and requeue it with its
+    /// sampler and generated-so-far stream intact — re-admission resumes
+    /// bit-identically. Returns `false` when no such victim exists.
+    fn preempt_one(&mut self, below: Priority) -> bool {
+        let Some(vi) = self
+            .active
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.priority > below)
+            .max_by_key(|(_, s)| s.admit_seq)
+            .map(|(i, _)| i)
+        else {
+            return false;
+        };
+        let slot = self.active.swap_remove(vi);
+        self.obs.registry.scheduler.preemptions.incr(1);
+        self.classes[slot.priority.index()].preemptions += 1;
+        let Slot {
+            id,
+            gen,
+            prompt,
+            priority,
+            seq,
+            session,
+            sampler,
+            generated,
+            submitted,
+            resp_tx,
+            stream_tx,
+            trace,
+            ..
+        } = slot;
+        let mut context = Vec::with_capacity(prompt.len() + generated.len());
+        context.extend_from_slice(&prompt);
+        context.extend_from_slice(&generated);
+        self.backend.preempt_session(session, &context);
+        let req = Request {
+            id,
+            tokens: prompt,
+            gen,
+            submitted,
+            resp_tx,
+            stream_tx,
+            cfg: sampler.config().clone(),
+            priority,
+            trace,
+        };
+        self.queue.push_back(Queued {
+            req,
+            seq,
+            resume: Some(ResumeState { context, sampler }),
+        });
+        true
+    }
+
     fn retire(&mut self, slot: Slot<B::Session>, in_flight: usize) {
         let lat = slot.submitted.elapsed();
         let now = Instant::now();
         self.latency.record(lat);
         self.obs.registry.scheduler.latency_us.record(lat);
         self.obs.registry.scheduler.requests.incr(1);
+        self.classes[slot.priority.index()].requests += 1;
         self.last_retire = now;
+        // Hand the session back so the backend can refund any
+        // reserved-but-undrawn KV blocks before the drop releases the
+        // drawn ones.
+        self.backend.release_session(slot.session);
         if let Some(trace) = slot.trace {
             trace.finish(now, slot.generated.len());
         }
@@ -1155,7 +1860,7 @@ impl<'a, B: SessionBackend> Scheduler<'a, B> {
         // Scalar counters are read back from the registry — the report
         // below and any `stats` snapshot taken mid-run share exactly
         // one set of accumulators.
-        let (steps, retired, gen_tokens, slot_steps, stop_hits) = {
+        let (steps, retired, gen_tokens, slot_steps, stop_hits, prefill_chunks, preemptions) = {
             let m = &self.obs.registry.scheduler;
             (
                 m.steps.get() as usize,
@@ -1163,6 +1868,8 @@ impl<'a, B: SessionBackend> Scheduler<'a, B> {
                 m.gen_tokens.get() as usize,
                 m.slot_steps.get() as usize,
                 m.stop_hits.get() as usize,
+                m.prefill_chunks.get() as usize,
+                m.preemptions.get() as usize,
             )
         };
         let spec = {
@@ -1174,6 +1881,20 @@ impl<'a, B: SessionBackend> Scheduler<'a, B> {
                 sp
             })
         };
+        let slo = self.cfg.policy.slo;
+        let classes: Vec<ClassStats> = Priority::all()
+            .into_iter()
+            .zip(self.classes)
+            .map(|(p, acc)| ClassStats {
+                label: p.label(),
+                requests: acc.requests,
+                preemptions: acc.preemptions,
+                ttft: acc.ttft,
+                itl: acc.itl,
+                ttft_slo_us: slo[p.index()].ttft_us,
+                itl_slo_us: slo[p.index()].itl_us,
+            })
+            .collect();
         SchedulerStats {
             mean_active: slot_steps as f64 / steps.max(1) as f64,
             ttft: self.ttft,
@@ -1186,6 +1907,9 @@ impl<'a, B: SessionBackend> Scheduler<'a, B> {
             throughput_rps: retired as f64 / window,
             tokens_per_s: gen_tokens as f64 / window,
             stop_hits,
+            prefill_chunks,
+            preemptions,
+            classes,
             kv: self.backend.kv_stats(),
             spec,
         }
@@ -1327,6 +2051,26 @@ mod tests {
                 })
                 .collect()
         }
+
+        fn supports_chunked_prefill(&self) -> bool {
+            true
+        }
+
+        fn begin_session(&self, _context: &[u16], _gen: usize) -> (Vec<u16>, usize) {
+            (Vec::new(), 0)
+        }
+
+        fn prefill_chunk(
+            &self,
+            session: &mut Vec<u16>,
+            context: &[u16],
+            take: usize,
+            _sampler: &mut Sampler,
+        ) -> Option<u16> {
+            let end = session.len() + take;
+            session.extend_from_slice(&context[session.len()..end]);
+            (session.len() == context.len()).then(|| mock_next(session))
+        }
     }
 
     fn req(id: u64, tokens: Vec<u16>, gen: usize, rtx: &mpsc::Sender<Response>) -> Request {
@@ -1338,6 +2082,7 @@ mod tests {
             resp_tx: rtx.clone(),
             stream_tx: None,
             cfg: GenConfig::default(),
+            priority: Priority::default(),
             trace: None,
         }
     }
@@ -1421,7 +2166,7 @@ mod tests {
         let backend = TransformerBackend::new(quantized_model(71), 2, "cont");
         let cfg = SchedulerConfig {
             max_active: 3,
-            admit: AdmissionPolicy::Eager,
+            policy: SchedPolicy::eager(),
             spec_k: 0,
         };
         let mut sched = Scheduler::new(&backend, cfg);
@@ -1509,6 +2254,7 @@ mod tests {
             resp_tx: rtx,
             stream_tx: Some(stx),
             cfg: GenConfig::default(),
+            priority: Priority::default(),
             trace: None,
         });
         while sched.step() {}
@@ -1533,7 +2279,7 @@ mod tests {
         let backend = MockBackend;
         let cfg = SchedulerConfig {
             max_active: 2,
-            admit: AdmissionPolicy::Eager,
+            policy: SchedPolicy::eager(),
             spec_k: 0,
         };
         let mut sched = Scheduler::new(&backend, cfg);
@@ -1562,7 +2308,7 @@ mod tests {
         let backend = MockBackend;
         let cfg = SchedulerConfig {
             max_active: 4,
-            admit: AdmissionPolicy::Drain,
+            policy: SchedPolicy::drain(),
             spec_k: 0,
         };
         let mut sched = Scheduler::new(&backend, cfg);
@@ -1621,7 +2367,7 @@ mod tests {
         let drive = |backend: &TransformerBackend| -> (Vec<Vec<u16>>, SchedulerStats) {
             let cfg = SchedulerConfig {
                 max_active: 3,
-                admit: AdmissionPolicy::Eager,
+                policy: SchedPolicy::eager(),
                 spec_k: 0,
             };
             let mut sched = Scheduler::new(backend, cfg);
@@ -1702,7 +2448,7 @@ mod tests {
         // exactly the capacity, so admissions are strictly one at a time.
         let cfg = SchedulerConfig {
             max_active: 4,
-            admit: AdmissionPolicy::Eager,
+            policy: SchedPolicy::eager(),
             spec_k: 0,
         };
         let mut sched = Scheduler::new(&backend, cfg);
@@ -1750,7 +2496,7 @@ mod tests {
                 &MockBackend,
                 SchedulerConfig {
                     max_active: 4,
-                    admit: AdmissionPolicy::Eager,
+                    policy: SchedPolicy::eager(),
                     spec_k: 0,
                 },
             )
@@ -1766,6 +2512,7 @@ mod tests {
                 resp_tx: rtx.clone(),
                 stream_tx: None,
                 cfg: GenConfig::default(),
+                priority: Priority::default(),
                 trace: None,
             })
             .unwrap();
@@ -1826,6 +2573,7 @@ mod tests {
                 resp_tx: rtx,
                 stream_tx: None,
                 cfg,
+                priority: Priority::default(),
                 trace: None,
             });
             while sched.step() {}
@@ -1909,6 +2657,7 @@ mod tests {
                 stop: vec![stop],
                 ..GenConfig::default()
             },
+            priority: Priority::default(),
             trace: None,
         });
         while sched.step() {}
@@ -1962,7 +2711,7 @@ mod tests {
                     let backend = MockBackend;
                     let cfg = SchedulerConfig {
                         max_active: 3,
-                        admit: AdmissionPolicy::Eager,
+                        policy: SchedPolicy::eager(),
                         spec_k,
                     };
                     let mut sched = Scheduler::new(&backend, cfg);
@@ -2064,7 +2813,7 @@ mod tests {
                 };
                 let cfg = SchedulerConfig {
                     max_active: 3,
-                    admit: AdmissionPolicy::Eager,
+                    policy: SchedPolicy::eager(),
                     spec_k,
                 };
                 let mut sched = Scheduler::new(&backend, cfg);
@@ -2120,7 +2869,7 @@ mod tests {
         let backend = MockBackend;
         let cfg = SchedulerConfig {
             max_active: 1,
-            admit: AdmissionPolicy::Eager,
+            policy: SchedPolicy::eager(),
             spec_k: 4,
         };
         let mut sched = Scheduler::new(&backend, cfg);
@@ -2137,6 +2886,7 @@ mod tests {
                 stop: vec![8],
                 ..GenConfig::default()
             },
+            priority: Priority::default(),
             trace: None,
         });
         while sched.step() {}
@@ -2168,7 +2918,7 @@ mod tests {
         let backend = MockBackend;
         let cfg = SchedulerConfig {
             max_active: 1,
-            admit: AdmissionPolicy::Eager,
+            policy: SchedPolicy::eager(),
             spec_k: 4,
         };
         let mut sched = Scheduler::new(&backend, cfg);
@@ -2183,6 +2933,7 @@ mod tests {
             resp_tx: rtx,
             stream_tx: Some(stx),
             cfg: GenConfig::default(),
+            priority: Priority::default(),
             trace: None,
         });
         while sched.step() {}
@@ -2240,7 +2991,7 @@ mod tests {
             let backend = TransformerBackend::new(quantized_model(24), 2, "samp-spec");
             let cfg = SchedulerConfig {
                 max_active: 2,
-                admit: AdmissionPolicy::Eager,
+                policy: SchedPolicy::eager(),
                 spec_k,
             };
             let mut sched = Scheduler::new(&backend, cfg);
@@ -2253,6 +3004,7 @@ mod tests {
                 resp_tx: rtx,
                 stream_tx: None,
                 cfg: sampled_cfg.clone(),
+                priority: Priority::default(),
                 trace: None,
             });
             while sched.step() {}
@@ -2343,7 +3095,7 @@ mod tests {
         let backend = BoundedMock { max_rows };
         let cfg = SchedulerConfig {
             max_active: 1,
-            admit: AdmissionPolicy::Eager,
+            policy: SchedPolicy::eager(),
             spec_k: 8,
         };
         let mut sched = Scheduler::new(&backend, cfg);
@@ -2398,7 +3150,7 @@ mod tests {
             };
             let cfg = SchedulerConfig {
                 max_active: 1,
-                admit: AdmissionPolicy::Eager,
+                policy: SchedPolicy::eager(),
                 spec_k: 8,
             };
             let mut sched = Scheduler::new(&backend, cfg);
@@ -2437,7 +3189,7 @@ mod tests {
         let backend = MockBackend;
         let cfg = SchedulerConfig {
             max_active: 3,
-            admit: AdmissionPolicy::Eager,
+            policy: SchedPolicy::eager(),
             spec_k: 2,
         };
         let mut sched = Scheduler::with_obs(&backend, cfg, obs);
@@ -2514,5 +3266,274 @@ mod tests {
             assert!(j.get("retired_us").as_f64().is_some());
         }
         assert!(seen.iter().all(|&s| s), "every traced id shows up");
+    }
+
+    /// The chunked-prefill parity matrix: every chunk size — 1 token per
+    /// boundary, a non-divisor, larger than any prompt — on both the
+    /// contiguous and the paged backend, with and without speculation,
+    /// is token-identical to the sequential reference. Causal attention
+    /// makes prefill splitting a pure scheduling transformation; this
+    /// pin is what lets `--prefill-chunk` default to "safe at any
+    /// value".
+    #[test]
+    fn chunked_prefill_is_bit_identical_for_every_chunk_size() {
+        let model = quantized_model(141);
+        let mut rng = Rng::new(142);
+        let seqs = prompts(&mut rng, 4, 13);
+        let gens = [5usize, 1, 4, 3];
+
+        let mut want = Vec::new();
+        for (s, &g) in seqs.iter().zip(gens.iter()) {
+            let mut sess = model.new_session();
+            let mut logits = model.prefill(&mut sess, s);
+            let mut out = Vec::new();
+            for step in 0..g {
+                let next = argmax(&logits) as u16;
+                out.push(next);
+                if step + 1 < g {
+                    logits = model.decode_step(&mut sess, next);
+                }
+            }
+            want.push(out);
+        }
+
+        for paged in [false, true] {
+            let backend = if paged {
+                TransformerBackend::with_kv_pool(
+                    quantized_model(141),
+                    2,
+                    "chunk-paged",
+                    KvPoolConfig {
+                        blocks: 512,
+                        block_tokens: 4,
+                    },
+                )
+            } else {
+                TransformerBackend::new(quantized_model(141), 2, "chunk")
+            };
+            for spec_k in [0usize, 4] {
+                for chunk in [1usize, 3, 16, 64] {
+                    let cfg = SchedulerConfig {
+                        max_active: 2,
+                        spec_k,
+                        policy: SchedPolicy {
+                            prefill_chunk: chunk,
+                            ..SchedPolicy::eager()
+                        },
+                    };
+                    let mut sched = Scheduler::new(&backend, cfg);
+                    let (rtx, rrx) = mpsc::channel();
+                    for i in 0..2 {
+                        sched.submit(req(i as u64, seqs[i].clone(), gens[i], &rtx));
+                    }
+                    sched.step(); // 2 prefilling, pool full
+                    for i in 2..4 {
+                        sched.submit(req(i as u64, seqs[i].clone(), gens[i], &rtx));
+                    }
+                    while sched.step() {}
+                    let stats = sched.finish();
+                    drop(rtx);
+                    let mut got = vec![Vec::new(); 4];
+                    for resp in rrx.try_iter() {
+                        got[resp.id as usize] = resp.generated;
+                    }
+                    assert_eq!(
+                        got, want,
+                        "paged={paged} spec_k={spec_k} chunk={chunk} diverged"
+                    );
+                    assert!(
+                        stats.prefill_chunks > 0,
+                        "chunked mode must account its chunks (chunk={chunk})"
+                    );
+                    if chunk < 13 {
+                        // a 13-token prompt at this chunk needs > 1 step
+                        assert!(
+                            stats.prefill_chunks > 4,
+                            "chunk={chunk} should split prompts, saw {}",
+                            stats.prefill_chunks
+                        );
+                    }
+                    assert_eq!(stats.requests, 4);
+                    assert_eq!(stats.ttft.len(), 4);
+                }
+            }
+            if paged {
+                backend.clear_prefix_cache();
+                assert_eq!(
+                    backend.kv_pool().unwrap().in_use(),
+                    0,
+                    "chunked admissions must release every block"
+                );
+            }
+        }
+    }
+
+    /// Deterministic mid-chunk preemption on the mock: a batch request
+    /// caught mid-prefill is evicted for an interactive arrival, resumes
+    /// from its queue re-entry, and both streams end token-identical to
+    /// the never-preempted reference — with the eviction showing up in
+    /// the global and per-class counters.
+    #[test]
+    fn mid_chunk_preemption_resumes_token_identical() {
+        let backend = MockBackend;
+        let cfg = SchedulerConfig {
+            max_active: 1,
+            spec_k: 0,
+            policy: SchedPolicy {
+                prefill_chunk: 2,
+                ..SchedPolicy::eager()
+            },
+        };
+        let mut sched = Scheduler::new(&backend, cfg);
+        let (rtx, rrx) = mpsc::channel();
+        let long: Vec<u16> = (0..10).map(|t| (t % 7) as u16 + 1).collect();
+        let mut batch_req = req(0, long.clone(), 3, &rtx);
+        batch_req.priority = Priority::Batch;
+        sched.submit(batch_req);
+        sched.step(); // admitted, 2 of 10 prompt tokens fed
+        sched.step(); // 4 of 10
+        assert_eq!(sched.active(), 1);
+
+        // interactive arrival: the single slot is taken by the batch
+        // prefill — it must be evicted mid-chunk, not waited out
+        sched.submit(req(1, vec![9, 8, 7], 2, &rtx));
+        while sched.step() {}
+        let stats = sched.finish();
+        drop(rtx);
+
+        let responses: Vec<(u64, Vec<u16>)> =
+            rrx.try_iter().map(|r| (r.id, r.generated)).collect();
+        assert_eq!(
+            responses.iter().map(|(id, _)| *id).collect::<Vec<_>>(),
+            vec![1, 0],
+            "the interactive request must finish before the preempted batch one"
+        );
+        assert_eq!(responses[0].1, mock_reference(&[9, 8, 7], 2));
+        assert_eq!(
+            responses[1].1,
+            mock_reference(&long, 3),
+            "the evicted-then-resumed prefill must change nothing"
+        );
+        assert!(stats.preemptions >= 1, "the batch prefill must have been evicted");
+        assert_eq!(
+            stats.classes.iter().map(|c| c.preemptions).sum::<usize>(),
+            stats.preemptions,
+            "per-class preemptions must reconcile"
+        );
+        assert_eq!(stats.classes[Priority::Batch.index()].preemptions, stats.preemptions);
+        // a preempted-then-resumed prefill still records exactly one
+        // TTFT sample (it never emitted before eviction)
+        assert_eq!(stats.ttft.len(), 2);
+    }
+
+    /// Mid-chunk preemption on the real paged backend: the evicted
+    /// prefill publishes its fed rows into the prefix index, re-enters
+    /// through a prefix hit instead of re-prefilling from scratch, and
+    /// both requests match the sequential reference bit for bit. The
+    /// pool reads zero after drain + cache clear — eviction leaks no
+    /// blocks.
+    #[test]
+    fn preempted_prefill_readmits_through_the_prefix_index() {
+        let model = quantized_model(151);
+        let mut rng = Rng::new(152);
+        let long: Vec<u16> = (0..12).map(|_| rng.below(64) as u16).collect();
+        let short: Vec<u16> = (0..6).map(|_| rng.below(64) as u16).collect();
+        let cases = [(long.clone(), 3usize), (short.clone(), 2usize)];
+        let mut want = Vec::new();
+        for (s, g) in &cases {
+            let mut sess = model.new_session();
+            let mut logits = model.prefill(&mut sess, s);
+            let mut out = Vec::new();
+            for step in 0..*g {
+                let next = argmax(&logits) as u16;
+                out.push(next);
+                if step + 1 < *g {
+                    logits = model.decode_step(&mut sess, next);
+                }
+            }
+            want.push(out);
+        }
+
+        let backend = TransformerBackend::with_kv_pool(
+            quantized_model(151),
+            2,
+            "preempt-paged",
+            KvPoolConfig {
+                blocks: 512,
+                block_tokens: 4,
+            },
+        );
+        let cfg = SchedulerConfig {
+            max_active: 1,
+            spec_k: 0,
+            policy: SchedPolicy {
+                prefill_chunk: 4,
+                ..SchedPolicy::eager()
+            },
+        };
+        let mut sched = Scheduler::new(&backend, cfg);
+        let (rtx, rrx) = mpsc::channel();
+        let mut batch_req = req(0, long.clone(), 3, &rtx);
+        batch_req.priority = Priority::Batch;
+        sched.submit(batch_req);
+        sched.step(); // 4 of 12 rows fed
+        sched.step(); // 8 of 12 rows fed — two full blocks publishable
+        sched.submit(req(1, short.clone(), 2, &rtx));
+        while sched.step() {}
+        let stats = sched.finish();
+        drop(rtx);
+
+        let mut got = vec![Vec::new(); 2];
+        for r in rrx.try_iter() {
+            got[r.id as usize] = r.generated;
+        }
+        assert_eq!(got, want, "preempt + prefix re-admission changed tokens");
+        assert!(stats.preemptions >= 1, "the long prefill must have been evicted");
+        let kv = stats.kv.expect("paged backend");
+        assert!(
+            kv.prefix_hits >= 1,
+            "re-admission must adopt the rows the eviction published (hits {})",
+            kv.prefix_hits
+        );
+        assert!(kv.prefix_tokens_reused >= 8, "reused {}", kv.prefix_tokens_reused);
+        backend.clear_prefix_cache();
+        assert_eq!(backend.kv_pool().unwrap().in_use(), 0, "eviction leaked blocks");
+    }
+
+    /// SLO patience gates preemption: with a large interactive TTFT
+    /// target the blocked arrival waits its turn (no eviction); with the
+    /// default zero target the same schedule evicts immediately.
+    #[test]
+    fn slo_patience_defers_preemption() {
+        let drive = |ttft_us: u64| -> SchedulerStats {
+            let backend = MockBackend;
+            let mut slo = [SloTarget::default(); Priority::COUNT];
+            slo[Priority::Interactive.index()].ttft_us = ttft_us;
+            let cfg = SchedulerConfig {
+                max_active: 1,
+                spec_k: 0,
+                policy: SchedPolicy {
+                    prefill_chunk: 1,
+                    slo,
+                    ..SchedPolicy::eager()
+                },
+            };
+            let mut sched = Scheduler::new(&backend, cfg);
+            let (rtx, rrx) = mpsc::channel();
+            let mut batch_req = req(0, vec![1; 12], 2, &rtx);
+            batch_req.priority = Priority::Batch;
+            sched.submit(batch_req);
+            sched.step();
+            sched.submit(req(1, vec![2, 3], 2, &rtx));
+            while sched.step() {}
+            let stats = sched.finish();
+            drop(rtx);
+            assert_eq!(rrx.try_iter().count(), 2, "both requests must retire");
+            stats
+        };
+        let patient = drive(60_000_000); // a minute of patience: never hit in-test
+        assert_eq!(patient.preemptions, 0, "a within-SLO candidate must not evict");
+        let impatient = drive(0);
+        assert!(impatient.preemptions >= 1, "zero patience must evict immediately");
     }
 }

@@ -1,0 +1,392 @@
+//! Randomized scheduler torture suite (the PR's pinning tests).
+//!
+//! Two property tests over [`crate::util::prop::check`] hammer the
+//! continuous scheduler with random arrival schedules — prompt/gen
+//! lengths, priority classes, speculative draft depths, prefill chunk
+//! sizes, slot-pool sizes — and assert the invariants that every
+//! scheduler feature must preserve no matter how the knobs combine:
+//!
+//! - every request retires **exactly once**, with the exact greedy
+//!   continuation the backend's sequential reference produces (chunked
+//!   prefill, speculation, and preemption are pure scheduling
+//!   transformations — never token transformations);
+//! - stream events are gapless (`index` = 0,1,2,…) with `done` on the
+//!   last token only;
+//! - per-class accounting reconciles with the global counters;
+//! - on the paged backend, `in_use + outstanding <= capacity` holds at
+//!   every step boundary, and after drain + prefix-cache clear the pool
+//!   reads **zero** occupancy (no leaked or double-freed blocks).
+//!
+//! On failure [`check`](crate::util::prop::check) panics with the case
+//! index and root seed, so a torture failure is reproducible exactly.
+
+use super::batcher::{Request, Response, StreamEvent};
+use super::scheduler::{
+    AdmissionPolicy, Priority, SchedPolicy, Scheduler, SchedulerConfig, SessionBackend, SloTarget,
+    TransformerBackend,
+};
+use crate::kvpool::KvPoolConfig;
+use crate::model::checkpoint::Checkpoint;
+use crate::model::config::ModelConfig;
+use crate::model::quantize_model;
+use crate::model::sampling::{GenConfig, Sampler};
+use crate::quant::BwaQuantizer;
+use crate::util::prop::check;
+use crate::util::rng::Rng;
+use std::sync::mpsc;
+use std::time::Instant;
+
+/// Deterministic mock model (same rule as the scheduler's unit tests):
+/// greedy next token = (sum of sequence so far) % 31.
+struct TortureMock;
+
+fn mock_next(seq: &[u16]) -> u16 {
+    (seq.iter().map(|&t| t as usize).sum::<usize>() % 31) as u16
+}
+
+fn mock_reference(prompt: &[u16], gen: usize) -> Vec<u16> {
+    let mut seq = prompt.to_vec();
+    let mut out = Vec::new();
+    for _ in 0..gen {
+        let t = mock_next(&seq);
+        out.push(t);
+        seq.push(t);
+    }
+    out
+}
+
+impl SessionBackend for TortureMock {
+    type Session = Vec<u16>;
+
+    fn name(&self) -> String {
+        "torture-mock".into()
+    }
+
+    fn prefill_batch(&self, prompts: &[&[u16]], _gens: &[usize]) -> Vec<(Vec<u16>, u16)> {
+        prompts.iter().map(|p| (p.to_vec(), mock_next(p))).collect()
+    }
+
+    fn decode_batch(&self, sessions: &mut [&mut Vec<u16>], tokens: &[u16]) -> Vec<u16> {
+        sessions
+            .iter_mut()
+            .zip(tokens)
+            .map(|(s, &t)| {
+                s.push(t);
+                mock_next(s)
+            })
+            .collect()
+    }
+
+    fn supports_verify(&self) -> bool {
+        true
+    }
+
+    fn verify_batch(
+        &self,
+        sessions: &mut [&mut Vec<u16>],
+        tokens: &[u16],
+        drafts: &[&[u16]],
+    ) -> Vec<Vec<u16>> {
+        sessions
+            .iter_mut()
+            .zip(tokens.iter().zip(drafts.iter()))
+            .map(|(s, (&last, &draft))| {
+                s.push(last);
+                let mut emitted = Vec::new();
+                for &d in draft {
+                    let next = mock_next(s);
+                    emitted.push(next);
+                    if next != d {
+                        return emitted;
+                    }
+                    s.push(d);
+                }
+                emitted.push(mock_next(s));
+                emitted
+            })
+            .collect()
+    }
+
+    fn supports_chunked_prefill(&self) -> bool {
+        true
+    }
+
+    fn begin_session(&self, _context: &[u16], _gen: usize) -> (Vec<u16>, usize) {
+        (Vec::new(), 0)
+    }
+
+    fn prefill_chunk(
+        &self,
+        session: &mut Vec<u16>,
+        context: &[u16],
+        take: usize,
+        _sampler: &mut Sampler,
+    ) -> Option<u16> {
+        let end = session.len() + take;
+        session.extend_from_slice(&context[session.len()..end]);
+        (session.len() == context.len()).then(|| mock_next(session))
+    }
+}
+
+/// One randomized request: prompt, continuation length, priority.
+struct Spec {
+    prompt: Vec<u16>,
+    gen: usize,
+    priority: Priority,
+}
+
+fn random_specs(rng: &mut Rng, n: usize, max_prompt: usize, max_gen: usize) -> Vec<Spec> {
+    (0..n)
+        .map(|_| Spec {
+            prompt: (0..1 + rng.below(max_prompt))
+                .map(|_| rng.below(31) as u16)
+                .collect(),
+            gen: rng.below(max_gen + 1),
+            priority: if rng.below(2) == 0 {
+                Priority::Interactive
+            } else {
+                Priority::Batch
+            },
+        })
+        .collect()
+}
+
+fn random_policy(rng: &mut Rng) -> SchedPolicy {
+    SchedPolicy {
+        admit: AdmissionPolicy::Eager,
+        prefill_chunk: [0usize, 1, 3, 16][rng.below(4)],
+        // zeroed SLO targets make blocked candidates immediately
+        // preemption-eligible — the most hostile setting.
+        preempt: rng.below(4) != 0,
+        slo: [SloTarget::default(); Priority::COUNT],
+    }
+}
+
+/// Drive `specs` through a scheduler on `backend` with random
+/// submit/step interleaving, then drain. Returns per-request responses
+/// and stream receivers plus the final stats, or an error if the
+/// scheduler failed to drain or a request retired twice/never.
+#[allow(clippy::type_complexity)]
+fn drive<B: SessionBackend>(
+    backend: &B,
+    cfg: SchedulerConfig,
+    specs: &[Spec],
+    rng: &mut Rng,
+) -> Result<
+    (
+        Vec<Response>,
+        Vec<mpsc::Receiver<StreamEvent>>,
+        super::metrics::SchedulerStats,
+    ),
+    String,
+> {
+    let mut sched = Scheduler::new(backend, cfg);
+    let (rtx, rrx) = mpsc::channel();
+    let mut streams = Vec::with_capacity(specs.len());
+    for (i, spec) in specs.iter().enumerate() {
+        let (stx, srx) = mpsc::channel();
+        streams.push(srx);
+        sched.submit(Request {
+            id: i as u64,
+            tokens: spec.prompt.clone(),
+            gen: spec.gen,
+            submitted: Instant::now(),
+            resp_tx: rtx.clone(),
+            stream_tx: Some(stx),
+            cfg: GenConfig::default(),
+            priority: spec.priority,
+            trace: None,
+        });
+        // Random arrival schedule: sometimes run the scheduler a few
+        // steps before the next submission, so requests land queued,
+        // mid-prefill, and mid-decode of others.
+        for _ in 0..rng.below(3) {
+            sched.step();
+        }
+    }
+    let mut guard = 0usize;
+    while sched.step() {
+        guard += 1;
+        if guard > 10_000 {
+            return Err("scheduler failed to drain within 10k steps".into());
+        }
+    }
+    let stats = sched.finish();
+    drop(rtx);
+
+    let mut responses: Vec<Option<Response>> = (0..specs.len()).map(|_| None).collect();
+    for resp in rrx.try_iter() {
+        let slot = responses
+            .get_mut(resp.id as usize)
+            .ok_or_else(|| format!("response for unknown request {}", resp.id))?;
+        if slot.is_some() {
+            return Err(format!("request {} retired twice", resp.id));
+        }
+        *slot = Some(resp);
+    }
+    let responses: Vec<Response> = responses
+        .into_iter()
+        .enumerate()
+        .map(|(i, r)| r.ok_or_else(|| format!("request {i} never retired")))
+        .collect::<Result<_, _>>()?;
+    Ok((responses, streams, stats))
+}
+
+/// Token + stream + accounting invariants shared by both torture tests.
+fn check_outputs(
+    specs: &[Spec],
+    responses: &[Response],
+    streams: &[mpsc::Receiver<StreamEvent>],
+    want: &[Vec<u16>],
+    stats: &super::metrics::SchedulerStats,
+) -> Result<(), String> {
+    for (i, (spec, resp)) in specs.iter().zip(responses).enumerate() {
+        if resp.generated != want[i] {
+            return Err(format!(
+                "request {i} (prompt {} toks, gen {}, {:?}): got {:?}, want {:?}",
+                spec.prompt.len(),
+                spec.gen,
+                spec.priority,
+                resp.generated,
+                want[i]
+            ));
+        }
+        let events: Vec<StreamEvent> = streams[i].try_iter().collect();
+        if events.len() != spec.gen {
+            return Err(format!(
+                "request {i}: {} stream events for gen {}",
+                events.len(),
+                spec.gen
+            ));
+        }
+        for (k, ev) in events.iter().enumerate() {
+            if ev.index != k {
+                return Err(format!("request {i}: stream gap, index {} at pos {k}", ev.index));
+            }
+            if ev.token != want[i][k] {
+                return Err(format!("request {i}: streamed token {} != {}", ev.token, want[i][k]));
+            }
+            if ev.done != (k + 1 == spec.gen) {
+                return Err(format!("request {i}: done={} at index {k}", ev.done));
+            }
+        }
+    }
+    if stats.requests != specs.len() {
+        return Err(format!("stats.requests {} != {}", stats.requests, specs.len()));
+    }
+    let want_tokens: usize = specs.iter().map(|s| s.gen).sum();
+    if stats.gen_tokens != want_tokens {
+        return Err(format!("stats.gen_tokens {} != {}", stats.gen_tokens, want_tokens));
+    }
+    let class_requests: usize = stats.classes.iter().map(|c| c.requests).sum();
+    if class_requests != specs.len() {
+        return Err(format!("per-class request sum {class_requests} != {}", specs.len()));
+    }
+    let class_preemptions: usize = stats.classes.iter().map(|c| c.preemptions).sum();
+    if class_preemptions != stats.preemptions {
+        return Err(format!(
+            "per-class preemption sum {class_preemptions} != global {}",
+            stats.preemptions
+        ));
+    }
+    Ok(())
+}
+
+/// ≥200 randomized arrival schedules on the chunk-capable mock: every
+/// combination of chunk size, speculation depth, slot-pool size, and
+/// priority mix must retire every request exactly once with the exact
+/// reference continuation and a gapless stream.
+#[test]
+fn torture_randomized_schedules_on_mock() {
+    check("scheduler-torture-mock", 0x7047_0001, 224, |rng| {
+        let specs = random_specs(rng, 1 + rng.below(10), 24, 6);
+        let cfg = SchedulerConfig {
+            max_active: 1 + rng.below(4),
+            spec_k: [0usize, 2, 4][rng.below(3)],
+            policy: random_policy(rng),
+        };
+        let want: Vec<Vec<u16>> = specs.iter().map(|s| mock_reference(&s.prompt, s.gen)).collect();
+        let (responses, streams, stats) = drive(&TortureMock, cfg, &specs, rng)?;
+        check_outputs(&specs, &responses, &streams, &want, &stats)
+    });
+}
+
+/// Randomized schedules on ONE shared paged [`TransformerBackend`]: the
+/// torture run (random chunk/spec/preempt) must match a plain unchunked
+/// run of the same requests token-for-token, the block pool must never
+/// oversubscribe (`in_use + outstanding <= capacity` is re-checked by
+/// the pool's own debug assertions at every transition), and after each
+/// case drains and the prefix cache is cleared the pool must read zero
+/// occupancy — no block leaked by preemption or chunked admission.
+#[test]
+fn torture_paged_pool_never_leaks() {
+    let cfg = ModelConfig {
+        name: "torture".into(),
+        vocab_size: 64,
+        d_model: 128,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 192,
+        max_seq: 64,
+        rope_theta: 10000.0,
+        rmsnorm_eps: 1e-5,
+    };
+    let ck = Checkpoint::random(&cfg, 97);
+    let mut crng = Rng::new(98);
+    let calib: Vec<Vec<u16>> = (0..4)
+        .map(|_| (0..32).map(|_| crng.below(64) as u16).collect())
+        .collect();
+    let model = quantize_model(&ck, &BwaQuantizer::paper(), &calib, Some(4)).unwrap();
+    let pool_cfg = KvPoolConfig {
+        blocks: 0,
+        block_tokens: 4,
+    };
+    // Tight budget: two worst-case requests fit, a third blocks — the
+    // setting that forces reservation failures and preemptions.
+    let per_request = pool_cfg.worst_case_blocks(16, 4, cfg.n_layers);
+    let pool_cfg = KvPoolConfig {
+        blocks: 2 * per_request,
+        block_tokens: 4,
+    };
+    let backend = TransformerBackend::with_kv_pool(model, 2, "torture-paged", pool_cfg);
+    let pool = backend.kv_pool().expect("paged backend").clone();
+
+    check("scheduler-torture-paged", 0x7047_0002, 32, |rng| {
+        let specs = random_specs(rng, 1 + rng.below(4), 16, 4);
+        // Reference: plain unchunked, no speculation, on the same
+        // backend (prefix reuse is token-identical by construction).
+        let plain = SchedulerConfig {
+            max_active: 2,
+            spec_k: 0,
+            policy: SchedPolicy::eager(),
+        };
+        let (ref_responses, _, _) = drive(&backend, plain, &specs, rng)?;
+        let want: Vec<Vec<u16>> = ref_responses.iter().map(|r| r.generated.clone()).collect();
+
+        let torture = SchedulerConfig {
+            max_active: 1 + rng.below(3),
+            spec_k: [0usize, 2][rng.below(2)],
+            policy: random_policy(rng),
+        };
+        let (responses, streams, stats) = drive(&backend, torture, &specs, rng)?;
+        check_outputs(&specs, &responses, &streams, &want, &stats)?;
+
+        if pool.in_use() + pool.outstanding() > pool.capacity() {
+            return Err(format!(
+                "pool oversubscribed after drain: {} in use + {} outstanding > {}",
+                pool.in_use(),
+                pool.outstanding(),
+                pool.capacity()
+            ));
+        }
+        backend.clear_prefix_cache();
+        if pool.in_use() != 0 || pool.outstanding() != 0 {
+            return Err(format!(
+                "pool leak after drain + clear: {} blocks in use, {} outstanding",
+                pool.in_use(),
+                pool.outstanding()
+            ));
+        }
+        Ok(())
+    });
+}

@@ -163,6 +163,24 @@ impl BlockPool {
         self.capacity - (s.in_use + s.outstanding).min(self.capacity)
     }
 
+    /// Reservations promised but not yet consumed by an alloc — the
+    /// companion of [`Self::in_use`] in the committed-total invariant
+    /// `in_use + outstanding <= capacity`.
+    pub fn outstanding(&self) -> usize {
+        self.state.lock().unwrap().outstanding
+    }
+
+    /// Return `blocks` unconsumed reservations to the pool — the undo of
+    /// [`Self::try_reserve`] for the part of a session's admission budget
+    /// it never allocated (early stop, preemption, or a rolled-back
+    /// admission). Saturating: refunding more than is outstanding clamps
+    /// to zero rather than underflowing, so a double refund cannot turn
+    /// into phantom capacity going negative.
+    pub fn unreserve(&self, blocks: usize) {
+        let mut s = self.state.lock().unwrap();
+        s.outstanding = s.outstanding.saturating_sub(blocks);
+    }
+
     /// Promise `blocks` future allocations to a request being admitted.
     /// Returns `false` (reserving nothing) if the committed total would
     /// exceed capacity — the caller should evict or hold the request
@@ -312,6 +330,11 @@ pub struct PagedKv4Store {
     len: usize,
     pool: Arc<BlockPool>,
     pages: Vec<Page>,
+    /// Blocks this store allocated (net of rollback releases) — i.e. the
+    /// part of the owning session's admission reservation it has
+    /// *consumed*. Retirement/preemption refunds
+    /// `reserved − blocks_drawn` via [`BlockPool::unreserve`].
+    drawn: usize,
 }
 
 impl std::fmt::Debug for PagedKv4Store {
@@ -332,6 +355,7 @@ impl PagedKv4Store {
             len: 0,
             pool,
             pages: Vec::new(),
+            drawn: 0,
         }
     }
 
@@ -362,6 +386,7 @@ impl PagedKv4Store {
                 .into_iter()
                 .map(|(id, data)| Page::Shared { id, data })
                 .collect(),
+            drawn: 0,
         }
     }
 
@@ -424,11 +449,20 @@ impl PagedKv4Store {
         self.len += 1;
     }
 
-    fn alloc_block(&self) -> BlockId {
-        self.pool.try_alloc().expect(
+    fn alloc_block(&mut self) -> BlockId {
+        let id = self.pool.try_alloc().expect(
             "KV block pool exhausted mid-request — admission must reserve a session's \
              block budget up front (raise --kv-blocks)",
-        )
+        );
+        self.drawn += 1;
+        id
+    }
+
+    /// Blocks this store allocated from the pool, net of rollback
+    /// releases — adopted (shared) prefix pages are *not* counted, since
+    /// they never consumed a reservation of this session.
+    pub fn blocks_drawn(&self) -> usize {
+        self.drawn
     }
 
     /// Locate row `t`: its packed bytes and params inside its block.
@@ -525,7 +559,10 @@ impl PagedKv4Store {
                 // Draft pages are owned by this store alone: freeing one
                 // re-credits the reservation that paid for it, since the
                 // session may re-allocate the same block a step later.
-                Page::Owned { id, .. } => self.pool.release_rolled_back(id),
+                Page::Owned { id, .. } => {
+                    self.pool.release_rolled_back(id);
+                    self.drawn -= 1;
+                }
                 Page::Shared { id, .. } => self.pool.release(id),
             }
         }
@@ -599,6 +636,143 @@ mod tests {
         assert_eq!(p.free_uncommitted(), 0);
         p.release(a);
         assert_eq!(p.free_uncommitted(), 1);
+    }
+
+    /// `unreserve` is the undo of `try_reserve`: refunding the
+    /// unconsumed part of an admission budget restores exactly that much
+    /// committed capacity, and over-refunding clamps at zero instead of
+    /// minting capacity.
+    #[test]
+    fn unreserve_refunds_unconsumed_reservations() {
+        let p = pool(4, 4);
+        assert!(p.try_reserve(4));
+        assert_eq!(p.outstanding(), 4);
+        assert_eq!(p.free_uncommitted(), 0);
+        // the "session" draws only 1 of its 4 promised blocks …
+        let a = p.try_alloc().unwrap();
+        assert_eq!(p.outstanding(), 3);
+        // … and retires early: refund the 3 it never allocated.
+        p.unreserve(3);
+        assert_eq!(p.outstanding(), 0);
+        assert_eq!(p.free_uncommitted(), 3);
+        p.release(a);
+        assert_eq!(p.free_uncommitted(), 4);
+        // a stray double refund saturates instead of underflowing
+        p.unreserve(10);
+        assert_eq!(p.outstanding(), 0);
+        assert_eq!(p.free_uncommitted(), 4);
+    }
+
+    /// `blocks_drawn` tracks a store's net consumption of its
+    /// reservation: +1 per fresh alloc (boundary *and* CoW), −1 per
+    /// rolled-back owned page, 0 for adopted shared pages — so
+    /// `reserved − blocks_drawn` is always the refundable remainder.
+    #[test]
+    fn blocks_drawn_counts_allocs_net_of_rollback() {
+        let mut rng = Rng::new(97);
+        let d = 16;
+        let bs = 4;
+        let p = pool(16, bs);
+        let mut a = PagedKv4Store::new(d, p.clone());
+        for _ in 0..7 {
+            a.push(&rng.normal_vec_f32(d, 0.0, 1.0));
+        }
+        assert_eq!(a.blocks_drawn(), 2, "7 rows span 2 fresh blocks");
+        let ids = a.freeze_prefix(7);
+        let adopted: Vec<_> = ids.iter().map(|&id| (id, p.adopt(id).unwrap())).collect();
+        let mut b = PagedKv4Store::from_prefix(d, p.clone(), adopted, 7);
+        assert_eq!(b.blocks_drawn(), 0, "adopted pages consumed no reservation");
+        // CoW of the shared 3-row tail is a fresh alloc …
+        b.push(&rng.normal_vec_f32(d, 0.0, 1.0));
+        assert_eq!(b.blocks_drawn(), 1);
+        // … as is spilling into the next block.
+        b.push(&rng.normal_vec_f32(d, 0.0, 1.0));
+        b.push(&rng.normal_vec_f32(d, 0.0, 1.0));
+        assert_eq!(b.blocks_drawn(), 2);
+        // rollback past the spill block re-credits it
+        b.truncate(8);
+        assert_eq!(b.blocks_drawn(), 1);
+    }
+
+    /// Preemption round-trip at the pool level: a session's tail is
+    /// frozen and re-seeded through adoption, the session's own pages are
+    /// dropped, and a re-admitted twin adopts the published prefix — the
+    /// refcounts come back to exactly the published pages, and dropping
+    /// every holder reaches zero occupancy.
+    #[test]
+    fn preempt_release_reseed_readopt_refcounts() {
+        let mut rng = Rng::new(98);
+        let d = 16;
+        let bs = 4;
+        let p = pool(16, bs);
+        let rows: Vec<Vec<f32>> = (0..6).map(|_| rng.normal_vec_f32(d, 0.0, 1.0)).collect();
+        // admission promised 4 blocks; the victim draws 2 of them …
+        assert!(p.try_reserve(4));
+        let mut victim = PagedKv4Store::new(d, p.clone());
+        for r in &rows {
+            victim.push(r);
+        }
+        assert_eq!(victim.blocks_drawn(), 2);
+        assert_eq!(p.outstanding(), 2);
+        // … preemption publishes its 6 rows …
+        let ids = victim.freeze_prefix(6);
+        // … re-seeds an index entry (one retained ref per page) …
+        for &id in &ids {
+            p.retain(id);
+        }
+        // … refunds its unconsumed reservation and drops the session.
+        p.unreserve(4 - victim.blocks_drawn());
+        drop(victim);
+        assert_eq!(p.in_use(), 2, "published pages survive on the index refs");
+        assert_eq!(p.outstanding(), 0, "preemption refunded the whole remainder");
+        // re-admission adopts the published prefix back
+        let adopted: Vec<_> = ids.iter().map(|&id| (id, p.adopt(id).unwrap())).collect();
+        let resumed = PagedKv4Store::from_prefix(d, p.clone(), adopted, 6);
+        let mut got = vec![0.0f32; d];
+        let mut want = vec![0.0f32; d];
+        let mut twin = Kv4Store::new(d);
+        for r in &rows {
+            twin.push(r);
+        }
+        for t in 0..6 {
+            resumed.get(t, &mut got);
+            twin.get(t, &mut want);
+            assert_eq!(got, want, "re-adopted row {t}");
+        }
+        drop(resumed);
+        assert_eq!(p.in_use(), 2, "index refs keep the pages cached");
+        for &id in &ids {
+            p.release(id);
+        }
+        assert_eq!(p.in_use(), 0, "zero occupancy once the index lets go");
+    }
+
+    /// The published-tail CoW `+1` under preemption: a preempted session
+    /// whose prompt ends mid-block publishes its partial tail; the
+    /// resumed session adopts it and must copy-on-write a fresh block for
+    /// its first decode — costing one block *more* than the prefix spans,
+    /// exactly the `worst_case_blocks` tail term.
+    #[test]
+    fn readopted_partial_tail_cows_one_extra_block() {
+        let mut rng = Rng::new(99);
+        let d = 16;
+        let bs = 4;
+        let p = pool(16, bs);
+        let mut victim = PagedKv4Store::new(d, p.clone());
+        for _ in 0..6 {
+            victim.push(&rng.normal_vec_f32(d, 0.0, 1.0));
+        }
+        let ids = victim.freeze_prefix(6);
+        for &id in &ids {
+            p.retain(id); // index reference
+        }
+        drop(victim);
+        let adopted: Vec<_> = ids.iter().map(|&id| (id, p.adopt(id).unwrap())).collect();
+        let mut resumed = PagedKv4Store::from_prefix(d, p.clone(), adopted, 6);
+        let before = p.in_use();
+        resumed.push(&rng.normal_vec_f32(d, 0.0, 1.0));
+        assert_eq!(p.in_use(), before + 1, "first resumed decode CoWs the shared tail");
+        assert_eq!(resumed.blocks_drawn(), 1, "the CoW block came out of the reservation");
     }
 
     #[test]

@@ -84,12 +84,16 @@ fn help_text() -> String {
          \x20           [--shared-prefix P]                      (common system-prompt prefix)\n\
          \x20           [--max-active N] [--admit eager|drain]   (bwa-cont scheduler knobs)\n\
          \x20           [--spec-k K]                             (bwa-cont speculative drafts/step)\n\
+         \x20           [--prefill-chunk T] [--no-preempt]       (chunked prefill + preemption)\n\
+         \x20           [--slo-ttft-us U] [--slo-itl-us U]       (interactive-class SLO targets)\n\
+         \x20           [--long-requests N] [--long-prompt-len P] (hostile mix: long batch prompts)\n\
          \x20           [--kv-blocks N] [--block-size T]         (bwa-cont paged KV pool)\n\
          \x20           [--listen ADDR] [--max-queue N]          (TCP front-end; docs/PROTOCOL.md)\n\
          \x20           [--trace-out FILE] [--stats-every N]     (telemetry; docs/OBSERVABILITY.md)\n\
          \x20 client    [--addr HOST:PORT] [--requests N] [--prompt-len P] [--gen G]\n\
          \x20           [--shared-prefix P] [--seed S]           (same prompts `serve` drives)\n\
          \x20           [--temperature T] [--top-k K] [--top-p P] [--sample-seed S]\n\
+         \x20           [--priority interactive|batch]           (scheduling class on the wire)\n\
          \x20           [--stop ID,ID,...] [--verify-artifact f.bwa] [--stats] [--shutdown]\n\n\
          methods: {}\n\n\
          quantize once, serve many: `bwa quantize --out m.bwa` compiles the model to a\n\
@@ -120,6 +124,12 @@ mod tests {
             assert!(
                 help.contains(&format!("--{flag}")),
                 "serve flag --{flag} missing from help text"
+            );
+        }
+        for (switch, _) in bwa_llm::coordinator::SERVE_SPEC.switches {
+            assert!(
+                help.contains(&format!("--{switch}")),
+                "serve switch --{switch} missing from help text"
             );
         }
         for (flag, _, _) in bwa_llm::server::CLIENT_SPEC.flags {

@@ -209,6 +209,17 @@ impl KvStore {
             KvStore::Paged(s) => Some(s),
         }
     }
+
+    /// Pool blocks this store allocated, net of rollback releases
+    /// ([`PagedKv4Store::blocks_drawn`]); a contiguous store draws
+    /// nothing from any pool. Retirement/preemption refunds the session's
+    /// unconsumed reservation with this.
+    pub fn blocks_drawn(&self) -> usize {
+        match self {
+            KvStore::Contiguous(_) => 0,
+            KvStore::Paged(s) => s.blocks_drawn(),
+        }
+    }
 }
 
 /// Per-layer K and V stores for one sequence.
@@ -286,6 +297,12 @@ impl LayerKvCache {
 
     pub fn is_empty(&self) -> bool {
         self.k.is_empty()
+    }
+
+    /// Pool blocks both streams allocated, net of rollbacks (see
+    /// [`KvStore::blocks_drawn`]).
+    pub fn blocks_drawn(&self) -> usize {
+        self.k.blocks_drawn() + self.v.blocks_drawn()
     }
 }
 

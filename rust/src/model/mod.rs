@@ -597,6 +597,7 @@ impl Transformer {
         DecodeSession {
             caches,
             pos,
+            reserved_blocks: 0,
             scratch: DecodeScratch {
                 x: vec![0.0; d],
                 h: Tensor::zeros(&[1, d]),
@@ -1143,6 +1144,13 @@ struct DecodeScratch {
 pub struct DecodeSession {
     pub caches: Vec<LayerKvCache>,
     pub pos: usize,
+    /// KV blocks promised to this session at admission
+    /// ([`BlockPool::try_reserve`]); `0` for contiguous sessions. On
+    /// retirement or preemption the scheduler refunds
+    /// `reserved_blocks − Σ caches.blocks_drawn()` — the slice of the
+    /// promise the session never allocated (early stop, or a preempt
+    /// before the worst case materialized).
+    pub reserved_blocks: usize,
     scratch: DecodeScratch,
 }
 
@@ -1159,6 +1167,19 @@ impl DecodeSession {
             c.truncate(rows);
         }
         self.pos = rows;
+    }
+
+    /// Pool blocks all layers' caches allocated, net of rollbacks — the
+    /// consumed part of [`Self::reserved_blocks`].
+    pub fn blocks_drawn(&self) -> usize {
+        self.caches.iter().map(|c| c.blocks_drawn()).sum()
+    }
+
+    /// The unconsumed remainder of this session's admission reservation —
+    /// what retirement/preemption refunds via
+    /// [`crate::kvpool::BlockPool::unreserve`].
+    pub fn unconsumed_reservation(&self) -> usize {
+        self.reserved_blocks.saturating_sub(self.blocks_drawn())
     }
 }
 

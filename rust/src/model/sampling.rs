@@ -107,6 +107,13 @@ impl Sampler {
         Self { cfg, rng }
     }
 
+    /// The generation config this sampler was built from. The scheduler
+    /// uses it to rebuild a preempted request (the sampler itself —
+    /// cloned with its RNG state — carries the mid-stream pick sequence).
+    pub fn config(&self) -> &GenConfig {
+        &self.cfg
+    }
+
     /// Whether `token` is one of this request's stop ids.
     pub fn is_stop(&self, token: u16) -> bool {
         self.cfg.stop.contains(&token)

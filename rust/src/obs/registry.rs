@@ -226,6 +226,12 @@ pub struct SchedulerMetrics {
     pub spec_drafted: Counter,
     pub spec_accepted: Counter,
     pub spec_verifications: Counter,
+    /// Prefill chunks fed (`--prefill-chunk > 0` only): one increment
+    /// per `Prefilling` slot per step boundary.
+    pub prefill_chunks: Counter,
+    /// Slots preempted back to the queue by a blocked higher-priority
+    /// candidate.
+    pub preemptions: Counter,
     /// Requests waiting for admission, set at each step boundary.
     pub queue_depth: Gauge,
     /// Slots decoding, set at each step boundary.
@@ -239,6 +245,9 @@ pub struct SchedulerMetrics {
     /// emit/retire fan-out) — never inside pinned compute.
     pub stage_admission_us: LogHistogram,
     pub stage_prefill_us: LogHistogram,
+    /// Per-chunk prefill time in chunked mode (one sample per chunk,
+    /// where `stage_prefill_us` samples whole-prompt prefills).
+    pub stage_prefill_chunk_us: LogHistogram,
     pub stage_decode_us: LogHistogram,
     pub stage_verify_us: LogHistogram,
     pub stage_emit_us: LogHistogram,
@@ -307,6 +316,8 @@ impl Registry {
                 "scheduler.spec_verifications",
                 &self.scheduler.spec_verifications,
             ),
+            ("scheduler.prefill_chunks", &self.scheduler.prefill_chunks),
+            ("scheduler.preemptions", &self.scheduler.preemptions),
             ("server.connections", &self.server.connections),
             ("server.frames_generate", &self.server.frames_generate),
             ("server.frames_stats", &self.server.frames_stats),
@@ -335,6 +346,10 @@ impl Registry {
             (
                 "scheduler.stage.prefill_us",
                 &self.scheduler.stage_prefill_us,
+            ),
+            (
+                "scheduler.stage.prefill_chunk_us",
+                &self.scheduler.stage_prefill_chunk_us,
             ),
             ("scheduler.stage.decode_us", &self.scheduler.stage_decode_us),
             ("scheduler.stage.verify_us", &self.scheduler.stage_verify_us),

@@ -20,6 +20,7 @@ use super::protocol::{
     decode_server, encode_client, ClientFrame, ServeError, ServerFrame, PROTOCOL_VERSION,
 };
 use crate::coordinator::metrics::Histogram;
+use crate::coordinator::scheduler::Priority;
 use crate::coordinator::{client_prompts, Workload};
 use crate::model::sampling::GenConfig;
 use crate::model::Transformer;
@@ -118,12 +119,27 @@ impl Client {
         gen: usize,
         cfg: &GenConfig,
     ) -> Result<Generation, ServeError> {
+        self.generate_with_priority(id, tokens, gen, cfg, Priority::default())
+    }
+
+    /// [`generate`](Client::generate) with an explicit scheduling class:
+    /// `Batch` requests yield admission to interactive ones and may be
+    /// preempted back to the server's queue under load.
+    pub fn generate_with_priority(
+        &mut self,
+        id: u64,
+        tokens: &[u16],
+        gen: usize,
+        cfg: &GenConfig,
+        priority: Priority,
+    ) -> Result<Generation, ServeError> {
         let t0 = Instant::now();
         self.send(&ClientFrame::Generate {
             id,
             tokens: tokens.to_vec(),
             gen,
             cfg: cfg.clone(),
+            priority,
         })?;
         let mut streamed: Vec<u16> = Vec::with_capacity(gen);
         let mut ttft: Option<Duration> = None;
@@ -251,6 +267,11 @@ pub static CLIENT_SPEC: Spec = Spec {
         ),
         ("stop", "", "comma-separated stop token ids"),
         (
+            "priority",
+            "interactive",
+            "scheduling class for every request (interactive | batch)",
+        ),
+        (
             "verify-artifact",
             "",
             "check streamed tokens against an in-process greedy run of this .bwa artifact",
@@ -321,6 +342,7 @@ pub fn cmd_client(args: &Args) -> Result<(), String> {
         stop: parse_stop(args.str_or("stop", ""))?,
     };
     base_cfg.validate()?;
+    let priority: Priority = args.str_or("priority", "interactive").parse()?;
 
     let verify_path = args.str_or("verify-artifact", "");
     let reference_model = if verify_path.is_empty() {
@@ -341,6 +363,8 @@ pub fn cmd_client(args: &Args) -> Result<(), String> {
         shared_prefix,
         stagger: Duration::ZERO,
         seed,
+        long_requests: 0,
+        long_prompt_len: 0,
     };
     let prompts = client_prompts(&load, 0, requests);
 
@@ -358,7 +382,7 @@ pub fn cmd_client(args: &Args) -> Result<(), String> {
             ..base_cfg.clone()
         };
         let g = client
-            .generate(i as u64, prompt, gen, &cfg)
+            .generate_with_priority(i as u64, prompt, gen, &cfg, priority)
             .map_err(|e| format!("request {i}: {e}"))?;
         if let Some(model) = &reference_model {
             let want = greedy_reference(model, prompt, gen, &cfg.stop);

@@ -352,6 +352,7 @@ fn handle_conn(
                         tokens,
                         gen,
                         cfg,
+                        priority,
                     }) => {
                         shared.obs.registry.server.frames_generate.incr(1);
                         if handle_generate(
@@ -364,6 +365,7 @@ fn handle_conn(
                             tokens,
                             gen,
                             cfg,
+                            priority,
                         )
                         .is_err()
                         {
@@ -420,6 +422,7 @@ fn handle_generate(
     tokens: Vec<u16>,
     gen: usize,
     cfg: GenConfig,
+    priority: crate::coordinator::scheduler::Priority,
 ) -> std::io::Result<()> {
     let metrics = &shared.obs.registry.server;
     if let Err(error) = limits.check(&tokens, gen) {
@@ -461,6 +464,7 @@ fn handle_generate(
         resp_tx,
         stream_tx: Some(stream_tx),
         cfg,
+        priority,
         trace,
     });
     if submitted.is_err() {
@@ -554,6 +558,33 @@ pub fn network_report(stats: &ServerStats) -> String {
             s.stop_hits
         ));
     }
+    if s.prefill_chunks > 0 {
+        r.push_str(&format!(
+            "\nprefill chunks: {} partial prefill steps",
+            s.prefill_chunks
+        ));
+    }
+    if s.preemptions > 0 {
+        r.push_str(&format!(
+            "\npreemptions: {} slots preempted back to the queue",
+            s.preemptions
+        ));
+    }
+    for c in &s.classes {
+        if c.requests == 0 && c.preemptions == 0 {
+            continue;
+        }
+        r.push_str(&format!(
+            "\nclass {}: {} requests, {} preemptions",
+            c.label, c.requests, c.preemptions
+        ));
+        if let Some(a) = c.ttft_attainment() {
+            r.push_str(&format!(", ttft slo {:.0}%", a * 100.0));
+        }
+        if let Some(a) = c.itl_attainment() {
+            r.push_str(&format!(", itl slo {:.0}%", a * 100.0));
+        }
+    }
     if let Some(kv) = &s.kv {
         r.push_str(&format!(
             "\nkv pool:     peak {}/{} blocks, {} pinned by prefix cache\n\
@@ -624,7 +655,7 @@ pub fn serve_listen(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::scheduler::AdmissionPolicy;
+    use crate::coordinator::scheduler::SchedPolicy;
     use std::sync::mpsc::Receiver;
     use std::sync::Mutex;
 
@@ -748,7 +779,7 @@ mod tests {
             ServerConfig {
                 scheduler: SchedulerConfig {
                     max_active: 4,
-                    admit: AdmissionPolicy::Eager,
+                    policy: SchedPolicy::eager(),
                     spec_k,
                 },
                 max_queue,
@@ -838,7 +869,7 @@ mod tests {
             ServerConfig {
                 scheduler: SchedulerConfig {
                     max_active: 4,
-                    admit: AdmissionPolicy::Eager,
+                    policy: SchedPolicy::eager(),
                     spec_k: 0,
                 },
                 max_queue: 1,

@@ -23,6 +23,7 @@
 //! 2^53 lose precision on the wire — irrelevant for reproducibility as
 //! long as client and server agree, which a double guarantees.
 
+use crate::coordinator::scheduler::Priority;
 use crate::model::sampling::GenConfig;
 use crate::util::json::Json;
 
@@ -103,12 +104,16 @@ impl std::error::Error for ServeError {}
 #[derive(Clone, Debug, PartialEq)]
 pub enum ClientFrame {
     /// Generate `gen` tokens from `tokens` under `cfg`, streaming each
-    /// one back as a [`ServerFrame::Token`].
+    /// one back as a [`ServerFrame::Token`]. `priority` picks the
+    /// scheduling class (`"interactive"` — the default when absent — or
+    /// `"batch"`); the scheduler admits interactive work first and may
+    /// preempt batch work for it.
     Generate {
         id: u64,
         tokens: Vec<u16>,
         gen: usize,
         cfg: GenConfig,
+        priority: Priority,
     },
     /// Fetch a live telemetry snapshot ([`ServerFrame::Stats`]) —
     /// counters, gauges, and latency-histogram percentiles across every
@@ -208,13 +213,21 @@ pub fn genconfig_from_json(j: &Json) -> Result<GenConfig, ServeError> {
 /// writer appends it).
 pub fn encode_client(frame: &ClientFrame) -> String {
     let j = match frame {
-        ClientFrame::Generate { id, tokens, gen, cfg } => Json::obj(vec![
-            ("type", Json::str("generate")),
-            ("id", Json::num(*id as f64)),
-            ("tokens", tokens_to_json(tokens)),
-            ("gen", Json::num(*gen as f64)),
-            ("cfg", genconfig_to_json(cfg)),
-        ]),
+        ClientFrame::Generate { id, tokens, gen, cfg, priority } => {
+            let mut pairs = vec![
+                ("type", Json::str("generate")),
+                ("id", Json::num(*id as f64)),
+                ("tokens", tokens_to_json(tokens)),
+                ("gen", Json::num(*gen as f64)),
+                ("cfg", genconfig_to_json(cfg)),
+            ];
+            // Default priority stays off the wire — frames from older
+            // clients and frames for interactive work look identical.
+            if *priority != Priority::default() {
+                pairs.push(("priority", Json::str(priority.label())));
+            }
+            Json::obj(pairs)
+        }
         ClientFrame::Stats => Json::obj(vec![("type", Json::str("stats"))]),
         ClientFrame::Shutdown => Json::obj(vec![("type", Json::str("shutdown"))]),
     };
@@ -292,6 +305,17 @@ pub fn decode_client(line: &str) -> Result<ClientFrame, ServeError> {
                 Json::Null => GenConfig::default(),
                 cfg => genconfig_from_json(cfg)?,
             },
+            priority: match j.get("priority") {
+                Json::Null => Priority::default(),
+                p => p
+                    .as_str()
+                    .and_then(|s| s.parse().ok())
+                    .ok_or_else(|| {
+                        ServeError::BadRequest(
+                            "'priority' must be \"interactive\" or \"batch\"".into(),
+                        )
+                    })?,
+            },
         }),
         "stats" => Ok(ClientFrame::Stats),
         "shutdown" => Ok(ClientFrame::Shutdown),
@@ -357,21 +381,39 @@ mod tests {
                 seed: 123,
                 stop: vec![2, 7],
             },
+            priority: Priority::Batch,
         };
         let line = encode_client(&frame);
+        assert!(line.contains("\"priority\""), "{line}");
+        assert_eq!(decode_client(&line).unwrap(), frame);
+    }
+
+    #[test]
+    fn default_priority_stays_off_the_wire() {
+        let frame = ClientFrame::Generate {
+            id: 1,
+            tokens: vec![5],
+            gen: 2,
+            cfg: GenConfig::default(),
+            priority: Priority::default(),
+        };
+        let line = encode_client(&frame);
+        assert!(!line.contains("priority"), "{line}");
         assert_eq!(decode_client(&line).unwrap(), frame);
     }
 
     #[test]
     fn generate_without_cfg_defaults_to_greedy() {
         let line = r#"{"type":"generate","id":0,"tokens":[1,2,3],"gen":4}"#;
-        let ClientFrame::Generate { cfg, tokens, gen, .. } = decode_client(line).unwrap() else {
+        let ClientFrame::Generate { cfg, tokens, gen, priority, .. } = decode_client(line).unwrap()
+        else {
             panic!("expected generate");
         };
         assert_eq!(cfg, GenConfig::default());
         assert!(cfg.is_greedy());
         assert_eq!(tokens, vec![1, 2, 3]);
         assert_eq!(gen, 4);
+        assert_eq!(priority, Priority::Interactive);
     }
 
     #[test]
@@ -459,6 +501,11 @@ mod tests {
         // an unusable sampling config is caught at decode time
         assert!(matches!(
             decode_client(r#"{"type":"generate","id":0,"tokens":[1],"gen":1,"cfg":{"top_p":0}}"#),
+            Err(ServeError::BadRequest(_))
+        ));
+        // so is an unknown priority class
+        assert!(matches!(
+            decode_client(r#"{"type":"generate","id":0,"tokens":[1],"gen":1,"priority":"vip"}"#),
             Err(ServeError::BadRequest(_))
         ));
     }

@@ -16,6 +16,13 @@ cargo test -q --lib --bins --tests
 echo "== cargo test --doc =="
 cargo test --doc -q
 
+echo "== scheduler torture suite (fixed seeds) =="
+# The randomized scheduler torture tests run as part of the suite above;
+# this names them explicitly so a seed/case-count regression is visible
+# as its own gate. Seeds are baked into the tests — reruns are
+# bit-reproducible, and a failure prints the case index + fork seed.
+cargo test -q --lib torture
+
 echo "== artifact e2e smoke (quantize once, serve many) =="
 # Exercises the full artifact path on the tiny model: random checkpoint ->
 # parallel quantize + artifact write -> serve and eval from the artifact
@@ -50,6 +57,27 @@ specout="$(target/release/bwa serve --artifact "$smoke/tiny.bwa" --backend bwa-c
 echo "$specout"
 echo "$specout" | grep -E 'spec accepted: [1-9][0-9]*/' \
   || { echo "expected nonzero accepted drafts in the --spec-k report"; exit 1; }
+# Hostile mix: one long batch-class prompt contending with short
+# interactive requests for a single slot (--max-active 1) forces both
+# PR-9 mechanisms to fire. One closed-loop interactive client with a
+# 1ms think time leaves a gap after each request in which the queued
+# batch prompt admits; chunking its 120-token prefill at 8 rows
+# per step (15 chunk steps of real forward passes) makes its service
+# far outlast the think time, so the client's next arrival always finds
+# the slot held by lower-priority work — and the zero-patience default
+# SLO evicts it on the spot. The report must show nonzero prefill-chunk
+# and preemption counts plus the per-class accounting line.
+hostout="$(target/release/bwa serve --artifact "$smoke/tiny.bwa" --backend bwa-cont \
+  --requests 4 --clients 1 --prompt-len 12 --gen 3 \
+  --long-requests 1 --long-prompt-len 120 --prefill-chunk 8 \
+  --kv-blocks 256 --block-size 4 --max-active 1 --stagger-us 1000)"
+echo "$hostout"
+echo "$hostout" | grep -E 'prefill chunks: [1-9]' \
+  || { echo "expected nonzero prefill chunks in the hostile-mix report"; exit 1; }
+echo "$hostout" | grep -E 'preemptions: [1-9]' \
+  || { echo "expected nonzero preemptions in the hostile-mix report"; exit 1; }
+echo "$hostout" | grep -E 'class batch: 1 requests' \
+  || { echo "expected the batch-class accounting line in the hostile-mix report"; exit 1; }
 target/release/bwa eval --artifact "$smoke/tiny.bwa" --quick
 
 echo "== network e2e smoke (serve --listen + client over loopback) =="

@@ -311,6 +311,7 @@ fn artifact_roundtrip_serves_identical_tokens() {
 #[test]
 fn batcher_drains_burst_in_full_batches() {
     use bwa_llm::coordinator::batcher::{run_batcher, Backend, BatcherConfig, Request};
+    use bwa_llm::coordinator::scheduler::Priority;
     use bwa_llm::model::sampling::GenConfig;
     use std::sync::mpsc;
     use std::time::{Duration, Instant};
@@ -336,6 +337,7 @@ fn batcher_drains_burst_in_full_batches() {
             resp_tx: rtx.clone(),
             stream_tx: None,
             cfg: GenConfig::default(),
+            priority: Priority::default(),
             trace: None,
         })
         .unwrap();
@@ -372,7 +374,7 @@ fn batcher_drains_burst_in_full_batches() {
 /// overlap/admission pins live in `coordinator/scheduler.rs` tests.)
 #[test]
 fn continuous_scheduler_serves_staggered_arrivals_end_to_end() {
-    use bwa_llm::coordinator::scheduler::{AdmissionPolicy, SchedulerConfig, TransformerBackend};
+    use bwa_llm::coordinator::scheduler::{SchedPolicy, SchedulerConfig, TransformerBackend};
     use bwa_llm::coordinator::{serve_continuous_load, Workload};
     use bwa_llm::model::config::ModelConfig;
     use std::time::Duration;
@@ -400,6 +402,8 @@ fn continuous_scheduler_serves_staggered_arrivals_end_to_end() {
         shared_prefix: 0,
         stagger: Duration::from_micros(500),
         seed: 13,
+        long_requests: 0,
+        long_prompt_len: 0,
     };
     let (name, stats, _wall) = serve_continuous_load(
         move || {
@@ -409,7 +413,7 @@ fn continuous_scheduler_serves_staggered_arrivals_end_to_end() {
         &load,
         SchedulerConfig {
             max_active: 4,
-            admit: AdmissionPolicy::Eager,
+            policy: SchedPolicy::eager(),
             spec_k: 0,
         },
     );
@@ -436,7 +440,7 @@ fn continuous_scheduler_serves_staggered_arrivals_end_to_end() {
 /// even though exact overlap is host-timing dependent.
 #[test]
 fn shared_prefix_workload_reuses_cached_blocks_end_to_end() {
-    use bwa_llm::coordinator::scheduler::{AdmissionPolicy, SchedulerConfig, TransformerBackend};
+    use bwa_llm::coordinator::scheduler::{SchedPolicy, SchedulerConfig, TransformerBackend};
     use bwa_llm::coordinator::{serve_continuous_load, Workload};
     use bwa_llm::kvpool::KvPoolConfig;
     use bwa_llm::model::config::ModelConfig;
@@ -465,6 +469,8 @@ fn shared_prefix_workload_reuses_cached_blocks_end_to_end() {
         shared_prefix: 16, // 2 full 8-row blocks reusable per admission
         stagger: Duration::from_micros(500),
         seed: 19,
+        long_requests: 0,
+        long_prompt_len: 0,
     };
     let (name, stats, _wall) = serve_continuous_load(
         move || {
@@ -482,7 +488,7 @@ fn shared_prefix_workload_reuses_cached_blocks_end_to_end() {
         &load,
         SchedulerConfig {
             max_active: 4,
-            admit: AdmissionPolicy::Eager,
+            policy: SchedPolicy::eager(),
             spec_k: 0,
         },
     );
@@ -513,7 +519,7 @@ fn shared_prefix_workload_reuses_cached_blocks_end_to_end() {
 /// the acceptance pin for the network path.
 #[test]
 fn network_server_streams_bit_identical_to_in_process_run() {
-    use bwa_llm::coordinator::scheduler::{AdmissionPolicy, SchedulerConfig, TransformerBackend};
+    use bwa_llm::coordinator::scheduler::{SchedPolicy, SchedulerConfig, TransformerBackend};
     use bwa_llm::coordinator::{client_prompts, Workload};
     use bwa_llm::kvpool::KvPoolConfig;
     use bwa_llm::model::config::ModelConfig;
@@ -547,6 +553,8 @@ fn network_server_streams_bit_identical_to_in_process_run() {
         shared_prefix: 0,
         stagger: Duration::ZERO,
         seed: 23,
+        long_requests: 0,
+        long_prompt_len: 0,
     };
     let prompts = client_prompts(&load, 0, load.requests);
 
@@ -582,7 +590,7 @@ fn network_server_streams_bit_identical_to_in_process_run() {
         ServerConfig {
             scheduler: SchedulerConfig {
                 max_active: 4,
-                admit: AdmissionPolicy::Eager,
+                policy: SchedPolicy::eager(),
                 spec_k: 0,
             },
             max_queue: 8,
@@ -620,7 +628,7 @@ fn network_server_streams_bit_identical_to_in_process_run() {
 /// stays usable and smaller requests still serve.
 #[test]
 fn network_capacity_rejection_over_the_wire() {
-    use bwa_llm::coordinator::scheduler::{AdmissionPolicy, SchedulerConfig, TransformerBackend};
+    use bwa_llm::coordinator::scheduler::{SchedPolicy, SchedulerConfig, TransformerBackend};
     use bwa_llm::kvpool::KvPoolConfig;
     use bwa_llm::model::config::ModelConfig;
     use bwa_llm::model::sampling::GenConfig;
@@ -658,7 +666,7 @@ fn network_capacity_rejection_over_the_wire() {
         ServerConfig {
             scheduler: SchedulerConfig {
                 max_active: 2,
-                admit: AdmissionPolicy::Eager,
+                policy: SchedPolicy::eager(),
                 spec_k: 0,
             },
             max_queue: 8,
