@@ -38,7 +38,12 @@
 //! streams are asserted identical (telemetry never touches parity) and
 //! the enabled side must hold at least half the disabled throughput —
 //! a deliberately generous bound that still catches a counter landing
-//! on the hot path by accident.
+//! on the hot path by accident. A third rerun turns on the per-op
+//! roofline profiler (`obs::profile`) instead: scoped timers at every
+//! op-call boundary in the model layer. Same token-identity assertion,
+//! same 2x bound, plus a check that the run actually attributed
+//! samples — recorded as `tok_per_s_profiled`, `profiled_over_disabled`,
+//! and `profile_samples`.
 //!
 //! A fifth, **network** workload (under the `network` key) puts the
 //! same artifact-loaded model behind the TCP front-end
@@ -96,6 +101,13 @@ use bwa_llm::util::json::Json;
 use bwa_llm::util::rng::Rng;
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
+
+/// Version of the `BENCH_serve.json` record layout. Bumped whenever a
+/// section is added, removed, or a field changes meaning, so trajectory
+/// tooling can tell an old record from a sparse one. Version 2 added
+/// the `speculative`, `obs_overhead` (with profiling fields), and
+/// `hostile` sections.
+const BENCH_SCHEMA_VERSION: usize = 2;
 
 const REQUESTS: usize = 32;
 const CLIENTS: usize = 4;
@@ -588,6 +600,31 @@ fn main() {
         spec_off_stats.tokens_per_s, obs_on_stats.tokens_per_s, obs_ratio, obs_gemm_calls,
     );
 
+    // The same workload once more with the per-op roofline profiler on:
+    // scoped timers at op-call boundaries (one clock read per op call,
+    // amortized over that op's whole matmul) must never change tokens,
+    // and the same generous 2x bound applies.
+    let profile_samples_before = obs::profile::table().samples();
+    obs::profile::set_enabled(true);
+    let (prof_tokens, prof_stats, _prof_wall) = drive_spec(0);
+    obs::profile::set_enabled(false);
+    assert_eq!(
+        prof_tokens, spec_off_tokens,
+        "profiling must never change the token stream"
+    );
+    let profile_samples = obs::profile::table().samples() - profile_samples_before;
+    assert!(profile_samples > 0, "profiling-on run must attribute op samples");
+    let prof_ratio = prof_stats.tokens_per_s / spec_off_stats.tokens_per_s.max(1e-9);
+    assert!(
+        prof_ratio > 0.5,
+        "profiling-on decode fell below half the profiling-off speed: {prof_ratio:.2}x"
+    );
+    println!(
+        "== profiling overhead (per-op scopes) ==\n\
+         off {:.1} tok/s | on {:.1} tok/s ({:.2}x, {} op samples attributed)",
+        spec_off_stats.tokens_per_s, prof_stats.tokens_per_s, prof_ratio, profile_samples,
+    );
+
     // --- network serving: the TCP front-end over loopback ---
     // The same artifact-loaded model behind `server::start`; CLIENTS
     // connections drive the same seeded prompts over real sockets with
@@ -781,6 +818,7 @@ fn main() {
     );
 
     let json = Json::obj(vec![
+        ("schema_version", Json::num(BENCH_SCHEMA_VERSION as f64)),
         ("model", Json::str(cfg.name.as_str())),
         ("params", Json::num(cfg.param_count() as f64)),
         ("requests", Json::num(REQUESTS as f64)),
@@ -845,6 +883,9 @@ fn main() {
                 ("tok_per_s_enabled", Json::num(obs_on_stats.tokens_per_s)),
                 ("enabled_over_disabled", Json::num(obs_ratio)),
                 ("kernel_gemm_calls", Json::num(obs_gemm_calls as f64)),
+                ("tok_per_s_profiled", Json::num(prof_stats.tokens_per_s)),
+                ("profiled_over_disabled", Json::num(prof_ratio)),
+                ("profile_samples", Json::num(profile_samples as f64)),
             ]),
         ),
         (

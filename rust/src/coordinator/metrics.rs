@@ -312,6 +312,10 @@ pub struct SchedulerStats {
     /// Speculative-decoding counters; `None` unless the scheduler ran
     /// with `--spec-k > 0` against a verification-capable backend.
     pub spec: Option<SpecStats>,
+    /// Per-op roofline profile ([`crate::obs::profile::report_json`]),
+    /// captured at shutdown; `None` unless profiling was enabled for the
+    /// run.
+    pub profile: Option<crate::util::json::Json>,
 }
 
 #[cfg(test)]

@@ -157,12 +157,57 @@ pub static SERVE_SPEC: Spec = Spec {
           file (size-rotated flight recorder — docs/OBSERVABILITY.md)"),
         ("stats-every", "0", "bwa-cont: print a `stats: {json}` snapshot line every N \
           scheduler steps (0 = off)"),
+        ("metrics-listen", "", "bwa-cont: answer Prometheus GET /metrics scrapes on this \
+          address (e.g. 127.0.0.1:9464) — docs/OBSERVABILITY.md"),
+        ("chrome-trace", "", "bwa-cont: after the run, convert the --trace-out records (plus \
+          the --profile totals) into a chrome://tracing JSON file at this path"),
     ],
-    switches: &[(
-        "no-preempt",
-        "bwa-cont: never evict an active slot for a blocked higher-priority request",
-    )],
+    switches: &[
+        (
+            "no-preempt",
+            "bwa-cont: never evict an active slot for a blocked higher-priority request",
+        ),
+        (
+            "profile",
+            "bwa-cont: attribute wall time to (phase, layer, op) keys and report hot ops \
+             against the STREAM-triad roofline",
+        ),
+    ],
 };
+
+/// Gate the observability flags to the `bwa-cont` backend, naming every
+/// offending flag in the error (a silently ignored `--trace-out` is how
+/// telemetry quietly vanishes). `--chrome-trace` additionally needs the
+/// flight-recorder file it converts.
+fn check_obs_flags(
+    backend_kind: &str,
+    trace_out: &str,
+    stats_every: usize,
+    metrics_listen: &str,
+    chrome_trace: &str,
+    profile: bool,
+) -> Result<(), String> {
+    let offending: Vec<&str> = [
+        (!trace_out.is_empty()).then_some("--trace-out"),
+        (stats_every > 0).then_some("--stats-every"),
+        (!metrics_listen.is_empty()).then_some("--metrics-listen"),
+        (!chrome_trace.is_empty()).then_some("--chrome-trace"),
+        profile.then_some("--profile"),
+    ]
+    .into_iter()
+    .flatten()
+    .collect();
+    if backend_kind != "bwa-cont" && !offending.is_empty() {
+        return Err(format!(
+            "{} require --backend bwa-cont (the instrumented scheduler); got '{backend_kind}'",
+            offending.join(" / ")
+        ));
+    }
+    if !chrome_trace.is_empty() && trace_out.is_empty() {
+        return Err("--chrome-trace converts the flight-recorder file; add --trace-out PATH".into());
+    }
+    Ok(())
+}
 
 pub fn cmd_serve(args: &Args) -> Result<(), String> {
     args.validate(&SERVE_SPEC).map_err(|e| e.to_string())?;
@@ -231,12 +276,17 @@ pub fn cmd_serve(args: &Args) -> Result<(), String> {
     }
     let trace_out = args.str_or("trace-out", "").to_string();
     let stats_every = args.usize_or("stats-every", 0).map_err(|e| e.to_string())?;
-    if (!trace_out.is_empty() || stats_every > 0) && backend_kind != "bwa-cont" {
-        return Err(format!(
-            "--trace-out / --stats-every require --backend bwa-cont (the instrumented \
-             scheduler); got '{backend_kind}'"
-        ));
-    }
+    let metrics_listen = args.str_or("metrics-listen", "").to_string();
+    let chrome_trace = args.str_or("chrome-trace", "").to_string();
+    let profile_on = args.switch("profile");
+    check_obs_flags(
+        backend_kind,
+        &trace_out,
+        stats_every,
+        &metrics_listen,
+        &chrome_trace,
+        profile_on,
+    )?;
     let stagger_us = args.u64_or("stagger-us", 0).map_err(|e| e.to_string())?;
     let kv_blocks = args.usize_or("kv-blocks", 0).map_err(|e| e.to_string())?;
     let block_tokens = args.usize_or("block-size", 16).map_err(|e| e.to_string())?;
@@ -409,38 +459,63 @@ pub fn cmd_serve(args: &Args) -> Result<(), String> {
             Some(Arc::new(rec))
         };
         crate::obs::set_enabled(true);
+        if profile_on {
+            crate::obs::profile::set_enabled(true);
+            // One-shot roofline calibration before any request arrives:
+            // DRAM bandwidth from a ~64 MiB STREAM triad, the ceiling
+            // every per-op GB/s in the report is compared against.
+            let gbps = crate::util::bench::stream_triad_gbps(64 << 20, 3);
+            crate::obs::profile::set_peak_gbps(gbps);
+            println!("profile: on (memory peak {gbps:.1} GB/s, STREAM triad)");
+        }
         let obs = ObsOptions {
             registry: crate::obs::global_arc(),
             stats_every,
             recorder,
         };
+        if !metrics_listen.is_empty() {
+            let addr =
+                crate::obs::export::serve_metrics(&metrics_listen, crate::obs::global_arc())?;
+            // scripts/check.sh greps this exact prefix to learn the
+            // bound port (--metrics-listen 127.0.0.1:0).
+            println!("metrics listening on {addr}");
+        }
         if !listen.is_empty() {
             // Network front-end: expose the scheduler over TCP instead
             // of driving the synthetic workload (docs/PROTOCOL.md).
-            return crate::server::serve_listen(
-                &listen,
-                model,
-                workers,
-                pool_cfg,
+            crate::server::serve_listen(&listen, model, workers, pool_cfg, scfg, max_queue, obs)?;
+        } else {
+            let (name, stats, wall) = serve_continuous_load_obs(
+                move || {
+                    TransformerBackend::with_kv_pool(
+                        model,
+                        workers,
+                        "native-bwa W(1+1)A(1x4)",
+                        pool_cfg,
+                    )
+                },
+                &load,
                 scfg,
-                max_queue,
                 obs,
             );
+            println!("{}", continuous_report(&name, &load, &stats, wall));
         }
-        let (name, stats, wall) = serve_continuous_load_obs(
-            move || {
-                TransformerBackend::with_kv_pool(
-                    model,
-                    workers,
-                    "native-bwa W(1+1)A(1x4)",
-                    pool_cfg,
-                )
-            },
-            &load,
-            scfg,
-            obs,
-        );
-        println!("{}", continuous_report(&name, &load, &stats, wall));
+        if !chrome_trace.is_empty() {
+            use crate::util::json::Json;
+            // The recorder flushes per record, so the JSONL file is
+            // complete the moment the last request retired above.
+            let profile_report = if crate::obs::profile::enabled() {
+                crate::obs::profile::report_json()
+            } else {
+                Json::Null
+            };
+            let trace =
+                crate::obs::export::chrome_trace_from_file(Path::new(&trace_out), &profile_report)?;
+            std::fs::write(&chrome_trace, trace.to_string_pretty())
+                .map_err(|e| format!("--chrome-trace {chrome_trace}: {e}"))?;
+            let n = trace.get("traceEvents").as_arr().map_or(0, <[Json]>::len);
+            println!("chrome trace: {chrome_trace} ({n} events)");
+        }
         return Ok(());
     }
 
@@ -855,6 +930,14 @@ pub fn continuous_report(name: &str, load: &Workload, stats: &SchedulerStats, wa
             report.push_str(&format!(", itl slo {:.0}%", a * 100.0));
         }
     }
+    // scripts/check.sh greps the `hot ops:` prefix in its --profile
+    // smoke: the top time-attributed (phase, layer, op) keys.
+    if let Some(profile) = &stats.profile {
+        for line in crate::obs::profile::hot_ops_lines(profile, 5) {
+            report.push('\n');
+            report.push_str(&line);
+        }
+    }
     report
 }
 
@@ -1016,5 +1099,28 @@ mod tests {
             4,
         );
         assert!(report.contains("requests:    17"), "{report}");
+    }
+
+    /// The observability flags are bwa-cont-only, and the CLI error
+    /// names every offending flag plus the backend the user actually
+    /// picked — no silently ignored telemetry knobs.
+    #[test]
+    fn obs_flags_are_gated_to_the_continuous_backend() {
+        let err = check_obs_flags("bwa", "t.jsonl", 5, "127.0.0.1:0", "", true).unwrap_err();
+        for flag in ["--trace-out", "--stats-every", "--metrics-listen", "--profile"] {
+            assert!(err.contains(flag), "{err} must name {flag}");
+        }
+        assert!(err.contains("bwa-cont"), "{err}");
+        assert!(err.contains("'bwa'"), "error names the chosen backend: {err}");
+        // a lockstep run with none of the flags passes
+        assert!(check_obs_flags("pjrt", "", 0, "", "", false).is_ok());
+        // on bwa-cont everything is allowed together...
+        assert!(check_obs_flags("bwa-cont", "t.jsonl", 5, "127.0.0.1:0", "c.json", true).is_ok());
+        // ...except a chrome trace without the recorder file it converts
+        let err = check_obs_flags("bwa-cont", "", 0, "", "c.json", false).unwrap_err();
+        assert!(err.contains("--trace-out"), "{err}");
+        // and --chrome-trace on a lockstep backend is named like the rest
+        let err = check_obs_flags("native", "", 0, "", "c.json", false).unwrap_err();
+        assert!(err.contains("--chrome-trace"), "{err}");
     }
 }

@@ -1316,6 +1316,7 @@ impl<'a, B: SessionBackend> Scheduler<'a, B> {
             let prefilled = if batch.is_empty() {
                 Vec::new()
             } else {
+                crate::obs::profile::set_phase(crate::obs::profile::Phase::Prefill);
                 let t0 = Instant::now();
                 let out = self.backend.prefill_batch_sampled(&prompts, &gens, &mut samplers);
                 prefill_d = t0.elapsed();
@@ -1433,6 +1434,7 @@ impl<'a, B: SessionBackend> Scheduler<'a, B> {
                     i += 1;
                     continue;
                 }
+                crate::obs::profile::set_phase(crate::obs::profile::Phase::Prefill);
                 let t0 = Instant::now();
                 let first = {
                     let slot = &mut self.active[i];
@@ -1543,6 +1545,7 @@ impl<'a, B: SessionBackend> Scheduler<'a, B> {
                     idxs.push(d);
                 }
                 if !sessions.is_empty() {
+                    crate::obs::profile::set_phase(crate::obs::profile::Phase::Decode);
                     let t0 = Instant::now();
                     let out =
                         self.backend.decode_batch_sampled(&mut sessions, &toks, &mut samplers);
@@ -1577,6 +1580,7 @@ impl<'a, B: SessionBackend> Scheduler<'a, B> {
                     idxs.push(d);
                 }
                 if !sessions.is_empty() {
+                    crate::obs::profile::set_phase(crate::obs::profile::Phase::Verify);
                     let t0 = Instant::now();
                     let emitted = self.backend.verify_batch(&mut sessions, &toks, &dlist);
                     self.obs.registry.scheduler.stage_verify_us.record(t0.elapsed());
@@ -1912,6 +1916,9 @@ impl<'a, B: SessionBackend> Scheduler<'a, B> {
             classes,
             kv: self.backend.kv_stats(),
             spec,
+            // Captured only when profiling opted in, so reports on a
+            // profile-off run carry no empty section.
+            profile: crate::obs::profile::enabled().then(crate::obs::profile::report_json),
         }
     }
 }

@@ -311,6 +311,95 @@ fn torture_randomized_schedules_on_mock() {
     });
 }
 
+/// Profiling parity on a fixed-seed paged [`TransformerBackend`]: the
+/// op profiler may only change *timing*, never tokens. One request set
+/// runs with profiling off (the global table must record nothing — the
+/// disabled scope is an inert guard) and again with profiling on
+/// (tokens bit-identical, and the table must now attribute samples).
+/// Chunked prefill + speculation are both on, so the prefill, decode,
+/// and verify phase paths all cross instrumented ops.
+#[test]
+fn torture_profiling_keeps_tokens_identical_and_is_inert_when_off() {
+    use crate::obs::profile;
+    // Serialize the gate toggle against profile.rs's disabled-scope
+    // test: parallel lib tests share the process-wide gate.
+    let _gate = profile::gate_test_lock();
+    let cfg = ModelConfig {
+        name: "torture-prof".into(),
+        vocab_size: 64,
+        d_model: 128,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 192,
+        max_seq: 64,
+        rope_theta: 10000.0,
+        rmsnorm_eps: 1e-5,
+    };
+    let ck = Checkpoint::random(&cfg, 1234);
+    let mut crng = Rng::new(1235);
+    let calib: Vec<Vec<u16>> = (0..4)
+        .map(|_| (0..32).map(|_| crng.below(64) as u16).collect())
+        .collect();
+    let model = quantize_model(&ck, &BwaQuantizer::paper(), &calib, Some(4)).unwrap();
+    let pool_cfg = KvPoolConfig {
+        blocks: 0,
+        block_tokens: 4,
+    };
+    let pool_cfg = KvPoolConfig {
+        blocks: 3 * pool_cfg.worst_case_blocks(16, 4, cfg.n_layers),
+        block_tokens: 4,
+    };
+    let backend = TransformerBackend::with_kv_pool(model, 2, "torture-prof", pool_cfg);
+
+    let mut rng = Rng::new(0x7047_0003);
+    let specs = random_specs(&mut rng, 5, 16, 4);
+    let sched_cfg = SchedulerConfig {
+        max_active: 2,
+        spec_k: 2,
+        policy: SchedPolicy {
+            admit: AdmissionPolicy::Eager,
+            prefill_chunk: 3,
+            preempt: true,
+            slo: [SloTarget::default(); Priority::COUNT],
+        },
+    };
+
+    // Profiling off: baseline tokens, and a delta-based zero-sample
+    // check (the table is process-global; other tests may already have
+    // recorded into it, so absolute counts prove nothing).
+    let before = profile::table().samples();
+    let (off, _, off_stats) =
+        drive(&backend, sched_cfg, &specs, &mut rng).expect("profiling-off run drains");
+    assert_eq!(
+        profile::table().samples(),
+        before,
+        "disabled profiling must record zero samples"
+    );
+    assert!(off_stats.profile.is_none(), "no profile section in a profiling-off run");
+
+    // Profiling on: same backend, same requests — identical tokens,
+    // nonzero attribution.
+    profile::set_enabled(true);
+    let (on, _, on_stats) =
+        drive(&backend, sched_cfg, &specs, &mut rng).expect("profiling-on run drains");
+    profile::set_enabled(false);
+    for (i, (a, b)) in off.iter().zip(&on).enumerate() {
+        assert_eq!(
+            a.generated, b.generated,
+            "request {i}: profiling changed the tokens"
+        );
+    }
+    assert!(
+        profile::table().samples() > before,
+        "enabled profiling must attribute samples"
+    );
+    let report = on_stats.profile.expect("profiling-on stats carry a report");
+    assert!(
+        report.get("samples").as_usize().unwrap_or(0) > 0,
+        "report must carry the attributed samples"
+    );
+}
+
 /// Randomized schedules on ONE shared paged [`TransformerBackend`]: the
 /// torture run (random chunk/spec/preempt) must match a plain unchunked
 /// run of the same requests token-for-token, the block pool must never

@@ -160,6 +160,17 @@ impl BwaGemm {
         self.pack_activations(&xp)
     }
 
+    /// Packed weight-plane bytes one logical GEMM streams: the q and m
+    /// bit planes of every output row, `n_norm / 64` u64 words each
+    /// (the same words [`Self::pack_activations`] packs activations
+    /// against). This is the traffic term of the roofline model —
+    /// telemetry counts it here and the per-op profiler attributes it
+    /// per `(phase, layer, op)` key.
+    pub fn plane_bytes(&self) -> usize {
+        // 2 planes × (n_norm / 64) words × 8 bytes = n_norm / 64 × 16
+        self.lin.out_features * (self.lin.n_norm / 64) * 16
+    }
+
     /// Work counters for one logical GEMM over `acts` — no clocks: the
     /// kernel is bit-parity-pinned, so telemetry reports *work* (calls,
     /// rows, packed weight-plane bytes) and timing stays at the
@@ -171,9 +182,8 @@ impl BwaGemm {
             let k = &crate::obs::global().kernel;
             k.gemm_calls.incr(1);
             k.gemm_rows.incr(acts.tokens as u64);
-            // q + m bit planes, words_per_plane u64 words each, per row
-            let bytes = self.lin.out_features * acts.words_per_plane * 16;
-            k.plane_bytes.incr(bytes as u64);
+            debug_assert_eq!(acts.words_per_plane, self.lin.n_norm / 64);
+            k.plane_bytes.incr(self.plane_bytes() as u64);
         }
     }
 

@@ -90,11 +90,15 @@ fn help_text() -> String {
          \x20           [--kv-blocks N] [--block-size T]         (bwa-cont paged KV pool)\n\
          \x20           [--listen ADDR] [--max-queue N]          (TCP front-end; docs/PROTOCOL.md)\n\
          \x20           [--trace-out FILE] [--stats-every N]     (telemetry; docs/OBSERVABILITY.md)\n\
+         \x20           [--profile] [--metrics-listen ADDR]      (roofline profile + Prometheus)\n\
+         \x20           [--chrome-trace FILE]                    (chrome://tracing export)\n\
          \x20 client    [--addr HOST:PORT] [--requests N] [--prompt-len P] [--gen G]\n\
          \x20           [--shared-prefix P] [--seed S]           (same prompts `serve` drives)\n\
          \x20           [--temperature T] [--top-k K] [--top-p P] [--sample-seed S]\n\
          \x20           [--priority interactive|batch]           (scheduling class on the wire)\n\
-         \x20           [--stop ID,ID,...] [--verify-artifact f.bwa] [--stats] [--shutdown]\n\n\
+         \x20           [--stop ID,ID,...] [--verify-artifact f.bwa] [--stats] [--shutdown]\n\
+         \x20           [--profile]                              (per-op roofline table)\n\
+         \x20           [--fetch-metrics ADDR] [--check-json FILE] (stand-alone probe modes)\n\n\
          methods: {}\n\n\
          quantize once, serve many: `bwa quantize --out m.bwa` compiles the model to a\n\
          checksummed artifact; `bwa serve --artifact m.bwa` / `bwa eval --artifact m.bwa`\n\

@@ -26,6 +26,14 @@
 //! All three agree with each other to the bit (parity tests below);
 //! the coordinator's engine ([`crate::coordinator::ParallelBackend`])
 //! drives them across a worker pool.
+//!
+//! The serving forwards carry per-op profiling scopes
+//! ([`crate::obs::profile::op_scope`]) around every projection, the
+//! shared activation pack, attention, and the norms — inert (no clock
+//! read) unless `profile::set_enabled(true)` opted in. `wo`/`down` run
+//! through `forward_into` on the single-row paths, so their scopes
+//! include the op's own activation pack; the explicitly shared packs
+//! (wq/wk/wv, gate/up) are attributed to `pack`.
 
 pub mod checkpoint;
 pub mod config;
@@ -36,6 +44,7 @@ use crate::kvpool::{BlockPool, PrefixMatch};
 use crate::model::checkpoint::{Checkpoint, CkptError};
 use crate::model::config::ModelConfig;
 use crate::model::kv_cache::{Kv4Store, LayerKvCache};
+use crate::obs::profile::{self, Op};
 use crate::quant::{
     FpLinear, LayerCtx, LinearExec, LinearKind, QuantError, QuantLinear, Quantizer,
 };
@@ -632,53 +641,89 @@ impl Transformer {
         scratch.x.copy_from_slice(self.embed.row(token as usize));
 
         for (l, blk) in self.blocks.iter().enumerate() {
-            rmsnorm(
-                &scratch.x,
-                &blk.attn_norm,
-                self.cfg.rmsnorm_eps,
-                scratch.h.row_mut(0),
-            );
             {
-                let acts = blk.attn.wq.exec.prepare(&scratch.h);
-                blk.attn.wq.exec.forward_prepared(&acts, &mut scratch.q);
-                blk.attn.wk.exec.forward_prepared(&acts, &mut scratch.k);
-                blk.attn.wv.exec.forward_prepared(&acts, &mut scratch.v);
+                let _p = profile::op_scope(Op::Norm, l, 1, 0);
+                rmsnorm(
+                    &scratch.x,
+                    &blk.attn_norm,
+                    self.cfg.rmsnorm_eps,
+                    scratch.h.row_mut(0),
+                );
+            }
+            {
+                let acts = {
+                    let _p = profile::op_scope(Op::Pack, l, 1, 0);
+                    blk.attn.wq.exec.prepare(&scratch.h)
+                };
+                {
+                    let _p = profile::op_scope(Op::Wq, l, 1, blk.attn.wq.exec.plane_bytes());
+                    blk.attn.wq.exec.forward_prepared(&acts, &mut scratch.q);
+                }
+                {
+                    let _p = profile::op_scope(Op::Wk, l, 1, blk.attn.wk.exec.plane_bytes());
+                    blk.attn.wk.exec.forward_prepared(&acts, &mut scratch.k);
+                }
+                {
+                    let _p = profile::op_scope(Op::Wv, l, 1, blk.attn.wv.exec.plane_bytes());
+                    blk.attn.wv.exec.forward_prepared(&acts, &mut scratch.v);
+                }
             }
             apply_rope(&mut scratch.q, nh, self.cfg.rope_theta, pos);
             apply_rope(&mut scratch.k, nh, self.cfg.rope_theta, pos);
-            let cache = &mut sess.caches[l];
-            cache.k.push(scratch.k.row(0));
-            cache.v.push(scratch.v.row(0));
-            // per-head attention over the quantized cache
-            attend_over_cache(
-                cache,
-                scratch.q.row(0),
-                scratch.attn_out.row_mut(0),
-                nh,
-                &mut scratch.scores,
-                &mut scratch.krow,
-                &mut scratch.vrow,
-            );
-            blk.attn.wo.exec.forward_into(&scratch.attn_out, &mut scratch.o);
+            {
+                let _p = profile::op_scope(Op::Attn, l, 1, 0);
+                let cache = &mut sess.caches[l];
+                cache.k.push(scratch.k.row(0));
+                cache.v.push(scratch.v.row(0));
+                // per-head attention over the quantized cache
+                attend_over_cache(
+                    cache,
+                    scratch.q.row(0),
+                    scratch.attn_out.row_mut(0),
+                    nh,
+                    &mut scratch.scores,
+                    &mut scratch.krow,
+                    &mut scratch.vrow,
+                );
+            }
+            {
+                let _p = profile::op_scope(Op::Wo, l, 1, blk.attn.wo.exec.plane_bytes());
+                blk.attn.wo.exec.forward_into(&scratch.attn_out, &mut scratch.o);
+            }
             for i in 0..d {
                 scratch.x[i] += scratch.o.data[i];
             }
             // mlp
-            rmsnorm(
-                &scratch.x,
-                &blk.mlp_norm,
-                self.cfg.rmsnorm_eps,
-                scratch.h.row_mut(0),
-            );
             {
-                let acts = blk.mlp.gate.exec.prepare(&scratch.h);
-                blk.mlp.gate.exec.forward_prepared(&acts, &mut scratch.g);
-                blk.mlp.up.exec.forward_prepared(&acts, &mut scratch.u);
+                let _p = profile::op_scope(Op::Norm, l, 1, 0);
+                rmsnorm(
+                    &scratch.x,
+                    &blk.mlp_norm,
+                    self.cfg.rmsnorm_eps,
+                    scratch.h.row_mut(0),
+                );
+            }
+            {
+                let acts = {
+                    let _p = profile::op_scope(Op::Pack, l, 1, 0);
+                    blk.mlp.gate.exec.prepare(&scratch.h)
+                };
+                {
+                    let _p = profile::op_scope(Op::Gate, l, 1, blk.mlp.gate.exec.plane_bytes());
+                    blk.mlp.gate.exec.forward_prepared(&acts, &mut scratch.g);
+                }
+                {
+                    let _p = profile::op_scope(Op::Up, l, 1, blk.mlp.up.exec.plane_bytes());
+                    blk.mlp.up.exec.forward_prepared(&acts, &mut scratch.u);
+                }
             }
             for i in 0..self.cfg.d_ff {
                 scratch.g.data[i] = silu(scratch.g.data[i]) * scratch.u.data[i];
             }
-            blk.mlp.down.exec.forward_into(&scratch.g, &mut scratch.dwn);
+            {
+                let _p = profile::op_scope(Op::Down, l, 1, blk.mlp.down.exec.plane_bytes());
+                blk.mlp.down.exec.forward_into(&scratch.g, &mut scratch.dwn);
+            }
             for i in 0..d {
                 scratch.x[i] += scratch.dwn.data[i];
             }
@@ -738,41 +783,78 @@ impl Transformer {
         }
         for (l, blk) in self.blocks.iter().enumerate() {
             // attention — one prepared input feeds wq/wk/wv
-            self.norm_all_into(x, &blk.attn_norm, &mut scratch.h);
             {
-                let acts = blk.attn.wq.exec.prepare(&scratch.h);
-                blk.attn.wq.exec.forward_prepared(&acts, &mut scratch.q);
-                blk.attn.wk.exec.forward_prepared(&acts, &mut scratch.k);
-                blk.attn.wv.exec.forward_prepared(&acts, &mut scratch.v);
+                let _p = profile::op_scope(Op::Norm, l, t_len, 0);
+                self.norm_all_into(x, &blk.attn_norm, &mut scratch.h);
+            }
+            {
+                let acts = {
+                    let _p = profile::op_scope(Op::Pack, l, t_len, 0);
+                    blk.attn.wq.exec.prepare(&scratch.h)
+                };
+                {
+                    let _p = profile::op_scope(Op::Wq, l, t_len, blk.attn.wq.exec.plane_bytes());
+                    blk.attn.wq.exec.forward_prepared(&acts, &mut scratch.q);
+                }
+                {
+                    let _p = profile::op_scope(Op::Wk, l, t_len, blk.attn.wk.exec.plane_bytes());
+                    blk.attn.wk.exec.forward_prepared(&acts, &mut scratch.k);
+                }
+                {
+                    let _p = profile::op_scope(Op::Wv, l, t_len, blk.attn.wv.exec.plane_bytes());
+                    blk.attn.wv.exec.forward_prepared(&acts, &mut scratch.v);
+                }
             }
             apply_rope(&mut scratch.q, self.cfg.n_heads, self.cfg.rope_theta, 0);
             apply_rope(&mut scratch.k, self.cfg.n_heads, self.cfg.rope_theta, 0);
-            // Push raw post-RoPE rows (the cache quantizes on push), then
-            // fake-quantize the in-flight copies to the identical values
-            // so prefill attention sees exactly what decode will read.
-            let cache = &mut sess.caches[l];
-            for t in 0..t_len {
-                cache.k.push(scratch.k.row(t));
-                cache.v.push(scratch.v.row(t));
-                Kv4Store::fake_quantize(scratch.k.row_mut(t));
-                Kv4Store::fake_quantize(scratch.v.row_mut(t));
+            let attn_out = {
+                let _p = profile::op_scope(Op::Attn, l, t_len, 0);
+                // Push raw post-RoPE rows (the cache quantizes on push),
+                // then fake-quantize the in-flight copies to the
+                // identical values so prefill attention sees exactly
+                // what decode will read.
+                let cache = &mut sess.caches[l];
+                for t in 0..t_len {
+                    cache.k.push(scratch.k.row(t));
+                    cache.v.push(scratch.v.row(t));
+                    Kv4Store::fake_quantize(scratch.k.row_mut(t));
+                    Kv4Store::fake_quantize(scratch.v.row_mut(t));
+                }
+                causal_attention(&scratch.q, &scratch.k, &scratch.v, self.cfg.n_heads)
+            };
+            {
+                let _p = profile::op_scope(Op::Wo, l, t_len, blk.attn.wo.exec.plane_bytes());
+                blk.attn.wo.exec.forward_into(&attn_out, &mut scratch.o);
             }
-            let attn_out = causal_attention(&scratch.q, &scratch.k, &scratch.v, self.cfg.n_heads);
-            blk.attn.wo.exec.forward_into(&attn_out, &mut scratch.o);
             for i in 0..x.data.len() {
                 x.data[i] += scratch.o.data[i];
             }
             // mlp — gate/up share one prepared input
-            self.norm_all_into(x, &blk.mlp_norm, &mut scratch.h);
             {
-                let acts = blk.mlp.gate.exec.prepare(&scratch.h);
-                blk.mlp.gate.exec.forward_prepared(&acts, &mut scratch.g);
-                blk.mlp.up.exec.forward_prepared(&acts, &mut scratch.u);
+                let _p = profile::op_scope(Op::Norm, l, t_len, 0);
+                self.norm_all_into(x, &blk.mlp_norm, &mut scratch.h);
+            }
+            {
+                let acts = {
+                    let _p = profile::op_scope(Op::Pack, l, t_len, 0);
+                    blk.mlp.gate.exec.prepare(&scratch.h)
+                };
+                {
+                    let _p = profile::op_scope(Op::Gate, l, t_len, blk.mlp.gate.exec.plane_bytes());
+                    blk.mlp.gate.exec.forward_prepared(&acts, &mut scratch.g);
+                }
+                {
+                    let _p = profile::op_scope(Op::Up, l, t_len, blk.mlp.up.exec.plane_bytes());
+                    blk.mlp.up.exec.forward_prepared(&acts, &mut scratch.u);
+                }
             }
             for i in 0..scratch.g.data.len() {
                 scratch.g.data[i] = silu(scratch.g.data[i]) * scratch.u.data[i];
             }
-            blk.mlp.down.exec.forward_into(&scratch.g, &mut scratch.dwn);
+            {
+                let _p = profile::op_scope(Op::Down, l, t_len, blk.mlp.down.exec.plane_bytes());
+                blk.mlp.down.exec.forward_into(&scratch.g, &mut scratch.dwn);
+            }
             for i in 0..x.data.len() {
                 x.data[i] += scratch.dwn.data[i];
             }
@@ -897,51 +979,87 @@ impl Transformer {
         scratch.vfull.resize(total * d, 0.0);
         for (l, blk) in self.blocks.iter().enumerate() {
             // attention — one prepared input feeds wq/wk/wv
-            self.norm_all_into(x, &blk.attn_norm, &mut scratch.h);
             {
-                let acts = blk.attn.wq.exec.prepare(&scratch.h);
-                blk.attn.wq.exec.forward_prepared(&acts, &mut scratch.q);
-                blk.attn.wk.exec.forward_prepared(&acts, &mut scratch.k);
-                blk.attn.wv.exec.forward_prepared(&acts, &mut scratch.v);
+                let _p = profile::op_scope(Op::Norm, l, t_len, 0);
+                self.norm_all_into(x, &blk.attn_norm, &mut scratch.h);
+            }
+            {
+                let acts = {
+                    let _p = profile::op_scope(Op::Pack, l, t_len, 0);
+                    blk.attn.wq.exec.prepare(&scratch.h)
+                };
+                {
+                    let _p = profile::op_scope(Op::Wq, l, t_len, blk.attn.wq.exec.plane_bytes());
+                    blk.attn.wq.exec.forward_prepared(&acts, &mut scratch.q);
+                }
+                {
+                    let _p = profile::op_scope(Op::Wk, l, t_len, blk.attn.wk.exec.plane_bytes());
+                    blk.attn.wk.exec.forward_prepared(&acts, &mut scratch.k);
+                }
+                {
+                    let _p = profile::op_scope(Op::Wv, l, t_len, blk.attn.wv.exec.plane_bytes());
+                    blk.attn.wv.exec.forward_prepared(&acts, &mut scratch.v);
+                }
             }
             apply_rope(&mut scratch.q, self.cfg.n_heads, self.cfg.rope_theta, m);
             apply_rope(&mut scratch.k, self.cfg.n_heads, self.cfg.rope_theta, m);
-            // Push the suffix rows (the cache quantizes on push), then
-            // read the *whole* cache back — prefix rows adopted from the
-            // pool and suffix rows just written — so suffix attention
-            // sees exactly what decode will read.
-            let cache = &mut sess.caches[l];
-            for t in 0..t_len {
-                cache.k.push(scratch.k.row(t));
-                cache.v.push(scratch.v.row(t));
+            let attn_out = {
+                let _p = profile::op_scope(Op::Attn, l, t_len, 0);
+                // Push the suffix rows (the cache quantizes on push),
+                // then read the *whole* cache back — prefix rows adopted
+                // from the pool and suffix rows just written — so suffix
+                // attention sees exactly what decode will read.
+                let cache = &mut sess.caches[l];
+                for t in 0..t_len {
+                    cache.k.push(scratch.k.row(t));
+                    cache.v.push(scratch.v.row(t));
+                }
+                debug_assert_eq!(cache.len(), total);
+                for t in 0..total {
+                    cache.k.get(t, &mut scratch.kfull[t * d..(t + 1) * d]);
+                    cache.v.get(t, &mut scratch.vfull[t * d..(t + 1) * d]);
+                }
+                causal_attention_cached(
+                    &scratch.q,
+                    &scratch.kfull[..total * d],
+                    &scratch.vfull[..total * d],
+                    self.cfg.n_heads,
+                    m,
+                )
+            };
+            {
+                let _p = profile::op_scope(Op::Wo, l, t_len, blk.attn.wo.exec.plane_bytes());
+                blk.attn.wo.exec.forward_into(&attn_out, &mut scratch.o);
             }
-            debug_assert_eq!(cache.len(), total);
-            for t in 0..total {
-                cache.k.get(t, &mut scratch.kfull[t * d..(t + 1) * d]);
-                cache.v.get(t, &mut scratch.vfull[t * d..(t + 1) * d]);
-            }
-            let attn_out = causal_attention_cached(
-                &scratch.q,
-                &scratch.kfull[..total * d],
-                &scratch.vfull[..total * d],
-                self.cfg.n_heads,
-                m,
-            );
-            blk.attn.wo.exec.forward_into(&attn_out, &mut scratch.o);
             for i in 0..x.data.len() {
                 x.data[i] += scratch.o.data[i];
             }
             // mlp — gate/up share one prepared input
-            self.norm_all_into(x, &blk.mlp_norm, &mut scratch.h);
             {
-                let acts = blk.mlp.gate.exec.prepare(&scratch.h);
-                blk.mlp.gate.exec.forward_prepared(&acts, &mut scratch.g);
-                blk.mlp.up.exec.forward_prepared(&acts, &mut scratch.u);
+                let _p = profile::op_scope(Op::Norm, l, t_len, 0);
+                self.norm_all_into(x, &blk.mlp_norm, &mut scratch.h);
+            }
+            {
+                let acts = {
+                    let _p = profile::op_scope(Op::Pack, l, t_len, 0);
+                    blk.mlp.gate.exec.prepare(&scratch.h)
+                };
+                {
+                    let _p = profile::op_scope(Op::Gate, l, t_len, blk.mlp.gate.exec.plane_bytes());
+                    blk.mlp.gate.exec.forward_prepared(&acts, &mut scratch.g);
+                }
+                {
+                    let _p = profile::op_scope(Op::Up, l, t_len, blk.mlp.up.exec.plane_bytes());
+                    blk.mlp.up.exec.forward_prepared(&acts, &mut scratch.u);
+                }
             }
             for i in 0..scratch.g.data.len() {
                 scratch.g.data[i] = silu(scratch.g.data[i]) * scratch.u.data[i];
             }
-            blk.mlp.down.exec.forward_into(&scratch.g, &mut scratch.dwn);
+            {
+                let _p = profile::op_scope(Op::Down, l, t_len, blk.mlp.down.exec.plane_bytes());
+                blk.mlp.down.exec.forward_into(&scratch.g, &mut scratch.dwn);
+            }
             for i in 0..x.data.len() {
                 x.data[i] += scratch.dwn.data[i];
             }
@@ -1016,53 +1134,85 @@ impl Transformer {
         let mut krow = vec![0.0f32; d];
         let mut vrow = vec![0.0f32; d];
         for (l, blk) in self.blocks.iter().enumerate() {
-            for r in 0..b {
-                rmsnorm(x.row(r), &blk.attn_norm, self.cfg.rmsnorm_eps, h.row_mut(r));
+            {
+                let _p = profile::op_scope(Op::Norm, l, b, 0);
+                for r in 0..b {
+                    rmsnorm(x.row(r), &blk.attn_norm, self.cfg.rmsnorm_eps, h.row_mut(r));
+                }
             }
             {
-                let acts = blk.attn.wq.exec.prepare(&h);
-                blk.attn.wq.exec.forward_prepared_mt(&acts, &mut q, threads);
-                blk.attn.wk.exec.forward_prepared_mt(&acts, &mut k, threads);
-                blk.attn.wv.exec.forward_prepared_mt(&acts, &mut v, threads);
+                let acts = {
+                    let _p = profile::op_scope(Op::Pack, l, b, 0);
+                    blk.attn.wq.exec.prepare(&h)
+                };
+                {
+                    let _p = profile::op_scope(Op::Wq, l, b, blk.attn.wq.exec.plane_bytes());
+                    blk.attn.wq.exec.forward_prepared_mt(&acts, &mut q, threads);
+                }
+                {
+                    let _p = profile::op_scope(Op::Wk, l, b, blk.attn.wk.exec.plane_bytes());
+                    blk.attn.wk.exec.forward_prepared_mt(&acts, &mut k, threads);
+                }
+                {
+                    let _p = profile::op_scope(Op::Wv, l, b, blk.attn.wv.exec.plane_bytes());
+                    blk.attn.wv.exec.forward_prepared_mt(&acts, &mut v, threads);
+                }
             }
             for r in 0..b {
                 let pos = sessions[r].pos;
                 apply_rope_row(q.row_mut(r), nh, self.cfg.rope_theta, pos);
                 apply_rope_row(k.row_mut(r), nh, self.cfg.rope_theta, pos);
             }
-            for r in 0..b {
-                let cache = &mut sessions[r].caches[l];
-                cache.k.push(k.row(r));
-                cache.v.push(v.row(r));
-                attend_over_cache(
-                    cache,
-                    q.row(r),
-                    attn_out.row_mut(r),
-                    nh,
-                    &mut scores,
-                    &mut krow,
-                    &mut vrow,
-                );
+            {
+                let _p = profile::op_scope(Op::Attn, l, b, 0);
+                for r in 0..b {
+                    let cache = &mut sessions[r].caches[l];
+                    cache.k.push(k.row(r));
+                    cache.v.push(v.row(r));
+                    attend_over_cache(
+                        cache,
+                        q.row(r),
+                        attn_out.row_mut(r),
+                        nh,
+                        &mut scores,
+                        &mut krow,
+                        &mut vrow,
+                    );
+                }
             }
             {
+                let _p = profile::op_scope(Op::Wo, l, b, blk.attn.wo.exec.plane_bytes());
                 let acts = blk.attn.wo.exec.prepare(&attn_out);
                 blk.attn.wo.exec.forward_prepared_mt(&acts, &mut o, threads);
             }
             for i in 0..x.data.len() {
                 x.data[i] += o.data[i];
             }
-            for r in 0..b {
-                rmsnorm(x.row(r), &blk.mlp_norm, self.cfg.rmsnorm_eps, h.row_mut(r));
+            {
+                let _p = profile::op_scope(Op::Norm, l, b, 0);
+                for r in 0..b {
+                    rmsnorm(x.row(r), &blk.mlp_norm, self.cfg.rmsnorm_eps, h.row_mut(r));
+                }
             }
             {
-                let acts = blk.mlp.gate.exec.prepare(&h);
-                blk.mlp.gate.exec.forward_prepared_mt(&acts, &mut g, threads);
-                blk.mlp.up.exec.forward_prepared_mt(&acts, &mut u, threads);
+                let acts = {
+                    let _p = profile::op_scope(Op::Pack, l, b, 0);
+                    blk.mlp.gate.exec.prepare(&h)
+                };
+                {
+                    let _p = profile::op_scope(Op::Gate, l, b, blk.mlp.gate.exec.plane_bytes());
+                    blk.mlp.gate.exec.forward_prepared_mt(&acts, &mut g, threads);
+                }
+                {
+                    let _p = profile::op_scope(Op::Up, l, b, blk.mlp.up.exec.plane_bytes());
+                    blk.mlp.up.exec.forward_prepared_mt(&acts, &mut u, threads);
+                }
             }
             for i in 0..g.data.len() {
                 g.data[i] = silu(g.data[i]) * u.data[i];
             }
             {
+                let _p = profile::op_scope(Op::Down, l, b, blk.mlp.down.exec.plane_bytes());
                 let acts = blk.mlp.down.exec.prepare(&g);
                 blk.mlp.down.exec.forward_prepared_mt(&acts, &mut dwn, threads);
             }

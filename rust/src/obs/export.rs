@@ -1,0 +1,499 @@
+//! Standard-format exporters over the telemetry layer: Prometheus
+//! text exposition (with a tiny std-only HTTP endpoint behind
+//! `serve --metrics-listen`) and a chrome://tracing Trace Event Format
+//! converter over flight-recorder records plus profiler aggregates.
+//!
+//! Both exporters are read-only views: they translate what the
+//! [`Registry`] and [`profile`](crate::obs::profile) table already
+//! hold, so enabling them adds no instrumentation cost to the serving
+//! hot path — scraping a snapshot races relaxed writers exactly like
+//! the `stats` wire command does.
+//!
+//! ## Prometheus naming
+//!
+//! Registry names `layer.metric` become `bwa_layer_metric`; profiler
+//! keys become labeled series
+//! `bwa_profile_*{phase="...",layer="N",op="..."}`. [`LogHistogram`]s
+//! export as native Prometheus histograms: cumulative `_bucket{le}`
+//! series over the power-of-two bounds, plus exact `_sum` and `_count`.
+//! The full mapping table lives in `docs/OBSERVABILITY.md`.
+
+use crate::obs::profile::{self, Op, Phase, ProfileTable, MAX_LAYERS};
+use crate::obs::registry::{LogHistogram, Registry, BUCKETS};
+use crate::util::json::Json;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
+
+// ---- Prometheus text exposition -----------------------------------------
+
+fn prom_name(wire: &str) -> String {
+    format!("bwa_{}", wire.replace('.', "_"))
+}
+
+fn push_histogram(out: &mut String, name: &str, labels: &str, h: &LogHistogram) {
+    let counts = h.bucket_counts();
+    let mut cum = 0u64;
+    for (i, c) in counts.iter().enumerate() {
+        cum += c;
+        let le = if i == BUCKETS - 1 {
+            "+Inf".to_string()
+        } else {
+            LogHistogram::bucket_le(i).to_string()
+        };
+        let sep = if labels.is_empty() { "" } else { "," };
+        out.push_str(&format!("{name}_bucket{{{labels}{sep}le=\"{le}\"}} {cum}\n"));
+    }
+    let braces = if labels.is_empty() {
+        String::new()
+    } else {
+        format!("{{{labels}}}")
+    };
+    out.push_str(&format!("{name}_sum{braces} {}\n", h.sum_us()));
+    out.push_str(&format!("{name}_count{braces} {}\n", h.count()));
+}
+
+/// Render one [`Registry`] in Prometheus text exposition format
+/// (version 0.0.4): every counter, gauge, and histogram from the same
+/// name catalogs [`Registry::snapshot`] uses, each preceded by a
+/// `# TYPE` annotation.
+pub fn prometheus_registry_text(reg: &Registry) -> String {
+    let mut out = String::new();
+    for (wire, c) in reg.counters() {
+        let name = prom_name(wire);
+        out.push_str(&format!("# TYPE {name} counter\n{name} {}\n", c.get()));
+    }
+    for (wire, g) in reg.gauges() {
+        let name = prom_name(wire);
+        out.push_str(&format!("# TYPE {name} gauge\n{name} {}\n", g.get()));
+    }
+    for (wire, h) in reg.histograms() {
+        let name = prom_name(wire);
+        out.push_str(&format!("# TYPE {name} histogram\n"));
+        push_histogram(&mut out, &name, "", h);
+    }
+    out
+}
+
+/// Render the per-op attribution table as labeled Prometheus series:
+/// a `bwa_profile_time_us` histogram family plus `bwa_profile_rows` /
+/// `bwa_profile_plane_bytes` counters, one
+/// `{phase,layer,op}`-labeled series per key with samples, and a
+/// `bwa_mem_peak_gbps` gauge when calibration ran. Empty keys are
+/// skipped, so an idle profiler exports nothing.
+pub fn prometheus_profile_text(t: &ProfileTable, peak: Option<f64>) -> String {
+    let mut keys: Vec<(Phase, Op, usize)> = Vec::new();
+    for phase in Phase::ALL {
+        for op in Op::ALL {
+            for layer in 0..MAX_LAYERS {
+                if t.cell(phase, op, layer).time_us.count() > 0 {
+                    keys.push((phase, op, layer));
+                }
+            }
+        }
+    }
+    let mut out = String::new();
+    if let Some(p) = peak {
+        out.push_str(&format!(
+            "# TYPE bwa_mem_peak_gbps gauge\nbwa_mem_peak_gbps {p}\n"
+        ));
+    }
+    if keys.is_empty() {
+        return out;
+    }
+    let labels = |&(phase, op, layer): &(Phase, Op, usize)| {
+        format!(
+            "phase=\"{}\",layer=\"{}\",op=\"{}\"",
+            phase.label(),
+            layer,
+            op.label()
+        )
+    };
+    out.push_str("# TYPE bwa_profile_time_us histogram\n");
+    for key in &keys {
+        let cell = t.cell(key.0, key.1, key.2);
+        push_histogram(&mut out, "bwa_profile_time_us", &labels(key), cell);
+    }
+    out.push_str("# TYPE bwa_profile_rows counter\n");
+    for key in &keys {
+        let cell = t.cell(key.0, key.1, key.2);
+        out.push_str(&format!(
+            "bwa_profile_rows{{{}}} {}\n",
+            labels(key),
+            cell.rows.get()
+        ));
+    }
+    out.push_str("# TYPE bwa_profile_plane_bytes counter\n");
+    for key in &keys {
+        let cell = t.cell(key.0, key.1, key.2);
+        out.push_str(&format!(
+            "bwa_profile_plane_bytes{{{}}} {}\n",
+            labels(key),
+            cell.plane_bytes.get()
+        ));
+    }
+    out
+}
+
+/// The full `/metrics` page: the registry plus the process-wide
+/// profiler table and calibration.
+pub fn prometheus_text(reg: &Registry) -> String {
+    let mut out = prometheus_registry_text(reg);
+    out.push_str(&prometheus_profile_text(
+        profile::table(),
+        profile::peak_gbps(),
+    ));
+    out
+}
+
+// ---- /metrics HTTP endpoint ----------------------------------------------
+
+fn handle_metrics_conn(mut stream: TcpStream, registry: &Registry) {
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(2)));
+    // Read the request head (we only need the request line); stop at the
+    // blank line or a sanity cap — this is a scrape endpoint, not a web
+    // server.
+    let mut head = Vec::new();
+    let mut buf = [0u8; 1024];
+    loop {
+        match stream.read(&mut buf) {
+            Ok(0) => break,
+            Ok(n) => {
+                head.extend_from_slice(&buf[..n]);
+                if head.windows(4).any(|w| w == b"\r\n\r\n") || head.len() > 8192 {
+                    break;
+                }
+            }
+            Err(_) => return,
+        }
+    }
+    let text = String::from_utf8_lossy(&head);
+    let mut parts = text.lines().next().unwrap_or("").split_whitespace();
+    let method = parts.next().unwrap_or("");
+    let path = parts.next().unwrap_or("");
+    let (status, body) = if method == "GET" && (path == "/metrics" || path == "/") {
+        ("200 OK", prometheus_text(registry))
+    } else {
+        ("404 Not Found", "only GET /metrics lives here\n".to_string())
+    };
+    let response = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: text/plain; version=0.0.4; charset=utf-8\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    let _ = stream.write_all(response.as_bytes());
+    let _ = stream.flush();
+}
+
+/// Start the Prometheus scrape endpoint: bind `addr` (`host:port`,
+/// port 0 for OS-assigned) and serve `GET /metrics` from a detached
+/// thread for the life of the process. Returns the bound address. The
+/// thread holds only the registry `Arc`; each scrape renders a fresh
+/// page, so there is no state to drain at shutdown.
+pub fn serve_metrics(addr: &str, registry: Arc<Registry>) -> Result<SocketAddr, String> {
+    let listener = TcpListener::bind(addr).map_err(|e| format!("metrics bind {addr}: {e}"))?;
+    let local = listener
+        .local_addr()
+        .map_err(|e| format!("metrics local_addr: {e}"))?;
+    std::thread::Builder::new()
+        .name("bwa-metrics".into())
+        .spawn(move || {
+            for stream in listener.incoming().flatten() {
+                handle_metrics_conn(stream, &registry);
+            }
+        })
+        .map_err(|e| format!("metrics thread: {e}"))?;
+    Ok(local)
+}
+
+/// Minimal HTTP/1.1 GET over a raw `TcpStream` — the client side of the
+/// scrape endpoint, used by `bwa client --fetch-metrics` so
+/// `scripts/check.sh` needs no curl. Returns the response body after
+/// checking for a 200 status line.
+pub fn http_get(addr: &str, path: &str) -> Result<String, String> {
+    let mut stream = TcpStream::connect(addr).map_err(|e| format!("connect {addr}: {e}"))?;
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(5)));
+    stream
+        .write_all(
+            format!("GET {path} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\r\n").as_bytes(),
+        )
+        .map_err(|e| format!("send GET {path}: {e}"))?;
+    let mut response = String::new();
+    stream
+        .read_to_string(&mut response)
+        .map_err(|e| format!("read response: {e}"))?;
+    let (head, body) = response
+        .split_once("\r\n\r\n")
+        .ok_or_else(|| "malformed HTTP response (no header terminator)".to_string())?;
+    let status = head.lines().next().unwrap_or("");
+    if !status.contains(" 200 ") {
+        return Err(format!("GET {path}: {status}"));
+    }
+    Ok(body.to_string())
+}
+
+// ---- chrome://tracing export ---------------------------------------------
+
+fn trace_event(name: &str, ph: &str, tid: u64, ts: f64, extra: Vec<(&str, Json)>) -> Json {
+    let mut fields = vec![
+        ("name", Json::str(name)),
+        ("ph", Json::str(ph)),
+        ("pid", Json::num(1.0)),
+        ("tid", Json::num(tid as f64)),
+        ("ts", Json::num(ts)),
+    ];
+    fields.extend(extra);
+    Json::obj(fields)
+}
+
+fn span(name: &str, tid: u64, start_us: f64, end_us: f64) -> Json {
+    trace_event(
+        name,
+        "X",
+        tid,
+        start_us,
+        vec![("dur", Json::num((end_us - start_us).max(0.0)))],
+    )
+}
+
+/// An `"M"` metadata event naming a process (`tid` ignored by viewers)
+/// or thread lane.
+fn meta_name(event: &str, tid: u64, name: &str) -> Json {
+    trace_event(
+        event,
+        "M",
+        tid,
+        0.0,
+        vec![("args", Json::obj(vec![("name", Json::str(name))]))],
+    )
+}
+
+/// Convert flight-recorder records plus a profiler report
+/// ([`profile::report_json`]) into one chrome://tracing /
+/// Perfetto-loadable JSON object (Trace Event Format,
+/// `{"traceEvents": [...]}`; `ts`/`dur` in microseconds).
+///
+/// Each request becomes its own named thread lane (`tid = id + 1`) with
+/// `X` spans for its queue-wait, prefill, and decode phases and an `i`
+/// instant per decode step (token count in `args`). Recorder offsets
+/// are relative to each request's own `queued` instant, so **every lane
+/// starts at ts 0** — lanes show per-request shape, not cross-request
+/// arrival order. `null` phases (e.g. no prefill mark) skip their span.
+/// Profiler totals land on lane 0 as back-to-back spans named
+/// `phase/op/L<layer>`, widths proportional to total attributed time.
+pub fn chrome_trace(records: &[Json], profile_report: &Json) -> Json {
+    let mut events: Vec<Json> = vec![meta_name("process_name", 0, "bwa serve")];
+    for rec in records {
+        let id = rec.get("id").as_f64().unwrap_or(0.0) as u64;
+        let tid = id + 1;
+        events.push(meta_name("thread_name", tid, &format!("request {id}")));
+        let reserved = rec.get("reserved_us").as_f64();
+        let prefill_done = rec.get("prefill_done_us").as_f64();
+        let first_token = rec.get("first_token_us").as_f64();
+        let retired = rec.get("retired_us").as_f64();
+        if let Some(r) = reserved {
+            events.push(span("queued", tid, 0.0, r));
+        }
+        if let (Some(a), Some(b)) = (reserved, prefill_done) {
+            events.push(span("prefill", tid, a, b));
+        }
+        if let (Some(a), Some(b)) = (prefill_done.or(first_token), retired) {
+            events.push(span("decode", tid, a, b));
+        }
+        if let Some(steps) = rec.get("steps").as_arr() {
+            for step in steps {
+                if let Some(t) = step.get("t_us").as_f64() {
+                    events.push(trace_event(
+                        "step",
+                        "i",
+                        tid,
+                        t,
+                        vec![
+                            ("s", Json::str("t")),
+                            (
+                                "args",
+                                Json::obj(vec![("tokens", step.get("tokens").clone())]),
+                            ),
+                        ],
+                    ));
+                }
+            }
+        }
+    }
+    events.push(meta_name("thread_name", 0, "profile (aggregate)"));
+    let mut cursor = 0.0f64;
+    for key in profile_report.get("keys").as_arr().unwrap_or_default() {
+        let total_us = key.get("total_us").as_f64().unwrap_or(0.0);
+        let name = format!(
+            "{}/{}/L{}",
+            key.get("phase").as_str().unwrap_or("?"),
+            key.get("op").as_str().unwrap_or("?"),
+            key.get("layer").as_f64().unwrap_or(0.0) as u64
+        );
+        events.push(trace_event(
+            &name,
+            "X",
+            0,
+            cursor,
+            vec![
+                ("dur", Json::num(total_us)),
+                (
+                    "args",
+                    Json::obj(vec![
+                        ("count", key.get("count").clone()),
+                        ("rows", key.get("rows").clone()),
+                        ("plane_bytes", key.get("plane_bytes").clone()),
+                        ("gbps", key.get("gbps").clone()),
+                    ]),
+                ),
+            ],
+        ));
+        cursor += total_us;
+    }
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::str("ms")),
+    ])
+}
+
+/// [`chrome_trace`] over a flight-recorder file on disk
+/// (`serve --chrome-trace PATH` wiring).
+pub fn chrome_trace_from_file(path: &Path, profile_report: &Json) -> Result<Json, String> {
+    let records = crate::obs::trace::read_records(path)?;
+    Ok(chrome_trace(&records, profile_report))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::profile::report_json_from;
+
+    #[test]
+    fn registry_text_has_typed_counters_gauges_and_histograms() {
+        let reg = Registry::new();
+        reg.scheduler.steps.incr(41);
+        reg.server.in_flight.set(2);
+        reg.scheduler.ttft_us.record_us(700);
+        reg.scheduler.ttft_us.record_us(0);
+        let text = prometheus_registry_text(&reg);
+        assert!(text.contains("# TYPE bwa_scheduler_steps counter\nbwa_scheduler_steps 41\n"));
+        assert!(text.contains("# TYPE bwa_server_in_flight gauge\nbwa_server_in_flight 2\n"));
+        assert!(text.contains("# TYPE bwa_scheduler_ttft_us histogram\n"));
+        // cumulative buckets: the zero sample is visible at le="0", the
+        // 700us sample joins at le="1023", and +Inf equals the count.
+        assert!(text.contains("bwa_scheduler_ttft_us_bucket{le=\"0\"} 1\n"));
+        assert!(text.contains("bwa_scheduler_ttft_us_bucket{le=\"1023\"} 2\n"));
+        assert!(text.contains("bwa_scheduler_ttft_us_bucket{le=\"+Inf\"} 2\n"));
+        assert!(text.contains("bwa_scheduler_ttft_us_sum 700\n"));
+        assert!(text.contains("bwa_scheduler_ttft_us_count 2\n"));
+    }
+
+    #[test]
+    fn profile_text_labels_every_live_key_and_skips_empty_ones() {
+        let t = ProfileTable::new();
+        t.record(
+            Phase::Decode,
+            Op::Wq,
+            3,
+            std::time::Duration::from_micros(50),
+            2,
+            4096,
+        );
+        let text = prometheus_profile_text(&t, Some(21.5));
+        assert!(text.contains("bwa_mem_peak_gbps 21.5\n"));
+        let labels = "phase=\"decode\",layer=\"3\",op=\"wq\"";
+        assert!(text.contains(&format!("bwa_profile_time_us_count{{{labels}}} 1\n")));
+        assert!(text.contains(&format!("bwa_profile_time_us_sum{{{labels}}} 50\n")));
+        assert!(text.contains(&format!("bwa_profile_time_us_bucket{{{labels},le=\"+Inf\"}} 1\n")));
+        assert!(text.contains(&format!("bwa_profile_rows{{{labels}}} 2\n")));
+        assert!(text.contains(&format!("bwa_profile_plane_bytes{{{labels}}} 4096\n")));
+        // exactly one labeled series per family — no empty keys leak
+        assert_eq!(text.matches("bwa_profile_rows{").count(), 1);
+        let empty = prometheus_profile_text(&ProfileTable::new(), None);
+        assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn metrics_endpoint_serves_scrapes_and_answers_404_elsewhere() {
+        let reg = Arc::new(Registry::new());
+        reg.scheduler.steps.incr(9);
+        let addr = serve_metrics("127.0.0.1:0", Arc::clone(&reg)).expect("bind");
+        let body = http_get(&addr.to_string(), "/metrics").expect("scrape");
+        assert!(body.contains("bwa_scheduler_steps 9"));
+        // a second scrape sees fresh values — the page is rendered per
+        // request, not cached
+        reg.scheduler.steps.incr(1);
+        let body = http_get(&addr.to_string(), "/metrics").expect("second scrape");
+        assert!(body.contains("bwa_scheduler_steps 10"));
+        let err = http_get(&addr.to_string(), "/nope").expect_err("404");
+        assert!(err.contains("404"), "{err}");
+    }
+
+    #[test]
+    fn chrome_trace_converts_records_and_profile_lanes() {
+        let record = Json::parse(
+            r#"{"v":1,"id":4,"reserved_us":10,"prefill_done_us":60,
+                "first_token_us":65,"decode_steps":2,
+                "steps":[{"t_us":65,"tokens":1},{"t_us":90,"tokens":3}],
+                "retired_us":95,"gen_tokens":4}"#,
+        )
+        .expect("record");
+        let t = ProfileTable::new();
+        t.record(
+            Phase::Decode,
+            Op::Down,
+            1,
+            std::time::Duration::from_micros(30),
+            4,
+            256,
+        );
+        let report = report_json_from(&t, None);
+        let trace = chrome_trace(&[record], &report);
+        let events = trace.get("traceEvents").as_arr().expect("events");
+        let of = |name: &str, ph: &str| {
+            events
+                .iter()
+                .find(|e| e.get("name").as_str() == Some(name) && e.get("ph").as_str() == Some(ph))
+        };
+        let prefill = of("prefill", "X").expect("prefill span");
+        assert_eq!(prefill.get("ts").as_f64(), Some(10.0));
+        assert_eq!(prefill.get("dur").as_f64(), Some(50.0));
+        assert_eq!(prefill.get("tid").as_usize(), Some(5)); // id 4 + 1
+        let decode = of("decode", "X").expect("decode span");
+        assert_eq!(decode.get("dur").as_f64(), Some(35.0));
+        assert_eq!(
+            events
+                .iter()
+                .filter(|e| e.get("ph").as_str() == Some("i"))
+                .count(),
+            2
+        );
+        let agg = of("decode/down/L1", "X").expect("profile lane span");
+        assert_eq!(agg.get("tid").as_usize(), Some(0));
+        assert_eq!(agg.get("dur").as_f64(), Some(30.0));
+        // the whole thing round-trips through text as one JSON document
+        let text = trace.to_string();
+        Json::parse(&text).expect("chrome trace is valid json");
+    }
+
+    #[test]
+    fn chrome_trace_skips_null_phases() {
+        let record = Json::parse(
+            r#"{"v":1,"id":0,"reserved_us":5,"prefill_done_us":null,
+                "first_token_us":null,"decode_steps":0,"steps":[],
+                "retired_us":9,"gen_tokens":0}"#,
+        )
+        .expect("record");
+        let empty_report = report_json_from(&ProfileTable::new(), None);
+        let trace = chrome_trace(&[record], &empty_report);
+        let events = trace.get("traceEvents").as_arr().expect("events");
+        assert!(events
+            .iter()
+            .all(|e| e.get("name").as_str() != Some("prefill")));
+        assert!(events
+            .iter()
+            .any(|e| e.get("name").as_str() == Some("queued")));
+    }
+}

@@ -24,8 +24,13 @@
 //! No instrument ever reads a clock inside pinned compute: kernels
 //! report *work* (calls, rows, bytes), and all timing happens at
 //! scheduler stage boundaries with instants the scheduler already
-//! takes.
+//! takes. The per-op [`profile`] layer extends this one level deeper —
+//! scoped timers at op-*call* boundaries in the model layer, behind its
+//! own gate — and [`export`] translates everything into Prometheus
+//! text and chrome://tracing files.
 
+pub mod export;
+pub mod profile;
 pub mod registry;
 pub mod trace;
 

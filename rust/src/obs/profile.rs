@@ -1,0 +1,607 @@
+//! Per-op performance attribution: scoped timers keyed by
+//! `(phase, layer, op)`, a calibrated roofline, and the report the
+//! `profile` wire frame / `bwa client --profile` table render.
+//!
+//! ## What gets attributed
+//!
+//! The model layer wraps every per-layer operation — the seven
+//! projections, attention, activation packing, and RMSNorm — in an
+//! [`op_scope`] guard. Each scope records wall time (into a
+//! [`LogHistogram`]), activation rows, and packed weight-plane bytes
+//! against an attribution key: the ambient [`Phase`] (set by the
+//! scheduler at stage boundaries), the transformer layer index, and the
+//! [`Op`]. The table is a process-wide static, like
+//! [`crate::obs::global`], because the model layer has no registry
+//! handle — and unlike the registry's event counters it holds *timers*,
+//! so it sits behind its own gate:
+//!
+//! - [`enabled`] is a relaxed atomic load, **separate from**
+//!   [`crate::obs::enabled`]. Event counting (cheap, no clocks) and
+//!   profiling (clock reads per op call) are independently switchable.
+//! - When disabled, [`op_scope`] returns an inert guard **without
+//!   reading the clock** — the whole cost is one relaxed load and a
+//!   branch, which is what the `obs_overhead` bench pins.
+//! - Timing happens at op-call boundaries in the model layer, never
+//!   inside the popcount kernel itself: the bit-parity-pinned compute
+//!   in `kernels/bwa_gemm.rs` stays clock-free, per the rule in
+//!   `docs/OBSERVABILITY.md`.
+//!
+//! ## Roofline
+//!
+//! [`set_peak_gbps`] stores the result of the one-shot STREAM-triad
+//! probe ([`crate::util::bench::stream_triad_gbps`]). [`report_json`]
+//! then derives, per key, achieved bandwidth (plane bytes / total
+//! time) and popcount throughput, so every entry can be read as a
+//! fraction of the machine's measured memory ceiling — the roofline
+//! framing ROADMAP item 4 asks for. Formulas are documented on
+//! [`report_json_from`] and in `docs/OBSERVABILITY.md`.
+
+use crate::obs::registry::{Counter, LogHistogram};
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
+use std::sync::OnceLock;
+use std::time::{Duration, Instant};
+
+/// Schema version of [`report_json`] — bumped when keys or derived
+/// fields change meaning.
+pub const PROFILE_VERSION: usize = 1;
+
+/// Which scheduler stage the current backend call serves. Stored as a
+/// process-wide ambient value (a relaxed `AtomicU8`) rather than passed
+/// through the model API: the scheduler runs its stages serially and
+/// sets the phase immediately before each backend batch call, and
+/// model-layer scopes read it at drop time. Global (not thread-local)
+/// because prefill may fan out onto pool worker threads.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    Prefill = 0,
+    Decode = 1,
+    Verify = 2,
+}
+
+impl Phase {
+    pub const ALL: [Phase; PHASES] = [Phase::Prefill, Phase::Decode, Phase::Verify];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Phase::Prefill => "prefill",
+            Phase::Decode => "decode",
+            Phase::Verify => "verify",
+        }
+    }
+
+    fn from_u8(v: u8) -> Phase {
+        match v {
+            0 => Phase::Prefill,
+            2 => Phase::Verify,
+            _ => Phase::Decode,
+        }
+    }
+}
+
+/// Number of [`Phase`] variants.
+pub const PHASES: usize = 3;
+
+/// The attributed operation within a transformer layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Op {
+    Wq = 0,
+    Wk = 1,
+    Wv = 2,
+    Wo = 3,
+    Gate = 4,
+    Up = 5,
+    Down = 6,
+    /// Attention score/value math over the KV cache (not a GEMM —
+    /// `plane_bytes` is 0 for this key).
+    Attn = 7,
+    /// Activation quantize + bit-pack (`LinearExec::prepare`), counted
+    /// where the model calls it explicitly; projections that reuse a
+    /// shared pack attribute nothing extra here.
+    Pack = 8,
+    /// RMSNorm, both attention and FFN instances.
+    Norm = 9,
+}
+
+impl Op {
+    pub const ALL: [Op; OPS] = [
+        Op::Wq,
+        Op::Wk,
+        Op::Wv,
+        Op::Wo,
+        Op::Gate,
+        Op::Up,
+        Op::Down,
+        Op::Attn,
+        Op::Pack,
+        Op::Norm,
+    ];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Op::Wq => "wq",
+            Op::Wk => "wk",
+            Op::Wv => "wv",
+            Op::Wo => "wo",
+            Op::Gate => "gate",
+            Op::Up => "up",
+            Op::Down => "down",
+            Op::Attn => "attn",
+            Op::Pack => "pack",
+            Op::Norm => "norm",
+        }
+    }
+}
+
+/// Number of [`Op`] variants.
+pub const OPS: usize = 10;
+
+/// Layer slots per (phase, op) pair; layer indices at or above this
+/// clamp into the last slot (labelled `MAX_LAYERS - 1`), so a deeper
+/// model aggregates its tail layers rather than losing them.
+pub const MAX_LAYERS: usize = 32;
+
+/// Accumulators for one `(phase, layer, op)` key.
+#[derive(Default)]
+pub struct OpCell {
+    /// Wall time per call, log-bucketed in microseconds.
+    pub time_us: LogHistogram,
+    /// Activation rows (tokens) pushed through the op.
+    pub rows: Counter,
+    /// Packed weight-plane bytes the op streams per call, summed
+    /// (0 for non-GEMM ops).
+    pub plane_bytes: Counter,
+}
+
+/// The full attribution table: `PHASES × OPS × MAX_LAYERS` cells of
+/// lock-free accumulators. All methods are safe under concurrent
+/// recording, like the registry's instruments.
+pub struct ProfileTable {
+    cells: Vec<OpCell>,
+}
+
+impl Default for ProfileTable {
+    fn default() -> Self {
+        ProfileTable {
+            cells: (0..PHASES * OPS * MAX_LAYERS)
+                .map(|_| OpCell::default())
+                .collect(),
+        }
+    }
+}
+
+impl ProfileTable {
+    pub fn new() -> ProfileTable {
+        ProfileTable::default()
+    }
+
+    fn idx(phase: Phase, op: Op, layer: usize) -> usize {
+        let l = layer.min(MAX_LAYERS - 1);
+        (phase as usize * OPS + op as usize) * MAX_LAYERS + l
+    }
+
+    pub fn cell(&self, phase: Phase, op: Op, layer: usize) -> &OpCell {
+        &self.cells[Self::idx(phase, op, layer)]
+    }
+
+    /// Record one op call. Public so exporters and tests can drive a
+    /// local table without toggling the process-wide gate.
+    pub fn record(
+        &self,
+        phase: Phase,
+        op: Op,
+        layer: usize,
+        elapsed: Duration,
+        rows: usize,
+        plane_bytes: usize,
+    ) {
+        let cell = self.cell(phase, op, layer);
+        cell.time_us.record(elapsed);
+        cell.rows.incr(rows as u64);
+        cell.plane_bytes.incr(plane_bytes as u64);
+    }
+
+    /// Total recorded op calls across every key — what the torture test
+    /// asserts stays flat while profiling is disabled.
+    pub fn samples(&self) -> u64 {
+        self.cells.iter().map(|c| c.time_us.count()).sum()
+    }
+}
+
+static PROFILE_ENABLED: AtomicBool = AtomicBool::new(false);
+static PHASE: AtomicU8 = AtomicU8::new(Phase::Decode as u8);
+/// `f64::to_bits` of the calibrated peak; 0 (the bits of +0.0) = unset.
+static PEAK_GBPS_BITS: AtomicU64 = AtomicU64::new(0);
+static TABLE: OnceLock<ProfileTable> = OnceLock::new();
+
+/// Is per-op profiling on? One relaxed load; [`op_scope`] call sites
+/// pay only this (plus a branch) when it answers `false`.
+#[inline]
+pub fn enabled() -> bool {
+    PROFILE_ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn per-op profiling on or off (process-wide). Independent of
+/// [`crate::obs::set_enabled`]: event counting and timer scopes are
+/// separate opt-ins.
+pub fn set_enabled(on: bool) {
+    PROFILE_ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Set the ambient phase attributed to subsequent op scopes. The
+/// scheduler calls this right before each backend batch call; the store
+/// is unconditional (cheaper than a branch on [`enabled`]).
+#[inline]
+pub fn set_phase(p: Phase) {
+    PHASE.store(p as u8, Ordering::Relaxed);
+}
+
+/// The ambient phase op scopes attribute to.
+#[inline]
+pub fn phase() -> Phase {
+    Phase::from_u8(PHASE.load(Ordering::Relaxed))
+}
+
+/// Store the STREAM-triad calibration result (GB/s) for roofline
+/// utilization in the report.
+pub fn set_peak_gbps(gbps: f64) {
+    PEAK_GBPS_BITS.store(gbps.to_bits(), Ordering::Relaxed);
+}
+
+/// The calibrated memory-bandwidth peak, if a probe has run.
+pub fn peak_gbps() -> Option<f64> {
+    let bits = PEAK_GBPS_BITS.load(Ordering::Relaxed);
+    if bits == 0 {
+        None
+    } else {
+        Some(f64::from_bits(bits))
+    }
+}
+
+/// The process-wide attribution table (created on first use).
+pub fn table() -> &'static ProfileTable {
+    TABLE.get_or_init(ProfileTable::new)
+}
+
+/// Scoped-timer guard: records `(phase at drop, op, layer)` time, rows,
+/// and plane bytes into the global table when dropped. Inert — no clock
+/// read, no allocation — when profiling is disabled at construction.
+pub struct OpScope {
+    live: Option<LiveScope>,
+}
+
+struct LiveScope {
+    t0: Instant,
+    op: Op,
+    layer: usize,
+    rows: usize,
+    plane_bytes: usize,
+}
+
+/// Open a profiling scope for one op call. Bind the result to a
+/// variable (`let _p = op_scope(...)`) so it drops at the end of the
+/// instrumented block.
+#[inline]
+pub fn op_scope(op: Op, layer: usize, rows: usize, plane_bytes: usize) -> OpScope {
+    if !enabled() {
+        return OpScope { live: None };
+    }
+    OpScope {
+        live: Some(LiveScope {
+            t0: Instant::now(),
+            op,
+            layer,
+            rows,
+            plane_bytes,
+        }),
+    }
+}
+
+impl Drop for OpScope {
+    fn drop(&mut self) {
+        if let Some(l) = self.live.take() {
+            table().record(phase(), l.op, l.layer, l.t0.elapsed(), l.rows, l.plane_bytes);
+        }
+    }
+}
+
+/// [`report_json_from`] over the process-wide table and calibration.
+pub fn report_json() -> Json {
+    report_json_from(table(), peak_gbps())
+}
+
+/// Build the roofline report:
+/// `{version, peak_gbps, samples, keys: [entry...]}` with one entry per
+/// key that recorded at least one call, sorted by `total_us`
+/// descending. Each entry is
+/// `{phase, layer, op, count, total_us, mean_us, p50_us, p99_us, rows,
+/// plane_bytes, gbps, gpops}` where:
+///
+/// - `gbps` — achieved weight-plane bandwidth,
+///   `plane_bytes / total_us / 1000` (bytes per µs = MB/s; ÷1000 →
+///   GB/s). Counts packed weight traffic only (each plane read once per
+///   call), so it is a *lower bound* on true memory traffic —
+///   activations and outputs ride on top. `null` for keys that stream
+///   no planes.
+/// - `gpops` — popcount-word throughput in Gops/s: each row of a call
+///   XNOR+popcounts every weight word, so word-ops ≈
+///   `rows × (plane_bytes / count) / 8` (8 bytes per u64 word), divided
+///   by `total_us / 1000`. `null` where `gbps` is.
+pub fn report_json_from(t: &ProfileTable, peak: Option<f64>) -> Json {
+    let mut entries: Vec<(u64, Json)> = Vec::new();
+    let mut samples = 0u64;
+    for phase in Phase::ALL {
+        for op in Op::ALL {
+            for layer in 0..MAX_LAYERS {
+                let c = t.cell(phase, op, layer);
+                let n = c.time_us.count();
+                if n == 0 {
+                    continue;
+                }
+                samples += n;
+                let total_us = c.time_us.sum_us();
+                let rows = c.rows.get();
+                let bytes = c.plane_bytes.get();
+                let opt = |v: Option<f64>| v.map(Json::num).unwrap_or(Json::Null);
+                let (gbps, gpops) = if bytes > 0 && total_us > 0 {
+                    let gbps = bytes as f64 / total_us as f64 / 1000.0;
+                    let word_ops = rows as f64 * (bytes as f64 / n as f64) / 8.0;
+                    (
+                        Json::num(gbps),
+                        Json::num(word_ops / total_us as f64 / 1000.0),
+                    )
+                } else {
+                    (Json::Null, Json::Null)
+                };
+                let entry = Json::obj(vec![
+                    ("phase", Json::str(phase.label())),
+                    ("layer", Json::num(layer as f64)),
+                    ("op", Json::str(op.label())),
+                    ("count", Json::num(n as f64)),
+                    ("total_us", Json::num(total_us as f64)),
+                    ("mean_us", opt(c.time_us.mean_us())),
+                    ("p50_us", opt(c.time_us.percentile(0.50))),
+                    ("p99_us", opt(c.time_us.percentile(0.99))),
+                    ("rows", Json::num(rows as f64)),
+                    ("plane_bytes", Json::num(bytes as f64)),
+                    ("gbps", gbps),
+                    ("gpops", gpops),
+                ]);
+                entries.push((total_us, entry));
+            }
+        }
+    }
+    entries.sort_by(|a, b| b.0.cmp(&a.0));
+    Json::obj(vec![
+        ("version", Json::num(PROFILE_VERSION as f64)),
+        ("peak_gbps", peak.map(Json::num).unwrap_or(Json::Null)),
+        ("samples", Json::num(samples as f64)),
+        (
+            "keys",
+            Json::Arr(entries.into_iter().map(|(_, e)| e).collect()),
+        ),
+    ])
+}
+
+/// Render a [`report_json`] value as the `bwa client --profile` table:
+/// one row per key, sorted by total time (the report's order), with
+/// roofline utilization against the calibrated peak where available.
+pub fn format_report(report: &Json) -> String {
+    let keys = report.get("keys").as_arr().unwrap_or_default();
+    let peak = report.get("peak_gbps").as_f64();
+    let mut out = String::new();
+    out.push_str("profile report (per-op attribution, sorted by total time)\n");
+    match peak {
+        Some(p) => out.push_str(&format!("memory peak: {p:.1} GB/s (STREAM triad)\n")),
+        None => out.push_str("memory peak: uncalibrated\n"),
+    }
+    if keys.is_empty() {
+        out.push_str("no samples recorded (profiling off or no traffic)\n");
+        return out;
+    }
+    out.push_str(&format!(
+        "{:<8} {:>5} {:<5} {:>8} {:>10} {:>9} {:>9} {:>7} {:>7} {:>5}\n",
+        "phase", "layer", "op", "calls", "total ms", "mean us", "rows", "GB/s", "Gpop/s", "util"
+    ));
+    for k in keys {
+        let num = |f: &str| k.get(f).as_f64().unwrap_or(0.0);
+        let gbps = k.get("gbps").as_f64();
+        let gpops = k.get("gpops").as_f64();
+        let util = match (gbps, peak) {
+            (Some(g), Some(p)) if p > 0.0 => format!("{:.0}%", 100.0 * g / p),
+            _ => "-".to_string(),
+        };
+        out.push_str(&format!(
+            "{:<8} {:>5} {:<5} {:>8} {:>10.2} {:>9.1} {:>9} {:>7} {:>7} {:>5}\n",
+            k.get("phase").as_str().unwrap_or("?"),
+            num("layer") as u64,
+            k.get("op").as_str().unwrap_or("?"),
+            num("count") as u64,
+            num("total_us") / 1e3,
+            k.get("mean_us").as_f64().unwrap_or(0.0),
+            num("rows") as u64,
+            gbps.map(|g| format!("{g:.2}")).unwrap_or_else(|| "-".into()),
+            gpops
+                .map(|g| format!("{g:.2}"))
+                .unwrap_or_else(|| "-".into()),
+            util,
+        ));
+    }
+    out
+}
+
+/// The `hot ops:` lines appended to serve end-of-run reports: the top
+/// `n` keys by total time, each as `phase/L<layer>/<op>` with time
+/// share and achieved bandwidth.
+pub fn hot_ops_lines(report: &Json, n: usize) -> Vec<String> {
+    let keys = report.get("keys").as_arr().unwrap_or_default();
+    if keys.is_empty() {
+        return Vec::new();
+    }
+    let grand_total: f64 = keys
+        .iter()
+        .map(|k| k.get("total_us").as_f64().unwrap_or(0.0))
+        .sum();
+    let mut lines = vec![format!(
+        "hot ops: {} keys, {:.1} ms attributed",
+        keys.len(),
+        grand_total / 1e3
+    )];
+    for k in keys.iter().take(n) {
+        let total = k.get("total_us").as_f64().unwrap_or(0.0);
+        let share = if grand_total > 0.0 {
+            100.0 * total / grand_total
+        } else {
+            0.0
+        };
+        let bw = k
+            .get("gbps")
+            .as_f64()
+            .map(|g| format!(", {g:.2} GB/s"))
+            .unwrap_or_default();
+        lines.push(format!(
+            "hot ops:   {}/L{}/{} {:.2} ms ({:.0}%, {} calls{})",
+            k.get("phase").as_str().unwrap_or("?"),
+            k.get("layer").as_f64().unwrap_or(0.0) as u64,
+            k.get("op").as_str().unwrap_or("?"),
+            total / 1e3,
+            share,
+            k.get("count").as_f64().unwrap_or(0.0) as u64,
+            bw,
+        ));
+    }
+    lines
+}
+
+/// Serializes tests that toggle the process-wide [`enabled`] gate (or
+/// assert on its state), so the parallel lib-test runner never lets one
+/// test observe another's toggle. Poisoning is ignored — the lock only
+/// orders tests, it guards no data.
+#[cfg(test)]
+pub(crate) static GATE_TEST_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+#[cfg(test)]
+pub(crate) fn gate_test_lock() -> std::sync::MutexGuard<'static, ()> {
+    GATE_TEST_LOCK.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_scope_is_inert_and_records_nothing() {
+        // Hold the gate lock so the torture test's enable window can't
+        // overlap this check; measure a delta because the global table
+        // is never cleared.
+        let _gate = gate_test_lock();
+        assert!(!enabled());
+        let before = table().samples();
+        {
+            let _p = op_scope(Op::Wq, 0, 4, 1024);
+        }
+        assert_eq!(table().samples(), before);
+    }
+
+    #[test]
+    fn record_accumulates_per_key_and_samples_counts_all() {
+        let t = ProfileTable::new();
+        t.record(Phase::Decode, Op::Wq, 0, Duration::from_micros(10), 2, 64);
+        t.record(Phase::Decode, Op::Wq, 0, Duration::from_micros(30), 2, 64);
+        t.record(Phase::Prefill, Op::Attn, 1, Duration::from_micros(5), 8, 0);
+        let c = t.cell(Phase::Decode, Op::Wq, 0);
+        assert_eq!(c.time_us.count(), 2);
+        assert_eq!(c.rows.get(), 4);
+        assert_eq!(c.plane_bytes.get(), 128);
+        assert_eq!(t.samples(), 3);
+        // distinct keys stay distinct
+        assert_eq!(t.cell(Phase::Prefill, Op::Attn, 1).time_us.count(), 1);
+        assert_eq!(t.cell(Phase::Decode, Op::Attn, 1).time_us.count(), 0);
+    }
+
+    #[test]
+    fn deep_layers_clamp_into_the_last_slot() {
+        let t = ProfileTable::new();
+        t.record(Phase::Decode, Op::Norm, 500, Duration::from_micros(1), 1, 0);
+        assert_eq!(
+            t.cell(Phase::Decode, Op::Norm, MAX_LAYERS - 1).time_us.count(),
+            1
+        );
+    }
+
+    #[test]
+    fn report_sorts_by_total_time_and_derives_roofline_fields() {
+        let t = ProfileTable::new();
+        // wq: 2 calls, 100us total, 4 rows, 16000 bytes
+        t.record(Phase::Decode, Op::Wq, 0, Duration::from_micros(60), 2, 8000);
+        t.record(Phase::Decode, Op::Wq, 0, Duration::from_micros(40), 2, 8000);
+        // attn: slower in total, no planes
+        t.record(Phase::Decode, Op::Attn, 0, Duration::from_micros(300), 4, 0);
+        let report = report_json_from(&t, Some(10.0));
+        assert_eq!(report.get("version").as_usize(), Some(PROFILE_VERSION));
+        assert_eq!(report.get("peak_gbps").as_f64(), Some(10.0));
+        assert_eq!(report.get("samples").as_usize(), Some(3));
+        let keys = report.get("keys").as_arr().unwrap();
+        assert_eq!(keys.len(), 2);
+        // sorted by total time: attn (300us) first
+        assert_eq!(keys[0].get("op").as_str(), Some("attn"));
+        assert_eq!(*keys[0].get("gbps"), Json::Null);
+        let wq = &keys[1];
+        assert_eq!(wq.get("count").as_usize(), Some(2));
+        assert_eq!(wq.get("total_us").as_usize(), Some(100));
+        // 16000 bytes over 100us = 0.16 GB/s
+        assert!((wq.get("gbps").as_f64().unwrap() - 0.16).abs() < 1e-9);
+        // word-ops = 4 rows * 8000 bytes/call / 8 = 4000; over 100us
+        // that is 0.04 Gops/s
+        assert!((wq.get("gpops").as_f64().unwrap() - 0.04).abs() < 1e-9);
+    }
+
+    #[test]
+    fn report_round_trips_through_json_text() {
+        let t = ProfileTable::new();
+        t.record(Phase::Verify, Op::Down, 3, Duration::from_micros(7), 5, 640);
+        let report = report_json_from(&t, None);
+        let back = Json::parse(&report.to_string()).expect("report parses");
+        assert_eq!(*back.get("peak_gbps"), Json::Null);
+        let key = &back.get("keys").as_arr().unwrap()[0];
+        assert_eq!(key.get("phase").as_str(), Some("verify"));
+        assert_eq!(key.get("layer").as_usize(), Some(3));
+    }
+
+    #[test]
+    fn format_report_and_hot_ops_render_every_key() {
+        let t = ProfileTable::new();
+        t.record(Phase::Decode, Op::Wq, 0, Duration::from_micros(90), 1, 4096);
+        t.record(Phase::Prefill, Op::Norm, 2, Duration::from_micros(10), 12, 0);
+        let report = report_json_from(&t, Some(12.0));
+        let table_text = format_report(&report);
+        assert!(table_text.contains("12.0 GB/s"));
+        assert!(table_text.contains("wq"));
+        assert!(table_text.contains("norm"));
+        let lines = hot_ops_lines(&report, 8);
+        assert!(lines[0].starts_with("hot ops: 2 keys"));
+        assert!(lines.iter().any(|l| l.contains("decode/L0/wq")));
+        assert!(lines.iter().any(|l| l.contains("prefill/L2/norm")));
+    }
+
+    #[test]
+    fn empty_report_renders_without_rows() {
+        let t = ProfileTable::new();
+        let report = report_json_from(&t, None);
+        assert!(report.get("keys").as_arr().unwrap().is_empty());
+        assert!(format_report(&report).contains("no samples"));
+        assert!(hot_ops_lines(&report, 3).is_empty());
+    }
+
+    #[test]
+    fn phase_ambient_store_round_trips() {
+        // Other lib tests don't touch the ambient phase; leave it on
+        // the default when done.
+        set_phase(Phase::Prefill);
+        assert_eq!(phase(), Phase::Prefill);
+        set_phase(Phase::Verify);
+        assert_eq!(phase(), Phase::Verify);
+        set_phase(Phase::Decode);
+        assert_eq!(phase(), Phase::Decode);
+    }
+}

@@ -68,7 +68,7 @@ impl Gauge {
 
 /// Power-of-two bucket count: bucket 47 holds everything above ~2^46 us
 /// (~2 years), so no latency can overflow the array.
-const BUCKETS: usize = 48;
+pub const BUCKETS: usize = 48;
 
 /// Log-bucketed latency histogram in microseconds. `record` is
 /// lock-free; percentiles are extracted by cumulative walk with linear
@@ -109,6 +109,33 @@ impl LogHistogram {
 
     pub fn count(&self) -> u64 {
         self.count.load(Ordering::Relaxed)
+    }
+
+    /// Exact sum of all recorded samples, in microseconds.
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us.load(Ordering::Relaxed)
+    }
+
+    /// Relaxed-read copy of the raw per-bucket counts, in bucket order
+    /// — what the Prometheus exporter turns into cumulative `_bucket`
+    /// series.
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.buckets
+            .iter()
+            .map(|b| b.load(Ordering::Relaxed))
+            .collect()
+    }
+
+    /// Inclusive upper bound (µs) of bucket `i`: 0 for the zero bucket,
+    /// `2^i - 1` otherwise. The last bucket is unbounded in practice
+    /// (it absorbs everything above `2^46` µs); exporters should label
+    /// it `+Inf`.
+    pub fn bucket_le(i: usize) -> u64 {
+        if i == 0 {
+            0
+        } else {
+            (1u64 << i.min(63)) - 1
+        }
     }
 
     /// Exact mean (the sum is kept exactly); `None` when empty.
@@ -260,6 +287,7 @@ pub struct ServerMetrics {
     pub connections: Counter,
     pub frames_generate: Counter,
     pub frames_stats: Counter,
+    pub frames_profile: Counter,
     pub frames_shutdown: Counter,
     /// Requests answered with a `final` frame.
     pub served: Counter,
@@ -290,13 +318,12 @@ impl Registry {
         Registry::default()
     }
 
-    /// The versioned JSON snapshot served by the `stats` wire command
-    /// and the `--stats-every` periodic line:
-    /// `{version, counters: {name: n}, gauges: {name: v},
-    /// histograms: {name: {count, mean_us, p50_us, p95_us, p99_us}}}`.
-    /// Names are `layer.metric`, cataloged in `docs/OBSERVABILITY.md`.
-    pub fn snapshot(&self) -> Json {
-        let counters: Vec<(&str, &Counter)> = vec![
+    /// Every counter with its wire name (`layer.metric`, cataloged in
+    /// `docs/OBSERVABILITY.md`) — the one name table [`snapshot`]
+    /// (Registry::snapshot) and the Prometheus exporter both read, so
+    /// the two surfaces can never disagree on the catalog.
+    pub fn counters(&self) -> Vec<(&'static str, &Counter)> {
+        vec![
             ("kernel.gemm_calls", &self.kernel.gemm_calls),
             ("kernel.gemm_rows", &self.kernel.gemm_rows),
             ("kernel.plane_bytes", &self.kernel.plane_bytes),
@@ -321,20 +348,29 @@ impl Registry {
             ("server.connections", &self.server.connections),
             ("server.frames_generate", &self.server.frames_generate),
             ("server.frames_stats", &self.server.frames_stats),
+            ("server.frames_profile", &self.server.frames_profile),
             ("server.frames_shutdown", &self.server.frames_shutdown),
             ("server.served", &self.server.served),
             ("server.errors_busy", &self.server.errors_busy),
             ("server.errors_capacity", &self.server.errors_capacity),
             ("server.errors_bad_request", &self.server.errors_bad_request),
             ("server.errors_protocol", &self.server.errors_protocol),
-        ];
-        let gauges: Vec<(&str, &Gauge)> = vec![
+        ]
+    }
+
+    /// Every gauge with its wire name; see [`counters`](Registry::counters).
+    pub fn gauges(&self) -> Vec<(&'static str, &Gauge)> {
+        vec![
             ("kvpool.blocks_in_use", &self.kvpool.blocks_in_use),
             ("scheduler.queue_depth", &self.scheduler.queue_depth),
             ("scheduler.active_slots", &self.scheduler.active_slots),
             ("server.in_flight", &self.server.in_flight),
-        ];
-        let hists: Vec<(&str, &LogHistogram)> = vec![
+        ]
+    }
+
+    /// Every histogram with its wire name; see [`counters`](Registry::counters).
+    pub fn histograms(&self) -> Vec<(&'static str, &LogHistogram)> {
+        vec![
             ("scheduler.ttft_us", &self.scheduler.ttft_us),
             ("scheduler.itl_us", &self.scheduler.itl_us),
             ("scheduler.latency_us", &self.scheduler.latency_us),
@@ -354,13 +390,21 @@ impl Registry {
             ("scheduler.stage.decode_us", &self.scheduler.stage_decode_us),
             ("scheduler.stage.verify_us", &self.scheduler.stage_verify_us),
             ("scheduler.stage.emit_us", &self.scheduler.stage_emit_us),
-        ];
+        ]
+    }
+
+    /// The versioned JSON snapshot served by the `stats` wire command
+    /// and the `--stats-every` periodic line:
+    /// `{version, counters: {name: n}, gauges: {name: v},
+    /// histograms: {name: {count, mean_us, p50_us, p95_us, p99_us}}}`.
+    /// Names are `layer.metric`, cataloged in `docs/OBSERVABILITY.md`.
+    pub fn snapshot(&self) -> Json {
         Json::obj(vec![
             ("version", Json::num(SNAPSHOT_VERSION as f64)),
             (
                 "counters",
                 Json::obj(
-                    counters
+                    self.counters()
                         .into_iter()
                         .map(|(k, c)| (k, Json::num(c.get() as f64)))
                         .collect(),
@@ -369,7 +413,7 @@ impl Registry {
             (
                 "gauges",
                 Json::obj(
-                    gauges
+                    self.gauges()
                         .into_iter()
                         .map(|(k, g)| (k, Json::num(g.get() as f64)))
                         .collect(),
@@ -377,7 +421,12 @@ impl Registry {
             ),
             (
                 "histograms",
-                Json::obj(hists.into_iter().map(|(k, h)| (k, h.to_json())).collect()),
+                Json::obj(
+                    self.histograms()
+                        .into_iter()
+                        .map(|(k, h)| (k, h.to_json()))
+                        .collect(),
+                ),
             ),
         ])
     }
@@ -448,6 +497,40 @@ mod tests {
         h.record_us(0);
         assert_eq!(h.percentile(0.5), Some(0.0));
         assert_eq!(h.mean_us(), Some(0.0));
+    }
+
+    #[test]
+    fn bucket_accessors_expose_the_raw_histogram_shape() {
+        let h = LogHistogram::default();
+        h.record_us(0); // bucket 0
+        h.record_us(700); // bucket [512, 1023] = index 10
+        let counts = h.bucket_counts();
+        assert_eq!(counts.len(), BUCKETS);
+        assert_eq!(counts.iter().sum::<u64>(), h.count());
+        assert_eq!(counts[0], 1);
+        assert_eq!(counts[10], 1);
+        assert_eq!(h.sum_us(), 700);
+        assert_eq!(LogHistogram::bucket_le(0), 0);
+        assert_eq!(LogHistogram::bucket_le(1), 1);
+        assert_eq!(LogHistogram::bucket_le(10), 1023);
+    }
+
+    #[test]
+    fn name_tables_are_unique_and_prefixed_by_layer() {
+        let r = Registry::new();
+        let mut names: Vec<&str> = r.counters().iter().map(|(n, _)| *n).collect();
+        names.extend(r.gauges().iter().map(|(n, _)| *n));
+        names.extend(r.histograms().iter().map(|(n, _)| *n));
+        let total = names.len();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), total, "duplicate metric name in catalogs");
+        for n in names {
+            assert!(
+                n.contains('.') && n.is_ascii(),
+                "metric name '{n}' is not layer.metric"
+            );
+        }
     }
 
     #[test]

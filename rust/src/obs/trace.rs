@@ -106,6 +106,23 @@ impl FlightRecorder {
     }
 }
 
+/// Read a flight-recorder JSONL file back as parsed records, skipping
+/// blank lines — the input side of the chrome-trace converter
+/// (`obs::export::chrome_trace_from_file`). A malformed line is an
+/// error (the recorder only ever writes whole lines, so damage means
+/// the file is not a recorder file).
+pub fn read_records(path: &std::path::Path) -> Result<Vec<Json>, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("read trace {}: {e}", path.display()))?;
+    text.lines()
+        .enumerate()
+        .filter(|(_, l)| !l.trim().is_empty())
+        .map(|(i, l)| {
+            Json::parse(l).map_err(|e| format!("trace {} line {}: {e}", path.display(), i + 1))
+        })
+        .collect()
+}
+
 /// One per-step trace event: offset from `queued` and how many tokens
 /// that step emitted for this request (1 for plain decode, up to
 /// `spec_k + 1` for an accepted speculative batch).
@@ -248,6 +265,22 @@ mod tests {
         let j = Json::parse(text.lines().next().expect("one line")).expect("json");
         assert_eq!(*j.get("first_token_us"), Json::Null);
         assert_eq!(j.get("steps").as_arr().map(<[Json]>::len), Some(0));
+    }
+
+    #[test]
+    fn read_records_round_trips_what_the_recorder_wrote() {
+        let path = tmp("read_back.jsonl");
+        let rec = Arc::new(FlightRecorder::create(&path, 0).expect("create"));
+        for id in 0..3u64 {
+            let mut t = Trace::new(Arc::clone(&rec), id);
+            let now = Instant::now();
+            t.mark_reserved(now);
+            t.finish(now, 0);
+        }
+        let records = read_records(&path).expect("parse all lines");
+        assert_eq!(records.len(), 3);
+        assert_eq!(records[2].get("id").as_usize(), Some(2));
+        assert!(read_records(std::path::Path::new("/nonexistent/trace.jsonl")).is_err());
     }
 
     #[test]

@@ -212,6 +212,13 @@ pub trait LinearExec: Send + Sync {
     fn prepare_invocations(&self) -> u64 {
         0
     }
+    /// Packed weight-plane bytes one logical GEMM through this exec
+    /// streams — the traffic term the per-op profiler attributes for
+    /// roofline bandwidth (`docs/OBSERVABILITY.md`). Dense and
+    /// fake-quant plans, which stream no packed planes, report 0.
+    fn plane_bytes(&self) -> usize {
+        0
+    }
 }
 
 /// A method that turns (layer identity, weights, calibration activations)
@@ -532,6 +539,10 @@ impl LinearExec for BwaGemm {
 
     fn prepare_invocations(&self) -> u64 {
         self.pack_calls.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    fn plane_bytes(&self) -> usize {
+        BwaGemm::plane_bytes(self)
     }
 }
 

@@ -210,6 +210,9 @@ impl Client {
                 ServerFrame::Stats { .. } => {
                     return Err(ServeError::Protocol("unexpected stats mid-stream".into()))
                 }
+                ServerFrame::Profile { .. } => {
+                    return Err(ServeError::Protocol("unexpected profile mid-stream".into()))
+                }
             }
         }
     }
@@ -223,6 +226,21 @@ impl Client {
             ServerFrame::Stats { snapshot } => Ok(snapshot),
             ServerFrame::Error { error, .. } => Err(error),
             other => Err(ServeError::Protocol(format!("expected stats, got {other:?}"))),
+        }
+    }
+
+    /// Fetch the per-op roofline profile (the `profile` wire command):
+    /// the server's [`crate::obs::profile::report_json`] report. A server
+    /// running without profiling answers a valid report with zero keys.
+    /// Leaves the connection usable.
+    pub fn profile(&mut self) -> Result<crate::util::json::Json, ServeError> {
+        self.send(&ClientFrame::Profile)?;
+        match self.read_frame()? {
+            ServerFrame::Profile { report } => Ok(report),
+            ServerFrame::Error { error, .. } => Err(error),
+            other => Err(ServeError::Protocol(format!(
+                "expected profile, got {other:?}"
+            ))),
         }
     }
 
@@ -276,11 +294,25 @@ pub static CLIENT_SPEC: Spec = Spec {
             "",
             "check streamed tokens against an in-process greedy run of this .bwa artifact",
         ),
+        (
+            "fetch-metrics",
+            "",
+            "fetch and print GET /metrics from a --metrics-listen endpoint, then exit",
+        ),
+        (
+            "check-json",
+            "",
+            "parse this JSON file (e.g. a --chrome-trace export) and exit 0 if well-formed",
+        ),
     ],
     switches: &[
         (
             "stats",
             "fetch and print the server's live stats snapshot (JSON) after the requests",
+        ),
+        (
+            "profile",
+            "fetch and print the server's per-op roofline profile after the requests",
         ),
         (
             "shutdown",
@@ -323,6 +355,26 @@ pub fn cmd_client(args: &Args) -> Result<(), String> {
     args.validate(&CLIENT_SPEC).map_err(|e| e.to_string())?;
     if args.wants_help() {
         println!("{}", CLIENT_SPEC.help());
+        return Ok(());
+    }
+    // Stand-alone utility modes — neither speaks the serving protocol,
+    // so they run (and exit) before any connection is made.
+    let fetch_metrics = args.str_or("fetch-metrics", "");
+    if !fetch_metrics.is_empty() {
+        let body = crate::obs::export::http_get(fetch_metrics, "/metrics")?;
+        print!("{body}");
+        return Ok(());
+    }
+    let check_json = args.str_or("check-json", "");
+    if !check_json.is_empty() {
+        let text = std::fs::read_to_string(check_json)
+            .map_err(|e| format!("read {check_json}: {e}"))?;
+        let j = crate::util::json::Json::parse(&text).map_err(|e| format!("{check_json}: {e}"))?;
+        let events = j.get("traceEvents").as_arr().map_or(0, <[_]>::len);
+        println!(
+            "ok: {check_json} parses ({} bytes, {events} traceEvents)",
+            text.len()
+        );
         return Ok(());
     }
     let addr = args.str_or("addr", "127.0.0.1:8491");
@@ -417,6 +469,10 @@ pub fn cmd_client(args: &Args) -> Result<(), String> {
     if args.switch("stats") {
         let snapshot = client.stats().map_err(|e| e.to_string())?;
         print!("{}", snapshot.to_string_pretty());
+    }
+    if args.switch("profile") {
+        let report = client.profile().map_err(|e| e.to_string())?;
+        println!("{}", crate::obs::profile::format_report(&report));
     }
     if args.switch("shutdown") {
         client.shutdown_server().map_err(|e| e.to_string())?;

@@ -379,6 +379,16 @@ fn handle_conn(
                             return;
                         }
                     }
+                    Ok(ClientFrame::Profile) => {
+                        shared.obs.registry.server.frames_profile.incr(1);
+                        // Reads the global profile table — an empty (or
+                        // profiling-off) table answers a valid report
+                        // with zero keys, never an error.
+                        let report = crate::obs::profile::report_json();
+                        if send_frame(&mut writer, &ServerFrame::Profile { report }).is_err() {
+                            return;
+                        }
+                    }
                     Ok(ClientFrame::Shutdown) => {
                         shared.obs.registry.server.frames_shutdown.incr(1);
                         shared.shutdown.store(true, Ordering::SeqCst);
@@ -611,6 +621,12 @@ pub fn network_report(stats: &ServerStats) -> String {
             s.gen_tokens as f64 / s.steps.max(1) as f64,
             spec.accept_hist,
         ));
+    }
+    if let Some(profile) = &s.profile {
+        for line in crate::obs::profile::hot_ops_lines(profile, 5) {
+            r.push('\n');
+            r.push_str(&line);
+        }
     }
     r
 }
@@ -1027,6 +1043,34 @@ mod tests {
         assert_eq!(counter(&snap2, "scheduler.gen_tokens"), stats.scheduler.gen_tokens);
         assert_eq!(counter(&snap2, "scheduler.requests"), stats.scheduler.requests);
         assert_eq!(counter(&snap2, "scheduler.steps"), stats.scheduler.steps);
+    }
+
+    /// The `profile` wire command: a server running without profiling
+    /// answers a valid, versioned, zero-key report (never an error), the
+    /// frame counter lands in the stats snapshot, and the connection
+    /// stays usable.
+    #[test]
+    fn profile_wire_command_answers_a_versioned_report() {
+        let handle = start_mock(16, test_limits());
+        let mut client = Client::connect(&handle.addr().to_string()).unwrap();
+        client.generate(0, &[1, 2, 3], 4, &GenConfig::default()).unwrap();
+        let report = client.profile().unwrap();
+        assert_eq!(
+            report.get("version").as_usize(),
+            Some(crate::obs::profile::PROFILE_VERSION)
+        );
+        // The report is a valid object with a keys array. (No assertion
+        // on its length: the profile table is process-global and other
+        // tests in this binary may have recorded into it.)
+        assert!(report.get("keys").as_arr().is_some());
+        let snap = client.stats().unwrap();
+        assert_eq!(
+            snap.get("counters").get("server.frames_profile").as_usize(),
+            Some(1)
+        );
+        client.shutdown_server().unwrap();
+        let stats = handle.wait();
+        assert_eq!(stats.served, 1);
     }
 
     /// An unknown frame type gets the typed `protocol` error on the

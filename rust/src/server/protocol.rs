@@ -7,15 +7,17 @@
 //! - client → server: `generate` (a prompt, a `gen` budget, and an
 //!   optional per-request `cfg` carrying the
 //!   [`GenConfig`](crate::model::sampling::GenConfig) sampling fields),
-//!   `stats` (fetch a live telemetry snapshot), and `shutdown` (drain
-//!   and stop the whole server).
+//!   `stats` (fetch a live telemetry snapshot), `profile` (fetch the
+//!   per-op roofline report), and `shutdown` (drain and stop the whole
+//!   server).
 //! - server → client: `hello` (version + model, once per connection),
 //!   `token` (one streamed token, sent the moment the scheduler emits
 //!   it; `done` marks the last), `final` (the complete continuation plus
 //!   scheduler-side latency metadata), `stats` (a versioned
 //!   [`crate::obs::Registry`] snapshot, echoing a `stats` request),
-//!   `error` (typed: see [`ServeError`]), and `bye` (connection closing
-//!   on shutdown).
+//!   `profile` (a versioned [`crate::obs::profile::report_json`] report,
+//!   echoing a `profile` request), `error` (typed: see [`ServeError`]),
+//!   and `bye` (connection closing on shutdown).
 //!
 //! Request ids are client-scoped echoes: the server copies the id of the
 //! `generate` frame into its `token`/`final`/`error` frames and never
@@ -119,6 +121,11 @@ pub enum ClientFrame {
     /// counters, gauges, and latency-histogram percentiles across every
     /// instrumented layer. Read-only; never perturbs serving state.
     Stats,
+    /// Fetch the per-op roofline profile ([`ServerFrame::Profile`]) —
+    /// wall time, rows, and plane-byte traffic attributed to
+    /// `(phase, layer, op)` keys. Read-only, like `stats`; the report is
+    /// empty when the server was started without profiling.
+    Profile,
     /// Drain every in-flight session, release all KV blocks, and stop
     /// the server process.
     Shutdown,
@@ -151,6 +158,11 @@ pub enum ServerFrame {
     /// "histograms": {..}}` — so the wire format is versioned by the
     /// snapshot itself, not the protocol.
     Stats { snapshot: Json },
+    /// Per-op roofline report, answering a [`ClientFrame::Profile`]. The
+    /// payload is [`crate::obs::profile::report_json`] verbatim —
+    /// `{"version": .., "peak_gbps": .., "samples": .., "keys": [..]}` —
+    /// versioned by the report itself, not the protocol.
+    Profile { report: Json },
     /// Typed rejection; `id` echoes the offending request when known.
     Error { id: Option<u64>, error: ServeError },
     /// The server is shutting down; the connection closes after this.
@@ -229,6 +241,7 @@ pub fn encode_client(frame: &ClientFrame) -> String {
             Json::obj(pairs)
         }
         ClientFrame::Stats => Json::obj(vec![("type", Json::str("stats"))]),
+        ClientFrame::Profile => Json::obj(vec![("type", Json::str("profile"))]),
         ClientFrame::Shutdown => Json::obj(vec![("type", Json::str("shutdown"))]),
     };
     j.to_string()
@@ -259,6 +272,10 @@ pub fn encode_server(frame: &ServerFrame) -> String {
         ServerFrame::Stats { snapshot } => Json::obj(vec![
             ("type", Json::str("stats")),
             ("snapshot", snapshot.clone()),
+        ]),
+        ServerFrame::Profile { report } => Json::obj(vec![
+            ("type", Json::str("profile")),
+            ("report", report.clone()),
         ]),
         ServerFrame::Error { id, error } => {
             let mut pairs = vec![
@@ -318,6 +335,7 @@ pub fn decode_client(line: &str) -> Result<ClientFrame, ServeError> {
             },
         }),
         "stats" => Ok(ClientFrame::Stats),
+        "profile" => Ok(ClientFrame::Profile),
         "shutdown" => Ok(ClientFrame::Shutdown),
         other => Err(ServeError::Protocol(format!("unknown client frame type '{other}'"))),
     }
@@ -354,6 +372,9 @@ pub fn decode_server(line: &str) -> Result<ServerFrame, ServeError> {
         }),
         "stats" => Ok(ServerFrame::Stats {
             snapshot: j.get("snapshot").clone(),
+        }),
+        "profile" => Ok(ServerFrame::Profile {
+            report: j.get("report").clone(),
         }),
         "error" => Ok(ServerFrame::Error {
             id: j.get("id").as_f64().map(|x| x as u64),
@@ -446,6 +467,37 @@ mod tests {
             snapshot.get("version").as_usize(),
             Some(crate::obs::SNAPSHOT_VERSION)
         );
+    }
+
+    #[test]
+    fn profile_frames_round_trip_with_a_real_report() {
+        let line = encode_client(&ClientFrame::Profile);
+        assert_eq!(decode_client(&line).unwrap(), ClientFrame::Profile);
+
+        // the payload is a genuine profiler report built from a local
+        // table, so the round trip covers the actual wire shape
+        let t = crate::obs::profile::ProfileTable::new();
+        t.record(
+            crate::obs::profile::Phase::Decode,
+            crate::obs::profile::Op::Wq,
+            0,
+            std::time::Duration::from_micros(120),
+            1,
+            4096,
+        );
+        let report = crate::obs::profile::report_json_from(&t, Some(20.0));
+        let frame = ServerFrame::Profile { report };
+        let decoded = decode_server(&encode_server(&frame)).unwrap();
+        assert_eq!(decoded, frame);
+        let ServerFrame::Profile { report } = decoded else {
+            panic!("expected profile");
+        };
+        assert_eq!(
+            report.get("version").as_usize(),
+            Some(crate::obs::profile::PROFILE_VERSION)
+        );
+        assert_eq!(report.get("samples").as_usize(), Some(1));
+        assert_eq!(report.get("keys").as_arr().map(<[_]>::len), Some(1));
     }
 
     #[test]

@@ -120,6 +120,38 @@ pub fn gops(stats: &BenchStats, ops_per_iter: f64) -> f64 {
     ops_per_iter / stats.median_ns // ops per ns == Gops/s
 }
 
+/// One-shot STREAM-style triad memory-bandwidth probe: best-of-`trials`
+/// sustained GB/s for `a[i] = b[i] + 3·c[i]` over three f32 arrays
+/// totalling `total_bytes` (~64 MiB in the serve calibration — far past
+/// LLC so DRAM is what's measured). Single-threaded, like the
+/// single-stream decode path it calibrates; the result feeds
+/// [`crate::obs::profile::set_peak_gbps`] as the roofline ceiling.
+///
+/// Counts 12 bytes of traffic per element (read `b`, read `c`, write
+/// `a`), the classic STREAM convention — no write-allocate accounting.
+pub fn stream_triad_gbps(total_bytes: usize, trials: usize) -> f64 {
+    let n = (total_bytes / (3 * std::mem::size_of::<f32>())).max(1);
+    let b = vec![1.0f32; n];
+    let c = vec![2.0f32; n];
+    let mut a = vec![0.0f32; n];
+    let mut best = f64::INFINITY;
+    for _ in 0..trials.max(1) {
+        let t0 = Instant::now();
+        for ((ai, bi), ci) in a.iter_mut().zip(&b).zip(&c) {
+            *ai = bi + 3.0 * ci;
+        }
+        black_box(&mut a);
+        let secs = t0.elapsed().as_secs_f64();
+        if secs > 0.0 && secs < best {
+            best = secs;
+        }
+    }
+    if !best.is_finite() {
+        return 0.0;
+    }
+    (3.0 * n as f64 * std::mem::size_of::<f32>() as f64) / best / 1e9
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -163,6 +195,16 @@ mod tests {
             costly.median_ns,
             cheap.median_ns
         );
+    }
+
+    #[test]
+    fn stream_triad_answers_a_positive_finite_bandwidth() {
+        // Small buffer keeps the unit test fast; the serve calibration
+        // uses ~64 MiB for a DRAM-resident measurement.
+        let gbps = stream_triad_gbps(3 << 20, 2);
+        assert!(gbps.is_finite() && gbps > 0.0, "gbps = {gbps}");
+        // degenerate sizing still answers without panicking
+        assert!(stream_triad_gbps(0, 1) >= 0.0);
     }
 
     #[test]

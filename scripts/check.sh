@@ -112,15 +112,19 @@ grep -q 'network serve report' "$smoke/server.log" \
 grep -E 'spec accepted: [1-9][0-9]*/' "$smoke/server.log" \
   || { echo "expected nonzero accepted drafts in the server log:"; cat "$smoke/server.log"; exit 1; }
 
-echo "== telemetry smoke (stats wire command + flight recorder) =="
+echo "== telemetry smoke (stats + profile wire, /metrics, chrome trace) =="
 # Live observability end to end: the server runs with a JSONL trace
-# recorder and periodic `stats:` snapshot lines; after bit-verified
-# generations the client fetches a `stats` snapshot over the wire
-# (nonzero scheduler.steps proves the registry is live), and the trace
-# file must hold one complete lifecycle record (retired_us) per request.
+# recorder, periodic `stats:` snapshot lines, the per-op roofline
+# profiler, a Prometheus scrape endpoint, and a chrome-trace export;
+# after bit-verified generations the client fetches a `stats` snapshot
+# over the wire (nonzero scheduler.steps proves the registry is live),
+# a `profile` report, and the /metrics page (via the bwa-side HTTP
+# probe — no curl needed), and the trace file must hold one complete
+# lifecycle record (retired_us) per request.
 target/release/bwa serve --artifact "$smoke/tiny.bwa" --backend bwa-cont \
   --listen 127.0.0.1:0 --max-active 4 --kv-blocks 256 --block-size 4 \
   --max-queue 8 --spec-k 4 --trace-out "$smoke/trace.jsonl" --stats-every 5 \
+  --profile --metrics-listen 127.0.0.1:0 --chrome-trace "$smoke/chrome.json" \
   > "$smoke/obs-server.log" 2>&1 &
 obs_pid=$!
 addr=""
@@ -132,6 +136,10 @@ for _ in $(seq 1 100); do
   sleep 0.1
 done
 [ -n "$addr" ] || { echo "obs server never reported its address"; cat "$smoke/obs-server.log"; exit 1; }
+# The metrics endpoint binds (and prints) before the serving listener,
+# so its address is already in the log once `listening on` appears.
+maddr="$(sed -n 's/^metrics listening on //p' "$smoke/obs-server.log")"
+[ -n "$maddr" ] || { echo "no metrics address in the log:"; cat "$smoke/obs-server.log"; exit 1; }
 target/release/bwa client --addr "$addr" --requests 3 --prompt-len 12 --gen 40 \
   --seed 7 --verify-artifact "$smoke/tiny.bwa"
 statsout="$(target/release/bwa client --addr "$addr" --requests 0 --stats)"
@@ -139,12 +147,39 @@ echo "$statsout" | grep -E '"scheduler.steps": [1-9]' \
   || { echo "stats snapshot missing nonzero scheduler.steps:"; echo "$statsout"; exit 1; }
 echo "$statsout" | grep -E '"server.served": 3' \
   || { echo "stats snapshot missing server.served = 3:"; echo "$statsout"; exit 1; }
+# The profile wire command: a rendered table with attributed keys (the
+# requests above ran with --profile on, so decode ops must show up).
+profout="$(target/release/bwa client --addr "$addr" --requests 0 --profile)"
+echo "$profout" | grep -q '^profile report' \
+  || { echo "expected a profile report from the wire command:"; echo "$profout"; exit 1; }
+echo "$profout" | grep -q 'decode' \
+  || { echo "expected decode-phase keys in the profile report:"; echo "$profout"; exit 1; }
+# Prometheus scrape: a counter with traffic, a gauge, one complete
+# histogram family, and the labeled profiler series.
+metout="$(target/release/bwa client --fetch-metrics "$maddr")"
+echo "$metout" | grep -E '^bwa_scheduler_steps [1-9]' > /dev/null \
+  || { echo "/metrics missing a nonzero bwa_scheduler_steps counter:"; echo "$metout" | head -40; exit 1; }
+echo "$metout" | grep -q '# TYPE bwa_server_in_flight gauge' \
+  || { echo "/metrics missing the in-flight gauge:"; echo "$metout" | head -40; exit 1; }
+for series in 'bwa_scheduler_ttft_us_bucket{le="+Inf"}' 'bwa_scheduler_ttft_us_sum' \
+              'bwa_scheduler_ttft_us_count' 'bwa_profile_time_us_bucket' 'bwa_mem_peak_gbps'; do
+  echo "$metout" | grep -qF "$series" \
+    || { echo "/metrics missing $series:"; echo "$metout" | head -40; exit 1; }
+done
 target/release/bwa client --addr "$addr" --requests 0 --shutdown
 wait "$obs_pid" || { echo "obs server exited nonzero:"; cat "$smoke/obs-server.log"; exit 1; }
 grep -q '^stats: ' "$smoke/obs-server.log" \
   || { echo "expected periodic stats lines in the server log:"; cat "$smoke/obs-server.log"; exit 1; }
+grep -q '^hot ops: ' "$smoke/obs-server.log" \
+  || { echo "expected hot-ops lines in the profiled serve report:"; cat "$smoke/obs-server.log"; exit 1; }
 [ "$(grep -c '"retired_us"' "$smoke/trace.jsonl")" -eq 3 ] \
   || { echo "expected 3 complete trace records:"; cat "$smoke/trace.jsonl"; exit 1; }
+# The chrome-trace export was converted from those records at shutdown;
+# it must be valid JSON with events (checked by the bwa-side parser).
+grep -q '^chrome trace: ' "$smoke/obs-server.log" \
+  || { echo "expected the chrome-trace line after shutdown:"; cat "$smoke/obs-server.log"; exit 1; }
+target/release/bwa client --check-json "$smoke/chrome.json" | grep -E 'parses .* [1-9][0-9]* traceEvents' \
+  || { echo "chrome trace export failed to parse"; exit 1; }
 
 echo "== cargo doc (rustdoc warnings are errors) =="
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
